@@ -1,0 +1,46 @@
+//! Bench: regenerate **Fig. 2** (number of VMs of each instance type per
+//! budget, for each approach) and assert its qualitative shape.
+//!
+//! Paper reference (Sec. V-C): MP buys only the cheapest type (it_1); MI
+//! buys the best average performer (it_4) plus an occasional it_1 with
+//! leftover budget; the heuristic mixes it_3/it_4 (the per-application
+//! best types) and sprinkles it_1 for parallelism at some budgets.
+
+use botsched::analysis::report::run_sweep;
+use botsched::eval::NativeEvaluator;
+use botsched::workload::paper::{table1_system, BUDGETS};
+
+fn main() {
+    let sys = table1_system(0.0);
+    let report = run_sweep(&sys, BUDGETS, &NativeEvaluator);
+    print!("{}", report.fig2_text(&sys));
+
+    // Shape assertions.
+    for &b in BUDGETS {
+        let mp = &report.row("mp", b).unwrap().vm_mix;
+        assert_eq!(
+            mp[1] + mp[2] + mp[3],
+            0,
+            "budget {b}: MP must use only it_1, got {mp:?}"
+        );
+        assert!(mp[0] >= 1);
+
+        let mi = &report.row("mi", b).unwrap().vm_mix;
+        assert_eq!(mi[1] + mi[2], 0, "budget {b}: MI uses only it_4 (+it_1 remainder), got {mi:?}");
+        assert!(mi[3] >= 1, "budget {b}: MI must buy it_4, got {mi:?}");
+        assert!(mi[0] <= 1, "budget {b}: MI adds at most one it_1 remainder, got {mi:?}");
+
+        let ours = &report.row("heuristic", b).unwrap().vm_mix;
+        assert!(
+            ours[2] >= 1 && ours[3] >= 1,
+            "budget {b}: heuristic must mix the per-app best types it_3/it_4, got {ours:?}"
+        );
+    }
+    // MP fields strictly more VMs than MI at equal budget (parallelism focus).
+    for &b in BUDGETS {
+        let mp: usize = report.row("mp", b).unwrap().vm_mix.iter().sum();
+        let mi: usize = report.row("mi", b).unwrap().vm_mix.iter().sum();
+        assert!(mp >= mi, "budget {b}: MP should field at least as many VMs as MI");
+    }
+    println!("\nshape checks: MP all-it1, MI it4(+it1), heuristic mixes it3/it4. OK");
+}

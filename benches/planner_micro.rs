@@ -1,0 +1,154 @@
+//! Bench: planner phase micro-benchmarks + the phase ablation study
+//! (experiment A1 in DESIGN.md).
+//!
+//! Times each Section IV phase in isolation on the paper workload, then
+//! re-runs the full FIND loop with one phase disabled at a time to show
+//! each phase's contribution to plan quality (mean makespan, feasibility
+//! cells across the Fig. 1 budget sweep).
+
+use botsched::benchkit::Bench;
+use botsched::eval::NativeEvaluator;
+use botsched::model::TaskId;
+use botsched::scheduler::{
+    add_vms, assign, balance, initial, reduce, replace, split, Planner, PlannerConfig,
+    ReduceMode,
+};
+use botsched::workload::paper::{table1_system, BUDGETS};
+
+fn main() {
+    let sys = table1_system(0.0);
+    let budget = 80.0;
+    let tasks: Vec<TaskId> = sys.tasks().iter().map(|t| t.id).collect();
+
+    // ---- phase timings ------------------------------------------------
+    let mut bench = Bench::new("planner-micro/phases");
+    bench.run("initial+assign@80", || {
+        std::hint::black_box(initial(&sys, budget));
+    });
+    let base = initial(&sys, budget);
+    bench.run("reduce-local@80", || {
+        let mut p = base.clone();
+        reduce(&sys, &mut p, budget, ReduceMode::Local);
+        std::hint::black_box(p);
+    });
+    let mut reduced = base.clone();
+    reduce(&sys, &mut reduced, budget, ReduceMode::Local);
+    bench.run("reduce-global@80", || {
+        let mut p = reduced.clone();
+        reduce(&sys, &mut p, budget, ReduceMode::Global);
+        std::hint::black_box(p);
+    });
+    bench.run("add@remaining", || {
+        let mut p = reduced.clone();
+        let cost = p.cost(&sys);
+        add_vms(&sys, &mut p, (budget - cost).max(0.0));
+        std::hint::black_box(p);
+    });
+    bench.run("balance@80", || {
+        let mut p = reduced.clone();
+        balance(&sys, &mut p, budget);
+        std::hint::black_box(p);
+    });
+    bench.run("split@80", || {
+        let mut p = reduced.clone();
+        split(&sys, &mut p, budget);
+        std::hint::black_box(p);
+    });
+    bench.run("replace@80", || {
+        let mut p = reduced.clone();
+        replace(&sys, &mut p, budget, 1, &NativeEvaluator);
+        std::hint::black_box(p);
+    });
+    bench.run_with_items("assign-750-tasks", Some(tasks.len() as f64), || {
+        let mut p = botsched::model::Plan::new();
+        for vm in &base.vms {
+            p.add_vm(&sys, vm.it);
+        }
+        assign(&sys, &mut p, &tasks);
+        std::hint::black_box(p);
+    });
+    bench.run("find-full@80", || {
+        std::hint::black_box(Planner::new(&sys).find(budget));
+    });
+    bench.report();
+
+    // ---- ablation study (A1) -------------------------------------------
+    println!("\n== ablation: phase contribution across the Fig. 1 sweep ==");
+    println!(
+        "{:<10} {:>15} {:>10} {:>12}",
+        "variant", "mean makespan", "feasible", "vs full"
+    );
+    #[allow(clippy::type_complexity)]
+    let phases: [(&str, fn(&mut PlannerConfig)); 6] = [
+        ("full", |_| {}),
+        ("-reduce", |c| c.enable_reduce = false),
+        ("-add", |c| c.enable_add = false),
+        ("-balance", |c| c.enable_balance = false),
+        ("-split", |c| c.enable_split = false),
+        ("-replace", |c| c.enable_replace = false),
+    ];
+    let mut full_mean = 0.0f64;
+    for (name, tweak) in phases {
+        let mut cfg = PlannerConfig::default();
+        tweak(&mut cfg);
+        let mut spans = Vec::new();
+        let mut feasible = 0;
+        for &b in BUDGETS {
+            let r = Planner::new(&sys).with_config(cfg.clone()).find(b);
+            spans.push(r.score.makespan);
+            if r.feasible {
+                feasible += 1;
+            }
+        }
+        let mean = spans.iter().sum::<f64>() / spans.len() as f64;
+        if name == "full" {
+            full_mean = mean;
+        }
+        println!(
+            "{:<10} {:>14.1}s {:>7}/{:<2} {:>+11.1}%",
+            name,
+            mean,
+            feasible,
+            BUDGETS.len(),
+            (mean / full_mean - 1.0) * 100.0
+        );
+    }
+    println!("\n(positive 'vs full' = removing the phase makes plans worse)");
+
+    // ---- A4: multi-start vs single-start -------------------------------
+    use botsched::scheduler::{find_multistart, MultiStartConfig};
+    use botsched::workload::{WorkloadGenerator, WorkloadSpec};
+    println!("\n== A4: multi-start (8 perturbed restarts) vs single-start ==");
+    println!("{:<22} {:>12} {:>12} {:>9}", "instance", "single", "multi", "gain");
+    let mut wins = 0;
+    let mut cases = 0;
+    for seed in 0..12u64 {
+        let spec = WorkloadSpec {
+            n_apps: 2 + (seed % 3) as usize,
+            n_types: 3 + (seed % 4) as usize,
+            tasks_per_app: 80,
+            ..Default::default()
+        };
+        let sys2 = WorkloadGenerator::new(seed + 100).system(&spec);
+        let b = WorkloadGenerator::feasible_budget(&sys2, 1.3);
+        let single = Planner::new(&sys2).find(b);
+        let cfg = MultiStartConfig { n_starts: 8, seed, ..Default::default() };
+        let multi = find_multistart(&sys2, b, &cfg, &NativeEvaluator);
+        if !single.feasible {
+            continue;
+        }
+        cases += 1;
+        let gain = (single.score.makespan / multi.score.makespan - 1.0) * 100.0;
+        if gain > 0.01 {
+            wins += 1;
+        }
+        println!(
+            "{:<22} {:>11.1}s {:>11.1}s {:>+8.2}%",
+            format!("seed{seed}/{}a{}t", spec.n_apps, spec.n_types),
+            single.score.makespan,
+            multi.score.makespan,
+            gain
+        );
+    }
+    println!("multi-start improved {wins}/{cases} feasible instances (never worse by construction)");
+}

@@ -1,0 +1,83 @@
+//! Bench: evaluator throughput — native rust vs the AOT-compiled XLA
+//! artifact, across batch sizes, plus the dynamic batcher's overhead
+//! (experiment A2 in DESIGN.md and the §Perf L2/L3 numbers).
+//!
+//! The XLA path pays per-execution overhead (literal staging, PJRT
+//! dispatch) amortised over K=64 candidates; the native path is a tight
+//! f64 loop.  The crossover and per-candidate costs recorded here drive
+//! the coordinator's batching policy.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use botsched::benchkit::Bench;
+use botsched::coordinator::{BatchingEvaluator, Metrics};
+use botsched::eval::{EvalBatch, NativeEvaluator, PlanEvaluator};
+use botsched::scheduler::Planner;
+use botsched::workload::paper::table1_system;
+
+fn main() {
+    let sys = table1_system(0.0);
+
+    // A representative candidate pool: heuristic plans at several budgets.
+    let plans: Vec<_> = (0..64)
+        .map(|i| Planner::new(&sys).find(60.0 + (i % 6) as f64 * 5.0).plan)
+        .collect();
+
+    let batch_sizes = [1usize, 8, 64, 256];
+    let mut bench = Bench::new("runtime-eval/throughput")
+        .with_budget(Duration::from_millis(150), Duration::from_millis(900));
+
+    // ---- native --------------------------------------------------------
+    for &n in &batch_sizes {
+        let refs: Vec<&botsched::model::Plan> =
+            (0..n).map(|i| &plans[i % plans.len()]).collect();
+        let batch = EvalBatch::from_plans(&sys, &refs);
+        bench.run_with_items(&format!("native/batch{n}"), Some(n as f64), || {
+            std::hint::black_box(NativeEvaluator.eval_batch(&batch));
+        });
+    }
+
+    // ---- xla artifact ----------------------------------------------------
+    match botsched::runtime::XlaEvaluator::load() {
+        Err(e) => println!("(xla artifact unavailable: {e:#} — run `make artifacts`)"),
+        Ok(xla) => {
+            for &n in &batch_sizes {
+                let refs: Vec<&botsched::model::Plan> =
+                    (0..n).map(|i| &plans[i % plans.len()]).collect();
+                let batch = EvalBatch::from_plans(&sys, &refs);
+                bench.run_with_items(&format!("xla/batch{n}"), Some(n as f64), || {
+                    std::hint::black_box(xla.eval_batch(&batch));
+                });
+            }
+
+            // ---- batcher overhead (single-threaded worst case) ----------
+            let metrics = Arc::new(Metrics::new());
+            let batched = BatchingEvaluator::new(
+                Arc::new(NativeEvaluator),
+                64,
+                Duration::ZERO,
+                Arc::clone(&metrics),
+            );
+            let refs: Vec<&botsched::model::Plan> = plans.iter().take(8).collect();
+            let batch = EvalBatch::from_plans(&sys, &refs);
+            bench.run_with_items("batcher(native)/batch8", Some(8.0), || {
+                std::hint::black_box(batched.eval_batch(&batch));
+            });
+
+            // ---- planner end-to-end with each evaluator -------------------
+            bench.run("planner-find@80/native", || {
+                std::hint::black_box(Planner::new(&sys).find(80.0));
+            });
+            bench.run("planner-find@80/xla", || {
+                std::hint::black_box(Planner::with_evaluator(&sys, &xla).find(80.0));
+            });
+        }
+    }
+    bench.report();
+    println!(
+        "\nnote: the planner's inner phase moves use exact native scoring; the\n\
+         evaluator trait is on the accept/REPLACE path, so the xla column\n\
+         measures artifact dispatch + f32 scoring of K-padded batches."
+    );
+}

@@ -1,0 +1,78 @@
+//! Bench: planner scaling (experiment A3 in DESIGN.md) — wall time and
+//! plan quality versus workload size and catalogue size.
+//!
+//! The paper evaluates a fixed 750-task / 4-type setup; a production
+//! scheduler must hold up as both grow.  Sweeps tasks-per-app
+//! (125..2000) at 4 types, and instance types (2..16) at 750 tasks, plus
+//! the simulator's event throughput on the resulting plans.
+
+use std::time::Duration;
+
+use botsched::benchkit::Bench;
+use botsched::cloudsim::{SimConfig, Simulator};
+use botsched::scheduler::Planner;
+use botsched::workload::{SizeDistribution, WorkloadGenerator, WorkloadSpec};
+
+fn main() {
+    // ---- tasks sweep ------------------------------------------------------
+    let mut bench = Bench::new("scaling/tasks")
+        .with_budget(Duration::from_millis(200), Duration::from_millis(1200));
+    for tasks_per_app in [125usize, 250, 500, 1000, 2000] {
+        let spec = WorkloadSpec {
+            n_apps: 3,
+            n_types: 4,
+            tasks_per_app,
+            sizes: SizeDistribution::EquallySpaced { lo: 1, hi: 5 },
+            ..Default::default()
+        };
+        let sys = WorkloadGenerator::new(42).system(&spec);
+        let budget = WorkloadGenerator::feasible_budget(&sys, 1.4);
+        let total = (tasks_per_app * 3) as f64;
+        bench.run_with_items(&format!("find/{}tasks", tasks_per_app * 3), Some(total), || {
+            std::hint::black_box(Planner::new(&sys).find(budget));
+        });
+    }
+    bench.report();
+
+    // ---- instance-type sweep ----------------------------------------------
+    let mut bench = Bench::new("scaling/instance-types")
+        .with_budget(Duration::from_millis(200), Duration::from_millis(1200));
+    for n_types in [2usize, 4, 8, 16] {
+        let spec = WorkloadSpec {
+            n_apps: 3,
+            n_types,
+            tasks_per_app: 250,
+            ..Default::default()
+        };
+        let sys = WorkloadGenerator::new(43).system(&spec);
+        let budget = WorkloadGenerator::feasible_budget(&sys, 1.4);
+        bench.run(&format!("find/{n_types}types"), || {
+            std::hint::black_box(Planner::new(&sys).find(budget));
+        });
+    }
+    bench.report();
+
+    // ---- simulator event throughput ----------------------------------------
+    let mut bench = Bench::new("scaling/simulator")
+        .with_budget(Duration::from_millis(200), Duration::from_millis(1000));
+    for tasks_per_app in [250usize, 1000, 4000] {
+        let spec = WorkloadSpec {
+            n_apps: 3,
+            n_types: 4,
+            tasks_per_app,
+            ..Default::default()
+        };
+        let sys = WorkloadGenerator::new(44).system(&spec);
+        let budget = WorkloadGenerator::feasible_budget(&sys, 1.4);
+        let plan = Planner::new(&sys).find(budget).plan;
+        let total = (tasks_per_app * 3) as f64;
+        bench.run_with_items(
+            &format!("run_plan/{}tasks", tasks_per_app * 3),
+            Some(total),
+            || {
+                std::hint::black_box(Simulator::run_plan(&sys, &plan, &SimConfig::default()));
+            },
+        );
+    }
+    bench.report();
+}

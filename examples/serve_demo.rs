@@ -1,0 +1,112 @@
+//! Coordinator demo: start the leader, drive it with concurrent clients
+//! over the JSON-line TCP protocol, print the metrics, shut down.
+//!
+//! ```bash
+//! cargo run --release --example serve_demo
+//! ```
+//!
+//! This is the serving deployment in miniature: the XLA artifact (when
+//! built) scores every candidate plan, the dynamic batcher coalesces
+//! scoring traffic from concurrent planning requests, and the protocol
+//! surface covers plan / sweep / simulate / campaign / estimate.
+
+use std::time::Duration;
+
+use botsched::coordinator::server::request;
+use botsched::coordinator::{Coordinator, CoordinatorConfig};
+
+fn main() -> anyhow::Result<()> {
+    let coord = Coordinator::start(CoordinatorConfig {
+        addr: "127.0.0.1:0".into(),
+        use_xla: true,
+        batching: true,
+        batch_wait: Duration::from_millis(2),
+    })?;
+    let addr = coord.local_addr;
+    println!("coordinator up on {addr}\n");
+
+    // Concurrent planning clients (a campaign team sweeping budgets).
+    let mut handles = Vec::new();
+    for budget in [60, 65, 70, 75, 80, 85] {
+        handles.push(std::thread::spawn(move || {
+            let line = format!(r#"{{"op":"plan","budget":{budget}}}"#);
+            (budget, request(&addr, &line).expect("plan reply"))
+        }));
+    }
+    for h in handles {
+        let (budget, reply) = h.join().unwrap();
+        println!(
+            "plan @ {budget}: makespan {:>7.1}s cost {:>5} feasible {} vms {}",
+            reply.get("makespan").unwrap().as_f64().unwrap(),
+            reply.get("cost").unwrap().as_f64().unwrap(),
+            reply.get("feasible").unwrap().as_bool().unwrap(),
+            reply.get("n_vms").unwrap().as_f64().unwrap(),
+        );
+    }
+
+    // One simulation and one failure campaign through the same socket.
+    let sim = request(
+        &addr,
+        r#"{"op":"simulate","budget":80,"noise":{"task_sigma":0.08},"seed":5}"#,
+    )?;
+    println!(
+        "\nsimulate @ 80 (jitter 8%): makespan {:.1}s cost {} completed {}",
+        sim.get("makespan").unwrap().as_f64().unwrap(),
+        sim.get("cost").unwrap().as_f64().unwrap(),
+        sim.get("completed").unwrap().as_f64().unwrap(),
+    );
+    let camp = request(
+        &addr,
+        r#"{"op":"campaign","budget":200,"noise":{"mean_lifetime":3000},"seed":2,"max_rounds":6}"#,
+    )?;
+    println!(
+        "campaign @ 200 (failing cloud): rounds {} wall {:.1}s spent {} complete {}",
+        camp.get("rounds").unwrap().as_f64().unwrap(),
+        camp.get("wall_clock").unwrap().as_f64().unwrap(),
+        camp.get("spent").unwrap().as_f64().unwrap(),
+        camp.get("complete").unwrap().as_bool().unwrap(),
+    );
+
+    // Estimate op exercises the perf_estim artifact.
+    let est = request(&addr, r#"{"op":"estimate_perf","per_cell":15,"noise":{"task_sigma":0.05}}"#)?;
+    println!(
+        "estimate_perf: {} samples, max rel err {:.2}%",
+        est.get("samples").unwrap().as_f64().unwrap(),
+        est.get("max_rel_error").unwrap().as_f64().unwrap() * 100.0,
+    );
+
+    // Async job flow: submit a campaign, poll it to completion.
+    let sub = request(
+        &addr,
+        r#"{"op":"submit","job":{"op":"campaign","budget":220,"noise":{"mean_lifetime":2500},"seed":9,"max_rounds":6}}"#,
+    )?;
+    let job_id = sub.get("job_id").unwrap().as_str().unwrap().to_string();
+    println!("
+submitted campaign as {job_id}");
+    loop {
+        let st = request(&addr, &format!(r#"{{"op":"status","job_id":"{job_id}"}}"#))?;
+        let state = st.path(&["job", "state"]).unwrap().as_str().unwrap().to_string();
+        if state == "done" {
+            let result = st.path(&["job", "result"]).unwrap();
+            println!(
+                "job {job_id} done: rounds {} complete {}",
+                result.get("rounds").unwrap().as_f64().unwrap(),
+                result.get("complete").unwrap().as_bool().unwrap(),
+            );
+            break;
+        }
+        if state == "failed" {
+            println!("job failed: {}", st.path(&["job", "error"]).unwrap());
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // Metrics + shutdown.
+    let stats = request(&addr, r#"{"op":"stats"}"#)?;
+    println!("\ncoordinator stats: {}", stats.get("stats").unwrap());
+    request(&addr, r#"{"op":"shutdown"}"#)?;
+    coord.wait();
+    println!("coordinator stopped cleanly");
+    Ok(())
+}

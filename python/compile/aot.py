@@ -1,0 +1,137 @@
+"""AOT-lower the L2 graphs to HLO text artifacts for the rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids that the published xla crate's
+xla_extension 0.5.1 rejects (proto.id() <= INT_MAX); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+
+Emits:
+  plan_eval.hlo.txt   batched plan scoring (embeds the pallas kernel)
+  perf_estim.hlo.txt  performance-matrix estimator
+  meta.json           static shapes + parameter order for the rust side
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_plan_eval():
+    k, v, m = model.PLAN_EVAL_K, model.PLAN_EVAL_V, model.PLAN_EVAL_M
+    f32 = jax.numpy.float32
+    spec = jax.ShapeDtypeStruct
+    return jax.jit(model.plan_eval_model).lower(
+        spec((1, 1), f32),      # overhead
+        spec((1, 1), f32),      # hour
+        spec((k, v, m), f32),   # sizes
+        spec((k, v, m), f32),   # perf
+        spec((k, v), f32),      # rate
+        spec((k, v), f32),      # active
+    )
+
+
+def lower_plan_eval_small():
+    k, v, m = model.PLAN_EVAL_SMALL_K, model.PLAN_EVAL_V, model.PLAN_EVAL_M
+    f32 = jax.numpy.float32
+    spec = jax.ShapeDtypeStruct
+    return jax.jit(model.plan_eval_model).lower(
+        spec((1, 1), f32),
+        spec((1, 1), f32),
+        spec((k, v, m), f32),
+        spec((k, v, m), f32),
+        spec((k, v), f32),
+        spec((k, v), f32),
+    )
+
+
+def lower_perf_estim():
+    s, c = model.PERF_ESTIM_S, model.PERF_ESTIM_C
+    f32 = jax.numpy.float32
+    spec = jax.ShapeDtypeStruct
+    return jax.jit(model.perf_estim_model).lower(
+        spec((s, c), f32),      # indicator
+        spec((s,), f32),        # size
+        spec((s,), f32),        # time
+        spec((c,), f32),        # prior
+        spec((1,), f32),        # prior_weight
+    )
+
+
+ARTIFACTS = {
+    "plan_eval": lower_plan_eval,
+    "plan_eval_small": lower_plan_eval_small,
+    "perf_estim": lower_perf_estim,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="legacy single-file alias; writes artifacts beside it")
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    for name, lower in ARTIFACTS.items():
+        text = to_hlo_text(lower())
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    meta = {
+        "hour_seconds": 3600.0,
+        "plan_eval": {
+            "file": "plan_eval.hlo.txt",
+            "k": model.PLAN_EVAL_K,
+            "v": model.PLAN_EVAL_V,
+            "m": model.PLAN_EVAL_M,
+            "params": ["overhead[1,1]", "hour[1,1]", "sizes[k,v,m]",
+                       "perf[k,v,m]", "rate[k,v]", "active[k,v]"],
+            "outputs": ["exec[k,v]", "cost[k]", "makespan[k]"],
+        },
+        "plan_eval_small": {
+            "file": "plan_eval_small.hlo.txt",
+            "k": model.PLAN_EVAL_SMALL_K,
+            "v": model.PLAN_EVAL_V,
+            "m": model.PLAN_EVAL_M,
+            "params": ["overhead[1,1]", "hour[1,1]", "sizes[k,v,m]",
+                       "perf[k,v,m]", "rate[k,v]", "active[k,v]"],
+            "outputs": ["exec[k,v]", "cost[k]", "makespan[k]"],
+        },
+        "perf_estim": {
+            "file": "perf_estim.hlo.txt",
+            "s": model.PERF_ESTIM_S,
+            "c": model.PERF_ESTIM_C,
+            "params": ["indicator[s,c]", "size[s]", "time[s]", "prior[c]",
+                       "prior_weight[1]"],
+            "outputs": ["p_hat[c]"],
+        },
+    }
+    meta_path = os.path.join(out_dir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Pure-jnp correctness oracles for the L1 kernels.
+
+These are the ground-truth implementations of the paper's Section III cost
+model, written with plain ``jax.numpy`` only (no pallas).  The pytest /
+hypothesis suites assert the pallas kernels in ``plan_eval.py`` match these
+(allclose) across shapes and dtypes, and the rust ``NativeEvaluator`` is
+differentially tested against the AOT artifact that embeds the pallas
+version.
+
+Model recap (paper eq. 2-8), vectorised over a batch of K candidate plans,
+V VM slots and M applications:
+
+    exec[k,v]   = (o + sum_m S[k,v,m] * P[k,v,m]) * active[k,v]
+    hours[k,v]  = ceil(exec[k,v] / hour) * active[k,v]
+    cost[k]     = sum_v hours[k,v] * rate[k,v]
+    makespan[k] = max_v exec[k,v]
+
+``S[k,v,m]`` is the total size of tasks of application m assigned to VM v in
+candidate k (lossless: exec is linear in size).  ``active`` masks unused VM
+slots (the artifact has static shapes; rust pads).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Seconds per billing hour (paper eq. 6 hard-codes 3600).
+HOUR_SECONDS = 3600.0
+
+
+def plan_eval_ref(sizes, perf, rate, active, overhead, hour=HOUR_SECONDS):
+    """Reference batched plan evaluation.
+
+    Args:
+      sizes:    f32[K, V, M] aggregated task sizes per (candidate, vm, app).
+      perf:     f32[K, V, M] seconds-per-unit-size of vm's instance type for
+                each app (rows gathered by the caller; padding rows are 0).
+      rate:     f32[K, V]    hourly cost of each vm's instance type.
+      active:   f32[K, V]    1.0 where the vm slot exists, 0.0 padding.
+      overhead: f32 scalar   VM boot overhead ``o`` in seconds.
+      hour:     billing quantum in seconds.
+
+    Returns:
+      (exec, cost, makespan): f32[K, V], f32[K], f32[K].
+    """
+    sizes = jnp.asarray(sizes, jnp.float32)
+    perf = jnp.asarray(perf, jnp.float32)
+    rate = jnp.asarray(rate, jnp.float32)
+    active = jnp.asarray(active, jnp.float32)
+    work = jnp.sum(sizes * perf, axis=-1)  # [K, V]
+    exec_ = (overhead + work) * active
+    hours = jnp.ceil(exec_ / hour) * active
+    cost = jnp.sum(hours * rate, axis=-1)  # [K]
+    makespan = jnp.max(exec_, axis=-1)  # [K]
+    return exec_, cost, makespan
+
+
+def perf_estim_ref(indicator, size, time, prior, prior_weight):
+    """Reference performance-matrix estimation (paper Sec. III-A 'test runs').
+
+    Per-cell weighted least squares of time = P * size through the origin,
+    with a ridge-style pull towards ``prior`` weighted by ``prior_weight``
+    (cells with no samples return the prior).
+
+    Args:
+      indicator:    f32[S, C] one-hot: sample s measured cell c = i*M + j.
+      size:         f32[S]    task size of each sampled run.
+      time:         f32[S]    observed execution time of each sampled run.
+      prior:        f32[C]    prior estimate per cell.
+      prior_weight: f32 scalar pseudo-count weight of the prior.
+
+    Returns:
+      f32[C] estimated seconds-per-unit-size per (instance, app) cell.
+    """
+    indicator = jnp.asarray(indicator, jnp.float32)
+    size = jnp.asarray(size, jnp.float32)
+    time = jnp.asarray(time, jnp.float32)
+    prior = jnp.asarray(prior, jnp.float32)
+    num = indicator.T @ (size * time) + prior_weight * prior
+    den = indicator.T @ (size * size) + prior_weight
+    return num / den

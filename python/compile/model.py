@@ -1,0 +1,59 @@
+"""L2: the JAX compute graphs that get AOT-compiled into artifacts/.
+
+Two exported entry points, both jitted and lowered by ``aot.py`` at the
+static shapes recorded in ``artifacts/meta.json``:
+
+* ``plan_eval_model`` — batched candidate-plan scoring (calls the L1 pallas
+  kernel ``kernels.plan_eval``).  This is the rust coordinator's scoring
+  hot path: one XLA execution scores K candidate plans.
+* ``perf_estim_model`` — performance-matrix estimation from noisy sampled
+  runs (the paper's Section III-A "test runs" bootstrap), a per-cell
+  weighted least-squares solve expressed as two matvecs; XLA fuses the
+  whole thing into a couple of loops, so no pallas kernel is warranted.
+
+Python in this package runs at build time only: ``make artifacts`` lowers
+these functions to HLO text once, and the rust binary executes the
+artifacts via PJRT with no python on the request path.
+"""
+
+from __future__ import annotations
+
+from .kernels import plan_eval as _plan_eval_kernel
+from .kernels import ref as _ref
+
+# Static shapes baked into the shipped artifacts.  The rust runtime reads
+# these from artifacts/meta.json and pads/masks its batches accordingly.
+PLAN_EVAL_K = 64   # candidate plans per execution
+PLAN_EVAL_V = 128  # max VM slots per plan
+PLAN_EVAL_M = 8    # max applications
+PLAN_EVAL_BLOCK_K = 64
+
+# Small-batch variant: the planner's REPLACE step scores ~4-16 candidates
+# at a time; padding those to K=64 wastes ~8x compute on the serving path.
+# aot.py additionally lowers a K=8 artifact that the rust runtime selects
+# for small batches (see EXPERIMENTS.md section Perf).
+PLAN_EVAL_SMALL_K = 8
+
+PERF_ESTIM_S = 512  # max sampled runs per estimation call
+PERF_ESTIM_C = 64   # max (instance type x application) cells
+
+
+def plan_eval_model(overhead, hour, sizes, perf, rate, active):
+    """Score a batch of candidate plans.  Returns (exec, cost, makespan).
+
+    Thin wrapper around the L1 pallas kernel so the kernel lowers into the
+    same HLO module; argument order here fixes the artifact's parameter
+    order (overhead, hour, sizes, perf, rate, active).
+    """
+    return tuple(
+        _plan_eval_kernel.plan_eval(
+            sizes, perf, rate, active, overhead, hour,
+            block_k=PLAN_EVAL_BLOCK_K,
+        )
+    )
+
+
+def perf_estim_model(indicator, size, time, prior, prior_weight):
+    """Estimate the performance matrix from sampled runs.  Returns (P_hat,)."""
+    return (_ref.perf_estim_ref(indicator, size, time, prior,
+                                prior_weight[0]),)

@@ -1,0 +1,46 @@
+"""AOT pipeline: lowered HLO text is parseable-shaped and meta is consistent."""
+
+import json
+import os
+
+from compile import aot, model
+
+
+def test_lower_plan_eval_hlo_text():
+    text = aot.to_hlo_text(aot.lower_plan_eval())
+    assert text.startswith("HloModule")
+    k, v, m = model.PLAN_EVAL_K, model.PLAN_EVAL_V, model.PLAN_EVAL_M
+    assert f"f32[{k},{v},{m}]" in text
+    assert f"f32[{k},{v}]" in text
+    assert f"f32[{k}]" in text
+
+
+def test_lower_plan_eval_small_hlo_text():
+    text = aot.to_hlo_text(aot.lower_plan_eval_small())
+    assert text.startswith("HloModule")
+    k, v, m = model.PLAN_EVAL_SMALL_K, model.PLAN_EVAL_V, model.PLAN_EVAL_M
+    assert f"f32[{k},{v},{m}]" in text
+
+
+def test_lower_perf_estim_hlo_text():
+    text = aot.to_hlo_text(aot.lower_perf_estim())
+    assert text.startswith("HloModule")
+    s, c = model.PERF_ESTIM_S, model.PERF_ESTIM_C
+    assert f"f32[{s},{c}]" in text
+
+
+def test_artifacts_dir_consistent_if_built():
+    """If `make artifacts` has run, meta.json must match the compiled shapes."""
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    meta_path = os.path.join(root, "meta.json")
+    if not os.path.exists(meta_path):
+        return  # artifacts not built in this checkout; covered by make test
+    meta = json.load(open(meta_path))
+    pe = meta["plan_eval"]
+    assert (pe["k"], pe["v"], pe["m"]) == (
+        model.PLAN_EVAL_K, model.PLAN_EVAL_V, model.PLAN_EVAL_M)
+    assert os.path.exists(os.path.join(root, pe["file"]))
+    small = meta["plan_eval_small"]
+    assert small["k"] == model.PLAN_EVAL_SMALL_K
+    assert os.path.exists(os.path.join(root, small["file"]))
+    assert meta["hour_seconds"] == 3600.0

@@ -1,0 +1,124 @@
+"""L1 correctness: pallas plan_eval kernel vs the pure-jnp oracle.
+
+This is the core correctness signal for the numeric layer: the hypothesis
+sweep drives shapes, block sizes, masks and value ranges through the pallas
+kernel (interpret mode) and asserts allclose against ``ref.plan_eval_ref``.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.plan_eval import plan_eval
+from compile.kernels.ref import HOUR_SECONDS, plan_eval_ref
+
+
+def _rand_case(rng, k, v, m, density=0.8, size_hi=50.0, perf_hi=25.0):
+    sizes = rng.uniform(0.0, size_hi, (k, v, m)).astype(np.float32)
+    perf = rng.uniform(1.0, perf_hi, (k, v, m)).astype(np.float32)
+    rate = rng.uniform(1.0, 10.0, (k, v)).astype(np.float32)
+    active = (rng.random((k, v)) < density).astype(np.float32)
+    return sizes, perf, rate, active
+
+
+def _assert_matches(sizes, perf, rate, active, overhead, hour=HOUR_SECONDS,
+                    block_k=8):
+    e_k, c_k, s_k = plan_eval(sizes, perf, rate, active, overhead, hour,
+                              block_k=block_k)
+    e_r, c_r, s_r = plan_eval_ref(sizes, perf, rate, active, overhead, hour)
+    np.testing.assert_allclose(np.asarray(e_k), np.asarray(e_r),
+                               rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(c_k), np.asarray(c_r),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_matches_ref_basic():
+    rng = np.random.default_rng(0)
+    _assert_matches(*_rand_case(rng, 16, 12, 3), overhead=30.0, block_k=4)
+
+
+def test_artifact_shapes():
+    """The exact static shapes baked into artifacts/plan_eval.hlo.txt."""
+    from compile import model
+    rng = np.random.default_rng(1)
+    case = _rand_case(rng, model.PLAN_EVAL_K, model.PLAN_EVAL_V,
+                      model.PLAN_EVAL_M)
+    _assert_matches(*case, overhead=42.0, block_k=model.PLAN_EVAL_BLOCK_K)
+
+
+def test_all_inactive_is_zero():
+    k, v, m = 8, 4, 2
+    zeros = np.zeros((k, v), np.float32)
+    sizes = np.ones((k, v, m), np.float32)
+    perf = np.ones((k, v, m), np.float32)
+    rate = np.ones((k, v), np.float32)
+    e, c, s = plan_eval(sizes, perf, rate, zeros, 100.0)
+    assert np.all(np.asarray(e) == 0.0)
+    assert np.all(np.asarray(c) == 0.0)
+    assert np.all(np.asarray(s) == 0.0)
+
+
+def test_empty_vm_bills_boot_hour():
+    """A provisioned VM with no tasks still bills ceil(o/3600) hours (paper:
+    'the overhead is paid for by the user')."""
+    k, v, m = 8, 2, 1
+    sizes = np.zeros((k, v, m), np.float32)
+    perf = np.ones((k, v, m), np.float32)
+    rate = np.full((k, v), 5.0, np.float32)
+    active = np.ones((k, v), np.float32)
+    _, c, _ = plan_eval(sizes, perf, rate, active, 30.0)
+    np.testing.assert_allclose(np.asarray(c), 2 * 5.0)  # 1 hour x 2 VMs
+
+
+def test_hour_boundary_exact():
+    """exec exactly on the hour must bill exactly that many hours."""
+    k, v, m = 8, 1, 1
+    sizes = np.full((k, v, m), 3600.0, np.float32)  # exec = 3600 * 1
+    perf = np.ones((k, v, m), np.float32)
+    rate = np.ones((k, v), np.float32)
+    active = np.ones((k, v), np.float32)
+    _, c, _ = plan_eval(sizes, perf, rate, active, 0.0)
+    np.testing.assert_allclose(np.asarray(c), 1.0)
+    _, c2, _ = plan_eval(sizes, perf, rate, active, 1.0)  # one second over
+    np.testing.assert_allclose(np.asarray(c2), 2.0)
+
+
+def test_block_k_must_divide():
+    rng = np.random.default_rng(2)
+    case = _rand_case(rng, 6, 3, 2)
+    with pytest.raises(ValueError):
+        plan_eval(*case, 0.0, block_k=4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    k_blocks=st.integers(1, 4),
+    block_k=st.sampled_from([1, 2, 4, 8]),
+    v=st.integers(1, 24),
+    m=st.integers(1, 6),
+    overhead=st.floats(0.0, 500.0),
+    hour=st.sampled_from([60.0, 900.0, 3600.0]),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(k_blocks, block_k, v, m, overhead, hour, density,
+                          seed):
+    """Shape/mask/value sweep: pallas kernel == oracle everywhere."""
+    rng = np.random.default_rng(seed)
+    k = k_blocks * block_k
+    case = _rand_case(rng, k, v, m, density=density)
+    _assert_matches(*case, overhead=overhead, hour=hour, block_k=block_k)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_value_range_sweep(scale, seed):
+    """Magnitude sweep: tiny and large sizes behave identically to ref."""
+    rng = np.random.default_rng(seed)
+    sizes, perf, rate, active = _rand_case(rng, 8, 8, 3, size_hi=50.0 * scale)
+    _assert_matches(sizes, perf, rate, active, overhead=10.0)

@@ -1,0 +1,63 @@
+"""L2 correctness: perf-matrix estimator recovers P from sampled runs."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import perf_estim_ref
+
+
+def _one_hot(cells, c):
+    ind = np.zeros((len(cells), c), np.float32)
+    ind[np.arange(len(cells)), cells] = 1.0
+    return ind
+
+
+def test_exact_recovery_noiseless():
+    """With noiseless samples and zero prior weight, P_hat == P exactly."""
+    rng = np.random.default_rng(0)
+    n_cells = 12
+    p_true = rng.uniform(5.0, 25.0, n_cells).astype(np.float32)
+    cells = rng.integers(0, n_cells, 200)
+    size = rng.uniform(1.0, 5.0, 200).astype(np.float32)
+    time = (p_true[cells] * size).astype(np.float32)
+    p_hat = np.asarray(perf_estim_ref(_one_hot(cells, n_cells), size, time,
+                                      np.zeros(n_cells, np.float32), 0.0))
+    # every cell sampled at least once with prob ~1; guard anyway
+    sampled = np.bincount(cells, minlength=n_cells) > 0
+    np.testing.assert_allclose(p_hat[sampled], p_true[sampled], rtol=1e-4)
+
+
+def test_unsampled_cells_return_prior():
+    n_cells = 8
+    prior = np.full(n_cells, 7.0, np.float32)
+    ind = np.zeros((4, n_cells), np.float32)
+    ind[:, 0] = 1.0  # only cell 0 sampled
+    size = np.ones(4, np.float32)
+    time = np.full(4, 3.0, np.float32)
+    p_hat = np.asarray(perf_estim_ref(ind, size, time, prior, 1.0))
+    np.testing.assert_allclose(p_hat[1:], prior[1:])
+    assert 2.0 < p_hat[0] < 7.0  # pulled between data (3.0) and prior (7.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_cells=st.integers(1, 32),
+    n_samples=st.integers(1, 300),
+    noise=st.floats(0.0, 0.1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_noisy_recovery_within_noise(n_cells, n_samples, noise, seed):
+    """Relative error of well-sampled cells is bounded by the noise level."""
+    rng = np.random.default_rng(seed)
+    p_true = rng.uniform(5.0, 25.0, n_cells).astype(np.float32)
+    cells = rng.integers(0, n_cells, n_samples)
+    size = rng.uniform(1.0, 5.0, n_samples).astype(np.float32)
+    time = (p_true[cells] * size *
+            (1.0 + rng.normal(0.0, noise, n_samples))).astype(np.float32)
+    p_hat = np.asarray(perf_estim_ref(_one_hot(cells, n_cells), size, time,
+                                      p_true, 1e-6))
+    counts = np.bincount(cells, minlength=n_cells)
+    well = counts >= 10
+    if well.any():
+        rel = np.abs(p_hat[well] - p_true[well]) / p_true[well]
+        assert np.all(rel < max(4 * noise, 1e-4) + 3e-2)

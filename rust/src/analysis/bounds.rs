@@ -1,0 +1,218 @@
+//! Optimality references for the heuristic.
+//!
+//! * [`fractional_cost_floor`] — the LP-relaxation lower bound on the
+//!   money needed to run the whole workload (hour quantisation and
+//!   indivisible tasks dropped): each application's work is routed to its
+//!   most cost-efficient instance type at fractional hours.
+//! * [`makespan_floor`] — a lower bound on the makespan achievable within
+//!   a budget: total VM-hours affordable caps parallel work.
+//! * [`brute_force_best`] — exact optimum by exhaustive enumeration for
+//!   tiny instances; used by the property tests to certify the heuristic
+//!   is never wildly off and by DESIGN.md's feasibility analysis.
+
+use crate::model::{InstanceTypeId, Plan, PlanScore, System};
+
+/// LP-relaxation lower bound on the cost of any feasible plan (no plan,
+/// however clever, can run the workload cheaper).
+pub fn fractional_cost_floor(sys: &System) -> f64 {
+    sys.apps
+        .iter()
+        .map(|app| {
+            sys.instance_types
+                .iter()
+                .map(|it| {
+                    sys.perf.get(it.id, app.id) * app.total_size() / sys.hour * it.cost_per_hour
+                })
+                .fold(f64::INFINITY, f64::min)
+        })
+        .sum()
+}
+
+/// Lower bound on the makespan achievable with budget `b`.
+///
+/// Two effects cap parallel speed-up: (1) money — every VM-hour costs at
+/// least `c_min`, so the budget buys at most `b / c_min` VM-hours, and
+/// even an *ideal* machine (best type per application simultaneously,
+/// which no mixture can beat) needs `work_ideal` seconds of compute;
+/// (2) the single largest task cannot be split.  Both relaxations only
+/// under-estimate, so this is a true floor for any plan, mixed or not.
+pub fn makespan_floor(sys: &System, b: f64) -> f64 {
+    // Ideal work: each app on its fastest type (no machine is better).
+    let work_ideal: f64 = sys
+        .apps
+        .iter()
+        .map(|a| {
+            let best = sys
+                .instance_types
+                .iter()
+                .map(|it| sys.perf.get(it.id, a.id))
+                .fold(f64::INFINITY, f64::min);
+            best * a.total_size()
+        })
+        .sum();
+    let c_min = sys
+        .instance_types
+        .iter()
+        .map(|it| it.cost_per_hour)
+        .fold(f64::INFINITY, f64::min);
+    let money_bound = match sys.billing {
+        crate::model::BillingPolicy::HourlyCeil => {
+            // Only whole VM-hours can be bought; `affordable_hours`
+            // VM-hour lanes must cover `work_ideal`.
+            let affordable_hours = (b / c_min).floor();
+            if affordable_hours < 1.0 {
+                f64::INFINITY
+            } else {
+                work_ideal / affordable_hours
+            }
+        }
+        // Per-second billing makes parallelism cost-free (n VMs for T/n
+        // seconds cost the same as one VM for T), so money does not bound
+        // the makespan — only feasibility and the largest task do.
+        crate::model::BillingPolicy::PerSecond => {
+            if b * sys.hour / c_min < work_ideal {
+                f64::INFINITY // cannot even afford the ideal work
+            } else {
+                0.0
+            }
+        }
+    };
+    let largest_task = sys
+        .tasks()
+        .iter()
+        .map(|t| {
+            sys.instance_types
+                .iter()
+                .map(|it| sys.perf.exec_time(it.id, t))
+                .fold(f64::INFINITY, f64::min)
+        })
+        .fold(0.0, f64::max);
+    (money_bound).max(largest_task) + sys.overhead
+}
+
+/// Exhaustive search over all plans with at most `max_vms` VMs: exact
+/// optimal `(makespan, cost)` under the budget, or `None` if infeasible
+/// at that VM cap.  Exponential — use only for tiny instances (the
+/// property tests cap `tasks x types` around 6 x 2).
+pub fn brute_force_best(sys: &System, budget: f64, max_vms: usize) -> Option<PlanScore> {
+    let mut best: Option<PlanScore> = None;
+    // Enumerate VM multisets up to max_vms over instance types, then all
+    // task assignments onto those VMs.
+    let n_types = sys.n_types();
+    let mut vm_types: Vec<InstanceTypeId> = Vec::new();
+    enumerate_vm_sets(sys, budget, n_types, 0, max_vms, &mut vm_types, &mut best);
+    best
+}
+
+fn enumerate_vm_sets(
+    sys: &System,
+    budget: f64,
+    n_types: usize,
+    from_type: usize,
+    slots_left: usize,
+    vm_types: &mut Vec<InstanceTypeId>,
+    best: &mut Option<PlanScore>,
+) {
+    if !vm_types.is_empty() {
+        assign_all(sys, budget, vm_types, 0, &mut Plan::new(), best);
+    }
+    if slots_left == 0 {
+        return;
+    }
+    for t in from_type..n_types {
+        vm_types.push(InstanceTypeId(t as u16));
+        enumerate_vm_sets(sys, budget, n_types, t, slots_left - 1, vm_types, best);
+        vm_types.pop();
+    }
+}
+
+fn assign_all(
+    sys: &System,
+    budget: f64,
+    vm_types: &[InstanceTypeId],
+    task_idx: usize,
+    plan: &mut Plan,
+    best: &mut Option<PlanScore>,
+) {
+    if plan.n_vms() == 0 {
+        for &it in vm_types {
+            plan.add_vm(sys, it);
+        }
+    }
+    if task_idx == sys.tasks().len() {
+        let score = plan.score(sys);
+        if score.satisfies(budget)
+            && best
+                .as_ref()
+                .is_none_or(|b| (score.makespan, score.cost) < (b.makespan, b.cost))
+        {
+            *best = Some(score);
+        }
+        return;
+    }
+    let tid = sys.tasks()[task_idx].id;
+    for v in 0..plan.n_vms() {
+        plan.vms[v].push_task(sys, tid);
+        assign_all(sys, budget, vm_types, task_idx + 1, plan, best);
+        plan.vms[v].remove_task(sys, tid);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SystemBuilder;
+    use crate::scheduler::Planner;
+    use crate::workload::paper::table1_system;
+
+    #[test]
+    fn fractional_floor_matches_hand_computation() {
+        // DESIGN.md: A1 -> 750u at 36 u/$ = 20.83, A2/A3 -> 18.75 each.
+        let sys = table1_system(0.0);
+        let floor = fractional_cost_floor(&sys);
+        assert!((floor - (750.0 * 10.0 / 3600.0 * 10.0) * 3.0 + 0.0).abs() < 5.0);
+        assert!((58.0..59.0).contains(&floor), "floor {floor}");
+    }
+
+    #[test]
+    fn makespan_floor_decreases_with_budget() {
+        let sys = table1_system(0.0);
+        let f60 = makespan_floor(&sys, 60.0);
+        let f120 = makespan_floor(&sys, 120.0);
+        assert!(f120 <= f60);
+        assert!(f60.is_finite());
+    }
+
+    #[test]
+    fn heuristic_within_2x_of_brute_force_tiny() {
+        let sys = SystemBuilder::new()
+            .app("a", vec![100.0, 200.0, 300.0])
+            .app("b", vec![150.0, 250.0])
+            .instance_type("x", 5.0, vec![3.0, 4.0])
+            .instance_type("y", 9.0, vec![2.0, 2.0])
+            .build()
+            .unwrap();
+        let budget = 30.0;
+        let exact = brute_force_best(&sys, budget, 3).expect("feasible");
+        let ours = Planner::new(&sys).find(budget);
+        assert!(ours.feasible);
+        assert!(
+            ours.score.makespan <= exact.makespan * 2.0 + 1e-6,
+            "heuristic {} vs exact {}",
+            ours.score.makespan,
+            exact.makespan
+        );
+        assert!(ours.score.makespan >= exact.makespan - 1e-6, "exact must be optimal");
+    }
+
+    #[test]
+    fn brute_force_infeasible_budget_is_none() {
+        let sys = SystemBuilder::new()
+            .app("a", vec![1.0])
+            .instance_type("x", 5.0, vec![10.0])
+            .build()
+            .unwrap();
+        assert!(brute_force_best(&sys, 1.0, 2).is_none());
+        assert!(brute_force_best(&sys, 5.0, 2).is_some());
+    }
+}

@@ -1,0 +1,17 @@
+//! Analysis utilities: optimality references, summary statistics and the
+//! table/figure rendering used by the benchmark harness.
+//!
+//! * [`bounds`] — fractional (LP-relaxation) cost/makespan lower bounds
+//!   and an exhaustive-search reference for tiny instances;
+//! * [`stats`] — mean / median / percentiles / relative improvements;
+//! * [`report`] — regenerates the paper's Fig. 1 and Fig. 2 (and the
+//!   Table I echo) as text tables + JSON, from live planner runs.
+
+pub mod bounds;
+pub mod pareto;
+pub mod report;
+pub mod stats;
+
+pub use bounds::{brute_force_best, fractional_cost_floor, makespan_floor};
+pub use pareto::{knee, pareto_frontier, ParetoPoint};
+pub use report::{run_sweep, ApproachRow, SweepReport};

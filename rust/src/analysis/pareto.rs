@@ -1,0 +1,116 @@
+//! Budget–makespan trade-off exploration: compute the Pareto frontier of
+//! `(cost, makespan)` outcomes the planner can reach over a budget range.
+//!
+//! The paper studies fixed budgets; a user deciding *what budget to ask
+//! for* wants the frontier — the set of non-dominated outcomes — plus the
+//! knee (largest marginal makespan gain per extra unit of money).  Used
+//! by `botsched sweep --json` consumers and the `deadline_campaign`
+//! example's cost/deadline table.
+
+use crate::model::{PlanScore, System};
+use crate::scheduler::Planner;
+
+/// One frontier point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ParetoPoint {
+    pub budget: f64,
+    pub score: PlanScore,
+}
+
+/// Run the planner across `budgets` and keep the Pareto-optimal
+/// `(cost, makespan)` outcomes (lower is better in both), sorted by cost.
+/// Infeasible outcomes are dropped.
+pub fn pareto_frontier(sys: &System, budgets: &[f64]) -> Vec<ParetoPoint> {
+    let planner = Planner::new(sys);
+    let mut points: Vec<ParetoPoint> = budgets
+        .iter()
+        .map(|&b| (b, planner.find(b)))
+        .filter(|(_, r)| r.feasible)
+        .map(|(b, r)| ParetoPoint { budget: b, score: r.score })
+        .collect();
+    points.sort_by(|a, b| {
+        a.score
+            .cost
+            .total_cmp(&b.score.cost)
+            .then(a.score.makespan.total_cmp(&b.score.makespan))
+    });
+    // Sweep: keep points whose makespan strictly improves on everything
+    // cheaper.
+    let mut frontier: Vec<ParetoPoint> = Vec::new();
+    for p in points {
+        match frontier.last() {
+            Some(last)
+                if p.score.makespan >= last.score.makespan - 1e-9 =>
+            {
+                // Dominated (or duplicate cost tier): same or worse
+                // makespan for equal-or-higher cost.
+            }
+            _ => frontier.push(p),
+        }
+    }
+    frontier
+}
+
+/// The knee of the frontier: the point with the best marginal
+/// seconds-per-money improvement relative to the previous point.
+/// `None` for frontiers with fewer than two points.
+pub fn knee(frontier: &[ParetoPoint]) -> Option<ParetoPoint> {
+    frontier
+        .windows(2)
+        .map(|w| {
+            let dm = w[0].score.makespan - w[1].score.makespan; // gained seconds
+            let dc = (w[1].score.cost - w[0].score.cost).max(1e-9); // extra money
+            (dm / dc, w[1])
+        })
+        .max_by(|a, b| a.0.total_cmp(&b.0))
+        .map(|(_, p)| p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::paper::table1_system;
+
+    #[test]
+    fn frontier_is_monotone() {
+        let sys = table1_system(0.0);
+        let budgets: Vec<f64> = (55..=100).step_by(5).map(f64::from).collect();
+        let f = pareto_frontier(&sys, &budgets);
+        assert!(f.len() >= 3, "frontier too small: {f:?}");
+        for w in f.windows(2) {
+            assert!(w[1].score.cost > w[0].score.cost - 1e-9);
+            assert!(
+                w[1].score.makespan < w[0].score.makespan - 1e-9,
+                "non-improving frontier point: {w:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn dominated_points_removed() {
+        let sys = table1_system(0.0);
+        // Duplicated budgets produce duplicated outcomes; the frontier
+        // must dedupe them.
+        let f = pareto_frontier(&sys, &[80.0, 80.0, 80.0, 85.0]);
+        assert!(f.len() <= 2);
+    }
+
+    #[test]
+    fn infeasible_budgets_excluded() {
+        let sys = table1_system(0.0);
+        let f = pareto_frontier(&sys, &[10.0, 20.0, 30.0]);
+        assert!(f.is_empty(), "sub-floor budgets cannot be on the frontier");
+    }
+
+    #[test]
+    fn knee_exists_for_multi_point_frontier() {
+        let sys = table1_system(0.0);
+        let budgets: Vec<f64> = (60..=100).step_by(5).map(f64::from).collect();
+        let f = pareto_frontier(&sys, &budgets);
+        if f.len() >= 2 {
+            let k = knee(&f).unwrap();
+            assert!(f.iter().any(|p| (p.budget - k.budget).abs() < 1e-9));
+        }
+        assert!(knee(&f[..1.min(f.len())]).is_none());
+    }
+}

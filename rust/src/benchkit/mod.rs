@@ -1,0 +1,184 @@
+//! A small criterion-style benchmarking harness (the criterion crate is
+//! not available in this offline build).
+//!
+//! Usage inside a `harness = false` bench target:
+//!
+//! ```no_run
+//! use botsched::benchkit::Bench;
+//! let mut b = Bench::new("planner");
+//! b.run("find@80", || {
+//!     // timed closure
+//! });
+//! b.report();
+//! ```
+//!
+//! Each case is warmed up, then run for a target wall-time budget
+//! (adaptive iteration count), and summarised with mean / median / p95 /
+//! stddev and derived throughput.  Output goes to stdout in a fixed-width
+//! table that `cargo bench` captures into bench_output.txt.
+
+use std::time::{Duration, Instant};
+
+use crate::analysis::stats;
+
+/// One measured case.
+#[derive(Debug, Clone)]
+pub struct Case {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub stddev: Duration,
+    /// Optional user-provided items-per-iteration (for throughput).
+    pub items: Option<f64>,
+}
+
+/// A named group of benchmark cases.
+pub struct Bench {
+    pub group: String,
+    warmup: Duration,
+    target: Duration,
+    max_iters: usize,
+    cases: Vec<Case>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        Self {
+            group: group.to_string(),
+            warmup: Duration::from_millis(100),
+            target: Duration::from_millis(700),
+            max_iters: 10_000,
+            cases: Vec::new(),
+        }
+    }
+
+    /// Override the measurement budget (per case).
+    pub fn with_budget(mut self, warmup: Duration, target: Duration) -> Self {
+        self.warmup = warmup;
+        self.target = target;
+        self
+    }
+
+    /// Time a closure.  Returns the recorded case.
+    pub fn run<F: FnMut()>(&mut self, name: &str, f: F) -> &Case {
+        self.run_with_items(name, None, f)
+    }
+
+    /// Time a closure that processes `items` items per iteration
+    /// (enables the throughput column).
+    pub fn run_with_items<F: FnMut()>(
+        &mut self,
+        name: &str,
+        items: Option<f64>,
+        mut f: F,
+    ) -> &Case {
+        // Warmup + calibration.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0usize;
+        while warm_start.elapsed() < self.warmup && warm_iters < self.max_iters {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+        let iters = ((self.target.as_secs_f64() / per_iter.max(1e-9)) as usize)
+            .clamp(5, self.max_iters);
+
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let case = Case {
+            name: name.to_string(),
+            iters,
+            mean: Duration::from_secs_f64(stats::mean(&samples)),
+            median: Duration::from_secs_f64(stats::median(&samples)),
+            p95: Duration::from_secs_f64(stats::percentile(&samples, 95.0)),
+            stddev: Duration::from_secs_f64(stats::stddev(&samples)),
+            items,
+        };
+        self.cases.push(case);
+        self.cases.last().unwrap()
+    }
+
+    /// Print the group table.
+    pub fn report(&self) {
+        println!("\n== bench group: {} ==", self.group);
+        println!(
+            "{:<38} {:>7} {:>12} {:>12} {:>12} {:>12} {:>14}",
+            "case", "iters", "mean", "median", "p95", "stddev", "throughput"
+        );
+        for c in &self.cases {
+            let thr = match c.items {
+                Some(n) if c.mean.as_secs_f64() > 0.0 => {
+                    format!("{:.0}/s", n / c.mean.as_secs_f64())
+                }
+                _ => "-".into(),
+            };
+            println!(
+                "{:<38} {:>7} {:>12} {:>12} {:>12} {:>12} {:>14}",
+                c.name,
+                c.iters,
+                fmt_dur(c.mean),
+                fmt_dur(c.median),
+                fmt_dur(c.p95),
+                fmt_dur(c.stddev),
+                thr
+            );
+        }
+    }
+
+    pub fn cases(&self) -> &[Case] {
+        &self.cases
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.0}ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        let mut b = Bench::new("t").with_budget(Duration::from_millis(5), Duration::from_millis(20));
+        let case = b.run("spin", || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(case.iters >= 5);
+        assert!(case.mean.as_nanos() > 0);
+        assert!(case.p95 >= case.median);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let mut b = Bench::new("t").with_budget(Duration::from_millis(5), Duration::from_millis(20));
+        let case = b.run_with_items("items", Some(100.0), || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(case.items == Some(100.0));
+        b.report(); // smoke the printer
+    }
+
+    #[test]
+    fn fmt_dur_ranges() {
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+        assert!(fmt_dur(Duration::from_millis(2)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_micros(2)).ends_with("us"));
+        assert!(fmt_dur(Duration::from_nanos(200)).ends_with("ns"));
+    }
+}

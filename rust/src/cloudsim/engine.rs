@@ -1,0 +1,412 @@
+//! The discrete-event simulation engine.
+//!
+//! Two execution modes:
+//!
+//! * [`Simulator::run_plan`] — the paper's setting: every task is pinned
+//!   to its VM by the execution plan and runs in assignment order;
+//! * [`Simulator::run_online`] — non-clairvoyant setting: provisioned VMs
+//!   pull tasks from the [`OnlineDispatcher`] as they go idle.
+//!
+//! Billing follows the system's `BillingPolicy`: a VM is charged from
+//! time 0 (provisioning) until it finishes its last task — or until it
+//! fails.  With `NoiseModel::none()` the simulated makespan/cost equal
+//! the planner's analytic eq. 5-8 prediction exactly; the integration
+//! tests pin that equivalence.
+
+use std::collections::VecDeque;
+
+use crate::model::{billed_cost, InstanceTypeId, Plan, System, TaskId};
+use crate::scheduler::nonclairvoyant::OnlineDispatcher;
+use crate::util::Rng;
+
+use super::event::{EventKind, EventQueue};
+use super::noise::NoiseModel;
+
+/// Simulation parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    pub noise: NoiseModel,
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self { noise: NoiseModel::none(), seed: 0 }
+    }
+}
+
+/// Per-VM accounting.
+#[derive(Debug, Clone)]
+pub struct VmStats {
+    pub it: InstanceTypeId,
+    /// When the VM became usable (boot complete).
+    pub ready_at: f64,
+    /// When the VM went idle for good (last task done, or failure).
+    pub finished_at: f64,
+    /// Seconds spent executing tasks.
+    pub busy: f64,
+    pub tasks_done: usize,
+    pub failed: bool,
+    pub billed: f64,
+}
+
+/// Result of one simulation run.
+#[derive(Debug, Clone)]
+pub struct SimOutcome {
+    /// Time the last VM went idle (== completion time when nothing
+    /// stranded).
+    pub makespan: f64,
+    /// Total billed cost across all VMs.
+    pub cost: f64,
+    pub completed: Vec<TaskId>,
+    /// Tasks lost to VM failures (in-flight and queued on dead VMs).
+    pub stranded: Vec<TaskId>,
+    pub vm_stats: Vec<VmStats>,
+    pub failures: usize,
+}
+
+impl SimOutcome {
+    pub fn all_done(&self) -> bool {
+        self.stranded.is_empty()
+    }
+}
+
+#[derive(Debug)]
+struct VmRuntime {
+    it: InstanceTypeId,
+    queue: VecDeque<TaskId>,
+    in_flight: Option<TaskId>,
+    ready_at: f64,
+    finished_at: f64,
+    busy: f64,
+    tasks_done: usize,
+    failed: bool,
+}
+
+impl VmRuntime {
+    fn fresh(it: InstanceTypeId, queue: VecDeque<TaskId>) -> Self {
+        Self {
+            it,
+            queue,
+            in_flight: None,
+            ready_at: 0.0,
+            finished_at: 0.0,
+            busy: 0.0,
+            tasks_done: 0,
+            failed: false,
+        }
+    }
+}
+
+/// The engine.  Stateless; each `run_*` call is independent and fully
+/// determined by `(system, workload, config)`.
+pub struct Simulator;
+
+impl Simulator {
+    /// Execute a pinned plan.
+    pub fn run_plan(sys: &System, plan: &Plan, config: &SimConfig) -> SimOutcome {
+        let mut vms: Vec<VmRuntime> = plan
+            .vms
+            .iter()
+            .map(|vm| VmRuntime::fresh(vm.it, vm.tasks().iter().copied().collect()))
+            .collect();
+        Self::run(sys, &mut vms, None, config)
+    }
+
+    /// Execute with online (non-clairvoyant) dispatch over the given VM
+    /// fleet.
+    pub fn run_online(
+        sys: &System,
+        fleet: &[InstanceTypeId],
+        dispatcher: OnlineDispatcher,
+        config: &SimConfig,
+    ) -> SimOutcome {
+        let mut vms: Vec<VmRuntime> =
+            fleet.iter().map(|&it| VmRuntime::fresh(it, VecDeque::new())).collect();
+        Self::run(sys, &mut vms, Some(dispatcher), config)
+    }
+
+    fn run(
+        sys: &System,
+        vms: &mut [VmRuntime],
+        mut dispatcher: Option<OnlineDispatcher>,
+        config: &SimConfig,
+    ) -> SimOutcome {
+        let noise = config.noise;
+        let mut rng = Rng::new(config.seed);
+        let mut q = EventQueue::new();
+        let mut completed = Vec::new();
+        let mut failures = 0usize;
+
+        // Boot every VM; schedule its (optional) failure.
+        for (i, vm) in vms.iter_mut().enumerate() {
+            let boot = sys.overhead * noise.boot_multiplier(&mut rng);
+            vm.ready_at = boot;
+            vm.finished_at = boot;
+            q.push(boot, EventKind::VmReady { vm: i });
+            if let Some(life) = noise.failure_time(&mut rng) {
+                q.push(boot + life, EventKind::VmFailed { vm: i });
+            }
+        }
+
+        while let Some(ev) = q.pop() {
+            match ev.kind {
+                EventKind::VmReady { vm } => {
+                    Self::start_next(sys, vms, vm, ev.time, &mut dispatcher, &noise, &mut rng, &mut q);
+                }
+                EventKind::TaskDone { vm, task } => {
+                    if vms[vm].failed {
+                        continue; // completion raced the failure; dropped
+                    }
+                    {
+                        let v = &mut vms[vm];
+                        v.in_flight = None;
+                        v.tasks_done += 1;
+                        v.finished_at = ev.time;
+                    }
+                    completed.push(task);
+                    Self::start_next(sys, vms, vm, ev.time, &mut dispatcher, &noise, &mut rng, &mut q);
+                }
+                EventKind::VmFailed { vm } => {
+                    let v = &mut vms[vm];
+                    if v.failed {
+                        continue;
+                    }
+                    // A failure after the VM drained everything is moot.
+                    if v.in_flight.is_none() && v.queue.is_empty() {
+                        continue;
+                    }
+                    v.failed = true;
+                    v.finished_at = ev.time;
+                    failures += 1;
+                }
+            }
+        }
+
+        // Collect stranded tasks: in-flight + queued on failed VMs.
+        // (Live VMs always drain their queues, so leftovers imply failure.)
+        let mut stranded = Vec::new();
+        for v in vms.iter() {
+            if let Some(t) = v.in_flight {
+                stranded.push(t);
+            }
+            stranded.extend(v.queue.iter().copied());
+        }
+        // An all-VMs-failed run can leave tasks inside the dispatcher.
+        if let Some(d) = &mut dispatcher {
+            if !d.is_empty() {
+                let fallback = vms.first().map(|v| v.it).unwrap_or(InstanceTypeId(0));
+                while let Some(t) = d.next_for(sys, fallback) {
+                    stranded.push(t);
+                }
+            }
+        }
+
+        let mut cost = 0.0;
+        let vm_stats: Vec<VmStats> = vms
+            .iter()
+            .map(|v| {
+                let billed = billed_cost(v.finished_at, sys.rate(v.it), sys.hour, sys.billing);
+                cost += billed;
+                VmStats {
+                    it: v.it,
+                    ready_at: v.ready_at,
+                    finished_at: v.finished_at,
+                    busy: v.busy,
+                    tasks_done: v.tasks_done,
+                    failed: v.failed,
+                    billed,
+                }
+            })
+            .collect();
+        let makespan = vms.iter().map(|v| v.finished_at).fold(0.0, f64::max);
+
+        SimOutcome { makespan, cost, completed, stranded, vm_stats, failures }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn start_next(
+        sys: &System,
+        vms: &mut [VmRuntime],
+        vm: usize,
+        now: f64,
+        dispatcher: &mut Option<OnlineDispatcher>,
+        noise: &NoiseModel,
+        rng: &mut Rng,
+        q: &mut EventQueue,
+    ) {
+        let v = &mut vms[vm];
+        if v.failed || v.in_flight.is_some() {
+            return;
+        }
+        let next = match (v.queue.pop_front(), dispatcher.as_mut()) {
+            (Some(t), _) => Some(t),
+            (None, Some(d)) => d.next_for(sys, v.it),
+            (None, None) => None,
+        };
+        let Some(task) = next else {
+            return;
+        };
+        let dur = sys.exec_time(v.it, task) * noise.task_multiplier(rng);
+        v.in_flight = Some(task);
+        v.busy += dur;
+        q.push(now + dur, EventKind::TaskDone { vm, task });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::Planner;
+    use crate::workload::paper::table1_system;
+
+    #[test]
+    fn noiseless_sim_matches_analytic_score() {
+        let sys = table1_system(30.0);
+        let report = Planner::new(&sys).find(80.0);
+        let sim = Simulator::run_plan(&sys, &report.plan, &SimConfig::default());
+        assert!(sim.all_done());
+        assert_eq!(sim.completed.len(), 750);
+        assert!(
+            (sim.makespan - report.score.makespan).abs() < 1e-6,
+            "sim {} vs analytic {}",
+            sim.makespan,
+            report.score.makespan
+        );
+        assert!(
+            (sim.cost - report.score.cost).abs() < 1e-6,
+            "sim {} vs analytic {}",
+            sim.cost,
+            report.score.cost
+        );
+    }
+
+    #[test]
+    fn jitter_changes_times_but_completes() {
+        let sys = table1_system(0.0);
+        let report = Planner::new(&sys).find(80.0);
+        let cfg = SimConfig { noise: NoiseModel::jitter(0.1), seed: 7 };
+        let sim = Simulator::run_plan(&sys, &report.plan, &cfg);
+        assert!(sim.all_done());
+        assert!(sim.makespan > 0.0);
+        assert!((sim.makespan - report.score.makespan).abs() > 1e-9);
+        // Deterministic given the seed.
+        let sim2 = Simulator::run_plan(&sys, &report.plan, &cfg);
+        assert_eq!(sim.makespan, sim2.makespan);
+        assert_eq!(sim.cost, sim2.cost);
+    }
+
+    #[test]
+    fn failures_strand_tasks() {
+        let sys = table1_system(0.0);
+        let report = Planner::new(&sys).find(80.0);
+        // Mean lifetime far below the makespan: most VMs die mid-run.
+        let cfg = SimConfig { noise: NoiseModel::with_failures(0.0, 300.0), seed: 3 };
+        let sim = Simulator::run_plan(&sys, &report.plan, &cfg);
+        assert!(sim.failures > 0);
+        assert!(!sim.stranded.is_empty());
+        assert_eq!(sim.completed.len() + sim.stranded.len(), 750);
+    }
+
+    #[test]
+    fn online_dispatch_completes_everything() {
+        let sys = table1_system(0.0);
+        let fleet = vec![
+            InstanceTypeId(2),
+            InstanceTypeId(2),
+            InstanceTypeId(3),
+            InstanceTypeId(3),
+            InstanceTypeId(0),
+        ];
+        let d = OnlineDispatcher::new(&sys);
+        let sim = Simulator::run_online(&sys, &fleet, d, &SimConfig::default());
+        assert!(sim.all_done());
+        assert_eq!(sim.completed.len(), 750);
+        // Work-conserving: every VM did something.
+        assert!(sim.vm_stats.iter().all(|v| v.tasks_done > 0));
+    }
+
+    #[test]
+    fn online_beats_or_matches_worst_pinned() {
+        // Online self-scheduling should not be worse than piling all
+        // tasks onto one VM of the same fleet.
+        let sys = table1_system(0.0);
+        let fleet = vec![InstanceTypeId(3); 4];
+        let d = OnlineDispatcher::new(&sys);
+        let online = Simulator::run_online(&sys, &fleet, d, &SimConfig::default());
+        let mut pinned = Plan::new();
+        let v0 = pinned.add_vm(&sys, InstanceTypeId(3));
+        for _ in 1..4 {
+            pinned.add_vm(&sys, InstanceTypeId(3));
+        }
+        for t in sys.tasks() {
+            pinned.vms[v0].push_task(&sys, t.id);
+        }
+        let worst = Simulator::run_plan(&sys, &pinned, &SimConfig::default());
+        assert!(online.makespan <= worst.makespan);
+    }
+
+    #[test]
+    fn empty_plan_is_empty_outcome() {
+        let sys = table1_system(0.0);
+        let plan = Plan::new();
+        let sim = Simulator::run_plan(&sys, &plan, &SimConfig::default());
+        assert_eq!(sim.makespan, 0.0);
+        assert_eq!(sim.cost, 0.0);
+        assert!(sim.completed.is_empty());
+    }
+}
+// (appended tests: billing-policy and overhead edge cases)
+#[cfg(test)]
+mod more_tests {
+    use super::*;
+    use crate::model::{BillingPolicy, SystemBuilder};
+    use crate::scheduler::Planner;
+
+    #[test]
+    fn per_second_billing_in_simulator_matches_analytic() {
+        let sys = SystemBuilder::new()
+            .app("a", vec![10.0; 20])
+            .instance_type("x", 6.0, vec![3.0])
+            .instance_type("y", 9.0, vec![2.0])
+            .billing(BillingPolicy::PerSecond)
+            .overhead(25.0)
+            .build()
+            .unwrap();
+        let r = Planner::new(&sys).find(2.0);
+        let sim = Simulator::run_plan(&sys, &r.plan, &SimConfig::default());
+        assert!(sim.all_done());
+        assert!((sim.cost - r.score.cost).abs() < 1e-9);
+        assert!((sim.makespan - r.score.makespan).abs() < 1e-9);
+    }
+
+    #[test]
+    fn boot_overhead_delays_first_task() {
+        let sys = SystemBuilder::new()
+            .app("a", vec![10.0])
+            .instance_type("x", 5.0, vec![2.0])
+            .overhead(300.0)
+            .build()
+            .unwrap();
+        let mut plan = crate::model::Plan::new();
+        let v = plan.add_vm(&sys, crate::model::InstanceTypeId(0));
+        plan.vms[v].push_task(&sys, crate::model::TaskId(0));
+        let sim = Simulator::run_plan(&sys, &plan, &SimConfig::default());
+        assert_eq!(sim.makespan, 320.0); // 300 boot + 20 exec
+        assert_eq!(sim.vm_stats[0].ready_at, 300.0);
+    }
+
+    #[test]
+    fn failed_vm_still_bills_until_failure() {
+        let sys = crate::workload::paper::table1_system(0.0);
+        let r = Planner::new(&sys).find(80.0);
+        let cfg = SimConfig { noise: NoiseModel::with_failures(0.0, 600.0), seed: 2 };
+        let sim = Simulator::run_plan(&sys, &r.plan, &cfg);
+        if sim.failures > 0 {
+            // Every failed VM billed at least one hour.
+            for v in sim.vm_stats.iter().filter(|v| v.failed) {
+                assert!(v.billed >= sys.rate(v.it));
+            }
+        }
+    }
+}

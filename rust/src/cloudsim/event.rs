@@ -1,0 +1,124 @@
+//! The simulator's event queue: a deterministic min-heap over simulated
+//! time with a sequence-number tie-break (equal-time events fire in
+//! insertion order, so runs are bit-reproducible).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::model::TaskId;
+
+/// What happens at a point in simulated time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EventKind {
+    /// VM finished booting and may start its first task.
+    VmReady { vm: usize },
+    /// VM finished executing a task.
+    TaskDone { vm: usize, task: TaskId },
+    /// VM suffered a failure; everything not yet finished is lost.
+    VmFailed { vm: usize },
+}
+
+/// A scheduled event.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub time: f64,
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: reverse to pop the earliest event;
+        // lower sequence number wins ties.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Deterministic event queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    next_seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, time: f64, kind: EventKind) {
+        debug_assert!(time.is_finite() && time >= 0.0);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Event { time, seq, kind });
+    }
+
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(5.0, EventKind::VmReady { vm: 0 });
+        q.push(1.0, EventKind::VmReady { vm: 1 });
+        q.push(3.0, EventKind::VmReady { vm: 2 });
+        let order: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|e| e.time).collect();
+        assert_eq!(order, vec![1.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn equal_times_fire_in_insertion_order() {
+        let mut q = EventQueue::new();
+        for vm in 0..5 {
+            q.push(2.0, EventKind::VmReady { vm });
+        }
+        let vms: Vec<usize> = std::iter::from_fn(|| q.pop())
+            .map(|e| match e.kind {
+                EventKind::VmReady { vm } => vm,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(vms, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn len_and_empty() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        q.push(1.0, EventKind::VmFailed { vm: 0 });
+        assert_eq!(q.len(), 1);
+        q.pop();
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,29 @@
+//! Discrete-event cloud simulator.
+//!
+//! The substrate the paper's evaluation ran on (the authors used a Scala
+//! simulation framework): VMs boot with overhead `o`, execute their
+//! assigned tasks sequentially, bill by the hourly ceiling, and the
+//! simulated makespan/cost are compared against the planner's analytic
+//! prediction.  On top of the paper's model the simulator adds the
+//! realism knobs the paper's future work calls for:
+//!
+//! * [`noise`] — multiplicative per-task performance jitter (multi-tenant
+//!   interference) and boot-time variance;
+//! * failure injection — VMs die at exponentially distributed times,
+//!   stranding their unfinished tasks;
+//! * [`campaign`] — closed-loop execution: simulate, detect failures,
+//!   re-plan the residual workload (`scheduler::dynamic`), repeat;
+//! * [`sampling`] — "test runs" producing noisy (type, app, size, time)
+//!   observations for the perf-matrix estimator artifact.
+
+pub mod campaign;
+pub mod engine;
+pub mod event;
+pub mod noise;
+pub mod sampling;
+
+pub use campaign::{run_campaign, CampaignOutcome, CampaignSpec};
+pub use engine::{SimConfig, SimOutcome, Simulator, VmStats};
+pub use event::{Event, EventKind, EventQueue};
+pub use noise::NoiseModel;
+pub use sampling::{sample_runs, Observation};

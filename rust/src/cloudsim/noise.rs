@@ -1,0 +1,95 @@
+//! Performance-noise models for the simulator.
+//!
+//! The paper's framework executes plans deterministically; real clouds do
+//! not.  The noise model perturbs per-task execution times and boot
+//! overheads multiplicatively (log-normal, mean-one) and optionally
+//! schedules VM failures (exponential lifetimes).  `NoiseModel::none()`
+//! reproduces the paper's deterministic setting exactly.
+
+use crate::util::Rng;
+
+/// Multiplicative noise + failure injection parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct NoiseModel {
+    /// Sigma of the mean-one log-normal task-time multiplier (0 = exact).
+    pub task_sigma: f64,
+    /// Sigma of the mean-one log-normal boot-time multiplier.
+    pub boot_sigma: f64,
+    /// Mean VM lifetime in seconds for exponential failures
+    /// (`None` = VMs never fail).
+    pub mean_lifetime: Option<f64>,
+}
+
+impl NoiseModel {
+    /// The paper's deterministic setting.
+    pub fn none() -> Self {
+        Self { task_sigma: 0.0, boot_sigma: 0.0, mean_lifetime: None }
+    }
+
+    /// Mild multi-tenant jitter (~10% task-time spread), no failures.
+    pub fn jitter(task_sigma: f64) -> Self {
+        Self { task_sigma, boot_sigma: task_sigma, mean_lifetime: None }
+    }
+
+    /// Jitter + exponential VM failures with the given mean lifetime.
+    pub fn with_failures(task_sigma: f64, mean_lifetime: f64) -> Self {
+        Self { task_sigma, boot_sigma: task_sigma, mean_lifetime: Some(mean_lifetime) }
+    }
+
+    /// Mean-one log-normal multiplier with sigma `s`: exp(N(-s²/2, s)).
+    fn mean_one_lognormal(rng: &mut Rng, s: f64) -> f64 {
+        if s == 0.0 {
+            1.0
+        } else {
+            rng.log_normal(-s * s / 2.0, s)
+        }
+    }
+
+    /// Multiplier applied to one task's nominal execution time.
+    pub fn task_multiplier(&self, rng: &mut Rng) -> f64 {
+        Self::mean_one_lognormal(rng, self.task_sigma)
+    }
+
+    /// Multiplier applied to a VM's nominal boot overhead.
+    pub fn boot_multiplier(&self, rng: &mut Rng) -> f64 {
+        Self::mean_one_lognormal(rng, self.boot_sigma)
+    }
+
+    /// Sampled failure time for a VM (from boot), if failures are on.
+    pub fn failure_time(&self, rng: &mut Rng) -> Option<f64> {
+        self.mean_lifetime.map(|m| rng.exponential(1.0 / m))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_exact() {
+        let m = NoiseModel::none();
+        let mut rng = Rng::new(0);
+        assert_eq!(m.task_multiplier(&mut rng), 1.0);
+        assert_eq!(m.boot_multiplier(&mut rng), 1.0);
+        assert_eq!(m.failure_time(&mut rng), None);
+    }
+
+    #[test]
+    fn jitter_is_mean_one() {
+        let m = NoiseModel::jitter(0.2);
+        let mut rng = Rng::new(1);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| m.task_multiplier(&mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn failures_have_requested_mean() {
+        let m = NoiseModel::with_failures(0.0, 5000.0);
+        let mut rng = Rng::new(2);
+        let n = 100_000;
+        let mean: f64 =
+            (0..n).map(|_| m.failure_time(&mut rng).unwrap()).sum::<f64>() / n as f64;
+        assert!((mean - 5000.0).abs() < 100.0, "mean {mean}");
+    }
+}

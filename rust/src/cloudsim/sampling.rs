@@ -1,0 +1,116 @@
+//! "Test runs": sample task executions to observe performance.
+//!
+//! Sec. III-A: "In order to acquire the performance between instance
+//! types and applications, we suggest to perform some test runs."  This
+//! module simulates those runs — a few tasks per (instance type,
+//! application) cell, timed under the noise model — producing the
+//! observations the `perf_estim` XLA artifact (and its rust-native
+//! mirror) turns back into an estimated performance matrix.
+
+use crate::model::{AppId, InstanceTypeId, System};
+use crate::util::Rng;
+
+use super::noise::NoiseModel;
+
+/// One timed test run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Observation {
+    pub it: InstanceTypeId,
+    pub app: AppId,
+    pub size: f64,
+    /// Observed wall-clock execution time (noisy).
+    pub time: f64,
+}
+
+/// Run `per_cell` sampled tasks on every (type, app) cell.
+pub fn sample_runs(
+    sys: &System,
+    per_cell: usize,
+    noise: &NoiseModel,
+    seed: u64,
+) -> Vec<Observation> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(per_cell * sys.n_types() * sys.n_apps());
+    for it in &sys.instance_types {
+        for app in &sys.apps {
+            if app.is_empty() {
+                continue;
+            }
+            for _ in 0..per_cell {
+                let size = *rng.choice(&app.task_sizes);
+                let nominal = sys.perf.get(it.id, app.id) * size;
+                let time = nominal * noise.task_multiplier(&mut rng);
+                out.push(Observation { it: it.id, app: app.id, size, time });
+            }
+        }
+    }
+    out
+}
+
+/// Rust-native mirror of the `perf_estim` artifact: per-cell weighted
+/// least squares of `time = P * size` with a prior pseudo-count.  The
+/// runtime's XLA-backed implementation is differentially tested against
+/// this (same formula as `python/compile/kernels/ref.py::perf_estim_ref`).
+pub fn estimate_perf_native(
+    sys: &System,
+    obs: &[Observation],
+    prior: &[f64],
+    prior_weight: f64,
+) -> Vec<f64> {
+    let m = sys.n_apps();
+    let cells = sys.n_types() * m;
+    assert_eq!(prior.len(), cells);
+    let mut num: Vec<f64> = prior.iter().map(|p| p * prior_weight).collect();
+    let mut den: Vec<f64> = vec![prior_weight; cells];
+    for o in obs {
+        let c = o.it.index() * m + o.app.index();
+        num[c] += o.size * o.time;
+        den[c] += o.size * o.size;
+    }
+    num.iter().zip(&den).map(|(n, d)| if *d > 0.0 { n / d } else { 0.0 }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::paper::table1_system;
+
+    #[test]
+    fn noiseless_estimation_recovers_table1_exactly() {
+        let sys = table1_system(0.0);
+        let obs = sample_runs(&sys, 5, &NoiseModel::none(), 1);
+        assert_eq!(obs.len(), 5 * 4 * 3);
+        let prior = vec![0.0; 12];
+        let est = estimate_perf_native(&sys, &obs, &prior, 0.0);
+        for it in &sys.instance_types {
+            for app in &sys.apps {
+                let truth = sys.perf.get(it.id, app.id);
+                let got = est[it.id.index() * 3 + app.id.index()];
+                assert!((got - truth).abs() < 1e-9, "cell ({}, {}): {got} vs {truth}", it.id.0, app.id.0);
+            }
+        }
+    }
+
+    #[test]
+    fn noisy_estimation_is_close() {
+        let sys = table1_system(0.0);
+        let obs = sample_runs(&sys, 40, &NoiseModel::jitter(0.05), 2);
+        let prior = vec![15.0; 12];
+        let est = estimate_perf_native(&sys, &obs, &prior, 1e-6);
+        for it in &sys.instance_types {
+            for app in &sys.apps {
+                let truth = sys.perf.get(it.id, app.id);
+                let got = est[it.id.index() * 3 + app.id.index()];
+                assert!((got - truth).abs() / truth < 0.1, "cell off: {got} vs {truth}");
+            }
+        }
+    }
+
+    #[test]
+    fn unsampled_cells_fall_back_to_prior() {
+        let sys = table1_system(0.0);
+        let prior = vec![42.0; 12];
+        let est = estimate_perf_native(&sys, &[], &prior, 1.0);
+        assert!(est.iter().all(|p| (*p - 42.0).abs() < 1e-12));
+    }
+}

@@ -1,0 +1,325 @@
+//! JSON (de)serialisation of the public configuration surface: problem
+//! systems, planner settings and noise models.
+//!
+//! Used by the CLI (`--system file.json`), the coordinator wire protocol
+//! and the report files.  The schema mirrors the model types 1:1:
+//!
+//! ```json
+//! {
+//!   "overhead": 30.0,
+//!   "hour": 3600.0,
+//!   "billing": "hourly",
+//!   "apps": [
+//!     {"name": "A1", "task_sizes": [1, 1, 2, 3]},
+//!     {"name": "A2", "tasks": 250, "sizes_equally_spaced": [1, 5]}
+//!   ],
+//!   "instance_types": [
+//!     {"name": "it1", "cost_per_hour": 5.0, "perf": [20.0, 24.0]}
+//!   ]
+//! }
+//! ```
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::cloudsim::NoiseModel;
+use crate::model::{BillingPolicy, System, SystemBuilder};
+use crate::scheduler::PlannerConfig;
+use crate::util::Json;
+
+/// Parse a [`System`] from its JSON description.
+pub fn system_from_json(j: &Json) -> Result<System> {
+    let mut b = SystemBuilder::new();
+    if let Some(o) = j.get("overhead").and_then(Json::as_f64) {
+        b = b.overhead(o);
+    }
+    if let Some(h) = j.get("hour").and_then(Json::as_f64) {
+        b = b.hour(h);
+    }
+    if let Some(bill) = j.get("billing").and_then(Json::as_str) {
+        b = b.billing(match bill {
+            "hourly" => BillingPolicy::HourlyCeil,
+            "per_second" => BillingPolicy::PerSecond,
+            other => bail!("unknown billing policy {other:?}"),
+        });
+    }
+    let apps = j
+        .get("apps")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("system.apps missing"))?;
+    for (i, app) in apps.iter().enumerate() {
+        let name = app
+            .get("name")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("app{i}"));
+        let sizes: Vec<f64> = if let Some(arr) = app.get("task_sizes").and_then(Json::as_arr) {
+            arr.iter()
+                .map(|v| v.as_f64().ok_or_else(|| anyhow!("non-numeric task size")))
+                .collect::<Result<_>>()?
+        } else if let (Some(n), Some(range)) = (
+            app.get("tasks").and_then(Json::as_u64),
+            app.get("sizes_equally_spaced").and_then(Json::as_arr),
+        ) {
+            let lo = range
+                .first()
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("bad sizes_equally_spaced"))? as i64;
+            let hi = range
+                .get(1)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("bad sizes_equally_spaced"))? as i64;
+            if hi < lo {
+                bail!("sizes_equally_spaced range inverted");
+            }
+            let span = (hi - lo + 1) as u64;
+            (0..n).map(|k| (lo + (k % span) as i64) as f64).collect()
+        } else {
+            bail!("app {name}: need task_sizes or tasks+sizes_equally_spaced");
+        };
+        b = b.app(&name, sizes);
+    }
+    let its = j
+        .get("instance_types")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("system.instance_types missing"))?;
+    for (i, it) in its.iter().enumerate() {
+        let name = it
+            .get("name")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("it{i}"));
+        let cost = it
+            .get("cost_per_hour")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("instance type {name}: cost_per_hour missing"))?;
+        let perf: Vec<f64> = it
+            .get("perf")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("instance type {name}: perf missing"))?
+            .iter()
+            .map(|v| v.as_f64().ok_or_else(|| anyhow!("non-numeric perf")))
+            .collect::<Result<_>>()?;
+        b = b.instance_type(&name, cost, perf);
+    }
+    b.build().map_err(|e| anyhow!("invalid system: {e}"))
+}
+
+/// Serialise a [`System`] (inverse of [`system_from_json`]).
+pub fn system_to_json(sys: &System) -> Json {
+    Json::obj(vec![
+        ("overhead", Json::num(sys.overhead)),
+        ("hour", Json::num(sys.hour)),
+        (
+            "billing",
+            Json::str(match sys.billing {
+                BillingPolicy::HourlyCeil => "hourly",
+                BillingPolicy::PerSecond => "per_second",
+            }),
+        ),
+        (
+            "apps",
+            Json::arr(sys.apps.iter().map(|a| {
+                Json::obj(vec![
+                    ("name", Json::str(&a.name)),
+                    ("task_sizes", Json::arr(a.task_sizes.iter().map(|s| Json::num(*s)))),
+                ])
+            })),
+        ),
+        (
+            "instance_types",
+            Json::arr(sys.instance_types.iter().map(|it| {
+                Json::obj(vec![
+                    ("name", Json::str(&it.name)),
+                    ("cost_per_hour", Json::num(it.cost_per_hour)),
+                    ("perf", Json::arr(sys.perf.row(it.id).iter().map(|p| Json::num(*p)))),
+                ])
+            })),
+        ),
+    ])
+}
+
+/// Serialise a full execution plan (per-VM instance type + task ids).
+pub fn plan_to_json(sys: &System, plan: &crate::model::Plan) -> Json {
+    Json::obj(vec![(
+        "vms",
+        Json::arr(plan.vms.iter().map(|vm| {
+            Json::obj(vec![
+                ("instance_type", Json::str(&sys.instance_type(vm.it).name)),
+                ("instance_type_id", Json::num(vm.it.0 as f64)),
+                (
+                    "tasks",
+                    Json::arr(vm.tasks().iter().map(|t| Json::num(t.0 as f64))),
+                ),
+            ])
+        })),
+    )])
+}
+
+/// Rebuild a plan from its JSON form (inverse of [`plan_to_json`]).
+pub fn plan_from_json(sys: &System, j: &Json) -> Result<crate::model::Plan> {
+    let mut plan = crate::model::Plan::new();
+    let vms = j
+        .get("vms")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("plan: missing vms[]"))?;
+    for (i, vm) in vms.iter().enumerate() {
+        let it = vm
+            .get("instance_type_id")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("plan vm {i}: missing instance_type_id"))?;
+        if it as usize >= sys.n_types() {
+            bail!("plan vm {i}: unknown instance type {it}");
+        }
+        let idx = plan.add_vm(sys, crate::model::InstanceTypeId(it as u16));
+        for t in vm
+            .get("tasks")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("plan vm {i}: missing tasks[]"))?
+        {
+            let tid = t.as_u64().ok_or_else(|| anyhow!("plan vm {i}: bad task id"))?;
+            if tid as usize >= sys.tasks().len() {
+                bail!("plan vm {i}: unknown task {tid}");
+            }
+            plan.vms[idx].push_task(sys, crate::model::TaskId(tid as u32));
+        }
+    }
+    Ok(plan)
+}
+
+/// Load a system from a JSON file, or the paper's Table I setup for the
+/// reserved name `"paper"` (optionally `"paper:<overhead>"`).
+pub fn load_system(spec: &str) -> Result<System> {
+    if spec == "paper" {
+        return Ok(crate::workload::paper::table1_system(0.0));
+    }
+    if let Some(o) = spec.strip_prefix("paper:") {
+        let o: f64 = o.parse().context("overhead in paper:<overhead>")?;
+        return Ok(crate::workload::paper::table1_system(o));
+    }
+    let text =
+        std::fs::read_to_string(spec).with_context(|| format!("reading system file {spec}"))?;
+    let j = Json::parse(&text).with_context(|| format!("parsing {spec}"))?;
+    system_from_json(&j)
+}
+
+/// Parse a [`PlannerConfig`] from JSON (all fields optional).
+pub fn planner_config_from_json(j: &Json) -> Result<PlannerConfig> {
+    let mut cfg = PlannerConfig::default();
+    if let Some(n) = j.get("max_iters").and_then(Json::as_u64) {
+        cfg.max_iters = n as usize;
+    }
+    if let Some(k) = j.get("replace_k").and_then(Json::as_u64) {
+        cfg.replace_k = k as usize;
+    }
+    let flag = |key: &str, default: bool| j.get(key).and_then(Json::as_bool).unwrap_or(default);
+    cfg.enable_reduce = flag("enable_reduce", cfg.enable_reduce);
+    cfg.enable_add = flag("enable_add", cfg.enable_add);
+    cfg.enable_balance = flag("enable_balance", cfg.enable_balance);
+    cfg.enable_split = flag("enable_split", cfg.enable_split);
+    cfg.enable_replace = flag("enable_replace", cfg.enable_replace);
+    Ok(cfg)
+}
+
+/// Parse a [`NoiseModel`] from JSON (all fields optional, default none).
+pub fn noise_from_json(j: &Json) -> NoiseModel {
+    NoiseModel {
+        task_sigma: j.get("task_sigma").and_then(Json::as_f64).unwrap_or(0.0),
+        boot_sigma: j.get("boot_sigma").and_then(Json::as_f64).unwrap_or(0.0),
+        mean_lifetime: j.get("mean_lifetime").and_then(Json::as_f64),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_paper_system() {
+        let sys = crate::workload::paper::table1_system(30.0);
+        let j = system_to_json(&sys);
+        let back = system_from_json(&j).unwrap();
+        assert_eq!(back.n_apps(), 3);
+        assert_eq!(back.n_types(), 4);
+        assert_eq!(back.overhead, 30.0);
+        assert_eq!(back.tasks().len(), 750);
+        assert_eq!(back.perf.row(crate::model::InstanceTypeId(2)), sys.perf.row(crate::model::InstanceTypeId(2)));
+    }
+
+    #[test]
+    fn equally_spaced_shorthand() {
+        let j = Json::parse(
+            r#"{"apps": [{"tasks": 10, "sizes_equally_spaced": [1, 5]}],
+                "instance_types": [{"cost_per_hour": 5, "perf": [10]}]}"#,
+        )
+        .unwrap();
+        let sys = system_from_json(&j).unwrap();
+        assert_eq!(sys.tasks().len(), 10);
+        assert_eq!(sys.apps[0].total_size(), 1.0 + 2.0 + 3.0 + 4.0 + 5.0 + 1.0 + 2.0 + 3.0 + 4.0 + 5.0);
+    }
+
+    #[test]
+    fn bad_inputs_error() {
+        assert!(system_from_json(&Json::parse(r#"{}"#).unwrap()).is_err());
+        assert!(system_from_json(
+            &Json::parse(r#"{"apps": [], "instance_types": []}"#).unwrap()
+        )
+        .is_err());
+        assert!(system_from_json(
+            &Json::parse(
+                r#"{"billing": "weird", "apps": [{"task_sizes": [1]}],
+                    "instance_types": [{"cost_per_hour": 5, "perf": [10]}]}"#
+            )
+            .unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn load_system_paper_shorthand() {
+        assert_eq!(load_system("paper").unwrap().overhead, 0.0);
+        assert_eq!(load_system("paper:45").unwrap().overhead, 45.0);
+        assert!(load_system("/does/not/exist.json").is_err());
+    }
+
+    #[test]
+    fn planner_config_overrides() {
+        let j = Json::parse(r#"{"max_iters": 3, "enable_split": false, "replace_k": 2}"#).unwrap();
+        let cfg = planner_config_from_json(&j).unwrap();
+        assert_eq!(cfg.max_iters, 3);
+        assert!(!cfg.enable_split);
+        assert!(cfg.enable_balance);
+        assert_eq!(cfg.replace_k, 2);
+    }
+
+    #[test]
+    fn plan_json_roundtrip() {
+        let sys = crate::workload::paper::table1_system(0.0);
+        let plan = crate::scheduler::Planner::new(&sys).find(70.0).plan;
+        let j = plan_to_json(&sys, &plan);
+        let back = plan_from_json(&sys, &j).unwrap();
+        assert_eq!(back.n_vms(), plan.n_vms());
+        assert!(back.validate_partition(&sys).is_ok());
+        let (a, b) = (plan.score(&sys), back.score(&sys));
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.cost, b.cost);
+    }
+
+    #[test]
+    fn plan_from_json_rejects_garbage() {
+        let sys = crate::workload::paper::table1_system(0.0);
+        assert!(plan_from_json(&sys, &Json::parse("{}").unwrap()).is_err());
+        let j = Json::parse(r#"{"vms":[{"instance_type_id":99,"tasks":[]}]}"#).unwrap();
+        assert!(plan_from_json(&sys, &j).is_err());
+        let j = Json::parse(r#"{"vms":[{"instance_type_id":0,"tasks":[100000]}]}"#).unwrap();
+        assert!(plan_from_json(&sys, &j).is_err());
+    }
+
+    #[test]
+    fn noise_parsing() {
+        let j = Json::parse(r#"{"task_sigma": 0.1, "mean_lifetime": 5000}"#).unwrap();
+        let n = noise_from_json(&j);
+        assert_eq!(n.task_sigma, 0.1);
+        assert_eq!(n.mean_lifetime, Some(5000.0));
+        assert_eq!(n.boot_sigma, 0.0);
+    }
+}

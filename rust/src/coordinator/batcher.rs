@@ -1,0 +1,257 @@
+//! Dynamic batching in front of the XLA evaluator.
+//!
+//! The artifact scores `K` candidates per execution no matter how many
+//! are real (the shape is static), so concurrent planner threads each
+//! scoring a handful of REPLACE candidates waste most of the batch.  The
+//! [`BatchingEvaluator`] runs a background worker that drains queued
+//! scoring requests, packs as many candidates as fit into one artifact
+//! call, executes once, and distributes the scores back — the same
+//! dynamic-batching move serving systems make for GPU inference, applied
+//! to plan scoring.
+//!
+//! Requests block on a condvar until their scores arrive; the worker
+//! waits up to `max_wait` for more work to coalesce once it has at least
+//! one request (cap `K` candidates per execution).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::Metrics;
+use crate::eval::{EvalBatch, PlanEvaluator};
+use crate::model::PlanScore;
+
+struct Job {
+    batch: EvalBatch,
+    reply: Arc<(Mutex<Option<Vec<PlanScore>>>, Condvar)>,
+}
+
+struct Queue {
+    jobs: Mutex<VecDeque<Job>>,
+    signal: Condvar,
+}
+
+/// A [`PlanEvaluator`] that coalesces concurrent scoring requests into
+/// larger executions on the wrapped evaluator.
+pub struct BatchingEvaluator {
+    queue: Arc<Queue>,
+    stop: Arc<AtomicBool>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl BatchingEvaluator {
+    /// `chunk` should match the artifact's K; `max_wait` bounds the extra
+    /// latency spent waiting for co-batchable work.
+    pub fn new(
+        inner: Arc<dyn PlanEvaluator>,
+        chunk: usize,
+        max_wait: Duration,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        let queue = Arc::new(Queue { jobs: Mutex::new(VecDeque::new()), signal: Condvar::new() });
+        let stop = Arc::new(AtomicBool::new(false));
+        let worker = {
+            let queue = Arc::clone(&queue);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || Self::worker_loop(queue, stop, inner, chunk, max_wait, metrics))
+        };
+        Self { queue, stop, worker: Some(worker) }
+    }
+
+    fn worker_loop(
+        queue: Arc<Queue>,
+        stop: Arc<AtomicBool>,
+        inner: Arc<dyn PlanEvaluator>,
+        chunk: usize,
+        max_wait: Duration,
+        metrics: Arc<Metrics>,
+    ) {
+        loop {
+            // Wait for at least one job.
+            let mut jobs = queue.jobs.lock().unwrap();
+            while jobs.is_empty() {
+                if stop.load(Ordering::Acquire) {
+                    return;
+                }
+                let (guard, _timeout) =
+                    queue.signal.wait_timeout(jobs, Duration::from_millis(50)).unwrap();
+                jobs = guard;
+            }
+            // Linger briefly for co-batchable work, then drain up to
+            // `chunk` candidates' worth of jobs.
+            if !max_wait.is_zero() {
+                let deadline = std::time::Instant::now() + max_wait;
+                loop {
+                    let queued: usize = jobs.iter().map(|j| j.batch.len()).sum();
+                    let now = std::time::Instant::now();
+                    if queued >= chunk || now >= deadline {
+                        break;
+                    }
+                    let (guard, _t) = queue.signal.wait_timeout(jobs, deadline - now).unwrap();
+                    jobs = guard;
+                }
+            }
+            let mut taken: Vec<Job> = Vec::new();
+            let mut n_candidates = 0usize;
+            while let Some(job) = jobs.front() {
+                let n = job.batch.len();
+                if !taken.is_empty() && n_candidates + n > chunk {
+                    break;
+                }
+                n_candidates += n;
+                taken.push(jobs.pop_front().unwrap());
+            }
+            drop(jobs);
+
+            if taken.is_empty() {
+                continue;
+            }
+            // Merge into one super-batch (environments must agree; jobs
+            // with a different environment are evaluated separately).
+            let mergeable = taken
+                .iter()
+                .all(|j| env_key(&j.batch) == env_key(&taken[0].batch));
+            if mergeable && taken.len() > 1 {
+                let mut merged = EvalBatch {
+                    candidates: Vec::with_capacity(n_candidates),
+                    ..taken[0].batch.clone()
+                };
+                for j in &taken {
+                    merged.candidates.extend(j.batch.candidates.iter().cloned());
+                }
+                metrics.record_eval_batch(merged.len());
+                let scores = inner.eval_batch(&merged);
+                let mut off = 0usize;
+                for j in taken {
+                    let n = j.batch.len();
+                    deliver(&j, scores[off..off + n].to_vec());
+                    off += n;
+                }
+            } else {
+                for j in taken {
+                    metrics.record_eval_batch(j.batch.len());
+                    let scores = inner.eval_batch(&j.batch);
+                    deliver(&j, scores);
+                }
+            }
+        }
+    }
+}
+
+fn env_key(b: &EvalBatch) -> (u64, u64, u8, usize) {
+    (
+        b.overhead.to_bits(),
+        b.hour.to_bits(),
+        matches!(b.billing, crate::model::BillingPolicy::PerSecond) as u8,
+        b.n_apps,
+    )
+}
+
+fn deliver(job: &Job, scores: Vec<PlanScore>) {
+    let (lock, cv) = &*job.reply;
+    *lock.lock().unwrap() = Some(scores);
+    cv.notify_one();
+}
+
+impl PlanEvaluator for BatchingEvaluator {
+    fn eval_batch(&self, batch: &EvalBatch) -> Vec<PlanScore> {
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        let reply = Arc::new((Mutex::new(None), Condvar::new()));
+        {
+            let mut jobs = self.queue.jobs.lock().unwrap();
+            jobs.push_back(Job { batch: batch.clone(), reply: Arc::clone(&reply) });
+        }
+        self.queue.signal.notify_all();
+        let (lock, cv) = &*reply;
+        let mut guard = lock.lock().unwrap();
+        while guard.is_none() {
+            guard = cv.wait(guard).unwrap();
+        }
+        guard.take().unwrap()
+    }
+
+    fn name(&self) -> &'static str {
+        "batching"
+    }
+}
+
+impl Drop for BatchingEvaluator {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        self.queue.signal.notify_all();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::NativeEvaluator;
+    use crate::scheduler::maximise_parallelism;
+    use crate::workload::paper::table1_system;
+
+    #[test]
+    fn scores_match_inner_evaluator() {
+        let metrics = Arc::new(Metrics::new());
+        let be = BatchingEvaluator::new(
+            Arc::new(NativeEvaluator),
+            64,
+            Duration::ZERO,
+            Arc::clone(&metrics),
+        );
+        let sys = table1_system(0.0);
+        let plan = maximise_parallelism(&sys, 60.0);
+        let direct = NativeEvaluator.eval_plan(&sys, &plan);
+        let batched = be.eval_plan(&sys, &plan);
+        assert_eq!(direct.makespan, batched.makespan);
+        assert_eq!(direct.cost, batched.cost);
+    }
+
+    #[test]
+    fn concurrent_requests_coalesce() {
+        let metrics = Arc::new(Metrics::new());
+        let be = Arc::new(BatchingEvaluator::new(
+            Arc::new(NativeEvaluator),
+            64,
+            Duration::from_millis(20),
+            Arc::clone(&metrics),
+        ));
+        let sys = Arc::new(table1_system(0.0));
+        let mut handles = Vec::new();
+        for i in 0..8 {
+            let be = Arc::clone(&be);
+            let sys = Arc::clone(&sys);
+            handles.push(std::thread::spawn(move || {
+                let plan = maximise_parallelism(&sys, 40.0 + i as f64 * 5.0);
+                be.eval_plan(&sys, &plan)
+            }));
+        }
+        let scores: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(scores.len(), 8);
+        let snap = metrics.snapshot();
+        let batches = snap.get("eval_batches").unwrap().as_f64().unwrap();
+        let cands = snap.get("eval_candidates").unwrap().as_f64().unwrap();
+        assert_eq!(cands, 8.0);
+        assert!(batches <= 8.0);
+        assert!(batches >= 1.0);
+    }
+
+    #[test]
+    fn empty_batch_short_circuits() {
+        let metrics = Arc::new(Metrics::new());
+        let be = BatchingEvaluator::new(
+            Arc::new(NativeEvaluator),
+            64,
+            Duration::ZERO,
+            metrics,
+        );
+        let sys = table1_system(0.0);
+        let batch = EvalBatch::new(&sys);
+        assert!(be.eval_batch(&batch).is_empty());
+    }
+}

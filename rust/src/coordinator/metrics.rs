@@ -1,0 +1,120 @@
+//! Coordinator metrics: lock-protected counters + latency reservoir,
+//! snapshotted to JSON for the `stats` op and the benches.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::Json;
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests: u64,
+    errors: u64,
+    plans: u64,
+    eval_batches: u64,
+    eval_candidates: u64,
+    /// Microsecond latencies of the most recent requests (ring buffer).
+    latencies_us: Vec<u64>,
+    latency_pos: usize,
+}
+
+const RESERVOIR: usize = 4096;
+
+/// Shared metrics sink.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&self, latency: Duration, ok: bool) {
+        let mut m = self.inner.lock().unwrap();
+        m.requests += 1;
+        if !ok {
+            m.errors += 1;
+        }
+        let us = latency.as_micros().min(u128::from(u64::MAX)) as u64;
+        if m.latencies_us.len() < RESERVOIR {
+            m.latencies_us.push(us);
+        } else {
+            let pos = m.latency_pos;
+            m.latencies_us[pos] = us;
+            m.latency_pos = (pos + 1) % RESERVOIR;
+        }
+    }
+
+    pub fn record_plan(&self) {
+        self.inner.lock().unwrap().plans += 1;
+    }
+
+    /// One evaluator execution scoring `candidates` candidates.
+    pub fn record_eval_batch(&self, candidates: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.eval_batches += 1;
+        m.eval_candidates += candidates as u64;
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let m = self.inner.lock().unwrap();
+        let mut lat: Vec<f64> = m.latencies_us.iter().map(|&u| u as f64).collect();
+        lat.sort_by(f64::total_cmp);
+        let pct = |p: f64| -> f64 {
+            if lat.is_empty() {
+                0.0
+            } else {
+                lat[((lat.len() - 1) as f64 * p) as usize]
+            }
+        };
+        let avg_batch = if m.eval_batches == 0 {
+            0.0
+        } else {
+            m.eval_candidates as f64 / m.eval_batches as f64
+        };
+        Json::obj(vec![
+            ("requests", Json::num(m.requests as f64)),
+            ("errors", Json::num(m.errors as f64)),
+            ("plans", Json::num(m.plans as f64)),
+            ("eval_batches", Json::num(m.eval_batches as f64)),
+            ("eval_candidates", Json::num(m.eval_candidates as f64)),
+            ("avg_batch_size", Json::num(avg_batch)),
+            ("latency_us_p50", Json::num(pct(0.50))),
+            ("latency_us_p95", Json::num(pct(0.95))),
+            ("latency_us_p99", Json::num(pct(0.99))),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_request(Duration::from_micros(100), true);
+        m.record_request(Duration::from_micros(300), false);
+        m.record_plan();
+        m.record_eval_batch(64);
+        m.record_eval_batch(16);
+        let s = m.snapshot();
+        assert_eq!(s.get("requests").unwrap().as_f64(), Some(2.0));
+        assert_eq!(s.get("errors").unwrap().as_f64(), Some(1.0));
+        assert_eq!(s.get("plans").unwrap().as_f64(), Some(1.0));
+        assert_eq!(s.get("avg_batch_size").unwrap().as_f64(), Some(40.0));
+        assert!(s.get("latency_us_p95").unwrap().as_f64().unwrap() >= 100.0);
+    }
+
+    #[test]
+    fn reservoir_wraps() {
+        let m = Metrics::new();
+        for i in 0..(RESERVOIR + 10) {
+            m.record_request(Duration::from_micros(i as u64), true);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.get("requests").unwrap().as_f64(), Some((RESERVOIR + 10) as f64));
+    }
+}

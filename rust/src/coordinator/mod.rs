@@ -1,0 +1,40 @@
+//! The long-running coordinator (leader) process.
+//!
+//! A thread-per-connection TCP server speaking line-delimited JSON.
+//! Clients submit planning, simulation, campaign and estimation requests;
+//! all candidate-plan scoring funnels through one shared evaluator —
+//! the PJRT/XLA artifact when built, with a [`BatchingEvaluator`] in
+//! front of it that coalesces scoring requests from concurrent planner
+//! threads into single padded XLA executions (the serving-system pattern
+//! of dynamic batching, applied to plan scoring).
+//!
+//! Python never runs here; the request path is rust + the AOT artifact.
+//!
+//! Protocol (one JSON object per line, response mirrors `"op"`):
+//!
+//! ```text
+//! {"op":"ping"}
+//! {"op":"plan","budget":80,"system":"paper","approach":"heuristic"}
+//! {"op":"sweep","budgets":[40,45],"system":"paper"}
+//! {"op":"simulate","budget":80,"system":"paper","noise":{"task_sigma":0.1},"seed":7}
+//! {"op":"campaign","budget":120,"system":"paper","noise":{"mean_lifetime":2500}}
+//! {"op":"estimate_perf","system":"paper","per_cell":20,"noise":{"task_sigma":0.05}}
+//! {"op":"plan","budget":80,"detail":true}        # full task-level plan
+//! {"op":"submit","job":{"op":"campaign",...}}    # async: returns job_id
+//! {"op":"status","job_id":"j-0"}
+//! {"op":"jobs"}
+//! {"op":"cancel","job_id":"j-0"}
+//! {"op":"stats"}
+//! {"op":"shutdown"}
+//! ```
+
+pub mod batcher;
+pub mod metrics;
+pub mod protocol;
+pub mod server;
+pub mod state;
+
+pub use batcher::BatchingEvaluator;
+pub use metrics::Metrics;
+pub use server::{Coordinator, CoordinatorConfig};
+pub use state::{JobRegistry, JobState};

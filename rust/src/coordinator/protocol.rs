@@ -1,0 +1,442 @@
+//! Request handling for the coordinator's line-delimited JSON protocol.
+//!
+//! Pure functions from a parsed request to a response object — the TCP
+//! server is a thin transport around [`handle`], and the protocol tests
+//! drive it without sockets.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::analysis::report::run_sweep;
+use crate::cloudsim::{run_campaign, sample_runs, CampaignSpec, SimConfig, Simulator};
+use crate::config;
+use crate::eval::PlanEvaluator;
+use crate::model::System;
+use crate::scheduler::{maximise_parallelism, minimise_individual, Planner};
+use crate::util::Json;
+
+use super::state::JobRegistry;
+use super::Metrics;
+
+/// Shared coordinator state handed to every request.
+pub struct Context {
+    pub evaluator: Arc<dyn PlanEvaluator>,
+    pub metrics: Arc<Metrics>,
+    pub jobs: Arc<JobRegistry>,
+}
+
+impl Context {
+    pub fn new(evaluator: Arc<dyn PlanEvaluator>, metrics: Arc<Metrics>) -> Self {
+        Self { evaluator, metrics, jobs: Arc::new(JobRegistry::new()) }
+    }
+
+    fn clone_shared(&self) -> Self {
+        Self {
+            evaluator: Arc::clone(&self.evaluator),
+            metrics: Arc::clone(&self.metrics),
+            jobs: Arc::clone(&self.jobs),
+        }
+    }
+}
+
+/// Outcome of one request: the response plus whether the server should
+/// shut down afterwards.
+pub struct Reply {
+    pub body: Json,
+    pub shutdown: bool,
+}
+
+fn ok(mut fields: Vec<(&str, Json)>) -> Reply {
+    fields.insert(0, ("ok", Json::Bool(true)));
+    Reply { body: Json::obj(fields), shutdown: false }
+}
+
+/// Handle one request line.  Errors are mapped to `{"ok":false,...}` by
+/// the caller so the connection survives malformed input.
+pub fn handle(ctx: &Context, line: &str) -> Result<Reply> {
+    let req = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
+    let op = req
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing \"op\""))?;
+    match op {
+        "ping" => Ok(ok(vec![("pong", Json::Bool(true))])),
+        "stats" => Ok(ok(vec![("stats", ctx.metrics.snapshot())])),
+        "shutdown" => Ok(Reply {
+            body: Json::obj(vec![("ok", Json::Bool(true)), ("bye", Json::Bool(true))]),
+            shutdown: true,
+        }),
+        "plan" => op_plan(ctx, &req),
+        "sweep" => op_sweep(ctx, &req),
+        "simulate" => op_simulate(ctx, &req),
+        "campaign" => op_campaign(&req),
+        "estimate_perf" => op_estimate_perf(&req),
+        "submit" => op_submit(ctx, &req),
+        "status" => op_status(ctx, &req),
+        "jobs" => Ok(ok(vec![("jobs", ctx.jobs.list())])),
+        "cancel" => op_cancel(ctx, &req),
+        other => Err(anyhow!("unknown op {other:?}")),
+    }
+}
+
+/// `submit`: run any other request asynchronously; poll with `status`.
+fn op_submit(ctx: &Context, req: &Json) -> Result<Reply> {
+    let inner = req
+        .get("job")
+        .ok_or_else(|| anyhow!("submit: missing \"job\" object"))?
+        .clone();
+    let inner_op = inner
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("submit: job missing \"op\""))?;
+    if matches!(inner_op, "submit" | "shutdown" | "status" | "jobs" | "cancel") {
+        return Err(anyhow!("submit: op {inner_op:?} cannot run as a job"));
+    }
+    let job_id = ctx.jobs.create(inner_op);
+    let worker_ctx = ctx.clone_shared();
+    let worker_id = job_id.clone();
+    std::thread::spawn(move || {
+        if !worker_ctx.jobs.start(&worker_id) {
+            return; // cancelled while queued
+        }
+        match handle(&worker_ctx, &inner.to_string()) {
+            Ok(reply) => worker_ctx.jobs.finish(&worker_id, reply.body),
+            Err(e) => worker_ctx.jobs.fail(&worker_id, format!("{e:#}")),
+        }
+    });
+    Ok(ok(vec![("job_id", Json::str(job_id))]))
+}
+
+fn op_status(ctx: &Context, req: &Json) -> Result<Reply> {
+    let id = req
+        .get("job_id")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("status: missing \"job_id\""))?;
+    let status = ctx.jobs.status(id).ok_or_else(|| anyhow!("unknown job {id:?}"))?;
+    Ok(ok(vec![("job", status)]))
+}
+
+fn op_cancel(ctx: &Context, req: &Json) -> Result<Reply> {
+    let id = req
+        .get("job_id")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("cancel: missing \"job_id\""))?;
+    Ok(ok(vec![("cancelled", Json::Bool(ctx.jobs.cancel(id)))]))
+}
+
+fn parse_system(req: &Json) -> Result<System> {
+    match req.get("system") {
+        None => Ok(crate::workload::paper::table1_system(
+            req.get("overhead").and_then(Json::as_f64).unwrap_or(0.0),
+        )),
+        Some(Json::Str(s)) => config::load_system(s),
+        Some(obj) => config::system_from_json(obj),
+    }
+}
+
+fn budget_of(req: &Json) -> Result<f64> {
+    req.get("budget")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("missing \"budget\""))
+}
+
+fn plan_with(ctx: &Context, sys: &System, approach: &str, budget: f64) -> Result<(crate::model::Plan, bool)> {
+    Ok(match approach {
+        "heuristic" => {
+            let r = Planner::with_evaluator(sys, ctx.evaluator.as_ref()).find(budget);
+            (r.plan, r.feasible)
+        }
+        "mi" => {
+            let p = minimise_individual(sys, budget);
+            let feasible = p.score(sys).satisfies(budget);
+            (p, feasible)
+        }
+        "mp" => {
+            let p = maximise_parallelism(sys, budget);
+            let feasible = p.score(sys).satisfies(budget);
+            (p, feasible)
+        }
+        other => return Err(anyhow!("unknown approach {other:?}")),
+    })
+}
+
+fn plan_json(sys: &System, plan: &crate::model::Plan) -> Json {
+    Json::arr(plan.vms.iter().map(|vm| {
+        Json::obj(vec![
+            ("instance_type", Json::str(&sys.instance_type(vm.it).name)),
+            ("tasks", Json::num(vm.len() as f64)),
+            ("exec", Json::num(vm.exec(sys))),
+            ("cost", Json::num(vm.cost(sys))),
+        ])
+    }))
+}
+
+fn op_plan(ctx: &Context, req: &Json) -> Result<Reply> {
+    let sys = parse_system(req)?;
+    let budget = budget_of(req)?;
+    let approach = req.get("approach").and_then(Json::as_str).unwrap_or("heuristic");
+    let (plan, feasible) = plan_with(ctx, &sys, approach, budget)?;
+    ctx.metrics.record_plan();
+    let score = ctx.evaluator.eval_plan(&sys, &plan);
+    let mut fields = vec![
+        ("approach", Json::str(approach)),
+        ("budget", Json::num(budget)),
+        ("makespan", Json::num(score.makespan)),
+        ("cost", Json::num(score.cost)),
+        ("feasible", Json::Bool(feasible)),
+        ("n_vms", Json::num(plan.n_vms() as f64)),
+        ("vms", plan_json(&sys, &plan)),
+    ];
+    // Full task-level assignment on request (importable via
+    // config::plan_from_json for external execution engines).
+    if req.get("detail").and_then(Json::as_bool).unwrap_or(false) {
+        fields.push(("plan", config::plan_to_json(&sys, &plan)));
+    }
+    Ok(ok(fields))
+}
+
+fn op_sweep(ctx: &Context, req: &Json) -> Result<Reply> {
+    let sys = parse_system(req)?;
+    let budgets: Vec<f64> = match req.get("budgets").and_then(Json::as_arr) {
+        Some(arr) => arr.iter().filter_map(Json::as_f64).collect(),
+        None => crate::workload::paper::BUDGETS.to_vec(),
+    };
+    if budgets.is_empty() {
+        return Err(anyhow!("empty budgets"));
+    }
+    let report = run_sweep(&sys, &budgets, ctx.evaluator.as_ref());
+    ctx.metrics.record_plan();
+    Ok(ok(vec![("sweep", report.to_json())]))
+}
+
+fn op_simulate(ctx: &Context, req: &Json) -> Result<Reply> {
+    let sys = parse_system(req)?;
+    let budget = budget_of(req)?;
+    let approach = req.get("approach").and_then(Json::as_str).unwrap_or("heuristic");
+    let (plan, feasible) = plan_with(ctx, &sys, approach, budget)?;
+    ctx.metrics.record_plan();
+    let noise = req.get("noise").map(config::noise_from_json).unwrap_or_else(
+        crate::cloudsim::NoiseModel::none,
+    );
+    let seed = req.get("seed").and_then(Json::as_u64).unwrap_or(0);
+    let sim = Simulator::run_plan(&sys, &plan, &SimConfig { noise, seed });
+    Ok(ok(vec![
+        ("planned_feasible", Json::Bool(feasible)),
+        ("makespan", Json::num(sim.makespan)),
+        ("cost", Json::num(sim.cost)),
+        ("completed", Json::num(sim.completed.len() as f64)),
+        ("stranded", Json::num(sim.stranded.len() as f64)),
+        ("failures", Json::num(sim.failures as f64)),
+    ]))
+}
+
+fn op_campaign(req: &Json) -> Result<Reply> {
+    let sys = parse_system(req)?;
+    let budget = budget_of(req)?;
+    let mut spec = CampaignSpec::new(budget);
+    if let Some(n) = req.get("noise") {
+        spec.sim.noise = config::noise_from_json(n);
+    }
+    spec.sim.seed = req.get("seed").and_then(Json::as_u64).unwrap_or(0);
+    if let Some(r) = req.get("max_rounds").and_then(Json::as_u64) {
+        spec.max_rounds = r as usize;
+    }
+    if let Some(p) = req.get("planner") {
+        spec.planner = config::planner_config_from_json(p)?;
+    }
+    let out = run_campaign(&sys, &spec);
+    Ok(ok(vec![
+        ("wall_clock", Json::num(out.wall_clock)),
+        ("spent", Json::num(out.spent)),
+        ("complete", Json::Bool(out.complete)),
+        ("within_budget", Json::Bool(out.within_budget)),
+        ("rounds", Json::num(out.rounds.len() as f64)),
+        ("planned_makespan", Json::num(out.planned.makespan)),
+    ]))
+}
+
+fn op_estimate_perf(req: &Json) -> Result<Reply> {
+    let sys = parse_system(req)?;
+    let per_cell = req.get("per_cell").and_then(Json::as_u64).unwrap_or(10) as usize;
+    let noise = req.get("noise").map(config::noise_from_json).unwrap_or_else(
+        crate::cloudsim::NoiseModel::none,
+    );
+    let seed = req.get("seed").and_then(Json::as_u64).unwrap_or(0);
+    let obs = sample_runs(&sys, per_cell, &noise, seed);
+    let cells = sys.n_types() * sys.n_apps();
+    let prior = vec![0.0; cells];
+    // Prefer the XLA artifact; fall back to the native mirror.
+    let est = match crate::runtime::XlaPerfEstimator::load() {
+        Ok(e) => e.estimate(&sys, &obs, &prior, 1e-9).unwrap_or_else(|_| {
+            crate::cloudsim::sampling::estimate_perf_native(&sys, &obs, &prior, 1e-9)
+        }),
+        Err(_) => crate::cloudsim::sampling::estimate_perf_native(&sys, &obs, &prior, 1e-9),
+    };
+    // Report estimated vs true matrix error.
+    let mut max_rel = 0.0f64;
+    for it in &sys.instance_types {
+        for app in &sys.apps {
+            let truth = sys.perf.get(it.id, app.id);
+            let got = est[it.id.index() * sys.n_apps() + app.id.index()];
+            max_rel = max_rel.max((got - truth).abs() / truth);
+        }
+    }
+    Ok(ok(vec![
+        ("samples", Json::num(obs.len() as f64)),
+        ("estimate", Json::arr(est.iter().map(|p| Json::num(*p)))),
+        ("max_rel_error", Json::num(max_rel)),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::NativeEvaluator;
+
+    fn ctx() -> Context {
+        Context::new(Arc::new(NativeEvaluator), Arc::new(Metrics::new()))
+    }
+
+    #[test]
+    fn ping_and_stats() {
+        let c = ctx();
+        let r = handle(&c, r#"{"op":"ping"}"#).unwrap();
+        assert_eq!(r.body.get("ok"), Some(&Json::Bool(true)));
+        assert!(!r.shutdown);
+        let r = handle(&c, r#"{"op":"stats"}"#).unwrap();
+        assert!(r.body.get("stats").is_some());
+    }
+
+    #[test]
+    fn shutdown_flag() {
+        let r = handle(&ctx(), r#"{"op":"shutdown"}"#).unwrap();
+        assert!(r.shutdown);
+    }
+
+    #[test]
+    fn plan_over_paper_system() {
+        let c = ctx();
+        let r = handle(&c, r#"{"op":"plan","budget":80}"#).unwrap();
+        assert_eq!(r.body.get("ok"), Some(&Json::Bool(true)));
+        assert!(r.body.get("makespan").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(r.body.get("feasible"), Some(&Json::Bool(true)));
+        let n_vms = r.body.get("n_vms").unwrap().as_f64().unwrap();
+        assert!(n_vms >= 1.0);
+        assert_eq!(
+            r.body.get("vms").unwrap().as_arr().unwrap().len(),
+            n_vms as usize
+        );
+    }
+
+    #[test]
+    fn plan_with_inline_system_and_baselines() {
+        let c = ctx();
+        let line = r#"{"op":"plan","budget":20,"approach":"mp","system":{
+            "apps":[{"task_sizes":[1,2,3,4]}],
+            "instance_types":[{"cost_per_hour":5,"perf":[10]},
+                               {"cost_per_hour":9,"perf":[5]}]}}"#;
+        let r = handle(&c, line).unwrap();
+        assert_eq!(r.body.get("approach").unwrap().as_str(), Some("mp"));
+    }
+
+    #[test]
+    fn simulate_and_campaign() {
+        let c = ctx();
+        let r = handle(
+            &c,
+            r#"{"op":"simulate","budget":80,"noise":{"task_sigma":0.05},"seed":3}"#,
+        )
+        .unwrap();
+        assert_eq!(r.body.get("completed").unwrap().as_f64(), Some(750.0));
+        let r = handle(
+            &c,
+            r#"{"op":"campaign","budget":150,"noise":{"mean_lifetime":2500},"seed":3,"max_rounds":6}"#,
+        )
+        .unwrap();
+        assert!(r.body.get("rounds").unwrap().as_f64().unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn estimate_perf_roundtrip() {
+        let c = ctx();
+        let r = handle(&c, r#"{"op":"estimate_perf","per_cell":8}"#).unwrap();
+        // Noiseless sampling recovers Table I exactly.
+        assert!(r.body.get("max_rel_error").unwrap().as_f64().unwrap() < 1e-6);
+        assert_eq!(r.body.get("estimate").unwrap().as_arr().unwrap().len(), 12);
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        let c = ctx();
+        assert!(handle(&c, "not json").is_err());
+        assert!(handle(&c, r#"{"op":"nope"}"#).is_err());
+        assert!(handle(&c, r#"{"op":"plan"}"#).is_err()); // no budget
+        assert!(handle(&c, r#"{"op":"plan","budget":10,"approach":"x"}"#).is_err());
+    }
+
+    #[test]
+    fn submit_status_jobs_cancel_roundtrip() {
+        let c = ctx();
+        // Submit an async plan job and poll it to completion.
+        let r = handle(&c, r#"{"op":"submit","job":{"op":"plan","budget":80}}"#).unwrap();
+        let id = r.body.get("job_id").unwrap().as_str().unwrap().to_string();
+        let mut state = String::new();
+        for _ in 0..200 {
+            let s = handle(&c, &format!(r#"{{"op":"status","job_id":"{id}"}}"#)).unwrap();
+            state = s.body.path(&["job", "state"]).unwrap().as_str().unwrap().to_string();
+            if state == "done" || state == "failed" {
+                assert_eq!(state, "done");
+                let makespan = s
+                    .body
+                    .path(&["job", "result", "makespan"])
+                    .unwrap()
+                    .as_f64()
+                    .unwrap();
+                assert!(makespan > 0.0);
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        assert_eq!(state, "done", "job never finished");
+        // Listing contains it.
+        let l = handle(&c, r#"{"op":"jobs"}"#).unwrap();
+        assert!(!l.body.get("jobs").unwrap().as_arr().unwrap().is_empty());
+        // Cancelling a finished job is a no-op.
+        let r = handle(&c, &format!(r#"{{"op":"cancel","job_id":"{id}"}}"#)).unwrap();
+        assert_eq!(r.body.get("cancelled"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn submit_rejects_recursive_and_control_ops() {
+        let c = ctx();
+        for op in ["submit", "shutdown", "status", "jobs", "cancel"] {
+            let line = format!(r#"{{"op":"submit","job":{{"op":"{op}"}}}}"#);
+            assert!(handle(&c, &line).is_err(), "{op} must be rejected");
+        }
+        assert!(handle(&c, r#"{"op":"submit"}"#).is_err());
+        assert!(handle(&c, r#"{"op":"status","job_id":"nope"}"#).is_err());
+    }
+
+    #[test]
+    fn plan_detail_roundtrips_through_config() {
+        let c = ctx();
+        let r = handle(&c, r#"{"op":"plan","budget":70,"detail":true}"#).unwrap();
+        let plan_json = r.body.get("plan").unwrap();
+        let sys = crate::workload::paper::table1_system(0.0);
+        let plan = crate::config::plan_from_json(&sys, plan_json).unwrap();
+        assert!(plan.validate_partition(&sys).is_ok());
+        assert_eq!(
+            plan.score(&sys).makespan,
+            r.body.get("makespan").unwrap().as_f64().unwrap()
+        );
+    }
+
+    #[test]
+    fn sweep_short() {
+        let c = ctx();
+        let r = handle(&c, r#"{"op":"sweep","budgets":[60,80]}"#).unwrap();
+        let rows = r.body.path(&["sweep", "rows"]).unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 6);
+    }
+}

@@ -1,0 +1,206 @@
+//! The TCP transport: thread-per-connection line server around
+//! [`protocol::handle`].
+//!
+//! The listener accepts on a configurable address; each connection reads
+//! newline-delimited JSON requests and writes one JSON response line per
+//! request.  A `{"op":"shutdown"}` request stops the listener (used by
+//! the tests and the `serve_demo` example; production deployments would
+//! front this with their own process manager).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context as _, Result};
+
+use crate::eval::{NativeEvaluator, PlanEvaluator};
+use crate::util::Json;
+
+use super::protocol::{self, Context};
+use super::state::JobRegistry;
+use super::{BatchingEvaluator, Metrics};
+
+/// Server settings.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Listen address, e.g. "127.0.0.1:7077" (port 0 = ephemeral).
+    pub addr: String,
+    /// Use the XLA artifact evaluator when available.
+    pub use_xla: bool,
+    /// Wrap the evaluator in the dynamic batcher.
+    pub batching: bool,
+    /// Batcher linger time.
+    pub batch_wait: Duration,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7077".into(),
+            use_xla: true,
+            batching: true,
+            batch_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// A running coordinator.
+pub struct Coordinator {
+    pub local_addr: std::net::SocketAddr,
+    pub metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Build the evaluator stack per config and start listening.
+    pub fn start(config: CoordinatorConfig) -> Result<Self> {
+        let metrics = Arc::new(Metrics::new());
+
+        let base: Arc<dyn PlanEvaluator> = if config.use_xla {
+            match crate::runtime::XlaEvaluator::load() {
+                Ok(x) => Arc::new(x),
+                Err(e) => {
+                    eprintln!("coordinator: XLA artifacts unavailable ({e:#}); using native evaluator");
+                    Arc::new(NativeEvaluator)
+                }
+            }
+        } else {
+            Arc::new(NativeEvaluator)
+        };
+        let chunk = crate::runtime::ArtifactMeta::load().map(|m| m.k).unwrap_or(64);
+        let evaluator: Arc<dyn PlanEvaluator> = if config.batching {
+            Arc::new(BatchingEvaluator::new(base, chunk, config.batch_wait, Arc::clone(&metrics)))
+        } else {
+            base
+        };
+
+        let listener = TcpListener::bind(&config.addr)
+            .with_context(|| format!("binding {}", config.addr))?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_thread = {
+            let stop = Arc::clone(&stop);
+            let metrics = Arc::clone(&metrics);
+            std::thread::spawn(move || {
+                accept_loop(listener, stop, evaluator, metrics);
+            })
+        };
+
+        Ok(Self { local_addr, metrics, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// Signal the listener to stop and wait for it.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+
+    /// Block until the accept loop exits (after a `shutdown` op).
+    pub fn wait(mut self) {
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    evaluator: Arc<dyn PlanEvaluator>,
+    metrics: Arc<Metrics>,
+) {
+    let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    // One registry for the whole server: job ids are visible across
+    // connections (submit on one socket, poll on another).
+    let jobs = Arc::new(JobRegistry::new());
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let ctx_stop = Arc::clone(&stop);
+                let ctx = Context {
+                    evaluator: Arc::clone(&evaluator),
+                    metrics: Arc::clone(&metrics),
+                    jobs: Arc::clone(&jobs),
+                };
+                workers.push(std::thread::spawn(move || {
+                    if let Err(e) = serve_connection(stream, ctx, ctx_stop) {
+                        eprintln!("coordinator: connection error: {e:#}");
+                    }
+                }));
+                workers.retain(|w| !w.is_finished());
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => {
+                eprintln!("coordinator: accept error: {e}");
+                break;
+            }
+        }
+    }
+    for w in workers {
+        let _ = w.join();
+    }
+}
+
+fn serve_connection(stream: TcpStream, ctx: Context, stop: Arc<AtomicBool>) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let t0 = Instant::now();
+        let (body, shutdown) = match protocol::handle(&ctx, &line) {
+            Ok(reply) => (reply.body, reply.shutdown),
+            Err(e) => (
+                Json::obj(vec![
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::str(format!("{e:#}"))),
+                ]),
+                false,
+            ),
+        };
+        let ok = body.get("ok") == Some(&Json::Bool(true));
+        ctx.metrics.record_request(t0.elapsed(), ok);
+        writer.write_all(body.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        if shutdown {
+            stop.store(true, Ordering::Release);
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Minimal blocking client for tests, examples and the CLI's `client` op.
+pub fn request(addr: &std::net::SocketAddr, line: &str) -> Result<Json> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true).ok();
+    stream.write_all(line.as_bytes())?;
+    stream.write_all(b"\n")?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut response = String::new();
+    reader.read_line(&mut response)?;
+    Json::parse(response.trim()).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+}

@@ -1,0 +1,234 @@
+//! Asynchronous job registry: long-running work (campaigns, sweeps) is
+//! submitted, runs on a background thread, and is polled by id — the
+//! serving pattern for requests that outlive a single socket
+//! round-trip.
+//!
+//! Protocol surface (see [`super::protocol`]):
+//!
+//! ```text
+//! {"op":"submit","job":{...any plan/sweep/simulate/campaign request...}}
+//!   -> {"ok":true,"job_id":"j-3"}
+//! {"op":"status","job_id":"j-3"}
+//!   -> {"ok":true,"state":"running"} | {"state":"done","result":{...}}
+//! {"op":"jobs"}          -> {"ok":true,"jobs":[{"id":..,"state":..},..]}
+//! {"op":"cancel","job_id":"j-3"}   (best-effort: marks cancelled;
+//!                                   running work is not interrupted)
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::util::Json;
+
+/// Lifecycle of a job.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Job {
+    id: String,
+    state: JobState,
+    /// The original request line (echoed in listings).
+    request_op: String,
+    result: Option<Json>,
+    error: Option<String>,
+}
+
+/// Thread-safe registry of submitted jobs.
+#[derive(Debug, Default)]
+pub struct JobRegistry {
+    inner: Mutex<RegistryInner>,
+}
+
+#[derive(Debug, Default)]
+struct RegistryInner {
+    jobs: HashMap<String, Job>,
+    next_id: u64,
+    /// Insertion order for stable listings.
+    order: Vec<String>,
+}
+
+impl JobRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a new job; returns its id.
+    pub fn create(&self, request_op: &str) -> String {
+        let mut g = self.inner.lock().unwrap();
+        let id = format!("j-{}", g.next_id);
+        g.next_id += 1;
+        g.jobs.insert(
+            id.clone(),
+            Job {
+                id: id.clone(),
+                state: JobState::Queued,
+                request_op: request_op.to_string(),
+                result: None,
+                error: None,
+            },
+        );
+        g.order.push(id.clone());
+        id
+    }
+
+    /// Transition to running unless the job was cancelled while queued.
+    /// Returns false when the worker should skip the job.
+    pub fn start(&self, id: &str) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        match g.jobs.get_mut(id) {
+            Some(j) if j.state == JobState::Queued => {
+                j.state = JobState::Running;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    pub fn finish(&self, id: &str, result: Json) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(j) = g.jobs.get_mut(id) {
+            if j.state == JobState::Running {
+                j.state = JobState::Done;
+                j.result = Some(result);
+            }
+        }
+    }
+
+    pub fn fail(&self, id: &str, error: String) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(j) = g.jobs.get_mut(id) {
+            if j.state == JobState::Running || j.state == JobState::Queued {
+                j.state = JobState::Failed;
+                j.error = Some(error);
+            }
+        }
+    }
+
+    /// Best-effort cancel; returns whether the job existed and was not
+    /// yet finished.
+    pub fn cancel(&self, id: &str) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        match g.jobs.get_mut(id) {
+            Some(j) if matches!(j.state, JobState::Queued | JobState::Running) => {
+                j.state = JobState::Cancelled;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Status object for one job, or None if unknown.
+    pub fn status(&self, id: &str) -> Option<Json> {
+        let g = self.inner.lock().unwrap();
+        g.jobs.get(id).map(job_json)
+    }
+
+    /// Summary list of all jobs (insertion order).
+    pub fn list(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        Json::arr(g.order.iter().filter_map(|id| {
+            g.jobs.get(id).map(|j| {
+                Json::obj(vec![
+                    ("id", Json::str(&j.id)),
+                    ("op", Json::str(&j.request_op)),
+                    ("state", Json::str(j.state.as_str())),
+                ])
+            })
+        }))
+    }
+}
+
+fn job_json(j: &Job) -> Json {
+    let mut fields = vec![
+        ("id", Json::str(&j.id)),
+        ("op", Json::str(&j.request_op)),
+        ("state", Json::str(j.state.as_str())),
+    ];
+    if let Some(r) = &j.result {
+        fields.push(("result", r.clone()));
+    }
+    if let Some(e) = &j.error {
+        fields.push(("error", Json::str(e)));
+    }
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_happy_path() {
+        let r = JobRegistry::new();
+        let id = r.create("campaign");
+        assert!(r.status(&id).unwrap().get("state").unwrap().as_str() == Some("queued"));
+        assert!(r.start(&id));
+        assert_eq!(r.status(&id).unwrap().get("state").unwrap().as_str(), Some("running"));
+        r.finish(&id, Json::num(42.0));
+        let s = r.status(&id).unwrap();
+        assert_eq!(s.get("state").unwrap().as_str(), Some("done"));
+        assert_eq!(s.get("result").unwrap().as_f64(), Some(42.0));
+    }
+
+    #[test]
+    fn cancel_before_start_skips_execution() {
+        let r = JobRegistry::new();
+        let id = r.create("sweep");
+        assert!(r.cancel(&id));
+        assert!(!r.start(&id), "cancelled job must not start");
+        assert_eq!(r.status(&id).unwrap().get("state").unwrap().as_str(), Some("cancelled"));
+    }
+
+    #[test]
+    fn fail_records_error() {
+        let r = JobRegistry::new();
+        let id = r.create("plan");
+        r.start(&id);
+        r.fail(&id, "boom".into());
+        let s = r.status(&id).unwrap();
+        assert_eq!(s.get("state").unwrap().as_str(), Some("failed"));
+        assert_eq!(s.get("error").unwrap().as_str(), Some("boom"));
+    }
+
+    #[test]
+    fn listing_preserves_order_and_unknown_is_none() {
+        let r = JobRegistry::new();
+        let a = r.create("plan");
+        let b = r.create("campaign");
+        let list = r.list();
+        let arr = list.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("id").unwrap().as_str(), Some(a.as_str()));
+        assert_eq!(arr[1].get("id").unwrap().as_str(), Some(b.as_str()));
+        assert!(r.status("j-999").is_none());
+    }
+
+    #[test]
+    fn finish_after_cancel_is_ignored() {
+        let r = JobRegistry::new();
+        let id = r.create("x");
+        r.start(&id);
+        r.cancel(&id);
+        r.finish(&id, Json::num(1.0));
+        assert_eq!(r.status(&id).unwrap().get("state").unwrap().as_str(), Some("cancelled"));
+    }
+}

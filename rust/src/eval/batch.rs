@@ -1,0 +1,160 @@
+use crate::model::{BillingPolicy, Plan, System, Vm};
+
+/// One candidate plan, aggregated losslessly for scoring.
+///
+/// Because eq. 5 is linear in task size, a VM's execution time depends on
+/// its assignment only through the per-application total size
+/// `agg[m] = sum of size_t over tasks of app m on this VM`.  A candidate
+/// therefore stores, per VM slot: the performance row of its instance type
+/// (`perf[m]`, seconds per unit size), its hourly rate, and `agg[m]`.
+#[derive(Debug, Clone, Default)]
+pub struct Candidate {
+    /// Per VM: aggregated sizes per application, `[v][m]`.
+    pub sizes: Vec<Vec<f64>>,
+    /// Per VM: performance row of the VM's instance type, `[v][m]`.
+    pub perf: Vec<Vec<f64>>,
+    /// Per VM: hourly rate.
+    pub rate: Vec<f64>,
+    /// Per VM: whether the slot counts as provisioned even when empty
+    /// (false only for slots that should score as absent).
+    pub active: Vec<bool>,
+}
+
+impl Candidate {
+    /// Aggregate a concrete plan.
+    pub fn from_plan(sys: &System, plan: &Plan) -> Self {
+        let mut c = Candidate::default();
+        for vm in &plan.vms {
+            c.push_vm(sys, vm);
+        }
+        c
+    }
+
+    /// Append one VM slot from a live VM.
+    pub fn push_vm(&mut self, sys: &System, vm: &Vm) {
+        self.sizes.push(vm.agg_sizes().to_vec());
+        self.perf.push(sys.perf.row(vm.it).to_vec());
+        self.rate.push(sys.rate(vm.it));
+        // A task-less VM with zero overhead executes for 0s and bills
+        // nothing (see Vm::exec); mirror that by deactivating the slot.
+        self.active.push(!(vm.is_empty() && sys.overhead == 0.0));
+    }
+
+    pub fn n_vms(&self) -> usize {
+        self.sizes.len()
+    }
+}
+
+/// A batch of candidates plus the environment constants they are scored
+/// under.  This is the exact information content of one XLA artifact call
+/// (`overhead`, `hour`, `sizes[k,v,m]`, `perf[k,v,m]`, `rate[k,v]`,
+/// `active[k,v]`), still in exact f64 and ragged form.
+#[derive(Debug, Clone)]
+pub struct EvalBatch {
+    pub candidates: Vec<Candidate>,
+    pub overhead: f64,
+    pub hour: f64,
+    pub billing: BillingPolicy,
+    pub n_apps: usize,
+}
+
+impl EvalBatch {
+    pub fn new(sys: &System) -> Self {
+        Self {
+            candidates: Vec::new(),
+            overhead: sys.overhead,
+            hour: sys.hour,
+            billing: sys.billing,
+            n_apps: sys.n_apps(),
+        }
+    }
+
+    pub fn from_plans(sys: &System, plans: &[&Plan]) -> Self {
+        let mut b = Self::new(sys);
+        b.candidates = plans.iter().map(|p| Candidate::from_plan(sys, p)).collect();
+        b
+    }
+
+    pub fn push(&mut self, candidate: Candidate) {
+        self.candidates.push(candidate);
+    }
+
+    pub fn len(&self) -> usize {
+        self.candidates.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.candidates.is_empty()
+    }
+
+    /// Largest VM count across candidates (the padded V of a tensor call).
+    pub fn max_vms(&self) -> usize {
+        self.candidates.iter().map(Candidate::n_vms).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{InstanceTypeId, SystemBuilder, TaskId};
+
+    fn sys() -> System {
+        SystemBuilder::new()
+            .app("a1", vec![1.0, 2.0])
+            .app("a2", vec![3.0])
+            .instance_type("small", 5.0, vec![20.0, 24.0])
+            .instance_type("big", 10.0, vec![11.0, 13.0])
+            .overhead(30.0)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn aggregation_matches_vm_caches() {
+        let s = sys();
+        let mut p = Plan::new();
+        let v0 = p.add_vm(&s, InstanceTypeId(0));
+        p.vms[v0].push_task(&s, TaskId(0));
+        p.vms[v0].push_task(&s, TaskId(2));
+        let c = Candidate::from_plan(&s, &p);
+        assert_eq!(c.n_vms(), 1);
+        assert_eq!(c.sizes[0], vec![1.0, 3.0]);
+        assert_eq!(c.perf[0], vec![20.0, 24.0]);
+        assert_eq!(c.rate[0], 5.0);
+        assert!(c.active[0]);
+    }
+
+    #[test]
+    fn empty_vm_active_only_with_overhead() {
+        let s = sys(); // overhead 30
+        let mut p = Plan::new();
+        p.add_vm(&s, InstanceTypeId(0));
+        let c = Candidate::from_plan(&s, &p);
+        assert!(c.active[0]);
+
+        let s0 = SystemBuilder::new()
+            .app("a", vec![1.0])
+            .instance_type("x", 5.0, vec![10.0])
+            .build()
+            .unwrap();
+        let mut p0 = Plan::new();
+        p0.add_vm(&s0, InstanceTypeId(0));
+        let c0 = Candidate::from_plan(&s0, &p0);
+        assert!(!c0.active[0]);
+    }
+
+    #[test]
+    fn batch_shape() {
+        let s = sys();
+        let mut p1 = Plan::new();
+        p1.add_vm(&s, InstanceTypeId(0));
+        let mut p2 = Plan::new();
+        p2.add_vm(&s, InstanceTypeId(0));
+        p2.add_vm(&s, InstanceTypeId(1));
+        let b = EvalBatch::from_plans(&s, &[&p1, &p2]);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.max_vms(), 2);
+        assert_eq!(b.n_apps, 2);
+        assert_eq!(b.overhead, 30.0);
+    }
+}

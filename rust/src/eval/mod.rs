@@ -1,0 +1,70 @@
+//! Plan evaluation: the scoring abstraction shared by the planner, the
+//! coordinator and the benchmarks.
+//!
+//! The paper's heuristic repeatedly scores candidate execution plans
+//! (makespan + billed cost).  This module defines:
+//!
+//! * [`PlanEvaluator`] — the trait the planner scores through;
+//! * [`NativeEvaluator`] — exact pure-rust scoring (reference + fallback);
+//! * [`EvalBatch`] / [`Candidate`] — the lossless per-(vm, app) size
+//!   aggregation of a batch of candidate plans, i.e. exactly the tensor
+//!   layout the AOT-compiled XLA artifact consumes (see
+//!   `python/compile/model.py`).
+//!
+//! The PJRT-backed implementation lives in [`crate::runtime`]; it is
+//! differentially tested against [`NativeEvaluator`].
+
+mod batch;
+mod native;
+
+pub use batch::{Candidate, EvalBatch};
+pub use native::NativeEvaluator;
+
+use crate::model::{Plan, PlanScore, System};
+
+/// Batch scoring of candidate execution plans.
+///
+/// Implementations must return one [`PlanScore`] per candidate, in order.
+/// Scores follow the paper's model exactly: eq. 5 (boot overhead + task
+/// work), eq. 6 (hourly-ceiling billing), eq. 7 (makespan), eq. 8 (total
+/// cost).
+pub trait PlanEvaluator: Send + Sync {
+    /// Score a prepared batch.
+    fn eval_batch(&self, batch: &EvalBatch) -> Vec<PlanScore>;
+
+    /// Implementation name (for metrics / bench labels).
+    fn name(&self) -> &'static str;
+
+    /// Convenience: score whole plans against a system.
+    fn eval_plans(&self, sys: &System, plans: &[&Plan]) -> Vec<PlanScore> {
+        self.eval_batch(&EvalBatch::from_plans(sys, plans))
+    }
+
+    /// Convenience: score one plan.
+    fn eval_plan(&self, sys: &System, plan: &Plan) -> PlanScore {
+        self.eval_plans(sys, &[plan])[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{InstanceTypeId, SystemBuilder, TaskId};
+
+    #[test]
+    fn trait_object_scores_plan() {
+        let sys = SystemBuilder::new()
+            .app("a", vec![1.0, 2.0])
+            .instance_type("x", 5.0, vec![10.0])
+            .build()
+            .unwrap();
+        let mut plan = Plan::new();
+        let v = plan.add_vm(&sys, InstanceTypeId(0));
+        plan.vms[v].push_task(&sys, TaskId(0));
+        plan.vms[v].push_task(&sys, TaskId(1));
+        let eval: &dyn PlanEvaluator = &NativeEvaluator;
+        let score = eval.eval_plan(&sys, &plan);
+        assert_eq!(score.makespan, 30.0);
+        assert_eq!(score.cost, 5.0);
+    }
+}

@@ -1,0 +1,102 @@
+use super::{EvalBatch, PlanEvaluator};
+use crate::model::{billed_cost, PlanScore};
+
+/// Exact pure-rust plan scoring.
+///
+/// This is the reference implementation of the paper's eq. 5-8 over the
+/// aggregated candidate representation; the PJRT-backed
+/// [`crate::runtime::XlaEvaluator`] is differentially tested against it,
+/// and it serves as the fallback when artifacts are not built.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NativeEvaluator;
+
+impl PlanEvaluator for NativeEvaluator {
+    fn eval_batch(&self, batch: &EvalBatch) -> Vec<PlanScore> {
+        batch
+            .candidates
+            .iter()
+            .map(|c| {
+                let mut makespan = 0.0f64;
+                let mut cost = 0.0f64;
+                for v in 0..c.n_vms() {
+                    if !c.active[v] {
+                        continue;
+                    }
+                    let work: f64 = c.sizes[v]
+                        .iter()
+                        .zip(&c.perf[v])
+                        .map(|(s, p)| s * p)
+                        .sum();
+                    let exec = batch.overhead + work;
+                    makespan = makespan.max(exec);
+                    cost += billed_cost(exec, c.rate[v], batch.hour, batch.billing);
+                }
+                PlanScore { makespan, cost }
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{InstanceTypeId, Plan, SystemBuilder};
+
+    #[test]
+    fn matches_plan_score_exactly() {
+        // NativeEvaluator over the aggregation must equal Plan::score.
+        let sys = SystemBuilder::new()
+            .app("a1", (1..=10).map(f64::from).collect())
+            .app("a2", vec![2.0; 7])
+            .instance_type("small", 5.0, vec![20.0, 24.0])
+            .instance_type("cpu", 10.0, vec![10.0, 15.0])
+            .overhead(45.0)
+            .build()
+            .unwrap();
+        let mut plan = Plan::new();
+        let v0 = plan.add_vm(&sys, InstanceTypeId(0));
+        let v1 = plan.add_vm(&sys, InstanceTypeId(1));
+        for t in sys.tasks() {
+            let v = if t.id.0 % 2 == 0 { v0 } else { v1 };
+            plan.vms[v].push_task(&sys, t.id);
+        }
+        let direct = plan.score(&sys);
+        let via_eval = NativeEvaluator.eval_plan(&sys, &plan);
+        assert!((direct.makespan - via_eval.makespan).abs() < 1e-9);
+        assert!((direct.cost - via_eval.cost).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_batch() {
+        let sys = SystemBuilder::new()
+            .app("a", vec![1.0])
+            .instance_type("x", 5.0, vec![10.0])
+            .build()
+            .unwrap();
+        let batch = EvalBatch::new(&sys);
+        assert!(NativeEvaluator.eval_batch(&batch).is_empty());
+    }
+
+    #[test]
+    fn inactive_slots_ignored() {
+        let sys = SystemBuilder::new()
+            .app("a", vec![1.0])
+            .instance_type("x", 5.0, vec![10.0])
+            .build()
+            .unwrap();
+        let mut batch = EvalBatch::new(&sys);
+        let mut c = super::super::Candidate::default();
+        c.sizes.push(vec![100.0]);
+        c.perf.push(vec![10.0]);
+        c.rate.push(5.0);
+        c.active.push(false);
+        batch.push(c);
+        let s = NativeEvaluator.eval_batch(&batch)[0];
+        assert_eq!(s.makespan, 0.0);
+        assert_eq!(s.cost, 0.0);
+    }
+}

@@ -1,0 +1,42 @@
+//! # botsched
+//!
+//! Budget-constrained execution of multiple Bag-of-Tasks (BoT) applications
+//! on the cloud — a production-shaped reproduction of
+//! *Thai, Varghese, Barker: "Budget Constrained Execution of Multiple
+//! Bag-of-Tasks Applications on the Cloud"* (IEEE CLOUD 2015,
+//! DOI 10.1109/CLOUD.2015.131).
+//!
+//! The crate is organised in layers:
+//!
+//! * [`model`] — the paper's Section III problem model: applications, tasks,
+//!   instance types, the performance matrix, VMs, execution plans, and the
+//!   hourly billing / makespan cost model.
+//! * [`scheduler`] — the paper's Section IV contribution: the heuristic
+//!   planner (`INITIAL`, `ASSIGN`, `BALANCE`, `REDUCE`, `ADD`, `SPLIT`,
+//!   `REPLACE`, and the `FIND` fixed-point loop) plus the Section V
+//!   comparison baselines (MI, MP) and the future-work extensions
+//!   (deadline-aware, dynamic rescheduling, non-clairvoyant).
+//! * [`cloudsim`] — a discrete-event cloud simulator substrate (VM boot
+//!   overhead, per-hour billing, performance jitter, failures) standing in
+//!   for the paper's Scala simulation framework and for a real IaaS cloud.
+//! * [`workload`] — BoT workload and performance-matrix generators,
+//!   including the paper's exact Table I setup.
+//! * [`runtime`] — PJRT/XLA runtime: loads the AOT-compiled plan-evaluation
+//!   artifacts produced by `python/compile/aot.py` and exposes them behind
+//!   the [`eval::PlanEvaluator`] trait.
+//! * [`coordinator`] — the long-running leader: a TCP JSON protocol server
+//!   with request batching that plans, simulates and reports.
+//! * [`analysis`] — lower bounds, statistics and the figure/table printers
+//!   used by the benchmark harness.
+
+pub mod analysis;
+pub mod benchkit;
+pub mod cloudsim;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod model;
+pub mod runtime;
+pub mod scheduler;
+pub mod util;
+pub mod workload;

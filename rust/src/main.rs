@@ -1,0 +1,469 @@
+//! `botsched` — the command-line launcher.
+//!
+//! ```text
+//! botsched figures [--fig 1|2] [--overhead o] [--json out.json]
+//! botsched plan    --budget B [--system paper|file.json] [--approach heuristic|mi|mp]
+//! botsched sweep   [--budgets 40,45,..] [--system ...] [--ablate]
+//! botsched simulate --budget B [--sigma s] [--lifetime m] [--seed n]
+//! botsched campaign --budget B [--lifetime m] [--reserve f] [--seed n]
+//! botsched estimate [--per-cell n] [--sigma s] [--seed n]
+//! botsched bounds   [--budgets ...]
+//! botsched serve   [--addr 127.0.0.1:7077] [--no-xla] [--no-batching]
+//! botsched client  --addr host:port '<json request>'
+//! ```
+//!
+//! Everything is also available programmatically through the `botsched`
+//! library; the CLI is a thin shell over it.
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use botsched::analysis::report::{plan_for, run_sweep};
+use botsched::analysis::{fractional_cost_floor, makespan_floor};
+use botsched::cloudsim::{run_campaign, sample_runs, CampaignSpec, NoiseModel, SimConfig, Simulator};
+use botsched::config;
+use botsched::coordinator::{Coordinator, CoordinatorConfig};
+use botsched::eval::{NativeEvaluator, PlanEvaluator};
+use botsched::model::System;
+use botsched::scheduler::{Planner, PlannerConfig};
+use botsched::workload::paper;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Minimal flag parser: `--key value` pairs plus positional arguments.
+struct Args {
+    flags: HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(args: &[String]) -> Result<Self> {
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        let mut it = args.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // Boolean flags have no value (next token is a flag or end).
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        flags.insert(key.to_string(), it.next().unwrap().clone());
+                    }
+                    _ => {
+                        flags.insert(key.to_string(), "true".into());
+                    }
+                }
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Self { flags, positional })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    fn f64(&self, key: &str) -> Result<Option<f64>> {
+        self.get(key)
+            .map(|v| v.parse::<f64>().with_context(|| format!("--{key} {v}")))
+            .transpose()
+    }
+
+    fn u64(&self, key: &str) -> Result<Option<u64>> {
+        self.get(key)
+            .map(|v| v.parse::<u64>().with_context(|| format!("--{key} {v}")))
+            .transpose()
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn load_sys(a: &Args) -> Result<System> {
+    match a.get("system") {
+        Some(spec) => config::load_system(spec),
+        None => Ok(paper::table1_system(a.f64("overhead")?.unwrap_or(0.0))),
+    }
+}
+
+fn evaluator(a: &Args) -> Box<dyn PlanEvaluator> {
+    if a.has("no-xla") {
+        return Box::new(NativeEvaluator);
+    }
+    match botsched::runtime::XlaEvaluator::load() {
+        Ok(x) => Box::new(x),
+        Err(e) => {
+            eprintln!("note: using native evaluator (XLA artifacts unavailable: {e:#})");
+            Box::new(NativeEvaluator)
+        }
+    }
+}
+
+fn noise(a: &Args) -> Result<NoiseModel> {
+    Ok(NoiseModel {
+        task_sigma: a.f64("sigma")?.unwrap_or(0.0),
+        boot_sigma: a.f64("sigma")?.unwrap_or(0.0),
+        mean_lifetime: a.f64("lifetime")?,
+    })
+}
+
+fn budgets(a: &Args) -> Result<Vec<f64>> {
+    match a.get("budgets") {
+        None => Ok(paper::BUDGETS.to_vec()),
+        Some(list) => list
+            .split(',')
+            .map(|s| s.trim().parse::<f64>().with_context(|| format!("budget {s}")))
+            .collect(),
+    }
+}
+
+fn run(args: Vec<String>) -> Result<()> {
+    let Some(cmd) = args.first().cloned() else {
+        print_help();
+        return Ok(());
+    };
+    let a = Args::parse(&args[1..])?;
+    match cmd.as_str() {
+        "figures" => cmd_figures(&a),
+        "plan" => cmd_plan(&a),
+        "sweep" => cmd_sweep(&a),
+        "simulate" => cmd_simulate(&a),
+        "campaign" => cmd_campaign(&a),
+        "estimate" => cmd_estimate(&a),
+        "bounds" => cmd_bounds(&a),
+        "pareto" => cmd_pareto(&a),
+        "trace" => cmd_trace(&a),
+        "serve" => cmd_serve(&a),
+        "client" => cmd_client(&a),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `botsched help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "botsched — budget-constrained multi-BoT scheduling on the cloud\n\
+         (reproduction of Thai/Varghese/Barker, IEEE CLOUD 2015)\n\n\
+         commands:\n\
+         \x20 figures   regenerate Table I, Fig. 1, Fig. 2 and the headline claims\n\
+         \x20 plan      plan one budget (--budget B, --approach heuristic|mi|mp)\n\
+         \x20 sweep     full budget sweep (--budgets 40,45,.. --ablate for phase ablation)\n\
+         \x20 simulate  plan + execute on the simulated cloud (--sigma, --lifetime, --seed)\n\
+         \x20 campaign  closed-loop execution with failures + replanning (--reserve)\n\
+         \x20 estimate  bootstrap the performance matrix from sampled test runs\n\
+         \x20 bounds    LP cost floor and budget-capped makespan floor\n\
+         \x20 pareto    budget/makespan Pareto frontier + knee\n\
+         \x20 trace     gen/replay multi-campaign arrival traces\n\
+         \x20 serve     start the coordinator (--addr, --no-xla, --no-batching)\n\
+         \x20 client    send one JSON request to a coordinator\n\n\
+         common flags: --system paper|paper:<overhead>|file.json, --overhead o, --no-xla"
+    );
+}
+
+fn cmd_figures(a: &Args) -> Result<()> {
+    let sys = load_sys(a)?;
+    let eval = evaluator(a);
+    let fig = a.u64("fig")?.unwrap_or(0);
+    let report = run_sweep(&sys, &budgets(a)?, eval.as_ref());
+    if fig == 0 || fig == 1 {
+        println!("{}", paper::table1_text());
+        print!("{}", report.fig1_text());
+        println!();
+        print!("{}", report.headline().text());
+    }
+    if fig == 0 || fig == 2 {
+        print!("{}", report.fig2_text(&sys));
+    }
+    if let Some(path) = a.get("json") {
+        std::fs::write(path, report.to_json().to_string())
+            .with_context(|| format!("writing {path}"))?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_plan(a: &Args) -> Result<()> {
+    let sys = load_sys(a)?;
+    let budget = a.f64("budget")?.ok_or_else(|| anyhow!("--budget required"))?;
+    let approach = a.get("approach").unwrap_or("heuristic");
+    let eval = evaluator(a);
+    let t0 = std::time::Instant::now();
+    let plan = match approach {
+        "heuristic" => match a.u64("multistart")? {
+            Some(n) if n > 1 => {
+                let cfg = botsched::scheduler::MultiStartConfig {
+                    n_starts: n as usize,
+                    seed: a.u64("seed")?.unwrap_or(0),
+                    ..Default::default()
+                };
+                botsched::scheduler::find_multistart(&sys, budget, &cfg, eval.as_ref()).plan
+            }
+            _ => Planner::with_evaluator(&sys, eval.as_ref()).find(budget).plan,
+        },
+        _ => plan_for(&sys, approach, budget),
+    };
+    let elapsed = t0.elapsed();
+    let score = eval.eval_plan(&sys, &plan);
+    println!(
+        "approach={approach} budget={budget} makespan={:.1}s cost={} feasible={} vms={} planned_in={:?}",
+        score.makespan,
+        score.cost,
+        score.satisfies(budget),
+        plan.n_vms(),
+        elapsed
+    );
+    for (i, vm) in plan.vms.iter().enumerate() {
+        println!(
+            "  vm{i:<3} {:<22} tasks={:<4} exec={:>8.1}s cost={}",
+            sys.instance_type(vm.it).name,
+            vm.len(),
+            vm.exec(&sys),
+            vm.cost(&sys)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_sweep(a: &Args) -> Result<()> {
+    let sys = load_sys(a)?;
+    let eval = evaluator(a);
+    let bs = budgets(a)?;
+    if a.has("ablate") {
+        // Phase-ablation study: disable one phase at a time.
+        println!("ablation over budgets {bs:?} (mean makespan, feasible cells)");
+        #[allow(clippy::type_complexity)]
+        #[allow(clippy::type_complexity)]
+    let phases: [(&str, fn(&mut PlannerConfig)); 6] = [
+            ("full", |_| {}),
+            ("-reduce", |c| c.enable_reduce = false),
+            ("-add", |c| c.enable_add = false),
+            ("-balance", |c| c.enable_balance = false),
+            ("-split", |c| c.enable_split = false),
+            ("-replace", |c| c.enable_replace = false),
+        ];
+        for (name, tweak) in phases {
+            let mut cfg = PlannerConfig::default();
+            tweak(&mut cfg);
+            let mut spans = Vec::new();
+            let mut feasible = 0usize;
+            for &b in &bs {
+                let r = Planner::with_evaluator(&sys, eval.as_ref())
+                    .with_config(cfg.clone())
+                    .find(b);
+                if r.feasible {
+                    feasible += 1;
+                }
+                spans.push(r.score.makespan);
+            }
+            let mean = spans.iter().sum::<f64>() / spans.len() as f64;
+            println!("  {name:<9} mean_makespan={mean:>9.1}s feasible={feasible}/{}", bs.len());
+        }
+        return Ok(());
+    }
+    let report = run_sweep(&sys, &bs, eval.as_ref());
+    print!("{}", report.fig1_text());
+    print!("{}", report.headline().text());
+    if let Some(path) = a.get("json") {
+        std::fs::write(path, report.to_json().to_string())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_simulate(a: &Args) -> Result<()> {
+    let sys = load_sys(a)?;
+    let budget = a.f64("budget")?.ok_or_else(|| anyhow!("--budget required"))?;
+    let eval = evaluator(a);
+    let report = Planner::with_evaluator(&sys, eval.as_ref()).find(budget);
+    let cfg = SimConfig { noise: noise(a)?, seed: a.u64("seed")?.unwrap_or(0) };
+    let sim = Simulator::run_plan(&sys, &report.plan, &cfg);
+    println!(
+        "planned: makespan={:.1}s cost={} feasible={}",
+        report.score.makespan, report.score.cost, report.feasible
+    );
+    println!(
+        "simulated: makespan={:.1}s cost={} completed={} stranded={} failures={}",
+        sim.makespan,
+        sim.cost,
+        sim.completed.len(),
+        sim.stranded.len(),
+        sim.failures
+    );
+    Ok(())
+}
+
+fn cmd_campaign(a: &Args) -> Result<()> {
+    let sys = load_sys(a)?;
+    let budget = a.f64("budget")?.ok_or_else(|| anyhow!("--budget required"))?;
+    let mut spec = CampaignSpec::new(budget);
+    spec.sim.noise = noise(a)?;
+    spec.sim.seed = a.u64("seed")?.unwrap_or(0);
+    if let Some(r) = a.f64("reserve")? {
+        spec = spec.with_reserve(r);
+    }
+    if let Some(m) = a.u64("max-rounds")? {
+        spec.max_rounds = m as usize;
+    }
+    let out = run_campaign(&sys, &spec);
+    println!(
+        "campaign: wall={:.1}s spent={} complete={} within_budget={} rounds={}",
+        out.wall_clock,
+        out.spent,
+        out.complete,
+        out.within_budget,
+        out.rounds.len()
+    );
+    for (i, r) in out.rounds.iter().enumerate() {
+        println!(
+            "  round {i}: completed={} stranded={} failures={} cost={} makespan={:.1}s",
+            r.completed.len(),
+            r.stranded.len(),
+            r.failures,
+            r.cost,
+            r.makespan
+        );
+    }
+    Ok(())
+}
+
+fn cmd_estimate(a: &Args) -> Result<()> {
+    let sys = load_sys(a)?;
+    let per_cell = a.u64("per-cell")?.unwrap_or(20) as usize;
+    let obs = sample_runs(&sys, per_cell, &noise(a)?, a.u64("seed")?.unwrap_or(0));
+    let cells = sys.n_types() * sys.n_apps();
+    let prior = vec![0.0; cells];
+    let est = match botsched::runtime::XlaPerfEstimator::load() {
+        Ok(e) if !a.has("no-xla") => {
+            println!("estimator: xla artifact ({} samples)", obs.len());
+            e.estimate(&sys, &obs, &prior, 1e-9)?
+        }
+        _ => {
+            println!("estimator: native ({} samples)", obs.len());
+            botsched::cloudsim::sampling::estimate_perf_native(&sys, &obs, &prior, 1e-9)
+        }
+    };
+    println!(
+        "{:<22}{}",
+        "instance type",
+        sys.apps.iter().map(|ap| format!("{:>12}", ap.name)).collect::<String>()
+    );
+    for it in &sys.instance_types {
+        let mut row = format!("{:<22}", it.name);
+        for app in &sys.apps {
+            let got = est[it.id.index() * sys.n_apps() + app.id.index()];
+            let truth = sys.perf.get(it.id, app.id);
+            row.push_str(&format!("{:>7.2}/{:<4.1}", got, truth));
+        }
+        println!("{row}");
+    }
+    println!("(estimated/true seconds per unit size)");
+    Ok(())
+}
+
+fn cmd_bounds(a: &Args) -> Result<()> {
+    let sys = load_sys(a)?;
+    println!("LP cost floor: {:.2}", fractional_cost_floor(&sys));
+    for &b in &budgets(a)? {
+        let f = makespan_floor(&sys, b);
+        println!("budget {b:>7}: makespan floor {f:>9.1}s");
+    }
+    Ok(())
+}
+
+fn cmd_pareto(a: &Args) -> Result<()> {
+    let sys = load_sys(a)?;
+    let budgets = budgets(a)?;
+    let frontier = botsched::analysis::pareto_frontier(&sys, &budgets);
+    if frontier.is_empty() {
+        println!("no feasible points across budgets {budgets:?}");
+        return Ok(());
+    }
+    println!("{:>10} {:>10} {:>12}", "budget", "cost", "makespan");
+    for p in &frontier {
+        println!("{:>10} {:>10} {:>11.1}s", p.budget, p.score.cost, p.score.makespan);
+    }
+    if let Some(k) = botsched::analysis::knee(&frontier) {
+        println!("knee: budget {} (cost {}, makespan {:.1}s)", k.budget, k.score.cost, k.score.makespan);
+    }
+    Ok(())
+}
+
+fn cmd_trace(a: &Args) -> Result<()> {
+    use botsched::workload::Trace;
+    match a.positional.first().map(String::as_str) {
+        Some("gen") => {
+            let path = a.get("out").unwrap_or("trace.json");
+            let t = Trace::synthetic(
+                a.u64("seed")?.unwrap_or(0),
+                a.u64("campaigns")?.unwrap_or(10) as usize,
+                a.f64("mean-gap")?.unwrap_or(600.0),
+            );
+            t.save(std::path::Path::new(path))?;
+            println!("wrote {} campaigns to {path}", t.entries.len());
+            Ok(())
+        }
+        Some("replay") => {
+            let path = a.get("in").ok_or_else(|| anyhow!("--in trace.json required"))?;
+            let t = Trace::load(std::path::Path::new(path))?;
+            let rows = botsched::workload::replay(&t);
+            println!(
+                "{:>10} {:>8} {:>10} {:>8} {:>10} {:>9}",
+                "arrival", "budget", "makespan", "cost", "finish", "feasible"
+            );
+            for r in &rows {
+                println!(
+                    "{:>9.1}s {:>8} {:>9.1}s {:>8} {:>9.1}s {:>9}",
+                    r.at, r.budget, r.makespan, r.cost, r.finish_at, r.feasible
+                );
+            }
+            let feasible = rows.iter().filter(|r| r.feasible).count();
+            println!("{feasible}/{} campaigns feasible", rows.len());
+            Ok(())
+        }
+        _ => bail!("usage: botsched trace gen --out t.json | botsched trace replay --in t.json"),
+    }
+}
+
+fn cmd_serve(a: &Args) -> Result<()> {
+    let cfg = CoordinatorConfig {
+        addr: a.get("addr").unwrap_or("127.0.0.1:7077").to_string(),
+        use_xla: !a.has("no-xla"),
+        batching: !a.has("no-batching"),
+        batch_wait: std::time::Duration::from_millis(a.u64("batch-wait-ms")?.unwrap_or(2)),
+    };
+    let c = Coordinator::start(cfg)?;
+    println!("coordinator listening on {} (send {{\"op\":\"shutdown\"}} to stop)", c.local_addr);
+    c.wait();
+    println!("coordinator stopped");
+    Ok(())
+}
+
+fn cmd_client(a: &Args) -> Result<()> {
+    let addr: std::net::SocketAddr = a
+        .get("addr")
+        .unwrap_or("127.0.0.1:7077")
+        .parse()
+        .context("--addr host:port")?;
+    let line = a
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: botsched client --addr host:port '<json>'"))?;
+    let reply = botsched::coordinator::server::request(&addr, line)?;
+    println!("{reply}");
+    Ok(())
+}

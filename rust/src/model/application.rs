@@ -1,0 +1,61 @@
+
+/// Application identifier (index into [`super::System::apps`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AppId(pub u16);
+
+impl AppId {
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// A Bag-of-Tasks application: a named collection of independent, identical
+/// tasks distinguished only by their `size` (paper Sec. III-A).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Application {
+    pub id: AppId,
+    pub name: String,
+    /// Sizes of this application's tasks, in declaration order.
+    pub task_sizes: Vec<f64>,
+}
+
+impl Application {
+    pub fn new(id: AppId, name: impl Into<String>, task_sizes: Vec<f64>) -> Self {
+        Self { id, name: name.into(), task_sizes }
+    }
+
+    /// Number of tasks, `|A_i|`.
+    pub fn len(&self) -> usize {
+        self.task_sizes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.task_sizes.is_empty()
+    }
+
+    /// Total size of all tasks (used by the planner's work estimates).
+    pub fn total_size(&self) -> f64 {
+        self.task_sizes.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals() {
+        let a = Application::new(AppId(0), "a", vec![1.0, 2.0, 3.0]);
+        assert_eq!(a.len(), 3);
+        assert!(!a.is_empty());
+        assert_eq!(a.total_size(), 6.0);
+    }
+
+    #[test]
+    fn empty() {
+        let a = Application::new(AppId(0), "a", vec![]);
+        assert!(a.is_empty());
+        assert_eq!(a.total_size(), 0.0);
+    }
+}

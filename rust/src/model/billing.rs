@@ -1,0 +1,65 @@
+
+/// How VM wall-clock time is turned into money.
+///
+/// The paper (eq. 6) uses per-hour ceiling billing; per-second billing is
+/// provided for ablations (several modern clouds bill per second) and for
+/// the LP lower bound in [`crate::analysis::bounds`].
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum BillingPolicy {
+    /// eq. 6: `cost = ceil(exec / hour) * rate`.
+    #[default]
+    HourlyCeil,
+    /// Fractional: `cost = (exec / hour) * rate` (no quantisation).
+    PerSecond,
+}
+
+/// Billed hours of a VM that ran for `exec` seconds (eq. 6 numerator).
+///
+/// A VM that ran at all (even only its boot overhead) bills at least one
+/// hour under [`BillingPolicy::HourlyCeil`]; a VM with `exec == 0` (never
+/// started) bills zero.
+#[inline]
+pub fn billed_hours(exec: f64, hour: f64) -> f64 {
+    debug_assert!(exec >= 0.0 && hour > 0.0);
+    (exec / hour).ceil()
+}
+
+/// Cost of a VM that ran `exec` seconds at `rate` per hour under `policy`.
+#[inline]
+pub fn billed_cost(exec: f64, rate: f64, hour: f64, policy: BillingPolicy) -> f64 {
+    match policy {
+        BillingPolicy::HourlyCeil => billed_hours(exec, hour) * rate,
+        BillingPolicy::PerSecond => exec / hour * rate,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const H: f64 = 3600.0;
+
+    #[test]
+    fn zero_exec_bills_zero() {
+        assert_eq!(billed_hours(0.0, H), 0.0);
+        assert_eq!(billed_cost(0.0, 10.0, H, BillingPolicy::HourlyCeil), 0.0);
+    }
+
+    #[test]
+    fn sub_hour_bills_one() {
+        assert_eq!(billed_hours(1.0, H), 1.0);
+        assert_eq!(billed_hours(3599.9, H), 1.0);
+    }
+
+    #[test]
+    fn exact_hour_boundary() {
+        assert_eq!(billed_hours(3600.0, H), 1.0);
+        assert_eq!(billed_hours(3600.0001, H), 2.0);
+    }
+
+    #[test]
+    fn per_second_is_fractional() {
+        let c = billed_cost(1800.0, 10.0, H, BillingPolicy::PerSecond);
+        assert!((c - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,43 @@
+
+/// Instance-type identifier (index into [`super::System::instance_types`]
+/// and row of the performance matrix).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct InstanceTypeId(pub u16);
+
+impl InstanceTypeId {
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// A cloud instance type offering: name + hourly price `c_it`.
+///
+/// The per-application speed of the type lives in the
+/// [`super::PerfMatrix`], not here, because it is a property of the
+/// (type, application) pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InstanceType {
+    pub id: InstanceTypeId,
+    pub name: String,
+    /// `c_it`: cost per billed hour (paper eq. 6).
+    pub cost_per_hour: f64,
+}
+
+impl InstanceType {
+    pub fn new(id: InstanceTypeId, name: impl Into<String>, cost_per_hour: f64) -> Self {
+        Self { id, name: name.into(), cost_per_hour }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct() {
+        let it = InstanceType::new(InstanceTypeId(2), "c4.large", 0.1);
+        assert_eq!(it.id.index(), 2);
+        assert_eq!(it.cost_per_hour, 0.1);
+    }
+}

@@ -1,0 +1,34 @@
+//! The paper's Section III problem model.
+//!
+//! Multiple Bag-of-Tasks applications `A = {A_1..A_M}`, each a collection of
+//! independent tasks with a `size`; a cloud catalogue of instance types
+//! `IT = {it_1..it_N}` with an hourly cost `c_it`; and a performance matrix
+//! `P[N x M]` giving the seconds each instance type needs per unit of task
+//! size of each application (eq. 2: `exec_{it,t} = P[it, A_t] * size_t`).
+//!
+//! An **execution plan** (eq. 3-8) is a set of VMs, each created from one
+//! instance type and holding a disjoint set of tasks covering `T`; VMs boot
+//! with overhead `o`, bill by the ceiling of wall-clock hours (eq. 6), run
+//! in parallel (makespan = slowest VM, eq. 7) and the plan satisfies the
+//! budget when `cost <= B` (eq. 9).
+
+mod application;
+mod billing;
+mod instance;
+mod perf;
+mod plan;
+mod system;
+mod task;
+mod vm;
+
+pub use application::{AppId, Application};
+pub use billing::{billed_cost, billed_hours, BillingPolicy};
+pub use instance::{InstanceType, InstanceTypeId};
+pub use perf::PerfMatrix;
+pub use plan::{Plan, PlanScore};
+pub use system::{System, SystemBuilder, SystemError};
+pub use task::{Task, TaskId};
+pub use vm::Vm;
+
+/// Default billing quantum (seconds per billed hour, paper eq. 6).
+pub const HOUR_SECONDS: f64 = 3600.0;

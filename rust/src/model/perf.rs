@@ -1,0 +1,93 @@
+
+use super::{AppId, InstanceTypeId, Task};
+
+/// The paper's performance matrix `P[N x M]`: seconds an instance of type
+/// `it_i` needs to process **one unit of size** of a task of application
+/// `A_j` (Sec. III-A).  Lower is faster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PerfMatrix {
+    n_types: usize,
+    n_apps: usize,
+    /// Row-major `[it][app]`.
+    data: Vec<f64>,
+}
+
+impl PerfMatrix {
+    /// Build from row-major data; `data.len()` must equal
+    /// `n_types * n_apps` and all entries must be finite and positive.
+    pub fn new(n_types: usize, n_apps: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), n_types * n_apps, "PerfMatrix shape mismatch");
+        assert!(
+            data.iter().all(|p| p.is_finite() && *p > 0.0),
+            "PerfMatrix entries must be finite and positive"
+        );
+        Self { n_types, n_apps, data }
+    }
+
+    /// Build from nested rows (one row per instance type).
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let n_types = rows.len();
+        let n_apps = rows.first().map_or(0, Vec::len);
+        assert!(rows.iter().all(|r| r.len() == n_apps), "ragged PerfMatrix rows");
+        Self::new(n_types, n_apps, rows.concat())
+    }
+
+    pub fn n_types(&self) -> usize {
+        self.n_types
+    }
+
+    pub fn n_apps(&self) -> usize {
+        self.n_apps
+    }
+
+    /// `P[it, app]` — seconds per unit size.
+    #[inline]
+    pub fn get(&self, it: InstanceTypeId, app: AppId) -> f64 {
+        self.data[it.index() * self.n_apps + app.index()]
+    }
+
+    /// The whole performance vector `P_it` of one instance type.
+    pub fn row(&self, it: InstanceTypeId) -> &[f64] {
+        let start = it.index() * self.n_apps;
+        &self.data[start..start + self.n_apps]
+    }
+
+    /// eq. 2: `exec_{it,t} = P[it, A_t] * size_t`.
+    #[inline]
+    pub fn exec_time(&self, it: InstanceTypeId, task: &Task) -> f64 {
+        self.get(it, task.app) * task.size
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_and_row() {
+        let p = PerfMatrix::from_rows(&[vec![20.0, 24.0], vec![11.0, 13.0]]);
+        assert_eq!(p.n_types(), 2);
+        assert_eq!(p.n_apps(), 2);
+        assert_eq!(p.get(InstanceTypeId(0), AppId(1)), 24.0);
+        assert_eq!(p.row(InstanceTypeId(1)), &[11.0, 13.0]);
+    }
+
+    #[test]
+    fn exec_time_is_linear_in_size() {
+        let p = PerfMatrix::from_rows(&[vec![10.0]]);
+        let t = Task::new(super::super::TaskId(0), AppId(0), 3.0);
+        assert_eq!(p.exec_time(InstanceTypeId(0), &t), 30.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn shape_mismatch_panics() {
+        PerfMatrix::new(2, 2, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and positive")]
+    fn nonpositive_panics() {
+        PerfMatrix::new(1, 1, vec![0.0]);
+    }
+}

@@ -1,0 +1,225 @@
+
+use super::{InstanceTypeId, System, TaskId, Vm};
+
+/// The two objective values of a plan: eq. 7 makespan and eq. 8 total cost.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlanScore {
+    /// eq. 7: `exec = max_vm exec_vm` (seconds).
+    pub makespan: f64,
+    /// eq. 8: `cost = sum_vm cost_vm`.
+    pub cost: f64,
+}
+
+impl PlanScore {
+    /// eq. 9 (`cost <= B`; the paper writes `cost < B` in eq. 9 but treats
+    /// plans that spend exactly the budget as valid throughout Sec. V).
+    pub fn satisfies(&self, budget: f64) -> bool {
+        self.cost <= budget + 1e-9
+    }
+
+    /// Strict improvement in either objective (Algorithm 1 line 14).
+    pub fn improves(&self, other: &PlanScore) -> bool {
+        self.cost < other.cost - 1e-9 || self.makespan < other.makespan - 1e-9
+    }
+
+    /// Pareto dominance: no worse in both, strictly better in one.
+    pub fn dominates(&self, other: &PlanScore) -> bool {
+        self.cost <= other.cost + 1e-9
+            && self.makespan <= other.makespan + 1e-9
+            && self.improves(other)
+    }
+}
+
+/// An execution plan: the set of provisioned VMs and their task
+/// assignments (Sec. III-B's `VM` with `T_vm` per element).
+#[derive(Debug, Clone, Default)]
+pub struct Plan {
+    pub vms: Vec<Vm>,
+}
+
+impl Plan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Provision a fresh empty VM of the given type; returns its index.
+    pub fn add_vm(&mut self, sys: &System, it: InstanceTypeId) -> usize {
+        self.vms.push(Vm::new(it, sys.n_apps()));
+        self.vms.len() - 1
+    }
+
+    /// Deprovision a VM (must be empty of tasks unless the caller has
+    /// drained it intentionally).
+    pub fn remove_vm(&mut self, idx: usize) -> Vm {
+        self.vms.remove(idx)
+    }
+
+    /// Drop every VM with no assigned tasks (they would still bill their
+    /// boot hour under hourly billing when `o > 0`).
+    pub fn drop_empty_vms(&mut self) {
+        self.vms.retain(|vm| !vm.is_empty());
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vms.is_empty()
+    }
+
+    pub fn n_vms(&self) -> usize {
+        self.vms.len()
+    }
+
+    /// Move one task between VMs; panics on bad indices, returns whether
+    /// the task was found on `from`.
+    pub fn move_task(&mut self, sys: &System, from: usize, to: usize, task: TaskId) -> bool {
+        assert_ne!(from, to, "move_task: from == to");
+        if !self.vms[from].remove_task(sys, task) {
+            return false;
+        }
+        self.vms[to].push_task(sys, task);
+        true
+    }
+
+    /// eq. 7 makespan.
+    pub fn exec(&self, sys: &System) -> f64 {
+        self.vms.iter().map(|vm| vm.exec(sys)).fold(0.0, f64::max)
+    }
+
+    /// eq. 8 total cost.
+    pub fn cost(&self, sys: &System) -> f64 {
+        self.vms.iter().map(|vm| vm.cost(sys)).sum()
+    }
+
+    pub fn score(&self, sys: &System) -> PlanScore {
+        PlanScore { makespan: self.exec(sys), cost: self.cost(sys) }
+    }
+
+    /// Number of VMs of each instance type (Fig. 2's quantity).
+    pub fn vm_mix(&self, sys: &System) -> Vec<usize> {
+        let mut mix = vec![0usize; sys.n_types()];
+        for vm in &self.vms {
+            mix[vm.it.index()] += 1;
+        }
+        mix
+    }
+
+    /// Total number of assigned tasks across all VMs.
+    pub fn n_assigned(&self) -> usize {
+        self.vms.iter().map(Vm::len).sum()
+    }
+
+    /// Validate eq. 3 + eq. 4: every task of the system appears on exactly
+    /// one VM.  Returns a human-readable violation description.
+    pub fn validate_partition(&self, sys: &System) -> Result<(), String> {
+        let n = sys.tasks().len();
+        let mut seen = vec![false; n];
+        for (vi, vm) in self.vms.iter().enumerate() {
+            for &t in vm.tasks() {
+                let i = t.index();
+                if i >= n {
+                    return Err(format!("vm {vi} holds unknown task {i}"));
+                }
+                if seen[i] {
+                    return Err(format!("task {i} assigned to multiple VMs (eq. 4)"));
+                }
+                seen[i] = true;
+            }
+        }
+        if let Some(missing) = seen.iter().position(|s| !s) {
+            return Err(format!("task {missing} not assigned to any VM (eq. 3)"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SystemBuilder;
+
+    fn sys() -> System {
+        SystemBuilder::new()
+            .app("a1", vec![1.0, 2.0])
+            .app("a2", vec![3.0])
+            .instance_type("small", 5.0, vec![20.0, 24.0])
+            .instance_type("big", 10.0, vec![11.0, 13.0])
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn score_and_mix() {
+        let s = sys();
+        let mut p = Plan::new();
+        let v0 = p.add_vm(&s, InstanceTypeId(0));
+        let v1 = p.add_vm(&s, InstanceTypeId(1));
+        p.vms[v0].push_task(&s, TaskId(0)); // 20s on small
+        p.vms[v0].push_task(&s, TaskId(1)); // 40s on small
+        p.vms[v1].push_task(&s, TaskId(2)); // 39s on big
+        let sc = p.score(&s);
+        assert_eq!(sc.makespan, 60.0);
+        assert_eq!(sc.cost, 15.0); // 1h small + 1h big
+        assert_eq!(p.vm_mix(&s), vec![1, 1]);
+        assert!(p.validate_partition(&s).is_ok());
+    }
+
+    #[test]
+    fn partition_violations_detected() {
+        let s = sys();
+        let mut p = Plan::new();
+        let v0 = p.add_vm(&s, InstanceTypeId(0));
+        p.vms[v0].push_task(&s, TaskId(0));
+        assert!(p.validate_partition(&s).unwrap_err().contains("not assigned"));
+        let v1 = p.add_vm(&s, InstanceTypeId(1));
+        p.vms[v1].push_task(&s, TaskId(0));
+        p.vms[v0].push_task(&s, TaskId(1));
+        p.vms[v1].push_task(&s, TaskId(2));
+        assert!(p.validate_partition(&s).unwrap_err().contains("multiple"));
+    }
+
+    #[test]
+    fn move_task_between_vms() {
+        let s = sys();
+        let mut p = Plan::new();
+        let v0 = p.add_vm(&s, InstanceTypeId(0));
+        let v1 = p.add_vm(&s, InstanceTypeId(1));
+        p.vms[v0].push_task(&s, TaskId(0));
+        assert!(p.move_task(&s, v0, v1, TaskId(0)));
+        assert!(!p.move_task(&s, v0, v1, TaskId(0)));
+        assert_eq!(p.vms[v1].len(), 1);
+        assert_eq!(p.vms[v0].len(), 0);
+    }
+
+    #[test]
+    fn drop_empty_vms() {
+        let s = sys();
+        let mut p = Plan::new();
+        p.add_vm(&s, InstanceTypeId(0));
+        let v1 = p.add_vm(&s, InstanceTypeId(1));
+        p.vms[v1].push_task(&s, TaskId(0));
+        p.drop_empty_vms();
+        assert_eq!(p.n_vms(), 1);
+        assert_eq!(p.vms[0].it, InstanceTypeId(1));
+    }
+
+    #[test]
+    fn score_semantics() {
+        let a = PlanScore { makespan: 100.0, cost: 50.0 };
+        let b = PlanScore { makespan: 90.0, cost: 60.0 };
+        assert!(b.improves(&a)); // better makespan
+        assert!(a.improves(&b)); // better cost
+        assert!(!a.dominates(&b));
+        let c = PlanScore { makespan: 90.0, cost: 50.0 };
+        assert!(c.dominates(&a));
+        assert!(a.satisfies(50.0));
+        assert!(!a.satisfies(49.0));
+    }
+
+    #[test]
+    fn empty_plan() {
+        let s = sys();
+        let p = Plan::new();
+        assert_eq!(p.exec(&s), 0.0);
+        assert_eq!(p.cost(&s), 0.0);
+        assert!(p.validate_partition(&s).is_err()); // tasks unassigned
+    }
+}

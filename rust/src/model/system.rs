@@ -1,0 +1,347 @@
+
+use super::{
+    AppId, Application, BillingPolicy, InstanceType, InstanceTypeId, PerfMatrix, Task, TaskId,
+    HOUR_SECONDS,
+};
+
+/// Validation errors for [`System`] construction.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SystemError {
+    /// The performance matrix shape does not match `|IT| x |A|`.
+    PerfShapeMismatch { n_types: usize, n_apps: usize, rows: usize, cols: usize },
+    /// eq. 1 violated: two distinct instance types with identical
+    /// performance vector *and* identical cost.
+    DuplicateInstanceType(InstanceTypeId, InstanceTypeId),
+    /// No applications / no instance types / a non-positive price etc.
+    Invalid(String),
+}
+
+impl std::fmt::Display for SystemError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::PerfShapeMismatch { n_types, n_apps, rows, cols } => write!(
+                f,
+                "performance matrix is {rows}x{cols} but system has {n_types} instance types \
+                 and {n_apps} applications"
+            ),
+            Self::DuplicateInstanceType(a, b) => write!(
+                f,
+                "instance types {} and {} have identical performance and cost (violates eq. 1)",
+                a.0, b.0
+            ),
+            Self::Invalid(msg) => write!(f, "invalid system: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SystemError {}
+
+/// The full problem instance `(A, IT)` of Sec. III plus the environment
+/// constants: boot overhead `o`, the billing quantum and policy.
+///
+/// `tasks` is the flattened union `T` (eq. in Sec. III-A) with stable ids;
+/// `TaskId(i)` indexes straight into it.
+#[derive(Debug, Clone)]
+pub struct System {
+    pub apps: Vec<Application>,
+    pub instance_types: Vec<InstanceType>,
+    pub perf: PerfMatrix,
+    /// VM boot overhead `o` in seconds (Sec. III-B).
+    pub overhead: f64,
+    /// Billing quantum in seconds (3600 in the paper).
+    pub hour: f64,
+    pub billing: BillingPolicy,
+    tasks: Vec<Task>,
+}
+
+impl System {
+    /// Validated constructor; prefer [`SystemBuilder`] for literals.
+    pub fn new(
+        apps: Vec<Application>,
+        instance_types: Vec<InstanceType>,
+        perf: PerfMatrix,
+        overhead: f64,
+        hour: f64,
+        billing: BillingPolicy,
+    ) -> Result<Self, SystemError> {
+        if apps.is_empty() {
+            return Err(SystemError::Invalid("no applications".into()));
+        }
+        if instance_types.is_empty() {
+            return Err(SystemError::Invalid("no instance types".into()));
+        }
+        if overhead < 0.0 || !overhead.is_finite() {
+            return Err(SystemError::Invalid(format!("bad overhead {overhead}")));
+        }
+        if hour <= 0.0 || !hour.is_finite() {
+            return Err(SystemError::Invalid(format!("bad hour {hour}")));
+        }
+        if perf.n_types() != instance_types.len() || perf.n_apps() != apps.len() {
+            return Err(SystemError::PerfShapeMismatch {
+                n_types: instance_types.len(),
+                n_apps: apps.len(),
+                rows: perf.n_types(),
+                cols: perf.n_apps(),
+            });
+        }
+        for (i, it) in instance_types.iter().enumerate() {
+            if it.cost_per_hour <= 0.0 || !it.cost_per_hour.is_finite() {
+                return Err(SystemError::Invalid(format!(
+                    "instance type {} has non-positive cost",
+                    it.name
+                )));
+            }
+            if it.id.index() != i {
+                return Err(SystemError::Invalid(format!(
+                    "instance type {} id out of order",
+                    it.name
+                )));
+            }
+        }
+        for (j, a) in apps.iter().enumerate() {
+            if a.id.index() != j {
+                return Err(SystemError::Invalid(format!("application {} id out of order", a.name)));
+            }
+            if a.task_sizes.iter().any(|s| *s <= 0.0 || !s.is_finite()) {
+                return Err(SystemError::Invalid(format!(
+                    "application {} has non-positive task size",
+                    a.name
+                )));
+            }
+        }
+        // eq. 1: no two types may share both performance vector and cost.
+        for i in 0..instance_types.len() {
+            for j in i + 1..instance_types.len() {
+                let (a, b) = (InstanceTypeId(i as u16), InstanceTypeId(j as u16));
+                if instance_types[i].cost_per_hour == instance_types[j].cost_per_hour
+                    && perf.row(a) == perf.row(b)
+                {
+                    return Err(SystemError::DuplicateInstanceType(a, b));
+                }
+            }
+        }
+        let mut tasks = Vec::with_capacity(apps.iter().map(Application::len).sum());
+        for app in &apps {
+            for &size in &app.task_sizes {
+                tasks.push(Task::new(TaskId(tasks.len() as u32), app.id, size));
+            }
+        }
+        Ok(Self { apps, instance_types, perf, overhead, hour, billing, tasks })
+    }
+
+    /// The flattened task union `T`.
+    pub fn tasks(&self) -> &[Task] {
+        &self.tasks
+    }
+
+    pub fn task(&self, id: TaskId) -> &Task {
+        &self.tasks[id.index()]
+    }
+
+    pub fn n_apps(&self) -> usize {
+        self.apps.len()
+    }
+
+    pub fn n_types(&self) -> usize {
+        self.instance_types.len()
+    }
+
+    pub fn instance_type(&self, it: InstanceTypeId) -> &InstanceType {
+        &self.instance_types[it.index()]
+    }
+
+    pub fn rate(&self, it: InstanceTypeId) -> f64 {
+        self.instance_types[it.index()].cost_per_hour
+    }
+
+    /// eq. 2 for a task id.
+    #[inline]
+    pub fn exec_time(&self, it: InstanceTypeId, task: TaskId) -> f64 {
+        self.perf.exec_time(it, self.task(task))
+    }
+
+    /// `exec_{it,T}`: total serial execution time of **all** tasks on one
+    /// VM of type `it` (used by ADD/MI to rank types by performance).
+    pub fn total_exec_time(&self, it: InstanceTypeId) -> f64 {
+        self.apps
+            .iter()
+            .map(|a| self.perf.get(it, a.id) * a.total_size())
+            .sum()
+    }
+
+    /// The cheapest instance type `it^c = argmin c_it` (MP baseline).
+    pub fn cheapest_type(&self) -> InstanceTypeId {
+        self.instance_types
+            .iter()
+            .min_by(|a, b| a.cost_per_hour.total_cmp(&b.cost_per_hour))
+            .map(|it| it.id)
+            .expect("validated: at least one instance type")
+    }
+
+    /// Sec. IV-C: the best instance type for one application —
+    /// lexicographically smallest `(P[it, app], c_it)` among types whose
+    /// hourly cost fits the budget (falls back to all types if none fit).
+    pub fn best_type_for_app(&self, app: AppId, budget: f64) -> InstanceTypeId {
+        let affordable: Vec<&InstanceType> = self
+            .instance_types
+            .iter()
+            .filter(|it| it.cost_per_hour <= budget)
+            .collect();
+        let pool: Vec<&InstanceType> = if affordable.is_empty() {
+            self.instance_types.iter().collect()
+        } else {
+            affordable
+        };
+        pool.into_iter()
+            .min_by(|a, b| {
+                self.perf
+                    .get(a.id, app)
+                    .total_cmp(&self.perf.get(b.id, app))
+                    .then(a.cost_per_hour.total_cmp(&b.cost_per_hour))
+            })
+            .expect("non-empty pool")
+            .id
+    }
+}
+
+/// Fluent construction of a [`System`].
+#[derive(Debug, Default)]
+pub struct SystemBuilder {
+    apps: Vec<Application>,
+    instance_types: Vec<InstanceType>,
+    perf_rows: Vec<Vec<f64>>,
+    overhead: f64,
+    hour: f64,
+    billing: BillingPolicy,
+}
+
+impl SystemBuilder {
+    pub fn new() -> Self {
+        Self { hour: HOUR_SECONDS, ..Default::default() }
+    }
+
+    /// Add an application with the given task sizes.
+    pub fn app(mut self, name: &str, task_sizes: Vec<f64>) -> Self {
+        let id = AppId(self.apps.len() as u16);
+        self.apps.push(Application::new(id, name, task_sizes));
+        self
+    }
+
+    /// Add an instance type with hourly cost and its performance row
+    /// (seconds per unit size, one entry per application, in the order the
+    /// applications were added).
+    pub fn instance_type(mut self, name: &str, cost_per_hour: f64, perf_row: Vec<f64>) -> Self {
+        let id = InstanceTypeId(self.instance_types.len() as u16);
+        self.instance_types.push(InstanceType::new(id, name, cost_per_hour));
+        self.perf_rows.push(perf_row);
+        self
+    }
+
+    /// Set the VM boot overhead `o` (seconds); default 0.
+    pub fn overhead(mut self, o: f64) -> Self {
+        self.overhead = o;
+        self
+    }
+
+    /// Set the billing quantum (seconds); default 3600.
+    pub fn hour(mut self, hour: f64) -> Self {
+        self.hour = hour;
+        self
+    }
+
+    pub fn billing(mut self, billing: BillingPolicy) -> Self {
+        self.billing = billing;
+        self
+    }
+
+    pub fn build(self) -> Result<System, SystemError> {
+        let n_apps = self.apps.len();
+        if self.perf_rows.iter().any(|r| r.len() != n_apps) {
+            return Err(SystemError::Invalid(
+                "a perf row length does not match the number of applications".into(),
+            ));
+        }
+        let perf = PerfMatrix::from_rows(&self.perf_rows);
+        System::new(self.apps, self.instance_types, perf, self.overhead, self.hour, self.billing)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> System {
+        SystemBuilder::new()
+            .app("a1", vec![1.0, 2.0])
+            .app("a2", vec![3.0])
+            .instance_type("small", 5.0, vec![20.0, 24.0])
+            .instance_type("big", 10.0, vec![11.0, 13.0])
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn tasks_flattened_in_order() {
+        let s = tiny();
+        assert_eq!(s.tasks().len(), 3);
+        assert_eq!(s.task(TaskId(0)).app, AppId(0));
+        assert_eq!(s.task(TaskId(2)).app, AppId(1));
+        assert_eq!(s.task(TaskId(2)).size, 3.0);
+    }
+
+    #[test]
+    fn exec_and_totals() {
+        let s = tiny();
+        assert_eq!(s.exec_time(InstanceTypeId(0), TaskId(1)), 40.0);
+        // total on small: (1+2)*20 + 3*24 = 132
+        assert_eq!(s.total_exec_time(InstanceTypeId(0)), 132.0);
+    }
+
+    #[test]
+    fn cheapest_and_best() {
+        let s = tiny();
+        assert_eq!(s.cheapest_type(), InstanceTypeId(0));
+        // app 0: big (11 s/u) is best when affordable…
+        assert_eq!(s.best_type_for_app(AppId(0), 10.0), InstanceTypeId(1));
+        // …but with budget 7 only small fits.
+        assert_eq!(s.best_type_for_app(AppId(0), 7.0), InstanceTypeId(0));
+    }
+
+    #[test]
+    fn eq1_duplicate_type_rejected() {
+        let err = SystemBuilder::new()
+            .app("a", vec![1.0])
+            .instance_type("x", 5.0, vec![10.0])
+            .instance_type("y", 5.0, vec![10.0])
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, SystemError::DuplicateInstanceType(_, _)));
+    }
+
+    #[test]
+    fn same_cost_different_perf_allowed() {
+        // Paper Table I has three types at the same price — only identical
+        // (perf, cost) pairs are forbidden.
+        assert!(SystemBuilder::new()
+            .app("a", vec![1.0])
+            .instance_type("x", 10.0, vec![10.0])
+            .instance_type("y", 10.0, vec![9.0])
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn bad_inputs_rejected() {
+        assert!(SystemBuilder::new().build().is_err());
+        assert!(SystemBuilder::new()
+            .app("a", vec![1.0])
+            .instance_type("x", 0.0, vec![10.0])
+            .build()
+            .is_err());
+        assert!(SystemBuilder::new()
+            .app("a", vec![-1.0])
+            .instance_type("x", 5.0, vec![10.0])
+            .build()
+            .is_err());
+    }
+}

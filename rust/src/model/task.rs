@@ -1,0 +1,44 @@
+
+use super::AppId;
+
+/// Globally unique task identifier (index into [`super::System::tasks`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId(pub u32);
+
+impl TaskId {
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// One task of a Bag-of-Tasks application.
+///
+/// `size` is the paper's `size_t`: an application-relative complexity
+/// measure (input bytes, training iterations, ...).  The execution time of
+/// the task on instance type `it` is `P[it, app] * size` (eq. 2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Task {
+    pub id: TaskId,
+    pub app: AppId,
+    pub size: f64,
+}
+
+impl Task {
+    pub fn new(id: TaskId, app: AppId, size: f64) -> Self {
+        Self { id, app, size }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_id_roundtrip() {
+        let t = Task::new(TaskId(7), AppId(1), 2.5);
+        assert_eq!(t.id.index(), 7);
+        assert_eq!(t.app.index(), 1);
+        assert_eq!(t.size, 2.5);
+    }
+}

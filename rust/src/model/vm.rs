@@ -1,0 +1,219 @@
+
+use super::{billed_cost, InstanceTypeId, System, TaskId};
+
+/// One provisioned virtual machine in an execution plan: an instance type
+/// plus the list of tasks assigned to it (`T_vm` in Sec. III-B).
+///
+/// The VM caches its total task work (`sum_t exec_{vm,t}`) and the per
+/// application aggregated task sizes, both maintained incrementally on
+/// every assignment change, so `exec()` / `cost()` are O(1) and the XLA
+/// evaluator can read the `(vm, app)` size aggregation without a pass over
+/// the tasks.
+#[derive(Debug, Clone)]
+pub struct Vm {
+    pub it: InstanceTypeId,
+    tasks: Vec<TaskId>,
+    /// Aggregated task size per application (index = AppId).
+    agg_sizes: Vec<f64>,
+    /// Cached `sum_{t in T_vm} P[it, A_t] * size_t` in seconds.
+    work: f64,
+}
+
+impl Vm {
+    pub fn new(it: InstanceTypeId, n_apps: usize) -> Self {
+        Self { it, tasks: Vec::new(), agg_sizes: vec![0.0; n_apps], work: 0.0 }
+    }
+
+    pub fn tasks(&self) -> &[TaskId] {
+        &self.tasks
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Aggregated size per application (used to build evaluator tensors).
+    pub fn agg_sizes(&self) -> &[f64] {
+        &self.agg_sizes
+    }
+
+    /// Cached total task work in seconds (excludes boot overhead).
+    pub fn work(&self) -> f64 {
+        self.work
+    }
+
+    /// eq. 5: `exec_vm = o + sum_t exec_{vm,t}`.
+    ///
+    /// A provisioned VM pays its boot overhead even with no tasks; a VM
+    /// with neither overhead nor tasks has `exec == 0` and bills nothing.
+    #[inline]
+    pub fn exec(&self, sys: &System) -> f64 {
+        if self.tasks.is_empty() && sys.overhead == 0.0 {
+            0.0
+        } else {
+            sys.overhead + self.work
+        }
+    }
+
+    /// eq. 6: hourly-ceiling (or configured policy) cost of this VM.
+    #[inline]
+    pub fn cost(&self, sys: &System) -> f64 {
+        billed_cost(self.exec(sys), sys.rate(self.it), sys.hour, sys.billing)
+    }
+
+    /// Marginal execution time this VM needs for `task` (eq. 2).
+    #[inline]
+    pub fn task_time(&self, sys: &System, task: TaskId) -> f64 {
+        sys.exec_time(self.it, task)
+    }
+
+    /// Would assigning `task` leave this VM's billed cost unchanged?
+    /// (ASSIGN criterion i, Sec. IV-A.)
+    pub fn fits_without_cost_increase(&self, sys: &System, task: TaskId) -> bool {
+        let new_exec = sys.overhead + self.work + self.task_time(sys, task);
+        billed_cost(new_exec, sys.rate(self.it), sys.hour, sys.billing) <= self.cost(sys)
+    }
+
+    /// Assign a task (updates cached work and aggregation).
+    pub fn push_task(&mut self, sys: &System, task: TaskId) {
+        let t = sys.task(task);
+        self.work += sys.exec_time(self.it, task);
+        self.agg_sizes[t.app.index()] += t.size;
+        self.tasks.push(task);
+    }
+
+    /// Remove a task by id; returns whether it was present.
+    pub fn remove_task(&mut self, sys: &System, task: TaskId) -> bool {
+        let Some(pos) = self.tasks.iter().position(|t| *t == task) else {
+            return false;
+        };
+        self.tasks.swap_remove(pos);
+        let t = sys.task(task);
+        self.work -= sys.exec_time(self.it, task);
+        self.agg_sizes[t.app.index()] -= t.size;
+        // Clamp tiny negative float residue from incremental updates.
+        if self.work < 0.0 {
+            self.work = 0.0;
+        }
+        if self.agg_sizes[t.app.index()] < 0.0 {
+            self.agg_sizes[t.app.index()] = 0.0;
+        }
+        true
+    }
+
+    /// Remove and return all tasks (used by REDUCE/REPLACE when a VM is
+    /// dismantled).
+    pub fn drain_tasks(&mut self) -> Vec<TaskId> {
+        self.work = 0.0;
+        self.agg_sizes.iter_mut().for_each(|s| *s = 0.0);
+        std::mem::take(&mut self.tasks)
+    }
+
+    /// Recompute caches from scratch (drift check; used by tests/debug).
+    pub fn recompute(&mut self, sys: &System) {
+        self.work = 0.0;
+        self.agg_sizes.iter_mut().for_each(|s| *s = 0.0);
+        for &t in &self.tasks {
+            self.work += sys.exec_time(self.it, t);
+            let task = sys.task(t);
+            self.agg_sizes[task.app.index()] += task.size;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SystemBuilder;
+
+    fn sys() -> System {
+        SystemBuilder::new()
+            .app("a1", vec![1.0, 2.0])
+            .app("a2", vec![3.0])
+            .instance_type("small", 5.0, vec![20.0, 24.0])
+            .instance_type("big", 10.0, vec![11.0, 13.0])
+            .overhead(30.0)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn push_remove_roundtrip() {
+        let s = sys();
+        let mut vm = Vm::new(InstanceTypeId(0), 2);
+        vm.push_task(&s, TaskId(0));
+        vm.push_task(&s, TaskId(2));
+        assert_eq!(vm.len(), 2);
+        assert_eq!(vm.work(), 20.0 + 72.0);
+        assert_eq!(vm.agg_sizes(), &[1.0, 3.0]);
+        assert!(vm.remove_task(&s, TaskId(0)));
+        assert!(!vm.remove_task(&s, TaskId(0)));
+        assert_eq!(vm.work(), 72.0);
+        assert_eq!(vm.agg_sizes(), &[0.0, 3.0]);
+    }
+
+    #[test]
+    fn exec_includes_overhead() {
+        let s = sys();
+        let mut vm = Vm::new(InstanceTypeId(1), 2);
+        assert_eq!(vm.exec(&s), 30.0); // overhead only: still provisioned
+        vm.push_task(&s, TaskId(1));
+        assert_eq!(vm.exec(&s), 30.0 + 22.0);
+    }
+
+    #[test]
+    fn empty_vm_zero_overhead_bills_nothing() {
+        let s = SystemBuilder::new()
+            .app("a", vec![1.0])
+            .instance_type("x", 5.0, vec![10.0])
+            .build()
+            .unwrap();
+        let vm = Vm::new(InstanceTypeId(0), 1);
+        assert_eq!(vm.exec(&s), 0.0);
+        assert_eq!(vm.cost(&s), 0.0);
+    }
+
+    #[test]
+    fn cost_is_hourly_ceiling() {
+        let s = sys();
+        let mut vm = Vm::new(InstanceTypeId(0), 2);
+        vm.push_task(&s, TaskId(0)); // exec = 30 + 20 = 50s -> 1h * 5
+        assert_eq!(vm.cost(&s), 5.0);
+    }
+
+    #[test]
+    fn fits_without_cost_increase_boundary() {
+        let s = SystemBuilder::new()
+            .app("a", vec![3500.0, 100.0])
+            .instance_type("x", 5.0, vec![1.0])
+            .build()
+            .unwrap();
+        let mut vm = Vm::new(InstanceTypeId(0), 1);
+        vm.push_task(&s, TaskId(0)); // 3500s of 3600
+        assert!(vm.fits_without_cost_increase(&s, TaskId(1))); // exactly 3600
+        vm.push_task(&s, TaskId(1));
+        assert!(!vm.fits_without_cost_increase(&s, TaskId(1)));
+    }
+
+    #[test]
+    fn drain_and_recompute() {
+        let s = sys();
+        let mut vm = Vm::new(InstanceTypeId(0), 2);
+        vm.push_task(&s, TaskId(0));
+        vm.push_task(&s, TaskId(1));
+        let drained = vm.drain_tasks();
+        assert_eq!(drained.len(), 2);
+        assert!(vm.is_empty());
+        assert_eq!(vm.work(), 0.0);
+        for t in drained {
+            vm.push_task(&s, t);
+        }
+        let w = vm.work();
+        vm.recompute(&s);
+        assert!((vm.work() - w).abs() < 1e-9);
+    }
+}

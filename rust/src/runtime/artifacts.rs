@@ -1,0 +1,115 @@
+//! Artifact discovery and the `meta.json` shape manifest.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::Json;
+
+/// Static shapes of the compiled artifacts (see `python/compile/aot.py`).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub dir: PathBuf,
+    pub hour_seconds: f64,
+    /// plan_eval: (file, K candidates, V vm slots, M apps).
+    pub plan_eval_file: PathBuf,
+    pub k: usize,
+    pub v: usize,
+    pub m: usize,
+    /// Optional small-batch variant (same V/M, smaller K) — the planner's
+    /// REPLACE step scores a handful of candidates at a time and padding
+    /// those to the full K wastes most of the execution (see §Perf).
+    pub plan_eval_small: Option<(PathBuf, usize)>,
+    /// perf_estim: (file, S samples, C cells).
+    pub perf_estim_file: PathBuf,
+    pub s: usize,
+    pub c: usize,
+}
+
+/// Locate the artifacts directory: `$BOTSCHED_ARTIFACTS` if set, else
+/// `artifacts/` relative to the current directory, else relative to the
+/// executable's workspace root.
+pub fn artifacts_dir() -> Result<PathBuf> {
+    if let Ok(dir) = std::env::var("BOTSCHED_ARTIFACTS") {
+        let p = PathBuf::from(dir);
+        if p.join("meta.json").exists() {
+            return Ok(p);
+        }
+        return Err(anyhow!("$BOTSCHED_ARTIFACTS={} has no meta.json", p.display()));
+    }
+    for base in [Path::new("artifacts"), Path::new("../artifacts")] {
+        if base.join("meta.json").exists() {
+            return Ok(base.to_path_buf());
+        }
+    }
+    // Fall back to the crate root (tests run from target subdirs).
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if manifest.join("meta.json").exists() {
+        return Ok(manifest);
+    }
+    Err(anyhow!(
+        "artifacts/ not found — run `make artifacts` (or set $BOTSCHED_ARTIFACTS)"
+    ))
+}
+
+impl ArtifactMeta {
+    /// Load `meta.json` from the discovered artifacts directory.
+    pub fn load() -> Result<Self> {
+        Self::load_from(&artifacts_dir()?)
+    }
+
+    pub fn load_from(dir: &Path) -> Result<Self> {
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {}", meta_path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", meta_path.display()))?;
+        let field = |keys: &[&str]| -> Result<f64> {
+            j.path(keys)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("meta.json missing {}", keys.join(".")))
+        };
+        let file = |keys: &[&str]| -> Result<PathBuf> {
+            Ok(dir.join(
+                j.path(keys)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("meta.json missing {}", keys.join(".")))?,
+            ))
+        };
+        let plan_eval_small = match (
+            file(&["plan_eval_small", "file"]),
+            field(&["plan_eval_small", "k"]),
+        ) {
+            (Ok(f), Ok(k)) if f.exists() => Some((f, k as usize)),
+            _ => None,
+        };
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            hour_seconds: field(&["hour_seconds"])?,
+            plan_eval_file: file(&["plan_eval", "file"])?,
+            k: field(&["plan_eval", "k"])? as usize,
+            v: field(&["plan_eval", "v"])? as usize,
+            m: field(&["plan_eval", "m"])? as usize,
+            plan_eval_small,
+            perf_estim_file: file(&["perf_estim", "file"])?,
+            s: field(&["perf_estim", "s"])? as usize,
+            c: field(&["perf_estim", "c"])? as usize,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_loads_when_artifacts_built() {
+        // `make artifacts` is a prerequisite of `make test`; skip quietly
+        // if this checkout has not built them (pure-cargo runs).
+        let Ok(dir) = artifacts_dir() else { return };
+        let meta = ArtifactMeta::load_from(&dir).expect("meta parses");
+        assert_eq!(meta.hour_seconds, 3600.0);
+        assert!(meta.k > 0 && meta.v > 0 && meta.m > 0);
+        assert!(meta.plan_eval_file.exists());
+        assert!(meta.perf_estim_file.exists());
+    }
+}

@@ -1,0 +1,94 @@
+//! The XLA-backed performance-matrix estimator (the `perf_estim`
+//! artifact): turns sampled test-run observations into an estimated
+//! `P[N x M]`, mirroring `cloudsim::sampling::estimate_perf_native`.
+
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::cloudsim::Observation;
+use crate::model::System;
+
+use super::artifacts::ArtifactMeta;
+
+struct ExeCell(Mutex<xla::PjRtLoadedExecutable>);
+// SAFETY: see `plan_eval.rs` — serialized access to a CPU-client
+// executable whose client handle is refcounted inside the crate.
+unsafe impl Send for ExeCell {}
+unsafe impl Sync for ExeCell {}
+
+/// Estimator over the AOT `perf_estim.hlo.txt` artifact.
+pub struct XlaPerfEstimator {
+    exe: ExeCell,
+    meta: ArtifactMeta,
+}
+
+impl XlaPerfEstimator {
+    pub fn load() -> Result<Self> {
+        Self::load_with(ArtifactMeta::load()?)
+    }
+
+    pub fn load_with(meta: ArtifactMeta) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(&meta.perf_estim_file)
+            .with_context(|| format!("loading {}", meta.perf_estim_file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling perf_estim artifact")?;
+        Ok(Self { exe: ExeCell(Mutex::new(exe)), meta })
+    }
+
+    /// Estimate the flattened performance matrix (`it.index() * M + app`)
+    /// from observations.  `prior` must have `n_types * n_apps` entries;
+    /// unsampled cells return the prior.
+    ///
+    /// Errors if the system or sample count exceeds the artifact's static
+    /// shape (S samples, C cells) — chunk the observations if needed.
+    pub fn estimate(
+        &self,
+        sys: &System,
+        obs: &[Observation],
+        prior: &[f64],
+        prior_weight: f64,
+    ) -> Result<Vec<f64>> {
+        let (s_max, c_max) = (self.meta.s, self.meta.c);
+        let m = sys.n_apps();
+        let cells = sys.n_types() * m;
+        if cells > c_max {
+            return Err(anyhow!("system has {cells} cells > artifact C={c_max}"));
+        }
+        if obs.len() > s_max {
+            return Err(anyhow!("{} observations > artifact S={s_max}", obs.len()));
+        }
+        if prior.len() != cells {
+            return Err(anyhow!("prior has {} entries, want {cells}", prior.len()));
+        }
+
+        let mut indicator = vec![0.0f32; s_max * c_max];
+        let mut size = vec![0.0f32; s_max];
+        let mut time = vec![0.0f32; s_max];
+        for (i, o) in obs.iter().enumerate() {
+            let c = o.it.index() * m + o.app.index();
+            indicator[i * c_max + c] = 1.0;
+            size[i] = o.size as f32;
+            time[i] = o.time as f32;
+        }
+        let mut prior_pad = vec![0.0f32; c_max];
+        for (i, p) in prior.iter().enumerate() {
+            prior_pad[i] = *p as f32;
+        }
+
+        let args = [
+            xla::Literal::vec1(&indicator).reshape(&[s_max as i64, c_max as i64])?,
+            xla::Literal::vec1(&size),
+            xla::Literal::vec1(&time),
+            xla::Literal::vec1(&prior_pad),
+            xla::Literal::vec1(&[prior_weight as f32]),
+        ];
+        let exe = self.exe.0.lock().unwrap();
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        drop(exe);
+        let p_hat = result.to_tuple1()?;
+        let p_hat: Vec<f32> = p_hat.to_vec()?;
+        Ok(p_hat[..cells].iter().map(|p| *p as f64).collect())
+    }
+}

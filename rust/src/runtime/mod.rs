@@ -1,0 +1,23 @@
+//! PJRT/XLA runtime: load and execute the AOT-compiled artifacts.
+//!
+//! `python/compile/aot.py` lowers the L2 JAX graphs (which embed the L1
+//! pallas kernel) to HLO **text** once at build time; this module loads
+//! them through the `xla` crate (`PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`) and exposes:
+//!
+//! * [`XlaEvaluator`] — batched candidate-plan scoring behind the
+//!   [`crate::eval::PlanEvaluator`] trait (the coordinator hot path);
+//! * [`XlaPerfEstimator`] — the perf-matrix estimation artifact;
+//! * [`ArtifactMeta`] / [`artifacts_dir`] — discovery of `artifacts/`
+//!   and its `meta.json` shape manifest.
+//!
+//! Python never runs here: the rust binary is self-contained once
+//! `make artifacts` has produced the `.hlo.txt` files.
+
+pub mod artifacts;
+pub mod estimator;
+pub mod plan_eval;
+
+pub use artifacts::{artifacts_dir, ArtifactMeta};
+pub use estimator::XlaPerfEstimator;
+pub use plan_eval::XlaEvaluator;

@@ -1,0 +1,231 @@
+//! The XLA-backed [`PlanEvaluator`]: batched candidate-plan scoring on
+//! the AOT-compiled `plan_eval.hlo.txt` artifact (which embeds the L1
+//! pallas kernel).
+//!
+//! Candidates are padded to the artifact's static `(K, V, M)` shape and
+//! scored `K` at a time in a single PJRT execution.  Results are exact
+//! f32 renditions of eq. 5-8; the differential tests against
+//! [`NativeEvaluator`](crate::eval::NativeEvaluator) pin agreement to
+//! ~1e-3 relative (f32 vs f64 reduction order).
+//!
+//! Fallback rules (delegating to the native evaluator):
+//! * a candidate with more than `V` VMs or more than `M` applications;
+//! * a system using `BillingPolicy::PerSecond` (the artifact hard-codes
+//!   the paper's hourly ceiling).
+
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::eval::{EvalBatch, NativeEvaluator, PlanEvaluator};
+use crate::model::{BillingPolicy, PlanScore};
+
+use super::artifacts::ArtifactMeta;
+
+/// PJRT executable wrapper.
+///
+/// SAFETY: `PjRtLoadedExecutable` holds raw pointers and is neither `Send`
+/// nor `Sync` by auto-derivation, but the underlying PJRT CPU client is
+/// thread-safe for serialized use; all access goes through the `Mutex`,
+/// and the owning client lives as long as the executable (the xla crate
+/// keeps a refcounted handle inside).
+struct ExeCell(Mutex<xla::PjRtLoadedExecutable>);
+unsafe impl Send for ExeCell {}
+unsafe impl Sync for ExeCell {}
+
+/// Batched plan scoring through the AOT artifact.
+pub struct XlaEvaluator {
+    exe: ExeCell,
+    /// Small-batch executable (K = meta.plan_eval_small) — §Perf: the
+    /// planner's REPLACE step scores 4-16 candidates at a time; padding
+    /// those to K=64 wastes ~8x compute per call.
+    exe_small: Option<(ExeCell, usize)>,
+    meta: ArtifactMeta,
+    /// Pre-allocated staging buffers (size K*V*M etc.), reused across
+    /// calls under the same lock as the executable.
+    staging: Mutex<Staging>,
+}
+
+#[derive(Default)]
+struct Staging {
+    sizes: Vec<f32>,
+    perf: Vec<f32>,
+    rate: Vec<f32>,
+    active: Vec<f32>,
+}
+
+impl XlaEvaluator {
+    /// Load the artifact and compile it on the PJRT CPU client.
+    pub fn load() -> Result<Self> {
+        Self::load_with(ArtifactMeta::load()?)
+    }
+
+    pub fn load_with(meta: ArtifactMeta) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let compile = |path: &std::path::Path| -> Result<xla::PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("loading {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).with_context(|| format!("compiling {}", path.display()))
+        };
+        let exe = compile(&meta.plan_eval_file)?;
+        let exe_small = match &meta.plan_eval_small {
+            Some((path, k_small)) => Some((ExeCell(Mutex::new(compile(path)?)), *k_small)),
+            None => None,
+        };
+        let (k, v, m) = (meta.k, meta.v, meta.m);
+        let staging = Staging {
+            sizes: vec![0.0; k * v * m],
+            perf: vec![0.0; k * v * m],
+            rate: vec![0.0; k * v],
+            active: vec![0.0; k * v],
+        };
+        Ok(Self {
+            exe: ExeCell(Mutex::new(exe)),
+            exe_small,
+            meta,
+            staging: Mutex::new(staging),
+        })
+    }
+
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Score one chunk of at most `K` candidates (all fitting V/M).
+    ///
+    /// Chunks no larger than the small artifact's K run on the small
+    /// executable — same numerics, ~K_big/K_small less padded compute.
+    fn eval_chunk(&self, batch: &EvalBatch, idx: &[usize], out: &mut [PlanScore]) -> Result<()> {
+        let (v, m) = (self.meta.v, self.meta.m);
+        // Pick the executable: small when the chunk fits it.
+        let (exe_cell, k) = match &self.exe_small {
+            Some((cell, k_small)) if idx.len() <= *k_small => (cell, *k_small),
+            _ => (&self.exe, self.meta.k),
+        };
+        debug_assert!(idx.len() <= k);
+
+        let mut staging = self.staging.lock().unwrap();
+        // Only the first k*... prefix of the staging buffers is used.
+        staging.sizes[..k * v * m].iter_mut().for_each(|x| *x = 0.0);
+        staging.perf[..k * v * m].iter_mut().for_each(|x| *x = 0.0);
+        staging.rate[..k * v].iter_mut().for_each(|x| *x = 0.0);
+        staging.active[..k * v].iter_mut().for_each(|x| *x = 0.0);
+
+        for (row, &ci) in idx.iter().enumerate() {
+            let cand = &batch.candidates[ci];
+            for vi in 0..cand.n_vms() {
+                if !cand.active[vi] {
+                    continue;
+                }
+                let base = (row * v + vi) * m;
+                for (ai, (&s, &p)) in
+                    cand.sizes[vi].iter().zip(&cand.perf[vi]).enumerate()
+                {
+                    staging.sizes[base + ai] = s as f32;
+                    staging.perf[base + ai] = p as f32;
+                }
+                staging.rate[row * v + vi] = cand.rate[vi] as f32;
+                staging.active[row * v + vi] = 1.0;
+            }
+        }
+
+        let overhead = xla::Literal::vec1(&[batch.overhead as f32]).reshape(&[1, 1])?;
+        let hour = xla::Literal::vec1(&[batch.hour as f32]).reshape(&[1, 1])?;
+        let sizes = xla::Literal::vec1(&staging.sizes[..k * v * m])
+            .reshape(&[k as i64, v as i64, m as i64])?;
+        let perf = xla::Literal::vec1(&staging.perf[..k * v * m])
+            .reshape(&[k as i64, v as i64, m as i64])?;
+        let rate = xla::Literal::vec1(&staging.rate[..k * v]).reshape(&[k as i64, v as i64])?;
+        let active =
+            xla::Literal::vec1(&staging.active[..k * v]).reshape(&[k as i64, v as i64])?;
+        drop(staging);
+
+        let exe = exe_cell.0.lock().unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&[overhead, hour, sizes, perf, rate, active])?[0][0]
+            .to_literal_sync()?;
+        drop(exe);
+        let (_exec, cost, makespan) = result.to_tuple3()?;
+        let cost: Vec<f32> = cost.to_vec()?;
+        let makespan: Vec<f32> = makespan.to_vec()?;
+
+        for (row, &ci) in idx.iter().enumerate() {
+            out[ci] = PlanScore { makespan: makespan[row] as f64, cost: cost[row] as f64 };
+        }
+        Ok(())
+    }
+}
+
+impl PlanEvaluator for XlaEvaluator {
+    fn eval_batch(&self, batch: &EvalBatch) -> Vec<PlanScore> {
+        let mut out = vec![PlanScore { makespan: 0.0, cost: 0.0 }; batch.len()];
+        if batch.is_empty() {
+            return out;
+        }
+        // Partition into XLA-eligible candidates and native fallbacks.
+        let mut eligible = Vec::with_capacity(batch.len());
+        let mut fallback = Vec::new();
+        let per_second = batch.billing == BillingPolicy::PerSecond;
+        for (i, c) in batch.candidates.iter().enumerate() {
+            if per_second || c.n_vms() > self.meta.v || batch.n_apps > self.meta.m {
+                fallback.push(i);
+            } else {
+                eligible.push(i);
+            }
+        }
+        if !fallback.is_empty() {
+            let mut nb = EvalBatch {
+                candidates: fallback.iter().map(|&i| batch.candidates[i].clone()).collect(),
+                ..batch.clone()
+            };
+            nb.n_apps = batch.n_apps;
+            for (j, score) in NativeEvaluator.eval_batch(&nb).into_iter().enumerate() {
+                out[fallback[j]] = score;
+            }
+        }
+        // Chunking: full-K chunks first, then the tail in small-K chunks
+        // (when the small artifact exists) to minimise padded compute.
+        let mut chunks: Vec<&[usize]> = Vec::new();
+        let mut rest = eligible.as_slice();
+        while rest.len() >= self.meta.k {
+            let (head, tail) = rest.split_at(self.meta.k);
+            chunks.push(head);
+            rest = tail;
+        }
+        match &self.exe_small {
+            Some((_, k_small)) => {
+                while !rest.is_empty() {
+                    let n = rest.len().min(*k_small);
+                    let (head, tail) = rest.split_at(n);
+                    chunks.push(head);
+                    rest = tail;
+                }
+            }
+            None => {
+                if !rest.is_empty() {
+                    chunks.push(rest);
+                }
+            }
+        }
+        for chunk in chunks {
+            if let Err(e) = self.eval_chunk(batch, chunk, &mut out) {
+                // A runtime failure on the XLA path must not take the
+                // coordinator down: score the chunk natively.
+                eprintln!("warning: XLA eval failed ({e:#}); falling back to native");
+                let nb = EvalBatch {
+                    candidates: chunk.iter().map(|&i| batch.candidates[i].clone()).collect(),
+                    ..batch.clone()
+                };
+                for (j, score) in NativeEvaluator.eval_batch(&nb).into_iter().enumerate() {
+                    out[chunk[j]] = score;
+                }
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}

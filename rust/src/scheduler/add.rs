@@ -1,0 +1,83 @@
+//! Sec. IV-E `ADD`: spend remaining budget on extra VMs.
+//!
+//! After the budget holds, leftover money buys additional concurrency.
+//! Each new VM's price is estimated under the paper's one-hour assumption
+//! ("by assuming that each of them would not be executed for more than one
+//! hour"), and the chosen type is the best-performing affordable one —
+//! minimal `exec_{it,T}` (total serial time over all tasks) with the price
+//! as tie-break.  VMs are added until no type is affordable.
+//!
+//! The MI baseline (Sec. V-A1) is exactly this function run with the full
+//! budget on an empty plan.
+
+use crate::model::{InstanceTypeId, Plan, System};
+
+/// Add as many VMs as `remaining_budget` affords; returns the indices of
+/// the VMs created (in creation order).
+pub fn add_vms(sys: &System, plan: &mut Plan, remaining_budget: f64) -> Vec<usize> {
+    let mut remaining = remaining_budget;
+    let mut created = Vec::new();
+    while let Some(it) = pick_type(sys, remaining) {
+        created.push(plan.add_vm(sys, it));
+        remaining -= sys.rate(it);
+    }
+    created
+}
+
+/// The cheapest instance type with the lowest execution time for all
+/// tasks, among those affordable within `budget` (one-hour assumption).
+pub fn pick_type(sys: &System, budget: f64) -> Option<InstanceTypeId> {
+    sys.instance_types
+        .iter()
+        .filter(|it| it.cost_per_hour <= budget + 1e-9)
+        .min_by(|a, b| {
+            sys.total_exec_time(a.id)
+                .total_cmp(&sys.total_exec_time(b.id))
+                .then(a.cost_per_hour.total_cmp(&b.cost_per_hour))
+        })
+        .map(|it| it.id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::paper::table1_system;
+
+    #[test]
+    fn picks_best_average_performer() {
+        let sys = table1_system(0.0);
+        // Total exec: it1 = 49500, it2 = 27000, it3 = 25500, it4 = 23250.
+        assert_eq!(pick_type(&sys, 100.0), Some(InstanceTypeId(3)));
+        // Below 10 only it_1 is affordable.
+        assert_eq!(pick_type(&sys, 7.0), Some(InstanceTypeId(0)));
+        assert_eq!(pick_type(&sys, 1.0), None);
+    }
+
+    #[test]
+    fn mi_shape_it4_then_it1_with_remainder() {
+        let sys = table1_system(0.0);
+        let mut plan = Plan::new();
+        let created = add_vms(&sys, &mut plan, 45.0);
+        // 4 x it_4 (40) then 5 remaining buys one it_1.
+        assert_eq!(created.len(), 5);
+        let mix = plan.vm_mix(&sys);
+        assert_eq!(mix, vec![1, 0, 0, 4]);
+    }
+
+    #[test]
+    fn zero_budget_adds_nothing() {
+        let sys = table1_system(0.0);
+        let mut plan = Plan::new();
+        assert!(add_vms(&sys, &mut plan, 0.0).is_empty());
+        assert!(add_vms(&sys, &mut plan, 4.999).is_empty());
+    }
+
+    #[test]
+    fn exact_price_is_affordable() {
+        let sys = table1_system(0.0);
+        let mut plan = Plan::new();
+        let created = add_vms(&sys, &mut plan, 10.0);
+        assert_eq!(created.len(), 1);
+        assert_eq!(plan.vms[0].it, InstanceTypeId(3));
+    }
+}

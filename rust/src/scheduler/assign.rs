@@ -1,0 +1,185 @@
+//! Sec. IV-A `ASSIGN`: route a list of tasks onto a list of VMs.
+//!
+//! For each task the receiving VM is selected by three criteria:
+//!
+//! 1. the VM should not increase its billed cost by taking the task
+//!    (it still fits in the VM's already-paid hours);
+//! 2. the VM should need the least time to execute the task
+//!    (its instance type is fastest for the task's application);
+//! 3. the VM should have the lowest current execution time.
+//!
+//! The paper enumerates them i-iii in that order but its own descriptions
+//! of `INITIAL` ("tasks are assigned to the best instance type") and
+//! `REDUCE` ("tries to move tasks to VMs whose require least time to
+//! execute them") only hold when the *least-time* criterion dominates —
+//! with the cost criterion first, a paid-but-slow VM would swallow every
+//! task of every application.  We therefore rank by
+//! `(task time, cost-free, current load)` lexicographically and document
+//! the resolution in DESIGN.md "Paper ambiguities".  Within a pool of
+//! equally fast VMs this still fills already-paid hours before opening a
+//! new one (criterion 1), which is the cost behaviour the paper wants;
+//! `BALANCE` subsequently evens out finish times.
+
+use crate::model::{Plan, System, TaskId};
+
+/// Assign `tasks` to any VM of `plan`. Tasks are routed one at a time in
+/// the given order.
+pub fn assign(sys: &System, plan: &mut Plan, tasks: &[TaskId]) {
+    let all: Vec<usize> = (0..plan.n_vms()).collect();
+    assign_restricted(sys, plan, tasks, &all);
+}
+
+/// Assign `tasks`, restricted to the VM indices in `allowed` (used by
+/// REDUCE's local mode).
+///
+/// Panics if `allowed` is empty while `tasks` is not — callers must
+/// guarantee a destination exists.
+pub fn assign_restricted(sys: &System, plan: &mut Plan, tasks: &[TaskId], allowed: &[usize]) {
+    if tasks.is_empty() {
+        return;
+    }
+    assert!(!allowed.is_empty(), "ASSIGN: no candidate VMs for {} tasks", tasks.len());
+    for &task in tasks {
+        let vm_idx = select_vm(sys, plan, task, allowed);
+        plan.vms[vm_idx].push_task(sys, task);
+    }
+}
+
+/// Pick the receiving VM for one task per the ASSIGN criteria.
+fn select_vm(sys: &System, plan: &Plan, task: TaskId, allowed: &[usize]) -> usize {
+    let mut best: Option<(f64, bool, f64, usize)> = None;
+    for &vi in allowed {
+        let vm = &plan.vms[vi];
+        let t_time = vm.task_time(sys, task); // criterion ii (primary)
+        let free = vm.fits_without_cost_increase(sys, task); // criterion i
+        let load = vm.exec(sys); // criterion iii
+        let key = (t_time, free, load, vi);
+        let better = match &best {
+            None => true,
+            Some(cur) => {
+                (key.0, !key.1, key.2, key.3) < (cur.0, !cur.1, cur.2, cur.3)
+            }
+        };
+        if better {
+            best = Some(key);
+        }
+    }
+    best.expect("allowed non-empty").3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{InstanceTypeId, SystemBuilder};
+    use crate::scheduler::balance;
+
+    fn sys() -> System {
+        SystemBuilder::new()
+            .app("cpuish", vec![1.0, 1.0, 1.0, 1.0])
+            .app("memish", vec![2.0, 2.0])
+            .instance_type("small", 5.0, vec![20.0, 24.0])
+            .instance_type("cpu", 10.0, vec![10.0, 15.0])
+            .instance_type("mem", 10.0, vec![10.0, 9.0])
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn routes_to_fastest_type() {
+        let s = sys();
+        let mut p = Plan::new();
+        p.add_vm(&s, InstanceTypeId(0));
+        p.add_vm(&s, InstanceTypeId(1));
+        p.add_vm(&s, InstanceTypeId(2));
+        // app1 ("memish") tasks are fastest on "mem" (9 s/u).
+        let memish: Vec<TaskId> = s.tasks().iter().filter(|t| t.app.0 == 1).map(|t| t.id).collect();
+        assign(&s, &mut p, &memish);
+        assert_eq!(p.vms[2].len(), 2);
+        assert_eq!(p.vms[0].len() + p.vms[1].len(), 0);
+    }
+
+    #[test]
+    fn fills_paid_hours_first_then_balance_spreads() {
+        let s = sys();
+        let mut p = Plan::new();
+        // two identical-speed VMs for app0: "cpu" and "mem" both 10 s/u.
+        p.add_vm(&s, InstanceTypeId(1));
+        p.add_vm(&s, InstanceTypeId(2));
+        let cpuish: Vec<TaskId> = s.tasks().iter().filter(|t| t.app.0 == 0).map(|t| t.id).collect();
+        assign(&s, &mut p, &cpuish);
+        // Criterion i (within equal speed): the first VM's paid hour
+        // swallows all four 10s tasks...
+        assert_eq!(p.vms[0].len(), 4);
+        assert_eq!(p.vms[1].len(), 0);
+        // ...and BALANCE then evens them out.
+        balance(&s, &mut p, f64::INFINITY);
+        assert_eq!(p.vms[0].len(), 2);
+        assert_eq!(p.vms[1].len(), 2);
+    }
+
+    #[test]
+    fn restricted_assign_ignores_other_vms() {
+        let s = sys();
+        let mut p = Plan::new();
+        p.add_vm(&s, InstanceTypeId(2)); // fastest for memish, but not allowed
+        p.add_vm(&s, InstanceTypeId(0));
+        let memish: Vec<TaskId> = s.tasks().iter().filter(|t| t.app.0 == 1).map(|t| t.id).collect();
+        assign_restricted(&s, &mut p, &memish, &[1]);
+        assert_eq!(p.vms[1].len(), 2);
+        assert_eq!(p.vms[0].len(), 0);
+    }
+
+    #[test]
+    fn fastest_type_wins_over_paid_hours() {
+        // Criterion ii dominates criterion i: a faster empty VM (new billed
+        // hour) beats a slower VM with paid room.  See the module docs for
+        // why the paper's i-iii ordering is resolved this way.
+        let s = SystemBuilder::new()
+            .app("a", vec![100.0, 1.0])
+            .instance_type("slow", 5.0, vec![30.0])
+            .instance_type("fast", 10.0, vec![1.0])
+            .overhead(0.0)
+            .build()
+            .unwrap();
+        let mut p = Plan::new();
+        let slow = p.add_vm(&s, InstanceTypeId(0));
+        let fast = p.add_vm(&s, InstanceTypeId(1));
+        p.vms[slow].push_task(&s, TaskId(0)); // 3000s -> inside 1 paid hour
+        assign(&s, &mut p, &[TaskId(1)]);
+        assert_eq!(p.vms[fast].len(), 1);
+    }
+
+    #[test]
+    fn equal_speed_prefers_cost_free_vm() {
+        // Between equally fast VMs, the one with paid room wins even if
+        // more loaded (criterion i before iii).
+        let s = SystemBuilder::new()
+            .app("a", vec![10.0, 10.0])
+            .instance_type("x", 5.0, vec![10.0])
+            .instance_type("y", 6.0, vec![10.0])
+            .build()
+            .unwrap();
+        let mut p = Plan::new();
+        let x = p.add_vm(&s, InstanceTypeId(0));
+        p.add_vm(&s, InstanceTypeId(1));
+        p.vms[x].push_task(&s, TaskId(0)); // x now paid, loaded 100s
+        assign(&s, &mut p, &[TaskId(1)]);
+        assert_eq!(p.vms[x].len(), 2, "paid x beats empty y at equal speed");
+    }
+
+    #[test]
+    #[should_panic(expected = "no candidate VMs")]
+    fn empty_allowed_panics() {
+        let s = sys();
+        let mut p = Plan::new();
+        assign(&s, &mut p, &[TaskId(0)]);
+    }
+
+    #[test]
+    fn empty_tasks_is_noop() {
+        let s = sys();
+        let mut p = Plan::new();
+        assign(&s, &mut p, &[]); // must not panic despite no VMs
+        assert_eq!(p.n_vms(), 0);
+    }
+}

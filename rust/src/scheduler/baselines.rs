@@ -1,0 +1,90 @@
+//! Sec. V-A comparison baselines.
+//!
+//! * **MI — Minimising Individual task execution time**: run `ADD` with
+//!   the full budget (buys the best-average-performance affordable type
+//!   until the money runs out), then assign and balance.
+//! * **MP — Maximising Parallelism**: buy `floor(B / c_min)` VMs of the
+//!   cheapest instance type, then assign and balance.
+//!
+//! Neither baseline manages billed hours (no REDUCE/SPLIT/REPLACE), which
+//! is exactly why they degrade at tight budgets in Fig. 1.
+
+use super::{add_vms, assign, balance};
+use crate::model::{Plan, System, TaskId};
+
+/// MI: ADD with the full budget + ASSIGN + BALANCE.
+pub fn minimise_individual(sys: &System, budget: f64) -> Plan {
+    let mut plan = Plan::new();
+    add_vms(sys, &mut plan, budget);
+    finish(sys, &mut plan);
+    plan
+}
+
+/// MP: as many cheapest-type VMs as the budget buys + ASSIGN + BALANCE.
+pub fn maximise_parallelism(sys: &System, budget: f64) -> Plan {
+    let mut plan = Plan::new();
+    let it = sys.cheapest_type();
+    let n = (budget / sys.rate(it)).floor() as usize;
+    for _ in 0..n {
+        plan.add_vm(sys, it);
+    }
+    finish(sys, &mut plan);
+    plan
+}
+
+fn finish(sys: &System, plan: &mut Plan) {
+    if plan.is_empty() {
+        // Budget below every hourly price: provision a single cheapest VM
+        // so the workload still completes (reported as infeasible).
+        plan.add_vm(sys, sys.cheapest_type());
+    }
+    let tasks: Vec<TaskId> = sys.tasks().iter().map(|t| t.id).collect();
+    assign(sys, plan, &tasks);
+    // The baselines spread without a cost envelope (the paper's MI/MP
+    // simply distribute over the purchased VMs); feasibility is assessed
+    // afterwards against realized cost.
+    balance(sys, plan, f64::INFINITY);
+    plan.drop_empty_vms();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::paper::table1_system;
+
+    #[test]
+    fn mp_buys_only_cheapest_type() {
+        let sys = table1_system(0.0);
+        let plan = maximise_parallelism(&sys, 45.0);
+        let mix = plan.vm_mix(&sys);
+        assert_eq!(mix[1] + mix[2] + mix[3], 0);
+        assert!(mix[0] <= 9); // floor(45/5), minus any dropped empties
+        assert!(plan.validate_partition(&sys).is_ok());
+    }
+
+    #[test]
+    fn mi_prefers_it4() {
+        let sys = table1_system(0.0);
+        let plan = minimise_individual(&sys, 50.0);
+        let mix = plan.vm_mix(&sys);
+        assert!(mix[3] >= 4, "MI must buy it_4 first, got {mix:?}");
+        assert!(plan.validate_partition(&sys).is_ok());
+    }
+
+    #[test]
+    fn tiny_budget_still_completes_workload() {
+        let sys = table1_system(0.0);
+        for plan in [minimise_individual(&sys, 1.0), maximise_parallelism(&sys, 1.0)] {
+            assert!(plan.validate_partition(&sys).is_ok());
+            assert!(plan.n_vms() >= 1);
+        }
+    }
+
+    #[test]
+    fn mp_parallelism_beats_mi_vm_count() {
+        let sys = table1_system(0.0);
+        let mp = maximise_parallelism(&sys, 60.0);
+        let mi = minimise_individual(&sys, 60.0);
+        assert!(mp.n_vms() >= mi.n_vms());
+    }
+}

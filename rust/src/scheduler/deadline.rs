@@ -1,0 +1,106 @@
+//! Future-work extension (Sec. VI): deadline-constrained **cost
+//! minimisation** — the dual of Algorithm 1.
+//!
+//! "For future work, we plan to further expand our heuristic algorithm to
+//! take into account the execution deadline while minimising the cost."
+//!
+//! The cost/budget relation of FIND is monotone in practice: a larger
+//! budget never yields a slower returned plan (more money buys at least
+//! the same VMs).  We therefore bisect the smallest budget whose plan
+//! meets the deadline, then return that plan.  Non-monotone blips from
+//! the heuristic are absorbed by tracking the best (cheapest meeting the
+//! deadline) plan seen during the search.
+
+use super::find::{FindReport, Planner};
+use crate::model::System;
+
+/// Result of a deadline-constrained search.
+#[derive(Debug, Clone)]
+pub struct DeadlineReport {
+    /// The cheapest plan found meeting the deadline, if any.
+    pub report: Option<FindReport>,
+    /// The budget that produced it.
+    pub budget: f64,
+    /// Planner invocations spent in the bisection.
+    pub probes: usize,
+}
+
+/// Find (approximately) the cheapest plan with makespan `<= deadline`
+/// seconds.  `budget_hi` caps the search (e.g. the user's absolute
+/// spending limit); returns `report: None` when even `budget_hi` cannot
+/// meet the deadline.
+pub fn min_cost_for_deadline(sys: &System, deadline: f64, budget_hi: f64) -> DeadlineReport {
+    let planner = Planner::new(sys);
+    let mut probes = 0usize;
+
+    // Budget lower bound: one hour of the cheapest machine.
+    let mut lo = sys
+        .instance_types
+        .iter()
+        .map(|it| it.cost_per_hour)
+        .fold(f64::INFINITY, f64::min);
+    let mut hi = budget_hi.max(lo);
+
+    // Check feasibility at the cap first.
+    let top = planner.find(hi);
+    probes += 1;
+    if !(top.feasible && top.score.makespan <= deadline + 1e-6) {
+        return DeadlineReport { report: None, budget: hi, probes };
+    }
+    let mut best = top;
+    let mut best_budget = hi;
+
+    // Bisect to cost granularity (budgets are money: 2 decimal places).
+    while hi - lo > 0.01 {
+        let mid = (lo + hi) / 2.0;
+        let r = planner.find(mid);
+        probes += 1;
+        if r.feasible && r.score.makespan <= deadline + 1e-6 {
+            if r.score.cost < best.score.cost - 1e-9 {
+                best = r;
+                best_budget = mid;
+            }
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    DeadlineReport { report: Some(best), budget: best_budget, probes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::paper::table1_system;
+
+    #[test]
+    fn loose_deadline_costs_less_than_tight() {
+        let sys = table1_system(0.0);
+        let loose = min_cost_for_deadline(&sys, 4.0 * 3600.0, 200.0);
+        let tight = min_cost_for_deadline(&sys, 1.0 * 3600.0, 200.0);
+        let (Some(l), Some(t)) = (&loose.report, &tight.report) else {
+            panic!("both deadlines should be satisfiable at budget 200");
+        };
+        assert!(l.score.makespan <= 4.0 * 3600.0 + 1e-6);
+        assert!(t.score.makespan <= 1.0 * 3600.0 + 1e-6);
+        assert!(l.score.cost <= t.score.cost + 1e-9, "loose {} > tight {}", l.score.cost, t.score.cost);
+    }
+
+    #[test]
+    fn impossible_deadline_returns_none() {
+        let sys = table1_system(0.0);
+        // 10 seconds is impossible: smallest single task needs >= 9s and
+        // boot + any real split cannot reach it for 750 tasks at budget 60.
+        let r = min_cost_for_deadline(&sys, 10.0, 60.0);
+        assert!(r.report.is_none());
+        assert!(r.probes >= 1);
+    }
+
+    #[test]
+    fn returned_plan_is_valid() {
+        let sys = table1_system(0.0);
+        let r = min_cost_for_deadline(&sys, 2.0 * 3600.0, 150.0);
+        let rep = r.report.expect("satisfiable");
+        assert!(rep.plan.validate_partition(&sys).is_ok());
+    }
+}

@@ -1,0 +1,143 @@
+//! Future-work extension (Sec. VI): **dynamic rescheduling** — re-planning
+//! mid-execution "to handle any unexpected issues during runtime".
+//!
+//! Given the set of tasks that still have to run (pending on live VMs,
+//! stranded on failed VMs, or not yet dispatched) and the money left, a
+//! fresh plan for exactly that residual workload is computed by extracting
+//! a *sub-system* (same catalogue/overhead, residual tasks only), running
+//! Algorithm 1 on it, and mapping task ids back to the parent system.
+//! The cloud simulator's failure-injection path drives this module (see
+//! `cloudsim::campaign` and the `noisy_cloud` example).
+
+use std::collections::HashMap;
+
+use super::find::{FindReport, Planner, PlannerConfig};
+use crate::model::{Plan, System, TaskId};
+
+/// A sub-problem over a subset of the parent's tasks.
+pub struct SubProblem {
+    /// The derived system (ids renumbered, catalogue shared).
+    pub sys: System,
+    /// `sub task id -> parent task id`.
+    pub back: Vec<TaskId>,
+}
+
+/// Build the residual sub-problem for `remaining` (parent task ids).
+///
+/// Panics if `remaining` is empty — callers should short-circuit instead.
+pub fn subproblem(parent: &System, remaining: &[TaskId]) -> SubProblem {
+    assert!(!remaining.is_empty(), "subproblem over zero tasks");
+    // Group the residual tasks by application, preserving order.
+    let mut per_app: Vec<Vec<(TaskId, f64)>> = vec![Vec::new(); parent.n_apps()];
+    for &tid in remaining {
+        let t = parent.task(tid);
+        per_app[t.app.index()].push((tid, t.size));
+    }
+    let mut b = crate::model::SystemBuilder::new()
+        .overhead(parent.overhead)
+        .hour(parent.hour)
+        .billing(parent.billing);
+    // Keep *all* apps (even now-empty ones) so AppId indices — and hence
+    // the performance matrix columns — line up with the parent.
+    let mut back = Vec::with_capacity(remaining.len());
+    for (ai, app) in parent.apps.iter().enumerate() {
+        let sizes: Vec<f64> = per_app[ai].iter().map(|(_, s)| *s).collect();
+        for (tid, _) in &per_app[ai] {
+            back.push(*tid);
+        }
+        b = b.app(&app.name, sizes);
+    }
+    for it in &parent.instance_types {
+        b = b.instance_type(&it.name, it.cost_per_hour, parent.perf.row(it.id).to_vec());
+    }
+    let sys = b.build().expect("subproblem inherits a valid parent");
+    // `back` above was built app-major in the same order SystemBuilder
+    // flattens tasks, so sub TaskId(i) maps to back[i].
+    SubProblem { sys, back }
+}
+
+/// Re-plan the residual workload with the remaining budget; returns the
+/// sub-plan re-expressed in **parent** task ids.
+pub fn replan(
+    parent: &System,
+    remaining: &[TaskId],
+    budget_left: f64,
+    config: PlannerConfig,
+) -> (Plan, FindReport) {
+    let sub = subproblem(parent, remaining);
+    let report = Planner::new(&sub.sys).with_config(config).find(budget_left);
+
+    // Translate the plan back to parent ids.
+    let mut parent_plan = Plan::new();
+    for vm in &report.plan.vms {
+        let idx = parent_plan.add_vm(parent, vm.it);
+        for &sub_tid in vm.tasks() {
+            parent_plan.vms[idx].push_task(parent, sub.back[sub_tid.index()]);
+        }
+    }
+    (parent_plan, report)
+}
+
+/// Validate that `plan` covers exactly `remaining` (the dynamic analogue
+/// of eq. 3/4, which `Plan::validate_partition` can't check because the
+/// parent system has more tasks).
+pub fn validate_residual(plan: &Plan, remaining: &[TaskId]) -> Result<(), String> {
+    let mut want: HashMap<TaskId, bool> = remaining.iter().map(|t| (*t, false)).collect();
+    for vm in &plan.vms {
+        for t in vm.tasks() {
+            match want.get_mut(t) {
+                None => return Err(format!("task {} not in residual set", t.0)),
+                Some(seen @ false) => *seen = true,
+                Some(_) => return Err(format!("task {} assigned twice", t.0)),
+            }
+        }
+    }
+    if let Some((t, _)) = want.iter().find(|(_, seen)| !**seen) {
+        return Err(format!("residual task {} unassigned", t.0));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::paper::table1_system;
+
+    #[test]
+    fn subproblem_preserves_catalogue_and_sizes() {
+        let sys = table1_system(30.0);
+        let remaining: Vec<TaskId> = sys.tasks().iter().step_by(3).map(|t| t.id).collect();
+        let sub = subproblem(&sys, &remaining);
+        assert_eq!(sub.sys.n_types(), 4);
+        assert_eq!(sub.sys.n_apps(), 3);
+        assert_eq!(sub.sys.tasks().len(), remaining.len());
+        assert_eq!(sub.sys.overhead, 30.0);
+        for (i, t) in sub.sys.tasks().iter().enumerate() {
+            let parent_task = sys.task(sub.back[i]);
+            assert_eq!(t.size, parent_task.size);
+            assert_eq!(t.app, parent_task.app);
+        }
+    }
+
+    #[test]
+    fn replan_covers_residual_exactly() {
+        let sys = table1_system(0.0);
+        let remaining: Vec<TaskId> =
+            sys.tasks().iter().filter(|t| t.id.0 % 5 == 0).map(|t| t.id).collect();
+        let (plan, report) = replan(&sys, &remaining, 30.0, PlannerConfig::default());
+        assert!(validate_residual(&plan, &remaining).is_ok());
+        assert!(report.iterations >= 1);
+    }
+
+    #[test]
+    fn validate_residual_catches_extra_and_missing() {
+        let sys = table1_system(0.0);
+        let remaining = vec![TaskId(0), TaskId(1)];
+        let mut plan = Plan::new();
+        let v = plan.add_vm(&sys, crate::model::InstanceTypeId(0));
+        plan.vms[v].push_task(&sys, TaskId(0));
+        assert!(validate_residual(&plan, &remaining).unwrap_err().contains("unassigned"));
+        plan.vms[v].push_task(&sys, TaskId(7));
+        assert!(validate_residual(&plan, &remaining).unwrap_err().contains("not in residual"));
+    }
+}

@@ -1,0 +1,73 @@
+//! Sec. IV-C `INITIAL`: build the first (budget-oblivious) plan.
+//!
+//! For every application the *best* instance type is selected —
+//! lexicographically minimal `(P[it, A], c_it)` among the types whose
+//! hourly price fits the budget — and the **whole budget** is spent on a
+//! pool of `floor(B / c_it)` VMs of that type.  With several applications
+//! this over-provisions (roughly `M x B`); Algorithm 1 follows up with a
+//! local `REDUCE` to pull the cost back under the budget.
+
+use super::assign;
+use crate::model::{Plan, System, TaskId};
+
+/// Create the initial plan and assign every task (paper lines 2-3 of
+/// Algorithm 1: `INITIAL` followed by `ASSIGN`).
+pub fn initial(sys: &System, budget: f64) -> Plan {
+    let mut plan = Plan::new();
+    for app in &sys.apps {
+        if app.is_empty() {
+            continue;
+        }
+        let it = sys.best_type_for_app(app.id, budget);
+        let rate = sys.rate(it);
+        // floor(B / c_it), but at least one VM so every app has a pool.
+        let num = ((budget / rate).floor() as usize).max(1);
+        for _ in 0..num {
+            plan.add_vm(sys, it);
+        }
+    }
+    let tasks: Vec<TaskId> = sys.tasks().iter().map(|t| t.id).collect();
+    assign(sys, &mut plan, &tasks);
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::paper::table1_system;
+
+    #[test]
+    fn pools_sized_by_whole_budget() {
+        let sys = table1_system(0.0);
+        let plan = initial(&sys, 40.0);
+        // A1 best: it_3 (10 s/u, cost 10, beats it_4 tie by order) -> 4 VMs
+        // A2 best: it_4 (9 s/u) -> 4 VMs; A3 best: it_3 (9 s/u) -> 4 VMs.
+        let mix = plan.vm_mix(&sys);
+        assert_eq!(mix[0], 0);
+        assert_eq!(mix[1], 0);
+        assert_eq!(mix[2] + mix[3], 12);
+        assert!(plan.validate_partition(&sys).is_ok());
+    }
+
+    #[test]
+    fn tiny_budget_still_yields_a_plan() {
+        let sys = table1_system(0.0);
+        let plan = initial(&sys, 1.0); // below every hourly price
+        assert!(plan.n_vms() >= 3);
+        assert!(plan.validate_partition(&sys).is_ok());
+    }
+
+    #[test]
+    fn tasks_go_to_their_apps_best_type() {
+        let sys = table1_system(0.0);
+        let plan = initial(&sys, 40.0);
+        // Every A2 task must sit on a memory-optimised VM (it_4, fastest).
+        for vm in &plan.vms {
+            for &t in vm.tasks() {
+                if sys.task(t).app.0 == 1 {
+                    assert_eq!(vm.it.0, 3, "A2 task on non-it4 VM");
+                }
+            }
+        }
+    }
+}

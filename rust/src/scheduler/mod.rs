@@ -1,0 +1,46 @@
+//! The paper's Section IV heuristic planner and Section V baselines.
+//!
+//! The planner is decomposed exactly as the paper presents it:
+//!
+//! | paper fn  | module       | purpose |
+//! |-----------|--------------|---------|
+//! | `ASSIGN`  | [`assign`]   | route tasks to VMs by (no-cost-increase, task speed, VM load) |
+//! | `BALANCE` | [`balance`]  | even out VM finish times without raising makespan/cost |
+//! | `INITIAL` | [`initial`]  | per-app best-type pools sized by the whole budget |
+//! | `REDUCE`  | [`reduce`]   | dismantle whole VMs (local/global) until the budget holds |
+//! | `ADD`     | [`add`]      | spend remaining budget on the best-performing affordable type |
+//! | `SPLIT`   | [`split`]    | keep VM run times under one billed hour (paper's *KEEP*) |
+//! | `REPLACE` | [`replace`]  | swap expensive VMs for more cheaper ones when it pays off |
+//! | Alg. 1    | [`find`]     | the fixed-point iteration tying the phases together |
+//!
+//! Baselines (Sec. V-A): [`baselines::minimise_individual`] (MI) and
+//! [`baselines::maximise_parallelism`] (MP).
+//!
+//! Future-work extensions (Sec. VI): [`deadline`] (deadline-constrained
+//! cost minimisation), [`dynamic`] (re-planning mid-execution) and
+//! [`nonclairvoyant`] (unknown task sizes).
+
+pub mod add;
+pub mod assign;
+pub mod balance;
+pub mod baselines;
+pub mod deadline;
+pub mod dynamic;
+pub mod find;
+pub mod initial;
+pub mod multistart;
+pub mod nonclairvoyant;
+pub mod reduce;
+pub mod replace;
+pub mod split;
+
+pub use add::add_vms;
+pub use assign::{assign, assign_restricted};
+pub use balance::balance;
+pub use baselines::{maximise_parallelism, minimise_individual};
+pub use find::{FindReport, Planner, PlannerConfig};
+pub use initial::initial;
+pub use multistart::{find_multistart, MultiStartConfig};
+pub use reduce::{reduce, ReduceMode};
+pub use replace::replace;
+pub use split::split;

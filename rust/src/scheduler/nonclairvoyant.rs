@@ -1,0 +1,160 @@
+//! Future-work extension (Sec. VI): **non-clairvoyant** scheduling —
+//! task execution times are unknown up front.
+//!
+//! Two pieces:
+//!
+//! 1. *Planning under estimated sizes.*  The scheduler is run on a
+//!    surrogate system in which every task of an application carries that
+//!    application's estimated mean size (optionally bootstrapped from a
+//!    sampled fraction, mirroring the paper's "test runs" suggestion).
+//!    Provisioning decisions (how many VMs of which types) transfer to
+//!    the real workload; only the task-to-VM pinning is discarded.
+//! 2. *Online dispatch.*  At run time tasks are pulled from per-app FIFO
+//!    queues by whichever VM goes idle first (self-scheduling /
+//!    work-stealing), which is the classic non-clairvoyant BoT policy.
+//!    The cloud simulator implements the clock; [`OnlineDispatcher`]
+//!    implements the policy.
+
+use std::collections::VecDeque;
+
+use crate::model::{AppId, InstanceTypeId, System, TaskId};
+use crate::util::Rng;
+
+/// Build the surrogate system: identical catalogue, every task size
+/// replaced by its app's estimate.  `sample_frac in (0, 1]` controls how
+/// many real sizes the estimator may look at (1.0 = oracle mean).
+pub fn surrogate_system(sys: &System, sample_frac: f64, rng: &mut Rng) -> System {
+    assert!(sample_frac > 0.0 && sample_frac <= 1.0);
+    let mut b = crate::model::SystemBuilder::new()
+        .overhead(sys.overhead)
+        .hour(sys.hour)
+        .billing(sys.billing);
+    for app in &sys.apps {
+        let n = app.len();
+        let k = ((n as f64 * sample_frac).ceil() as usize).clamp(1, n);
+        // Sample k sizes without replacement.
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        let mean: f64 = idx[..k].iter().map(|&i| app.task_sizes[i]).sum::<f64>() / k as f64;
+        b = b.app(&app.name, vec![mean.max(1e-6); n]);
+    }
+    for it in &sys.instance_types {
+        b = b.instance_type(&it.name, it.cost_per_hour, sys.perf.row(it.id).to_vec());
+    }
+    b.build().expect("surrogate inherits a valid parent")
+}
+
+/// Online self-scheduling dispatcher: per-application FIFO queues; an idle
+/// VM takes the next task of the application its instance type executes
+/// fastest among the non-empty queues.
+#[derive(Debug, Clone)]
+pub struct OnlineDispatcher {
+    queues: Vec<VecDeque<TaskId>>,
+}
+
+impl OnlineDispatcher {
+    /// Queue every task of the system, in id order.
+    pub fn new(sys: &System) -> Self {
+        let mut queues = vec![VecDeque::new(); sys.n_apps()];
+        for t in sys.tasks() {
+            queues[t.app.index()].push_back(t.id);
+        }
+        Self { queues }
+    }
+
+    /// Queue an explicit task set (e.g. a residual workload).
+    pub fn with_tasks(sys: &System, tasks: &[TaskId]) -> Self {
+        let mut queues = vec![VecDeque::new(); sys.n_apps()];
+        for &tid in tasks {
+            queues[sys.task(tid).app.index()].push_back(tid);
+        }
+        Self { queues }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.queues.iter().map(VecDeque::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// Return a task back (e.g. its VM failed mid-flight).
+    pub fn requeue(&mut self, sys: &System, task: TaskId) {
+        self.queues[sys.task(task).app.index()].push_front(task);
+    }
+
+    /// Next task for an idle VM of type `it`: the head of the non-empty
+    /// queue whose application this type runs fastest (per unit size).
+    pub fn next_for(&mut self, sys: &System, it: InstanceTypeId) -> Option<TaskId> {
+        let mut best: Option<(f64, usize)> = None;
+        for (ai, q) in self.queues.iter().enumerate() {
+            if q.is_empty() {
+                continue;
+            }
+            let speed = sys.perf.get(it, AppId(ai as u16));
+            if best.is_none_or(|(s, _)| speed < s) {
+                best = Some((speed, ai));
+            }
+        }
+        best.and_then(|(_, ai)| self.queues[ai].pop_front())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::paper::table1_system;
+
+    #[test]
+    fn oracle_surrogate_preserves_total_size() {
+        let sys = table1_system(0.0);
+        let mut rng = Rng::new(1);
+        let sur = surrogate_system(&sys, 1.0, &mut rng);
+        for (a, b) in sys.apps.iter().zip(&sur.apps) {
+            assert!((a.total_size() - b.total_size()).abs() < 1e-6);
+            assert_eq!(a.len(), b.len());
+        }
+    }
+
+    #[test]
+    fn sampled_surrogate_is_close() {
+        let sys = table1_system(0.0);
+        let mut rng = Rng::new(2);
+        let sur = surrogate_system(&sys, 0.2, &mut rng);
+        for (a, b) in sys.apps.iter().zip(&sur.apps) {
+            let rel = (a.total_size() - b.total_size()).abs() / a.total_size();
+            assert!(rel < 0.25, "estimate off by {rel}");
+        }
+    }
+
+    #[test]
+    fn dispatcher_prefers_fast_queue_and_drains() {
+        let sys = table1_system(0.0);
+        let mut d = OnlineDispatcher::new(&sys);
+        assert_eq!(d.remaining(), 750);
+        // it_4 runs A2 fastest (9 s/u) -> must draw from A2's queue first.
+        let t = d.next_for(&sys, InstanceTypeId(3)).unwrap();
+        assert_eq!(sys.task(t).app, AppId(1));
+        // it_3 runs A3 fastest (9 s/u).
+        let t = d.next_for(&sys, InstanceTypeId(2)).unwrap();
+        assert_eq!(sys.task(t).app, AppId(2));
+        // Drain fully.
+        let mut n = d.remaining();
+        while let Some(_t) = d.next_for(&sys, InstanceTypeId(0)) {
+            n -= 1;
+        }
+        assert_eq!(n, 0);
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn requeue_puts_task_back_at_front() {
+        let sys = table1_system(0.0);
+        let mut d = OnlineDispatcher::with_tasks(&sys, &[TaskId(0), TaskId(1)]);
+        let t = d.next_for(&sys, InstanceTypeId(0)).unwrap();
+        d.requeue(&sys, t);
+        assert_eq!(d.remaining(), 2);
+        assert_eq!(d.next_for(&sys, InstanceTypeId(0)).unwrap(), t);
+    }
+}

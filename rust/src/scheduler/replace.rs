@@ -1,0 +1,199 @@
+//! Sec. IV-G `REPLACE`: swap expensive VMs for more, cheaper ones.
+//!
+//! Fewer fast-but-expensive VMs can lose to many moderate-but-cheap ones
+//! (the paper's it_1-vs-it_2 example).  REPLACE picks `k` VMs of one
+//! instance type, frees their billed cost, buys as many VMs of a cheaper
+//! type as the freed cost plus any remaining budget affords (one-hour
+//! price assumption), re-assigns the victims' tasks onto the new VMs only,
+//! and commits the swap iff the budget still holds and the overall
+//! execution time strictly drops.
+//!
+//! All `(source type, cheaper type)` alternatives are materialised as
+//! candidate plans and scored **in one batch** through the
+//! [`PlanEvaluator`] — this is the planner hot path that the AOT-compiled
+//! XLA artifact accelerates in the coordinator.
+
+use crate::eval::PlanEvaluator;
+use crate::model::{Plan, System, TaskId};
+
+/// Evenly distribute `tasks` over the (same-typed) new VMs: longest
+/// processing time first onto the least-loaded VM.  The paper's Sec. IV-G
+/// example states "tasks are evenly distributed to both VMs"; LPT is the
+/// standard way to realise that for identical machines.
+fn lpt_spread(sys: &System, plan: &mut Plan, mut tasks: Vec<TaskId>, vms: &[usize]) {
+    let it = plan.vms[vms[0]].it;
+    tasks.sort_by(|&a, &b| sys.exec_time(it, b).total_cmp(&sys.exec_time(it, a)));
+    for t in tasks {
+        let dst = *vms
+            .iter()
+            .min_by(|&&a, &&b| plan.vms[a].work().total_cmp(&plan.vms[b].work()))
+            .expect("at least one new VM");
+        plan.vms[dst].push_task(sys, t);
+    }
+}
+
+/// Try one replacement round; commits at most one swap (the paper
+/// considers "only one instance type at a time").  Returns true if a swap
+/// was applied.
+pub fn replace(
+    sys: &System,
+    plan: &mut Plan,
+    budget: f64,
+    k: usize,
+    evaluator: &dyn PlanEvaluator,
+) -> bool {
+    if plan.is_empty() || k == 0 {
+        return false;
+    }
+    let before = plan.score(sys);
+    let remaining = (budget - before.cost).max(0.0);
+
+    // Enumerate candidate swaps.
+    let mut candidates: Vec<Plan> = Vec::new();
+    let mut present: Vec<bool> = vec![false; sys.n_types()];
+    for vm in &plan.vms {
+        present[vm.it.index()] = true;
+    }
+    for (src_idx, src_present) in present.iter().enumerate() {
+        if !src_present {
+            continue;
+        }
+        let src_it = sys.instance_types[src_idx].id;
+        let src_rate = sys.rate(src_it);
+        // k most expensive (longest-running) VMs of the source type.
+        let mut victims: Vec<usize> = plan
+            .vms
+            .iter()
+            .enumerate()
+            .filter(|(_, vm)| vm.it == src_it)
+            .map(|(i, _)| i)
+            .collect();
+        victims.sort_by(|&a, &b| plan.vms[b].exec(sys).total_cmp(&plan.vms[a].exec(sys)));
+        victims.truncate(k);
+        if victims.is_empty() {
+            continue;
+        }
+        let freed: f64 = victims.iter().map(|&i| plan.vms[i].cost(sys)).sum();
+
+        for cheap in &sys.instance_types {
+            if cheap.cost_per_hour >= src_rate {
+                continue; // only strictly cheaper replacements
+            }
+            let n_new = ((freed + remaining) / cheap.cost_per_hour).floor() as usize;
+            if n_new == 0 {
+                continue;
+            }
+            // Build the candidate: drop victims, add n_new cheap VMs,
+            // route the drained tasks onto the new VMs only.
+            let mut cand = plan.clone();
+            let mut drained = Vec::new();
+            for &v in &victims {
+                drained.extend(cand.vms[v].drain_tasks());
+            }
+            // Remove in descending index order to keep indices stable.
+            let mut vs = victims.clone();
+            vs.sort_unstable_by(|a, b| b.cmp(a));
+            for v in vs {
+                cand.remove_vm(v);
+            }
+            let new_ids: Vec<usize> = (0..n_new).map(|_| cand.add_vm(sys, cheap.id)).collect();
+            lpt_spread(sys, &mut cand, drained, &new_ids);
+            cand.drop_empty_vms();
+            candidates.push(cand);
+        }
+    }
+    if candidates.is_empty() {
+        return false;
+    }
+
+    // Batch-score all alternatives in one evaluator call.
+    let refs: Vec<&Plan> = candidates.iter().collect();
+    let scores = evaluator.eval_plans(sys, &refs);
+
+    // Commit the best feasible candidate that strictly reduces exec time.
+    let mut best: Option<(usize, f64)> = None;
+    for (i, s) in scores.iter().enumerate() {
+        if s.cost <= budget + 1e-9 && s.makespan < before.makespan - 1e-9
+            && best.as_ref().is_none_or(|(_, m)| s.makespan < *m) {
+                best = Some((i, s.makespan));
+            }
+    }
+    match best {
+        Some((i, _)) => {
+            *plan = candidates.swap_remove(i);
+            true
+        }
+        None => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::NativeEvaluator;
+    use crate::model::{InstanceTypeId, SystemBuilder, TaskId};
+
+    /// The paper's own Sec. IV-G example: it_1 = ($2, 8 s/u), it_2 =
+    /// ($1, 10 s/u), 10 tasks of size 1, budget $2.  One it_1 VM takes
+    /// 80 s; two it_2 VMs take 50 s.  REPLACE must find the swap.
+    fn paper_example() -> (System, Plan) {
+        let sys = SystemBuilder::new()
+            .app("a", vec![1.0; 10])
+            .instance_type("exp", 2.0, vec![8.0])
+            .instance_type("cheap", 1.0, vec![10.0])
+            .build()
+            .unwrap();
+        let mut plan = Plan::new();
+        let v = plan.add_vm(&sys, InstanceTypeId(0));
+        for t in 0..10 {
+            plan.vms[v].push_task(&sys, TaskId(t));
+        }
+        (sys, plan)
+    }
+
+    #[test]
+    fn paper_example_swap_found() {
+        let (sys, mut plan) = paper_example();
+        assert_eq!(plan.score(&sys).makespan, 80.0);
+        let swapped = replace(&sys, &mut plan, 2.0, 1, &NativeEvaluator);
+        assert!(swapped);
+        let score = plan.score(&sys);
+        assert_eq!(plan.vm_mix(&sys), vec![0, 2]);
+        assert_eq!(score.makespan, 50.0);
+        assert!(score.cost <= 2.0);
+        assert!(plan.validate_partition(&sys).is_ok());
+    }
+
+    #[test]
+    fn no_swap_when_budget_too_tight() {
+        let (sys, mut plan) = paper_example();
+        // Budget 1: freed cost 2 + remaining(-1 -> 0) buys 2 cheap VMs but
+        // the resulting cost 2 > budget 1 -> reject.
+        assert!(!replace(&sys, &mut plan, 1.0, 1, &NativeEvaluator));
+        assert_eq!(plan.vm_mix(&sys), vec![1, 0]);
+    }
+
+    #[test]
+    fn no_swap_when_cheaper_is_not_faster() {
+        let sys = SystemBuilder::new()
+            .app("a", vec![1.0; 4])
+            .instance_type("exp", 2.0, vec![8.0])
+            .instance_type("cheap", 1.0, vec![100.0])
+            .build()
+            .unwrap();
+        let mut plan = Plan::new();
+        let v = plan.add_vm(&sys, InstanceTypeId(0));
+        for t in 0..4 {
+            plan.vms[v].push_task(&sys, TaskId(t));
+        }
+        assert!(!replace(&sys, &mut plan, 2.0, 1, &NativeEvaluator));
+    }
+
+    #[test]
+    fn k_zero_or_empty_plan_is_noop() {
+        let (sys, mut plan) = paper_example();
+        assert!(!replace(&sys, &mut plan, 2.0, 0, &NativeEvaluator));
+        let mut empty = Plan::new();
+        assert!(!replace(&sys, &mut empty, 2.0, 1, &NativeEvaluator));
+    }
+}

@@ -1,0 +1,14 @@
+//! In-tree substrates that a comparable project would take as
+//! dependencies; this workspace builds fully offline, so they are
+//! implemented from scratch:
+//!
+//! * [`rng`] — deterministic seedable PRNG (SplitMix64 / xoshiro256**)
+//!   with uniform/normal/log-normal sampling, shuffling and choice;
+//! * [`json`] — a small JSON value model, parser and writer used by the
+//!   config loader, the coordinator wire protocol and the report files.
+
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

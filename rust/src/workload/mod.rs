@@ -1,0 +1,16 @@
+//! Workload construction: the paper's exact evaluation setup and
+//! parameterised generators for scaling / robustness studies.
+//!
+//! * [`paper`] — Table I instance catalogue, the 3 x 250-task application
+//!   mix and the budget sweep of Section V;
+//! * [`generator`] — seeded random systems (apps, task-size
+//!   distributions, instance catalogues, performance matrices) used by
+//!   the property tests, the scaling benches and the coordinator demo
+//!   traffic.
+
+pub mod generator;
+pub mod paper;
+pub mod traces;
+
+pub use generator::{SizeDistribution, WorkloadGenerator, WorkloadSpec};
+pub use traces::{replay, ReplayRow, Trace, TraceEntry};

@@ -1,0 +1,225 @@
+//! Workload traces: persist and replay multi-campaign arrival streams.
+//!
+//! Grid/cloud BoT workloads arrive in bursts over time (Iosup & Epema,
+//! the paper's ref. [1]).  A [`Trace`] is a sequence of campaigns — each
+//! an arrival time plus a full system description and budget — that the
+//! replay driver feeds to the planner/coordinator one by one.  Traces
+//! serialise to JSON (the same schema the `config` module uses per
+//! system) so benchmark inputs can be versioned and shared.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config;
+use crate::model::System;
+use crate::util::{Json, Rng};
+use crate::workload::{SizeDistribution, WorkloadGenerator, WorkloadSpec};
+
+/// One campaign in a trace.
+#[derive(Debug, Clone)]
+pub struct TraceEntry {
+    /// Arrival time (seconds from trace start).
+    pub at: f64,
+    pub budget: f64,
+    pub system: System,
+}
+
+/// A replayable stream of campaigns.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub entries: Vec<TraceEntry>,
+}
+
+impl Trace {
+    /// Synthesize a bursty arrival trace: `n_campaigns` Poisson arrivals
+    /// (exponential gaps with the given mean), each with a freshly
+    /// generated system of varying shape and a budget drawn around that
+    /// system's feasibility floor.
+    pub fn synthetic(seed: u64, n_campaigns: usize, mean_gap: f64) -> Trace {
+        let mut rng = Rng::new(seed);
+        let mut gen = WorkloadGenerator::new(seed.wrapping_mul(31).wrapping_add(7));
+        let mut t = 0.0;
+        let mut entries = Vec::with_capacity(n_campaigns);
+        for i in 0..n_campaigns {
+            t += rng.exponential(1.0 / mean_gap.max(1e-9));
+            let spec = WorkloadSpec {
+                n_apps: 1 + (rng.below(4) as usize),
+                n_types: 2 + (rng.below(4) as usize),
+                tasks_per_app: 30 + (rng.below(120) as usize),
+                sizes: if i % 2 == 0 {
+                    SizeDistribution::EquallySpaced { lo: 1, hi: 5 }
+                } else {
+                    SizeDistribution::LogNormal { mu: 0.7, sigma: 0.5 }
+                },
+                overhead: rng.uniform(0.0, 120.0),
+                ..Default::default()
+            };
+            let system = gen.system(&spec);
+            let floor = WorkloadGenerator::feasible_budget(&system, 1.0);
+            let budget = (floor * rng.uniform(1.1, 2.2)).ceil();
+            entries.push(TraceEntry { at: t, budget, system });
+        }
+        Trace { entries }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "campaigns",
+            Json::arr(self.entries.iter().map(|e| {
+                Json::obj(vec![
+                    ("at", Json::num(e.at)),
+                    ("budget", Json::num(e.budget)),
+                    ("system", config::system_to_json(&e.system)),
+                ])
+            })),
+        )])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Trace> {
+        let arr = j
+            .get("campaigns")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("trace: missing campaigns[]"))?;
+        let mut entries = Vec::with_capacity(arr.len());
+        let mut last_at = f64::NEG_INFINITY;
+        for (i, e) in arr.iter().enumerate() {
+            let at = e
+                .get("at")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("trace campaign {i}: missing at"))?;
+            if at < last_at {
+                return Err(anyhow!("trace campaign {i}: arrivals not sorted"));
+            }
+            last_at = at;
+            let budget = e
+                .get("budget")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("trace campaign {i}: missing budget"))?;
+            let system = config::system_from_json(
+                e.get("system").ok_or_else(|| anyhow!("trace campaign {i}: missing system"))?,
+            )
+            .with_context(|| format!("trace campaign {i}"))?;
+            entries.push(TraceEntry { at, budget, system });
+        }
+        Ok(Trace { entries })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Trace> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Trace::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// Replay outcome for one campaign.
+#[derive(Debug, Clone)]
+pub struct ReplayRow {
+    pub at: f64,
+    pub budget: f64,
+    pub makespan: f64,
+    pub cost: f64,
+    pub feasible: bool,
+    /// Completion wall-clock (arrival + planning-ignored makespan).
+    pub finish_at: f64,
+}
+
+/// Replay a trace through the planner (campaigns are independent — each
+/// gets its own fleet, as in the paper's model).
+pub fn replay(trace: &Trace) -> Vec<ReplayRow> {
+    trace
+        .entries
+        .iter()
+        .map(|e| {
+            let r = crate::scheduler::Planner::new(&e.system).find(e.budget);
+            ReplayRow {
+                at: e.at,
+                budget: e.budget,
+                makespan: r.score.makespan,
+                cost: r.score.cost,
+                feasible: r.feasible,
+                finish_at: e.at + r.score.makespan,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_trace_is_sorted_and_deterministic() {
+        let t1 = Trace::synthetic(5, 10, 600.0);
+        let t2 = Trace::synthetic(5, 10, 600.0);
+        assert_eq!(t1.entries.len(), 10);
+        for w in t1.entries.windows(2) {
+            assert!(w[1].at >= w[0].at);
+        }
+        for (a, b) in t1.entries.iter().zip(&t2.entries) {
+            assert_eq!(a.at, b.at);
+            assert_eq!(a.budget, b.budget);
+            assert_eq!(a.system.tasks().len(), b.system.tasks().len());
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = Trace::synthetic(7, 4, 300.0);
+        let j = t.to_json();
+        let back = Trace::from_json(&j).unwrap();
+        assert_eq!(back.entries.len(), 4);
+        for (a, b) in t.entries.iter().zip(&back.entries) {
+            assert_eq!(a.at, b.at);
+            assert_eq!(a.budget, b.budget);
+            assert_eq!(a.system.tasks().len(), b.system.tasks().len());
+            assert_eq!(a.system.n_types(), b.system.n_types());
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let t = Trace::synthetic(9, 3, 100.0);
+        let dir = std::env::temp_dir().join("botsched_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        t.save(&path).unwrap();
+        let back = Trace::load(&path).unwrap();
+        assert_eq!(back.entries.len(), 3);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn unsorted_trace_rejected() {
+        let j = Json::parse(
+            r#"{"campaigns":[
+                {"at": 10, "budget": 5, "system": {"apps":[{"task_sizes":[1]}],
+                  "instance_types":[{"cost_per_hour":5,"perf":[10]}]}},
+                {"at": 5, "budget": 5, "system": {"apps":[{"task_sizes":[1]}],
+                  "instance_types":[{"cost_per_hour":5,"perf":[10]}]}}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(Trace::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn replay_produces_sane_rows() {
+        let t = Trace::synthetic(11, 5, 200.0);
+        let rows = replay(&t);
+        assert_eq!(rows.len(), 5);
+        for (r, e) in rows.iter().zip(&t.entries) {
+            assert_eq!(r.at, e.at);
+            assert!(r.finish_at >= r.at);
+            assert!(r.makespan > 0.0);
+            if r.feasible {
+                assert!(r.cost <= r.budget + 1e-9);
+            }
+        }
+        // Generated budgets are >= 1.1x the floor, so most should be feasible.
+        assert!(rows.iter().filter(|r| r.feasible).count() >= 3);
+    }
+}

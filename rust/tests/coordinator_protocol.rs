@@ -1,0 +1,148 @@
+//! End-to-end coordinator tests over real sockets: start the server on an
+//! ephemeral port, drive the JSON-line protocol, verify responses and
+//! metrics, and exercise concurrent clients against the batching
+//! evaluator.
+
+use std::time::Duration;
+
+use botsched::coordinator::server::request;
+use botsched::coordinator::{Coordinator, CoordinatorConfig};
+use botsched::util::Json;
+
+fn start(batching: bool) -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        addr: "127.0.0.1:0".into(),
+        use_xla: true, // falls back to native when artifacts absent
+        batching,
+        batch_wait: Duration::from_millis(1),
+    })
+    .expect("coordinator starts")
+}
+
+#[test]
+fn ping_plan_stats_roundtrip() {
+    let c = start(true);
+    let addr = c.local_addr;
+
+    let r = request(&addr, r#"{"op":"ping"}"#).unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+
+    let r = request(&addr, r#"{"op":"plan","budget":80}"#).unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    let makespan = r.get("makespan").unwrap().as_f64().unwrap();
+    assert!(makespan > 0.0 && makespan < 10.0 * 3600.0);
+    assert_eq!(r.get("feasible"), Some(&Json::Bool(true)));
+
+    let r = request(&addr, r#"{"op":"stats"}"#).unwrap();
+    let reqs = r.path(&["stats", "requests"]).unwrap().as_f64().unwrap();
+    assert!(reqs >= 2.0);
+
+    c.shutdown();
+}
+
+#[test]
+fn malformed_requests_keep_connection_alive() {
+    let c = start(false);
+    let addr = c.local_addr;
+
+    let r = request(&addr, "this is not json").unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    assert!(r.get("error").unwrap().as_str().unwrap().contains("bad json"));
+
+    let r = request(&addr, r#"{"op":"unknown_op"}"#).unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+
+    // Server is still healthy.
+    let r = request(&addr, r#"{"op":"ping"}"#).unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+
+    c.shutdown();
+}
+
+#[test]
+fn concurrent_clients_all_served() {
+    let c = start(true);
+    let addr = c.local_addr;
+
+    let mut handles = Vec::new();
+    for i in 0..6u64 {
+        handles.push(std::thread::spawn(move || {
+            let budget = 60.0 + (i as f64) * 5.0;
+            let line = format!(r#"{{"op":"plan","budget":{budget}}}"#);
+            request(&addr, &line).unwrap()
+        }));
+    }
+    let responses: Vec<Json> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(responses.len(), 6);
+    for r in &responses {
+        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "response {r}");
+        assert!(r.get("makespan").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    c.shutdown();
+}
+
+#[test]
+fn simulate_campaign_estimate_over_socket() {
+    let c = start(false);
+    let addr = c.local_addr;
+
+    let r = request(
+        &addr,
+        r#"{"op":"simulate","budget":80,"noise":{"task_sigma":0.1},"seed":5}"#,
+    )
+    .unwrap();
+    assert_eq!(r.get("completed").unwrap().as_f64(), Some(750.0));
+    assert_eq!(r.get("stranded").unwrap().as_f64(), Some(0.0));
+
+    let r = request(
+        &addr,
+        r#"{"op":"campaign","budget":160,"noise":{"mean_lifetime":3000},"seed":1,"max_rounds":6}"#,
+    )
+    .unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+
+    let r = request(&addr, r#"{"op":"estimate_perf","per_cell":5}"#).unwrap();
+    assert!(r.get("max_rel_error").unwrap().as_f64().unwrap() < 1e-6);
+
+    c.shutdown();
+}
+
+#[test]
+fn shutdown_op_stops_listener() {
+    let c = start(false);
+    let addr = c.local_addr;
+    let r = request(&addr, r#"{"op":"shutdown"}"#).unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    c.wait(); // must return because the accept loop observed the stop flag
+
+    // New connections must now fail (allow a beat for the socket to close).
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(request(&addr, r#"{"op":"ping"}"#).is_err());
+}
+
+#[test]
+fn sweep_over_socket_matches_library() {
+    let c = start(false);
+    let addr = c.local_addr;
+    let r = request(&addr, r#"{"op":"sweep","budgets":[60,80]}"#).unwrap();
+    let rows = r.path(&["sweep", "rows"]).unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 6);
+
+    // Compare with the in-process sweep.
+    let sys = botsched::workload::paper::table1_system(0.0);
+    let local =
+        botsched::analysis::run_sweep(&sys, &[60.0, 80.0], &botsched::eval::NativeEvaluator);
+    for row in rows {
+        let approach = row.get("approach").unwrap().as_str().unwrap();
+        let budget = row.get("budget").unwrap().as_f64().unwrap();
+        let makespan = row.get("makespan").unwrap().as_f64().unwrap();
+        let want = local.row(approach, budget).unwrap();
+        assert!(
+            (makespan - want.score.makespan).abs() / want.score.makespan < 1e-3,
+            "{approach}@{budget}: {makespan} vs {}",
+            want.score.makespan
+        );
+    }
+    c.shutdown();
+}

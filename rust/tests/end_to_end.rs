@@ -1,0 +1,138 @@
+//! Whole-stack integration: plan with the (XLA-backed when built)
+//! evaluator, execute on the simulated cloud, survive failures via
+//! dynamic re-planning, and bootstrap the performance matrix from test
+//! runs — the full lifecycle a downstream user runs.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use botsched::cloudsim::{
+    run_campaign, sample_runs, CampaignSpec, NoiseModel, SimConfig, Simulator,
+};
+use botsched::coordinator::{BatchingEvaluator, Metrics};
+use botsched::eval::{NativeEvaluator, PlanEvaluator};
+use botsched::model::{PerfMatrix, System, SystemBuilder};
+use botsched::runtime::XlaEvaluator;
+use botsched::scheduler::{deadline, Planner};
+use botsched::workload::paper::{table1_system, BUDGETS};
+
+fn evaluator() -> Arc<dyn PlanEvaluator> {
+    match XlaEvaluator::load() {
+        Ok(x) => Arc::new(x),
+        Err(_) => Arc::new(NativeEvaluator),
+    }
+}
+
+#[test]
+fn paper_workload_full_lifecycle() {
+    let sys = table1_system(0.0);
+    let eval = evaluator();
+
+    // 1. Plan at a feasible budget.
+    let report = Planner::with_evaluator(&sys, eval.as_ref()).find(80.0);
+    assert!(report.feasible);
+    assert!(report.plan.validate_partition(&sys).is_ok());
+
+    // 2. Execute on the clean simulated cloud: prediction must hold.
+    let sim = Simulator::run_plan(&sys, &report.plan, &SimConfig::default());
+    assert!(sim.all_done());
+    assert!((sim.makespan - report.score.makespan).abs() / report.score.makespan < 1e-3);
+    assert!((sim.cost - report.score.cost).abs() < 1e-6);
+
+    // 3. Execute on a jittery cloud: everything still completes and the
+    //    makespan lands near the prediction.
+    let jitter = SimConfig { noise: NoiseModel::jitter(0.08), seed: 4 };
+    let sim = Simulator::run_plan(&sys, &report.plan, &jitter);
+    assert!(sim.all_done());
+    let rel = (sim.makespan - report.score.makespan).abs() / report.score.makespan;
+    assert!(rel < 0.30, "jittered makespan off by {rel}");
+}
+
+#[test]
+fn failing_cloud_campaign_completes_within_relaxed_budget() {
+    let sys = table1_system(0.0);
+    let mut spec = CampaignSpec::new(220.0).with_reserve(0.5);
+    spec.sim.noise = NoiseModel::with_failures(0.05, 2800.0);
+    spec.sim.seed = 17;
+    let out = run_campaign(&sys, &spec);
+    assert!(out.complete, "campaign did not finish");
+    assert!(out.within_budget, "spent {} of 220", out.spent);
+    let done: usize = out.rounds.iter().map(|r| r.completed.len()).sum();
+    assert_eq!(done, 750);
+}
+
+#[test]
+fn perf_matrix_bootstrap_then_plan_is_sound() {
+    // The paper's Sec. III-A pipeline: estimate P from test runs, plan on
+    // the estimate, execute on the *true* system.
+    let truth = table1_system(0.0);
+    let obs = sample_runs(&truth, 25, &NoiseModel::jitter(0.05), 21);
+    let prior = vec![15.0; 12];
+    let est =
+        botsched::cloudsim::sampling::estimate_perf_native(&truth, &obs, &prior, 1e-6);
+
+    // Build the estimated system.
+    let mut b = SystemBuilder::new();
+    for app in &truth.apps {
+        b = b.app(&app.name, app.task_sizes.clone());
+    }
+    for it in &truth.instance_types {
+        let row: Vec<f64> =
+            (0..truth.n_apps()).map(|a| est[it.id.index() * truth.n_apps() + a]).collect();
+        b = b.instance_type(&it.name, it.cost_per_hour, row);
+    }
+    let believed: System = b.build().unwrap();
+    assert_eq!(believed.perf.n_types(), truth.perf.n_types());
+
+    // Plan on beliefs, execute on truth.
+    let report = Planner::new(&believed).find(80.0);
+    let sim = Simulator::run_plan(&truth, &report.plan, &SimConfig::default());
+    assert!(sim.all_done());
+    let rel = (sim.makespan - report.score.makespan).abs() / report.score.makespan;
+    assert!(rel < 0.15, "belief/truth divergence {rel}");
+}
+
+#[test]
+fn deadline_extension_end_to_end() {
+    let sys = table1_system(0.0);
+    let r = deadline::min_cost_for_deadline(&sys, 2.0 * 3600.0, 160.0);
+    let rep = r.report.expect("2h deadline satisfiable under 160");
+    let sim = Simulator::run_plan(&sys, &rep.plan, &SimConfig::default());
+    assert!(sim.all_done());
+    assert!(sim.makespan <= 2.0 * 3600.0 + 1e-6);
+}
+
+#[test]
+fn batched_xla_planner_sweep_matches_unbatched() {
+    let sys = table1_system(0.0);
+    let base = evaluator();
+    let metrics = Arc::new(Metrics::new());
+    let batched = BatchingEvaluator::new(
+        Arc::clone(&base),
+        64,
+        Duration::from_millis(1),
+        Arc::clone(&metrics),
+    );
+    for &b in &BUDGETS[..4] {
+        let direct = Planner::with_evaluator(&sys, base.as_ref()).find(b);
+        let via_batch = Planner::with_evaluator(&sys, &batched).find(b);
+        assert!(
+            (direct.score.makespan - via_batch.score.makespan).abs() < 1e-3,
+            "budget {b}: {} vs {}",
+            direct.score.makespan,
+            via_batch.score.makespan
+        );
+    }
+    let snap = metrics.snapshot();
+    assert!(snap.get("eval_batches").unwrap().as_f64().unwrap() >= 1.0);
+}
+
+#[test]
+fn perf_matrix_validation_rejects_garbage() {
+    // End-to-end guardrail: a corrupted estimate must be rejected at
+    // system construction, not silently planned on.
+    let r = std::panic::catch_unwind(|| {
+        PerfMatrix::new(1, 1, vec![f64::NAN]);
+    });
+    assert!(r.is_err());
+}

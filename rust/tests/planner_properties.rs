@@ -1,0 +1,297 @@
+//! Property-based tests over randomly generated problem instances.
+//!
+//! The offline build has no proptest crate, so this is a seeded-sweep
+//! mini-framework: each property runs over a few dozen generated systems
+//! (deterministic seeds — failures reproduce exactly) and asserts the
+//! paper's invariants:
+//!
+//! * eq. 3/4 — every plan returned by any entry point partitions `T`;
+//! * eq. 9  — the `feasible` flag always matches `cost <= B`;
+//! * phase monotonicity — REDUCE never raises cost, BALANCE never raises
+//!   makespan (within its cap), SPLIT respects budget;
+//! * the LP cost floor is never beaten (no plan is cheaper than the
+//!   relaxation optimum);
+//! * the noiseless simulator agrees with the analytic score.
+
+use botsched::analysis::bounds::{fractional_cost_floor, makespan_floor};
+use botsched::cloudsim::{SimConfig, Simulator};
+use botsched::eval::{NativeEvaluator, PlanEvaluator};
+use botsched::model::BillingPolicy;
+use botsched::scheduler::{
+    balance, maximise_parallelism, minimise_individual, reduce, split, Planner, ReduceMode,
+};
+use botsched::workload::{SizeDistribution, WorkloadGenerator, WorkloadSpec};
+
+/// Deterministic family of test systems: varied app/type counts, size
+/// distributions, overheads and billing policies.
+fn cases(n: usize) -> impl Iterator<Item = (u64, botsched::model::System, f64)> {
+    (0..n as u64).map(|seed| {
+        let mut gen = WorkloadGenerator::new(seed * 7919 + 13);
+        let spec = WorkloadSpec {
+            n_apps: 1 + (seed % 4) as usize,
+            n_types: 2 + (seed % 5) as usize,
+            tasks_per_app: 20 + (seed % 3) as usize * 40,
+            sizes: match seed % 3 {
+                0 => SizeDistribution::EquallySpaced { lo: 1, hi: 5 },
+                1 => SizeDistribution::Uniform { lo: 0.5, hi: 8.0 },
+                _ => SizeDistribution::LogNormal { mu: 0.8, sigma: 0.6 },
+            },
+            overhead: (seed % 4) as f64 * 45.0,
+            billing: if seed % 5 == 4 { BillingPolicy::PerSecond } else { BillingPolicy::HourlyCeil },
+            ..Default::default()
+        };
+        let sys = gen.system(&spec);
+        let budget = WorkloadGenerator::feasible_budget(&sys, 1.2 + (seed % 3) as f64 * 0.6);
+        (seed, sys, budget)
+    })
+}
+
+#[test]
+fn prop_find_returns_valid_partition_and_consistent_feasibility() {
+    for (seed, sys, budget) in cases(40) {
+        let report = Planner::new(&sys).find(budget);
+        assert!(
+            report.plan.validate_partition(&sys).is_ok(),
+            "seed {seed}: partition violated: {:?}",
+            report.plan.validate_partition(&sys)
+        );
+        let rescore = report.plan.score(&sys);
+        assert!(
+            (rescore.makespan - report.score.makespan).abs() < 1e-6,
+            "seed {seed}: stored makespan drifted"
+        );
+        assert_eq!(
+            report.feasible,
+            rescore.satisfies(budget),
+            "seed {seed}: feasible flag inconsistent (cost {} budget {budget})",
+            rescore.cost
+        );
+    }
+}
+
+#[test]
+fn prop_baselines_partition_and_heuristic_competitive() {
+    // Per-instance the heuristic may lose to a lucky baseline (it is a
+    // heuristic; the paper's claim is about averages), but it must stay
+    // within 1.5x on every case and win on average across the family.
+    let mut ratios_mi = Vec::new();
+    let mut ratios_mp = Vec::new();
+    for (seed, sys, budget) in cases(30) {
+        let ours = Planner::new(&sys).find(budget);
+        for (name, plan) in [
+            ("mi", minimise_individual(&sys, budget)),
+            ("mp", maximise_parallelism(&sys, budget)),
+        ] {
+            assert!(plan.validate_partition(&sys).is_ok(), "seed {seed}: {name} partition");
+            let base = plan.score(&sys);
+            if ours.feasible && base.satisfies(budget) {
+                let ratio = ours.score.makespan / base.makespan;
+                assert!(
+                    ratio <= 1.5,
+                    "seed {seed}: heuristic {} vs {name} {} (ratio {ratio:.2})",
+                    ours.score.makespan,
+                    base.makespan
+                );
+                if name == "mi" {
+                    ratios_mi.push(ratio);
+                } else {
+                    ratios_mp.push(ratio);
+                }
+            }
+        }
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    assert!(!ratios_mi.is_empty() && !ratios_mp.is_empty());
+    assert!(mean(&ratios_mi) <= 1.0 + 1e-9, "loses to MI on average: {}", mean(&ratios_mi));
+    assert!(mean(&ratios_mp) <= 1.0 + 1e-9, "loses to MP on average: {}", mean(&ratios_mp));
+}
+
+#[test]
+fn prop_no_plan_beats_the_lp_cost_floor() {
+    for (seed, sys, budget) in cases(30) {
+        let floor = fractional_cost_floor(&sys);
+        for plan in [
+            Planner::new(&sys).find(budget).plan,
+            minimise_individual(&sys, budget),
+            maximise_parallelism(&sys, budget),
+        ] {
+            let cost = plan.cost(&sys);
+            assert!(
+                cost >= floor - 1e-6,
+                "seed {seed}: cost {cost} beats LP floor {floor} — impossible"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_no_feasible_plan_beats_the_makespan_floor() {
+    for (seed, sys, budget) in cases(30) {
+        let floor = makespan_floor(&sys, budget);
+        let report = Planner::new(&sys).find(budget);
+        if report.feasible {
+            assert!(
+                report.score.makespan >= floor - 1e-6,
+                "seed {seed}: makespan {} beats floor {floor} at budget {budget} — bound broken",
+                report.score.makespan
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_reduce_monotone_and_balance_safe() {
+    for (seed, sys, budget) in cases(25) {
+        let mut plan = botsched::scheduler::initial(&sys, budget);
+        let before_cost = plan.cost(&sys);
+        reduce(&sys, &mut plan, budget, ReduceMode::Local);
+        let mid_cost = plan.cost(&sys);
+        assert!(mid_cost <= before_cost + 1e-9, "seed {seed}: local reduce raised cost");
+        reduce(&sys, &mut plan, budget, ReduceMode::Global);
+        let after_cost = plan.cost(&sys);
+        assert!(after_cost <= mid_cost + 1e-9, "seed {seed}: global reduce raised cost");
+
+        let before = plan.score(&sys);
+        let cap = before.cost.max(budget);
+        balance(&sys, &mut plan, cap);
+        let after = plan.score(&sys);
+        assert!(after.makespan <= before.makespan + 1e-9, "seed {seed}: balance raised makespan");
+        assert!(after.cost <= cap + 1e-9, "seed {seed}: balance broke the cap");
+
+        split(&sys, &mut plan, cap);
+        assert!(plan.cost(&sys) <= cap + 1e-9, "seed {seed}: split broke the budget");
+        assert!(plan.validate_partition(&sys).is_ok(), "seed {seed}: pipeline partition");
+    }
+}
+
+#[test]
+fn prop_noiseless_sim_matches_analytic_everywhere() {
+    for (seed, sys, budget) in cases(25) {
+        let report = Planner::new(&sys).find(budget);
+        let sim = Simulator::run_plan(&sys, &report.plan, &SimConfig::default());
+        assert!(sim.all_done(), "seed {seed}: stranded tasks without failures");
+        assert!(
+            (sim.makespan - report.score.makespan).abs() < 1e-6,
+            "seed {seed}: sim makespan {} vs analytic {}",
+            sim.makespan,
+            report.score.makespan
+        );
+        assert!(
+            (sim.cost - report.score.cost).abs() < 1e-6,
+            "seed {seed}: sim cost {} vs analytic {}",
+            sim.cost,
+            report.score.cost
+        );
+    }
+}
+
+#[test]
+fn prop_native_eval_agrees_with_plan_score() {
+    for (seed, sys, budget) in cases(25) {
+        let plan = Planner::new(&sys).find(budget).plan;
+        let direct = plan.score(&sys);
+        let via = NativeEvaluator.eval_plan(&sys, &plan);
+        assert!(
+            (direct.makespan - via.makespan).abs() < 1e-9
+                && (direct.cost - via.cost).abs() < 1e-9,
+            "seed {seed}: evaluator disagrees with Plan::score"
+        );
+    }
+}
+
+#[test]
+fn prop_more_budget_never_hurts_much() {
+    // Monotonicity (soft): doubling the budget should never make the
+    // returned makespan materially worse.
+    for (seed, sys, budget) in cases(20) {
+        let lo = Planner::new(&sys).find(budget);
+        let hi = Planner::new(&sys).find(budget * 2.0);
+        if lo.feasible && hi.feasible {
+            assert!(
+                hi.score.makespan <= lo.score.makespan * 1.10 + 1e-6,
+                "seed {seed}: budget {budget} -> {}, 2x budget -> {}",
+                lo.score.makespan,
+                hi.score.makespan
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// util::json robustness properties (the wire codec must never panic and
+// must round-trip every value it can produce).
+
+use botsched::util::{Json, Rng};
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 1),
+        2 => {
+            // Finite, JSON-representable numbers only.
+            let x = rng.uniform(-1e9, 1e9);
+            Json::Num((x * 100.0).round() / 100.0)
+        }
+        3 => {
+            let len = rng.below(12) as usize;
+            let s: String = (0..len)
+                .map(|_| {
+                    let c = rng.below(128) as u8;
+                    if c.is_ascii_graphic() || c == b' ' { c as char } else { '\u{00e9}' }
+                })
+                .collect();
+            Json::str(s)
+        }
+        4 => Json::arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1))),
+        _ => Json::Obj(
+            (0..rng.below(5))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrips_random_values() {
+    let mut rng = Rng::new(2026);
+    for _ in 0..500 {
+        let v = random_json(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("self-produced json failed to parse: {e} in {text}"));
+        assert_eq!(back, v, "roundtrip mismatch for {text}");
+    }
+}
+
+#[test]
+fn prop_json_parser_never_panics_on_garbage() {
+    let mut rng = Rng::new(7);
+    for _ in 0..2000 {
+        let len = rng.below(40) as usize;
+        let bytes: Vec<u8> = (0..len)
+            .map(|_| b"{}[]\",:0123456789.truefalsn \t\n\"e+-"[rng.below(33) as usize])
+            .collect();
+        if let Ok(text) = std::str::from_utf8(&bytes) {
+            let _ = Json::parse(text); // must return, never panic
+        }
+    }
+}
+
+#[test]
+fn prop_json_rejects_truncations_of_valid_docs() {
+    let mut rng = Rng::new(13);
+    for _ in 0..100 {
+        let v = random_json(&mut rng, 2);
+        let text = v.to_string();
+        if text.len() < 2 {
+            continue;
+        }
+        // Any strict prefix either parses to a *different* value (e.g.
+        // a shorter number literal) or errors — it must never panic.
+        let mut cut = 1 + rng.below((text.len() - 1) as u64) as usize;
+        while cut < text.len() && !text.is_char_boundary(cut) {
+            cut += 1;
+        }
+        let _ = Json::parse(&text[..cut.min(text.len())]);
+    }
+}

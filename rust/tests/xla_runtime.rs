@@ -1,0 +1,190 @@
+//! Differential tests: the PJRT-backed evaluators must agree with the
+//! exact rust-native implementations on the same inputs.
+//!
+//! These tests require `make artifacts` to have run (they are part of
+//! `make test`); they skip silently when artifacts are absent so plain
+//! `cargo test` works in a fresh checkout.
+
+use botsched::cloudsim::{sample_runs, NoiseModel};
+use botsched::eval::{NativeEvaluator, PlanEvaluator};
+use botsched::model::{BillingPolicy, SystemBuilder};
+use botsched::runtime::{ArtifactMeta, XlaEvaluator, XlaPerfEstimator};
+use botsched::scheduler::{maximise_parallelism, minimise_individual, Planner};
+use botsched::workload::paper::{table1_system, BUDGETS};
+use botsched::workload::{WorkloadGenerator, WorkloadSpec};
+
+fn xla() -> Option<XlaEvaluator> {
+    let meta = ArtifactMeta::load().ok()?;
+    Some(XlaEvaluator::load_with(meta).expect("artifact compiles on PJRT CPU"))
+}
+
+fn assert_close(a: f64, b: f64, rel: f64, what: &str) {
+    let denom = a.abs().max(b.abs()).max(1.0);
+    assert!((a - b).abs() / denom < rel, "{what}: xla {a} vs native {b}");
+}
+
+#[test]
+fn xla_matches_native_on_paper_plans() {
+    let Some(xla) = xla() else { return };
+    let sys = table1_system(42.0);
+    for &b in BUDGETS {
+        for plan in [
+            Planner::new(&sys).find(b).plan,
+            minimise_individual(&sys, b),
+            maximise_parallelism(&sys, b),
+        ] {
+            let n = NativeEvaluator.eval_plan(&sys, &plan);
+            let x = xla.eval_plan(&sys, &plan);
+            assert_close(x.makespan, n.makespan, 1e-4, "makespan");
+            assert_close(x.cost, n.cost, 1e-6, "cost");
+        }
+    }
+}
+
+#[test]
+fn xla_matches_native_on_random_systems() {
+    let Some(xla) = xla() else { return };
+    let mut gen = WorkloadGenerator::new(123);
+    for seed in 0..6u64 {
+        let spec = WorkloadSpec {
+            n_apps: 1 + (seed as usize % 5),
+            n_types: 2 + (seed as usize % 4),
+            tasks_per_app: 40,
+            overhead: (seed as f64) * 17.0,
+            ..Default::default()
+        };
+        let sys = gen.system(&spec);
+        let budget = WorkloadGenerator::feasible_budget(&sys, 1.5);
+        let plans = [
+            Planner::new(&sys).find(budget).plan,
+            minimise_individual(&sys, budget),
+            maximise_parallelism(&sys, budget),
+        ];
+        let refs: Vec<_> = plans.iter().collect();
+        let native = NativeEvaluator.eval_plans(&sys, &refs);
+        let xs = xla.eval_plans(&sys, &refs);
+        for (x, n) in xs.iter().zip(&native) {
+            assert_close(x.makespan, n.makespan, 1e-4, "makespan");
+            assert_close(x.cost, n.cost, 1e-5, "cost");
+        }
+    }
+}
+
+#[test]
+fn xla_batches_larger_than_k() {
+    let Some(xla) = xla() else { return };
+    let sys = table1_system(0.0);
+    // 150 candidates > K=64 forces multi-chunk execution.
+    let plans: Vec<_> = (0..150)
+        .map(|i| maximise_parallelism(&sys, 40.0 + (i % 10) as f64 * 5.0))
+        .collect();
+    let refs: Vec<_> = plans.iter().collect();
+    let native = NativeEvaluator.eval_plans(&sys, &refs);
+    let xs = xla.eval_plans(&sys, &refs);
+    assert_eq!(xs.len(), 150);
+    for (x, n) in xs.iter().zip(&native) {
+        assert_close(x.makespan, n.makespan, 1e-4, "makespan");
+        assert_close(x.cost, n.cost, 1e-5, "cost");
+    }
+}
+
+#[test]
+fn per_second_billing_falls_back_to_native() {
+    let Some(xla) = xla() else { return };
+    let sys = SystemBuilder::new()
+        .app("a", vec![100.0; 8])
+        .instance_type("x", 5.0, vec![10.0])
+        .billing(BillingPolicy::PerSecond)
+        .build()
+        .unwrap();
+    let plan = maximise_parallelism(&sys, 20.0);
+    let n = NativeEvaluator.eval_plan(&sys, &plan);
+    let x = xla.eval_plan(&sys, &plan);
+    assert_close(x.cost, n.cost, 1e-9, "fractional cost must be exact (native path)");
+}
+
+#[test]
+fn planner_with_xla_evaluator_reproduces_native_decisions() {
+    let Some(xla) = xla() else { return };
+    let sys = table1_system(0.0);
+    for &b in &[45.0, 65.0, 85.0] {
+        let with_xla = Planner::with_evaluator(&sys, &xla).find(b);
+        let with_native = Planner::new(&sys).find(b);
+        // f32 scoring could in principle flip a tie; on this workload the
+        // decisions must coincide.
+        assert_close(with_xla.score.makespan, with_native.score.makespan, 1e-3, "makespan");
+        assert_close(with_xla.score.cost, with_native.score.cost, 1e-3, "cost");
+        assert!(with_xla.plan.validate_partition(&sys).is_ok());
+    }
+}
+
+#[test]
+fn xla_perf_estimator_matches_native_formula() {
+    let Ok(meta) = ArtifactMeta::load() else { return };
+    let est = XlaPerfEstimator::load_with(meta).expect("estimator compiles");
+    let sys = table1_system(0.0);
+    let obs = sample_runs(&sys, 20, &NoiseModel::jitter(0.05), 9);
+    let prior = vec![15.0f64; 12];
+    let native = botsched::cloudsim::sampling::estimate_perf_native(&sys, &obs, &prior, 1.0);
+    let xla = est.estimate(&sys, &obs, &prior, 1.0).expect("estimation runs");
+    assert_eq!(xla.len(), 12);
+    for (x, n) in xla.iter().zip(&native) {
+        assert!((x - n).abs() / n < 1e-4, "xla {x} vs native {n}");
+    }
+}
+
+#[test]
+fn xla_estimator_rejects_oversize_inputs() {
+    let Ok(meta) = ArtifactMeta::load() else { return };
+    let s_max = meta.s;
+    let est = XlaPerfEstimator::load_with(meta).expect("estimator compiles");
+    let sys = table1_system(0.0);
+    let obs = sample_runs(&sys, s_max / 12 + 1, &NoiseModel::none(), 1);
+    assert!(obs.len() > s_max);
+    assert!(est.estimate(&sys, &obs, &[0.0; 12], 0.0).is_err());
+}
+
+#[test]
+fn chunk_boundaries_route_correctly() {
+    // Exercises the big/small artifact dispatch: 65 candidates = one
+    // 64-chunk + one 1-tail (small exe), 9 = 8 + 1 (both small), 7 = one
+    // small call. All must agree with native.
+    let Some(xla) = xla() else { return };
+    let sys = table1_system(12.0);
+    let pool: Vec<_> = (0..8).map(|i| Planner::new(&sys).find(60.0 + i as f64 * 4.0).plan).collect();
+    for n in [1usize, 7, 8, 9, 63, 64, 65, 129] {
+        let refs: Vec<_> = (0..n).map(|i| &pool[i % pool.len()]).collect();
+        let native = NativeEvaluator.eval_plans(&sys, &refs);
+        let got = xla.eval_plans(&sys, &refs);
+        assert_eq!(got.len(), n);
+        for (i, (x, nv)) in got.iter().zip(&native).enumerate() {
+            assert_close(x.makespan, nv.makespan, 1e-4, &format!("n={n} i={i} makespan"));
+            assert_close(x.cost, nv.cost, 1e-5, &format!("n={n} i={i} cost"));
+        }
+    }
+}
+
+#[test]
+fn oversize_vm_count_falls_back_to_native_per_candidate() {
+    // A candidate with more VMs than the artifact's V must be scored
+    // natively while its batch-mates still ride the artifact.
+    let Some(xla) = xla() else { return };
+    let sys = table1_system(0.0);
+    let small_plan = Planner::new(&sys).find(70.0).plan;
+    let mut huge_plan = botsched::model::Plan::new();
+    for i in 0..200 {
+        // 200 VMs > V=128.
+        let v = huge_plan.add_vm(&sys, botsched::model::InstanceTypeId((i % 4) as u16));
+        let _ = v;
+    }
+    for (slot, t) in sys.tasks().iter().enumerate() {
+        huge_plan.vms[slot % 200].push_task(&sys, t.id);
+    }
+    let refs = vec![&small_plan, &huge_plan];
+    let native = NativeEvaluator.eval_plans(&sys, &refs);
+    let got = xla.eval_plans(&sys, &refs);
+    for (x, n) in got.iter().zip(&native) {
+        assert_close(x.makespan, n.makespan, 1e-4, "makespan");
+        assert_close(x.cost, n.cost, 1e-5, "cost");
+    }
+}
