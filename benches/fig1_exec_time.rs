@@ -8,17 +8,17 @@
 //! EXPERIMENTS.md for the measured-vs-paper discussion, including the
 //! Table-I arithmetic that moves the feasibility floor to ~60.
 
-use botsched::analysis::report::run_sweep;
+use botsched::analysis::report::{run_sweep, CORE_POLICIES};
 use botsched::benchkit::Bench;
-use botsched::eval::NativeEvaluator;
-use botsched::scheduler::{maximise_parallelism, minimise_individual, Planner};
+use botsched::scheduler::{PolicyRegistry, SolveRequest};
 use botsched::workload::paper::{table1_system, BUDGETS};
 
 fn main() {
     let sys = table1_system(0.0);
+    let registry = PolicyRegistry::builtin();
 
     // ---- the figure itself ------------------------------------------------
-    let report = run_sweep(&sys, BUDGETS, &NativeEvaluator);
+    let report = run_sweep(&sys, BUDGETS, &botsched::eval::NativeEvaluator);
     print!("{}", report.fig1_text());
     print!("{}", report.headline().text());
 
@@ -34,7 +34,7 @@ fn main() {
         "heuristic must satisfy the lowest budget"
     );
     for &b in BUDGETS {
-        let ours = report.row("heuristic", b).unwrap().score.makespan;
+        let ours = report.row("budget-heuristic", b).unwrap().score.makespan;
         for a in ["mi", "mp"] {
             let other = report.row(a, b).unwrap().score.makespan;
             assert!(ours <= other + 1e-6, "budget {b}: heuristic {ours} vs {a} {other}");
@@ -42,18 +42,17 @@ fn main() {
     }
     println!("shape checks: heuristic <= MI, MP at every budget; feasibility floor ordered. OK\n");
 
-    // ---- planner timing across budgets -------------------------------------
-    let mut bench = Bench::new("fig1/planner-time");
+    // ---- policy timing across budgets ---------------------------------------
+    // Iterates the registry, so a newly registered policy shows up in the
+    // timing table without touching this bench.
+    let mut bench = Bench::new("fig1/policy-time");
     for &b in &[40.0, 60.0, 85.0] {
-        bench.run(&format!("heuristic@{b}"), || {
-            std::hint::black_box(Planner::new(&sys).find(b));
-        });
-        bench.run(&format!("mi@{b}"), || {
-            std::hint::black_box(minimise_individual(&sys, b));
-        });
-        bench.run(&format!("mp@{b}"), || {
-            std::hint::black_box(maximise_parallelism(&sys, b));
-        });
+        for name in CORE_POLICIES {
+            let policy = registry.get(name).expect("core policy");
+            bench.run(&format!("{name}@{b}"), || {
+                std::hint::black_box(policy.solve(&sys, &SolveRequest::new(b)));
+            });
+        }
     }
     bench.report();
 }

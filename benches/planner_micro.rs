@@ -116,8 +116,10 @@ fn main() {
     println!("\n(positive 'vs full' = removing the phase makes plans worse)");
 
     // ---- A4: multi-start vs single-start -------------------------------
-    use botsched::scheduler::{find_multistart, MultiStartConfig};
+    // Both sides run through the policy registry: same request, two names.
+    use botsched::scheduler::{PolicyRegistry, SolveRequest};
     use botsched::workload::{WorkloadGenerator, WorkloadSpec};
+    let registry = PolicyRegistry::builtin();
     println!("\n== A4: multi-start (8 perturbed restarts) vs single-start ==");
     println!("{:<22} {:>12} {:>12} {:>9}", "instance", "single", "multi", "gain");
     let mut wins = 0;
@@ -131,9 +133,9 @@ fn main() {
         };
         let sys2 = WorkloadGenerator::new(seed + 100).system(&spec);
         let b = WorkloadGenerator::feasible_budget(&sys2, 1.3);
-        let single = Planner::new(&sys2).find(b);
-        let cfg = MultiStartConfig { n_starts: 8, seed, ..Default::default() };
-        let multi = find_multistart(&sys2, b, &cfg, &NativeEvaluator);
+        let req = SolveRequest::new(b).with_seed(seed).with_starts(8);
+        let single = registry.solve("budget-heuristic", &sys2, &req).unwrap();
+        let multi = registry.solve("multistart", &sys2, &req).unwrap();
         if !single.feasible {
             continue;
         }

@@ -10,10 +10,12 @@ use std::time::Duration;
 
 use botsched::benchkit::Bench;
 use botsched::cloudsim::{SimConfig, Simulator};
-use botsched::scheduler::Planner;
+use botsched::scheduler::{PolicyRegistry, SolveRequest};
 use botsched::workload::{SizeDistribution, WorkloadGenerator, WorkloadSpec};
 
 fn main() {
+    let registry = PolicyRegistry::builtin();
+    let heuristic = registry.get("budget-heuristic").expect("builtin");
     // ---- tasks sweep ------------------------------------------------------
     let mut bench = Bench::new("scaling/tasks")
         .with_budget(Duration::from_millis(200), Duration::from_millis(1200));
@@ -29,7 +31,7 @@ fn main() {
         let budget = WorkloadGenerator::feasible_budget(&sys, 1.4);
         let total = (tasks_per_app * 3) as f64;
         bench.run_with_items(&format!("find/{}tasks", tasks_per_app * 3), Some(total), || {
-            std::hint::black_box(Planner::new(&sys).find(budget));
+            std::hint::black_box(heuristic.solve(&sys, &SolveRequest::new(budget)));
         });
     }
     bench.report();
@@ -47,7 +49,7 @@ fn main() {
         let sys = WorkloadGenerator::new(43).system(&spec);
         let budget = WorkloadGenerator::feasible_budget(&sys, 1.4);
         bench.run(&format!("find/{n_types}types"), || {
-            std::hint::black_box(Planner::new(&sys).find(budget));
+            std::hint::black_box(heuristic.solve(&sys, &SolveRequest::new(budget)));
         });
     }
     bench.report();
@@ -64,7 +66,7 @@ fn main() {
         };
         let sys = WorkloadGenerator::new(44).system(&spec);
         let budget = WorkloadGenerator::feasible_budget(&sys, 1.4);
-        let plan = Planner::new(&sys).find(budget).plan;
+        let plan = heuristic.solve(&sys, &SolveRequest::new(budget)).plan;
         let total = (tasks_per_app * 3) as f64;
         bench.run_with_items(
             &format!("run_plan/{}tasks", tasks_per_app * 3),

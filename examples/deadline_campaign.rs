@@ -1,5 +1,6 @@
 //! Deadline-constrained cost minimisation (the paper's Sec. VI future
-//! work, implemented in `scheduler::deadline`).
+//! work), driven through the unified `Policy` API: the `"deadline"`
+//! policy from the registry.
 //!
 //! ```bash
 //! cargo run --release --example deadline_campaign
@@ -7,48 +8,51 @@
 //!
 //! A research group must finish its analysis campaign before a
 //! reporting deadline and wants to spend as little as possible.  For
-//! each deadline the bisection search finds the cheapest heuristic plan
-//! meeting it; the plan is then executed on the simulated cloud to
-//! confirm the deadline holds end-to-end.  (The cheapest feasible plan
-//! for this workload already runs in ~58 min, so the interesting
-//! deadlines are below one hour.)
+//! each deadline the policy's bisection search finds the cheapest
+//! heuristic plan meeting it; the plan is then executed on the simulated
+//! cloud to confirm the deadline holds end-to-end.  (The cheapest
+//! feasible plan for this workload already runs in ~58 min, so the
+//! interesting deadlines are below one hour.)
 
 use botsched::cloudsim::{SimConfig, Simulator};
-use botsched::scheduler::deadline::min_cost_for_deadline;
+use botsched::scheduler::{PolicyRegistry, SolveRequest};
 use botsched::workload::paper::table1_system;
 
 fn main() -> anyhow::Result<()> {
     let sys = table1_system(0.0);
+    let registry = PolicyRegistry::builtin();
     println!("workload: 3 apps x 250 tasks (paper Table I catalogue)\n");
     println!("{:>9} {:>10} {:>10} {:>10} {:>8} {:>7}",
         "deadline", "budget", "cost", "makespan", "vms", "probes");
 
     for hours in [1.0, 0.75, 0.55] {
         let deadline = hours * 3600.0;
-        let search = min_cost_for_deadline(&sys, deadline, 300.0);
-        match &search.report {
-            None => println!("{:>8.1}h {:>10}", hours, "impossible"),
-            Some(r) => {
-                // Confirm on the simulator.
-                let sim = Simulator::run_plan(&sys, &r.plan, &SimConfig::default());
-                assert!(sim.all_done());
-                assert!(
-                    sim.makespan <= deadline + 1e-6,
-                    "simulated {:.1}s blew the {:.1}s deadline",
-                    sim.makespan,
-                    deadline
-                );
-                println!(
-                    "{:>8.1}h {:>10.2} {:>10} {:>9.1}s {:>8} {:>7}",
-                    hours,
-                    search.budget,
-                    r.score.cost,
-                    sim.makespan,
-                    r.plan.n_vms(),
-                    search.probes
-                );
-            }
+        // The request's budget is the spending cap the search may not
+        // exceed; `effective_budget` reports what the plan actually needed.
+        let req = SolveRequest::new(300.0).with_deadline(deadline);
+        let out = registry.solve("deadline", &sys, &req)?;
+        if !out.feasible {
+            println!("{:>8.1}h {:>10}", hours, "impossible");
+            continue;
         }
+        // Confirm on the simulator.
+        let sim = Simulator::run_plan(&sys, &out.plan, &SimConfig::default());
+        assert!(sim.all_done());
+        assert!(
+            sim.makespan <= deadline + 1e-6,
+            "simulated {:.1}s blew the {:.1}s deadline",
+            sim.makespan,
+            deadline
+        );
+        println!(
+            "{:>8.1}h {:>10.2} {:>10} {:>9.1}s {:>8} {:>7}",
+            hours,
+            out.effective_budget,
+            out.score.cost,
+            sim.makespan,
+            out.plan.n_vms(),
+            out.probes
+        );
     }
 
     println!(

@@ -16,15 +16,15 @@
 use botsched::cloudsim::{
     run_campaign, CampaignSpec, NoiseModel, SimConfig, Simulator,
 };
-use botsched::scheduler::nonclairvoyant::{surrogate_system, OnlineDispatcher};
-use botsched::scheduler::Planner;
-use botsched::util::Rng;
+use botsched::scheduler::nonclairvoyant::OnlineDispatcher;
+use botsched::scheduler::{PolicyRegistry, SolveRequest};
 use botsched::workload::paper::table1_system;
 
 fn main() -> anyhow::Result<()> {
     let sys = table1_system(0.0);
     let budget = 80.0;
-    let plan = Planner::new(&sys).find(budget);
+    let registry = PolicyRegistry::builtin();
+    let plan = registry.solve("budget-heuristic", &sys, &SolveRequest::new(budget))?;
     println!(
         "plan @ budget {budget}: makespan {:.1}s cost {} on {} VMs\n",
         plan.score.makespan,
@@ -83,11 +83,11 @@ fn main() -> anyhow::Result<()> {
     }
 
     // --- D: non-clairvoyant ----------------------------------------------
-    // Plan the fleet on a 10%-sample surrogate, then dispatch online.
+    // Plan the fleet on a 10%-sample surrogate (the "nonclairvoyant"
+    // policy), then dispatch online.
     println!();
-    let mut rng = Rng::new(7);
-    let surrogate = surrogate_system(&sys, 0.10, &mut rng);
-    let fleet_plan = Planner::new(&surrogate).find(budget);
+    let nc_req = SolveRequest::new(budget).with_sample_frac(0.10).with_seed(7);
+    let fleet_plan = registry.solve("nonclairvoyant", &sys, &nc_req)?;
     let fleet: Vec<_> = fleet_plan.plan.vms.iter().map(|vm| vm.it).collect();
     let dispatcher = OnlineDispatcher::new(&sys);
     let sim = Simulator::run_online(&sys, &fleet, dispatcher, &SimConfig::default());

@@ -25,7 +25,7 @@ use botsched::analysis::{fractional_cost_floor, makespan_floor};
 use botsched::cloudsim::{sample_runs, NoiseModel, SimConfig, Simulator};
 use botsched::coordinator::{BatchingEvaluator, Metrics};
 use botsched::eval::{NativeEvaluator, PlanEvaluator};
-use botsched::scheduler::Planner;
+use botsched::scheduler::{PolicyRegistry, SolveRequest};
 use botsched::workload::paper::{table1_system, table1_text, BUDGETS};
 
 fn main() -> anyhow::Result<()> {
@@ -96,9 +96,14 @@ fn main() -> anyhow::Result<()> {
 
     // ---- execute every feasible heuristic plan on the simulator --------
     println!("\nPlanned vs simulated (feasible heuristic plans):");
+    let registry = PolicyRegistry::builtin();
     let mut worst_drift: f64 = 0.0;
     for &b in BUDGETS {
-        let r = Planner::with_evaluator(&sys, &evaluator).find(b);
+        let r = registry.solve(
+            "budget-heuristic",
+            &sys,
+            &SolveRequest::new(b).with_evaluator(&evaluator),
+        )?;
         if !r.feasible {
             continue;
         }

@@ -1,16 +1,19 @@
-//! Quickstart: plan a multi-BoT workload under a budget in ~40 lines.
+//! Quickstart: plan a multi-BoT workload under a budget in ~40 lines —
+//! the canonical usage sample for the unified `Policy` API.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Builds a small two-application system, plans it with the paper's
-//! heuristic at two budgets, compares against the MI/MP baselines, and
-//! executes the chosen plan on the simulated cloud.
+//! The flow is always the same three steps:
+//!   1. describe the problem with a [`SolveRequest`] builder,
+//!   2. resolve a policy by name from the [`PolicyRegistry`],
+//!   3. read the unified [`SolveOutcome`] (plan, makespan, cost,
+//!      feasibility) — identical shape for every policy.
 
 use botsched::cloudsim::{SimConfig, Simulator};
 use botsched::model::SystemBuilder;
-use botsched::scheduler::{maximise_parallelism, minimise_individual, Planner};
+use botsched::scheduler::{PolicyRegistry, SolveRequest};
 
 fn main() -> anyhow::Result<()> {
     // A "video transcode" app (CPU-hungry) and a "genome index" app
@@ -24,31 +27,32 @@ fn main() -> anyhow::Result<()> {
         .overhead(45.0) // 45s boot time
         .build()?;
 
+    let registry = PolicyRegistry::builtin();
+
     for budget in [25.0, 60.0] {
         println!("=== budget ${budget} ===");
-        let ours = Planner::new(&sys).find(budget);
-        println!(
-            "heuristic: makespan {:>7.1}s  cost {:>5}  feasible {}",
-            ours.score.makespan, ours.score.cost, ours.feasible
-        );
-        for (name, plan) in [
-            ("MI       ", minimise_individual(&sys, budget)),
-            ("MP       ", maximise_parallelism(&sys, budget)),
-        ] {
-            let s = plan.score(&sys);
+        // One request serves every policy; knobs a policy does not use
+        // are ignored by it.
+        let req = SolveRequest::new(budget).with_seed(7);
+
+        let mut ours = None;
+        for name in ["budget-heuristic", "mi", "mp", "multistart"] {
+            let out = registry.solve(name, &sys, &req)?;
             println!(
-                "{name}: makespan {:>7.1}s  cost {:>5}  feasible {}",
-                s.makespan,
-                s.cost,
-                s.satisfies(budget)
+                "{name:<16}: makespan {:>7.1}s  cost {:>5}  feasible {}",
+                out.score.makespan, out.score.cost, out.feasible
             );
+            if name == "budget-heuristic" {
+                ours = Some(out);
+            }
         }
 
         // Execute the heuristic plan on the simulated cloud.
+        let ours = ours.expect("heuristic ran above");
         let sim = Simulator::run_plan(&sys, &ours.plan, &SimConfig::default());
         assert!(sim.all_done());
         println!(
-            "simulated: makespan {:>7.1}s  cost {:>5}  ({} tasks on {} VMs)\n",
+            "simulated       : makespan {:>7.1}s  cost {:>5}  ({} tasks on {} VMs)\n",
             sim.makespan,
             sim.cost,
             sim.completed.len(),

@@ -25,11 +25,25 @@ fn main() -> anyhow::Result<()> {
     let addr = coord.local_addr;
     println!("coordinator up on {addr}\n");
 
+    // Discover the policy surface first: anything listed here can be
+    // named in a "policy" field on plan/simulate/campaign requests.
+    let pols = request(&addr, r#"{"op":"list_policies"}"#)?;
+    let names: Vec<&str> = pols
+        .get("policies")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter_map(|p| p.get("name").and_then(|n| n.as_str()))
+        .collect();
+    println!("policies: {}\n", names.join(", "));
+
     // Concurrent planning clients (a campaign team sweeping budgets).
     let mut handles = Vec::new();
     for budget in [60, 65, 70, 75, 80, 85] {
         handles.push(std::thread::spawn(move || {
-            let line = format!(r#"{{"op":"plan","budget":{budget}}}"#);
+            let line =
+                format!(r#"{{"op":"plan","budget":{budget},"policy":"budget-heuristic"}}"#);
             (budget, request(&addr, &line).expect("plan reply"))
         }));
     }
@@ -43,6 +57,19 @@ fn main() -> anyhow::Result<()> {
             reply.get("n_vms").unwrap().as_f64().unwrap(),
         );
     }
+
+    // Any registered policy is one "policy" field away — here the
+    // deadline search (cheapest plan finishing within an hour).
+    let dl = request(
+        &addr,
+        r#"{"op":"plan","budget":300,"policy":"deadline","deadline":3600}"#,
+    )?;
+    println!(
+        "\ndeadline 1h: cost {} makespan {:.1}s (effective budget {:.2})",
+        dl.get("cost").unwrap().as_f64().unwrap(),
+        dl.get("makespan").unwrap().as_f64().unwrap(),
+        dl.get("effective_budget").unwrap().as_f64().unwrap(),
+    );
 
     // One simulation and one failure campaign through the same socket.
     let sim = request(

@@ -8,86 +8,110 @@
 use crate::analysis::stats;
 use crate::eval::{NativeEvaluator, PlanEvaluator};
 use crate::model::{Plan, PlanScore, System};
-use crate::scheduler::{maximise_parallelism, minimise_individual, Planner};
+use crate::scheduler::{canonical_name, legacy_name, PolicyRegistry, SolveRequest, UnknownPolicy};
 use crate::util::Json;
 
-/// One (approach, budget) cell of the sweep.
+/// The Fig. 1 / Fig. 2 comparison set (the paper's heuristic vs the
+/// Sec. V baselines).
+pub const CORE_POLICIES: &[&str] = &["budget-heuristic", "mi", "mp"];
+
+/// One (policy, budget) cell of the sweep.
 #[derive(Debug, Clone)]
 pub struct ApproachRow {
+    /// Canonical policy name (see [`crate::scheduler::PolicyRegistry`]).
     pub approach: &'static str,
     pub budget: f64,
     pub score: PlanScore,
     pub feasible: bool,
     /// VM count per instance type (Fig. 2's quantity).
     pub vm_mix: Vec<usize>,
-    /// Planner wall time in microseconds (for the §Perf log).
+    /// Policy wall time in microseconds (for the §Perf log).
     pub plan_micros: u128,
 }
 
-/// The full budget sweep for the three approaches.
+/// A budget sweep over a set of policies.
 #[derive(Debug, Clone)]
 pub struct SweepReport {
     pub budgets: Vec<f64>,
     pub rows: Vec<ApproachRow>,
 }
 
-/// Run Heuristic / MI / MP across `budgets`.
+/// Run the paper's comparison set (heuristic / MI / MP) across `budgets`.
 pub fn run_sweep(sys: &System, budgets: &[f64], evaluator: &dyn PlanEvaluator) -> SweepReport {
-    let mut rows = Vec::with_capacity(budgets.len() * 3);
+    run_policy_sweep(sys, budgets, CORE_POLICIES, &PolicyRegistry::builtin(), evaluator)
+        .expect("core policies are builtin")
+}
+
+/// Run any set of registered policies across `budgets` — the sweep is
+/// policy-generic: every row comes from [`crate::scheduler::Policy::solve`].
+pub fn run_policy_sweep(
+    sys: &System,
+    budgets: &[f64],
+    policies: &[&str],
+    registry: &PolicyRegistry,
+    evaluator: &dyn PlanEvaluator,
+) -> Result<SweepReport, UnknownPolicy> {
+    // Resolve up front: an unknown name fails fast, before any solving.
+    let resolved: Vec<&dyn crate::scheduler::Policy> = policies
+        .iter()
+        .map(|name| registry.resolve(name))
+        .collect::<Result<_, _>>()?;
+    let mut rows = Vec::with_capacity(budgets.len() * resolved.len());
     for &b in budgets {
-        // Heuristic (Algorithm 1).
-        let t0 = std::time::Instant::now();
-        let ours = Planner::with_evaluator(sys, evaluator).find(b);
-        rows.push(ApproachRow {
-            approach: "heuristic",
-            budget: b,
-            score: ours.score,
-            feasible: ours.feasible,
-            vm_mix: ours.plan.vm_mix(sys),
-            plan_micros: t0.elapsed().as_micros(),
-        });
-        // Baselines.
-        for (name, plan) in [
-            ("mi", minimise_individual(sys, b)),
-            ("mp", maximise_parallelism(sys, b)),
-        ] {
+        for policy in &resolved {
+            let req = SolveRequest::new(b).with_evaluator(evaluator);
             let t0 = std::time::Instant::now();
-            let score = evaluator.eval_plan(sys, &plan);
-            let micros = t0.elapsed().as_micros();
+            let out = policy.solve(sys, &req);
             rows.push(ApproachRow {
-                approach: name,
+                approach: out.policy,
                 budget: b,
-                score,
-                feasible: score.satisfies(b),
-                vm_mix: plan.vm_mix(sys),
-                plan_micros: micros,
+                score: out.score,
+                feasible: out.feasible,
+                vm_mix: out.plan.vm_mix(sys),
+                plan_micros: t0.elapsed().as_micros(),
             });
         }
     }
-    SweepReport { budgets: budgets.to_vec(), rows }
+    Ok(SweepReport { budgets: budgets.to_vec(), rows })
 }
 
 impl SweepReport {
+    /// Look up a cell; `approach` accepts aliases (`"heuristic"` finds
+    /// the `"budget-heuristic"` rows).
     pub fn row(&self, approach: &str, budget: f64) -> Option<&ApproachRow> {
+        let canon = canonical_name(approach);
         self.rows
             .iter()
-            .find(|r| r.approach == approach && (r.budget - budget).abs() < 1e-9)
+            .find(|r| r.approach == canon && (r.budget - budget).abs() < 1e-9)
     }
 
-    /// Fig. 1: execution time vs budget, one column per approach.
+    /// The distinct policies in this sweep, in first-appearance order.
+    pub fn approaches(&self) -> Vec<&'static str> {
+        let mut out: Vec<&'static str> = Vec::new();
+        for r in &self.rows {
+            if !out.contains(&r.approach) {
+                out.push(r.approach);
+            }
+        }
+        out
+    }
+
+    /// Fig. 1: execution time vs budget, one column per policy.
     /// Infeasible cells are flagged with `*` (realized cost exceeds the
     /// budget — the paper plots nothing there).
     pub fn fig1_text(&self) -> String {
-        let mut out = String::from(
-            "Fig. 1 — Execution times for different approaches\n\
-             budget   heuristic        MI               MP\n",
-        );
+        let approaches = self.approaches();
+        let mut out = String::from("Fig. 1 — Execution times for different approaches\nbudget ");
+        for a in &approaches {
+            out.push_str(&format!(" {a:>17}"));
+        }
+        out.push('\n');
         for &b in &self.budgets {
             out.push_str(&format!("{b:>6} "));
-            for a in ["heuristic", "mi", "mp"] {
+            for a in &approaches {
                 let r = self.row(a, b).expect("sweep covers all cells");
                 let flag = if r.feasible { ' ' } else { '*' };
-                out.push_str(&format!(" {:>9.1}s{flag:<4}", r.score.makespan));
+                out.push_str(&format!(" {:>15.1}s{flag}", r.score.makespan));
             }
             out.push('\n');
         }
@@ -95,10 +119,10 @@ impl SweepReport {
         out
     }
 
-    /// Fig. 2: number of VMs of each type vs budget, per approach.
+    /// Fig. 2: number of VMs of each type vs budget, per policy.
     pub fn fig2_text(&self, sys: &System) -> String {
         let mut out = String::from("Fig. 2 — Number of VMs of each type\n");
-        for a in ["heuristic", "mi", "mp"] {
+        for a in self.approaches() {
             out.push_str(&format!("\n[{a}]\nbudget "));
             for it in &sys.instance_types {
                 out.push_str(&format!("{:>6}", format!("it{}", it.id.0 + 1)));
@@ -123,14 +147,17 @@ impl SweepReport {
         let mut vs_mi = Vec::new();
         let mut vs_mp = Vec::new();
         for &b in &self.budgets {
-            let ours = self.row("heuristic", b).unwrap();
-            let mi = self.row("mi", b).unwrap();
-            let mp = self.row("mp", b).unwrap();
-            if ours.feasible && mi.feasible {
-                vs_mi.push(stats::improvement_pct(ours.score.makespan, mi.score.makespan));
+            // Sweeps over other policy sets simply yield empty averages.
+            let Some(ours) = self.row("budget-heuristic", b) else { continue };
+            if let Some(mi) = self.row("mi", b) {
+                if ours.feasible && mi.feasible {
+                    vs_mi.push(stats::improvement_pct(ours.score.makespan, mi.score.makespan));
+                }
             }
-            if ours.feasible && mp.feasible {
-                vs_mp.push(stats::improvement_pct(ours.score.makespan, mp.score.makespan));
+            if let Some(mp) = self.row("mp", b) {
+                if ours.feasible && mp.feasible {
+                    vs_mp.push(stats::improvement_pct(ours.score.makespan, mp.score.makespan));
+                }
             }
         }
         let min_feasible = |a: &str| {
@@ -143,7 +170,7 @@ impl SweepReport {
         Headline {
             avg_improvement_vs_mi_pct: stats::mean(&vs_mi),
             avg_improvement_vs_mp_pct: stats::mean(&vs_mp),
-            min_feasible_budget_heuristic: min_feasible("heuristic"),
+            min_feasible_budget_heuristic: min_feasible("budget-heuristic"),
             min_feasible_budget_mi: min_feasible("mi"),
             min_feasible_budget_mp: min_feasible("mp"),
         }
@@ -157,7 +184,9 @@ impl SweepReport {
                 "rows",
                 Json::arr(self.rows.iter().map(|r| {
                     Json::obj(vec![
-                        ("approach", Json::str(r.approach)),
+                        ("policy", Json::str(r.approach)),
+                        // Legacy spelling, kept for pre-registry clients.
+                        ("approach", Json::str(legacy_name(r.approach))),
                         ("budget", Json::num(r.budget)),
                         ("makespan", Json::num(r.score.makespan)),
                         ("cost", Json::num(r.score.cost)),
@@ -217,14 +246,13 @@ pub fn paper_sweep() -> (System, SweepReport) {
     (sys, report)
 }
 
-/// Extract a plan for inspection (mirrors `run_sweep`'s construction).
+/// Extract a plan for inspection (any registered policy; panics on an
+/// unknown name — use [`PolicyRegistry::solve`] for fallible lookup).
 pub fn plan_for(sys: &System, approach: &str, budget: f64) -> Plan {
-    match approach {
-        "heuristic" => Planner::new(sys).find(budget).plan,
-        "mi" => minimise_individual(sys, budget),
-        "mp" => maximise_parallelism(sys, budget),
-        other => panic!("unknown approach {other}"),
-    }
+    PolicyRegistry::builtin()
+        .solve(approach, sys, &SolveRequest::new(budget))
+        .unwrap_or_else(|e| panic!("{e}"))
+        .plan
 }
 
 #[cfg(test)]
@@ -242,11 +270,14 @@ mod tests {
     fn sweep_has_all_cells() {
         let (_, r) = small_sweep();
         assert_eq!(r.rows.len(), 6);
-        for a in ["heuristic", "mi", "mp"] {
+        assert_eq!(r.approaches(), vec!["budget-heuristic", "mi", "mp"]);
+        for a in ["budget-heuristic", "mi", "mp"] {
             for b in [60.0, 80.0] {
                 assert!(r.row(a, b).is_some());
             }
         }
+        // Legacy alias still finds the heuristic rows.
+        assert!(r.row("heuristic", 60.0).is_some());
     }
 
     #[test]
@@ -256,8 +287,25 @@ mod tests {
         assert!(f1.contains("budget"));
         assert!(f1.lines().count() >= 4);
         let f2 = r.fig2_text(&sys);
-        assert!(f2.contains("[heuristic]"));
+        assert!(f2.contains("[budget-heuristic]"));
         assert!(f2.contains("it4"));
+    }
+
+    #[test]
+    fn policy_sweep_runs_arbitrary_policy_sets() {
+        let sys = table1_system(0.0);
+        let registry = crate::scheduler::PolicyRegistry::builtin();
+        let r = run_policy_sweep(
+            &sys,
+            &[80.0],
+            &["multistart", "mp"],
+            &registry,
+            &NativeEvaluator,
+        )
+        .unwrap();
+        assert_eq!(r.rows.len(), 2);
+        assert_eq!(r.approaches(), vec!["multistart", "mp"]);
+        assert!(run_policy_sweep(&sys, &[80.0], &["zz"], &registry, &NativeEvaluator).is_err());
     }
 
     #[test]

@@ -9,19 +9,38 @@
 //! roll into round r+1.  The campaign reports the cumulative wall-clock
 //! (rounds execute back-to-back: failures are detected when the round's
 //! surviving VMs drain) and cumulative spend.
+//!
+//! Each round's residual planning runs through the [`Policy`] API, so a
+//! campaign can execute *any* registered policy (the budget heuristic by
+//! default; see [`CampaignSpec::with_policy`]).
 
+use std::fmt;
+use std::sync::Arc;
+
+use crate::eval::PlanEvaluator;
 use crate::model::{PlanScore, System, TaskId};
-use crate::scheduler::dynamic::replan;
-use crate::scheduler::PlannerConfig;
+use crate::scheduler::dynamic::replan_policy;
+use crate::scheduler::{BudgetHeuristic, Policy, SolveRequest};
 
 use super::engine::{SimConfig, SimOutcome, Simulator};
 
 /// Campaign parameters.
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 pub struct CampaignSpec {
     pub budget: f64,
     pub sim: SimConfig,
-    pub planner: PlannerConfig,
+    /// The policy planning each round's residual workload.
+    pub policy: Arc<dyn Policy>,
+    /// Template for each round's [`SolveRequest`]: policy knobs
+    /// (deadline, restart count, sample fraction, planner config, ...)
+    /// apply to every round.  The template's `budget` is overridden with
+    /// each round's remaining money and its `seed` with a per-round
+    /// variation of `sim.seed`.
+    pub base_request: SolveRequest<'static>,
+    /// Evaluator each round's planning scores through (`None` = native).
+    /// Kept outside `base_request` because the template must be
+    /// `'static` while the evaluator is a shared handle.
+    pub evaluator: Option<Arc<dyn PlanEvaluator>>,
     /// Safety cap on re-planning rounds.
     pub max_rounds: usize,
     /// Fraction of the remaining budget held back from each round as
@@ -43,11 +62,22 @@ impl CampaignSpec {
         Self {
             budget,
             sim: SimConfig::default(),
-            planner: PlannerConfig::default(),
+            policy: Arc::new(BudgetHeuristic),
+            base_request: SolveRequest::new(budget),
+            evaluator: None,
             max_rounds: 8,
             reserve_frac: 0.0,
             enforce_budget: false,
         }
+    }
+
+    /// Plan each round with `policy` instead of the budget heuristic
+    /// (e.g. a handle from [`PolicyRegistry::get_arc`]).
+    ///
+    /// [`PolicyRegistry::get_arc`]: crate::scheduler::PolicyRegistry::get_arc
+    pub fn with_policy(mut self, policy: Arc<dyn Policy>) -> Self {
+        self.policy = policy;
+        self
     }
 
     /// Enable failure-recovery headroom.
@@ -61,6 +91,21 @@ impl CampaignSpec {
     pub fn strict(mut self) -> Self {
         self.enforce_budget = true;
         self
+    }
+}
+
+impl fmt::Debug for CampaignSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("CampaignSpec")
+            .field("budget", &self.budget)
+            .field("sim", &self.sim)
+            .field("policy", &self.policy.name())
+            .field("base_request", &self.base_request)
+            .field("evaluator", &self.evaluator.as_ref().map(|e| e.name()))
+            .field("max_rounds", &self.max_rounds)
+            .field("reserve_frac", &self.reserve_frac)
+            .field("enforce_budget", &self.enforce_budget)
+            .finish()
     }
 }
 
@@ -99,18 +144,29 @@ pub fn run_campaign(sys: &System, spec: &CampaignSpec) -> CampaignOutcome {
         } else {
             budget_left
         };
-        let (plan, report) = replan(sys, &remaining, round_budget, spec.planner.clone());
-        if spec.enforce_budget && !report.score.satisfies(budget_left) {
+        let mut req = spec
+            .base_request
+            .clone()
+            .with_budget(round_budget)
+            .with_seed(spec.sim.seed.wrapping_add(round as u64));
+        if let Some(e) = &spec.evaluator {
+            req = req.with_evaluator(e.as_ref());
+        }
+        // The residual set is expressed through the sub-problem below;
+        // a stale task list in the template would be misread there.
+        req.remaining = None;
+        let outcome = replan_policy(sys, &remaining, spec.policy.as_ref(), &req);
+        if spec.enforce_budget && !outcome.score.satisfies(budget_left) {
             break; // stop incomplete rather than overshoot the budget
         }
-        planned.get_or_insert(report.score);
+        planned.get_or_insert(outcome.score);
 
         let sim_cfg = SimConfig { seed: spec.sim.seed.wrapping_add(round as u64), ..spec.sim };
-        let outcome = Simulator::run_plan(sys, &plan, &sim_cfg);
-        wall += outcome.makespan;
-        spent += outcome.cost;
-        remaining = outcome.stranded.clone();
-        rounds.push(outcome);
+        let sim = Simulator::run_plan(sys, &outcome.plan, &sim_cfg);
+        wall += sim.makespan;
+        spent += sim.cost;
+        remaining = sim.stranded.clone();
+        rounds.push(sim);
     }
 
     CampaignOutcome {
@@ -152,6 +208,35 @@ mod tests {
         assert_eq!(done, 750);
         // Wall clock strictly exceeds the first-round plan (failures cost time).
         assert!(out.wall_clock >= out.planned.makespan);
+    }
+
+    #[test]
+    fn campaign_runs_any_registered_policy() {
+        let sys = table1_system(0.0);
+        let registry = crate::scheduler::PolicyRegistry::builtin();
+        for name in ["mp", "mi", "multistart"] {
+            let spec = CampaignSpec::new(120.0)
+                .with_policy(registry.get_arc(name).expect("builtin"));
+            let out = run_campaign(&sys, &spec);
+            assert!(out.complete, "{name}: clean cloud must finish");
+            assert_eq!(out.rounds.len(), 1, "{name}: clean cloud is single-round");
+        }
+    }
+
+    #[test]
+    fn campaign_base_request_carries_policy_knobs() {
+        let sys = table1_system(0.0);
+        let registry = crate::scheduler::PolicyRegistry::builtin();
+        let mut spec =
+            CampaignSpec::new(200.0).with_policy(registry.get_arc("deadline").expect("builtin"));
+        spec.base_request = spec.base_request.with_deadline(3600.0);
+        let out = run_campaign(&sys, &spec);
+        assert!(out.complete);
+        assert!(
+            out.planned.makespan <= 3600.0 + 1e-6,
+            "deadline knob must reach the per-round solver (got {:.1}s)",
+            out.planned.makespan
+        );
     }
 
     #[test]

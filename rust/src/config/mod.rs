@@ -23,7 +23,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::cloudsim::NoiseModel;
 use crate::model::{BillingPolicy, System, SystemBuilder};
-use crate::scheduler::PlannerConfig;
+use crate::scheduler::{PlannerConfig, SolveRequest};
 use crate::util::Json;
 
 /// Parse a [`System`] from its JSON description.
@@ -220,6 +220,59 @@ pub fn planner_config_from_json(j: &Json) -> Result<PlannerConfig> {
     Ok(cfg)
 }
 
+/// Parse a [`SolveRequest`] from JSON: `budget` (required) plus the
+/// optional policy knobs `deadline`, `seed`, `n_starts`, `perf_jitter`,
+/// `sample_frac` and a nested `planner` config.  The evaluator handle is
+/// attached by the caller ([`SolveRequest::with_evaluator`]).
+pub fn solve_request_from_json(j: &Json) -> Result<SolveRequest<'static>> {
+    // Knobs are strict: a present-but-mistyped value is an error, never
+    // silently dropped (a string "deadline" must not degrade the request
+    // to an unconstrained solve).
+    let f64_knob = |key: &str| -> Result<Option<f64>> {
+        j.get(key)
+            .map(|v| {
+                v.as_f64()
+                    .ok_or_else(|| anyhow!("\"{key}\" must be a number, got {v}"))
+            })
+            .transpose()
+    };
+    let u64_knob = |key: &str| -> Result<Option<u64>> {
+        j.get(key)
+            .map(|v| {
+                v.as_u64()
+                    .ok_or_else(|| anyhow!("\"{key}\" must be a non-negative integer, got {v}"))
+            })
+            .transpose()
+    };
+    let budget = f64_knob("budget")?.ok_or_else(|| anyhow!("missing \"budget\""))?;
+    let mut req = SolveRequest::new(budget);
+    if let Some(d) = f64_knob("deadline")? {
+        req = req.with_deadline(d);
+    }
+    if let Some(s) = u64_knob("seed")? {
+        req = req.with_seed(s);
+    }
+    if let Some(n) = u64_knob("n_starts")? {
+        req = req.with_starts(n as usize);
+    }
+    if let Some(x) = f64_knob("perf_jitter")? {
+        if !(0.0..1.0).contains(&x) {
+            bail!("perf_jitter must be in [0, 1), got {x}");
+        }
+        req = req.with_perf_jitter(x);
+    }
+    if let Some(f) = f64_knob("sample_frac")? {
+        if !(f > 0.0 && f <= 1.0) {
+            bail!("sample_frac must be in (0, 1], got {f}");
+        }
+        req = req.with_sample_frac(f);
+    }
+    if let Some(p) = j.get("planner") {
+        req = req.with_planner(planner_config_from_json(p)?);
+    }
+    Ok(req)
+}
+
 /// Parse a [`NoiseModel`] from JSON (all fields optional, default none).
 pub fn noise_from_json(j: &Json) -> NoiseModel {
     NoiseModel {
@@ -312,6 +365,34 @@ mod tests {
         assert!(plan_from_json(&sys, &j).is_err());
         let j = Json::parse(r#"{"vms":[{"instance_type_id":0,"tasks":[100000]}]}"#).unwrap();
         assert!(plan_from_json(&sys, &j).is_err());
+    }
+
+    #[test]
+    fn solve_request_parsing() {
+        let j = Json::parse(
+            r#"{"budget": 80, "deadline": 3600, "seed": 4, "n_starts": 3,
+                "perf_jitter": 0.2, "sample_frac": 0.5,
+                "planner": {"max_iters": 7}}"#,
+        )
+        .unwrap();
+        let req = solve_request_from_json(&j).unwrap();
+        assert_eq!(req.budget, 80.0);
+        assert_eq!(req.deadline, Some(3600.0));
+        assert_eq!(req.seed, 4);
+        assert_eq!(req.n_starts, 3);
+        assert_eq!(req.perf_jitter, 0.2);
+        assert_eq!(req.sample_frac, 0.5);
+        assert_eq!(req.planner.max_iters, 7);
+
+        assert!(solve_request_from_json(&Json::parse("{}").unwrap()).is_err());
+        let bad = Json::parse(r#"{"budget": 10, "sample_frac": 0}"#).unwrap();
+        assert!(solve_request_from_json(&bad).is_err());
+        // A present-but-mistyped knob is an error, not a silent drop.
+        let bad = Json::parse(r#"{"budget": 10, "deadline": "3600"}"#).unwrap();
+        let msg = solve_request_from_json(&bad).unwrap_err().to_string();
+        assert!(msg.contains("deadline"), "{msg}");
+        let bad = Json::parse(r#"{"budget": 10, "seed": -1}"#).unwrap();
+        assert!(solve_request_from_json(&bad).is_err());
     }
 
     #[test]

@@ -12,12 +12,21 @@
 //!
 //! Protocol (one JSON object per line, response mirrors `"op"`):
 //!
+//! Planning ops resolve their `"policy"` through the shared
+//! [`crate::scheduler::PolicyRegistry`] (`"approach"` is the accepted
+//! legacy spelling), so every registered policy — budget heuristic,
+//! baselines, multistart, deadline, dynamic, non-clairvoyant — is
+//! reachable over the wire; `list_policies` enumerates them.
+//!
 //! ```text
 //! {"op":"ping"}
-//! {"op":"plan","budget":80,"system":"paper","approach":"heuristic"}
+//! {"op":"list_policies"}
+//! {"op":"plan","budget":80,"system":"paper","policy":"budget-heuristic"}
+//! {"op":"plan","budget":150,"policy":"deadline","deadline":3600}
+//! {"op":"plan","budget":80,"policy":"multistart","n_starts":8,"seed":7}
 //! {"op":"sweep","budgets":[40,45],"system":"paper"}
 //! {"op":"simulate","budget":80,"system":"paper","noise":{"task_sigma":0.1},"seed":7}
-//! {"op":"campaign","budget":120,"system":"paper","noise":{"mean_lifetime":2500}}
+//! {"op":"campaign","budget":120,"policy":"mi","noise":{"mean_lifetime":2500}}
 //! {"op":"estimate_perf","system":"paper","per_cell":20,"noise":{"task_sigma":0.05}}
 //! {"op":"plan","budget":80,"detail":true}        # full task-level plan
 //! {"op":"submit","job":{"op":"campaign",...}}    # async: returns job_id

@@ -13,7 +13,7 @@ use crate::cloudsim::{run_campaign, sample_runs, CampaignSpec, SimConfig, Simula
 use crate::config;
 use crate::eval::PlanEvaluator;
 use crate::model::System;
-use crate::scheduler::{maximise_parallelism, minimise_individual, Planner};
+use crate::scheduler::{PolicyRegistry, SolveOutcome};
 use crate::util::Json;
 
 use super::state::JobRegistry;
@@ -24,11 +24,18 @@ pub struct Context {
     pub evaluator: Arc<dyn PlanEvaluator>,
     pub metrics: Arc<Metrics>,
     pub jobs: Arc<JobRegistry>,
+    /// Name → policy resolution for `plan` / `simulate` / `campaign`.
+    pub registry: Arc<PolicyRegistry>,
 }
 
 impl Context {
     pub fn new(evaluator: Arc<dyn PlanEvaluator>, metrics: Arc<Metrics>) -> Self {
-        Self { evaluator, metrics, jobs: Arc::new(JobRegistry::new()) }
+        Self {
+            evaluator,
+            metrics,
+            jobs: Arc::new(JobRegistry::new()),
+            registry: Arc::new(PolicyRegistry::builtin()),
+        }
     }
 
     fn clone_shared(&self) -> Self {
@@ -36,6 +43,7 @@ impl Context {
             evaluator: Arc::clone(&self.evaluator),
             metrics: Arc::clone(&self.metrics),
             jobs: Arc::clone(&self.jobs),
+            registry: Arc::clone(&self.registry),
         }
     }
 }
@@ -53,13 +61,22 @@ fn ok(mut fields: Vec<(&str, Json)>) -> Reply {
 }
 
 /// Handle one request line.  Errors are mapped to `{"ok":false,...}` by
-/// the caller so the connection survives malformed input.
+/// the caller so the connection survives malformed input; every error is
+/// prefixed with the offending request's `op` (and `policy`, when one was
+/// given) so wire clients can diagnose bad requests.
 pub fn handle(ctx: &Context, line: &str) -> Result<Reply> {
     let req = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
     let op = req
         .get("op")
         .and_then(Json::as_str)
         .ok_or_else(|| anyhow!("missing \"op\""))?;
+    dispatch(ctx, op, &req).map_err(|e| match policy_name(&req) {
+        Some(p) => anyhow!("op {op:?} (policy {p:?}): {e:#}"),
+        None => anyhow!("op {op:?}: {e:#}"),
+    })
+}
+
+fn dispatch(ctx: &Context, op: &str, req: &Json) -> Result<Reply> {
     match op {
         "ping" => Ok(ok(vec![("pong", Json::Bool(true))])),
         "stats" => Ok(ok(vec![("stats", ctx.metrics.snapshot())])),
@@ -67,17 +84,33 @@ pub fn handle(ctx: &Context, line: &str) -> Result<Reply> {
             body: Json::obj(vec![("ok", Json::Bool(true)), ("bye", Json::Bool(true))]),
             shutdown: true,
         }),
-        "plan" => op_plan(ctx, &req),
-        "sweep" => op_sweep(ctx, &req),
-        "simulate" => op_simulate(ctx, &req),
-        "campaign" => op_campaign(&req),
-        "estimate_perf" => op_estimate_perf(&req),
-        "submit" => op_submit(ctx, &req),
-        "status" => op_status(ctx, &req),
+        "list_policies" => Ok(ok(vec![(
+            "policies",
+            Json::arr(ctx.registry.iter().map(|p| {
+                Json::obj(vec![
+                    ("name", Json::str(p.name())),
+                    ("description", Json::str(p.description())),
+                ])
+            })),
+        )])),
+        "plan" => op_plan(ctx, req),
+        "sweep" => op_sweep(ctx, req),
+        "simulate" => op_simulate(ctx, req),
+        "campaign" => op_campaign(ctx, req),
+        "estimate_perf" => op_estimate_perf(req),
+        "submit" => op_submit(ctx, req),
+        "status" => op_status(ctx, req),
         "jobs" => Ok(ok(vec![("jobs", ctx.jobs.list())])),
-        "cancel" => op_cancel(ctx, &req),
-        other => Err(anyhow!("unknown op {other:?}")),
+        "cancel" => op_cancel(ctx, req),
+        _ => Err(anyhow!("no such op (try list_policies, plan, sweep, simulate, campaign, estimate_perf, submit, status, jobs, cancel, stats, ping, shutdown)")),
     }
+}
+
+/// The request's policy name: `"policy"`, or the legacy `"approach"`.
+fn policy_name(req: &Json) -> Option<&str> {
+    req.get("policy")
+        .or_else(|| req.get("approach"))
+        .and_then(Json::as_str)
 }
 
 /// `submit`: run any other request asynchronously; poll with `status`.
@@ -141,24 +174,20 @@ fn budget_of(req: &Json) -> Result<f64> {
         .ok_or_else(|| anyhow!("missing \"budget\""))
 }
 
-fn plan_with(ctx: &Context, sys: &System, approach: &str, budget: f64) -> Result<(crate::model::Plan, bool)> {
-    Ok(match approach {
-        "heuristic" => {
-            let r = Planner::with_evaluator(sys, ctx.evaluator.as_ref()).find(budget);
-            (r.plan, r.feasible)
-        }
-        "mi" => {
-            let p = minimise_individual(sys, budget);
-            let feasible = p.score(sys).satisfies(budget);
-            (p, feasible)
-        }
-        "mp" => {
-            let p = maximise_parallelism(sys, budget);
-            let feasible = p.score(sys).satisfies(budget);
-            (p, feasible)
-        }
-        other => return Err(anyhow!("unknown approach {other:?}")),
-    })
+/// Resolve the request's policy and solve it through the shared
+/// evaluator.  All planning ops (`plan`, `simulate`) funnel through here.
+fn solve_with(ctx: &Context, sys: &System, req: &Json) -> Result<SolveOutcome> {
+    let name = match policy_name(req) {
+        Some(n) => n,
+        // A deadline with no explicit policy selects the deadline search
+        // (mirrors the CLI) — the budget heuristic would silently ignore it.
+        None if req.get("deadline").is_some() => "deadline",
+        None => "budget-heuristic",
+    };
+    let sreq = config::solve_request_from_json(req)?.with_evaluator(ctx.evaluator.as_ref());
+    ctx.registry
+        .solve(name, sys, &sreq)
+        .map_err(anyhow::Error::new)
 }
 
 fn plan_json(sys: &System, plan: &crate::model::Plan) -> Json {
@@ -175,23 +204,26 @@ fn plan_json(sys: &System, plan: &crate::model::Plan) -> Json {
 fn op_plan(ctx: &Context, req: &Json) -> Result<Reply> {
     let sys = parse_system(req)?;
     let budget = budget_of(req)?;
-    let approach = req.get("approach").and_then(Json::as_str).unwrap_or("heuristic");
-    let (plan, feasible) = plan_with(ctx, &sys, approach, budget)?;
+    let outcome = solve_with(ctx, &sys, req)?;
     ctx.metrics.record_plan();
-    let score = ctx.evaluator.eval_plan(&sys, &plan);
     let mut fields = vec![
-        ("approach", Json::str(approach)),
+        ("policy", Json::str(outcome.policy)),
+        // Legacy field name and spelling, kept for wire compatibility.
+        ("approach", Json::str(crate::scheduler::legacy_name(outcome.policy))),
         ("budget", Json::num(budget)),
-        ("makespan", Json::num(score.makespan)),
-        ("cost", Json::num(score.cost)),
-        ("feasible", Json::Bool(feasible)),
-        ("n_vms", Json::num(plan.n_vms() as f64)),
-        ("vms", plan_json(&sys, &plan)),
+        ("effective_budget", Json::num(outcome.effective_budget)),
+        ("makespan", Json::num(outcome.score.makespan)),
+        ("cost", Json::num(outcome.score.cost)),
+        ("feasible", Json::Bool(outcome.feasible)),
+        ("iterations", Json::num(outcome.iterations as f64)),
+        ("probes", Json::num(outcome.probes as f64)),
+        ("n_vms", Json::num(outcome.plan.n_vms() as f64)),
+        ("vms", plan_json(&sys, &outcome.plan)),
     ];
     // Full task-level assignment on request (importable via
     // config::plan_from_json for external execution engines).
     if req.get("detail").and_then(Json::as_bool).unwrap_or(false) {
-        fields.push(("plan", config::plan_to_json(&sys, &plan)));
+        fields.push(("plan", config::plan_to_json(&sys, &outcome.plan)));
     }
     Ok(ok(fields))
 }
@@ -212,17 +244,16 @@ fn op_sweep(ctx: &Context, req: &Json) -> Result<Reply> {
 
 fn op_simulate(ctx: &Context, req: &Json) -> Result<Reply> {
     let sys = parse_system(req)?;
-    let budget = budget_of(req)?;
-    let approach = req.get("approach").and_then(Json::as_str).unwrap_or("heuristic");
-    let (plan, feasible) = plan_with(ctx, &sys, approach, budget)?;
+    let outcome = solve_with(ctx, &sys, req)?;
     ctx.metrics.record_plan();
     let noise = req.get("noise").map(config::noise_from_json).unwrap_or_else(
         crate::cloudsim::NoiseModel::none,
     );
     let seed = req.get("seed").and_then(Json::as_u64).unwrap_or(0);
-    let sim = Simulator::run_plan(&sys, &plan, &SimConfig { noise, seed });
+    let sim = Simulator::run_plan(&sys, &outcome.plan, &SimConfig { noise, seed });
     Ok(ok(vec![
-        ("planned_feasible", Json::Bool(feasible)),
+        ("policy", Json::str(outcome.policy)),
+        ("planned_feasible", Json::Bool(outcome.feasible)),
         ("makespan", Json::num(sim.makespan)),
         ("cost", Json::num(sim.cost)),
         ("completed", Json::num(sim.completed.len() as f64)),
@@ -231,10 +262,26 @@ fn op_simulate(ctx: &Context, req: &Json) -> Result<Reply> {
     ]))
 }
 
-fn op_campaign(req: &Json) -> Result<Reply> {
+fn op_campaign(ctx: &Context, req: &Json) -> Result<Reply> {
     let sys = parse_system(req)?;
     let budget = budget_of(req)?;
     let mut spec = CampaignSpec::new(budget);
+    match policy_name(req) {
+        Some(name) => {
+            spec.policy = ctx.registry.resolve_arc(name).map_err(anyhow::Error::new)?;
+        }
+        // Same rule as plan/simulate: an orphan deadline selects the
+        // deadline policy rather than being silently ignored.
+        None if req.get("deadline").is_some() => {
+            spec.policy = ctx.registry.get_arc("deadline").expect("builtin");
+        }
+        None => {}
+    }
+    // Policy knobs (deadline, n_starts, sample_frac, planner, ...) ride
+    // on the per-round request template; budget and seed are overridden
+    // by the campaign loop itself.
+    spec.base_request = config::solve_request_from_json(req)?;
+    spec.evaluator = Some(Arc::clone(&ctx.evaluator));
     if let Some(n) = req.get("noise") {
         spec.sim.noise = config::noise_from_json(n);
     }
@@ -242,11 +289,9 @@ fn op_campaign(req: &Json) -> Result<Reply> {
     if let Some(r) = req.get("max_rounds").and_then(Json::as_u64) {
         spec.max_rounds = r as usize;
     }
-    if let Some(p) = req.get("planner") {
-        spec.planner = config::planner_config_from_json(p)?;
-    }
     let out = run_campaign(&sys, &spec);
     Ok(ok(vec![
+        ("policy", Json::str(spec.policy.name())),
         ("wall_clock", Json::num(out.wall_clock)),
         ("spent", Json::num(out.spent)),
         ("complete", Json::Bool(out.complete)),
@@ -373,6 +418,83 @@ mod tests {
         assert!(handle(&c, r#"{"op":"nope"}"#).is_err());
         assert!(handle(&c, r#"{"op":"plan"}"#).is_err()); // no budget
         assert!(handle(&c, r#"{"op":"plan","budget":10,"approach":"x"}"#).is_err());
+    }
+
+    #[test]
+    fn errors_name_the_offending_op_and_policy() {
+        let c = ctx();
+        // Unknown policy: the error names the op, the policy and the
+        // known alternatives.
+        let e = handle(&c, r#"{"op":"plan","budget":10,"policy":"warp"}"#).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("\"plan\""), "{msg}");
+        assert!(msg.contains("\"warp\""), "{msg}");
+        assert!(msg.contains("budget-heuristic"), "{msg}");
+        // Missing budget: the error still names the op.
+        let e = handle(&c, r#"{"op":"simulate"}"#).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("\"simulate\""), "{msg}");
+        assert!(msg.contains("budget"), "{msg}");
+        // Unknown op: the error names it and lists the known ops.
+        let e = handle(&c, r#"{"op":"nope"}"#).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("\"nope\""), "{msg}");
+        assert!(msg.contains("list_policies"), "{msg}");
+    }
+
+    #[test]
+    fn list_policies_covers_the_registry() {
+        let c = ctx();
+        let r = handle(&c, r#"{"op":"list_policies"}"#).unwrap();
+        let policies = r.body.get("policies").unwrap().as_arr().unwrap();
+        let names: Vec<&str> = policies
+            .iter()
+            .map(|p| p.get("name").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(names, crate::scheduler::BUILTIN_POLICIES);
+        for p in policies {
+            assert!(!p.get("description").unwrap().as_str().unwrap().is_empty());
+        }
+    }
+
+    #[test]
+    fn plan_accepts_policy_field_for_every_builtin() {
+        let c = ctx();
+        for name in crate::scheduler::BUILTIN_POLICIES {
+            let line = format!(
+                r#"{{"op":"plan","budget":80,"deadline":7200,"policy":"{name}"}}"#
+            );
+            let r = handle(&c, &line).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            assert_eq!(r.body.get("ok"), Some(&Json::Bool(true)), "{name}");
+            assert_eq!(r.body.get("policy").unwrap().as_str(), Some(*name));
+            assert!(r.body.get("makespan").unwrap().as_f64().unwrap() > 0.0, "{name}");
+        }
+    }
+
+    #[test]
+    fn campaign_accepts_policy_field() {
+        let c = ctx();
+        let r = handle(&c, r#"{"op":"campaign","budget":120,"policy":"mp"}"#).unwrap();
+        assert_eq!(r.body.get("policy").unwrap().as_str(), Some("mp"));
+        assert_eq!(r.body.get("complete"), Some(&Json::Bool(true)));
+        assert!(handle(&c, r#"{"op":"campaign","budget":120,"policy":"zz"}"#).is_err());
+        // Policy knobs reach the per-round solver: a deadline campaign
+        // must plan within the deadline, not just within the budget.
+        let r = handle(
+            &c,
+            r#"{"op":"campaign","budget":200,"policy":"deadline","deadline":3600}"#,
+        )
+        .unwrap();
+        let planned = r.body.get("planned_makespan").unwrap().as_f64().unwrap();
+        assert!(planned <= 3600.0 + 1e-6, "deadline ignored: {planned}");
+    }
+
+    #[test]
+    fn orphan_deadline_selects_the_deadline_policy() {
+        let c = ctx();
+        let r = handle(&c, r#"{"op":"plan","budget":200,"deadline":3600}"#).unwrap();
+        assert_eq!(r.body.get("policy").unwrap().as_str(), Some("deadline"));
+        assert!(r.body.get("makespan").unwrap().as_f64().unwrap() <= 3600.0 + 1e-6);
     }
 
     #[test]

@@ -126,9 +126,11 @@ fn accept_loop(
     metrics: Arc<Metrics>,
 ) {
     let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
-    // One registry for the whole server: job ids are visible across
-    // connections (submit on one socket, poll on another).
+    // One job registry for the whole server: job ids are visible across
+    // connections (submit on one socket, poll on another).  Likewise one
+    // policy registry, shared by every connection thread.
     let jobs = Arc::new(JobRegistry::new());
+    let registry = Arc::new(crate::scheduler::PolicyRegistry::builtin());
     while !stop.load(Ordering::Acquire) {
         match listener.accept() {
             Ok((stream, _peer)) => {
@@ -137,6 +139,7 @@ fn accept_loop(
                     evaluator: Arc::clone(&evaluator),
                     metrics: Arc::clone(&metrics),
                     jobs: Arc::clone(&jobs),
+                    registry: Arc::clone(&registry),
                 };
                 workers.push(std::thread::spawn(move || {
                     if let Err(e) = serve_connection(stream, ctx, ctx_stop) {

@@ -6,28 +6,43 @@
 //! Bag-of-Tasks Applications on the Cloud"* (IEEE CLOUD 2015,
 //! DOI 10.1109/CLOUD.2015.131).
 //!
+//! Every planning consumer — library callers, the CLI, the coordinator's
+//! wire protocol, the cloud simulator's campaigns, the benches — speaks
+//! one solver API: a [`scheduler::Policy`] is resolved by name from the
+//! [`scheduler::PolicyRegistry`], given a [`scheduler::SolveRequest`]
+//! (budget, optional deadline, evaluator handle, seed, tuning knobs) and
+//! returns a [`scheduler::SolveOutcome`] (plan, makespan, cost,
+//! feasibility, iteration trace).  Adding a scheduling scenario is one
+//! `impl Policy` plus one registry line; it then works everywhere,
+//! including over the wire via `{"op":"plan","policy":"<name>",...}`.
+//!
 //! The crate is organised in layers:
 //!
 //! * [`model`] — the paper's Section III problem model: applications, tasks,
 //!   instance types, the performance matrix, VMs, execution plans, and the
 //!   hourly billing / makespan cost model.
-//! * [`scheduler`] — the paper's Section IV contribution: the heuristic
-//!   planner (`INITIAL`, `ASSIGN`, `BALANCE`, `REDUCE`, `ADD`, `SPLIT`,
-//!   `REPLACE`, and the `FIND` fixed-point loop) plus the Section V
-//!   comparison baselines (MI, MP) and the future-work extensions
-//!   (deadline-aware, dynamic rescheduling, non-clairvoyant).
+//! * [`scheduler`] — the policy layer.  The unified `Policy` /
+//!   `SolveRequest` / `SolveOutcome` / `PolicyRegistry` API fronts the
+//!   paper's Section IV heuristic planner (`INITIAL`, `ASSIGN`,
+//!   `BALANCE`, `REDUCE`, `ADD`, `SPLIT`, `REPLACE`, and the `FIND`
+//!   fixed-point loop), the Section V comparison baselines (MI, MP), a
+//!   multi-start wrapper, and the future-work extensions (deadline-aware,
+//!   dynamic rescheduling, non-clairvoyant).
 //! * [`cloudsim`] — a discrete-event cloud simulator substrate (VM boot
 //!   overhead, per-hour billing, performance jitter, failures) standing in
-//!   for the paper's Scala simulation framework and for a real IaaS cloud.
+//!   for the paper's Scala simulation framework and for a real IaaS cloud;
+//!   its closed-loop campaigns re-plan through any registered policy.
 //! * [`workload`] — BoT workload and performance-matrix generators,
 //!   including the paper's exact Table I setup.
 //! * [`runtime`] — PJRT/XLA runtime: loads the AOT-compiled plan-evaluation
 //!   artifacts produced by `python/compile/aot.py` and exposes them behind
-//!   the [`eval::PlanEvaluator`] trait.
+//!   the [`eval::PlanEvaluator`] trait (the evaluator handle a
+//!   `SolveRequest` carries).
 //! * [`coordinator`] — the long-running leader: a TCP JSON protocol server
-//!   with request batching that plans, simulates and reports.
-//! * [`analysis`] — lower bounds, statistics and the figure/table printers
-//!   used by the benchmark harness.
+//!   with request batching that plans (any policy, by name, with
+//!   `list_policies` discovery), simulates and reports.
+//! * [`analysis`] — lower bounds, statistics and the policy-generic
+//!   sweep/figure printers used by the benchmark harness.
 
 pub mod analysis;
 pub mod benchkit;

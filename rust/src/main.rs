@@ -20,14 +20,14 @@ use std::process::ExitCode;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use botsched::analysis::report::{plan_for, run_sweep};
+use botsched::analysis::report::run_sweep;
 use botsched::analysis::{fractional_cost_floor, makespan_floor};
 use botsched::cloudsim::{run_campaign, sample_runs, CampaignSpec, NoiseModel, SimConfig, Simulator};
 use botsched::config;
 use botsched::coordinator::{Coordinator, CoordinatorConfig};
 use botsched::eval::{NativeEvaluator, PlanEvaluator};
 use botsched::model::System;
-use botsched::scheduler::{Planner, PlannerConfig};
+use botsched::scheduler::{canonical_name, Planner, PlannerConfig, PolicyRegistry, SolveRequest};
 use botsched::workload::paper;
 
 fn main() -> ExitCode {
@@ -137,6 +137,7 @@ fn run(args: Vec<String>) -> Result<()> {
     let a = Args::parse(&args[1..])?;
     match cmd.as_str() {
         "figures" => cmd_figures(&a),
+        "policies" => cmd_policies(),
         "plan" => cmd_plan(&a),
         "sweep" => cmd_sweep(&a),
         "simulate" => cmd_simulate(&a),
@@ -161,10 +162,11 @@ fn print_help() {
          (reproduction of Thai/Varghese/Barker, IEEE CLOUD 2015)\n\n\
          commands:\n\
          \x20 figures   regenerate Table I, Fig. 1, Fig. 2 and the headline claims\n\
-         \x20 plan      plan one budget (--budget B, --approach heuristic|mi|mp)\n\
+         \x20 policies  list the registered scheduling policies\n\
+         \x20 plan      plan one budget (--budget B, --policy <name>, --deadline D, --multistart N)\n\
          \x20 sweep     full budget sweep (--budgets 40,45,.. --ablate for phase ablation)\n\
          \x20 simulate  plan + execute on the simulated cloud (--sigma, --lifetime, --seed)\n\
-         \x20 campaign  closed-loop execution with failures + replanning (--reserve)\n\
+         \x20 campaign  closed-loop execution with failures + replanning (--reserve, --policy, --deadline)\n\
          \x20 estimate  bootstrap the performance matrix from sampled test runs\n\
          \x20 bounds    LP cost floor and budget-capped makespan floor\n\
          \x20 pareto    budget/makespan Pareto frontier + knee\n\
@@ -197,37 +199,59 @@ fn cmd_figures(a: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_policies() -> Result<()> {
+    let registry = PolicyRegistry::builtin();
+    println!("registered policies:");
+    for p in registry.iter() {
+        println!("  {:<16} {}", p.name(), p.description());
+    }
+    println!("\n(select with --policy <name>; \"heuristic\" is accepted as an alias)");
+    Ok(())
+}
+
 fn cmd_plan(a: &Args) -> Result<()> {
     let sys = load_sys(a)?;
     let budget = a.f64("budget")?.ok_or_else(|| anyhow!("--budget required"))?;
-    let approach = a.get("approach").unwrap_or("heuristic");
+    let mut name = a
+        .get("policy")
+        .or_else(|| a.get("approach"))
+        .unwrap_or("budget-heuristic")
+        .to_string();
     let eval = evaluator(a);
-    let t0 = std::time::Instant::now();
-    let plan = match approach {
-        "heuristic" => match a.u64("multistart")? {
-            Some(n) if n > 1 => {
-                let cfg = botsched::scheduler::MultiStartConfig {
-                    n_starts: n as usize,
-                    seed: a.u64("seed")?.unwrap_or(0),
-                    ..Default::default()
-                };
-                botsched::scheduler::find_multistart(&sys, budget, &cfg, eval.as_ref()).plan
+    let mut req = SolveRequest::new(budget)
+        .with_evaluator(eval.as_ref())
+        .with_seed(a.u64("seed")?.unwrap_or(0));
+    if let Some(d) = a.f64("deadline")? {
+        req = req.with_deadline(d);
+        if canonical_name(&name) == "budget-heuristic" {
+            name = "deadline".into();
+        }
+    }
+    if let Some(n) = a.u64("multistart")? {
+        if n > 1 {
+            req = req.with_starts(n as usize);
+            if canonical_name(&name) == "budget-heuristic" {
+                name = "multistart".into();
             }
-            _ => Planner::with_evaluator(&sys, eval.as_ref()).find(budget).plan,
-        },
-        _ => plan_for(&sys, approach, budget),
-    };
+        }
+    }
+    let registry = PolicyRegistry::builtin();
+    let t0 = std::time::Instant::now();
+    let out = registry.solve(&name, &sys, &req)?;
     let elapsed = t0.elapsed();
-    let score = eval.eval_plan(&sys, &plan);
     println!(
-        "approach={approach} budget={budget} makespan={:.1}s cost={} feasible={} vms={} planned_in={:?}",
-        score.makespan,
-        score.cost,
-        score.satisfies(budget),
-        plan.n_vms(),
+        "policy={} budget={budget} makespan={:.1}s cost={} feasible={} vms={} \
+         iterations={} probes={} planned_in={:?}",
+        out.policy,
+        out.score.makespan,
+        out.score.cost,
+        out.feasible,
+        out.plan.n_vms(),
+        out.iterations,
+        out.probes,
         elapsed
     );
-    for (i, vm) in plan.vms.iter().enumerate() {
+    for (i, vm) in out.plan.vms.iter().enumerate() {
         println!(
             "  vm{i:<3} {:<22} tasks={:<4} exec={:>8.1}s cost={}",
             sys.instance_type(vm.it).name,
@@ -247,8 +271,7 @@ fn cmd_sweep(a: &Args) -> Result<()> {
         // Phase-ablation study: disable one phase at a time.
         println!("ablation over budgets {bs:?} (mean makespan, feasible cells)");
         #[allow(clippy::type_complexity)]
-        #[allow(clippy::type_complexity)]
-    let phases: [(&str, fn(&mut PlannerConfig)); 6] = [
+        let phases: [(&str, fn(&mut PlannerConfig)); 6] = [
             ("full", |_| {}),
             ("-reduce", |c| c.enable_reduce = false),
             ("-add", |c| c.enable_add = false),
@@ -288,13 +311,17 @@ fn cmd_sweep(a: &Args) -> Result<()> {
 fn cmd_simulate(a: &Args) -> Result<()> {
     let sys = load_sys(a)?;
     let budget = a.f64("budget")?.ok_or_else(|| anyhow!("--budget required"))?;
+    let name = a.get("policy").or_else(|| a.get("approach")).unwrap_or("budget-heuristic");
     let eval = evaluator(a);
-    let report = Planner::with_evaluator(&sys, eval.as_ref()).find(budget);
+    let req = SolveRequest::new(budget)
+        .with_evaluator(eval.as_ref())
+        .with_seed(a.u64("seed")?.unwrap_or(0));
+    let report = PolicyRegistry::builtin().solve(name, &sys, &req)?;
     let cfg = SimConfig { noise: noise(a)?, seed: a.u64("seed")?.unwrap_or(0) };
     let sim = Simulator::run_plan(&sys, &report.plan, &cfg);
     println!(
-        "planned: makespan={:.1}s cost={} feasible={}",
-        report.score.makespan, report.score.cost, report.feasible
+        "planned ({}): makespan={:.1}s cost={} feasible={}",
+        report.policy, report.score.makespan, report.score.cost, report.feasible
     );
     println!(
         "simulated: makespan={:.1}s cost={} completed={} stranded={} failures={}",
@@ -311,6 +338,13 @@ fn cmd_campaign(a: &Args) -> Result<()> {
     let sys = load_sys(a)?;
     let budget = a.f64("budget")?.ok_or_else(|| anyhow!("--budget required"))?;
     let mut spec = CampaignSpec::new(budget);
+    if let Some(p) = a.get("policy") {
+        spec.policy = PolicyRegistry::builtin().resolve_arc(p)?;
+    }
+    if let Some(d) = a.f64("deadline")? {
+        spec.base_request = spec.base_request.with_deadline(d);
+    }
+    spec.evaluator = Some(std::sync::Arc::from(evaluator(a)));
     spec.sim.noise = noise(a)?;
     spec.sim.seed = a.u64("seed")?.unwrap_or(0);
     if let Some(r) = a.f64("reserve")? {

@@ -19,7 +19,11 @@ use crate::model::System;
 pub struct DeadlineReport {
     /// The cheapest plan found meeting the deadline, if any.
     pub report: Option<FindReport>,
-    /// The budget that produced it.
+    /// When the deadline is unreachable: the best plan at the full cap
+    /// (already computed by the search — callers can report best-effort
+    /// without planning again).
+    pub best_effort: Option<FindReport>,
+    /// The budget that produced `report`.
     pub budget: f64,
     /// Planner invocations spent in the bisection.
     pub probes: usize,
@@ -30,22 +34,38 @@ pub struct DeadlineReport {
 /// spending limit); returns `report: None` when even `budget_hi` cannot
 /// meet the deadline.
 pub fn min_cost_for_deadline(sys: &System, deadline: f64, budget_hi: f64) -> DeadlineReport {
-    let planner = Planner::new(sys);
+    min_cost_for_deadline_with(&Planner::new(sys), deadline, budget_hi)
+}
+
+/// [`min_cost_for_deadline`] probing through a caller-configured planner
+/// (evaluator + phase toggles), so policy-level settings apply to every
+/// bisection probe.
+pub fn min_cost_for_deadline_with(
+    planner: &Planner,
+    deadline: f64,
+    budget_hi: f64,
+) -> DeadlineReport {
+    let sys = planner.sys;
     let mut probes = 0usize;
 
-    // Budget lower bound: one hour of the cheapest machine.
+    // Budget lower bound: one hour of the cheapest machine.  A cap below
+    // that cannot buy any machine-hour — the budget is a hard spending
+    // limit, so the search must not silently raise it.
     let mut lo = sys
         .instance_types
         .iter()
         .map(|it| it.cost_per_hour)
         .fold(f64::INFINITY, f64::min);
-    let mut hi = budget_hi.max(lo);
+    if budget_hi + 1e-9 < lo {
+        return DeadlineReport { report: None, best_effort: None, budget: budget_hi, probes };
+    }
+    let mut hi = budget_hi;
 
     // Check feasibility at the cap first.
     let top = planner.find(hi);
     probes += 1;
     if !(top.feasible && top.score.makespan <= deadline + 1e-6) {
-        return DeadlineReport { report: None, budget: hi, probes };
+        return DeadlineReport { report: None, best_effort: Some(top), budget: hi, probes };
     }
     let mut best = top;
     let mut best_budget = hi;
@@ -65,7 +85,7 @@ pub fn min_cost_for_deadline(sys: &System, deadline: f64, budget_hi: f64) -> Dea
             lo = mid;
         }
     }
-    DeadlineReport { report: Some(best), budget: best_budget, probes }
+    DeadlineReport { report: Some(best), best_effort: None, budget: best_budget, probes }
 }
 
 #[cfg(test)]

@@ -11,7 +11,8 @@
 
 use std::collections::HashMap;
 
-use super::find::{FindReport, Planner, PlannerConfig};
+use super::find::{FindReport, PlannerConfig};
+use super::policy::{BudgetHeuristic, Policy, SolveOutcome, SolveRequest};
 use crate::model::{Plan, System, TaskId};
 
 /// A sub-problem over a subset of the parent's tasks.
@@ -56,26 +57,42 @@ pub fn subproblem(parent: &System, remaining: &[TaskId]) -> SubProblem {
     SubProblem { sys, back }
 }
 
-/// Re-plan the residual workload with the remaining budget; returns the
-/// sub-plan re-expressed in **parent** task ids.
+/// Re-plan the residual workload with any [`Policy`]: build the
+/// sub-problem, solve it, and translate the outcome's plan back to
+/// **parent** task ids.
+pub fn replan_policy(
+    parent: &System,
+    remaining: &[TaskId],
+    policy: &dyn Policy,
+    req: &SolveRequest,
+) -> SolveOutcome {
+    let sub = subproblem(parent, remaining);
+    let mut outcome = policy.solve(&sub.sys, req);
+
+    // Translate the plan back to parent ids.
+    let mut parent_plan = Plan::new();
+    for vm in &outcome.plan.vms {
+        let idx = parent_plan.add_vm(parent, vm.it);
+        for &sub_tid in vm.tasks() {
+            parent_plan.vms[idx].push_task(parent, sub.back[sub_tid.index()]);
+        }
+    }
+    outcome.plan = parent_plan;
+    outcome
+}
+
+/// Re-plan the residual workload with the budget heuristic (legacy shim
+/// over [`replan_policy`]); the report's plan is in **parent** task ids.
 pub fn replan(
     parent: &System,
     remaining: &[TaskId],
     budget_left: f64,
     config: PlannerConfig,
 ) -> (Plan, FindReport) {
-    let sub = subproblem(parent, remaining);
-    let report = Planner::new(&sub.sys).with_config(config).find(budget_left);
-
-    // Translate the plan back to parent ids.
-    let mut parent_plan = Plan::new();
-    for vm in &report.plan.vms {
-        let idx = parent_plan.add_vm(parent, vm.it);
-        for &sub_tid in vm.tasks() {
-            parent_plan.vms[idx].push_task(parent, sub.back[sub_tid.index()]);
-        }
-    }
-    (parent_plan, report)
+    let req = SolveRequest::new(budget_left).with_planner(config);
+    let outcome = replan_policy(parent, remaining, &BudgetHeuristic, &req);
+    let report = outcome.to_find_report();
+    (outcome.plan, report)
 }
 
 /// Validate that `plan` covers exactly `remaining` (the dynamic analogue
@@ -116,6 +133,26 @@ mod tests {
             let parent_task = sys.task(sub.back[i]);
             assert_eq!(t.size, parent_task.size);
             assert_eq!(t.app, parent_task.app);
+        }
+    }
+
+    #[test]
+    fn replan_policy_runs_any_registered_policy() {
+        let sys = table1_system(0.0);
+        let remaining: Vec<TaskId> =
+            sys.tasks().iter().filter(|t| t.id.0 % 4 == 0).map(|t| t.id).collect();
+        let req = SolveRequest::new(40.0);
+        for policy in [
+            &crate::scheduler::MaximiseParallelism as &dyn Policy,
+            &crate::scheduler::MinimiseIndividual,
+            &BudgetHeuristic,
+        ] {
+            let outcome = replan_policy(&sys, &remaining, policy, &req);
+            assert!(
+                validate_residual(&outcome.plan, &remaining).is_ok(),
+                "{}: bad residual cover",
+                policy.name()
+            );
         }
     }
 

@@ -1,24 +1,41 @@
-//! The paper's Section IV heuristic planner and Section V baselines.
+//! Scheduling policies: the paper's Section IV heuristic planner, the
+//! Section V baselines, the Section VI extensions — all behind one
+//! uniform solver API.
 //!
-//! The planner is decomposed exactly as the paper presents it:
+//! **Entry point:** the [`policy`] module. Resolve a policy by name from
+//! the [`PolicyRegistry`], describe the problem with a [`SolveRequest`],
+//! and get a [`SolveOutcome`] back:
 //!
-//! | paper fn  | module       | purpose |
-//! |-----------|--------------|---------|
-//! | `ASSIGN`  | [`assign`]   | route tasks to VMs by (no-cost-increase, task speed, VM load) |
-//! | `BALANCE` | [`balance`]  | even out VM finish times without raising makespan/cost |
-//! | `INITIAL` | [`initial`]  | per-app best-type pools sized by the whole budget |
-//! | `REDUCE`  | [`reduce`]   | dismantle whole VMs (local/global) until the budget holds |
-//! | `ADD`     | [`add`]      | spend remaining budget on the best-performing affordable type |
-//! | `SPLIT`   | [`split`]    | keep VM run times under one billed hour (paper's *KEEP*) |
-//! | `REPLACE` | [`replace`]  | swap expensive VMs for more cheaper ones when it pays off |
-//! | Alg. 1    | [`find`]     | the fixed-point iteration tying the phases together |
+//! ```text
+//! let registry = PolicyRegistry::builtin();
+//! let outcome  = registry.solve("budget-heuristic", &sys, &SolveRequest::new(80.0))?;
+//! ```
 //!
-//! Baselines (Sec. V-A): [`baselines::minimise_individual`] (MI) and
-//! [`baselines::maximise_parallelism`] (MP).
+//! | module            | role |
+//! |-------------------|------|
+//! | [`policy`]        | `Policy` trait, `SolveRequest`/`SolveOutcome`, name registry |
+//! | [`find`]          | Alg. 1 `FIND`: the fixed-point iteration tying the phases together |
+//! | [`assign`]        | paper `ASSIGN`: route tasks to VMs by (no-cost-increase, task speed, VM load) |
+//! | [`balance`]       | paper `BALANCE`: even out VM finish times without raising makespan/cost |
+//! | [`initial`]       | paper `INITIAL`: per-app best-type pools sized by the whole budget |
+//! | [`reduce`]        | paper `REDUCE`: dismantle whole VMs (local/global) until the budget holds |
+//! | [`add`]           | paper `ADD`: spend remaining budget on the best-performing affordable type |
+//! | [`split`]         | paper `SPLIT`: keep VM run times under one billed hour (paper's *KEEP*) |
+//! | [`replace`]       | paper `REPLACE`: swap expensive VMs for more cheaper ones when it pays off |
+//! | [`baselines`]     | Sec. V-A baselines MI and MP |
+//! | [`multistart`]    | GRASP-style perturbed restarts of FIND |
+//! | [`deadline`]      | Sec. VI: deadline-constrained cost minimisation |
+//! | [`dynamic`]       | Sec. VI: residual re-planning mid-execution |
+//! | [`nonclairvoyant`]| Sec. VI: planning under estimated sizes + online dispatch |
 //!
-//! Future-work extensions (Sec. VI): [`deadline`] (deadline-constrained
-//! cost minimisation), [`dynamic`] (re-planning mid-execution) and
-//! [`nonclairvoyant`] (unknown task sizes).
+//! Registered policy names: `"budget-heuristic"`, `"mi"`, `"mp"`,
+//! `"multistart"`, `"deadline"`, `"dynamic"`, `"nonclairvoyant"` (plus
+//! aliases such as `"heuristic"`; see [`policy::canonical_name`]).
+//!
+//! The per-policy entry points (`Planner::find`, `find_multistart`,
+//! `minimise_individual`, ...) remain as the underlying implementations
+//! and keep compiling for existing callers, but new code — and anything
+//! that wants to be policy-generic — should go through the registry.
 
 pub mod add;
 pub mod assign;
@@ -30,6 +47,7 @@ pub mod find;
 pub mod initial;
 pub mod multistart;
 pub mod nonclairvoyant;
+pub mod policy;
 pub mod reduce;
 pub mod replace;
 pub mod split;
@@ -41,6 +59,11 @@ pub use baselines::{maximise_parallelism, minimise_individual};
 pub use find::{FindReport, Planner, PlannerConfig};
 pub use initial::initial;
 pub use multistart::{find_multistart, MultiStartConfig};
+pub use policy::{
+    canonical_name, legacy_name, BudgetHeuristic, DeadlineSearch, DynamicReplan,
+    MaximiseParallelism, MinimiseIndividual, MultiStart, NonClairvoyant, Policy, PolicyRegistry,
+    SolveOutcome, SolveRequest, UnknownPolicy, BUILTIN_POLICIES,
+};
 pub use reduce::{reduce, ReduceMode};
 pub use replace::replace;
 pub use split::split;

@@ -1,0 +1,773 @@
+//! The unified solver API: one entry point for every scheduling policy.
+//!
+//! The paper contributes one planner among several competitors (the
+//! Section IV budget heuristic vs the Section V MI/MP baselines, plus the
+//! Section VI deadline / dynamic / non-clairvoyant extensions), and the
+//! companion papers (arXiv:1507.05470, arXiv:1506.00590) add more policy
+//! variants.  Historically each had its own ad-hoc entry point
+//! (`Planner::find`, `find_multistart`, `minimise_individual`, ...), which
+//! forced the coordinator, the cloud simulator, the examples and the
+//! benches to hand-wire every policy separately.
+//!
+//! This module is the single uniform surface instead:
+//!
+//! * [`Policy`] — `solve(&self, sys, req) -> SolveOutcome`, object-safe so
+//!   registries, campaign specs and wire handlers can hold `dyn Policy`;
+//! * [`SolveRequest`] — a builder carrying the budget, an optional
+//!   deadline, the evaluator handle, a seed and the per-policy tuning
+//!   knobs (planner phase toggles, restart count, sample fraction, ...);
+//! * [`SolveOutcome`] — the unified return shape: plan, score, budget
+//!   feasibility, iteration/probe counts and the budget that produced the
+//!   plan;
+//! * [`PolicyRegistry`] — resolves string names (`"budget-heuristic"`,
+//!   `"mi"`, `"mp"`, `"multistart"`, `"deadline"`, `"dynamic"`,
+//!   `"nonclairvoyant"`) to policies, so adding a future policy is one
+//!   `impl Policy` plus one registry line.
+//!
+//! The legacy entry points remain as thin wrappers over the same
+//! underlying phase implementations, so existing code keeps compiling;
+//! new code should go through this API.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::Arc;
+
+use crate::eval::{NativeEvaluator, PlanEvaluator};
+use crate::model::{Plan, PlanScore, System, TaskId};
+use crate::util::Rng;
+
+use super::baselines::{maximise_parallelism, minimise_individual};
+use super::deadline::min_cost_for_deadline_with;
+use super::find::{FindReport, Planner, PlannerConfig};
+use super::multistart::{find_multistart, MultiStartConfig};
+use super::nonclairvoyant::surrogate_system;
+use super::{assign, balance};
+
+/// Map legacy / spelling-variant policy names onto the canonical registry
+/// names (`"heuristic"` was the coordinator's historical name for the
+/// paper's budget heuristic).
+pub fn canonical_name(name: &str) -> &str {
+    match name {
+        "heuristic" | "find" | "algorithm1" => "budget-heuristic",
+        "non-clairvoyant" => "nonclairvoyant",
+        "multi-start" => "multistart",
+        "minimise-individual" | "minimize-individual" => "mi",
+        "maximise-parallelism" | "maximize-parallelism" => "mp",
+        other => other,
+    }
+}
+
+/// Inverse of [`canonical_name`] for the one renamed policy: legacy wire
+/// fields (`"approach"`) keep the historical `"heuristic"` spelling so
+/// pre-registry clients keep matching.
+pub fn legacy_name(name: &str) -> &str {
+    if name == "budget-heuristic" {
+        "heuristic"
+    } else {
+        name
+    }
+}
+
+/// A structured solve request: what to optimise, under which constraints,
+/// scored through which evaluator, with which policy-specific knobs.
+///
+/// Knobs irrelevant to a policy are simply ignored by it (e.g. `n_starts`
+/// only matters to `"multistart"`), so one request can be replayed across
+/// the whole registry.
+#[derive(Clone)]
+pub struct SolveRequest<'a> {
+    /// The budget `B` of eq. 9 (for `"deadline"` this is the spending cap
+    /// the bisection may not exceed).
+    pub budget: f64,
+    /// Completion deadline in seconds (used by `"deadline"`; `None` means
+    /// unconstrained, i.e. pure cost minimisation).
+    pub deadline: Option<f64>,
+    /// Seed for stochastic policies (`"multistart"` restarts,
+    /// `"nonclairvoyant"` size sampling).
+    pub seed: u64,
+    /// Phase toggles + iteration cap for Algorithm 1 (all policies built
+    /// on FIND honour this).
+    pub planner: PlannerConfig,
+    /// Restart count for `"multistart"`.
+    pub n_starts: usize,
+    /// Perf-matrix jitter for `"multistart"` restarts.
+    pub perf_jitter: f64,
+    /// Fraction of task sizes the `"nonclairvoyant"` estimator may sample
+    /// (`1.0` = oracle mean).
+    pub sample_frac: f64,
+    /// Residual task set for `"dynamic"` re-planning (`None` or empty =
+    /// the full workload).
+    pub remaining: Option<Vec<TaskId>>,
+    /// Evaluator all candidate scoring goes through; `None` = the exact
+    /// native evaluator.
+    evaluator: Option<&'a dyn PlanEvaluator>,
+}
+
+impl<'a> SolveRequest<'a> {
+    /// A request with the paper's defaults: native evaluator, default
+    /// planner config, 8 multi-start restarts, oracle size estimates.
+    pub fn new(budget: f64) -> Self {
+        let ms = MultiStartConfig::default();
+        Self {
+            budget,
+            deadline: None,
+            seed: 0,
+            planner: PlannerConfig::default(),
+            n_starts: ms.n_starts,
+            perf_jitter: ms.perf_jitter,
+            sample_frac: 1.0,
+            remaining: None,
+            evaluator: None,
+        }
+    }
+
+    pub fn with_budget(mut self, budget: f64) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: f64) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_planner(mut self, planner: PlannerConfig) -> Self {
+        self.planner = planner;
+        self
+    }
+
+    pub fn with_starts(mut self, n_starts: usize) -> Self {
+        self.n_starts = n_starts;
+        self
+    }
+
+    pub fn with_perf_jitter(mut self, perf_jitter: f64) -> Self {
+        self.perf_jitter = perf_jitter;
+        self
+    }
+
+    pub fn with_sample_frac(mut self, sample_frac: f64) -> Self {
+        self.sample_frac = sample_frac;
+        self
+    }
+
+    pub fn with_remaining(mut self, remaining: Vec<TaskId>) -> Self {
+        self.remaining = Some(remaining);
+        self
+    }
+
+    pub fn with_evaluator(mut self, evaluator: &'a dyn PlanEvaluator) -> Self {
+        self.evaluator = Some(evaluator);
+        self
+    }
+
+    /// The evaluator to score through (native fallback when unset).
+    pub fn evaluator(&self) -> &dyn PlanEvaluator {
+        match self.evaluator {
+            Some(e) => e,
+            None => &NativeEvaluator,
+        }
+    }
+
+    /// The multi-start configuration this request describes.
+    pub fn multistart_config(&self) -> MultiStartConfig {
+        MultiStartConfig {
+            n_starts: self.n_starts,
+            perf_jitter: self.perf_jitter,
+            seed: self.seed,
+            base: self.planner.clone(),
+        }
+    }
+}
+
+impl fmt::Debug for SolveRequest<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("SolveRequest")
+            .field("budget", &self.budget)
+            .field("deadline", &self.deadline)
+            .field("seed", &self.seed)
+            .field("n_starts", &self.n_starts)
+            .field("perf_jitter", &self.perf_jitter)
+            .field("sample_frac", &self.sample_frac)
+            .field("remaining", &self.remaining.as_ref().map(Vec::len))
+            .field("evaluator", &self.evaluator.map(|e| e.name()))
+            .field("planner", &self.planner)
+            .finish()
+    }
+}
+
+/// The unified result of any policy run (supersedes the per-policy
+/// `FindReport` / bare-`Plan` / `DeadlineReport` return shapes).
+#[derive(Debug, Clone)]
+pub struct SolveOutcome {
+    /// Canonical registry name of the policy that produced this outcome.
+    pub policy: &'static str,
+    /// The execution plan (eq. 3/4 partition of `T`).
+    pub plan: Plan,
+    /// Makespan (eq. 7) + realized cost (eq. 8) of `plan`.
+    pub score: PlanScore,
+    /// Whether the outcome satisfies the request's constraints: eq. 9 for
+    /// budget policies, deadline-met for `"deadline"`.
+    pub feasible: bool,
+    /// Iterations of the underlying optimisation loop.
+    pub iterations: usize,
+    /// Planner invocations consumed (bisection probes, restarts; 1 for
+    /// single-shot policies).
+    pub probes: usize,
+    /// The budget that produced `plan` (differs from the requested budget
+    /// under `"deadline"`'s cheapest-budget search).
+    pub effective_budget: f64,
+}
+
+impl SolveOutcome {
+    fn from_find(policy: &'static str, budget: f64, report: FindReport) -> Self {
+        Self {
+            policy,
+            plan: report.plan,
+            score: report.score,
+            feasible: report.feasible,
+            iterations: report.iterations,
+            probes: 1,
+            effective_budget: budget,
+        }
+    }
+
+    /// View as the legacy [`FindReport`] shape (compat shim).
+    pub fn to_find_report(&self) -> FindReport {
+        FindReport {
+            plan: self.plan.clone(),
+            score: self.score,
+            feasible: self.feasible,
+            iterations: self.iterations,
+        }
+    }
+}
+
+/// A scheduling policy: anything that turns `(system, request)` into an
+/// execution plan.  Object-safe; `Send + Sync` so the coordinator can
+/// serve one instance from many connection threads.
+pub trait Policy: Send + Sync {
+    /// Canonical registry name (`"budget-heuristic"`, `"mi"`, ...).
+    fn name(&self) -> &'static str;
+
+    /// One-line human description (shown by `list_policies` and the CLI).
+    fn description(&self) -> &'static str {
+        ""
+    }
+
+    /// Solve the request against `sys`.
+    fn solve(&self, sys: &System, req: &SolveRequest) -> SolveOutcome;
+}
+
+// ---------------------------------------------------------------------------
+// Built-in policies.
+
+/// The paper's Section IV contribution: Algorithm 1 (FIND) — minimise
+/// makespan subject to the budget.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BudgetHeuristic;
+
+impl Policy for BudgetHeuristic {
+    fn name(&self) -> &'static str {
+        "budget-heuristic"
+    }
+
+    fn description(&self) -> &'static str {
+        "paper Sec. IV heuristic (Algorithm 1): minimise makespan under a budget"
+    }
+
+    fn solve(&self, sys: &System, req: &SolveRequest) -> SolveOutcome {
+        let report = Planner::with_evaluator(sys, req.evaluator())
+            .with_config(req.planner.clone())
+            .find(req.budget);
+        SolveOutcome::from_find(self.name(), req.budget, report)
+    }
+}
+
+/// Sec. V-A baseline MI: minimise individual task execution time.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MinimiseIndividual;
+
+impl Policy for MinimiseIndividual {
+    fn name(&self) -> &'static str {
+        "mi"
+    }
+
+    fn description(&self) -> &'static str {
+        "Sec. V baseline: buy the best-average-performance affordable type (MI)"
+    }
+
+    fn solve(&self, sys: &System, req: &SolveRequest) -> SolveOutcome {
+        let plan = minimise_individual(sys, req.budget);
+        let score = req.evaluator().eval_plan(sys, &plan);
+        SolveOutcome {
+            policy: self.name(),
+            feasible: score.satisfies(req.budget),
+            plan,
+            score,
+            iterations: 0,
+            probes: 1,
+            effective_budget: req.budget,
+        }
+    }
+}
+
+/// Sec. V-A baseline MP: maximise parallelism with the cheapest type.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MaximiseParallelism;
+
+impl Policy for MaximiseParallelism {
+    fn name(&self) -> &'static str {
+        "mp"
+    }
+
+    fn description(&self) -> &'static str {
+        "Sec. V baseline: as many cheapest-type VMs as the budget buys (MP)"
+    }
+
+    fn solve(&self, sys: &System, req: &SolveRequest) -> SolveOutcome {
+        let plan = maximise_parallelism(sys, req.budget);
+        let score = req.evaluator().eval_plan(sys, &plan);
+        SolveOutcome {
+            policy: self.name(),
+            feasible: score.satisfies(req.budget),
+            plan,
+            score,
+            iterations: 0,
+            probes: 1,
+            effective_budget: req.budget,
+        }
+    }
+}
+
+/// GRASP-style perturbed restarts of FIND (`n_starts`, `perf_jitter`,
+/// `seed` from the request).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MultiStart;
+
+impl Policy for MultiStart {
+    fn name(&self) -> &'static str {
+        "multistart"
+    }
+
+    fn description(&self) -> &'static str {
+        "perturbed multi-start wrapper around Algorithm 1 (never worse than single-start)"
+    }
+
+    fn solve(&self, sys: &System, req: &SolveRequest) -> SolveOutcome {
+        let cfg = req.multistart_config();
+        let report = find_multistart(sys, req.budget, &cfg, req.evaluator());
+        let mut out = SolveOutcome::from_find(self.name(), req.budget, report);
+        out.probes = cfg.n_starts.max(1);
+        out
+    }
+}
+
+/// Sec. VI deadline extension: cheapest plan with makespan within the
+/// request's `deadline`, searched by budget bisection up to `budget`.
+///
+/// With no deadline set the search degenerates to pure cost minimisation
+/// (any budget meets an infinite deadline, so the bisection returns the
+/// cheapest feasible plan).  When even the full budget cannot meet the
+/// deadline, the outcome carries the best full-budget plan with
+/// `feasible: false`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DeadlineSearch;
+
+impl Policy for DeadlineSearch {
+    fn name(&self) -> &'static str {
+        "deadline"
+    }
+
+    fn description(&self) -> &'static str {
+        "Sec. VI extension: minimise cost subject to a completion deadline"
+    }
+
+    fn solve(&self, sys: &System, req: &SolveRequest) -> SolveOutcome {
+        let deadline = req.deadline.unwrap_or(f64::INFINITY);
+        // Every bisection probe honours the request's evaluator + config.
+        let planner =
+            Planner::with_evaluator(sys, req.evaluator()).with_config(req.planner.clone());
+        let search = min_cost_for_deadline_with(&planner, deadline, req.budget);
+        match search.report {
+            Some(r) => SolveOutcome {
+                policy: self.name(),
+                plan: r.plan,
+                score: r.score,
+                feasible: true,
+                iterations: r.iterations,
+                probes: search.probes,
+                effective_budget: search.budget,
+            },
+            None => {
+                // Deadline unreachable even at the cap: report the best
+                // full-budget plan so the caller can see how far off it
+                // is — the search already computed it when it probed the
+                // cap (except when the cap can't buy any machine-hour).
+                let (fallback, probes) = match search.best_effort {
+                    Some(r) => (r, search.probes),
+                    None => (planner.find(req.budget), search.probes + 1),
+                };
+                let mut out = SolveOutcome::from_find(self.name(), req.budget, fallback);
+                out.feasible = false;
+                out.probes = probes;
+                out
+            }
+        }
+    }
+}
+
+/// Sec. VI dynamic extension: re-plan a residual workload (the request's
+/// `remaining` task ids; the full workload when unset) with the money
+/// left.  The returned plan is expressed in parent task ids.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DynamicReplan;
+
+impl Policy for DynamicReplan {
+    fn name(&self) -> &'static str {
+        "dynamic"
+    }
+
+    fn description(&self) -> &'static str {
+        "Sec. VI extension: re-plan a residual workload mid-execution"
+    }
+
+    fn solve(&self, sys: &System, req: &SolveRequest) -> SolveOutcome {
+        let mut out = match req.remaining.as_deref() {
+            // A true residual subset: extract the sub-problem and re-plan.
+            Some(r) if !r.is_empty() && r.len() < sys.tasks().len() => {
+                super::dynamic::replan_policy(sys, r, &BudgetHeuristic, req)
+            }
+            // Full workload (or unset): planning the original system
+            // directly is equivalent and skips the sub-system copy.
+            _ => BudgetHeuristic.solve(sys, req),
+        };
+        out.policy = self.name();
+        out
+    }
+}
+
+/// Sec. VI non-clairvoyant extension: provision the fleet from sampled
+/// size estimates (the request's `sample_frac` / `seed`), then assign the
+/// *real* workload onto it.  At run time the plan's pinning would be
+/// replaced by online self-scheduling (`Simulator::run_online`); the
+/// returned plan is the clairvoyant re-assignment used for scoring.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NonClairvoyant;
+
+impl Policy for NonClairvoyant {
+    fn name(&self) -> &'static str {
+        "nonclairvoyant"
+    }
+
+    fn description(&self) -> &'static str {
+        "Sec. VI extension: provision from sampled size estimates, dispatch online"
+    }
+
+    fn solve(&self, sys: &System, req: &SolveRequest) -> SolveOutcome {
+        let mut rng = Rng::new(req.seed);
+        let frac = req.sample_frac.clamp(1e-9, 1.0);
+        let belief = surrogate_system(sys, frac, &mut rng);
+        let fleet = Planner::with_evaluator(&belief, req.evaluator())
+            .with_config(req.planner.clone())
+            .find(req.budget);
+
+        // Transplant the fleet onto the true system and re-assign the
+        // real tasks (only the provisioning decision transfers).
+        let mut plan = Plan::new();
+        for vm in &fleet.plan.vms {
+            plan.add_vm(sys, vm.it);
+        }
+        if plan.vms.is_empty() {
+            plan.add_vm(sys, sys.cheapest_type());
+        }
+        let tasks: Vec<TaskId> = sys.tasks().iter().map(|t| t.id).collect();
+        assign(sys, &mut plan, &tasks);
+        let cap = req.budget.max(plan.cost(sys));
+        balance(sys, &mut plan, cap);
+        plan.drop_empty_vms();
+
+        let score = req.evaluator().eval_plan(sys, &plan);
+        SolveOutcome {
+            policy: self.name(),
+            feasible: score.satisfies(req.budget),
+            plan,
+            score,
+            iterations: fleet.iterations,
+            probes: 1,
+            effective_budget: req.budget,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry.
+
+/// Lookup failure: the requested name is not registered.
+#[derive(Debug, Clone)]
+pub struct UnknownPolicy {
+    pub name: String,
+    pub known: Vec<&'static str>,
+}
+
+impl fmt::Display for UnknownPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "unknown policy {:?} (known: {})",
+            self.name,
+            self.known.join(", ")
+        )
+    }
+}
+
+impl std::error::Error for UnknownPolicy {}
+
+/// Name → policy resolution.  [`PolicyRegistry::builtin`] registers the
+/// seven shipped policies; callers can [`register`](Self::register) more.
+/// This is the extension point for new scheduling scenarios: implement
+/// [`Policy`], register it, and every consumer (coordinator wire
+/// protocol, cloudsim campaigns, sweep reports, CLI, benches) can run it
+/// by name.
+pub struct PolicyRegistry {
+    entries: BTreeMap<&'static str, Arc<dyn Policy>>,
+}
+
+impl PolicyRegistry {
+    /// An empty registry.
+    pub fn empty() -> Self {
+        Self { entries: BTreeMap::new() }
+    }
+
+    /// All seven built-in policies.
+    pub fn builtin() -> Self {
+        let mut r = Self::empty();
+        r.register(BudgetHeuristic);
+        r.register(MinimiseIndividual);
+        r.register(MaximiseParallelism);
+        r.register(MultiStart);
+        r.register(DeadlineSearch);
+        r.register(DynamicReplan);
+        r.register(NonClairvoyant);
+        r
+    }
+
+    /// Register a policy under its [`Policy::name`] (replacing any
+    /// previous entry with that name).
+    pub fn register<P: Policy + 'static>(&mut self, policy: P) {
+        self.register_arc(Arc::new(policy));
+    }
+
+    /// Register a shared policy instance.
+    pub fn register_arc(&mut self, policy: Arc<dyn Policy>) {
+        self.entries.insert(policy.name(), policy);
+    }
+
+    /// Resolve `name` (aliases accepted, see [`canonical_name`]).
+    pub fn get(&self, name: &str) -> Option<&dyn Policy> {
+        self.entries.get(canonical_name(name)).map(|p| p.as_ref())
+    }
+
+    /// Resolve `name` to a shareable handle (e.g. for a `CampaignSpec`).
+    pub fn get_arc(&self, name: &str) -> Option<Arc<dyn Policy>> {
+        self.entries.get(canonical_name(name)).cloned()
+    }
+
+    /// Like [`get`](Self::get) but with a descriptive error.
+    pub fn resolve(&self, name: &str) -> Result<&dyn Policy, UnknownPolicy> {
+        self.get(name).ok_or_else(|| self.unknown(name))
+    }
+
+    /// Like [`get_arc`](Self::get_arc) but with a descriptive error.
+    pub fn resolve_arc(&self, name: &str) -> Result<Arc<dyn Policy>, UnknownPolicy> {
+        self.get_arc(name).ok_or_else(|| self.unknown(name))
+    }
+
+    /// Resolve and run in one step.
+    pub fn solve(
+        &self,
+        name: &str,
+        sys: &System,
+        req: &SolveRequest,
+    ) -> Result<SolveOutcome, UnknownPolicy> {
+        Ok(self.resolve(name)?.solve(sys, req))
+    }
+
+    /// Registered canonical names, sorted.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.keys().copied().collect()
+    }
+
+    /// Registered policies, sorted by name.
+    pub fn iter(&self) -> impl Iterator<Item = &dyn Policy> {
+        self.entries.values().map(|p| p.as_ref())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    fn unknown(&self, name: &str) -> UnknownPolicy {
+        UnknownPolicy { name: name.to_string(), known: self.names() }
+    }
+}
+
+impl Default for PolicyRegistry {
+    fn default() -> Self {
+        Self::builtin()
+    }
+}
+
+impl fmt::Debug for PolicyRegistry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("PolicyRegistry").field("names", &self.names()).finish()
+    }
+}
+
+/// Canonical names of the built-in policies, in registry order.
+pub const BUILTIN_POLICIES: &[&str] = &[
+    "budget-heuristic",
+    "deadline",
+    "dynamic",
+    "mi",
+    "mp",
+    "multistart",
+    "nonclairvoyant",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::paper::table1_system;
+
+    #[test]
+    fn builtin_registry_resolves_every_name() {
+        let r = PolicyRegistry::builtin();
+        assert_eq!(r.names(), BUILTIN_POLICIES);
+        for &name in BUILTIN_POLICIES {
+            let p = r.get(name).unwrap_or_else(|| panic!("{name} missing"));
+            assert_eq!(p.name(), name);
+            assert!(!p.description().is_empty(), "{name} needs a description");
+        }
+    }
+
+    #[test]
+    fn aliases_resolve_to_canonical_policies() {
+        let r = PolicyRegistry::builtin();
+        assert_eq!(r.get("heuristic").unwrap().name(), "budget-heuristic");
+        assert_eq!(r.get("non-clairvoyant").unwrap().name(), "nonclairvoyant");
+        assert_eq!(r.get("multi-start").unwrap().name(), "multistart");
+    }
+
+    #[test]
+    fn unknown_name_is_a_descriptive_error() {
+        let r = PolicyRegistry::builtin();
+        assert!(r.get("nope").is_none());
+        let err = r
+            .solve("nope", &table1_system(0.0), &SolveRequest::new(80.0))
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("nope"), "{msg}");
+        assert!(msg.contains("budget-heuristic"), "{msg}");
+    }
+
+    #[test]
+    fn every_builtin_returns_a_valid_partition() {
+        let sys = table1_system(0.0);
+        let r = PolicyRegistry::builtin();
+        let req = SolveRequest::new(80.0).with_deadline(2.0 * 3600.0).with_starts(2);
+        for &name in BUILTIN_POLICIES {
+            let out = r.solve(name, &sys, &req).unwrap();
+            assert_eq!(out.policy, name);
+            assert!(
+                out.plan.validate_partition(&sys).is_ok(),
+                "{name}: invalid partition"
+            );
+            assert!(out.probes >= 1, "{name}: no probes recorded");
+            assert!(out.score.makespan > 0.0, "{name}: empty score");
+        }
+    }
+
+    #[test]
+    fn custom_policy_registration() {
+        struct Always80;
+        impl Policy for Always80 {
+            fn name(&self) -> &'static str {
+                "always-80"
+            }
+            fn solve(&self, sys: &System, _req: &SolveRequest) -> SolveOutcome {
+                BudgetHeuristic.solve(sys, &SolveRequest::new(80.0))
+            }
+        }
+        let mut r = PolicyRegistry::builtin();
+        r.register(Always80);
+        assert_eq!(r.len(), BUILTIN_POLICIES.len() + 1);
+        let sys = table1_system(0.0);
+        let out = r.solve("always-80", &sys, &SolveRequest::new(1.0)).unwrap();
+        assert!(out.feasible); // solved at 80, not at the requested 1
+    }
+
+    #[test]
+    fn deadline_without_deadline_minimises_cost() {
+        let sys = table1_system(0.0);
+        let out = PolicyRegistry::builtin()
+            .solve("deadline", &sys, &SolveRequest::new(200.0))
+            .unwrap();
+        assert!(out.feasible);
+        // The cheapest way to run the workload is well under the cap.
+        assert!(out.score.cost < 200.0);
+        assert!(out.effective_budget <= 200.0);
+        assert!(out.probes > 1, "bisection should probe repeatedly");
+    }
+
+    #[test]
+    fn nonclairvoyant_covers_the_real_workload() {
+        let sys = table1_system(0.0);
+        let out = PolicyRegistry::builtin()
+            .solve("nonclairvoyant", &sys, &SolveRequest::new(80.0).with_sample_frac(0.2))
+            .unwrap();
+        assert!(out.plan.validate_partition(&sys).is_ok());
+    }
+
+    #[test]
+    fn dynamic_defaults_to_full_workload() {
+        let sys = table1_system(0.0);
+        let out = PolicyRegistry::builtin()
+            .solve("dynamic", &sys, &SolveRequest::new(80.0))
+            .unwrap();
+        assert!(out.plan.validate_partition(&sys).is_ok());
+        assert!(out.feasible);
+    }
+
+    #[test]
+    fn solve_request_builder_roundtrip() {
+        let req = SolveRequest::new(70.0)
+            .with_deadline(3600.0)
+            .with_seed(9)
+            .with_starts(3)
+            .with_perf_jitter(0.1)
+            .with_sample_frac(0.5)
+            .with_remaining(vec![TaskId(0), TaskId(1)]);
+        assert_eq!(req.budget, 70.0);
+        assert_eq!(req.deadline, Some(3600.0));
+        assert_eq!(req.seed, 9);
+        let ms = req.multistart_config();
+        assert_eq!(ms.n_starts, 3);
+        assert_eq!(ms.perf_jitter, 0.1);
+        assert_eq!(ms.seed, 9);
+        assert_eq!(req.remaining.as_ref().map(Vec::len), Some(2));
+        assert_eq!(req.evaluator().name(), NativeEvaluator.name());
+        // Debug must not require the evaluator to be Debug.
+        let dbg = format!("{req:?}");
+        assert!(dbg.contains("budget"));
+    }
+}

@@ -122,6 +122,37 @@ fn shutdown_op_stops_listener() {
 }
 
 #[test]
+fn policy_surface_over_socket() {
+    let c = start(false);
+    let addr = c.local_addr;
+
+    // Discovery: every registered policy is listed with its name.
+    let r = request(&addr, r#"{"op":"list_policies"}"#).unwrap();
+    let names: Vec<String> = r
+        .get("policies")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|p| p.get("name").unwrap().as_str().unwrap().to_string())
+        .collect();
+    assert_eq!(names, botsched::scheduler::BUILTIN_POLICIES);
+
+    // A named policy is honoured end-to-end.
+    let r = request(&addr, r#"{"op":"plan","budget":80,"policy":"mp"}"#).unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(r.get("policy").unwrap().as_str(), Some("mp"));
+
+    // A bad policy name surfaces the op and policy in the error.
+    let r = request(&addr, r#"{"op":"plan","budget":80,"policy":"bogus"}"#).unwrap();
+    assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
+    let err = r.get("error").unwrap().as_str().unwrap();
+    assert!(err.contains("plan") && err.contains("bogus"), "{err}");
+
+    c.shutdown();
+}
+
+#[test]
 fn sweep_over_socket_matches_library() {
     let c = start(false);
     let addr = c.local_addr;

@@ -1,0 +1,158 @@
+//! Integration tests for the unified `Policy` API: the registry resolves
+//! every built-in name (and rejects unknown ones), and the new entry
+//! points are **bit-for-bit identical** to the legacy ones on the paper's
+//! Table I workload — the refactor must not move a single float.
+
+use botsched::eval::{NativeEvaluator, PlanEvaluator};
+use botsched::model::Plan;
+use botsched::scheduler::{
+    find_multistart, maximise_parallelism, minimise_individual, MultiStartConfig, Planner,
+    PolicyRegistry, SolveRequest, BUILTIN_POLICIES,
+};
+use botsched::workload::paper::{table1_system, BUDGETS};
+
+/// Exact structural equality: same VMs in order, same instance types,
+/// same task lists.
+fn assert_plans_identical(context: &str, a: &Plan, b: &Plan) {
+    assert_eq!(a.n_vms(), b.n_vms(), "{context}: VM count differs");
+    for (i, (x, y)) in a.vms.iter().zip(&b.vms).enumerate() {
+        assert_eq!(x.it, y.it, "{context}: vm{i} instance type differs");
+        assert_eq!(x.tasks(), y.tasks(), "{context}: vm{i} task list differs");
+    }
+}
+
+#[test]
+fn registry_resolves_all_builtin_names_and_rejects_unknown() {
+    let registry = PolicyRegistry::builtin();
+    assert_eq!(registry.names(), BUILTIN_POLICIES);
+    for &name in BUILTIN_POLICIES {
+        assert!(registry.get(name).is_some(), "{name} must resolve");
+    }
+    for bad in ["", "Heuristic", "budget_heuristic", "magic"] {
+        assert!(registry.get(bad).is_none(), "{bad:?} must not resolve");
+    }
+    let err = registry
+        .solve("magic", &table1_system(0.0), &SolveRequest::new(80.0))
+        .unwrap_err();
+    assert!(err.to_string().contains("magic"));
+}
+
+#[test]
+fn budget_heuristic_outcome_matches_legacy_planner_bit_for_bit() {
+    let sys = table1_system(0.0);
+    let registry = PolicyRegistry::builtin();
+    for &b in BUDGETS {
+        let legacy = Planner::new(&sys).find(b);
+        let out = registry
+            .solve("budget-heuristic", &sys, &SolveRequest::new(b))
+            .unwrap();
+        assert_plans_identical(&format!("budget {b}"), &legacy.plan, &out.plan);
+        assert_eq!(
+            legacy.score.makespan.to_bits(),
+            out.score.makespan.to_bits(),
+            "budget {b}: makespan bits differ"
+        );
+        assert_eq!(
+            legacy.score.cost.to_bits(),
+            out.score.cost.to_bits(),
+            "budget {b}: cost bits differ"
+        );
+        assert_eq!(legacy.feasible, out.feasible, "budget {b}");
+        assert_eq!(legacy.iterations, out.iterations, "budget {b}");
+    }
+}
+
+#[test]
+fn baseline_outcomes_match_legacy_free_functions_bit_for_bit() {
+    let sys = table1_system(0.0);
+    let registry = PolicyRegistry::builtin();
+    for &b in BUDGETS {
+        for (name, legacy) in [
+            ("mi", minimise_individual(&sys, b)),
+            ("mp", maximise_parallelism(&sys, b)),
+        ] {
+            let out = registry.solve(name, &sys, &SolveRequest::new(b)).unwrap();
+            assert_plans_identical(&format!("{name} @ {b}"), &legacy, &out.plan);
+            // Same scoring path as the policy (the evaluator): bit-exact.
+            let score = NativeEvaluator.eval_plan(&sys, &legacy);
+            assert_eq!(
+                score.makespan.to_bits(),
+                out.score.makespan.to_bits(),
+                "{name} @ {b}: makespan bits differ"
+            );
+            assert_eq!(
+                score.cost.to_bits(),
+                out.score.cost.to_bits(),
+                "{name} @ {b}: cost bits differ"
+            );
+            assert_eq!(score.satisfies(b), out.feasible, "{name} @ {b}");
+            // And the plan's own arithmetic agrees to float tolerance.
+            let direct = legacy.score(&sys);
+            assert!((direct.makespan - out.score.makespan).abs() < 1e-9, "{name} @ {b}");
+            assert!((direct.cost - out.score.cost).abs() < 1e-9, "{name} @ {b}");
+        }
+    }
+}
+
+#[test]
+fn multistart_outcome_matches_legacy_entry_point() {
+    let sys = table1_system(0.0);
+    let registry = PolicyRegistry::builtin();
+    let req = SolveRequest::new(80.0).with_seed(9).with_starts(4);
+    let legacy = find_multistart(
+        &sys,
+        80.0,
+        &MultiStartConfig { n_starts: 4, seed: 9, ..Default::default() },
+        &NativeEvaluator,
+    );
+    let out = registry.solve("multistart", &sys, &req).unwrap();
+    assert_plans_identical("multistart", &legacy.plan, &out.plan);
+    assert_eq!(legacy.score.makespan.to_bits(), out.score.makespan.to_bits());
+    assert_eq!(legacy.score.cost.to_bits(), out.score.cost.to_bits());
+}
+
+#[test]
+fn heuristic_alias_matches_canonical_name() {
+    let sys = table1_system(0.0);
+    let registry = PolicyRegistry::builtin();
+    let req = SolveRequest::new(75.0);
+    let canon = registry.solve("budget-heuristic", &sys, &req).unwrap();
+    let alias = registry.solve("heuristic", &sys, &req).unwrap();
+    assert_plans_identical("alias", &canon.plan, &alias.plan);
+    assert_eq!(canon.policy, alias.policy);
+}
+
+#[test]
+fn every_policy_returns_a_valid_partition_and_honest_feasibility() {
+    let sys = table1_system(0.0);
+    let registry = PolicyRegistry::builtin();
+    let req = SolveRequest::new(80.0)
+        .with_deadline(2.0 * 3600.0)
+        .with_starts(2)
+        .with_sample_frac(0.3);
+    for &name in BUILTIN_POLICIES {
+        let out = registry.solve(name, &sys, &req).unwrap();
+        assert!(
+            out.plan.validate_partition(&sys).is_ok(),
+            "{name}: plan must partition the workload"
+        );
+        let rescore = out.plan.score(&sys);
+        assert!(
+            (rescore.makespan - out.score.makespan).abs() < 1e-6,
+            "{name}: reported makespan drifted from the plan"
+        );
+        if name != "deadline" {
+            // Budget policies: the feasible flag is exactly eq. 9.
+            assert_eq!(
+                out.feasible,
+                rescore.satisfies(req.budget),
+                "{name}: feasible flag inconsistent"
+            );
+        } else {
+            assert!(
+                !out.feasible || out.score.makespan <= 2.0 * 3600.0 + 1e-6,
+                "deadline: feasible but misses the deadline"
+            );
+        }
+    }
+}
