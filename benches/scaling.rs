@@ -1,10 +1,18 @@
 //! Bench: planner scaling (experiment A3 in DESIGN.md) — wall time and
-//! plan quality versus workload size and catalogue size.
+//! plan quality versus workload size, catalogue size and thread count.
 //!
 //! The paper evaluates a fixed 750-task / 4-type setup; a production
 //! scheduler must hold up as both grow.  Sweeps tasks-per-app
 //! (125..2000) at 4 types, and instance types (2..16) at 750 tasks, plus
-//! the simulator's event throughput on the resulting plans.
+//! the simulator's event throughput on the resulting plans.  The
+//! headline `scaling` group runs multistart (8 perturbed restarts) on a
+//! 5-app / 6000-task / 6-type workload at 1, 2 and 4 worker threads —
+//! results are bit-identical across thread counts (see the `perf_parity`
+//! tests), so the speedup is pure wall-clock.
+//!
+//! Set `BENCH_SMOKE=1` to shrink every workload to a seconds-long CI
+//! smoke run; set `BENCH_JSON=1` to snapshot `BENCH_<group>.json` files
+//! (the repo's perf trajectory; see `botsched::benchkit`).
 
 use std::time::Duration;
 
@@ -14,12 +22,44 @@ use botsched::scheduler::{PolicyRegistry, SolveRequest};
 use botsched::workload::{SizeDistribution, WorkloadGenerator, WorkloadSpec};
 
 fn main() {
+    let smoke = std::env::var_os("BENCH_SMOKE").is_some();
     let registry = PolicyRegistry::builtin();
     let heuristic = registry.get("budget-heuristic").expect("builtin");
+
+    // ---- parallel multistart (the headline scaling case) -------------------
+    // >= 5 apps, >= 2000 tasks, >= 6 instance types.
+    let (tasks_per_app, n_starts) = if smoke { (40, 2) } else { (1200, 8) };
+    let spec = WorkloadSpec {
+        n_apps: 5,
+        n_types: 6,
+        tasks_per_app,
+        sizes: SizeDistribution::EquallySpaced { lo: 1, hi: 5 },
+        ..Default::default()
+    };
+    let sys = WorkloadGenerator::new(41).system(&spec);
+    let budget = WorkloadGenerator::feasible_budget(&sys, 1.4);
+    let multistart = registry.get("multistart").expect("builtin");
+    let mut bench = Bench::new("scaling")
+        .with_budget(Duration::from_millis(50), Duration::from_millis(if smoke { 200 } else { 2500 }));
+    for threads in [1usize, 2, 4] {
+        let req = SolveRequest::new(budget)
+            .with_starts(n_starts)
+            .with_seed(7)
+            .with_threads(threads);
+        bench.run(
+            &format!("multistart{n_starts}/{}tasks/{threads}threads", tasks_per_app * 5),
+            || {
+                std::hint::black_box(multistart.solve(&sys, &req));
+            },
+        );
+    }
+    bench.report();
+
     // ---- tasks sweep ------------------------------------------------------
+    let task_sizes: &[usize] = if smoke { &[50] } else { &[125, 250, 500, 1000, 2000] };
     let mut bench = Bench::new("scaling/tasks")
         .with_budget(Duration::from_millis(200), Duration::from_millis(1200));
-    for tasks_per_app in [125usize, 250, 500, 1000, 2000] {
+    for &tasks_per_app in task_sizes {
         let spec = WorkloadSpec {
             n_apps: 3,
             n_types: 4,
@@ -37,13 +77,14 @@ fn main() {
     bench.report();
 
     // ---- instance-type sweep ----------------------------------------------
+    let type_sizes: &[usize] = if smoke { &[4] } else { &[2, 4, 8, 16] };
     let mut bench = Bench::new("scaling/instance-types")
         .with_budget(Duration::from_millis(200), Duration::from_millis(1200));
-    for n_types in [2usize, 4, 8, 16] {
+    for &n_types in type_sizes {
         let spec = WorkloadSpec {
             n_apps: 3,
             n_types,
-            tasks_per_app: 250,
+            tasks_per_app: if smoke { 50 } else { 250 },
             ..Default::default()
         };
         let sys = WorkloadGenerator::new(43).system(&spec);
@@ -55,9 +96,10 @@ fn main() {
     bench.report();
 
     // ---- simulator event throughput ----------------------------------------
+    let sim_sizes: &[usize] = if smoke { &[100] } else { &[250, 1000, 4000] };
     let mut bench = Bench::new("scaling/simulator")
         .with_budget(Duration::from_millis(200), Duration::from_millis(1000));
-    for tasks_per_app in [250usize, 1000, 4000] {
+    for &tasks_per_app in sim_sizes {
         let spec = WorkloadSpec {
             n_apps: 3,
             n_types: 4,

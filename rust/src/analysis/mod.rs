@@ -14,4 +14,6 @@ pub mod stats;
 
 pub use bounds::{brute_force_best, fractional_cost_floor, makespan_floor};
 pub use pareto::{knee, pareto_frontier, ParetoPoint};
-pub use report::{run_policy_sweep, run_sweep, ApproachRow, SweepReport, CORE_POLICIES};
+pub use report::{
+    run_policy_sweep, run_sweep, run_sweep_threads, ApproachRow, SweepReport, CORE_POLICIES,
+};

@@ -36,42 +36,61 @@ pub struct SweepReport {
     pub rows: Vec<ApproachRow>,
 }
 
-/// Run the paper's comparison set (heuristic / MI / MP) across `budgets`.
+/// Run the paper's comparison set (heuristic / MI / MP) across `budgets`
+/// sequentially (see [`run_sweep_threads`] for the parallel form).
 pub fn run_sweep(sys: &System, budgets: &[f64], evaluator: &dyn PlanEvaluator) -> SweepReport {
-    run_policy_sweep(sys, budgets, CORE_POLICIES, &PolicyRegistry::builtin(), evaluator)
+    run_sweep_threads(sys, budgets, evaluator, 1)
+}
+
+/// [`run_sweep`] with the budget×policy grid fanned out over `threads`
+/// workers (1 = sequential, 0 = auto).  Rows are merged in grid order,
+/// so the report is identical at any thread count (modulo the wall-time
+/// `plan_micros` column).
+pub fn run_sweep_threads(
+    sys: &System,
+    budgets: &[f64],
+    evaluator: &dyn PlanEvaluator,
+    threads: usize,
+) -> SweepReport {
+    run_policy_sweep(sys, budgets, CORE_POLICIES, &PolicyRegistry::builtin(), evaluator, threads)
         .expect("core policies are builtin")
 }
 
 /// Run any set of registered policies across `budgets` — the sweep is
 /// policy-generic: every row comes from [`crate::scheduler::Policy::solve`].
+/// The `budgets.len() × policies.len()` cells are independent and run on
+/// the [`crate::util::parallel`] pool (`threads`: 1 = sequential,
+/// 0 = auto); the deterministic ordered merge keeps the row order — and
+/// every plan and score — identical to the sequential sweep.
 pub fn run_policy_sweep(
     sys: &System,
     budgets: &[f64],
     policies: &[&str],
     registry: &PolicyRegistry,
     evaluator: &dyn PlanEvaluator,
+    threads: usize,
 ) -> Result<SweepReport, UnknownPolicy> {
     // Resolve up front: an unknown name fails fast, before any solving.
     let resolved: Vec<&dyn crate::scheduler::Policy> = policies
         .iter()
         .map(|name| registry.resolve(name))
         .collect::<Result<_, _>>()?;
-    let mut rows = Vec::with_capacity(budgets.len() * resolved.len());
-    for &b in budgets {
-        for policy in &resolved {
-            let req = SolveRequest::new(b).with_evaluator(evaluator);
-            let t0 = std::time::Instant::now();
-            let out = policy.solve(sys, &req);
-            rows.push(ApproachRow {
-                approach: out.policy,
-                budget: b,
-                score: out.score,
-                feasible: out.feasible,
-                vm_mix: out.plan.vm_mix(sys),
-                plan_micros: t0.elapsed().as_micros(),
-            });
+    let cells = budgets.len() * resolved.len();
+    let rows = crate::util::parallel_map(threads, cells, |idx| {
+        let b = budgets[idx / resolved.len()];
+        let policy = resolved[idx % resolved.len()];
+        let req = SolveRequest::new(b).with_evaluator(evaluator);
+        let t0 = std::time::Instant::now();
+        let out = policy.solve(sys, &req);
+        ApproachRow {
+            approach: out.policy,
+            budget: b,
+            score: out.score,
+            feasible: out.feasible,
+            vm_mix: out.plan.vm_mix(sys),
+            plan_micros: t0.elapsed().as_micros(),
         }
-    }
+    });
     Ok(SweepReport { budgets: budgets.to_vec(), rows })
 }
 
@@ -301,11 +320,30 @@ mod tests {
             &["multistart", "mp"],
             &registry,
             &NativeEvaluator,
+            1,
         )
         .unwrap();
         assert_eq!(r.rows.len(), 2);
         assert_eq!(r.approaches(), vec!["multistart", "mp"]);
-        assert!(run_policy_sweep(&sys, &[80.0], &["zz"], &registry, &NativeEvaluator).is_err());
+        assert!(run_policy_sweep(&sys, &[80.0], &["zz"], &registry, &NativeEvaluator, 1).is_err());
+    }
+
+    #[test]
+    fn threaded_sweep_matches_sequential() {
+        let sys = table1_system(0.0);
+        let seq = run_sweep(&sys, &[60.0, 80.0], &NativeEvaluator);
+        for threads in [2usize, 4] {
+            let par = run_sweep_threads(&sys, &[60.0, 80.0], &NativeEvaluator, threads);
+            assert_eq!(par.rows.len(), seq.rows.len());
+            for (a, b) in par.rows.iter().zip(&seq.rows) {
+                assert_eq!(a.approach, b.approach, "threads {threads}");
+                assert_eq!(a.budget, b.budget);
+                assert_eq!(a.score.makespan.to_bits(), b.score.makespan.to_bits());
+                assert_eq!(a.score.cost.to_bits(), b.score.cost.to_bits());
+                assert_eq!(a.feasible, b.feasible);
+                assert_eq!(a.vm_mix, b.vm_mix);
+            }
+        }
     }
 
     #[test]

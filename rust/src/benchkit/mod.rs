@@ -16,10 +16,20 @@
 //! (adaptive iteration count), and summarised with mean / median / p95 /
 //! stddev and derived throughput.  Output goes to stdout in a fixed-width
 //! table that `cargo bench` captures into bench_output.txt.
+//!
+//! **Machine-readable results:** when the `BENCH_JSON` environment
+//! variable is set, [`Bench::report`] additionally writes
+//! `BENCH_<group>.json` (case name, mean/median/p95/stddev in
+//! nanoseconds, iteration count, throughput) next to the stdout table —
+//! set `BENCH_JSON=1` for the current directory, or to a directory path.
+//! This is how the repo's perf trajectory accumulates across PRs:
+//! `BENCH_JSON=1 cargo bench --bench scaling` snapshots the planner's
+//! scaling numbers into `BENCH_scaling.json`.
 
 use std::time::{Duration, Instant};
 
 use crate::analysis::stats;
+use crate::util::Json;
 
 /// One measured case.
 #[derive(Debug, Clone)]
@@ -104,7 +114,55 @@ impl Bench {
         self.cases.last().unwrap()
     }
 
-    /// Print the group table.
+    /// Per-case throughput in items per second (`None` without an item
+    /// count or a measurable mean).
+    fn throughput(c: &Case) -> Option<f64> {
+        match c.items {
+            Some(n) if c.mean.as_secs_f64() > 0.0 => Some(n / c.mean.as_secs_f64()),
+            _ => None,
+        }
+    }
+
+    /// Machine-readable form of the group (see the module docs).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("group", Json::str(&self.group)),
+            (
+                "cases",
+                Json::arr(self.cases.iter().map(|c| {
+                    Json::obj(vec![
+                        ("name", Json::str(&c.name)),
+                        ("iters", Json::num(c.iters as f64)),
+                        ("mean_ns", Json::num(c.mean.as_nanos() as f64)),
+                        ("median_ns", Json::num(c.median.as_nanos() as f64)),
+                        ("p95_ns", Json::num(c.p95.as_nanos() as f64)),
+                        ("stddev_ns", Json::num(c.stddev.as_nanos() as f64)),
+                        (
+                            "throughput_per_s",
+                            match Self::throughput(c) {
+                                Some(t) => Json::num(t),
+                                None => Json::Null,
+                            },
+                        ),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// The `BENCH_<group>.json` path for this group under `dir`
+    /// (path separators in the group name become underscores).
+    fn json_path(&self, dir: &str) -> String {
+        let stem: String = self
+            .group
+            .chars()
+            .map(|ch| if ch == '/' || ch == ' ' { '_' } else { ch })
+            .collect();
+        format!("{}/BENCH_{stem}.json", dir.trim_end_matches('/'))
+    }
+
+    /// Print the group table; with `BENCH_JSON` set, also write the
+    /// machine-readable `BENCH_<group>.json` (see the module docs).
     pub fn report(&self) {
         println!("\n== bench group: {} ==", self.group);
         println!(
@@ -112,11 +170,9 @@ impl Bench {
             "case", "iters", "mean", "median", "p95", "stddev", "throughput"
         );
         for c in &self.cases {
-            let thr = match c.items {
-                Some(n) if c.mean.as_secs_f64() > 0.0 => {
-                    format!("{:.0}/s", n / c.mean.as_secs_f64())
-                }
-                _ => "-".into(),
+            let thr = match Self::throughput(c) {
+                Some(t) => format!("{t:.0}/s"),
+                None => "-".into(),
             };
             println!(
                 "{:<38} {:>7} {:>12} {:>12} {:>12} {:>12} {:>14}",
@@ -128,6 +184,18 @@ impl Bench {
                 fmt_dur(c.stddev),
                 thr
             );
+        }
+        if let Ok(dir) = std::env::var("BENCH_JSON") {
+            let dir = match dir.as_str() {
+                "0" | "false" => return, // explicit opt-out
+                "" | "1" | "true" => ".".to_string(),
+                other => other.to_string(), // output directory
+            };
+            let path = self.json_path(&dir);
+            match std::fs::write(&path, self.to_json().to_string()) {
+                Ok(()) => eprintln!("benchkit: wrote {path}"),
+                Err(e) => eprintln!("benchkit: could not write {path}: {e}"),
+            }
         }
     }
 
@@ -172,6 +240,27 @@ mod tests {
         });
         assert!(case.items == Some(100.0));
         b.report(); // smoke the printer
+    }
+
+    #[test]
+    fn json_dump_shape() {
+        let mut b = Bench::new("scaling/tasks")
+            .with_budget(Duration::from_millis(5), Duration::from_millis(20));
+        b.run_with_items("spin", Some(10.0), || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        let j = b.to_json();
+        assert_eq!(j.get("group").unwrap().as_str(), Some("scaling/tasks"));
+        let cases = j.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 1);
+        assert_eq!(cases[0].get("name").unwrap().as_str(), Some("spin"));
+        assert!(cases[0].get("mean_ns").unwrap().as_f64().unwrap() > 0.0);
+        assert!(cases[0].get("throughput_per_s").unwrap().as_f64().unwrap() > 0.0);
+        // Round-trips through the parser.
+        assert!(Json::parse(&j.to_string()).is_ok());
+        // Group separators are flattened into the file name.
+        assert_eq!(b.json_path("out"), "out/BENCH_scaling_tasks.json");
+        assert_eq!(b.json_path("./"), "./BENCH_scaling_tasks.json");
     }
 
     #[test]

@@ -179,6 +179,57 @@ pub fn run_campaign(sys: &System, spec: &CampaignSpec) -> CampaignOutcome {
     }
 }
 
+/// Aggregate statistics over a set of campaign replications (shared by
+/// the CLI and the coordinator's `campaign` op).
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicationSummary {
+    pub replications: usize,
+    /// Replications that completed every task.
+    pub complete: usize,
+    /// Replications whose total spend stayed within the budget.
+    pub within_budget: usize,
+    pub mean_wall_clock: f64,
+    pub mean_spent: f64,
+}
+
+/// Summarise replication outcomes.  Panics on an empty slice (callers
+/// always run at least one replication).
+pub fn summarise_replications(outs: &[CampaignOutcome]) -> ReplicationSummary {
+    assert!(!outs.is_empty(), "no replications to summarise");
+    let n = outs.len() as f64;
+    ReplicationSummary {
+        replications: outs.len(),
+        complete: outs.iter().filter(|o| o.complete).count(),
+        within_budget: outs.iter().filter(|o| o.within_budget).count(),
+        mean_wall_clock: outs.iter().map(|o| o.wall_clock).sum::<f64>() / n,
+        mean_spent: outs.iter().map(|o| o.spent).sum::<f64>() / n,
+    }
+}
+
+/// Monte-Carlo replications of a campaign: `replications` independent
+/// runs of [`run_campaign`], replication `r` seeded with
+/// `spec.sim.seed + r·φ` (a golden-ratio stride, so the per-round seed
+/// offsets of different replications never collide).  Replications are
+/// independent, so they fan out over the [`crate::util::parallel`] pool
+/// (`threads`: 1 = sequential, 0 = auto) and merge in replication order
+/// — the outcome vector is identical at any thread count.  Replication 0
+/// is exactly `run_campaign(sys, spec)`.
+pub fn run_campaign_replications(
+    sys: &System,
+    spec: &CampaignSpec,
+    replications: usize,
+    threads: usize,
+) -> Vec<CampaignOutcome> {
+    crate::util::parallel_map(threads, replications.max(1), |r| {
+        let mut s = spec.clone();
+        s.sim.seed = spec
+            .sim
+            .seed
+            .wrapping_add((r as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        run_campaign(sys, &s)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -237,6 +288,41 @@ mod tests {
             "deadline knob must reach the per-round solver (got {:.1}s)",
             out.planned.makespan
         );
+    }
+
+    #[test]
+    fn replications_deterministic_at_any_thread_count() {
+        let sys = table1_system(0.0);
+        let mut spec = CampaignSpec::new(200.0);
+        spec.sim.noise = NoiseModel::with_failures(0.05, 2500.0);
+        spec.sim.seed = 3;
+        let seq = run_campaign_replications(&sys, &spec, 4, 1);
+        assert_eq!(seq.len(), 4);
+        // Replication 0 is the plain campaign.
+        let plain = run_campaign(&sys, &spec);
+        assert_eq!(seq[0].wall_clock.to_bits(), plain.wall_clock.to_bits());
+        assert_eq!(seq[0].spent.to_bits(), plain.spent.to_bits());
+        // Distinct seeds actually diversify the replications.
+        assert!(
+            seq.iter().any(|o| o.wall_clock.to_bits() != seq[0].wall_clock.to_bits()),
+            "replications should differ under failures"
+        );
+        for threads in [2usize, 4] {
+            let par = run_campaign_replications(&sys, &spec, 4, threads);
+            for (a, b) in par.iter().zip(&seq) {
+                assert_eq!(a.wall_clock.to_bits(), b.wall_clock.to_bits(), "threads {threads}");
+                assert_eq!(a.spent.to_bits(), b.spent.to_bits(), "threads {threads}");
+                assert_eq!(a.complete, b.complete);
+                assert_eq!(a.rounds.len(), b.rounds.len());
+            }
+        }
+        // The shared summary agrees with a hand-rolled fold.
+        let s = summarise_replications(&seq);
+        assert_eq!(s.replications, 4);
+        assert_eq!(s.complete, seq.iter().filter(|o| o.complete).count());
+        assert_eq!(s.within_budget, seq.iter().filter(|o| o.within_budget).count());
+        let mean = seq.iter().map(|o| o.wall_clock).sum::<f64>() / 4.0;
+        assert!((s.mean_wall_clock - mean).abs() < 1e-9);
     }
 
     #[test]

@@ -12,7 +12,9 @@
 //! * failure injection — VMs die at exponentially distributed times,
 //!   stranding their unfinished tasks;
 //! * [`campaign`] — closed-loop execution: simulate, detect failures,
-//!   re-plan the residual workload (`scheduler::dynamic`), repeat;
+//!   re-plan the residual workload (`scheduler::dynamic`), repeat; with
+//!   Monte-Carlo replications over the `util::parallel` worker pool
+//!   ([`run_campaign_replications`]);
 //! * [`sampling`] — "test runs" producing noisy (type, app, size, time)
 //!   observations for the perf-matrix estimator artifact.
 
@@ -22,7 +24,10 @@ pub mod event;
 pub mod noise;
 pub mod sampling;
 
-pub use campaign::{run_campaign, CampaignOutcome, CampaignSpec};
+pub use campaign::{
+    run_campaign, run_campaign_replications, summarise_replications, CampaignOutcome,
+    CampaignSpec, ReplicationSummary,
+};
 pub use engine::{SimConfig, SimOutcome, Simulator, VmStats};
 pub use event::{Event, EventKind, EventQueue};
 pub use noise::NoiseModel;

@@ -222,7 +222,9 @@ pub fn planner_config_from_json(j: &Json) -> Result<PlannerConfig> {
 
 /// Parse a [`SolveRequest`] from JSON: `budget` (required) plus the
 /// optional policy knobs `deadline`, `seed`, `n_starts`, `perf_jitter`,
-/// `sample_frac` and a nested `planner` config.  The evaluator handle is
+/// `sample_frac`, `threads` (worker threads for parallelisable
+/// policies; 0 = auto), `remaining` (residual task ids for `"dynamic"`
+/// re-planning) and a nested `planner` config.  The evaluator handle is
 /// attached by the caller ([`SolveRequest::with_evaluator`]).
 pub fn solve_request_from_json(j: &Json) -> Result<SolveRequest<'static>> {
     // Knobs are strict: a present-but-mistyped value is an error, never
@@ -266,6 +268,37 @@ pub fn solve_request_from_json(j: &Json) -> Result<SolveRequest<'static>> {
             bail!("sample_frac must be in (0, 1], got {f}");
         }
         req = req.with_sample_frac(f);
+    }
+    if let Some(t) = u64_knob("threads")? {
+        // Thread counts are wire/file-controlled: bound them so a tiny
+        // request cannot drive unbounded OS-thread spawns (0 = auto is
+        // always allowed; `parallel_map` caps auto at the core count).
+        const MAX_THREADS: u64 = 256;
+        if t > MAX_THREADS {
+            bail!("threads {t} exceeds the limit of {MAX_THREADS}");
+        }
+        req = req.with_threads(t as usize);
+    }
+    if let Some(r) = j.get("remaining") {
+        let arr = r
+            .as_arr()
+            .ok_or_else(|| anyhow!("\"remaining\" must be an array of task ids, got {r}"))?;
+        if arr.is_empty() {
+            bail!("\"remaining\" must name at least one task (omit it for the full workload)");
+        }
+        let ids: Vec<crate::model::TaskId> = arr
+            .iter()
+            .map(|v| {
+                let t = v
+                    .as_u64()
+                    .ok_or_else(|| anyhow!("\"remaining\" task id must be a non-negative integer, got {v}"))?;
+                if t > u32::MAX as u64 {
+                    bail!("\"remaining\" task id {t} out of range");
+                }
+                Ok(crate::model::TaskId(t as u32))
+            })
+            .collect::<Result<_>>()?;
+        req = req.with_remaining(ids);
     }
     if let Some(p) = j.get("planner") {
         req = req.with_planner(planner_config_from_json(p)?);
@@ -371,7 +404,8 @@ mod tests {
     fn solve_request_parsing() {
         let j = Json::parse(
             r#"{"budget": 80, "deadline": 3600, "seed": 4, "n_starts": 3,
-                "perf_jitter": 0.2, "sample_frac": 0.5,
+                "perf_jitter": 0.2, "sample_frac": 0.5, "threads": 4,
+                "remaining": [0, 5, 9],
                 "planner": {"max_iters": 7}}"#,
         )
         .unwrap();
@@ -382,7 +416,29 @@ mod tests {
         assert_eq!(req.n_starts, 3);
         assert_eq!(req.perf_jitter, 0.2);
         assert_eq!(req.sample_frac, 0.5);
+        assert_eq!(req.threads, 4);
+        assert_eq!(
+            req.remaining,
+            Some(vec![
+                crate::model::TaskId(0),
+                crate::model::TaskId(5),
+                crate::model::TaskId(9)
+            ])
+        );
         assert_eq!(req.planner.max_iters, 7);
+
+        // remaining must be a non-empty array of integer ids.
+        for bad in [
+            r#"{"budget": 10, "remaining": "all"}"#,
+            r#"{"budget": 10, "remaining": []}"#,
+            r#"{"budget": 10, "remaining": [1.5]}"#,
+            r#"{"budget": 10, "remaining": [-3]}"#,
+            r#"{"budget": 10, "threads": "many"}"#,
+            r#"{"budget": 10, "threads": 9999}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(solve_request_from_json(&j).is_err(), "{bad} must be rejected");
+        }
 
         assert!(solve_request_from_json(&Json::parse("{}").unwrap()).is_err());
         let bad = Json::parse(r#"{"budget": 10, "sample_frac": 0}"#).unwrap();

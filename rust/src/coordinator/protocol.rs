@@ -8,8 +8,11 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use crate::analysis::report::run_sweep;
-use crate::cloudsim::{run_campaign, sample_runs, CampaignSpec, SimConfig, Simulator};
+use crate::analysis::report::run_sweep_threads;
+use crate::cloudsim::{
+    run_campaign, run_campaign_replications, sample_runs, summarise_replications, CampaignSpec,
+    SimConfig, Simulator,
+};
 use crate::config;
 use crate::eval::PlanEvaluator;
 use crate::model::System;
@@ -179,15 +182,50 @@ fn budget_of(req: &Json) -> Result<f64> {
 fn solve_with(ctx: &Context, sys: &System, req: &Json) -> Result<SolveOutcome> {
     let name = match policy_name(req) {
         Some(n) => n,
+        // Deadline + remaining with no policy is ambiguous (the deadline
+        // search ignores residual sets, dynamic ignores deadlines) —
+        // refuse rather than guess and then blame the guess.
+        None if req.get("deadline").is_some() && req.get("remaining").is_some() => {
+            return Err(anyhow!(
+                "both \"deadline\" and \"remaining\" given without a \"policy\" — \
+                 name the policy explicitly"
+            ));
+        }
         // A deadline with no explicit policy selects the deadline search
         // (mirrors the CLI) — the budget heuristic would silently ignore it.
         None if req.get("deadline").is_some() => "deadline",
+        // A residual task set with no explicit policy selects dynamic
+        // re-planning for the same reason.
+        None if req.get("remaining").is_some() => "dynamic",
         None => "budget-heuristic",
     };
+    // Resolve first so a typoed policy name reports as unknown-policy,
+    // not as a misleading knob error.
+    let policy = ctx.registry.resolve(name).map_err(anyhow::Error::new)?;
     let sreq = config::solve_request_from_json(req)?.with_evaluator(ctx.evaluator.as_ref());
-    ctx.registry
-        .solve(name, sys, &sreq)
-        .map_err(anyhow::Error::new)
+    if let Some(remaining) = &sreq.remaining {
+        // `remaining` drives dynamic re-planning; every other policy
+        // would silently plan the full workload, so reject it rather
+        // than mislead the client.
+        if policy.name() != "dynamic" {
+            return Err(anyhow!(
+                "\"remaining\" is only honoured by the \"dynamic\" policy (got {name:?})"
+            ));
+        }
+        let n = sys.tasks().len();
+        let mut seen = vec![false; n];
+        for t in remaining {
+            let i = t.index();
+            if i >= n {
+                return Err(anyhow!("\"remaining\" names unknown task {i} (system has {n})"));
+            }
+            if seen[i] {
+                return Err(anyhow!("\"remaining\" lists task {i} twice"));
+            }
+            seen[i] = true;
+        }
+    }
+    Ok(policy.solve(sys, &sreq))
 }
 
 fn plan_json(sys: &System, plan: &crate::model::Plan) -> Json {
@@ -237,9 +275,31 @@ fn op_sweep(ctx: &Context, req: &Json) -> Result<Reply> {
     if budgets.is_empty() {
         return Err(anyhow!("empty budgets"));
     }
-    let report = run_sweep(&sys, &budgets, ctx.evaluator.as_ref());
+    let threads = bounded_threads(u64_field(req, "threads")?.unwrap_or(1))?;
+    let report = run_sweep_threads(&sys, &budgets, ctx.evaluator.as_ref(), threads);
     ctx.metrics.record_plan();
     Ok(ok(vec![("sweep", report.to_json())]))
+}
+
+/// Bound a wire-controlled worker-thread count (0 = auto is allowed;
+/// `parallel_map` caps auto at the machine's core count).
+fn bounded_threads(threads: u64) -> Result<usize> {
+    const MAX_THREADS: u64 = 256;
+    if threads > MAX_THREADS {
+        return Err(anyhow!("threads {threads} exceeds the limit of {MAX_THREADS}"));
+    }
+    Ok(threads as usize)
+}
+
+/// A strictly-typed optional u64 field: present-but-mistyped is an
+/// error, never a silent default.
+fn u64_field(req: &Json, key: &str) -> Result<Option<u64>> {
+    req.get(key)
+        .map(|v| {
+            v.as_u64()
+                .ok_or_else(|| anyhow!("\"{key}\" must be a non-negative integer, got {v}"))
+        })
+        .transpose()
 }
 
 fn op_simulate(ctx: &Context, req: &Json) -> Result<Reply> {
@@ -281,6 +341,11 @@ fn op_campaign(ctx: &Context, req: &Json) -> Result<Reply> {
     // on the per-round request template; budget and seed are overridden
     // by the campaign loop itself.
     spec.base_request = config::solve_request_from_json(req)?;
+    if spec.base_request.remaining.is_some() {
+        return Err(anyhow!(
+            "\"remaining\" is not accepted on campaigns (each round re-plans its own residual)"
+        ));
+    }
     spec.evaluator = Some(Arc::clone(&ctx.evaluator));
     if let Some(n) = req.get("noise") {
         spec.sim.noise = config::noise_from_json(n);
@@ -288,6 +353,46 @@ fn op_campaign(ctx: &Context, req: &Json) -> Result<Reply> {
     spec.sim.seed = req.get("seed").and_then(Json::as_u64).unwrap_or(0);
     if let Some(r) = req.get("max_rounds").and_then(Json::as_u64) {
         spec.max_rounds = r as usize;
+    }
+    // A campaign is expensive; bound the wire-driven fan-out so a tiny
+    // request cannot trigger unbounded work or thread allocation.
+    const MAX_REPLICATIONS: u64 = 4096;
+    let replications = u64_field(req, "replications")?.unwrap_or(1).max(1);
+    if replications > MAX_REPLICATIONS {
+        return Err(anyhow!(
+            "replications {replications} exceeds the limit of {MAX_REPLICATIONS}"
+        ));
+    }
+    let threads = bounded_threads(u64_field(req, "threads")?.unwrap_or(1))?;
+    if replications > 1 {
+        // Monte-Carlo mode: fan the replications out and report the
+        // aggregate (plus per-replication rows for downstream tooling).
+        // The outer fan-out owns the parallelism — the single "threads"
+        // field must not also multiply into every round's inner solver.
+        spec.base_request.threads = 1;
+        let outs = run_campaign_replications(&sys, &spec, replications as usize, threads);
+        let s = summarise_replications(&outs);
+        let n = s.replications as f64;
+        return Ok(ok(vec![
+            ("policy", Json::str(spec.policy.name())),
+            ("replications", Json::num(n)),
+            ("complete_frac", Json::num(s.complete as f64 / n)),
+            ("within_budget_frac", Json::num(s.within_budget as f64 / n)),
+            ("mean_wall_clock", Json::num(s.mean_wall_clock)),
+            ("mean_spent", Json::num(s.mean_spent)),
+            (
+                "runs",
+                Json::arr(outs.iter().map(|o| {
+                    Json::obj(vec![
+                        ("wall_clock", Json::num(o.wall_clock)),
+                        ("spent", Json::num(o.spent)),
+                        ("complete", Json::Bool(o.complete)),
+                        ("within_budget", Json::Bool(o.within_budget)),
+                        ("rounds", Json::num(o.rounds.len() as f64)),
+                    ])
+                })),
+            ),
+        ]));
     }
     let out = run_campaign(&sys, &spec);
     Ok(ok(vec![
@@ -487,6 +592,142 @@ mod tests {
         .unwrap();
         let planned = r.body.get("planned_makespan").unwrap().as_f64().unwrap();
         assert!(planned <= 3600.0 + 1e-6, "deadline ignored: {planned}");
+    }
+
+    #[test]
+    fn plan_accepts_remaining_for_dynamic_re_planning() {
+        let c = ctx();
+        // Explicit residual set + dynamic policy: the plan covers
+        // exactly those tasks.
+        let r = handle(
+            &c,
+            r#"{"op":"plan","budget":40,"policy":"dynamic","remaining":[0,1,2,3,4,5,6,7,8,9]}"#,
+        )
+        .unwrap();
+        assert_eq!(r.body.get("policy").unwrap().as_str(), Some("dynamic"));
+        let vms = r.body.get("vms").unwrap().as_arr().unwrap();
+        let tasks: f64 = vms
+            .iter()
+            .map(|vm| vm.get("tasks").unwrap().as_f64().unwrap())
+            .sum();
+        assert_eq!(tasks, 10.0, "plan must cover exactly the residual set");
+        // An orphan remaining selects the dynamic policy, like an orphan
+        // deadline selects the deadline search.
+        let r = handle(&c, r#"{"op":"plan","budget":40,"remaining":[0,1,2]}"#).unwrap();
+        assert_eq!(r.body.get("policy").unwrap().as_str(), Some("dynamic"));
+        // Orphan deadline + remaining is ambiguous: refuse, don't guess.
+        let e = handle(
+            &c,
+            r#"{"op":"plan","budget":40,"deadline":3600,"remaining":[0,1]}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("explicitly"), "{e:#}");
+    }
+
+    #[test]
+    fn remaining_is_rejected_where_it_would_be_ignored() {
+        let c = ctx();
+        // Policies that ignore the residual set must refuse it.
+        for policy in ["budget-heuristic", "mi", "mp", "multistart"] {
+            let line = format!(
+                r#"{{"op":"plan","budget":80,"policy":"{policy}","remaining":[0,1]}}"#
+            );
+            let e = handle(&c, &line).unwrap_err();
+            assert!(format!("{e:#}").contains("remaining"), "{policy}: {e:#}");
+        }
+        // Unknown / duplicate task ids are named in the error.
+        let e = handle(
+            &c,
+            r#"{"op":"plan","budget":80,"policy":"dynamic","remaining":[99999]}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("unknown task"), "{e:#}");
+        let e = handle(
+            &c,
+            r#"{"op":"plan","budget":80,"policy":"dynamic","remaining":[3,3]}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("twice"), "{e:#}");
+        // Campaigns manage their own residuals.
+        let e = handle(
+            &c,
+            r#"{"op":"campaign","budget":80,"policy":"dynamic","remaining":[1]}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("remaining"), "{e:#}");
+    }
+
+    #[test]
+    fn sweep_threads_field_keeps_results_identical() {
+        let c = ctx();
+        let a = handle(&c, r#"{"op":"sweep","budgets":[60,80],"threads":1}"#).unwrap();
+        let b = handle(&c, r#"{"op":"sweep","budgets":[60,80],"threads":4}"#).unwrap();
+        let rows = |r: &Reply| {
+            r.body
+                .path(&["sweep", "rows"])
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|row| {
+                    (
+                        row.get("policy").unwrap().as_str().unwrap().to_string(),
+                        row.get("makespan").unwrap().as_f64().unwrap().to_bits(),
+                        row.get("cost").unwrap().as_f64().unwrap().to_bits(),
+                    )
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(rows(&a), rows(&b));
+        assert!(handle(&c, r#"{"op":"sweep","budgets":[60],"threads":"x"}"#).is_err());
+    }
+
+    #[test]
+    fn campaign_replications_aggregate() {
+        let c = ctx();
+        let r = handle(
+            &c,
+            r#"{"op":"campaign","budget":150,"replications":3,"threads":2,
+                "noise":{"mean_lifetime":2500},"seed":3,"max_rounds":6}"#,
+        )
+        .unwrap();
+        assert_eq!(r.body.get("replications").unwrap().as_f64(), Some(3.0));
+        let runs = r.body.get("runs").unwrap().as_arr().unwrap();
+        assert_eq!(runs.len(), 3);
+        // Every per-run row carries the flags the aggregate summarises.
+        for run in runs {
+            assert!(run.get("within_budget").is_some());
+            assert!(run.get("complete").is_some());
+        }
+        let frac = r.body.get("complete_frac").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&frac));
+        assert!(r.body.get("mean_wall_clock").unwrap().as_f64().unwrap() > 0.0);
+        // Wire-driven fan-out is bounded: absurd knobs are rejected, not
+        // executed.
+        let e = handle(&c, r#"{"op":"campaign","budget":80,"replications":1000000000}"#)
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("limit"), "{e:#}");
+        let e = handle(
+            &c,
+            r#"{"op":"campaign","budget":80,"replications":2,"threads":100000}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("limit"), "{e:#}");
+    }
+
+    #[test]
+    fn unknown_policy_wins_over_remaining_complaint() {
+        // A typoed policy name plus `remaining` must report unknown
+        // policy, not tell the client to drop `remaining`.
+        let c = ctx();
+        let e = handle(
+            &c,
+            r#"{"op":"plan","budget":80,"policy":"dynamc","remaining":[0]}"#,
+        )
+        .unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("unknown policy"), "{msg}");
+        assert!(!msg.contains("honoured"), "{msg}");
     }
 
     #[test]

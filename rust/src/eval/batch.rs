@@ -1,5 +1,135 @@
 use crate::model::{BillingPolicy, Plan, System, Vm};
 
+/// Aggregated per-application sizes of one VM row: either a borrowed
+/// view of a live VM's incrementally maintained cache
+/// ([`Vm::agg_sizes`]), or an owned vector synthesised for a VM that
+/// exists only hypothetically (e.g. a REPLACE candidate's new VMs).
+#[derive(Debug, Clone)]
+pub enum AggSizes<'a> {
+    Borrowed(&'a [f64]),
+    Owned(Vec<f64>),
+}
+
+impl AggSizes<'_> {
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        match self {
+            AggSizes::Borrowed(s) => s,
+            AggSizes::Owned(v) => v,
+        }
+    }
+}
+
+/// One VM row of a partial (delta) candidate.  Perf rows are always
+/// borrowed from the [`System`]'s matrix; only the size aggregation may
+/// be owned.  Every row counts as provisioned — absent slots are simply
+/// not represented (the delta form models a plan with
+/// [`Plan::drop_empty_vms`] already applied).
+#[derive(Debug, Clone)]
+pub struct DeltaRow<'a> {
+    pub sizes: AggSizes<'a>,
+    /// Performance row of the row's instance type, seconds per unit size.
+    pub perf: &'a [f64],
+    /// Hourly rate of the row's instance type.
+    pub rate: f64,
+}
+
+/// One candidate plan expressed as deltas against live state: rows that
+/// survive a hypothetical edit borrow their aggregation straight from
+/// the base plan's VMs, and only genuinely new rows are synthesised.
+/// Scoring-equivalent to a [`Candidate`] built from the materialised
+/// plan, without cloning it.
+#[derive(Debug, Clone, Default)]
+pub struct DeltaCandidate<'a> {
+    pub rows: Vec<DeltaRow<'a>>,
+}
+
+impl<'a> DeltaCandidate<'a> {
+    /// Append a row borrowing a live VM's cached aggregation.  The VM
+    /// must be non-empty (empty VMs would have been removed by
+    /// `drop_empty_vms` in the materialised plan this models).
+    pub fn push_vm(&mut self, sys: &'a System, vm: &'a Vm) {
+        debug_assert!(!vm.is_empty(), "delta rows model post-drop_empty_vms plans");
+        self.rows.push(DeltaRow {
+            sizes: AggSizes::Borrowed(vm.agg_sizes()),
+            perf: sys.perf.row(vm.it),
+            rate: sys.rate(vm.it),
+        });
+    }
+
+    /// Append a synthesised row (owned aggregation, borrowed perf row).
+    pub fn push_synth(&mut self, sizes: Vec<f64>, perf: &'a [f64], rate: f64) {
+        self.rows.push(DeltaRow { sizes: AggSizes::Owned(sizes), perf, rate });
+    }
+
+    pub fn n_vms(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Materialise into the owned [`Candidate`] form (for evaluators
+    /// that need contiguous tensors, e.g. the XLA artifact).
+    pub fn to_candidate(&self) -> Candidate {
+        let mut c = Candidate::default();
+        for row in &self.rows {
+            c.sizes.push(row.sizes.as_slice().to_vec());
+            c.perf.push(row.perf.to_vec());
+            c.rate.push(row.rate);
+            c.active.push(true);
+        }
+        c
+    }
+}
+
+/// A batch of partial candidates plus the scoring constants — the
+/// zero-clone sibling of [`EvalBatch`], borrowed from a base plan and a
+/// system for the duration of one evaluator call.
+#[derive(Debug, Clone)]
+pub struct DeltaBatch<'a> {
+    pub candidates: Vec<DeltaCandidate<'a>>,
+    pub overhead: f64,
+    pub hour: f64,
+    pub billing: BillingPolicy,
+    pub n_apps: usize,
+}
+
+impl<'a> DeltaBatch<'a> {
+    pub fn new(sys: &System) -> Self {
+        Self {
+            candidates: Vec::new(),
+            overhead: sys.overhead,
+            hour: sys.hour,
+            billing: sys.billing,
+            n_apps: sys.n_apps(),
+        }
+    }
+
+    pub fn push(&mut self, candidate: DeltaCandidate<'a>) {
+        self.candidates.push(candidate);
+    }
+
+    pub fn len(&self) -> usize {
+        self.candidates.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.candidates.is_empty()
+    }
+
+    /// Materialise the whole batch into the owned [`EvalBatch`] form.
+    /// This is the default bridge for evaluators without a native delta
+    /// path; [`crate::eval::NativeEvaluator`] scores the borrowed rows
+    /// directly and never calls it.
+    pub fn to_eval_batch(&self) -> EvalBatch {
+        EvalBatch {
+            candidates: self.candidates.iter().map(DeltaCandidate::to_candidate).collect(),
+            overhead: self.overhead,
+            hour: self.hour,
+            billing: self.billing,
+            n_apps: self.n_apps,
+        }
+    }
+}
+
 /// One candidate plan, aggregated losslessly for scoring.
 ///
 /// Because eq. 5 is linear in task size, a VM's execution time depends on
@@ -141,6 +271,41 @@ mod tests {
         p0.add_vm(&s0, InstanceTypeId(0));
         let c0 = Candidate::from_plan(&s0, &p0);
         assert!(!c0.active[0]);
+    }
+
+    #[test]
+    fn delta_candidate_matches_owned_candidate() {
+        let s = sys();
+        let mut p = Plan::new();
+        let v0 = p.add_vm(&s, InstanceTypeId(0));
+        p.vms[v0].push_task(&s, TaskId(0));
+        p.vms[v0].push_task(&s, TaskId(2));
+        let owned = Candidate::from_plan(&s, &p);
+
+        let mut delta = DeltaCandidate::default();
+        delta.push_vm(&s, &p.vms[v0]);
+        let materialised = delta.to_candidate();
+        assert_eq!(materialised.sizes, owned.sizes);
+        assert_eq!(materialised.perf, owned.perf);
+        assert_eq!(materialised.rate, owned.rate);
+        assert_eq!(materialised.active, vec![true]);
+    }
+
+    #[test]
+    fn delta_batch_materialises_synth_rows() {
+        let s = sys();
+        let mut b = DeltaBatch::new(&s);
+        let mut c = DeltaCandidate::default();
+        c.push_synth(vec![2.0, 0.0], s.perf.row(InstanceTypeId(1)), s.rate(InstanceTypeId(1)));
+        assert_eq!(c.n_vms(), 1);
+        b.push(c);
+        assert_eq!(b.len(), 1);
+        assert!(!b.is_empty());
+        let eb = b.to_eval_batch();
+        assert_eq!(eb.len(), 1);
+        assert_eq!(eb.candidates[0].sizes[0], vec![2.0, 0.0]);
+        assert_eq!(eb.candidates[0].rate[0], 10.0);
+        assert_eq!(eb.overhead, 30.0);
     }
 
     #[test]

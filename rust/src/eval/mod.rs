@@ -9,7 +9,11 @@
 //! * [`EvalBatch`] / [`Candidate`] — the lossless per-(vm, app) size
 //!   aggregation of a batch of candidate plans, i.e. exactly the tensor
 //!   layout the AOT-compiled XLA artifact consumes (see
-//!   `python/compile/model.py`).
+//!   `python/compile/model.py`);
+//! * [`DeltaBatch`] / [`DeltaCandidate`] — the borrowing (zero-clone)
+//!   sibling of the above: partial candidates whose surviving rows
+//!   reference live plan state, scored via
+//!   [`PlanEvaluator::eval_deltas`] (the REPLACE hot path).
 //!
 //! The PJRT-backed implementation lives in [`crate::runtime`]; it is
 //! differentially tested against [`NativeEvaluator`].
@@ -17,7 +21,7 @@
 mod batch;
 mod native;
 
-pub use batch::{Candidate, EvalBatch};
+pub use batch::{AggSizes, Candidate, DeltaBatch, DeltaCandidate, DeltaRow, EvalBatch};
 pub use native::NativeEvaluator;
 
 use crate::model::{Plan, PlanScore, System};
@@ -31,6 +35,17 @@ use crate::model::{Plan, PlanScore, System};
 pub trait PlanEvaluator: Send + Sync {
     /// Score a prepared batch.
     fn eval_batch(&self, batch: &EvalBatch) -> Vec<PlanScore>;
+
+    /// Score a batch of partial (delta) candidates whose rows borrow
+    /// live plan state instead of owning it — the zero-clone hot path
+    /// REPLACE scores candidate swaps through.  The default bridges to
+    /// [`eval_batch`](Self::eval_batch) by materialising the batch
+    /// (evaluators that pad tensors, e.g. the XLA artifact, copy the
+    /// rows anyway); [`NativeEvaluator`] overrides it to score the
+    /// borrowed rows directly.
+    fn eval_deltas(&self, batch: &DeltaBatch<'_>) -> Vec<PlanScore> {
+        self.eval_batch(&batch.to_eval_batch())
+    }
 
     /// Implementation name (for metrics / bench labels).
     fn name(&self) -> &'static str;

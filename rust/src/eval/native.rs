@@ -1,4 +1,4 @@
-use super::{EvalBatch, PlanEvaluator};
+use super::{DeltaBatch, EvalBatch, PlanEvaluator};
 use crate::model::{billed_cost, PlanScore};
 
 /// Exact pure-rust plan scoring.
@@ -30,6 +30,34 @@ impl PlanEvaluator for NativeEvaluator {
                     let exec = batch.overhead + work;
                     makespan = makespan.max(exec);
                     cost += billed_cost(exec, c.rate[v], batch.hour, batch.billing);
+                }
+                PlanScore { makespan, cost }
+            })
+            .collect()
+    }
+
+    /// Zero-copy delta scoring: identical arithmetic to
+    /// [`eval_batch`](PlanEvaluator::eval_batch) (same per-row
+    /// `sizes · perf` dot product, same left-to-right cost sum), applied
+    /// straight to the borrowed rows — no candidate materialisation.
+    fn eval_deltas(&self, batch: &DeltaBatch<'_>) -> Vec<PlanScore> {
+        batch
+            .candidates
+            .iter()
+            .map(|c| {
+                let mut makespan = 0.0f64;
+                let mut cost = 0.0f64;
+                for row in &c.rows {
+                    let work: f64 = row
+                        .sizes
+                        .as_slice()
+                        .iter()
+                        .zip(row.perf)
+                        .map(|(s, p)| s * p)
+                        .sum();
+                    let exec = batch.overhead + work;
+                    makespan = makespan.max(exec);
+                    cost += billed_cost(exec, row.rate, batch.hour, batch.billing);
                 }
                 PlanScore { makespan, cost }
             })
@@ -68,6 +96,39 @@ mod tests {
         let via_eval = NativeEvaluator.eval_plan(&sys, &plan);
         assert!((direct.makespan - via_eval.makespan).abs() < 1e-9);
         assert!((direct.cost - via_eval.cost).abs() < 1e-9);
+    }
+
+    #[test]
+    fn delta_scoring_matches_owned_batch_bit_for_bit() {
+        let sys = SystemBuilder::new()
+            .app("a1", (1..=9).map(f64::from).collect())
+            .app("a2", vec![2.5; 6])
+            .instance_type("small", 5.0, vec![20.0, 24.0])
+            .instance_type("cpu", 10.0, vec![10.0, 15.0])
+            .overhead(45.0)
+            .build()
+            .unwrap();
+        let mut plan = Plan::new();
+        let v0 = plan.add_vm(&sys, InstanceTypeId(0));
+        let v1 = plan.add_vm(&sys, InstanceTypeId(1));
+        for t in sys.tasks() {
+            let v = if t.id.0 % 3 == 0 { v0 } else { v1 };
+            plan.vms[v].push_task(&sys, t.id);
+        }
+        // Delta form: one borrowed row per live VM plus a synthesised row.
+        let mut delta = super::super::DeltaCandidate::default();
+        for vm in &plan.vms {
+            delta.push_vm(&sys, vm);
+        }
+        delta.push_synth(vec![3.0, 1.0], sys.perf.row(InstanceTypeId(0)), sys.rate(InstanceTypeId(0)));
+        let mut dbatch = DeltaBatch::new(&sys);
+        dbatch.push(delta);
+
+        let direct = NativeEvaluator.eval_deltas(&dbatch);
+        let via_owned = NativeEvaluator.eval_batch(&dbatch.to_eval_batch());
+        assert_eq!(direct.len(), 1);
+        assert_eq!(direct[0].makespan.to_bits(), via_owned[0].makespan.to_bits());
+        assert_eq!(direct[0].cost.to_bits(), via_owned[0].cost.to_bits());
     }
 
     #[test]

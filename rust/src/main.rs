@@ -2,10 +2,11 @@
 //!
 //! ```text
 //! botsched figures [--fig 1|2] [--overhead o] [--json out.json]
-//! botsched plan    --budget B [--system paper|file.json] [--approach heuristic|mi|mp]
-//! botsched sweep   [--budgets 40,45,..] [--system ...] [--ablate]
+//! botsched plan    --budget B [--system paper|file.json] [--policy <name>] [--threads T]
+//! botsched sweep   [--budgets 40,45,..] [--system ...] [--threads T] [--ablate]
 //! botsched simulate --budget B [--sigma s] [--lifetime m] [--seed n]
 //! botsched campaign --budget B [--lifetime m] [--reserve f] [--seed n]
+//!                  [--replications N] [--threads T]
 //! botsched estimate [--per-cell n] [--sigma s] [--seed n]
 //! botsched bounds   [--budgets ...]
 //! botsched serve   [--addr 127.0.0.1:7077] [--no-xla] [--no-batching]
@@ -20,7 +21,7 @@ use std::process::ExitCode;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use botsched::analysis::report::run_sweep;
+use botsched::analysis::report::{run_sweep, run_sweep_threads};
 use botsched::analysis::{fractional_cost_floor, makespan_floor};
 use botsched::cloudsim::{run_campaign, sample_runs, CampaignSpec, NoiseModel, SimConfig, Simulator};
 use botsched::config;
@@ -163,10 +164,11 @@ fn print_help() {
          commands:\n\
          \x20 figures   regenerate Table I, Fig. 1, Fig. 2 and the headline claims\n\
          \x20 policies  list the registered scheduling policies\n\
-         \x20 plan      plan one budget (--budget B, --policy <name>, --deadline D, --multistart N)\n\
-         \x20 sweep     full budget sweep (--budgets 40,45,.. --ablate for phase ablation)\n\
+         \x20 plan      plan one budget (--budget B, --policy <name>, --deadline D, --multistart N, --threads T)\n\
+         \x20 sweep     full budget sweep (--budgets 40,45,.. --threads T, --ablate for phase ablation)\n\
          \x20 simulate  plan + execute on the simulated cloud (--sigma, --lifetime, --seed)\n\
-         \x20 campaign  closed-loop execution with failures + replanning (--reserve, --policy, --deadline)\n\
+         \x20 campaign  closed-loop execution with failures + replanning (--reserve, --policy, --deadline,\n\
+         \x20           --replications N --threads T for Monte-Carlo replication)\n\
          \x20 estimate  bootstrap the performance matrix from sampled test runs\n\
          \x20 bounds    LP cost floor and budget-capped makespan floor\n\
          \x20 pareto    budget/makespan Pareto frontier + knee\n\
@@ -220,7 +222,8 @@ fn cmd_plan(a: &Args) -> Result<()> {
     let eval = evaluator(a);
     let mut req = SolveRequest::new(budget)
         .with_evaluator(eval.as_ref())
-        .with_seed(a.u64("seed")?.unwrap_or(0));
+        .with_seed(a.u64("seed")?.unwrap_or(0))
+        .with_threads(a.u64("threads")?.unwrap_or(1) as usize);
     if let Some(d) = a.f64("deadline")? {
         req = req.with_deadline(d);
         if canonical_name(&name) == "budget-heuristic" {
@@ -298,7 +301,8 @@ fn cmd_sweep(a: &Args) -> Result<()> {
         }
         return Ok(());
     }
-    let report = run_sweep(&sys, &bs, eval.as_ref());
+    let threads = a.u64("threads")?.unwrap_or(1) as usize;
+    let report = run_sweep_threads(&sys, &bs, eval.as_ref(), threads);
     print!("{}", report.fig1_text());
     print!("{}", report.headline().text());
     if let Some(path) = a.get("json") {
@@ -352,6 +356,34 @@ fn cmd_campaign(a: &Args) -> Result<()> {
     }
     if let Some(m) = a.u64("max-rounds")? {
         spec.max_rounds = m as usize;
+    }
+    let replications = a.u64("replications")?.unwrap_or(1).max(1) as usize;
+    if replications > 1 {
+        let threads = a.u64("threads")?.unwrap_or(1) as usize;
+        let outs =
+            botsched::cloudsim::run_campaign_replications(&sys, &spec, replications, threads);
+        let s = botsched::cloudsim::summarise_replications(&outs);
+        println!(
+            "campaign x{}: complete={}/{} within_budget={}/{} mean_wall={:.1}s mean_spent={:.2}",
+            s.replications,
+            s.complete,
+            s.replications,
+            s.within_budget,
+            s.replications,
+            s.mean_wall_clock,
+            s.mean_spent
+        );
+        for (i, o) in outs.iter().enumerate() {
+            println!(
+                "  rep {i}: wall={:.1}s spent={} complete={} within_budget={} rounds={}",
+                o.wall_clock,
+                o.spent,
+                o.complete,
+                o.within_budget,
+                o.rounds.len()
+            );
+        }
+        return Ok(());
     }
     let out = run_campaign(&sys, &spec);
     println!(

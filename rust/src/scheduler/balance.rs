@@ -19,15 +19,23 @@ use crate::model::{billed_cost, Plan, System, TaskId};
 
 /// Balance tasks between VMs subject to the cost cap.  Returns the number
 /// of task moves applied.
+///
+/// The per-VM execution times are collected once and maintained
+/// incrementally across loop iterations (a move only changes the source
+/// and receiver VM), so each iteration costs O(tasks·VMs) for the move
+/// search, not an extra O(VMs) re-collection per attempt.
 pub fn balance(sys: &System, plan: &mut Plan, cost_cap: f64) -> usize {
     let mut moves = 0usize;
     // Upper bound on useful moves; guards against pathological cycling.
     let budget_moves = plan.n_assigned() * 4 + 16;
     let mut total_cost = plan.cost(sys);
+    let mut execs: Vec<f64> = plan.vms.iter().map(|vm| vm.exec(sys)).collect();
     while moves < budget_moves {
-        match best_rebalancing_move(sys, plan, total_cost, cost_cap) {
+        match best_rebalancing_move(sys, plan, &execs, total_cost, cost_cap) {
             Some((from, to, task, new_cost)) => {
                 plan.move_task(sys, from, to, task);
+                execs[from] = plan.vms[from].exec(sys);
+                execs[to] = plan.vms[to].exec(sys);
                 total_cost = new_cost;
                 moves += 1;
             }
@@ -38,18 +46,19 @@ pub fn balance(sys: &System, plan: &mut Plan, cost_cap: f64) -> usize {
 }
 
 /// Find the single best (source, receiver, task) move off the current
-/// makespan VM, or `None` if no move strictly helps.  Returns the plan's
-/// total cost after the move as the fourth element.
+/// makespan VM, or `None` if no move strictly helps.  `execs` carries the
+/// caller-maintained per-VM execution times.  Returns the plan's total
+/// cost after the move as the fourth element.
 fn best_rebalancing_move(
     sys: &System,
     plan: &Plan,
+    execs: &[f64],
     total_cost: f64,
     cost_cap: f64,
 ) -> Option<(usize, usize, TaskId, f64)> {
     if plan.n_vms() < 2 {
         return None;
     }
-    let execs: Vec<f64> = plan.vms.iter().map(|vm| vm.exec(sys)).collect();
     let (from, &makespan) = execs.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1))?;
     let src = &plan.vms[from];
     if src.is_empty() {
@@ -165,6 +174,32 @@ mod tests {
         let after = p.score(&s);
         assert!(after.makespan <= before.makespan + 1e-9);
         assert!(after.cost <= cap + 1e-9);
+        assert!(p.validate_partition(&s).is_ok());
+    }
+
+    #[test]
+    fn incremental_execs_stay_in_sync_with_fresh_recomputation() {
+        // Run a multi-move balance and verify the plan it converges to is
+        // a fixed point: re-running with freshly collected exec times
+        // finds no further move.
+        let s = SystemBuilder::new()
+            .app("a", vec![3.0, 1.0, 4.0, 1.0, 5.0, 2.0, 6.0, 1.0])
+            .app("b", vec![2.0, 2.0, 2.0, 3.0])
+            .instance_type("small", 5.0, vec![200.0, 300.0])
+            .instance_type("cpu", 10.0, vec![100.0, 150.0])
+            .overhead(30.0)
+            .build()
+            .unwrap();
+        let mut p = Plan::new();
+        let v0 = p.add_vm(&s, InstanceTypeId(0));
+        p.add_vm(&s, InstanceTypeId(1));
+        p.add_vm(&s, InstanceTypeId(0));
+        for t in s.tasks() {
+            p.vms[v0].push_task(&s, t.id);
+        }
+        let moves = balance(&s, &mut p, f64::INFINITY);
+        assert!(moves > 1, "scenario must exercise multiple iterations");
+        assert_eq!(balance(&s, &mut p, f64::INFINITY), 0, "must converge to a fixed point");
         assert!(p.validate_partition(&s).is_ok());
     }
 

@@ -21,9 +21,9 @@
 //! | [`reduce`]        | paper `REDUCE`: dismantle whole VMs (local/global) until the budget holds |
 //! | [`add`]           | paper `ADD`: spend remaining budget on the best-performing affordable type |
 //! | [`split`]         | paper `SPLIT`: keep VM run times under one billed hour (paper's *KEEP*) |
-//! | [`replace`]       | paper `REPLACE`: swap expensive VMs for more cheaper ones when it pays off |
+//! | [`replace`]       | paper `REPLACE`: swap expensive VMs for more cheaper ones (zero-clone delta batching) |
 //! | [`baselines`]     | Sec. V-A baselines MI and MP |
-//! | [`multistart`]    | GRASP-style perturbed restarts of FIND |
+//! | [`multistart`]    | GRASP-style perturbed restarts of FIND (parallel via `util::parallel`) |
 //! | [`deadline`]      | Sec. VI: deadline-constrained cost minimisation |
 //! | [`dynamic`]       | Sec. VI: residual re-planning mid-execution |
 //! | [`nonclairvoyant`]| Sec. VI: planning under estimated sizes + online dispatch |

@@ -11,6 +11,15 @@
 //! and also models planning under estimation error — the same mechanism
 //! as `nonclairvoyant::surrogate_system`, applied to `P` instead of task
 //! sizes.
+//!
+//! Restarts are independent, so they run on the
+//! [`crate::util::parallel`] worker pool (`MultiStartConfig::threads`;
+//! 1 = sequential, 0 = auto).  Determinism is preserved by *deriving
+//! every restart's perturbed belief up front* from the shared RNG stream
+//! — the same draws in the same order as the historical sequential loop
+//! — and merging worker results in restart order, so the outcome is
+//! bit-identical at any thread count (pinned by the `perf_parity`
+//! integration tests and the unit tests below).
 
 use crate::eval::{NativeEvaluator, PlanEvaluator};
 use crate::model::{Plan, System, SystemBuilder};
@@ -25,12 +34,22 @@ pub struct MultiStartConfig {
     /// Relative perturbation applied to each perf-matrix cell per restart.
     pub perf_jitter: f64,
     pub seed: u64,
+    /// Worker threads for the restarts (1 = sequential, 0 = auto-detect;
+    /// see [`crate::util::parallel`]).  Any value yields bit-identical
+    /// results.
+    pub threads: usize,
     pub base: PlannerConfig,
 }
 
 impl Default for MultiStartConfig {
     fn default() -> Self {
-        Self { n_starts: 8, perf_jitter: 0.25, seed: 0, base: PlannerConfig::default() }
+        Self {
+            n_starts: 8,
+            perf_jitter: 0.25,
+            seed: 0,
+            threads: 1,
+            base: PlannerConfig::default(),
+        }
     }
 }
 
@@ -74,19 +93,33 @@ fn transplant(sys: &System, plan: &Plan) -> Plan {
 /// "Best" follows Algorithm 1's preference order: a feasible plan beats
 /// any infeasible one; among equals the lower makespan wins (cost as the
 /// tie-break).
+///
+/// Restart 0 is the unperturbed FIND on the true system; restarts
+/// `1..n_starts` plan against perturbed beliefs.  The beliefs are
+/// derived sequentially up front (consuming the seed's RNG stream
+/// exactly as the historical sequential loop did), the planning fans out
+/// over [`crate::util::parallel_map`], and the winners merge in restart
+/// order — so the result does not depend on `config.threads`.
 pub fn find_multistart(
     sys: &System,
     budget: f64,
     config: &MultiStartConfig,
     evaluator: &dyn PlanEvaluator,
 ) -> FindReport {
+    let n_starts = config.n_starts.max(1);
     let mut rng = Rng::new(config.seed);
-    let planner = Planner::with_evaluator(sys, evaluator).with_config(config.base.clone());
-    let mut best = planner.find(budget);
+    let beliefs: Vec<System> = (1..n_starts)
+        .map(|_| perturbed_system(sys, config.perf_jitter, &mut rng))
+        .collect();
 
-    for _ in 1..config.n_starts.max(1) {
-        let belief = perturbed_system(sys, config.perf_jitter, &mut rng);
-        let candidate = Planner::new(&belief).with_config(config.base.clone()).find(budget);
+    let reports = crate::util::parallel_map(config.threads, n_starts, |i| {
+        if i == 0 {
+            return Planner::with_evaluator(sys, evaluator)
+                .with_config(config.base.clone())
+                .find(budget);
+        }
+        let belief = &beliefs[i - 1];
+        let candidate = Planner::new(belief).with_config(config.base.clone()).find(budget);
         // Re-anchor on the true system: transplant the assignment, then
         // let BALANCE repair what the belief distorted.
         let mut plan = transplant(sys, &candidate.plan);
@@ -94,13 +127,22 @@ pub fn find_multistart(
         super::balance(sys, &mut plan, cap);
         let score = NativeEvaluator.eval_plan(sys, &plan);
         let feasible = score.satisfies(budget);
-        let better = match (feasible, best.feasible) {
+        FindReport { plan, score, feasible, iterations: candidate.iterations }
+    });
+
+    let mut it = reports.into_iter();
+    let mut best = it.next().expect("n_starts >= 1");
+    for candidate in it {
+        let better = match (candidate.feasible, best.feasible) {
             (true, false) => true,
             (false, true) => false,
-            _ => (score.makespan, score.cost) < (best.score.makespan, best.score.cost),
+            _ => {
+                (candidate.score.makespan, candidate.score.cost)
+                    < (best.score.makespan, best.score.cost)
+            }
         };
         if better {
-            best = FindReport { plan, score, feasible, iterations: candidate.iterations };
+            best = candidate;
         }
     }
     best
@@ -127,6 +169,68 @@ mod tests {
                     multi.score.makespan,
                     single.score.makespan
                 );
+            }
+        }
+    }
+
+    /// The historical (pre-parallel) sequential implementation, kept
+    /// verbatim as the parity reference: one shared RNG stream,
+    /// belief generation interleaved with planning.
+    fn legacy_sequential(
+        sys: &System,
+        budget: f64,
+        config: &MultiStartConfig,
+        evaluator: &dyn PlanEvaluator,
+    ) -> FindReport {
+        let mut rng = Rng::new(config.seed);
+        let planner = Planner::with_evaluator(sys, evaluator).with_config(config.base.clone());
+        let mut best = planner.find(budget);
+        for _ in 1..config.n_starts.max(1) {
+            let belief = perturbed_system(sys, config.perf_jitter, &mut rng);
+            let candidate = Planner::new(&belief).with_config(config.base.clone()).find(budget);
+            let mut plan = transplant(sys, &candidate.plan);
+            let cap = budget.max(plan.cost(sys));
+            crate::scheduler::balance(sys, &mut plan, cap);
+            let score = NativeEvaluator.eval_plan(sys, &plan);
+            let feasible = score.satisfies(budget);
+            let better = match (feasible, best.feasible) {
+                (true, false) => true,
+                (false, true) => false,
+                _ => (score.makespan, score.cost) < (best.score.makespan, best.score.cost),
+            };
+            if better {
+                best = FindReport { plan, score, feasible, iterations: candidate.iterations };
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn parallel_restarts_bit_identical_to_legacy_sequential() {
+        let sys = table1_system(0.0);
+        for &budget in &[60.0, 80.0] {
+            let cfg = MultiStartConfig { n_starts: 5, seed: 21, ..Default::default() };
+            let legacy = legacy_sequential(&sys, budget, &cfg, &NativeEvaluator);
+            for threads in [1usize, 2, 4] {
+                let cfg = MultiStartConfig { threads, ..cfg.clone() };
+                let got = find_multistart(&sys, budget, &cfg, &NativeEvaluator);
+                assert_eq!(
+                    got.score.makespan.to_bits(),
+                    legacy.score.makespan.to_bits(),
+                    "budget {budget}, threads {threads}: makespan bits differ"
+                );
+                assert_eq!(
+                    got.score.cost.to_bits(),
+                    legacy.score.cost.to_bits(),
+                    "budget {budget}, threads {threads}: cost bits differ"
+                );
+                assert_eq!(got.feasible, legacy.feasible);
+                assert_eq!(got.iterations, legacy.iterations);
+                assert_eq!(got.plan.n_vms(), legacy.plan.n_vms());
+                for (a, b) in got.plan.vms.iter().zip(&legacy.plan.vms) {
+                    assert_eq!(a.it, b.it, "budget {budget}, threads {threads}");
+                    assert_eq!(a.tasks(), b.tasks(), "budget {budget}, threads {threads}");
+                }
             }
         }
     }

@@ -98,6 +98,11 @@ pub struct SolveRequest<'a> {
     /// Residual task set for `"dynamic"` re-planning (`None` or empty =
     /// the full workload).
     pub remaining: Option<Vec<TaskId>>,
+    /// Worker threads for parallelisable policies (`"multistart"`
+    /// restarts fan out over [`crate::util::parallel`]): 1 = sequential
+    /// (default), 0 = auto-detect.  Results are bit-identical at any
+    /// thread count.
+    pub threads: usize,
     /// Evaluator all candidate scoring goes through; `None` = the exact
     /// native evaluator.
     evaluator: Option<&'a dyn PlanEvaluator>,
@@ -117,6 +122,7 @@ impl<'a> SolveRequest<'a> {
             perf_jitter: ms.perf_jitter,
             sample_frac: 1.0,
             remaining: None,
+            threads: 1,
             evaluator: None,
         }
     }
@@ -161,6 +167,11 @@ impl<'a> SolveRequest<'a> {
         self
     }
 
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
     pub fn with_evaluator(mut self, evaluator: &'a dyn PlanEvaluator) -> Self {
         self.evaluator = Some(evaluator);
         self
@@ -180,6 +191,7 @@ impl<'a> SolveRequest<'a> {
             n_starts: self.n_starts,
             perf_jitter: self.perf_jitter,
             seed: self.seed,
+            threads: self.threads,
             base: self.planner.clone(),
         }
     }
@@ -195,6 +207,7 @@ impl fmt::Debug for SolveRequest<'_> {
             .field("perf_jitter", &self.perf_jitter)
             .field("sample_frac", &self.sample_frac)
             .field("remaining", &self.remaining.as_ref().map(Vec::len))
+            .field("threads", &self.threads)
             .field("evaluator", &self.evaluator.map(|e| e.name()))
             .field("planner", &self.planner)
             .finish()
@@ -756,6 +769,7 @@ mod tests {
             .with_starts(3)
             .with_perf_jitter(0.1)
             .with_sample_frac(0.5)
+            .with_threads(4)
             .with_remaining(vec![TaskId(0), TaskId(1)]);
         assert_eq!(req.budget, 70.0);
         assert_eq!(req.deadline, Some(3600.0));
@@ -764,6 +778,7 @@ mod tests {
         assert_eq!(ms.n_starts, 3);
         assert_eq!(ms.perf_jitter, 0.1);
         assert_eq!(ms.seed, 9);
+        assert_eq!(ms.threads, 4);
         assert_eq!(req.remaining.as_ref().map(Vec::len), Some(2));
         assert_eq!(req.evaluator().name(), NativeEvaluator.name());
         // Debug must not require the evaluator to be Debug.

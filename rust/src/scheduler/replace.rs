@@ -8,13 +8,26 @@
 //! and commits the swap iff the budget still holds and the overall
 //! execution time strictly drops.
 //!
-//! All `(source type, cheaper type)` alternatives are materialised as
-//! candidate plans and scored **in one batch** through the
-//! [`PlanEvaluator`] — this is the planner hot path that the AOT-compiled
-//! XLA artifact accelerates in the coordinator.
+//! **Zero-clone delta batching.**  Candidate swaps are scored without
+//! materialising candidate plans: because a plan's score depends on its
+//! assignment only through each VM's per-application aggregated sizes
+//! (eq. 5 is linear in task size), a candidate is fully described by the
+//! surviving VMs' cached [`Vm::agg_sizes`] rows — *borrowed* straight
+//! from the live plan — plus `n_new` synthesised rows for the
+//! replacement VMs (an LPT spread over aggregated sizes, no `TaskId`
+//! routing).  All `(source type, cheaper type)` alternatives form one
+//! [`DeltaBatch`] scored **in one evaluator call** — this is the planner
+//! hot path that the AOT-compiled XLA artifact accelerates in the
+//! coordinator.  Only the winning swap is materialised, by applying it
+//! to the plan in place; the rejected candidates never allocate more
+//! than their synthesised rows.  The `perf_parity` integration tests pin
+//! this path bit-for-bit against the historical clone-per-candidate
+//! implementation.
+//!
+//! [`Vm::agg_sizes`]: crate::model::Vm::agg_sizes
 
-use crate::eval::PlanEvaluator;
-use crate::model::{Plan, System, TaskId};
+use crate::eval::{DeltaBatch, DeltaCandidate, PlanEvaluator};
+use crate::model::{InstanceTypeId, Plan, System, TaskId};
 
 /// Evenly distribute `tasks` over the (same-typed) new VMs: longest
 /// processing time first onto the least-loaded VM.  The paper's Sec. IV-G
@@ -30,6 +43,44 @@ fn lpt_spread(sys: &System, plan: &mut Plan, mut tasks: Vec<TaskId>, vms: &[usiz
             .expect("at least one new VM");
         plan.vms[dst].push_task(sys, t);
     }
+}
+
+/// Simulate [`lpt_spread`] over `n_new` fresh VMs of type `it` without a
+/// plan: same sort, same first-minimum destination choice, same
+/// accumulation order as `Vm::push_task`, so the resulting per-VM
+/// aggregated sizes are float-for-float what the materialised spread
+/// would cache.  Returns one aggregation row per new VM that received at
+/// least one task (empty new VMs would be removed by `drop_empty_vms`).
+fn lpt_agg_rows(
+    sys: &System,
+    mut tasks: Vec<TaskId>,
+    it: InstanceTypeId,
+    n_new: usize,
+) -> Vec<Vec<f64>> {
+    tasks.sort_by(|&a, &b| sys.exec_time(it, b).total_cmp(&sys.exec_time(it, a)));
+    let mut work = vec![0.0f64; n_new];
+    let mut agg = vec![vec![0.0f64; sys.n_apps()]; n_new];
+    let mut used = vec![false; n_new];
+    for t in tasks {
+        let dst = (0..n_new)
+            .min_by(|&a, &b| work[a].total_cmp(&work[b]))
+            .expect("n_new > 0");
+        work[dst] += sys.exec_time(it, t);
+        let task = sys.task(t);
+        agg[dst][task.app.index()] += task.size;
+        used[dst] = true;
+    }
+    agg.into_iter()
+        .zip(used)
+        .filter_map(|(a, u)| u.then_some(a))
+        .collect()
+}
+
+/// One candidate swap, described symbolically until (and unless) it wins.
+struct Swap {
+    victims: Vec<usize>,
+    cheap: InstanceTypeId,
+    n_new: usize,
 }
 
 /// Try one replacement round; commits at most one swap (the paper
@@ -48,8 +99,9 @@ pub fn replace(
     let before = plan.score(sys);
     let remaining = (budget - before.cost).max(0.0);
 
-    // Enumerate candidate swaps.
-    let mut candidates: Vec<Plan> = Vec::new();
+    // Enumerate candidate swaps as deltas against the live plan.
+    let mut swaps: Vec<Swap> = Vec::new();
+    let mut batch = DeltaBatch::new(sys);
     let mut present: Vec<bool> = vec![false; sys.n_types()];
     for vm in &plan.vms {
         present[vm.it.index()] = true;
@@ -74,6 +126,15 @@ pub fn replace(
             continue;
         }
         let freed: f64 = victims.iter().map(|&i| plan.vms[i].cost(sys)).sum();
+        // The tasks a materialised swap would drain, in drain order.
+        let drained: Vec<TaskId> = victims
+            .iter()
+            .flat_map(|&v| plan.vms[v].tasks().iter().copied())
+            .collect();
+        let mut is_victim = vec![false; plan.n_vms()];
+        for &v in &victims {
+            is_victim[v] = true;
+        }
 
         for cheap in &sys.instance_types {
             if cheap.cost_per_hour >= src_rate {
@@ -83,32 +144,30 @@ pub fn replace(
             if n_new == 0 {
                 continue;
             }
-            // Build the candidate: drop victims, add n_new cheap VMs,
-            // route the drained tasks onto the new VMs only.
-            let mut cand = plan.clone();
-            let mut drained = Vec::new();
-            for &v in &victims {
-                drained.extend(cand.vms[v].drain_tasks());
+            // Candidate = surviving VMs (borrowed rows, in plan order;
+            // empty survivors score as dropped) + the new VMs' LPT rows.
+            let mut cand = DeltaCandidate::default();
+            for (i, vm) in plan.vms.iter().enumerate() {
+                if is_victim[i] || vm.is_empty() {
+                    continue;
+                }
+                cand.push_vm(sys, vm);
             }
-            // Remove in descending index order to keep indices stable.
-            let mut vs = victims.clone();
-            vs.sort_unstable_by(|a, b| b.cmp(a));
-            for v in vs {
-                cand.remove_vm(v);
+            let perf_new = sys.perf.row(cheap.id);
+            for agg in lpt_agg_rows(sys, drained.clone(), cheap.id, n_new) {
+                cand.push_synth(agg, perf_new, cheap.cost_per_hour);
             }
-            let new_ids: Vec<usize> = (0..n_new).map(|_| cand.add_vm(sys, cheap.id)).collect();
-            lpt_spread(sys, &mut cand, drained, &new_ids);
-            cand.drop_empty_vms();
-            candidates.push(cand);
+            batch.push(cand);
+            swaps.push(Swap { victims: victims.clone(), cheap: cheap.id, n_new });
         }
     }
-    if candidates.is_empty() {
+    if swaps.is_empty() {
         return false;
     }
 
     // Batch-score all alternatives in one evaluator call.
-    let refs: Vec<&Plan> = candidates.iter().collect();
-    let scores = evaluator.eval_plans(sys, &refs);
+    let scores = evaluator.eval_deltas(&batch);
+    drop(batch); // release the borrows on `plan` before mutating it
 
     // Commit the best feasible candidate that strictly reduces exec time.
     let mut best: Option<(usize, f64)> = None;
@@ -118,13 +177,26 @@ pub fn replace(
                 best = Some((i, s.makespan));
             }
     }
-    match best {
-        Some((i, _)) => {
-            *plan = candidates.swap_remove(i);
-            true
-        }
-        None => false,
+    let Some((win, _)) = best else {
+        return false;
+    };
+
+    // Materialise exactly one plan: apply the winning swap in place.
+    let Swap { victims, cheap, n_new } = swaps.swap_remove(win);
+    let mut drained = Vec::new();
+    for &v in &victims {
+        drained.extend(plan.vms[v].drain_tasks());
     }
+    // Remove in descending index order to keep indices stable.
+    let mut vs = victims;
+    vs.sort_unstable_by(|a, b| b.cmp(a));
+    for v in vs {
+        plan.remove_vm(v);
+    }
+    let new_ids: Vec<usize> = (0..n_new).map(|_| plan.add_vm(sys, cheap)).collect();
+    lpt_spread(sys, plan, drained, &new_ids);
+    plan.drop_empty_vms();
+    true
 }
 
 #[cfg(test)]
@@ -195,5 +267,29 @@ mod tests {
         assert!(!replace(&sys, &mut plan, 2.0, 0, &NativeEvaluator));
         let mut empty = Plan::new();
         assert!(!replace(&sys, &mut empty, 2.0, 1, &NativeEvaluator));
+    }
+
+    #[test]
+    fn lpt_agg_rows_mirrors_materialised_spread() {
+        // Two apps, uneven sizes: simulate the spread and materialise it,
+        // then compare the cached aggregations float for float.
+        let sys = SystemBuilder::new()
+            .app("a1", vec![5.0, 1.0, 3.0, 2.0])
+            .app("a2", vec![4.0, 4.0, 1.0])
+            .instance_type("x", 2.0, vec![7.0, 9.0])
+            .build()
+            .unwrap();
+        let tasks: Vec<TaskId> = sys.tasks().iter().map(|t| t.id).collect();
+        let n_new = 3;
+        let rows = lpt_agg_rows(&sys, tasks.clone(), InstanceTypeId(0), n_new);
+
+        let mut plan = Plan::new();
+        let ids: Vec<usize> = (0..n_new).map(|_| plan.add_vm(&sys, InstanceTypeId(0))).collect();
+        lpt_spread(&sys, &mut plan, tasks, &ids);
+        plan.drop_empty_vms();
+        assert_eq!(rows.len(), plan.n_vms());
+        for (row, vm) in rows.iter().zip(&plan.vms) {
+            assert_eq!(row.as_slice(), vm.agg_sizes());
+        }
     }
 }

@@ -5,10 +5,14 @@
 //! * [`rng`] — deterministic seedable PRNG (SplitMix64 / xoshiro256**)
 //!   with uniform/normal/log-normal sampling, shuffling and choice;
 //! * [`json`] — a small JSON value model, parser and writer used by the
-//!   config loader, the coordinator wire protocol and the report files.
+//!   config loader, the coordinator wire protocol and the report files;
+//! * [`parallel`] — a scoped-thread worker pool with deterministic
+//!   ordered merge, driving the multistart/sweep/campaign outer loops.
 
 pub mod json;
+pub mod parallel;
 pub mod rng;
 
 pub use json::Json;
+pub use parallel::{parallel_map, resolve_threads};
 pub use rng::Rng;

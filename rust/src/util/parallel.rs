@@ -1,0 +1,145 @@
+//! Dependency-free scoped-thread worker pool with deterministic ordered
+//! merge.
+//!
+//! The planner's outer loops — multistart restarts, the budget×policy
+//! sweep grid, Monte-Carlo campaign replications — are embarrassingly
+//! parallel: every job is a pure function of its index, and the merge
+//! step only needs the results *in index order*.  This module provides
+//! exactly that shape on plain `std::thread::scope`, so the offline
+//! build stays free of rayon/crossbeam:
+//!
+//! * **Work stealing by atomic counter** — workers pull the next index
+//!   from a shared `AtomicUsize`, so an expensive cell (one slow planner
+//!   run) never stalls the whole batch behind a static partition.
+//! * **Deterministic ordered merge** — results are delivered as
+//!   `(index, value)` pairs and re-assembled into a `Vec` in index
+//!   order.  Callers that fold the vector left-to-right therefore see
+//!   results in exactly the order the sequential loop would have
+//!   produced them, which is what makes the parallel planner
+//!   bit-identical to the sequential one (see
+//!   `scheduler::find_multistart`, `analysis::run_policy_sweep`).
+//! * **`threads` contract** — `0` means auto-detect
+//!   ([`std::thread::available_parallelism`]), `1` runs inline on the
+//!   caller's thread with no pool at all (the bit-identical baseline and
+//!   the default everywhere), `n > 1` caps the pool at `min(n, jobs)`.
+//!
+//! Determinism caveat: the *values* must themselves be deterministic.
+//! Jobs that consume a shared RNG stream must have their per-job state
+//! derived **before** the fan-out (the multistart planner derives each
+//! restart's perturbed belief system up front for exactly this reason).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Resolve a requested thread count: `0` = auto-detect, otherwise as
+/// given.  Auto-detection falls back to 1 when the platform refuses to
+/// answer.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
+/// Run `f(0), f(1), ..., f(jobs - 1)` on up to `threads` scoped workers
+/// and return the results **in index order**.
+///
+/// `threads` follows the module contract (`0` = auto, `1` = inline
+/// sequential, `n` = capped pool).  Workers steal indices dynamically;
+/// a panicking job propagates to the caller once the scope joins.
+pub fn parallel_map<T, F>(threads: usize, jobs: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = resolve_threads(threads).min(jobs);
+    if threads <= 1 {
+        return (0..jobs).map(f).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    let mut slots: Vec<Option<T>> = Vec::new();
+    slots.resize_with(jobs, || None);
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let next = &next;
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs {
+                    break;
+                }
+                // The receiver only disappears if the main thread is
+                // already unwinding; stop quietly in that case.
+                if tx.send((i, f(i))).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        for (i, v) in rx {
+            slots[i] = Some(v);
+        }
+    });
+
+    // Reached only if no worker panicked (the scope re-raises panics),
+    // in which case every index was delivered exactly once.
+    slots
+        .into_iter()
+        .map(|s| s.expect("parallel_map: worker delivered every index"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordered_merge_matches_sequential() {
+        let seq: Vec<usize> = (0..100).map(|i| i * i).collect();
+        for threads in [0, 1, 2, 4, 7] {
+            let par = parallel_map(threads, 100, |i| i * i);
+            assert_eq!(par, seq, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn zero_jobs_is_empty() {
+        assert!(parallel_map(4, 0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn one_job_runs_inline() {
+        assert_eq!(parallel_map(8, 1, |i| i + 41), vec![41]);
+    }
+
+    #[test]
+    fn uneven_job_durations_still_ordered() {
+        // Early indices sleep longest: with work stealing they finish
+        // last, exercising the out-of-order delivery path.
+        let out = parallel_map(4, 16, |i| {
+            std::thread::sleep(std::time::Duration::from_millis((16 - i) as u64));
+            i
+        });
+        assert_eq!(out, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn resolve_threads_contract() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(1), 1);
+        assert_eq!(resolve_threads(6), 6);
+    }
+
+    #[test]
+    fn non_copy_results_supported() {
+        let out = parallel_map(3, 5, |i| vec![i; i]);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(v.len(), i);
+        }
+    }
+}
