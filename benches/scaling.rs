@@ -14,11 +14,14 @@
 //! smoke run; set `BENCH_JSON=1` to snapshot `BENCH_<group>.json` files
 //! (the repo's perf trajectory; see `botsched::benchkit`).
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use botsched::benchkit::Bench;
 use botsched::cloudsim::{SimConfig, Simulator};
+use botsched::coordinator::{JobEngine, Metrics};
 use botsched::scheduler::{PolicyRegistry, SolveRequest};
+use botsched::util::Json;
 use botsched::workload::{SizeDistribution, WorkloadGenerator, WorkloadSpec};
 
 fn main() {
@@ -92,6 +95,40 @@ fn main() {
         bench.run(&format!("find/{n_types}types"), || {
             std::hint::black_box(heuristic.solve(&sys, &SolveRequest::new(budget)));
         });
+    }
+    bench.report();
+
+    // ---- job-engine submit→drain throughput --------------------------------
+    // Pure pool overhead: N trivial jobs through the sharded queues,
+    // submission to last completion, at 1/2/4 shards.
+    let engine_jobs = if smoke { 100 } else { 500 };
+    let engine_target = Duration::from_millis(if smoke { 200 } else { 800 });
+    let mut bench =
+        Bench::new("scaling/engine").with_budget(Duration::from_millis(100), engine_target);
+    for shards in [1usize, 2, 4] {
+        let engine = JobEngine::new(shards, Arc::new(Metrics::new()));
+        bench.run_with_items(
+            &format!("submit-drain/{engine_jobs}jobs/{shards}shards"),
+            Some(engine_jobs as f64),
+            || {
+                let ids: Vec<String> = (0..engine_jobs)
+                    .map(|i| {
+                        engine.submit(
+                            "bench",
+                            Box::new(move |_| Ok(Json::num(i as f64))),
+                        )
+                    })
+                    .collect();
+                for id in &ids {
+                    let state = engine
+                        .registry()
+                        .wait_terminal(id, Duration::from_secs(60))
+                        .expect("bench job exists");
+                    assert!(state.is_terminal(), "bench job {id} wedged in {:?}", state.as_str());
+                }
+                std::hint::black_box(ids);
+            },
+        );
     }
     bench.report();
 

@@ -21,6 +21,7 @@ fn main() -> anyhow::Result<()> {
         use_xla: true,
         batching: true,
         batch_wait: Duration::from_millis(2),
+        ..CoordinatorConfig::default()
     })?;
     let addr = coord.local_addr;
     println!("coordinator up on {addr}\n");

@@ -15,5 +15,6 @@ pub mod stats;
 pub use bounds::{brute_force_best, fractional_cost_floor, makespan_floor};
 pub use pareto::{knee, pareto_frontier, ParetoPoint};
 pub use report::{
-    run_policy_sweep, run_sweep, run_sweep_threads, ApproachRow, SweepReport, CORE_POLICIES,
+    run_policy_sweep, run_policy_sweep_ctl, run_sweep, run_sweep_threads, ApproachRow,
+    SweepReport, CORE_POLICIES,
 };

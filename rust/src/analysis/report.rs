@@ -9,7 +9,7 @@ use crate::analysis::stats;
 use crate::eval::{NativeEvaluator, PlanEvaluator};
 use crate::model::{Plan, PlanScore, System};
 use crate::scheduler::{canonical_name, legacy_name, PolicyRegistry, SolveRequest, UnknownPolicy};
-use crate::util::Json;
+use crate::util::{CancelToken, Json};
 
 /// The Fig. 1 / Fig. 2 comparison set (the paper's heuristic vs the
 /// Sec. V baselines).
@@ -27,6 +27,28 @@ pub struct ApproachRow {
     pub vm_mix: Vec<usize>,
     /// Policy wall time in microseconds (for the §Perf log).
     pub plan_micros: u128,
+}
+
+impl ApproachRow {
+    /// One sweep row as JSON — the shape of `SweepReport::to_json`'s
+    /// `rows` entries, also streamed as a partial result by the
+    /// coordinator while a sweep job is still running.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("policy", Json::str(self.approach)),
+            // Legacy spelling, kept for pre-registry clients.
+            ("approach", Json::str(legacy_name(self.approach))),
+            ("budget", Json::num(self.budget)),
+            ("makespan", Json::num(self.score.makespan)),
+            ("cost", Json::num(self.score.cost)),
+            ("feasible", Json::Bool(self.feasible)),
+            (
+                "vm_mix",
+                Json::arr(self.vm_mix.iter().map(|n| Json::num(*n as f64))),
+            ),
+            ("plan_micros", Json::num(self.plan_micros as f64)),
+        ])
+    }
 }
 
 /// A budget sweep over a set of policies.
@@ -70,6 +92,36 @@ pub fn run_policy_sweep(
     evaluator: &dyn PlanEvaluator,
     threads: usize,
 ) -> Result<SweepReport, UnknownPolicy> {
+    run_policy_sweep_ctl(
+        sys,
+        budgets,
+        policies,
+        registry,
+        evaluator,
+        threads,
+        &CancelToken::default(),
+        &|_, _| {},
+    )
+}
+
+/// [`run_policy_sweep`] with mid-flight control: the [`CancelToken`] is
+/// checked at every cell boundary (cells not yet started when it fires
+/// are skipped — a cancelled sweep's report holds only the completed
+/// rows), and `on_cell(index, row)` streams each finished cell to the
+/// caller as it completes (out of order under parallelism, so observers
+/// must be `Sync`).  This is the hook the coordinator's job engine uses
+/// for cancellation and progress on long sweeps.
+#[allow(clippy::too_many_arguments)]
+pub fn run_policy_sweep_ctl(
+    sys: &System,
+    budgets: &[f64],
+    policies: &[&str],
+    registry: &PolicyRegistry,
+    evaluator: &dyn PlanEvaluator,
+    threads: usize,
+    cancel: &CancelToken,
+    on_cell: &(dyn Fn(usize, &ApproachRow) + Sync),
+) -> Result<SweepReport, UnknownPolicy> {
     // Resolve up front: an unknown name fails fast, before any solving.
     let resolved: Vec<&dyn crate::scheduler::Policy> = policies
         .iter()
@@ -77,21 +129,31 @@ pub fn run_policy_sweep(
         .collect::<Result<_, _>>()?;
     let cells = budgets.len() * resolved.len();
     let rows = crate::util::parallel_map(threads, cells, |idx| {
+        if cancel.is_cancelled() {
+            return None;
+        }
         let b = budgets[idx / resolved.len()];
         let policy = resolved[idx % resolved.len()];
-        let req = SolveRequest::new(b).with_evaluator(evaluator);
+        let req = SolveRequest::new(b)
+            .with_evaluator(evaluator)
+            .with_cancel(cancel.clone());
         let t0 = std::time::Instant::now();
         let out = policy.solve(sys, &req);
-        ApproachRow {
+        let row = ApproachRow {
             approach: out.policy,
             budget: b,
             score: out.score,
             feasible: out.feasible,
             vm_mix: out.plan.vm_mix(sys),
             plan_micros: t0.elapsed().as_micros(),
-        }
+        };
+        on_cell(idx, &row);
+        Some(row)
     });
-    Ok(SweepReport { budgets: budgets.to_vec(), rows })
+    Ok(SweepReport {
+        budgets: budgets.to_vec(),
+        rows: rows.into_iter().flatten().collect(),
+    })
 }
 
 impl SweepReport {
@@ -199,25 +261,7 @@ impl SweepReport {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("budgets", Json::arr(self.budgets.iter().map(|b| Json::num(*b)))),
-            (
-                "rows",
-                Json::arr(self.rows.iter().map(|r| {
-                    Json::obj(vec![
-                        ("policy", Json::str(r.approach)),
-                        // Legacy spelling, kept for pre-registry clients.
-                        ("approach", Json::str(legacy_name(r.approach))),
-                        ("budget", Json::num(r.budget)),
-                        ("makespan", Json::num(r.score.makespan)),
-                        ("cost", Json::num(r.score.cost)),
-                        ("feasible", Json::Bool(r.feasible)),
-                        (
-                            "vm_mix",
-                            Json::arr(r.vm_mix.iter().map(|n| Json::num(*n as f64))),
-                        ),
-                        ("plan_micros", Json::num(r.plan_micros as f64)),
-                    ])
-                })),
-            ),
+            ("rows", Json::arr(self.rows.iter().map(ApproachRow::to_json))),
         ])
     }
 }

@@ -21,6 +21,7 @@ use crate::eval::PlanEvaluator;
 use crate::model::{PlanScore, System, TaskId};
 use crate::scheduler::dynamic::replan_policy;
 use crate::scheduler::{BudgetHeuristic, Policy, SolveRequest};
+use crate::util::CancelToken;
 
 use super::engine::{SimConfig, SimOutcome, Simulator};
 
@@ -127,6 +128,22 @@ pub struct CampaignOutcome {
 
 /// Run a full campaign on the simulated cloud.
 pub fn run_campaign(sys: &System, spec: &CampaignSpec) -> CampaignOutcome {
+    run_campaign_ctl(sys, spec, &CancelToken::default(), &mut |_, _| {})
+}
+
+/// [`run_campaign`] with a cooperative [`CancelToken`] checked at every
+/// round boundary and a per-round observer (`on_round(index, outcome)`)
+/// invoked as each round's simulation completes — the hooks the
+/// coordinator's job engine uses for mid-flight cancellation and
+/// streaming partial results.  A cancelled campaign reports the rounds
+/// that did run (`complete` is false unless they happened to finish the
+/// workload).
+pub fn run_campaign_ctl(
+    sys: &System,
+    spec: &CampaignSpec,
+    cancel: &CancelToken,
+    on_round: &mut dyn FnMut(usize, &SimOutcome),
+) -> CampaignOutcome {
     let mut remaining: Vec<TaskId> = sys.tasks().iter().map(|t| t.id).collect();
     let mut wall = 0.0;
     let mut spent = 0.0;
@@ -134,7 +151,7 @@ pub fn run_campaign(sys: &System, spec: &CampaignSpec) -> CampaignOutcome {
     let mut planned: Option<PlanScore> = None;
 
     for round in 0..spec.max_rounds {
-        if remaining.is_empty() {
+        if remaining.is_empty() || cancel.is_cancelled() {
             break;
         }
         let budget_left = (spec.budget - spent).max(0.0);
@@ -148,7 +165,8 @@ pub fn run_campaign(sys: &System, spec: &CampaignSpec) -> CampaignOutcome {
             .base_request
             .clone()
             .with_budget(round_budget)
-            .with_seed(spec.sim.seed.wrapping_add(round as u64));
+            .with_seed(spec.sim.seed.wrapping_add(round as u64))
+            .with_cancel(cancel.clone());
         if let Some(e) = &spec.evaluator {
             req = req.with_evaluator(e.as_ref());
         }
@@ -166,6 +184,7 @@ pub fn run_campaign(sys: &System, spec: &CampaignSpec) -> CampaignOutcome {
         wall += sim.makespan;
         spent += sim.cost;
         remaining = sim.stranded.clone();
+        on_round(round, &sim);
         rounds.push(sim);
     }
 
@@ -220,13 +239,48 @@ pub fn run_campaign_replications(
     replications: usize,
     threads: usize,
 ) -> Vec<CampaignOutcome> {
+    run_campaign_replications_ctl(
+        sys,
+        spec,
+        replications,
+        threads,
+        &CancelToken::default(),
+        &|_, _| {},
+    )
+    .into_iter()
+    .flatten()
+    .collect()
+}
+
+/// [`run_campaign_replications`] with mid-flight control: the
+/// [`CancelToken`] is checked at every replication boundary (a
+/// replication already running when the token fires completes; ones not
+/// yet started are skipped and come back as `None`), and
+/// `on_replication(index, outcome)` streams each finished replication
+/// to the caller as it completes — out of order under parallelism, so
+/// observers must be `Sync`.  The returned vector is always
+/// `replications` long, in replication order, with `None` holes for the
+/// cancelled tail.
+pub fn run_campaign_replications_ctl(
+    sys: &System,
+    spec: &CampaignSpec,
+    replications: usize,
+    threads: usize,
+    cancel: &CancelToken,
+    on_replication: &(dyn Fn(usize, &CampaignOutcome) + Sync),
+) -> Vec<Option<CampaignOutcome>> {
     crate::util::parallel_map(threads, replications.max(1), |r| {
+        if cancel.is_cancelled() {
+            return None;
+        }
         let mut s = spec.clone();
         s.sim.seed = spec
             .sim
             .seed
             .wrapping_add((r as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-        run_campaign(sys, &s)
+        let out = run_campaign(sys, &s);
+        on_replication(r, &out);
+        Some(out)
     })
 }
 

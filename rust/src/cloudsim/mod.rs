@@ -25,8 +25,8 @@ pub mod noise;
 pub mod sampling;
 
 pub use campaign::{
-    run_campaign, run_campaign_replications, summarise_replications, CampaignOutcome,
-    CampaignSpec, ReplicationSummary,
+    run_campaign, run_campaign_ctl, run_campaign_replications, run_campaign_replications_ctl,
+    summarise_replications, CampaignOutcome, CampaignSpec, ReplicationSummary,
 };
 pub use engine::{SimConfig, SimOutcome, Simulator, VmStats};
 pub use event::{Event, EventKind, EventQueue};

@@ -1,0 +1,463 @@
+//! The sharded job engine: a bounded worker pool that executes every
+//! coordinator job (async `submit` jobs *and* the synchronous heavy ops,
+//! which block their connection on [`JobEngine::run_sync`]).
+//!
+//! Architecture:
+//!
+//! * **N shards, N workers.**  A job's id hashes (FNV-1a) onto a shard
+//!   queue; each shard has one dedicated worker.  Shard queues are FIFO,
+//!   so two jobs landing on the same shard start in submission order.
+//! * **Work stealing.**  An idle worker whose own queue is empty pops
+//!   the front of the next non-empty shard (round-robin scan), so one
+//!   slow shard never strands queued work while other workers idle.
+//!   Stealing pops from the front — per-shard FIFO start order holds
+//!   regardless of who executes the job.
+//! * **Bounded concurrency.**  At most N jobs run at once; everything
+//!   else queues.  This replaces the historical thread-per-job
+//!   `std::thread::spawn` in the submit path, which let one burst of
+//!   campaign submissions fork an unbounded number of OS threads.
+//! * **Cooperative cancellation.**  Every job carries a
+//!   [`CancelToken`] (owned by the [`JobRegistry`]); `cancel` fires it
+//!   and the running work stops at its next checkpoint (campaign
+//!   replication / round boundary, sweep cell, FIND iteration).
+//!   Cancelled-while-queued jobs are skipped when popped.
+//! * **Progress + partial results.**  The [`JobCtl`] handle given to
+//!   each job publishes `done/total` counters and streaming partial
+//!   rows into the registry, pollable via the `status` op while the job
+//!   runs.
+//!
+//! The engine is transport-agnostic: jobs are plain `FnOnce(&JobCtl) ->
+//! Result<Json, String>` closures, so the protocol layer, tests and
+//! benches submit work directly.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::util::{CancelToken, Json};
+
+use super::state::{JobRegistry, JobState};
+use super::Metrics;
+
+/// A unit of work: runs on a pool worker, returns the job's result body
+/// or an error string.  Long jobs should poll `ctl` for cancellation and
+/// publish progress through it.
+pub type JobFn = Box<dyn FnOnce(&JobCtl) -> Result<Json, String> + Send + 'static>;
+
+/// Upper bound a synchronous caller waits for its own job (effectively
+/// "until done" — campaigns and sweeps finish far sooner; the bound only
+/// guards against a wedged worker).
+const SYNC_WAIT: Duration = Duration::from_secs(3600);
+
+/// Per-job control handle: cancellation + progress publishing.
+#[derive(Clone)]
+pub struct JobCtl {
+    id: String,
+    registry: Arc<JobRegistry>,
+    cancel: CancelToken,
+}
+
+impl JobCtl {
+    pub fn id(&self) -> &str {
+        &self.id
+    }
+
+    /// A clone of the job's cancellation token (share it with nested
+    /// planner/simulator loops).
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.is_cancelled()
+    }
+
+    /// Publish `done/total` progress (visible via the `status` op).
+    pub fn progress(&self, done: u64, total: u64) {
+        self.registry.set_progress(&self.id, done, total);
+    }
+
+    /// Stream one partial-result row (visible via the `status` op while
+    /// the job is still running).
+    pub fn partial(&self, row: Json) {
+        self.registry.push_partial(&self.id, row);
+    }
+}
+
+struct Queued {
+    id: String,
+    work: JobFn,
+}
+
+struct Shared {
+    /// One FIFO queue per shard, all behind one short-held lock.
+    queues: Mutex<Vec<VecDeque<Queued>>>,
+    ready: Condvar,
+    stop: AtomicBool,
+}
+
+/// The sharded worker pool.  One instance per coordinator; submit from
+/// any thread.
+pub struct JobEngine {
+    registry: Arc<JobRegistry>,
+    shared: Arc<Shared>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    metrics: Arc<Metrics>,
+    n_shards: usize,
+}
+
+/// Hard ceiling on worker shards: the knob is operator/wire-adjacent
+/// (`--shards`), so bound it like every other thread count in the repo.
+const MAX_SHARDS: usize = 256;
+
+/// Resolve a shard-count request: `0` = auto (one per available core,
+/// capped at 8 — job execution itself fans out over
+/// [`crate::util::parallel`], so more shards mostly add idle threads).
+/// Explicit requests are clamped to [`MAX_SHARDS`].
+pub fn resolve_shards(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).min(8)
+    } else {
+        requested.min(MAX_SHARDS)
+    }
+}
+
+fn shard_of(id: &str, n_shards: usize) -> usize {
+    // FNV-1a over the job id.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in id.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h % n_shards as u64) as usize
+}
+
+impl JobEngine {
+    /// Start an engine with `shards` worker shards (`0` = auto).
+    pub fn new(shards: usize, metrics: Arc<Metrics>) -> Self {
+        let n_shards = resolve_shards(shards).max(1);
+        let registry = Arc::new(JobRegistry::new());
+        let shared = Arc::new(Shared {
+            queues: Mutex::new((0..n_shards).map(|_| VecDeque::new()).collect()),
+            ready: Condvar::new(),
+            stop: AtomicBool::new(false),
+        });
+        let workers = (0..n_shards)
+            .map(|shard| {
+                let shared = Arc::clone(&shared);
+                let registry = Arc::clone(&registry);
+                let metrics = Arc::clone(&metrics);
+                std::thread::Builder::new()
+                    .name(format!("job-engine-{shard}"))
+                    .spawn(move || worker_loop(shard, &shared, &registry, &metrics))
+                    .expect("spawning job-engine worker")
+            })
+            .collect();
+        Self { registry, shared, workers: Mutex::new(workers), metrics, n_shards }
+    }
+
+    /// The registry backing `status` / `jobs` / `cancel`.
+    pub fn registry(&self) -> &Arc<JobRegistry> {
+        &self.registry
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Jobs queued but not yet started, per shard (for `stats`).
+    pub fn queue_depths(&self) -> Vec<usize> {
+        self.shared.queues.lock().unwrap().iter().map(VecDeque::len).collect()
+    }
+
+    /// Enqueue a job; returns its id immediately.  The job starts when a
+    /// worker for its shard (or a stealing neighbour) frees up.
+    pub fn submit(&self, op: &str, work: JobFn) -> String {
+        let id = self.registry.create(op);
+        self.metrics.record_job_submitted();
+        let shard = shard_of(&id, self.n_shards);
+        {
+            // The stop flag must be read under the queues lock: shutdown
+            // drains leftovers under the same lock after setting it, so
+            // either this push happens before the drain (and is failed
+            // there) or this check observes the flag — a job can never
+            // land in a queue no worker will pop.
+            let mut q = self.shared.queues.lock().unwrap();
+            if self.shared.stop.load(Ordering::Acquire) {
+                drop(q);
+                self.registry.fail(&id, "engine shutting down".into());
+                self.metrics.record_job_end(&JobState::Failed);
+                return id;
+            }
+            q[shard].push_back(Queued { id: id.clone(), work });
+        }
+        self.shared.ready.notify_all();
+        id
+    }
+
+    /// Submit and block until the job reaches a terminal state — how the
+    /// synchronous heavy ops (`campaign`, `sweep`) flow through the same
+    /// bounded pool as async jobs.  The caller's thread is a connection
+    /// thread, never a pool worker, so waiting cannot starve the pool.
+    pub fn run_sync(&self, op: &str, work: JobFn) -> Result<Json, String> {
+        let id = self.submit(op, work);
+        // wait_outcome reads the result in the same critical section as
+        // the terminal observation, so registry eviction cannot race a
+        // successful job's result away from its waiter.
+        match self.registry.wait_outcome(&id, SYNC_WAIT) {
+            Some((JobState::Done, result, _)) => {
+                Ok(result.unwrap_or(Json::Null)) // Done always stores a result
+            }
+            Some((JobState::Failed, _, error)) => {
+                Err(error.unwrap_or_else(|| "job failed".into()))
+            }
+            Some((JobState::Cancelled, _, _)) => Err(format!("job {id} was cancelled")),
+            Some((state, _, _)) => {
+                // Timed out with the job still live: cancel it so the
+                // abandoned work frees its shard instead of running on
+                // for hours behind a client that already gave up.
+                self.registry.cancel(&id);
+                Err(format!(
+                    "job {id} exceeded the synchronous wait in state {:?}; cancellation requested",
+                    state.as_str()
+                ))
+            }
+            None => Err(format!("job {id} unknown to the registry")),
+        }
+    }
+
+    /// Stop the pool: cancels every live job (their tokens fire, running
+    /// work stops at its next checkpoint), wakes the workers and joins
+    /// them.  Idempotent.
+    pub fn shutdown(&self) {
+        self.shared.stop.store(true, Ordering::Release);
+        self.registry.cancel_all();
+        self.shared.ready.notify_all();
+        let workers: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        // The last Arc<JobEngine> can be dropped *by a pool worker* (a
+        // job closure owns a Context clone): never join the current
+        // thread — it exits on its own once Drop returns and it sees
+        // the stop flag; its handle is simply detached.
+        let me = std::thread::current().id();
+        for w in workers {
+            if w.thread().id() == me {
+                continue;
+            }
+            let _ = w.join();
+        }
+        // A submit may have raced the stop flag and enqueued after the
+        // workers drained; fail anything left so no waiter hangs (and
+        // count it — no worker will).
+        let leftovers: Vec<String> = {
+            let mut q = self.shared.queues.lock().unwrap();
+            q.iter_mut().flat_map(|s| s.drain(..)).map(|j| j.id).collect()
+        };
+        for id in leftovers {
+            self.registry.fail(&id, "engine shut down".into());
+            if let Some(state) = self.registry.state(&id) {
+                self.metrics.record_job_end(&state);
+            }
+        }
+    }
+}
+
+impl Drop for JobEngine {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl std::fmt::Debug for JobEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("JobEngine")
+            .field("shards", &self.n_shards)
+            .field("queued", &self.queue_depths())
+            .finish()
+    }
+}
+
+/// Pop the next job for `own`: own shard first (FIFO), then steal the
+/// front of the next non-empty shard.
+fn pop_job(queues: &mut [VecDeque<Queued>], own: usize) -> Option<Queued> {
+    if let Some(j) = queues[own].pop_front() {
+        return Some(j);
+    }
+    let n = queues.len();
+    for k in 1..n {
+        if let Some(j) = queues[(own + k) % n].pop_front() {
+            return Some(j);
+        }
+    }
+    None
+}
+
+fn worker_loop(
+    shard: usize,
+    shared: &Shared,
+    registry: &Arc<JobRegistry>,
+    metrics: &Metrics,
+) {
+    loop {
+        let next = {
+            let mut q = shared.queues.lock().unwrap();
+            loop {
+                if let Some(job) = pop_job(q.as_mut_slice(), shard) {
+                    break Some(job);
+                }
+                if shared.stop.load(Ordering::Acquire) {
+                    break None;
+                }
+                q = shared.ready.wait(q).unwrap();
+            }
+        };
+        let Some(Queued { id, work }) = next else { return };
+        if !registry.start(&id) {
+            // Cancelled while queued: the registry already holds the
+            // terminal state; nothing to run.
+            metrics.record_job_end(&JobState::Cancelled);
+            continue;
+        }
+        let ctl = JobCtl {
+            id: id.clone(),
+            registry: Arc::clone(registry),
+            cancel: registry.token(&id).expect("started job has a token"),
+        };
+        // A panicking job must not take the worker down with it.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| work(&ctl)));
+        match outcome {
+            Ok(Ok(result)) => registry.finish(&id, result),
+            Ok(Err(error)) => registry.fail(&id, error),
+            Err(_) => registry.fail(&id, "job panicked".into()),
+        }
+        // The registry owns the truth: a cancel that raced the finish
+        // leaves the job cancelled, and that is what we count.
+        if let Some(state) = registry.state(&id) {
+            metrics.record_job_end(&state);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(shards: usize) -> JobEngine {
+        JobEngine::new(shards, Arc::new(Metrics::new()))
+    }
+
+    #[test]
+    fn runs_submitted_jobs_to_completion() {
+        let e = engine(2);
+        let id = e.submit("t", Box::new(|_| Ok(Json::num(7.0))));
+        let state = e.registry().wait_terminal(&id, Duration::from_secs(5)).unwrap();
+        assert_eq!(state, JobState::Done);
+        assert_eq!(e.registry().result(&id), Some(Json::num(7.0)));
+    }
+
+    #[test]
+    fn run_sync_returns_the_result_inline() {
+        let e = engine(1);
+        let out = e.run_sync("t", Box::new(|_| Ok(Json::str("hi")))).unwrap();
+        assert_eq!(out.as_str(), Some("hi"));
+        let err = e.run_sync("t", Box::new(|_| Err("nope".into()))).unwrap_err();
+        assert_eq!(err, "nope");
+    }
+
+    #[test]
+    fn panicking_job_fails_without_killing_the_worker() {
+        let e = engine(1);
+        let err = e.run_sync("t", Box::new(|_| panic!("kaboom"))).unwrap_err();
+        assert!(err.contains("panicked"), "{err}");
+        // The single worker survived and still runs jobs.
+        let out = e.run_sync("t", Box::new(|_| Ok(Json::num(1.0)))).unwrap();
+        assert_eq!(out.as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn cancel_fires_the_token_of_a_running_job() {
+        let e = engine(1);
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let id = e.submit(
+            "t",
+            Box::new(move |ctl| {
+                tx.send(()).unwrap(); // signal: running
+                while !ctl.is_cancelled() {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err("observed cancellation".into())
+            }),
+        );
+        rx.recv_timeout(Duration::from_secs(5)).expect("job started");
+        assert!(e.registry().cancel(&id));
+        let state = e.registry().wait_terminal(&id, Duration::from_secs(5)).unwrap();
+        assert_eq!(state, JobState::Cancelled, "cancel wins over the late fail()");
+    }
+
+    #[test]
+    fn shutdown_cancels_queued_work_and_joins() {
+        let e = engine(1);
+        // Occupy the only worker, then queue more work behind it.
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let _running = e.submit(
+            "t",
+            Box::new(move |ctl| {
+                tx.send(()).unwrap();
+                while !ctl.is_cancelled() {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Ok(Json::Null)
+            }),
+        );
+        let queued = e.submit("t", Box::new(|_| Ok(Json::Null)));
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        e.shutdown();
+        assert_eq!(e.registry().state(&queued), Some(JobState::Cancelled));
+        // Submissions after shutdown fail fast instead of queueing.
+        let late = e.submit("t", Box::new(|_| Ok(Json::Null)));
+        assert_eq!(e.registry().state(&late), Some(JobState::Failed));
+    }
+
+    #[test]
+    fn dropping_the_last_engine_handle_on_a_pool_worker_does_not_deadlock() {
+        // A job closure owns a Context clone in the real protocol, so
+        // the last Arc<JobEngine> can die on the worker that runs the
+        // job; Drop→shutdown must not join the worker's own thread.
+        let e = Arc::new(engine(1));
+        let registry = Arc::clone(e.registry());
+        let (started_tx, started_rx) = std::sync::mpsc::channel::<()>();
+        let (go_tx, go_rx) = std::sync::mpsc::channel::<()>();
+        let e2 = Arc::clone(&e);
+        let id = e.submit(
+            "t",
+            Box::new(move |_| {
+                started_tx.send(()).unwrap();
+                go_rx.recv().unwrap();
+                drop(e2); // last Arc: Drop runs here, on the pool worker
+                Ok(Json::Null)
+            }),
+        );
+        started_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        drop(e); // release the main handle while the job is running
+        go_tx.send(()).unwrap();
+        // Shutdown's cancel_all marks the in-flight job cancelled; the
+        // registry outlives the engine, so the waiter still wakes.
+        assert_eq!(
+            registry.wait_terminal(&id, Duration::from_secs(10)),
+            Some(JobState::Cancelled)
+        );
+    }
+
+    #[test]
+    fn shard_hash_is_stable_and_in_range() {
+        for n in [1usize, 2, 3, 8] {
+            for i in 0..64u64 {
+                let id = format!("j-{i}");
+                let s = shard_of(&id, n);
+                assert!(s < n);
+                assert_eq!(s, shard_of(&id, n), "stable");
+            }
+        }
+    }
+}

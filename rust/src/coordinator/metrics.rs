@@ -6,6 +6,8 @@ use std::time::Duration;
 
 use crate::util::Json;
 
+use super::state::JobState;
+
 #[derive(Debug, Default)]
 struct Inner {
     requests: u64,
@@ -13,6 +15,11 @@ struct Inner {
     plans: u64,
     eval_batches: u64,
     eval_candidates: u64,
+    /// Jobs accepted by the engine (async submits + sync heavy ops).
+    jobs_submitted: u64,
+    jobs_done: u64,
+    jobs_failed: u64,
+    jobs_cancelled: u64,
     /// Microsecond latencies of the most recent requests (ring buffer).
     latencies_us: Vec<u64>,
     latency_pos: usize,
@@ -58,6 +65,23 @@ impl Metrics {
         m.eval_candidates += candidates as u64;
     }
 
+    /// One job accepted by the engine.
+    pub fn record_job_submitted(&self) {
+        self.inner.lock().unwrap().jobs_submitted += 1;
+    }
+
+    /// One job reaching a terminal state (counted by its final registry
+    /// state, so a cancel that raced a finish counts as cancelled).
+    pub fn record_job_end(&self, state: &JobState) {
+        let mut m = self.inner.lock().unwrap();
+        match state {
+            JobState::Done => m.jobs_done += 1,
+            JobState::Failed => m.jobs_failed += 1,
+            JobState::Cancelled => m.jobs_cancelled += 1,
+            JobState::Queued | JobState::Running => {}
+        }
+    }
+
     pub fn snapshot(&self) -> Json {
         let m = self.inner.lock().unwrap();
         let mut lat: Vec<f64> = m.latencies_us.iter().map(|&u| u as f64).collect();
@@ -81,6 +105,10 @@ impl Metrics {
             ("eval_batches", Json::num(m.eval_batches as f64)),
             ("eval_candidates", Json::num(m.eval_candidates as f64)),
             ("avg_batch_size", Json::num(avg_batch)),
+            ("jobs_submitted", Json::num(m.jobs_submitted as f64)),
+            ("jobs_done", Json::num(m.jobs_done as f64)),
+            ("jobs_failed", Json::num(m.jobs_failed as f64)),
+            ("jobs_cancelled", Json::num(m.jobs_cancelled as f64)),
             ("latency_us_p50", Json::num(pct(0.50))),
             ("latency_us_p95", Json::num(pct(0.95))),
             ("latency_us_p99", Json::num(pct(0.99))),
@@ -100,11 +128,19 @@ mod tests {
         m.record_plan();
         m.record_eval_batch(64);
         m.record_eval_batch(16);
+        m.record_job_submitted();
+        m.record_job_submitted();
+        m.record_job_end(&JobState::Done);
+        m.record_job_end(&JobState::Cancelled);
         let s = m.snapshot();
         assert_eq!(s.get("requests").unwrap().as_f64(), Some(2.0));
         assert_eq!(s.get("errors").unwrap().as_f64(), Some(1.0));
         assert_eq!(s.get("plans").unwrap().as_f64(), Some(1.0));
         assert_eq!(s.get("avg_batch_size").unwrap().as_f64(), Some(40.0));
+        assert_eq!(s.get("jobs_submitted").unwrap().as_f64(), Some(2.0));
+        assert_eq!(s.get("jobs_done").unwrap().as_f64(), Some(1.0));
+        assert_eq!(s.get("jobs_cancelled").unwrap().as_f64(), Some(1.0));
+        assert_eq!(s.get("jobs_failed").unwrap().as_f64(), Some(0.0));
         assert!(s.get("latency_us_p95").unwrap().as_f64().unwrap() >= 100.0);
     }
 

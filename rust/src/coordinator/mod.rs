@@ -1,12 +1,28 @@
 //! The long-running coordinator (leader) process.
 //!
-//! A thread-per-connection TCP server speaking line-delimited JSON.
-//! Clients submit planning, simulation, campaign and estimation requests;
-//! all candidate-plan scoring funnels through one shared evaluator —
-//! the PJRT/XLA artifact when built, with a [`BatchingEvaluator`] in
-//! front of it that coalesces scoring requests from concurrent planner
-//! threads into single padded XLA executions (the serving-system pattern
-//! of dynamic batching, applied to plan scoring).
+//! A thread-per-connection TCP server speaking line-delimited JSON, with
+//! job execution unified behind one sharded [`JobEngine`]: a bounded
+//! worker pool (`--shards`, default one per core) onto which job ids
+//! hash, with FIFO order per shard and work stealing across shards.
+//! `submit` enqueues any request as an asynchronous job; synchronous
+//! `campaign`/`sweep` calls run on the *same* pool (the connection just
+//! waits for its own job), so the pool bounds all campaign/sweep
+//! concurrency.  (Single-request `plan`/`simulate` ops still solve
+//! inline on their connection thread — they are the latency-sensitive
+//! request path; their `threads` knob is wire-bounded at 256 per
+//! request.)  All candidate-plan scoring
+//! funnels through one shared evaluator — the PJRT/XLA artifact when
+//! built, with a [`BatchingEvaluator`] in front of it that coalesces
+//! scoring requests from concurrent planner threads into single padded
+//! XLA executions.
+//!
+//! Jobs are **cancellable mid-flight**: `cancel` fires the job's
+//! [`CancelToken`](crate::util::CancelToken), and the running work stops
+//! cooperatively at its next checkpoint — a campaign replication/round
+//! boundary, a sweep cell, a FIND iteration, a bisection probe.  Long
+//! jobs publish **progress** (`done/total` replications or sweep cells)
+//! and **streaming partial results** (finished replication/round/cell
+//! rows), pollable via `status` while the job is still running.
 //!
 //! Python never runs here; the request path is rust + the AOT artifact.
 //!
@@ -22,28 +38,43 @@
 //! {"op":"ping"}
 //! {"op":"list_policies"}
 //! {"op":"plan","budget":80,"system":"paper","policy":"budget-heuristic"}
-//! {"op":"plan","budget":150,"policy":"deadline","deadline":3600}
+//! {"op":"plan","budget":150,"policy":"deadline","deadline":3600,"threads":4}
 //! {"op":"plan","budget":80,"policy":"multistart","n_starts":8,"seed":7}
 //! {"op":"sweep","budgets":[40,45],"system":"paper"}
 //! {"op":"simulate","budget":80,"system":"paper","noise":{"task_sigma":0.1},"seed":7}
 //! {"op":"campaign","budget":120,"policy":"mi","noise":{"mean_lifetime":2500}}
 //! {"op":"estimate_perf","system":"paper","per_cell":20,"noise":{"task_sigma":0.05}}
 //! {"op":"plan","budget":80,"detail":true}        # full task-level plan
-//! {"op":"submit","job":{"op":"campaign",...}}    # async: returns job_id
+//!
+//! # async jobs on the sharded engine:
+//! {"op":"submit","job":{"op":"campaign","budget":150,"replications":64}}
+//!   -> {"ok":true,"job_id":"j-0"}
 //! {"op":"status","job_id":"j-0"}
-//! {"op":"jobs"}
-//! {"op":"cancel","job_id":"j-0"}
-//! {"op":"stats"}
+//!   -> {"ok":true,"job":{"id":"j-0","op":"campaign","state":"running",
+//!                        "progress":{"done":17,"total":64},
+//!                        "partial_results":[{"wall_clock":...,"spent":...},...],
+//!                        "partials_next":17}}
+//! {"op":"status","job_id":"j-0","partials_from":17}
+//!   # streaming cursor: only partial rows >= 17 (pass the previous
+//!   # reply's "partials_next"), so pollers receive each row once
+//! {"op":"jobs"}          # all jobs with state + progress
+//! {"op":"cancel","job_id":"j-0"}   # fires the job's cancel token:
+//!                                  # running work stops at the next
+//!                                  # replication/cell/iteration boundary
+//!
+//! {"op":"stats"}         # metrics + engine shard/queue gauges
 //! {"op":"shutdown"}
 //! ```
 
 pub mod batcher;
+pub mod engine;
 pub mod metrics;
 pub mod protocol;
 pub mod server;
 pub mod state;
 
 pub use batcher::BatchingEvaluator;
+pub use engine::{JobCtl, JobEngine};
 pub use metrics::Metrics;
 pub use server::{Coordinator, CoordinatorConfig};
 pub use state::{JobRegistry, JobState};

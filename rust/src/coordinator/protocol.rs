@@ -4,21 +4,23 @@
 //! server is a thin transport around [`handle`], and the protocol tests
 //! drive it without sockets.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use crate::analysis::report::run_sweep_threads;
+use crate::analysis::report::{run_policy_sweep_ctl, CORE_POLICIES};
 use crate::cloudsim::{
-    run_campaign, run_campaign_replications, sample_runs, summarise_replications, CampaignSpec,
-    SimConfig, Simulator,
+    run_campaign_ctl, run_campaign_replications_ctl, sample_runs, summarise_replications,
+    CampaignOutcome, CampaignSpec, SimConfig, SimOutcome, Simulator,
 };
 use crate::config;
 use crate::eval::PlanEvaluator;
 use crate::model::System;
 use crate::scheduler::{PolicyRegistry, SolveOutcome};
-use crate::util::Json;
+use crate::util::{CancelToken, Json};
 
+use super::engine::{JobCtl, JobEngine};
 use super::state::JobRegistry;
 use super::Metrics;
 
@@ -26,28 +28,59 @@ use super::Metrics;
 pub struct Context {
     pub evaluator: Arc<dyn PlanEvaluator>,
     pub metrics: Arc<Metrics>,
-    pub jobs: Arc<JobRegistry>,
+    /// The sharded worker pool every job (async submit or synchronous
+    /// heavy op) executes on.
+    pub engine: Arc<JobEngine>,
     /// Name → policy resolution for `plan` / `simulate` / `campaign`.
     pub registry: Arc<PolicyRegistry>,
+    /// Set when this request is already running *inside* the engine (as
+    /// a job): heavy ops then execute inline with this handle's cancel
+    /// token and progress sink instead of re-submitting to the pool.
+    pub job: Option<JobCtl>,
 }
 
 impl Context {
+    /// A context with its own auto-sized engine (tests, embedding).
     pub fn new(evaluator: Arc<dyn PlanEvaluator>, metrics: Arc<Metrics>) -> Self {
+        let engine = Arc::new(JobEngine::new(0, Arc::clone(&metrics)));
+        Self::with_engine(evaluator, metrics, engine)
+    }
+
+    /// A context sharing an existing engine (one per server; job ids are
+    /// visible across every connection).
+    pub fn with_engine(
+        evaluator: Arc<dyn PlanEvaluator>,
+        metrics: Arc<Metrics>,
+        engine: Arc<JobEngine>,
+    ) -> Self {
         Self {
             evaluator,
             metrics,
-            jobs: Arc::new(JobRegistry::new()),
+            engine,
             registry: Arc::new(PolicyRegistry::builtin()),
+            job: None,
         }
+    }
+
+    /// The job registry backing `status` / `jobs` / `cancel`.
+    pub fn jobs(&self) -> &Arc<JobRegistry> {
+        self.engine.registry()
     }
 
     fn clone_shared(&self) -> Self {
         Self {
             evaluator: Arc::clone(&self.evaluator),
             metrics: Arc::clone(&self.metrics),
-            jobs: Arc::clone(&self.jobs),
+            engine: Arc::clone(&self.engine),
             registry: Arc::clone(&self.registry),
+            job: None,
         }
+    }
+
+    /// The cancel token governing this request (the job's token inside
+    /// the engine; an inert default token otherwise).
+    fn cancel_token(&self) -> CancelToken {
+        self.job.as_ref().map(JobCtl::cancel_token).unwrap_or_default()
     }
 }
 
@@ -82,7 +115,19 @@ pub fn handle(ctx: &Context, line: &str) -> Result<Reply> {
 fn dispatch(ctx: &Context, op: &str, req: &Json) -> Result<Reply> {
     match op {
         "ping" => Ok(ok(vec![("pong", Json::Bool(true))])),
-        "stats" => Ok(ok(vec![("stats", ctx.metrics.snapshot())])),
+        "stats" => Ok(ok(vec![
+            ("stats", ctx.metrics.snapshot()),
+            (
+                "engine",
+                Json::obj(vec![
+                    ("shards", Json::num(ctx.engine.n_shards() as f64)),
+                    (
+                        "queued",
+                        Json::num(ctx.engine.queue_depths().iter().sum::<usize>() as f64),
+                    ),
+                ]),
+            ),
+        ])),
         "shutdown" => Ok(Reply {
             body: Json::obj(vec![("ok", Json::Bool(true)), ("bye", Json::Bool(true))]),
             shutdown: true,
@@ -103,7 +148,7 @@ fn dispatch(ctx: &Context, op: &str, req: &Json) -> Result<Reply> {
         "estimate_perf" => op_estimate_perf(req),
         "submit" => op_submit(ctx, req),
         "status" => op_status(ctx, req),
-        "jobs" => Ok(ok(vec![("jobs", ctx.jobs.list())])),
+        "jobs" => Ok(ok(vec![("jobs", ctx.jobs().list())])),
         "cancel" => op_cancel(ctx, req),
         _ => Err(anyhow!("no such op (try list_policies, plan, sweep, simulate, campaign, estimate_perf, submit, status, jobs, cancel, stats, ping, shutdown)")),
     }
@@ -116,7 +161,10 @@ fn policy_name(req: &Json) -> Option<&str> {
         .and_then(Json::as_str)
 }
 
-/// `submit`: run any other request asynchronously; poll with `status`.
+/// `submit`: run any other request asynchronously on the sharded
+/// engine; poll with `status`, stop with `cancel`.  No thread is
+/// spawned here — the job queues onto its shard and runs when a pool
+/// worker frees up.
 fn op_submit(ctx: &Context, req: &Json) -> Result<Reply> {
     let inner = req
         .get("job")
@@ -129,36 +177,47 @@ fn op_submit(ctx: &Context, req: &Json) -> Result<Reply> {
     if matches!(inner_op, "submit" | "shutdown" | "status" | "jobs" | "cancel") {
         return Err(anyhow!("submit: op {inner_op:?} cannot run as a job"));
     }
-    let job_id = ctx.jobs.create(inner_op);
     let worker_ctx = ctx.clone_shared();
-    let worker_id = job_id.clone();
-    std::thread::spawn(move || {
-        if !worker_ctx.jobs.start(&worker_id) {
-            return; // cancelled while queued
-        }
-        match handle(&worker_ctx, &inner.to_string()) {
-            Ok(reply) => worker_ctx.jobs.finish(&worker_id, reply.body),
-            Err(e) => worker_ctx.jobs.fail(&worker_id, format!("{e:#}")),
-        }
-    });
+    let line = inner.to_string();
+    let job_id = ctx.engine.submit(
+        inner_op,
+        Box::new(move |ctl| {
+            let mut job_ctx = worker_ctx;
+            job_ctx.job = Some(ctl.clone());
+            match handle(&job_ctx, &line) {
+                Ok(reply) => Ok(reply.body),
+                Err(e) => Err(format!("{e:#}")),
+            }
+        }),
+    );
     Ok(ok(vec![("job_id", Json::str(job_id))]))
 }
 
+/// `status`: current state, progress and streaming partial results.
+/// Pass `"partials_from"` (the previous reply's `partials_next`) to
+/// receive only new partial rows instead of the whole backlog.
 fn op_status(ctx: &Context, req: &Json) -> Result<Reply> {
     let id = req
         .get("job_id")
         .and_then(Json::as_str)
         .ok_or_else(|| anyhow!("status: missing \"job_id\""))?;
-    let status = ctx.jobs.status(id).ok_or_else(|| anyhow!("unknown job {id:?}"))?;
+    let from = u64_field(req, "partials_from")?.unwrap_or(0);
+    let status = ctx
+        .jobs()
+        .status_from(id, from)
+        .ok_or_else(|| anyhow!("unknown job {id:?}"))?;
     Ok(ok(vec![("job", status)]))
 }
 
+/// `cancel`: fires the job's cancel token; queued jobs never start and
+/// running jobs stop at their next cooperative checkpoint (replication
+/// boundary, sweep cell, FIND iteration).
 fn op_cancel(ctx: &Context, req: &Json) -> Result<Reply> {
     let id = req
         .get("job_id")
         .and_then(Json::as_str)
         .ok_or_else(|| anyhow!("cancel: missing \"job_id\""))?;
-    Ok(ok(vec![("cancelled", Json::Bool(ctx.jobs.cancel(id)))]))
+    Ok(ok(vec![("cancelled", Json::Bool(ctx.jobs().cancel(id)))]))
 }
 
 fn parse_system(req: &Json) -> Result<System> {
@@ -202,7 +261,9 @@ fn solve_with(ctx: &Context, sys: &System, req: &Json) -> Result<SolveOutcome> {
     // Resolve first so a typoed policy name reports as unknown-policy,
     // not as a misleading knob error.
     let policy = ctx.registry.resolve(name).map_err(anyhow::Error::new)?;
-    let sreq = config::solve_request_from_json(req)?.with_evaluator(ctx.evaluator.as_ref());
+    let sreq = config::solve_request_from_json(req)?
+        .with_evaluator(ctx.evaluator.as_ref())
+        .with_cancel(ctx.cancel_token());
     if let Some(remaining) = &sreq.remaining {
         // `remaining` drives dynamic re-planning; every other policy
         // would silently plan the full workload, so reject it rather
@@ -266,6 +327,41 @@ fn op_plan(ctx: &Context, req: &Json) -> Result<Reply> {
     Ok(ok(fields))
 }
 
+/// A fully validated sweep, ready to execute on a pool worker.
+struct SweepJob {
+    sys: System,
+    budgets: Vec<f64>,
+    threads: usize,
+    evaluator: Arc<dyn PlanEvaluator>,
+    registry: Arc<PolicyRegistry>,
+}
+
+/// Run a validated sweep, publishing per-cell progress and streaming
+/// each finished cell as a partial result.
+fn exec_sweep(job: &SweepJob, ctl: &JobCtl) -> Reply {
+    let total = (job.budgets.len() * CORE_POLICIES.len()) as u64;
+    ctl.progress(0, total);
+    let done = AtomicU64::new(0);
+    let report = run_policy_sweep_ctl(
+        &job.sys,
+        &job.budgets,
+        CORE_POLICIES,
+        &job.registry,
+        job.evaluator.as_ref(),
+        job.threads,
+        &ctl.cancel_token(),
+        &|_idx, row| {
+            ctl.progress(done.fetch_add(1, Ordering::Relaxed) + 1, total);
+            ctl.partial(row.to_json());
+        },
+    )
+    .expect("core policies are builtin");
+    // Final authoritative count (observers race under parallelism;
+    // set_progress is max-monotonic).
+    ctl.progress(report.rows.len() as u64, total);
+    ok(vec![("sweep", report.to_json())])
+}
+
 fn op_sweep(ctx: &Context, req: &Json) -> Result<Reply> {
     let sys = parse_system(req)?;
     let budgets: Vec<f64> = match req.get("budgets").and_then(Json::as_arr) {
@@ -276,9 +372,27 @@ fn op_sweep(ctx: &Context, req: &Json) -> Result<Reply> {
         return Err(anyhow!("empty budgets"));
     }
     let threads = bounded_threads(u64_field(req, "threads")?.unwrap_or(1))?;
-    let report = run_sweep_threads(&sys, &budgets, ctx.evaluator.as_ref(), threads);
+    let job = SweepJob {
+        sys,
+        budgets,
+        threads,
+        evaluator: Arc::clone(&ctx.evaluator),
+        registry: Arc::clone(&ctx.registry),
+    };
     ctx.metrics.record_plan();
-    Ok(ok(vec![("sweep", report.to_json())]))
+    match &ctx.job {
+        // Already on a pool worker (async submit): run inline.
+        Some(ctl) => Ok(exec_sweep(&job, ctl)),
+        // Synchronous call: the same execution, behind the same bounded
+        // pool — the connection thread just waits for its own job.
+        None => {
+            let body = ctx
+                .engine
+                .run_sync("sweep", Box::new(move |ctl| Ok(exec_sweep(&job, ctl).body)))
+                .map_err(|e| anyhow!("{e}"))?;
+            Ok(Reply { body, shutdown: false })
+        }
+    }
 }
 
 /// Bound a wire-controlled worker-thread count (0 = auto is allowed;
@@ -322,7 +436,113 @@ fn op_simulate(ctx: &Context, req: &Json) -> Result<Reply> {
     ]))
 }
 
-fn op_campaign(ctx: &Context, req: &Json) -> Result<Reply> {
+/// A fully validated campaign, ready to execute on a pool worker.
+struct CampaignJob {
+    sys: System,
+    spec: CampaignSpec,
+    replications: usize,
+    threads: usize,
+}
+
+/// One finished replication as a partial/summary row.
+fn replication_row(out: &CampaignOutcome) -> Json {
+    Json::obj(vec![
+        ("wall_clock", Json::num(out.wall_clock)),
+        ("spent", Json::num(out.spent)),
+        ("complete", Json::Bool(out.complete)),
+        ("within_budget", Json::Bool(out.within_budget)),
+        ("rounds", Json::num(out.rounds.len() as f64)),
+    ])
+}
+
+/// One finished campaign round as a partial row.
+fn round_row(round: usize, sim: &SimOutcome) -> Json {
+    Json::obj(vec![
+        ("round", Json::num(round as f64)),
+        ("completed", Json::num(sim.completed.len() as f64)),
+        ("stranded", Json::num(sim.stranded.len() as f64)),
+        ("failures", Json::num(sim.failures as f64)),
+        ("cost", Json::num(sim.cost)),
+        ("makespan", Json::num(sim.makespan)),
+    ])
+}
+
+/// Run a validated campaign, publishing progress (replications done, or
+/// rounds done for a single run) and streaming partial rows.  A cancel
+/// stops the fan-out at the next replication/round boundary; the reply
+/// then covers only the work that ran (`cancelled: true`).
+fn exec_campaign(job: &CampaignJob, ctl: &JobCtl) -> Reply {
+    let cancel = ctl.cancel_token();
+    if job.replications > 1 {
+        // Monte-Carlo mode: fan the replications out and report the
+        // aggregate (plus per-replication rows for downstream tooling).
+        let total = job.replications as u64;
+        ctl.progress(0, total);
+        let done = AtomicU64::new(0);
+        let outs = run_campaign_replications_ctl(
+            &job.sys,
+            &job.spec,
+            job.replications,
+            job.threads,
+            &cancel,
+            &|_r, out| {
+                ctl.progress(done.fetch_add(1, Ordering::Relaxed) + 1, total);
+                ctl.partial(replication_row(out));
+            },
+        );
+        let outs: Vec<CampaignOutcome> = outs.into_iter().flatten().collect();
+        // Final authoritative count: racing observers may have published
+        // out of order (set_progress is max-monotonic, never regressing).
+        ctl.progress(outs.len() as u64, total);
+        let mut fields = vec![
+            ("policy", Json::str(job.spec.policy.name())),
+            ("replications", Json::num(outs.len() as f64)),
+        ];
+        if cancel.is_cancelled() {
+            fields.push(("cancelled", Json::Bool(true)));
+        }
+        if outs.is_empty() {
+            // Cancelled before any replication completed: nothing to
+            // aggregate (only reachable through a cancelled job, whose
+            // result is discarded anyway).
+            return ok(fields);
+        }
+        let s = summarise_replications(&outs);
+        let n = s.replications as f64;
+        fields.extend([
+            ("complete_frac", Json::num(s.complete as f64 / n)),
+            ("within_budget_frac", Json::num(s.within_budget as f64 / n)),
+            ("mean_wall_clock", Json::num(s.mean_wall_clock)),
+            ("mean_spent", Json::num(s.mean_spent)),
+            ("runs", Json::arr(outs.iter().map(replication_row))),
+        ]);
+        return ok(fields);
+    }
+    // Single campaign: progress over re-planning rounds.
+    let total = job.spec.max_rounds as u64;
+    ctl.progress(0, total);
+    let out = run_campaign_ctl(&job.sys, &job.spec, &cancel, &mut |round, sim| {
+        ctl.progress(round as u64 + 1, total);
+        ctl.partial(round_row(round, sim));
+    });
+    let mut fields = vec![
+        ("policy", Json::str(job.spec.policy.name())),
+        ("wall_clock", Json::num(out.wall_clock)),
+        ("spent", Json::num(out.spent)),
+        ("complete", Json::Bool(out.complete)),
+        ("within_budget", Json::Bool(out.within_budget)),
+        ("rounds", Json::num(out.rounds.len() as f64)),
+        ("planned_makespan", Json::num(out.planned.makespan)),
+    ];
+    if cancel.is_cancelled() {
+        fields.push(("cancelled", Json::Bool(true)));
+    }
+    ok(fields)
+}
+
+/// Validate a campaign request into a [`CampaignJob`] (every error
+/// surfaces here, synchronously, before anything queues).
+fn parse_campaign(ctx: &Context, req: &Json) -> Result<CampaignJob> {
     let sys = parse_system(req)?;
     let budget = budget_of(req)?;
     let mut spec = CampaignSpec::new(budget);
@@ -365,45 +585,28 @@ fn op_campaign(ctx: &Context, req: &Json) -> Result<Reply> {
     }
     let threads = bounded_threads(u64_field(req, "threads")?.unwrap_or(1))?;
     if replications > 1 {
-        // Monte-Carlo mode: fan the replications out and report the
-        // aggregate (plus per-replication rows for downstream tooling).
         // The outer fan-out owns the parallelism — the single "threads"
         // field must not also multiply into every round's inner solver.
         spec.base_request.threads = 1;
-        let outs = run_campaign_replications(&sys, &spec, replications as usize, threads);
-        let s = summarise_replications(&outs);
-        let n = s.replications as f64;
-        return Ok(ok(vec![
-            ("policy", Json::str(spec.policy.name())),
-            ("replications", Json::num(n)),
-            ("complete_frac", Json::num(s.complete as f64 / n)),
-            ("within_budget_frac", Json::num(s.within_budget as f64 / n)),
-            ("mean_wall_clock", Json::num(s.mean_wall_clock)),
-            ("mean_spent", Json::num(s.mean_spent)),
-            (
-                "runs",
-                Json::arr(outs.iter().map(|o| {
-                    Json::obj(vec![
-                        ("wall_clock", Json::num(o.wall_clock)),
-                        ("spent", Json::num(o.spent)),
-                        ("complete", Json::Bool(o.complete)),
-                        ("within_budget", Json::Bool(o.within_budget)),
-                        ("rounds", Json::num(o.rounds.len() as f64)),
-                    ])
-                })),
-            ),
-        ]));
     }
-    let out = run_campaign(&sys, &spec);
-    Ok(ok(vec![
-        ("policy", Json::str(spec.policy.name())),
-        ("wall_clock", Json::num(out.wall_clock)),
-        ("spent", Json::num(out.spent)),
-        ("complete", Json::Bool(out.complete)),
-        ("within_budget", Json::Bool(out.within_budget)),
-        ("rounds", Json::num(out.rounds.len() as f64)),
-        ("planned_makespan", Json::num(out.planned.makespan)),
-    ]))
+    Ok(CampaignJob { sys, spec, replications: replications as usize, threads })
+}
+
+fn op_campaign(ctx: &Context, req: &Json) -> Result<Reply> {
+    let job = parse_campaign(ctx, req)?;
+    match &ctx.job {
+        // Already on a pool worker (async submit): run inline.
+        Some(ctl) => Ok(exec_campaign(&job, ctl)),
+        // Synchronous call: identical execution behind the same bounded
+        // pool; the connection thread waits for its own job.
+        None => {
+            let body = ctx
+                .engine
+                .run_sync("campaign", Box::new(move |ctl| Ok(exec_campaign(&job, ctl).body)))
+                .map_err(|e| anyhow!("{e}"))?;
+            Ok(Reply { body, shutdown: false })
+        }
+    }
 }
 
 fn op_estimate_perf(req: &Json) -> Result<Reply> {

@@ -18,8 +18,8 @@ use anyhow::{Context as _, Result};
 use crate::eval::{NativeEvaluator, PlanEvaluator};
 use crate::util::Json;
 
+use super::engine::JobEngine;
 use super::protocol::{self, Context};
-use super::state::JobRegistry;
 use super::{BatchingEvaluator, Metrics};
 
 /// Server settings.
@@ -33,6 +33,10 @@ pub struct CoordinatorConfig {
     pub batching: bool,
     /// Batcher linger time.
     pub batch_wait: Duration,
+    /// Worker shards of the job engine (0 = auto: one per core, capped
+    /// at 8).  Every campaign/sweep — synchronous or submitted — runs on
+    /// this pool; at most `shards` of them execute at once.
+    pub shards: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -42,6 +46,7 @@ impl Default for CoordinatorConfig {
             use_xla: true,
             batching: true,
             batch_wait: Duration::from_millis(2),
+            shards: 0,
         }
     }
 }
@@ -83,11 +88,12 @@ impl Coordinator {
         listener.set_nonblocking(true)?;
 
         let stop = Arc::new(AtomicBool::new(false));
+        let shards = config.shards;
         let accept_thread = {
             let stop = Arc::clone(&stop);
             let metrics = Arc::clone(&metrics);
             std::thread::spawn(move || {
-                accept_loop(listener, stop, evaluator, metrics);
+                accept_loop(listener, stop, evaluator, metrics, shards);
             })
         };
 
@@ -124,12 +130,14 @@ fn accept_loop(
     stop: Arc<AtomicBool>,
     evaluator: Arc<dyn PlanEvaluator>,
     metrics: Arc<Metrics>,
+    shards: usize,
 ) {
     let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
-    // One job registry for the whole server: job ids are visible across
-    // connections (submit on one socket, poll on another).  Likewise one
-    // policy registry, shared by every connection thread.
-    let jobs = Arc::new(JobRegistry::new());
+    // One job engine for the whole server: every campaign/sweep/submit
+    // executes on its sharded pool, and job ids are visible across
+    // connections (submit on one socket, poll/cancel on another).
+    // Likewise one policy registry, shared by every connection thread.
+    let engine = Arc::new(JobEngine::new(shards, Arc::clone(&metrics)));
     let registry = Arc::new(crate::scheduler::PolicyRegistry::builtin());
     while !stop.load(Ordering::Acquire) {
         match listener.accept() {
@@ -138,8 +146,9 @@ fn accept_loop(
                 let ctx = Context {
                     evaluator: Arc::clone(&evaluator),
                     metrics: Arc::clone(&metrics),
-                    jobs: Arc::clone(&jobs),
+                    engine: Arc::clone(&engine),
                     registry: Arc::clone(&registry),
+                    job: None,
                 };
                 workers.push(std::thread::spawn(move || {
                     if let Err(e) = serve_connection(stream, ctx, ctx_stop) {
@@ -160,6 +169,10 @@ fn accept_loop(
     for w in workers {
         let _ = w.join();
     }
+    // Connections are drained; stop the pool (cancels any jobs still
+    // queued or running — their tokens fire and work stops at the next
+    // cooperative checkpoint).
+    engine.shutdown();
 }
 
 fn serve_connection(stream: TcpStream, ctx: Context, stop: Arc<AtomicBool>) -> Result<()> {

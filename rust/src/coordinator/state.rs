@@ -1,7 +1,15 @@
-//! Asynchronous job registry: long-running work (campaigns, sweeps) is
-//! submitted, runs on a background thread, and is polled by id — the
-//! serving pattern for requests that outlive a single socket
-//! round-trip.
+//! Job bookkeeping for the sharded [`super::engine::JobEngine`]: states,
+//! results, cancellation tokens, progress counters and streaming partial
+//! results, polled by id from any connection.
+//!
+//! The registry is the engine's source of truth — the engine owns the
+//! queues and workers, the registry owns everything a client can
+//! observe.  Each job carries a [`CancelToken`]; `cancel` both marks the
+//! job and fires the token, so running work (campaign replications,
+//! sweep cells, FIND iterations) stops cooperatively at its next
+//! checkpoint.  Long jobs publish `done/total` progress and append
+//! partial result rows that `status` streams back before the job
+//! finishes.
 //!
 //! Protocol surface (see [`super::protocol`]):
 //!
@@ -9,16 +17,31 @@
 //! {"op":"submit","job":{...any plan/sweep/simulate/campaign request...}}
 //!   -> {"ok":true,"job_id":"j-3"}
 //! {"op":"status","job_id":"j-3"}
-//!   -> {"ok":true,"state":"running"} | {"state":"done","result":{...}}
-//! {"op":"jobs"}          -> {"ok":true,"jobs":[{"id":..,"state":..},..]}
-//! {"op":"cancel","job_id":"j-3"}   (best-effort: marks cancelled;
-//!                                   running work is not interrupted)
+//!   -> {"ok":true,"job":{"state":"running",
+//!                        "progress":{"done":5,"total":64},
+//!                        "partial_results":[{...},...]}}
+//!    | {"ok":true,"job":{"state":"done","result":{...}}}
+//! {"op":"jobs"}        -> {"ok":true,"jobs":[{"id":..,"state":..},..]}
+//! {"op":"cancel","job_id":"j-3"}   (fires the job's cancel token;
+//!                                   running work stops at its next
+//!                                   cooperative checkpoint)
 //! ```
 
-use std::collections::HashMap;
-use std::sync::Mutex;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
 
-use crate::util::Json;
+use crate::util::{CancelToken, Json};
+
+/// Partial-result rows retained per job (older rows are dropped first;
+/// the drop count is reported so clients can detect truncation).
+const MAX_PARTIALS: usize = 1024;
+
+/// Jobs retained in the registry.  Every sync campaign/sweep also
+/// creates a job record, so a long-lived coordinator would otherwise
+/// grow without bound; once the cap is hit, the oldest *terminal* jobs
+/// are evicted (live jobs are never dropped).
+const MAX_JOBS: usize = 1024;
 
 /// Lifecycle of a job.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -40,6 +63,11 @@ impl JobState {
             JobState::Cancelled => "cancelled",
         }
     }
+
+    /// Whether the state is terminal (no further transitions).
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
 }
 
 #[derive(Debug)]
@@ -50,12 +78,24 @@ struct Job {
     request_op: String,
     result: Option<Json>,
     error: Option<String>,
+    /// Cooperative cancellation handle shared with the running work.
+    cancel: CancelToken,
+    /// `(done, total)` units of work, published by the job itself.
+    progress: Option<(u64, u64)>,
+    /// Streaming partial results (capped at [`MAX_PARTIALS`]).
+    partials: VecDeque<Json>,
+    /// Rows dropped from the front of `partials` once the cap was hit.
+    partials_dropped: u64,
 }
 
 /// Thread-safe registry of submitted jobs.
 #[derive(Debug, Default)]
 pub struct JobRegistry {
     inner: Mutex<RegistryInner>,
+    /// Signalled on every terminal transition (see [`wait_terminal`]).
+    ///
+    /// [`wait_terminal`]: Self::wait_terminal
+    terminal: Condvar,
 }
 
 #[derive(Debug, Default)]
@@ -63,7 +103,7 @@ struct RegistryInner {
     jobs: HashMap<String, Job>,
     next_id: u64,
     /// Insertion order for stable listings.
-    order: Vec<String>,
+    order: VecDeque<String>,
 }
 
 impl JobRegistry {
@@ -84,10 +124,40 @@ impl JobRegistry {
                 request_op: request_op.to_string(),
                 result: None,
                 error: None,
+                cancel: CancelToken::new(),
+                progress: None,
+                partials: VecDeque::new(),
+                partials_dropped: 0,
             },
         );
-        g.order.push(id.clone());
+        g.order.push_back(id.clone());
+        // Bound the registry: evict the oldest *terminal* jobs past the
+        // cap, skipping over live ones (a long-running job at the head
+        // must neither be dropped nor shield everything behind it from
+        // eviction).  The listing stays in insertion order.
+        if g.order.len() > MAX_JOBS {
+            let mut excess = g.order.len() - MAX_JOBS;
+            let inner = &mut *g;
+            let jobs = &mut inner.jobs;
+            inner.order.retain(|jid| {
+                if excess == 0 {
+                    return true;
+                }
+                if jobs.get(jid).is_some_and(|j| !j.state.is_terminal()) {
+                    return true; // live: never evicted
+                }
+                jobs.remove(jid);
+                excess -= 1;
+                false
+            });
+        }
         id
+    }
+
+    /// The job's cancellation token (a clone sharing the same flag).
+    pub fn token(&self, id: &str) -> Option<CancelToken> {
+        let g = self.inner.lock().unwrap();
+        g.jobs.get(id).map(|j| j.cancel.clone())
     }
 
     /// Transition to running unless the job was cancelled while queued.
@@ -109,6 +179,7 @@ impl JobRegistry {
             if j.state == JobState::Running {
                 j.state = JobState::Done;
                 j.result = Some(result);
+                self.terminal.notify_all();
             }
         }
     }
@@ -119,27 +190,136 @@ impl JobRegistry {
             if j.state == JobState::Running || j.state == JobState::Queued {
                 j.state = JobState::Failed;
                 j.error = Some(error);
+                self.terminal.notify_all();
             }
         }
     }
 
-    /// Best-effort cancel; returns whether the job existed and was not
-    /// yet finished.
+    /// Cancel a job: marks it cancelled *and* fires its [`CancelToken`],
+    /// so running work stops at its next cooperative checkpoint.
+    /// Returns whether the job existed and was not yet finished.
     pub fn cancel(&self, id: &str) -> bool {
         let mut g = self.inner.lock().unwrap();
         match g.jobs.get_mut(id) {
             Some(j) if matches!(j.state, JobState::Queued | JobState::Running) => {
                 j.state = JobState::Cancelled;
+                j.cancel.cancel();
+                self.terminal.notify_all();
                 true
             }
             _ => false,
         }
     }
 
+    /// Cancel every queued or running job (server shutdown).
+    pub fn cancel_all(&self) {
+        let mut g = self.inner.lock().unwrap();
+        for j in g.jobs.values_mut() {
+            if matches!(j.state, JobState::Queued | JobState::Running) {
+                j.state = JobState::Cancelled;
+                j.cancel.cancel();
+            }
+        }
+        self.terminal.notify_all();
+    }
+
+    /// Publish `done/total` progress for a running job.  `done` is
+    /// monotonic for a fixed `total`: parallel publishers can deliver
+    /// out of order, and a stale lower count must not make observed
+    /// progress regress.  Ignored once the job reached a terminal state.
+    pub fn set_progress(&self, id: &str, done: u64, total: u64) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(j) = g.jobs.get_mut(id) {
+            if !j.state.is_terminal() {
+                j.progress = match j.progress {
+                    Some((prev, t)) if t == total => Some((prev.max(done), total)),
+                    _ => Some((done, total)),
+                };
+            }
+        }
+    }
+
+    /// Append one streaming partial-result row (e.g. a finished campaign
+    /// replication or sweep cell).  Rows beyond [`MAX_PARTIALS`] evict
+    /// the oldest; ignored once the job reached a terminal state.
+    pub fn push_partial(&self, id: &str, row: Json) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(j) = g.jobs.get_mut(id) {
+            if !j.state.is_terminal() {
+                if j.partials.len() >= MAX_PARTIALS {
+                    j.partials.pop_front();
+                    j.partials_dropped += 1;
+                }
+                j.partials.push_back(row);
+            }
+        }
+    }
+
+    /// Current state of one job, or None if unknown.
+    pub fn state(&self, id: &str) -> Option<JobState> {
+        let g = self.inner.lock().unwrap();
+        g.jobs.get(id).map(|j| j.state.clone())
+    }
+
+    /// Block until the job reaches a terminal state (or `timeout`
+    /// expires); returns the state last observed.  None for unknown ids.
+    pub fn wait_terminal(&self, id: &str, timeout: Duration) -> Option<JobState> {
+        self.wait_outcome(id, timeout).map(|(state, _, _)| state)
+    }
+
+    /// [`wait_terminal`](Self::wait_terminal) that also captures the
+    /// result/error *in the same critical section* as the terminal
+    /// observation — a sync waiter is therefore immune to the registry
+    /// evicting the (terminal) job between its wake-up and a separate
+    /// result lookup.
+    #[allow(clippy::type_complexity)]
+    pub fn wait_outcome(
+        &self,
+        id: &str,
+        timeout: Duration,
+    ) -> Option<(JobState, Option<Json>, Option<String>)> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            let job = g.jobs.get(id)?;
+            if job.state.is_terminal() {
+                return Some((job.state.clone(), job.result.clone(), job.error.clone()));
+            }
+            let state = job.state.clone();
+            let left = deadline.saturating_duration_since(std::time::Instant::now());
+            if left.is_zero() {
+                return Some((state, None, None));
+            }
+            let (guard, _) = self.terminal.wait_timeout(g, left).unwrap();
+            g = guard;
+        }
+    }
+
     /// Status object for one job, or None if unknown.
     pub fn status(&self, id: &str) -> Option<Json> {
+        self.status_from(id, 0)
+    }
+
+    /// [`status`](Self::status) with a streaming cursor: only partial
+    /// rows with absolute index `>= from` are included (absolute = as
+    /// published, counting evicted rows; the reply's `partials_next`
+    /// says what to pass next time, so pollers receive each row once
+    /// instead of the whole backlog on every poll).
+    pub fn status_from(&self, id: &str, from: u64) -> Option<Json> {
         let g = self.inner.lock().unwrap();
-        g.jobs.get(id).map(job_json)
+        g.jobs.get(id).map(|j| job_json(j, from))
+    }
+
+    /// The stored result of a finished job (None unless `Done`).
+    pub fn result(&self, id: &str) -> Option<Json> {
+        let g = self.inner.lock().unwrap();
+        g.jobs.get(id).and_then(|j| j.result.clone())
+    }
+
+    /// The stored error of a failed job (None unless `Failed`).
+    pub fn error(&self, id: &str) -> Option<String> {
+        let g = self.inner.lock().unwrap();
+        g.jobs.get(id).and_then(|j| j.error.clone())
     }
 
     /// Summary list of all jobs (insertion order).
@@ -147,22 +327,54 @@ impl JobRegistry {
         let g = self.inner.lock().unwrap();
         Json::arr(g.order.iter().filter_map(|id| {
             g.jobs.get(id).map(|j| {
-                Json::obj(vec![
+                let mut fields = vec![
                     ("id", Json::str(&j.id)),
                     ("op", Json::str(&j.request_op)),
                     ("state", Json::str(j.state.as_str())),
-                ])
+                ];
+                if let Some((done, total)) = j.progress {
+                    fields.push(("progress", progress_json(done, total)));
+                }
+                Json::obj(fields)
             })
         }))
     }
 }
 
-fn job_json(j: &Job) -> Json {
+fn progress_json(done: u64, total: u64) -> Json {
+    Json::obj(vec![
+        ("done", Json::num(done as f64)),
+        ("total", Json::num(total as f64)),
+    ])
+}
+
+fn job_json(j: &Job, from: u64) -> Json {
     let mut fields = vec![
         ("id", Json::str(&j.id)),
         ("op", Json::str(&j.request_op)),
         ("state", Json::str(j.state.as_str())),
     ];
+    if let Some((done, total)) = j.progress {
+        fields.push(("progress", progress_json(done, total)));
+    }
+    // Row k of the retained deque has absolute index dropped + k; the
+    // cursor selects rows with absolute index >= from.
+    let published = j.partials_dropped + j.partials.len() as u64;
+    let skip = from.saturating_sub(j.partials_dropped).min(j.partials.len() as u64) as usize;
+    if j.partials.len() > skip {
+        fields.push((
+            "partial_results",
+            Json::arr(j.partials.iter().skip(skip).cloned()),
+        ));
+    }
+    if published > 0 {
+        // What to pass as the next poll's cursor (and a truncation
+        // signal: rows below partials_dropped are gone for good).
+        fields.push(("partials_next", Json::num(published as f64)));
+        if j.partials_dropped > 0 {
+            fields.push(("partials_dropped", Json::num(j.partials_dropped as f64)));
+        }
+    }
     if let Some(r) = &j.result {
         fields.push(("result", r.clone()));
     }
@@ -190,10 +402,13 @@ mod tests {
     }
 
     #[test]
-    fn cancel_before_start_skips_execution() {
+    fn cancel_before_start_skips_execution_and_fires_token() {
         let r = JobRegistry::new();
         let id = r.create("sweep");
+        let token = r.token(&id).unwrap();
+        assert!(!token.is_cancelled());
         assert!(r.cancel(&id));
+        assert!(token.is_cancelled(), "cancel must fire the job's token");
         assert!(!r.start(&id), "cancelled job must not start");
         assert_eq!(r.status(&id).unwrap().get("state").unwrap().as_str(), Some("cancelled"));
     }
@@ -220,6 +435,7 @@ mod tests {
         assert_eq!(arr[0].get("id").unwrap().as_str(), Some(a.as_str()));
         assert_eq!(arr[1].get("id").unwrap().as_str(), Some(b.as_str()));
         assert!(r.status("j-999").is_none());
+        assert!(r.token("j-999").is_none());
     }
 
     #[test]
@@ -230,5 +446,136 @@ mod tests {
         r.cancel(&id);
         r.finish(&id, Json::num(1.0));
         assert_eq!(r.status(&id).unwrap().get("state").unwrap().as_str(), Some("cancelled"));
+    }
+
+    #[test]
+    fn progress_and_partials_stream_through_status() {
+        let r = JobRegistry::new();
+        let id = r.create("campaign");
+        r.start(&id);
+        r.set_progress(&id, 2, 8);
+        r.push_partial(&id, Json::num(1.0));
+        r.push_partial(&id, Json::num(2.0));
+        let s = r.status(&id).unwrap();
+        assert_eq!(s.path(&["progress", "done"]).unwrap().as_f64(), Some(2.0));
+        assert_eq!(s.path(&["progress", "total"]).unwrap().as_f64(), Some(8.0));
+        assert_eq!(s.get("partial_results").unwrap().as_arr().unwrap().len(), 2);
+        // Terminal jobs stop accepting updates.
+        r.finish(&id, Json::Bool(true));
+        r.set_progress(&id, 9, 9);
+        r.push_partial(&id, Json::num(3.0));
+        let s = r.status(&id).unwrap();
+        assert_eq!(s.path(&["progress", "done"]).unwrap().as_f64(), Some(2.0));
+        assert_eq!(s.get("partial_results").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn partials_cap_evicts_oldest() {
+        let r = JobRegistry::new();
+        let id = r.create("sweep");
+        r.start(&id);
+        for i in 0..(MAX_PARTIALS + 3) {
+            r.push_partial(&id, Json::num(i as f64));
+        }
+        let s = r.status(&id).unwrap();
+        let rows = s.get("partial_results").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), MAX_PARTIALS);
+        assert_eq!(rows[0].as_f64(), Some(3.0), "oldest rows evicted first");
+        assert_eq!(s.get("partials_dropped").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn wait_terminal_wakes_on_finish() {
+        let r = std::sync::Arc::new(JobRegistry::new());
+        let id = r.create("plan");
+        r.start(&id);
+        let (r2, id2) = (std::sync::Arc::clone(&r), id.clone());
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            r2.finish(&id2, Json::Bool(true));
+        });
+        let state = r.wait_terminal(&id, Duration::from_secs(5)).unwrap();
+        assert_eq!(state, JobState::Done);
+        h.join().unwrap();
+        // Unknown ids return None; a pending job returns its live state
+        // on timeout.
+        assert!(r.wait_terminal("j-999", Duration::from_millis(1)).is_none());
+        let pending = r.create("plan");
+        assert_eq!(
+            r.wait_terminal(&pending, Duration::from_millis(10)),
+            Some(JobState::Queued)
+        );
+    }
+
+    #[test]
+    fn registry_evicts_oldest_terminal_jobs_past_the_cap() {
+        let r = JobRegistry::new();
+        // A live job at the front is skipped by eviction, never dropped
+        // — and does not shield the terminal jobs behind it.
+        let live = r.create("long");
+        r.start(&live);
+        for _ in 0..(MAX_JOBS + 5) {
+            let id = r.create("quick");
+            r.start(&id);
+            r.finish(&id, Json::Bool(true));
+        }
+        assert!(r.status(&live).is_some(), "live job must never be evicted");
+        assert_eq!(
+            r.list().as_arr().unwrap().len(),
+            MAX_JOBS,
+            "terminal jobs behind the live head keep the registry at the cap"
+        );
+        r.finish(&live, Json::Bool(true));
+        // Now terminal, the old head is the next eviction victim.
+        let id = r.create("one-more");
+        assert_eq!(r.list().as_arr().unwrap().len(), MAX_JOBS);
+        assert!(r.status(&id).is_some());
+        assert!(r.status(&live).is_none(), "oldest terminal head evicted");
+    }
+
+    #[test]
+    fn status_cursor_returns_only_new_partials() {
+        let r = JobRegistry::new();
+        let id = r.create("campaign");
+        r.start(&id);
+        for i in 0..5 {
+            r.push_partial(&id, Json::num(i as f64));
+        }
+        let s = r.status(&id).unwrap();
+        assert_eq!(s.get("partial_results").unwrap().as_arr().unwrap().len(), 5);
+        let next = s.get("partials_next").unwrap().as_u64().unwrap();
+        assert_eq!(next, 5);
+        // Poll again from the cursor: nothing new yet.
+        let s = r.status_from(&id, next).unwrap();
+        assert!(s.get("partial_results").is_none());
+        assert_eq!(s.get("partials_next").unwrap().as_u64(), Some(5));
+        // Two more rows: only they come back.
+        r.push_partial(&id, Json::num(5.0));
+        r.push_partial(&id, Json::num(6.0));
+        let s = r.status_from(&id, next).unwrap();
+        let rows = s.get("partial_results").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].as_f64(), Some(5.0));
+        assert_eq!(s.get("partials_next").unwrap().as_u64(), Some(7));
+        // A cursor below the evicted range just returns what is retained.
+        let s = r.status_from(&id, 0).unwrap();
+        assert_eq!(s.get("partial_results").unwrap().as_arr().unwrap().len(), 7);
+    }
+
+    #[test]
+    fn cancel_all_fires_every_live_token() {
+        let r = JobRegistry::new();
+        let a = r.create("plan");
+        let b = r.create("sweep");
+        r.start(&a);
+        let done = r.create("x");
+        r.start(&done);
+        r.finish(&done, Json::Bool(true));
+        r.cancel_all();
+        assert_eq!(r.state(&a), Some(JobState::Cancelled));
+        assert_eq!(r.state(&b), Some(JobState::Cancelled));
+        assert_eq!(r.state(&done), Some(JobState::Done), "finished jobs untouched");
+        assert!(r.token(&a).unwrap().is_cancelled());
+        assert!(r.token(&b).unwrap().is_cancelled());
     }
 }

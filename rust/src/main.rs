@@ -9,8 +9,10 @@
 //!                  [--replications N] [--threads T]
 //! botsched estimate [--per-cell n] [--sigma s] [--seed n]
 //! botsched bounds   [--budgets ...]
-//! botsched serve   [--addr 127.0.0.1:7077] [--no-xla] [--no-batching]
+//! botsched serve   [--addr 127.0.0.1:7077] [--no-xla] [--no-batching] [--shards N]
 //! botsched client  --addr host:port '<json request>'
+//! botsched jobs    [--addr host:port]            # list the engine's jobs
+//! botsched cancel  --job j-3 [--addr host:port]  # cancel a running job
 //! ```
 //!
 //! Everything is also available programmatically through the `botsched`
@@ -149,6 +151,8 @@ fn run(args: Vec<String>) -> Result<()> {
         "trace" => cmd_trace(&a),
         "serve" => cmd_serve(&a),
         "client" => cmd_client(&a),
+        "jobs" => cmd_jobs(&a),
+        "cancel" => cmd_cancel(&a),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -173,8 +177,10 @@ fn print_help() {
          \x20 bounds    LP cost floor and budget-capped makespan floor\n\
          \x20 pareto    budget/makespan Pareto frontier + knee\n\
          \x20 trace     gen/replay multi-campaign arrival traces\n\
-         \x20 serve     start the coordinator (--addr, --no-xla, --no-batching)\n\
-         \x20 client    send one JSON request to a coordinator\n\n\
+         \x20 serve     start the coordinator (--addr, --no-xla, --no-batching, --shards N)\n\
+         \x20 client    send one JSON request to a coordinator\n\
+         \x20 jobs      list a coordinator's jobs (state, progress)\n\
+         \x20 cancel    cancel a coordinator job (--job j-3)\n\n\
          common flags: --system paper|paper:<overhead>|file.json, --overhead o, --no-xla"
     );
 }
@@ -511,6 +517,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
         use_xla: !a.has("no-xla"),
         batching: !a.has("no-batching"),
         batch_wait: std::time::Duration::from_millis(a.u64("batch-wait-ms")?.unwrap_or(2)),
+        shards: a.u64("shards")?.unwrap_or(0) as usize,
     };
     let c = Coordinator::start(cfg)?;
     println!("coordinator listening on {} (send {{\"op\":\"shutdown\"}} to stop)", c.local_addr);
@@ -520,16 +527,63 @@ fn cmd_serve(a: &Args) -> Result<()> {
 }
 
 fn cmd_client(a: &Args) -> Result<()> {
-    let addr: std::net::SocketAddr = a
-        .get("addr")
-        .unwrap_or("127.0.0.1:7077")
-        .parse()
-        .context("--addr host:port")?;
+    let addr = client_addr(a)?;
     let line = a
         .positional
         .first()
         .ok_or_else(|| anyhow!("usage: botsched client --addr host:port '<json>'"))?;
     let reply = botsched::coordinator::server::request(&addr, line)?;
     println!("{reply}");
+    Ok(())
+}
+
+fn client_addr(a: &Args) -> Result<std::net::SocketAddr> {
+    a.get("addr")
+        .unwrap_or("127.0.0.1:7077")
+        .parse()
+        .context("--addr host:port")
+}
+
+/// `botsched jobs`: list the coordinator's jobs with state + progress.
+fn cmd_jobs(a: &Args) -> Result<()> {
+    let reply = botsched::coordinator::server::request(&client_addr(a)?, r#"{"op":"jobs"}"#)?;
+    let Some(jobs) = reply.get("jobs").and_then(|j| j.as_arr()) else {
+        anyhow::bail!("unexpected reply: {reply}");
+    };
+    if jobs.is_empty() {
+        println!("no jobs");
+        return Ok(());
+    }
+    println!("{:<8} {:<12} {:<10} progress", "id", "op", "state");
+    for j in jobs {
+        let field = |k: &str| j.get(k).and_then(|v| v.as_str()).unwrap_or("?").to_string();
+        let progress = match (
+            j.path(&["progress", "done"]).and_then(|v| v.as_f64()),
+            j.path(&["progress", "total"]).and_then(|v| v.as_f64()),
+        ) {
+            (Some(d), Some(t)) => format!("{d:.0}/{t:.0}"),
+            _ => "-".into(),
+        };
+        println!("{:<8} {:<12} {:<10} {progress}", field("id"), field("op"), field("state"));
+    }
+    Ok(())
+}
+
+/// `botsched cancel --job j-3`: fire a job's cancel token.
+fn cmd_cancel(a: &Args) -> Result<()> {
+    let job = a.get("job").ok_or_else(|| anyhow!("--job <job_id> required"))?;
+    // Build the request through the Json writer so a hostile job id
+    // cannot inject fields into the wire line.
+    let line = botsched::util::Json::obj(vec![
+        ("op", botsched::util::Json::str("cancel")),
+        ("job_id", botsched::util::Json::str(job)),
+    ])
+    .to_string();
+    let reply = botsched::coordinator::server::request(&client_addr(a)?, &line)?;
+    match reply.get("cancelled").and_then(|v| v.as_bool()) {
+        Some(true) => println!("{job}: cancellation requested (work stops at its next checkpoint)"),
+        Some(false) => println!("{job}: not cancellable (already finished or unknown)"),
+        None => println!("{reply}"),
+    }
     Ok(())
 }

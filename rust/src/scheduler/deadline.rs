@@ -10,9 +10,30 @@
 //! meets the deadline, then return that plan.  Non-monotone blips from
 //! the heuristic are absorbed by tracking the best (cheapest meeting the
 //! deadline) plan seen during the search.
+//!
+//! **Parallel probes by speculative bisection.**  Bisection is
+//! inherently sequential — each probe decides the next interval — so
+//! naive fan-out would change the probe sequence and therefore the
+//! result.  Instead, [`min_cost_for_deadline_ctl`] speculates: with `t`
+//! worker threads it evaluates the next `d = ⌊log₂(t+1)⌋` *levels* of
+//! the bisection decision tree (all `2^d − 1` candidate midpoints, heap
+//! order) in one [`crate::util::parallel`] fan-out, then walks the tree
+//! exactly as the sequential loop would, consuming the precomputed
+//! probes.  The walked path — probe points, best-plan updates, reported
+//! probe count — is bit-for-bit the sequential search at any thread
+//! count; the off-path probes are discarded wall-clock speculation
+//! (2× / 3× fewer rounds at 4 / 8 threads).  `threads <= 1` runs the
+//! literal sequential loop.
+//!
+//! Cancellation: the planner's [`CancelToken`] is polled between
+//! bisection rounds (and inside each FIND via the planner itself); a
+//! cancelled search returns the best plan found so far.
+//!
+//! [`CancelToken`]: crate::util::CancelToken
 
 use super::find::{FindReport, Planner};
 use crate::model::System;
+use crate::util::{parallel_map, resolve_threads};
 
 /// Result of a deadline-constrained search.
 #[derive(Debug, Clone)]
@@ -25,7 +46,8 @@ pub struct DeadlineReport {
     pub best_effort: Option<FindReport>,
     /// The budget that produced `report`.
     pub budget: f64,
-    /// Planner invocations spent in the bisection.
+    /// Planner invocations consumed by the search *path* (identical at
+    /// any thread count; speculative off-path probes are not counted).
     pub probes: usize,
 }
 
@@ -39,11 +61,29 @@ pub fn min_cost_for_deadline(sys: &System, deadline: f64, budget_hi: f64) -> Dea
 
 /// [`min_cost_for_deadline`] probing through a caller-configured planner
 /// (evaluator + phase toggles), so policy-level settings apply to every
-/// bisection probe.
+/// bisection probe.  Sequential (one probe per round).
 pub fn min_cost_for_deadline_with(
     planner: &Planner,
     deadline: f64,
     budget_hi: f64,
+) -> DeadlineReport {
+    min_cost_for_deadline_ctl(planner, deadline, budget_hi, 1)
+}
+
+/// Whether a probe result meets the deadline within the budget probed.
+fn meets(r: &FindReport, deadline: f64) -> bool {
+    r.feasible && r.score.makespan <= deadline + 1e-6
+}
+
+/// [`min_cost_for_deadline_with`] with the bisection probes speculated
+/// across `threads` workers (0 = auto, 1 = sequential; see the module
+/// docs).  The returned report — plan, budget, probe count — is
+/// bit-identical at any thread count.
+pub fn min_cost_for_deadline_ctl(
+    planner: &Planner,
+    deadline: f64,
+    budget_hi: f64,
+    threads: usize,
 ) -> DeadlineReport {
     let sys = planner.sys;
     let mut probes = 0usize;
@@ -64,25 +104,84 @@ pub fn min_cost_for_deadline_with(
     // Check feasibility at the cap first.
     let top = planner.find(hi);
     probes += 1;
-    if !(top.feasible && top.score.makespan <= deadline + 1e-6) {
+    if !meets(&top, deadline) {
         return DeadlineReport { report: None, best_effort: Some(top), budget: hi, probes };
     }
     let mut best = top;
     let mut best_budget = hi;
 
+    // Levels of the bisection decision tree to speculate per round:
+    // 2^d - 1 probes buy d guaranteed levels of progress.
+    let t = resolve_threads(threads);
+    let spec_depth = if t <= 1 { 1 } else { (usize::BITS - (t + 1).leading_zeros() - 1) as usize };
+
     // Bisect to cost granularity (budgets are money: 2 decimal places).
     while hi - lo > 0.01 {
-        let mid = (lo + hi) / 2.0;
-        let r = planner.find(mid);
-        probes += 1;
-        if r.feasible && r.score.makespan <= deadline + 1e-6 {
-            if r.score.cost < best.score.cost - 1e-9 {
-                best = r;
-                best_budget = mid;
+        if planner.cancel.is_cancelled() {
+            break; // return the cheapest deadline-meeting plan so far
+        }
+        if spec_depth <= 1 {
+            // The literal sequential loop (and the parity baseline).
+            let mid = (lo + hi) / 2.0;
+            let r = planner.find(mid);
+            probes += 1;
+            if meets(&r, deadline) {
+                if r.score.cost < best.score.cost - 1e-9 {
+                    best = r;
+                    best_budget = mid;
+                }
+                hi = mid;
+            } else {
+                lo = mid;
             }
-            hi = mid;
-        } else {
-            lo = mid;
+            continue;
+        }
+
+        // Speculative round: materialise the next `spec_depth` levels of
+        // the decision tree in heap order.  Node j covers an interval;
+        // its midpoint is the probe the sequential loop would issue on
+        // the path reaching it, computed with the exact same floats.
+        let n_nodes = (1usize << spec_depth) - 1;
+        let mut intervals: Vec<(f64, f64)> = Vec::with_capacity(n_nodes);
+        intervals.push((lo, hi));
+        let mut j = 0;
+        while j < n_nodes {
+            let (nlo, nhi) = intervals[j];
+            let mid = (nlo + nhi) / 2.0;
+            if 2 * j + 2 < n_nodes {
+                intervals.push((nlo, mid));
+                intervals.push((mid, nhi));
+            }
+            j += 1;
+        }
+        let mut reports: Vec<Option<FindReport>> =
+            parallel_map(threads, n_nodes, |j| {
+                let (nlo, nhi) = intervals[j];
+                Some(planner.find((nlo + nhi) / 2.0))
+            });
+
+        // Walk the precomputed tree exactly as the sequential loop
+        // would, stopping at convergence (unused speculation is waste,
+        // never a behaviour change).
+        let mut j = 0usize;
+        for _ in 0..spec_depth {
+            if hi - lo <= 0.01 {
+                break;
+            }
+            let mid = (lo + hi) / 2.0;
+            let r = reports[j].take().expect("each tree node visited at most once");
+            probes += 1;
+            if meets(&r, deadline) {
+                if r.score.cost < best.score.cost - 1e-9 {
+                    best = r;
+                    best_budget = mid;
+                }
+                hi = mid;
+                j = 2 * j + 1;
+            } else {
+                lo = mid;
+                j = 2 * j + 2;
+            }
         }
     }
     DeadlineReport { report: Some(best), best_effort: None, budget: best_budget, probes }
@@ -122,5 +221,46 @@ mod tests {
         let r = min_cost_for_deadline(&sys, 2.0 * 3600.0, 150.0);
         let rep = r.report.expect("satisfiable");
         assert!(rep.plan.validate_partition(&sys).is_ok());
+    }
+
+    #[test]
+    fn speculative_probes_bit_identical_at_any_thread_count() {
+        let sys = table1_system(0.0);
+        let planner = Planner::new(&sys);
+        for &(deadline, cap) in &[(2.0 * 3600.0, 150.0), (1.0 * 3600.0, 200.0), (10.0, 60.0)] {
+            let seq = min_cost_for_deadline_ctl(&planner, deadline, cap, 1);
+            for threads in [2usize, 4, 8] {
+                let par = min_cost_for_deadline_ctl(&planner, deadline, cap, threads);
+                assert_eq!(par.probes, seq.probes, "threads {threads}: probe path diverged");
+                assert_eq!(par.budget.to_bits(), seq.budget.to_bits(), "threads {threads}");
+                match (&par.report, &seq.report) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => {
+                        assert_eq!(a.score.cost.to_bits(), b.score.cost.to_bits());
+                        assert_eq!(a.score.makespan.to_bits(), b.score.makespan.to_bits());
+                        assert_eq!(a.plan.n_vms(), b.plan.n_vms());
+                        for (x, y) in a.plan.vms.iter().zip(&b.plan.vms) {
+                            assert_eq!(x.it, y.it);
+                            assert_eq!(x.tasks(), y.tasks());
+                        }
+                    }
+                    _ => panic!("threads {threads}: feasibility verdict diverged"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cancelled_search_stops_with_best_so_far() {
+        let sys = table1_system(0.0);
+        let cancel = crate::util::CancelToken::new();
+        let planner = Planner::new(&sys).with_cancel(cancel.clone());
+        cancel.cancel();
+        // Cancelled after the cap probe: exactly one probe is spent, and
+        // the search still returns that probe's plan (as the result or
+        // as best-effort, depending on whether it met the deadline).
+        let r = min_cost_for_deadline_ctl(&planner, 2.0 * 3600.0, 150.0, 1);
+        assert_eq!(r.probes, 1);
+        assert!(r.report.is_some() || r.best_effort.is_some());
     }
 }

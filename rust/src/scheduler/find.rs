@@ -19,9 +19,11 @@
 //!   Algorithm 1 could return a plan violating eq. 9);
 //! * every phase is individually toggleable for the ablation benchmarks.
 
-use super::{add_vms, balance, initial, reduce, replace, split, ReduceMode};
+use super::replace::replace_cancellable;
+use super::{add_vms, balance, initial, reduce, split, ReduceMode};
 use crate::eval::{NativeEvaluator, PlanEvaluator};
 use crate::model::{Plan, PlanScore, System};
+use crate::util::CancelToken;
 
 /// Phase toggles + iteration cap (defaults reproduce the paper).
 #[derive(Debug, Clone)]
@@ -68,19 +70,37 @@ pub struct Planner<'a> {
     pub sys: &'a System,
     pub evaluator: &'a dyn PlanEvaluator,
     pub config: PlannerConfig,
+    /// Cooperative cancellation, polled once per FIND iteration (and in
+    /// REPLACE's candidate enumeration).  The default token never fires.
+    pub cancel: CancelToken,
 }
 
 impl<'a> Planner<'a> {
     pub fn new(sys: &'a System) -> Self {
-        Self { sys, evaluator: &NativeEvaluator, config: PlannerConfig::default() }
+        Self {
+            sys,
+            evaluator: &NativeEvaluator,
+            config: PlannerConfig::default(),
+            cancel: CancelToken::default(),
+        }
     }
 
     pub fn with_evaluator(sys: &'a System, evaluator: &'a dyn PlanEvaluator) -> Self {
-        Self { sys, evaluator, config: PlannerConfig::default() }
+        Self {
+            sys,
+            evaluator,
+            config: PlannerConfig::default(),
+            cancel: CancelToken::default(),
+        }
     }
 
     pub fn with_config(mut self, config: PlannerConfig) -> Self {
         self.config = config;
+        self
+    }
+
+    pub fn with_cancel(mut self, cancel: CancelToken) -> Self {
+        self.cancel = cancel;
         self
     }
 
@@ -132,7 +152,14 @@ impl<'a> Planner<'a> {
             // max(B, cost) — lets an over-budget plan trade down.
             if cfg.enable_replace {
                 let tmp_budget = budget.max(plan.cost(sys));
-                replace(sys, &mut plan, tmp_budget, cfg.replace_k, self.evaluator);
+                replace_cancellable(
+                    sys,
+                    &mut plan,
+                    tmp_budget,
+                    cfg.replace_k,
+                    self.evaluator,
+                    &self.cancel,
+                );
             }
             // ADD may have provisioned VMs BALANCE did not use; they
             // would bill an idle hour each (o > 0) or distort Fig. 2.
@@ -153,6 +180,12 @@ impl<'a> Planner<'a> {
                 best_score = score;
                 best_feasible = feasible;
             } else {
+                break;
+            }
+            // Cooperative cancellation: stop after a full iteration has
+            // been stored, so a cancelled FIND still returns a scored
+            // plan (the best one seen so far).
+            if self.cancel.is_cancelled() {
                 break;
             }
         }

@@ -65,5 +65,5 @@ pub use policy::{
     SolveOutcome, SolveRequest, UnknownPolicy, BUILTIN_POLICIES,
 };
 pub use reduce::{reduce, ReduceMode};
-pub use replace::replace;
+pub use replace::{replace, replace_cancellable};
 pub use split::split;

@@ -23,7 +23,7 @@
 
 use crate::eval::{NativeEvaluator, PlanEvaluator};
 use crate::model::{Plan, System, SystemBuilder};
-use crate::util::Rng;
+use crate::util::{CancelToken, Rng};
 
 use super::find::{FindReport, Planner, PlannerConfig};
 
@@ -38,6 +38,11 @@ pub struct MultiStartConfig {
     /// see [`crate::util::parallel`]).  Any value yields bit-identical
     /// results.
     pub threads: usize,
+    /// Cooperative cancellation: restarts `1..n_starts` not yet begun
+    /// when the token fires are skipped (restart 0 — the unperturbed
+    /// FIND — always runs, so a cancelled multistart still returns a
+    /// scored plan).  The default token never fires.
+    pub cancel: CancelToken,
     pub base: PlannerConfig,
 }
 
@@ -48,6 +53,7 @@ impl Default for MultiStartConfig {
             perf_jitter: 0.25,
             seed: 0,
             threads: 1,
+            cancel: CancelToken::default(),
             base: PlannerConfig::default(),
         }
     }
@@ -114,12 +120,26 @@ pub fn find_multistart(
 
     let reports = crate::util::parallel_map(config.threads, n_starts, |i| {
         if i == 0 {
-            return Planner::with_evaluator(sys, evaluator)
-                .with_config(config.base.clone())
-                .find(budget);
+            // The unperturbed baseline always starts (it is never
+            // skipped like restarts 1..), so a cancelled multistart
+            // still has an outcome: FIND's cancel checkpoint sits after
+            // an iteration is stored, so even a cancelled restart 0
+            // returns a fully scored plan.
+            return Some(
+                Planner::with_evaluator(sys, evaluator)
+                    .with_config(config.base.clone())
+                    .with_cancel(config.cancel.clone())
+                    .find(budget),
+            );
+        }
+        if config.cancel.is_cancelled() {
+            return None; // restart skipped: cancelled before it began
         }
         let belief = &beliefs[i - 1];
-        let candidate = Planner::new(belief).with_config(config.base.clone()).find(budget);
+        let candidate = Planner::new(belief)
+            .with_config(config.base.clone())
+            .with_cancel(config.cancel.clone())
+            .find(budget);
         // Re-anchor on the true system: transplant the assignment, then
         // let BALANCE repair what the belief distorted.
         let mut plan = transplant(sys, &candidate.plan);
@@ -127,11 +147,11 @@ pub fn find_multistart(
         super::balance(sys, &mut plan, cap);
         let score = NativeEvaluator.eval_plan(sys, &plan);
         let feasible = score.satisfies(budget);
-        FindReport { plan, score, feasible, iterations: candidate.iterations }
+        Some(FindReport { plan, score, feasible, iterations: candidate.iterations })
     });
 
-    let mut it = reports.into_iter();
-    let mut best = it.next().expect("n_starts >= 1");
+    let mut it = reports.into_iter().flatten();
+    let mut best = it.next().expect("restart 0 always runs");
     for candidate in it {
         let better = match (candidate.feasible, best.feasible) {
             (true, false) => true,

@@ -34,10 +34,10 @@ use std::sync::Arc;
 
 use crate::eval::{NativeEvaluator, PlanEvaluator};
 use crate::model::{Plan, PlanScore, System, TaskId};
-use crate::util::Rng;
+use crate::util::{CancelToken, Rng};
 
 use super::baselines::{maximise_parallelism, minimise_individual};
-use super::deadline::min_cost_for_deadline_with;
+use super::deadline::min_cost_for_deadline_ctl;
 use super::find::{FindReport, Planner, PlannerConfig};
 use super::multistart::{find_multistart, MultiStartConfig};
 use super::nonclairvoyant::surrogate_system;
@@ -99,10 +99,15 @@ pub struct SolveRequest<'a> {
     /// the full workload).
     pub remaining: Option<Vec<TaskId>>,
     /// Worker threads for parallelisable policies (`"multistart"`
-    /// restarts fan out over [`crate::util::parallel`]): 1 = sequential
-    /// (default), 0 = auto-detect.  Results are bit-identical at any
-    /// thread count.
+    /// restarts and `"deadline"` bisection probes fan out over
+    /// [`crate::util::parallel`]): 1 = sequential (default),
+    /// 0 = auto-detect.  Results are bit-identical at any thread count.
     pub threads: usize,
+    /// Cooperative cancellation flag.  Policies poll it at their natural
+    /// checkpoints (FIND iterations, restarts, bisection rounds) and
+    /// return the best partial outcome when it fires.  The default token
+    /// is never cancelled.
+    pub cancel: CancelToken,
     /// Evaluator all candidate scoring goes through; `None` = the exact
     /// native evaluator.
     evaluator: Option<&'a dyn PlanEvaluator>,
@@ -123,6 +128,7 @@ impl<'a> SolveRequest<'a> {
             sample_frac: 1.0,
             remaining: None,
             threads: 1,
+            cancel: CancelToken::default(),
             evaluator: None,
         }
     }
@@ -172,6 +178,12 @@ impl<'a> SolveRequest<'a> {
         self
     }
 
+    /// Attach a cancellation token (a clone of the caller's handle).
+    pub fn with_cancel(mut self, cancel: CancelToken) -> Self {
+        self.cancel = cancel;
+        self
+    }
+
     pub fn with_evaluator(mut self, evaluator: &'a dyn PlanEvaluator) -> Self {
         self.evaluator = Some(evaluator);
         self
@@ -192,6 +204,7 @@ impl<'a> SolveRequest<'a> {
             perf_jitter: self.perf_jitter,
             seed: self.seed,
             threads: self.threads,
+            cancel: self.cancel.clone(),
             base: self.planner.clone(),
         }
     }
@@ -208,6 +221,7 @@ impl fmt::Debug for SolveRequest<'_> {
             .field("sample_frac", &self.sample_frac)
             .field("remaining", &self.remaining.as_ref().map(Vec::len))
             .field("threads", &self.threads)
+            .field("cancelled", &self.cancel.is_cancelled())
             .field("evaluator", &self.evaluator.map(|e| e.name()))
             .field("planner", &self.planner)
             .finish()
@@ -297,6 +311,7 @@ impl Policy for BudgetHeuristic {
     fn solve(&self, sys: &System, req: &SolveRequest) -> SolveOutcome {
         let report = Planner::with_evaluator(sys, req.evaluator())
             .with_config(req.planner.clone())
+            .with_cancel(req.cancel.clone())
             .find(req.budget);
         SolveOutcome::from_find(self.name(), req.budget, report)
     }
@@ -403,10 +418,13 @@ impl Policy for DeadlineSearch {
 
     fn solve(&self, sys: &System, req: &SolveRequest) -> SolveOutcome {
         let deadline = req.deadline.unwrap_or(f64::INFINITY);
-        // Every bisection probe honours the request's evaluator + config.
-        let planner =
-            Planner::with_evaluator(sys, req.evaluator()).with_config(req.planner.clone());
-        let search = min_cost_for_deadline_with(&planner, deadline, req.budget);
+        // Every bisection probe honours the request's evaluator + config;
+        // probes speculate across `req.threads` workers (bit-identical
+        // at any thread count) and stop early on cancellation.
+        let planner = Planner::with_evaluator(sys, req.evaluator())
+            .with_config(req.planner.clone())
+            .with_cancel(req.cancel.clone());
+        let search = min_cost_for_deadline_ctl(&planner, deadline, req.budget, req.threads);
         match search.report {
             Some(r) => SolveOutcome {
                 policy: self.name(),
@@ -488,6 +506,7 @@ impl Policy for NonClairvoyant {
         let belief = surrogate_system(sys, frac, &mut rng);
         let fleet = Planner::with_evaluator(&belief, req.evaluator())
             .with_config(req.planner.clone())
+            .with_cancel(req.cancel.clone())
             .find(req.budget);
 
         // Transplant the fleet onto the true system and re-assign the

@@ -28,6 +28,7 @@
 
 use crate::eval::{DeltaBatch, DeltaCandidate, PlanEvaluator};
 use crate::model::{InstanceTypeId, Plan, System, TaskId};
+use crate::util::CancelToken;
 
 /// Evenly distribute `tasks` over the (same-typed) new VMs: longest
 /// processing time first onto the least-loaded VM.  The paper's Sec. IV-G
@@ -93,6 +94,21 @@ pub fn replace(
     k: usize,
     evaluator: &dyn PlanEvaluator,
 ) -> bool {
+    replace_cancellable(sys, plan, budget, k, evaluator, &CancelToken::default())
+}
+
+/// [`replace`] with a cooperative cancellation checkpoint in the
+/// candidate-enumeration loop: a cancelled call abandons the round
+/// before the (batched) evaluator execution and leaves the plan
+/// untouched, so the caller's stored best plan remains the result.
+pub fn replace_cancellable(
+    sys: &System,
+    plan: &mut Plan,
+    budget: f64,
+    k: usize,
+    evaluator: &dyn PlanEvaluator,
+    cancel: &CancelToken,
+) -> bool {
     if plan.is_empty() || k == 0 {
         return false;
     }
@@ -107,6 +123,9 @@ pub fn replace(
         present[vm.it.index()] = true;
     }
     for (src_idx, src_present) in present.iter().enumerate() {
+        if cancel.is_cancelled() {
+            return false; // abandon the round, plan untouched
+        }
         if !src_present {
             continue;
         }

@@ -1,0 +1,75 @@
+//! Cooperative cancellation: a cheaply clonable flag threaded from the
+//! coordinator's job engine down through [`crate::scheduler::SolveRequest`]
+//! into the long-running planner and simulator loops.
+//!
+//! Cancellation is *cooperative*: setting the token never interrupts a
+//! thread.  Each long loop (FIND iterations, multistart restarts,
+//! deadline bisection rounds, campaign rounds and replications, sweep
+//! cells) polls [`CancelToken::is_cancelled`] at its natural checkpoint
+//! and returns the best partial result it has.  A default token is never
+//! cancelled, so un-threaded callers pay one relaxed atomic load per
+//! checkpoint and nothing else.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// A shared cancellation flag.  Clones observe the same flag; the
+/// default token can never be cancelled by anyone who does not hold a
+/// clone of it.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    /// A fresh, un-cancelled token.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request cancellation.  Idempotent; visible to every clone.
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Release);
+    }
+
+    /// Whether cancellation has been requested.
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_not_cancelled() {
+        assert!(!CancelToken::new().is_cancelled());
+    }
+
+    #[test]
+    fn clones_share_the_flag() {
+        let t = CancelToken::new();
+        let c = t.clone();
+        assert!(!c.is_cancelled());
+        t.cancel();
+        assert!(c.is_cancelled());
+        // Idempotent.
+        c.cancel();
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn cross_thread_visibility() {
+        let t = CancelToken::new();
+        let c = t.clone();
+        let h = std::thread::spawn(move || {
+            while !c.is_cancelled() {
+                std::thread::yield_now();
+            }
+            true
+        });
+        t.cancel();
+        assert!(h.join().unwrap());
+    }
+}

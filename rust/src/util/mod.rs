@@ -7,12 +7,16 @@
 //! * [`json`] — a small JSON value model, parser and writer used by the
 //!   config loader, the coordinator wire protocol and the report files;
 //! * [`parallel`] — a scoped-thread worker pool with deterministic
-//!   ordered merge, driving the multistart/sweep/campaign outer loops.
+//!   ordered merge, driving the multistart/sweep/campaign outer loops;
+//! * [`cancel`] — a cooperative cancellation token threaded from the
+//!   coordinator's job engine into the long planner/simulator loops.
 
+pub mod cancel;
 pub mod json;
 pub mod parallel;
 pub mod rng;
 
+pub use cancel::CancelToken;
 pub use json::Json;
 pub use parallel::{parallel_map, resolve_threads};
 pub use rng::Rng;

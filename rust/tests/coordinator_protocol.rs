@@ -15,6 +15,7 @@ fn start(batching: bool) -> Coordinator {
         use_xla: true, // falls back to native when artifacts absent
         batching,
         batch_wait: Duration::from_millis(1),
+        ..CoordinatorConfig::default()
     })
     .expect("coordinator starts")
 }

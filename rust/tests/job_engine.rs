@@ -1,0 +1,362 @@
+//! Integration tests for the sharded [`JobEngine`]: FIFO order per
+//! shard, bounded concurrency under saturation, concurrent
+//! submit/cancel/status races, mid-campaign cancellation and streaming
+//! partial results over the protocol, and the deadline policy's
+//! speculative parallel probes.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use botsched::cloudsim::{run_campaign_replications_ctl, CampaignSpec, NoiseModel};
+use botsched::coordinator::protocol::{handle, Context};
+use botsched::coordinator::{JobEngine, JobState, Metrics};
+use botsched::eval::NativeEvaluator;
+use botsched::scheduler::{PolicyRegistry, SolveRequest};
+use botsched::util::{CancelToken, Json};
+use botsched::workload::paper::table1_system;
+
+fn engine(shards: usize) -> JobEngine {
+    JobEngine::new(shards, Arc::new(Metrics::new()))
+}
+
+fn ctx() -> Context {
+    Context::new(Arc::new(NativeEvaluator), Arc::new(Metrics::new()))
+}
+
+/// Poll `status` until `pred` holds or the job goes terminal; returns
+/// the last status body.  Panics after ~30s.
+fn poll_status(c: &Context, id: &str, pred: impl Fn(&Json) -> bool) -> Json {
+    let line = format!(r#"{{"op":"status","job_id":"{id}"}}"#);
+    for _ in 0..30_000 {
+        let s = handle(c, &line).expect("status").body;
+        let job = s.get("job").expect("job object").clone();
+        let state = job.get("state").unwrap().as_str().unwrap().to_string();
+        if pred(&job) || state == "done" || state == "failed" || state == "cancelled" {
+            return job;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    panic!("status condition never reached for {id}");
+}
+
+// ---------------------------------------------------------------------------
+// Engine-level behaviour.
+
+#[test]
+fn single_shard_keeps_fifo_order_under_saturation() {
+    // One shard = one worker: 32 queued jobs must *run* in submission
+    // order even though all 32 are queued long before the first
+    // completes.
+    let e = engine(1);
+    let order = Arc::new(Mutex::new(Vec::new()));
+    let mut ids = Vec::new();
+    for i in 0..32usize {
+        let order = Arc::clone(&order);
+        ids.push(e.submit(
+            "t",
+            Box::new(move |_| {
+                order.lock().unwrap().push(i);
+                Ok(Json::num(i as f64))
+            }),
+        ));
+    }
+    for id in &ids {
+        let state = e.registry().wait_terminal(id, Duration::from_secs(30)).unwrap();
+        assert_eq!(state, JobState::Done);
+    }
+    let order = order.lock().unwrap();
+    assert_eq!(*order, (0..32).collect::<Vec<_>>(), "per-shard FIFO violated");
+}
+
+#[test]
+fn saturation_never_exceeds_the_worker_count() {
+    let shards = 3;
+    let e = engine(shards);
+    let running = Arc::new(AtomicUsize::new(0));
+    let peak = Arc::new(AtomicUsize::new(0));
+    let mut ids = Vec::new();
+    for _ in 0..24 {
+        let running = Arc::clone(&running);
+        let peak = Arc::clone(&peak);
+        ids.push(e.submit(
+            "t",
+            Box::new(move |_| {
+                let now = running.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(Duration::from_millis(2));
+                running.fetch_sub(1, Ordering::SeqCst);
+                Ok(Json::Null)
+            }),
+        ));
+    }
+    for id in &ids {
+        assert_eq!(
+            e.registry().wait_terminal(id, Duration::from_secs(30)),
+            Some(JobState::Done)
+        );
+    }
+    let peak = peak.load(Ordering::SeqCst);
+    assert!(peak <= shards, "peak concurrency {peak} exceeded {shards} workers");
+    assert!(peak >= 1);
+}
+
+#[test]
+fn work_stealing_drains_a_hot_shard() {
+    // 2 workers; all jobs sleep.  Even if every job hashes onto one
+    // shard, stealing keeps both workers busy, so 16 x 5ms of work
+    // must finish in well under the sequential 80ms x safety margin.
+    let e = engine(2);
+    let mut ids = Vec::new();
+    for _ in 0..16 {
+        ids.push(e.submit(
+            "t",
+            Box::new(|_| {
+                std::thread::sleep(Duration::from_millis(5));
+                Ok(Json::Null)
+            }),
+        ));
+    }
+    for id in &ids {
+        assert_eq!(
+            e.registry().wait_terminal(id, Duration::from_secs(30)),
+            Some(JobState::Done)
+        );
+    }
+    // No timing assertion (CI machines vary); the real check is that
+    // both shard queues drained — queue depths are zero.
+    assert!(e.queue_depths().iter().all(|&d| d == 0));
+}
+
+#[test]
+fn concurrent_submit_cancel_status_races_stay_consistent() {
+    let e = Arc::new(engine(4));
+    let mut handles = Vec::new();
+    for t in 0..8u64 {
+        let e = Arc::clone(&e);
+        handles.push(std::thread::spawn(move || {
+            let mut ids = Vec::new();
+            for i in 0..25u64 {
+                let id = e.submit(
+                    "race",
+                    Box::new(move |ctl| {
+                        // Mixed workload: some spin until cancelled or a
+                        // short deadline, some return immediately.
+                        if i % 3 == 0 {
+                            for _ in 0..50 {
+                                if ctl.is_cancelled() {
+                                    return Err("cancelled mid-run".into());
+                                }
+                                std::thread::sleep(Duration::from_micros(200));
+                            }
+                        }
+                        Ok(Json::num(i as f64))
+                    }),
+                );
+                // Hammer status + cancel from the submitting thread.
+                let _ = e.registry().status(&id);
+                if (i + t) % 2 == 0 {
+                    e.registry().cancel(&id);
+                }
+                let _ = e.registry().status(&id);
+                ids.push(id);
+            }
+            ids
+        }));
+    }
+    let all_ids: Vec<String> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    assert_eq!(all_ids.len(), 200);
+    for id in &all_ids {
+        let state = e
+            .registry()
+            .wait_terminal(id, Duration::from_secs(30))
+            .unwrap_or_else(|| panic!("{id} vanished"));
+        assert!(state.is_terminal(), "{id} stuck in {:?}", state.as_str());
+    }
+    // Every id is listed exactly once.
+    let list = e.registry().list();
+    assert_eq!(list.as_arr().unwrap().len(), 200);
+}
+
+// ---------------------------------------------------------------------------
+// Cancellation at replication boundaries (deterministic, library level).
+
+#[test]
+fn campaign_cancel_stops_within_one_replication_boundary() {
+    let sys = table1_system(0.0);
+    let mut spec = CampaignSpec::new(200.0);
+    spec.sim.noise = NoiseModel::with_failures(0.05, 2500.0);
+    spec.sim.seed = 3;
+    let cancel = CancelToken::new();
+    let completed = AtomicUsize::new(0);
+    // Sequential fan-out; the observer cancels after the 3rd finished
+    // replication, so replications 4..16 must never start.
+    let outs = run_campaign_replications_ctl(&sys, &spec, 16, 1, &cancel, &{
+        let cancel = cancel.clone();
+        let completed = &completed;
+        move |_r, _out| {
+            if completed.fetch_add(1, Ordering::SeqCst) + 1 == 3 {
+                cancel.cancel();
+            }
+        }
+    });
+    assert_eq!(outs.len(), 16, "slot per requested replication");
+    let ran = outs.iter().filter(|o| o.is_some()).count();
+    assert_eq!(ran, 3, "cancel must stop the fan-out at the replication boundary");
+    assert!(outs[3..].iter().all(Option::is_none));
+}
+
+// ---------------------------------------------------------------------------
+// Protocol-level: jobs on the engine with progress, partials, cancel.
+
+#[test]
+fn submitted_campaign_job_reports_progress_and_cancels_mid_flight() {
+    let c = ctx();
+    // Big Monte-Carlo campaign: hundreds of replications, sequential.
+    let r = handle(
+        &c,
+        r#"{"op":"submit","job":{"op":"campaign","budget":150,"replications":2000,
+            "noise":{"mean_lifetime":2500},"seed":3,"max_rounds":6}}"#,
+    )
+    .unwrap();
+    let id = r.body.get("job_id").unwrap().as_str().unwrap().to_string();
+
+    // Wait until at least two replications finished (progress + partials
+    // visible while running), then cancel.
+    let job = poll_status(&c, &id, |j| {
+        j.path(&["progress", "done"]).and_then(Json::as_f64).unwrap_or(0.0) >= 2.0
+    });
+    assert_eq!(
+        job.get("state").unwrap().as_str(),
+        Some("running"),
+        "2000 replications cannot finish before the poller sees progress: {job}"
+    );
+    assert!(job.get("partial_results").is_some(), "partials must stream mid-flight");
+
+    let r = handle(&c, &format!(r#"{{"op":"cancel","job_id":"{id}"}}"#)).unwrap();
+    assert_eq!(r.body.get("cancelled"), Some(&Json::Bool(true)));
+    let state = c.jobs().wait_terminal(&id, Duration::from_secs(60)).unwrap();
+    assert_eq!(state, JobState::Cancelled);
+
+    // The job stopped far short of the requested 2000 replications.
+    let job = c.jobs().status(&id).unwrap();
+    let done = job.path(&["progress", "done"]).unwrap().as_f64().unwrap();
+    assert!(done < 2000.0, "cancel did not stop the fan-out (done={done})");
+    let partials = job.get("partial_results").unwrap().as_arr().unwrap();
+    assert!(!partials.is_empty());
+    assert!(partials[0].get("wall_clock").is_some());
+}
+
+#[test]
+fn sweep_status_streams_progress_and_partial_cells() {
+    let c = ctx();
+    // 30 budgets x 3 policies = 90 cells, sequential: plenty of window
+    // to observe an unfinished sweep.
+    let budgets: Vec<String> = (0..30).map(|i| format!("{}", 40 + i * 5)).collect();
+    let line = format!(
+        r#"{{"op":"submit","job":{{"op":"sweep","budgets":[{}],"threads":1}}}}"#,
+        budgets.join(",")
+    );
+    let r = handle(&c, &line).unwrap();
+    let id = r.body.get("job_id").unwrap().as_str().unwrap().to_string();
+
+    // Acceptance: status on an unfinished sweep returns progress counts
+    // plus at least one partial cell result.
+    let job = poll_status(&c, &id, |j| {
+        j.get("partial_results").is_some()
+            && j.path(&["progress", "done"]).and_then(Json::as_f64).unwrap_or(0.0) >= 1.0
+    });
+    assert_eq!(job.get("state").unwrap().as_str(), Some("running"), "{job}");
+    let total = job.path(&["progress", "total"]).unwrap().as_f64().unwrap();
+    assert_eq!(total, 90.0);
+    let cell = &job.get("partial_results").unwrap().as_arr().unwrap()[0];
+    assert!(cell.get("policy").is_some());
+    assert!(cell.get("makespan").unwrap().as_f64().unwrap() > 0.0);
+    assert!(cell.get("budget").is_some());
+
+    // Cancel stops the remaining cells.
+    let r = handle(&c, &format!(r#"{{"op":"cancel","job_id":"{id}"}}"#)).unwrap();
+    assert_eq!(r.body.get("cancelled"), Some(&Json::Bool(true)));
+    assert_eq!(
+        c.jobs().wait_terminal(&id, Duration::from_secs(60)),
+        Some(JobState::Cancelled)
+    );
+    let done = c
+        .jobs()
+        .status(&id)
+        .unwrap()
+        .path(&["progress", "done"])
+        .unwrap()
+        .as_f64()
+        .unwrap();
+    assert!(done < 90.0, "cancel did not stop the sweep (done={done})");
+}
+
+#[test]
+fn synchronous_heavy_ops_flow_through_the_engine() {
+    let c = ctx();
+    // A sync campaign must produce the usual reply...
+    let r = handle(
+        &c,
+        r#"{"op":"campaign","budget":150,"noise":{"mean_lifetime":2500},"seed":3,"max_rounds":6}"#,
+    )
+    .unwrap();
+    assert_eq!(r.body.get("ok"), Some(&Json::Bool(true)));
+    assert!(r.body.get("rounds").unwrap().as_f64().unwrap() >= 1.0);
+    // ...and leave a finished job behind in the engine's registry (the
+    // proof it ran on the pool, not inline on the connection thread).
+    let jobs = handle(&c, r#"{"op":"jobs"}"#).unwrap();
+    let jobs = jobs.body.get("jobs").unwrap().as_arr().unwrap().clone();
+    assert!(
+        jobs.iter().any(|j| j.get("op").unwrap().as_str() == Some("campaign")
+            && j.get("state").unwrap().as_str() == Some("done")),
+        "sync campaign missing from the job list: {jobs:?}"
+    );
+    // stats reports the job counters + engine gauges.
+    let s = handle(&c, r#"{"op":"stats"}"#).unwrap();
+    assert!(s.body.path(&["stats", "jobs_submitted"]).unwrap().as_f64().unwrap() >= 1.0);
+    assert!(s.body.path(&["engine", "shards"]).unwrap().as_f64().unwrap() >= 1.0);
+    assert_eq!(s.body.path(&["engine", "queued"]).unwrap().as_f64(), Some(0.0));
+}
+
+#[test]
+fn submitted_plan_jobs_still_roundtrip_on_the_pool() {
+    // The pre-engine submit/status/cancel surface is preserved.
+    let c = ctx();
+    let r = handle(&c, r#"{"op":"submit","job":{"op":"plan","budget":80}}"#).unwrap();
+    let id = r.body.get("job_id").unwrap().as_str().unwrap().to_string();
+    assert_eq!(
+        c.jobs().wait_terminal(&id, Duration::from_secs(60)),
+        Some(JobState::Done)
+    );
+    let job = c.jobs().status(&id).unwrap();
+    assert!(job.path(&["result", "makespan"]).unwrap().as_f64().unwrap() > 0.0);
+    // Cancelling a finished job is a no-op.
+    let r = handle(&c, &format!(r#"{{"op":"cancel","job_id":"{id}"}}"#)).unwrap();
+    assert_eq!(r.body.get("cancelled"), Some(&Json::Bool(false)));
+}
+
+// ---------------------------------------------------------------------------
+// Deadline policy: parallel probes, identical results.
+
+#[test]
+fn deadline_policy_parity_across_thread_counts() {
+    let sys = table1_system(0.0);
+    let registry = PolicyRegistry::builtin();
+    let base = SolveRequest::new(200.0).with_deadline(3600.0);
+    let seq = registry.solve("deadline", &sys, &base).unwrap();
+    for threads in [2usize, 4, 8] {
+        let req = SolveRequest::new(200.0).with_deadline(3600.0).with_threads(threads);
+        let par = registry.solve("deadline", &sys, &req).unwrap();
+        assert_eq!(par.probes, seq.probes, "threads {threads}");
+        assert_eq!(par.effective_budget.to_bits(), seq.effective_budget.to_bits());
+        assert_eq!(par.score.makespan.to_bits(), seq.score.makespan.to_bits());
+        assert_eq!(par.score.cost.to_bits(), seq.score.cost.to_bits());
+        assert_eq!(par.feasible, seq.feasible);
+        assert_eq!(par.plan.n_vms(), seq.plan.n_vms());
+        for (a, b) in par.plan.vms.iter().zip(&seq.plan.vms) {
+            assert_eq!(a.it, b.it, "threads {threads}");
+            assert_eq!(a.tasks(), b.tasks(), "threads {threads}");
+        }
+    }
+}

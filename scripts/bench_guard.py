@@ -1,0 +1,80 @@
+#!/usr/bin/env python3
+"""Bench regression guard: compare a fresh benchkit snapshot against a
+committed baseline and fail on large throughput regressions.
+
+Usage:
+    bench_guard.py BASELINE.json FRESH.json [--max-regress 0.25]
+
+Both files are `BENCH_<group>.json` snapshots written by
+`botsched::benchkit` (``BENCH_JSON=1 cargo bench --bench scaling``).
+Cases are matched by name.  A case's throughput is its
+``throughput_per_s`` when present, else ``1e9 / mean_ns`` (iterations
+per second).  The guard fails (exit 1) when any matched case's
+throughput dropped by more than ``--max-regress`` (default 25%) relative
+to the baseline.  Cases present on only one side are reported but never
+fail the guard (benches come and go across PRs).
+
+Compare like with like: a baseline recorded under ``BENCH_SMOKE=1`` must
+be compared against a fresh smoke run (CI does exactly that).
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_cases(path):
+    with open(path) as f:
+        snap = json.load(f)
+    cases = {}
+    for case in snap.get("cases", []):
+        name = case.get("name")
+        thr = case.get("throughput_per_s")
+        if thr is None:
+            mean_ns = case.get("mean_ns") or 0
+            thr = 1e9 / mean_ns if mean_ns > 0 else None
+        if name and thr:
+            cases[name] = thr
+    return snap.get("group", "?"), cases
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument("--max-regress", type=float, default=0.25,
+                    help="maximum tolerated fractional throughput drop (default 0.25)")
+    args = ap.parse_args()
+
+    base_group, base = load_cases(args.baseline)
+    fresh_group, fresh = load_cases(args.fresh)
+    if base_group != fresh_group:
+        print(f"warning: comparing group {base_group!r} against {fresh_group!r}")
+
+    failures = []
+    print(f"{'case':<44} {'baseline/s':>12} {'fresh/s':>12} {'delta':>8}")
+    for name in sorted(base):
+        if name not in fresh:
+            print(f"{name:<44} {base[name]:>12.1f} {'missing':>12} {'-':>8}")
+            continue
+        b, f = base[name], fresh[name]
+        delta = (f - b) / b
+        flag = ""
+        if -delta > args.max_regress:
+            failures.append((name, delta))
+            flag = "  << REGRESSION"
+        print(f"{name:<44} {b:>12.1f} {f:>12.1f} {delta:>+7.1%}{flag}")
+    for name in sorted(set(fresh) - set(base)):
+        print(f"{name:<44} {'new':>12} {fresh[name]:>12.1f} {'-':>8}")
+
+    if failures:
+        worst = min(failures, key=lambda kv: kv[1])
+        print(f"\nFAIL: {len(failures)} case(s) regressed more than "
+              f"{args.max_regress:.0%} (worst: {worst[0]} at {worst[1]:+.1%})")
+        return 1
+    print(f"\nOK: no case regressed more than {args.max_regress:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
