@@ -8,7 +8,10 @@
 //! headline `scaling` group runs multistart (8 perturbed restarts) on a
 //! 5-app / 6000-task / 6-type workload at 1, 2 and 4 worker threads —
 //! results are bit-identical across thread counts (see the `perf_parity`
-//! tests), so the speedup is pure wall-clock.
+//! tests), so the speedup is pure wall-clock.  The `scaling/serve`
+//! group drives connect–request–disconnect churn through a live
+//! coordinator while hundreds of idle spectator connections sit on the
+//! poll set, covering the non-blocking connection layer.
 //!
 //! Set `BENCH_SMOKE=1` to shrink every workload to a seconds-long CI
 //! smoke run; set `BENCH_JSON=1` to snapshot `BENCH_<group>.json` files
@@ -19,7 +22,8 @@ use std::time::Duration;
 
 use botsched::benchkit::Bench;
 use botsched::cloudsim::{SimConfig, Simulator};
-use botsched::coordinator::{JobEngine, Metrics};
+use botsched::coordinator::server::request;
+use botsched::coordinator::{Coordinator, CoordinatorConfig, JobEngine, Metrics};
 use botsched::scheduler::{PolicyRegistry, SolveRequest};
 use botsched::util::Json;
 use botsched::workload::{SizeDistribution, WorkloadGenerator, WorkloadSpec};
@@ -106,7 +110,10 @@ fn main() {
     let mut bench =
         Bench::new("scaling/engine").with_budget(Duration::from_millis(100), engine_target);
     for shards in [1usize, 2, 4] {
-        let engine = JobEngine::new(shards, Arc::new(Metrics::new()));
+        // Backlog above the burst size: this group measures queue/drain
+        // overhead, not admission control (which would reject the burst
+        // at the default 256-per-shard bound on the 1-shard case).
+        let engine = JobEngine::with_backlog(shards, 1024, Arc::new(Metrics::new()));
         bench.run_with_items(
             &format!("submit-drain/{engine_jobs}jobs/{shards}shards"),
             Some(engine_jobs as f64),
@@ -131,6 +138,42 @@ fn main() {
         );
     }
     bench.report();
+
+    // ---- serving: connection churn with idle spectators --------------------
+    // The connection layer's whole job: N idle clients must cost
+    // nothing while connect→request→disconnect churn flows past them.
+    // Fixed thread pools (2 conn workers, 4 executors, 2 shards)
+    // regardless of the idle population.
+    let idle_n = if smoke { 16 } else { 256 };
+    let churn = if smoke { 30 } else { 200 };
+    let coord = Coordinator::start(CoordinatorConfig {
+        addr: "127.0.0.1:0".into(),
+        use_xla: false,
+        batching: false,
+        shards: 2,
+        conn_workers: 2,
+        ..CoordinatorConfig::default()
+    })
+    .expect("bench coordinator starts");
+    let addr = coord.local_addr;
+    let idle: Vec<std::net::TcpStream> = (0..idle_n)
+        .map(|_| std::net::TcpStream::connect(addr).expect("idle connection"))
+        .collect();
+    let mut bench = Bench::new("scaling/serve")
+        .with_budget(Duration::from_millis(100), Duration::from_millis(if smoke { 200 } else { 800 }));
+    bench.run_with_items(
+        &format!("churn/{churn}conns/{idle_n}idle"),
+        Some(churn as f64),
+        || {
+            for _ in 0..churn {
+                let r = request(&addr, r#"{"op":"ping"}"#).expect("ping reply");
+                assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "bad reply: {r}");
+            }
+        },
+    );
+    bench.report();
+    drop(idle);
+    coord.shutdown();
 
     // ---- simulator event throughput ----------------------------------------
     let sim_sizes: &[usize] = if smoke { &[100] } else { &[250, 1000, 4000] };

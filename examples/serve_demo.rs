@@ -5,10 +5,18 @@
 //! cargo run --release --example serve_demo
 //! ```
 //!
-//! This is the serving deployment in miniature: the XLA artifact (when
-//! built) scores every candidate plan, the dynamic batcher coalesces
-//! scoring traffic from concurrent planning requests, and the protocol
-//! surface covers plan / sweep / simulate / campaign / estimate.
+//! This is the serving deployment in miniature.  Connections land on a
+//! small fixed pool of readiness-driven workers (non-blocking sockets
+//! over `poll(2)` — idle clients cost no threads), requests execute on
+//! a bounded executor pool, and every job flows through the sharded
+//! engine's *bounded priority queues*: `submit` (and sync
+//! campaign/sweep) may carry `"priority"` (0..=9) and `"deadline_ms"`,
+//! and a shard at its `--max-backlog` bound answers
+//! `{"ok":false,"error":"busy","shard":…,"backlog":…}` instead of
+//! queueing without limit.  The XLA artifact (when built) scores every
+//! candidate plan and the dynamic batcher coalesces scoring traffic
+//! from concurrent planning requests; the protocol surface covers
+//! plan / sweep / simulate / campaign / estimate plus the async job ops.
 
 use std::time::Duration;
 
@@ -103,10 +111,14 @@ fn main() -> anyhow::Result<()> {
         est.get("max_rel_error").unwrap().as_f64().unwrap() * 100.0,
     );
 
-    // Async job flow: submit a campaign, poll it to completion.
+    // Async job flow: submit a campaign with an explicit queue
+    // placement (priority 0..=9 plus a relative deadline_ms; both ride
+    // on the outer submit object) and poll it to completion.  Under
+    // saturation this submit would come back as
+    // {"ok":false,"error":"busy","shard":…,"backlog":…} instead.
     let sub = request(
         &addr,
-        r#"{"op":"submit","job":{"op":"campaign","budget":220,"noise":{"mean_lifetime":2500},"seed":9,"max_rounds":6}}"#,
+        r#"{"op":"submit","priority":7,"deadline_ms":30000,"job":{"op":"campaign","budget":220,"noise":{"mean_lifetime":2500},"seed":9,"max_rounds":6}}"#,
     )?;
     let job_id = sub.get("job_id").unwrap().as_str().unwrap().to_string();
     println!("
@@ -130,9 +142,12 @@ submitted campaign as {job_id}");
         std::thread::sleep(Duration::from_millis(20));
     }
 
-    // Metrics + shutdown.
+    // Metrics + shutdown: stats now carries per-shard queue gauges
+    // (depth / high_water / rejected) and queue-wait percentiles next
+    // to the request counters.
     let stats = request(&addr, r#"{"op":"stats"}"#)?;
     println!("\ncoordinator stats: {}", stats.get("stats").unwrap());
+    println!("engine gauges: {}", stats.get("engine").unwrap());
     request(&addr, r#"{"op":"shutdown"}"#)?;
     coord.wait();
     println!("coordinator stopped cleanly");

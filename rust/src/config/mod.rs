@@ -22,9 +22,43 @@
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::cloudsim::NoiseModel;
+use crate::coordinator::JobPriority;
 use crate::model::{BillingPolicy, System, SystemBuilder};
 use crate::scheduler::{PlannerConfig, SolveRequest};
 use crate::util::Json;
+
+/// Ceiling on a wire-supplied relative queue deadline (~1000 days) —
+/// keeps `Instant + deadline` arithmetic comfortably clear of overflow
+/// and rejects nonsense early.
+const MAX_DEADLINE_MS: u64 = 86_400_000_000;
+
+/// Parse a request's queue placement: `priority` (0..=9, default 0;
+/// 9 = most urgent) and an optional `deadline_ms` *relative to
+/// submission*.  Both fields are strict: present-but-mistyped or
+/// out-of-range values are errors, never silent defaults.  Requests
+/// carrying neither field get the all-defaults placement, which the
+/// engine schedules in plain FIFO order — exactly the legacy behaviour.
+pub fn job_priority_from_json(j: &Json) -> Result<JobPriority> {
+    let u64_knob = |key: &str| -> Result<Option<u64>> {
+        j.get(key)
+            .map(|v| {
+                v.as_u64()
+                    .ok_or_else(|| anyhow!("\"{key}\" must be a non-negative integer, got {v}"))
+            })
+            .transpose()
+    };
+    let priority = u64_knob("priority")?.unwrap_or(0);
+    if priority > 9 {
+        bail!("\"priority\" must be in 0..=9, got {priority}");
+    }
+    let deadline_ms = u64_knob("deadline_ms")?;
+    if let Some(d) = deadline_ms {
+        if d > MAX_DEADLINE_MS {
+            bail!("\"deadline_ms\" {d} exceeds the limit of {MAX_DEADLINE_MS}");
+        }
+    }
+    Ok(JobPriority { priority: priority as u8, deadline_ms })
+}
 
 /// Parse a [`System`] from its JSON description.
 pub fn system_from_json(j: &Json) -> Result<System> {
@@ -318,6 +352,26 @@ pub fn noise_from_json(j: &Json) -> NoiseModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn job_priority_parses_and_validates() {
+        let j = Json::parse(r#"{"op":"submit"}"#).unwrap();
+        assert_eq!(job_priority_from_json(&j).unwrap(), JobPriority::default());
+        let j = Json::parse(r#"{"priority":9,"deadline_ms":2500}"#).unwrap();
+        let p = job_priority_from_json(&j).unwrap();
+        assert_eq!(p.priority, 9);
+        assert_eq!(p.deadline_ms, Some(2500));
+        for bad in [
+            r#"{"priority":10}"#,
+            r#"{"priority":-1}"#,
+            r#"{"priority":"urgent"}"#,
+            r#"{"deadline_ms":1.5}"#,
+            r#"{"deadline_ms":99999999999999}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(job_priority_from_json(&j).is_err(), "{bad} must be rejected");
+        }
+    }
 
     #[test]
     fn roundtrip_paper_system() {

@@ -5,36 +5,50 @@
 //! Architecture:
 //!
 //! * **N shards, N workers.**  A job's id hashes (FNV-1a) onto a shard
-//!   queue; each shard has one dedicated worker.  Shard queues are FIFO,
-//!   so two jobs landing on the same shard start in submission order.
+//!   queue; each shard has one dedicated worker.
+//! * **Bounded priority queues.**  Each shard queue is a priority queue
+//!   bounded at `max_backlog` entries.  Jobs carry a [`JobPriority`]
+//!   (`priority` 0..=9, optional relative `deadline_ms`) and pop in
+//!   (priority desc, earliest-deadline, FIFO submission) order — so a
+//!   priority-9 job overtakes a queued backlog of priority-0 work, and
+//!   within a priority band the job with the nearest deadline runs
+//!   first.  Jobs submitted without priority/deadline all share the
+//!   default band, which degenerates to exactly the old FIFO order.
+//! * **Admission control.**  A submit that finds its shard's queue at
+//!   `max_backlog` is *rejected* with [`Busy`] (shard + backlog) instead
+//!   of queuing unboundedly — the caller (wire protocol) surfaces a
+//!   structured `{"error":"busy",...}` response.  Synchronous
+//!   [`run_sync`](JobEngine::run_sync) callers get the same rejection as
+//!   [`JobError::Busy`].
 //! * **Work stealing.**  An idle worker whose own queue is empty pops
-//!   the front of the next non-empty shard (round-robin scan), so one
+//!   the best job of the next non-empty shard (round-robin scan), so one
 //!   slow shard never strands queued work while other workers idle.
-//!   Stealing pops from the front — per-shard FIFO start order holds
-//!   regardless of who executes the job.
+//!   Stealing pops the queue's best entry — per-shard start order
+//!   (priority, deadline, FIFO) holds regardless of who executes.
 //! * **Bounded concurrency.**  At most N jobs run at once; everything
-//!   else queues.  This replaces the historical thread-per-job
-//!   `std::thread::spawn` in the submit path, which let one burst of
-//!   campaign submissions fork an unbounded number of OS threads.
+//!   else queues (up to the backlog bound).  This replaces the
+//!   historical thread-per-job `std::thread::spawn` in the submit path.
 //! * **Cooperative cancellation.**  Every job carries a
 //!   [`CancelToken`] (owned by the [`JobRegistry`]); `cancel` fires it
-//!   and the running work stops at its next checkpoint (campaign
-//!   replication / round boundary, sweep cell, FIND iteration).
+//!   and the running work stops at its next checkpoint.
 //!   Cancelled-while-queued jobs are skipped when popped.
-//! * **Progress + partial results.**  The [`JobCtl`] handle given to
-//!   each job publishes `done/total` counters and streaming partial
-//!   rows into the registry, pollable via the `status` op while the job
-//!   runs.
+//! * **Progress + partial results + queue-wait.**  The [`JobCtl`] handle
+//!   publishes `done/total` counters and streaming partial rows into the
+//!   registry; the registry also records each job's time-in-queue,
+//!   surfaced as `queue_wait_ms` on `status` and aggregated in the
+//!   metrics.  Per-shard depth / high-water / rejected gauges feed the
+//!   `stats` op via [`JobEngine::shard_stats`].
 //!
 //! The engine is transport-agnostic: jobs are plain `FnOnce(&JobCtl) ->
 //! Result<Json, String>` closures, so the protocol layer, tests and
 //! benches submit work directly.
 
-use std::collections::VecDeque;
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::util::{CancelToken, Json};
 
@@ -50,6 +64,59 @@ pub type JobFn = Box<dyn FnOnce(&JobCtl) -> Result<Json, String> + Send + 'stati
 /// "until done" — campaigns and sweeps finish far sooner; the bound only
 /// guards against a wedged worker).
 const SYNC_WAIT: Duration = Duration::from_secs(3600);
+
+/// Queue placement of one job: scheduling band + optional deadline.
+///
+/// `priority` ranges 0..=9 (9 = most urgent; the default 0 is the band
+/// every legacy request lands in, preserving plain FIFO).  `deadline_ms`
+/// is *relative to submission*; within a priority band the earliest
+/// absolute deadline pops first, and deadline-less jobs order after any
+/// deadline-carrying job of the same priority.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct JobPriority {
+    pub priority: u8,
+    pub deadline_ms: Option<u64>,
+}
+
+impl JobPriority {
+    pub fn new(priority: u8) -> Self {
+        Self { priority, deadline_ms: None }
+    }
+
+    pub fn with_deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline_ms = Some(ms);
+        self
+    }
+}
+
+/// Admission rejection: the target shard's queue is at its bound.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Busy {
+    pub shard: usize,
+    pub backlog: usize,
+}
+
+/// Why a synchronous engine call did not produce a result.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobError {
+    /// Rejected at admission — nothing was queued; retry later or shed.
+    Busy { shard: usize, backlog: usize },
+    /// The job ran (or was cancelled/lost) and failed with this message.
+    Failed(String),
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JobError::Busy { shard, backlog } => {
+                write!(f, "busy: shard {shard} backlog {backlog} is at its bound")
+            }
+            JobError::Failed(e) => f.write_str(e),
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
 
 /// Per-job control handle: cancellation + progress publishing.
 #[derive(Clone)]
@@ -86,14 +153,74 @@ impl JobCtl {
     }
 }
 
+/// One queued job with its scheduling key.  `Ord` is arranged so the
+/// `BinaryHeap` max is the next job to run: higher priority first, then
+/// earlier absolute deadline, then lower submission sequence (FIFO).
 struct Queued {
+    priority: u8,
+    deadline: Option<Instant>,
+    seq: u64,
     id: String,
     work: JobFn,
 }
 
+impl PartialEq for Queued {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == CmpOrdering::Equal
+    }
+}
+
+impl Eq for Queued {}
+
+impl PartialOrd for Queued {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Queued {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        self.priority
+            .cmp(&other.priority)
+            .then_with(|| match (self.deadline, other.deadline) {
+                // Earlier deadline = more urgent = greater; a deadline
+                // beats no deadline within the same priority band.
+                (Some(a), Some(b)) => b.cmp(&a),
+                (Some(_), None) => CmpOrdering::Greater,
+                (None, Some(_)) => CmpOrdering::Less,
+                (None, None) => CmpOrdering::Equal,
+            })
+            // Lower sequence number = submitted earlier = greater.
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// One shard: its priority queue plus the gauges `stats` reports.
+#[derive(Default)]
+struct Shard {
+    heap: BinaryHeap<Queued>,
+    high_water: usize,
+    rejected: u64,
+}
+
+/// Point-in-time view of one shard's queue (for the `stats` op).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardStats {
+    pub depth: usize,
+    pub high_water: usize,
+    pub rejected: u64,
+}
+
+struct QueueState {
+    shards: Vec<Shard>,
+    /// Global FIFO tiebreak sequence (under the queues lock, so the
+    /// submission order it records is the lock-acquisition order).
+    next_seq: u64,
+}
+
 struct Shared {
-    /// One FIFO queue per shard, all behind one short-held lock.
-    queues: Mutex<Vec<VecDeque<Queued>>>,
+    /// Every shard queue behind one short-held lock.
+    queues: Mutex<QueueState>,
     ready: Condvar,
     stop: AtomicBool,
 }
@@ -106,11 +233,20 @@ pub struct JobEngine {
     workers: Mutex<Vec<JoinHandle<()>>>,
     metrics: Arc<Metrics>,
     n_shards: usize,
+    max_backlog: usize,
 }
 
 /// Hard ceiling on worker shards: the knob is operator/wire-adjacent
 /// (`--shards`), so bound it like every other thread count in the repo.
 const MAX_SHARDS: usize = 256;
+
+/// Default per-shard backlog bound (`--max-backlog`): submits beyond it
+/// are rejected with [`Busy`] instead of queuing unboundedly.
+pub const DEFAULT_MAX_BACKLOG: usize = 256;
+
+/// Ceiling on an explicitly requested backlog bound — the knob is
+/// operator/wire-adjacent, and each queued entry pins a closure.
+const MAX_BACKLOG_LIMIT: usize = 1 << 20;
 
 /// Resolve a shard-count request: `0` = auto (one per available core,
 /// capped at 8 — job execution itself fans out over
@@ -121,6 +257,17 @@ pub fn resolve_shards(requested: usize) -> usize {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).min(8)
     } else {
         requested.min(MAX_SHARDS)
+    }
+}
+
+/// Resolve a backlog-bound request: `0` = the default
+/// ([`DEFAULT_MAX_BACKLOG`]); explicit values are clamped to
+/// `[1, 2^20]`.
+pub fn resolve_backlog(requested: usize) -> usize {
+    if requested == 0 {
+        DEFAULT_MAX_BACKLOG
+    } else {
+        requested.min(MAX_BACKLOG_LIMIT)
     }
 }
 
@@ -135,12 +282,23 @@ fn shard_of(id: &str, n_shards: usize) -> usize {
 }
 
 impl JobEngine {
-    /// Start an engine with `shards` worker shards (`0` = auto).
+    /// Start an engine with `shards` worker shards (`0` = auto) and the
+    /// default per-shard backlog bound.
     pub fn new(shards: usize, metrics: Arc<Metrics>) -> Self {
+        Self::with_backlog(shards, 0, metrics)
+    }
+
+    /// Start an engine with an explicit per-shard backlog bound
+    /// (`0` = default [`DEFAULT_MAX_BACKLOG`]).
+    pub fn with_backlog(shards: usize, max_backlog: usize, metrics: Arc<Metrics>) -> Self {
         let n_shards = resolve_shards(shards).max(1);
+        let max_backlog = resolve_backlog(max_backlog);
         let registry = Arc::new(JobRegistry::new());
         let shared = Arc::new(Shared {
-            queues: Mutex::new((0..n_shards).map(|_| VecDeque::new()).collect()),
+            queues: Mutex::new(QueueState {
+                shards: (0..n_shards).map(|_| Shard::default()).collect(),
+                next_seq: 0,
+            }),
             ready: Condvar::new(),
             stop: AtomicBool::new(false),
         });
@@ -155,7 +313,7 @@ impl JobEngine {
                     .expect("spawning job-engine worker")
             })
             .collect();
-        Self { registry, shared, workers: Mutex::new(workers), metrics, n_shards }
+        Self { registry, shared, workers: Mutex::new(workers), metrics, n_shards, max_backlog }
     }
 
     /// The registry backing `status` / `jobs` / `cancel`.
@@ -167,16 +325,49 @@ impl JobEngine {
         self.n_shards
     }
 
-    /// Jobs queued but not yet started, per shard (for `stats`).
-    pub fn queue_depths(&self) -> Vec<usize> {
-        self.shared.queues.lock().unwrap().iter().map(VecDeque::len).collect()
+    /// The per-shard backlog bound admission control enforces.
+    pub fn max_backlog(&self) -> usize {
+        self.max_backlog
     }
 
-    /// Enqueue a job; returns its id immediately.  The job starts when a
-    /// worker for its shard (or a stealing neighbour) frees up.
-    pub fn submit(&self, op: &str, work: JobFn) -> String {
-        let id = self.registry.create(op);
-        self.metrics.record_job_submitted();
+    /// Jobs queued but not yet started, per shard (for `stats`).
+    pub fn queue_depths(&self) -> Vec<usize> {
+        self.shared.queues.lock().unwrap().shards.iter().map(|s| s.heap.len()).collect()
+    }
+
+    /// Per-shard depth / high-water / rejected gauges (for `stats`).
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.shared
+            .queues
+            .lock()
+            .unwrap()
+            .shards
+            .iter()
+            .map(|s| ShardStats {
+                depth: s.heap.len(),
+                high_water: s.high_water,
+                rejected: s.rejected,
+            })
+            .collect()
+    }
+
+    /// Enqueue a job under admission control; returns its id
+    /// immediately, or [`Busy`] (nothing queued, nothing registered)
+    /// when the job's shard is already at the backlog bound.  The job
+    /// starts when a worker for its shard (or a stealing neighbour)
+    /// frees up, in (priority, deadline, FIFO) order.
+    pub fn try_submit(&self, op: &str, prio: JobPriority, work: JobFn) -> Result<String, Busy> {
+        // Relative deadline -> absolute instant at admission time, so
+        // EDF ordering compares real urgency across submission times.
+        // (The wire layer bounds deadline_ms; for direct library callers
+        // an unrepresentable instant saturates ~136 years out instead of
+        // panicking on Instant overflow.)
+        let deadline = prio.deadline_ms.map(|ms| {
+            let now = Instant::now();
+            now.checked_add(Duration::from_millis(ms))
+                .unwrap_or_else(|| now + Duration::from_secs(u64::from(u32::MAX)))
+        });
+        let id = self.registry.create_with(op, prio);
         let shard = shard_of(&id, self.n_shards);
         {
             // The stop flag must be read under the queues lock: shutdown
@@ -187,22 +378,65 @@ impl JobEngine {
             let mut q = self.shared.queues.lock().unwrap();
             if self.shared.stop.load(Ordering::Acquire) {
                 drop(q);
+                self.metrics.record_job_submitted();
                 self.registry.fail(&id, "engine shutting down".into());
                 self.metrics.record_job_end(&JobState::Failed);
-                return id;
+                return Ok(id);
             }
-            q[shard].push_back(Queued { id: id.clone(), work });
+            let s = &mut q.shards[shard];
+            if s.heap.len() >= self.max_backlog {
+                let backlog = s.heap.len();
+                s.rejected += 1;
+                drop(q);
+                // Nothing queued: the reserved registry entry is
+                // discarded so rejected traffic cannot grow the job
+                // list or leak ids.
+                self.registry.discard(&id);
+                self.metrics.record_job_rejected();
+                return Err(Busy { shard, backlog });
+            }
+            let seq = q.next_seq;
+            q.next_seq += 1;
+            let s = &mut q.shards[shard];
+            s.heap.push(Queued { priority: prio.priority, deadline, seq, id: id.clone(), work });
+            s.high_water = s.high_water.max(s.heap.len());
         }
+        self.metrics.record_job_submitted();
         self.shared.ready.notify_all();
-        id
+        Ok(id)
+    }
+
+    /// Default-priority [`try_submit`](Self::try_submit) that panics on
+    /// a backlog rejection — a convenience for tests and benches that
+    /// size their own traffic under the bound.  Production callers (the
+    /// wire protocol) use `try_submit` and surface `busy` instead.
+    pub fn submit(&self, op: &str, work: JobFn) -> String {
+        self.try_submit(op, JobPriority::default(), work).unwrap_or_else(|b| {
+            panic!("submit: shard {} is at its backlog bound ({})", b.shard, b.backlog)
+        })
     }
 
     /// Submit and block until the job reaches a terminal state — how the
     /// synchronous heavy ops (`campaign`, `sweep`) flow through the same
     /// bounded pool as async jobs.  The caller's thread is a connection
-    /// thread, never a pool worker, so waiting cannot starve the pool.
-    pub fn run_sync(&self, op: &str, work: JobFn) -> Result<Json, String> {
-        let id = self.submit(op, work);
+    /// or request-executor thread, never a pool worker, so waiting
+    /// cannot starve the pool.  Admission control applies: a full shard
+    /// rejects with [`JobError::Busy`] instead of queueing.
+    pub fn run_sync(&self, op: &str, work: JobFn) -> Result<Json, JobError> {
+        self.run_sync_with(op, JobPriority::default(), work)
+    }
+
+    /// [`run_sync`](Self::run_sync) with an explicit queue placement.
+    pub fn run_sync_with(
+        &self,
+        op: &str,
+        prio: JobPriority,
+        work: JobFn,
+    ) -> Result<Json, JobError> {
+        let id = match self.try_submit(op, prio, work) {
+            Ok(id) => id,
+            Err(Busy { shard, backlog }) => return Err(JobError::Busy { shard, backlog }),
+        };
         // wait_outcome reads the result in the same critical section as
         // the terminal observation, so registry eviction cannot race a
         // successful job's result away from its waiter.
@@ -211,20 +445,22 @@ impl JobEngine {
                 Ok(result.unwrap_or(Json::Null)) // Done always stores a result
             }
             Some((JobState::Failed, _, error)) => {
-                Err(error.unwrap_or_else(|| "job failed".into()))
+                Err(JobError::Failed(error.unwrap_or_else(|| "job failed".into())))
             }
-            Some((JobState::Cancelled, _, _)) => Err(format!("job {id} was cancelled")),
+            Some((JobState::Cancelled, _, _)) => {
+                Err(JobError::Failed(format!("job {id} was cancelled")))
+            }
             Some((state, _, _)) => {
                 // Timed out with the job still live: cancel it so the
                 // abandoned work frees its shard instead of running on
                 // for hours behind a client that already gave up.
                 self.registry.cancel(&id);
-                Err(format!(
+                Err(JobError::Failed(format!(
                     "job {id} exceeded the synchronous wait in state {:?}; cancellation requested",
                     state.as_str()
-                ))
+                )))
             }
-            None => Err(format!("job {id} unknown to the registry")),
+            None => Err(JobError::Failed(format!("job {id} unknown to the registry"))),
         }
     }
 
@@ -252,7 +488,7 @@ impl JobEngine {
         // count it — no worker will).
         let leftovers: Vec<String> = {
             let mut q = self.shared.queues.lock().unwrap();
-            q.iter_mut().flat_map(|s| s.drain(..)).map(|j| j.id).collect()
+            q.shards.iter_mut().flat_map(|s| s.heap.drain()).map(|j| j.id).collect()
         };
         for id in leftovers {
             self.registry.fail(&id, "engine shut down".into());
@@ -273,20 +509,22 @@ impl std::fmt::Debug for JobEngine {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("JobEngine")
             .field("shards", &self.n_shards)
+            .field("max_backlog", &self.max_backlog)
             .field("queued", &self.queue_depths())
             .finish()
     }
 }
 
-/// Pop the next job for `own`: own shard first (FIFO), then steal the
-/// front of the next non-empty shard.
-fn pop_job(queues: &mut [VecDeque<Queued>], own: usize) -> Option<Queued> {
-    if let Some(j) = queues[own].pop_front() {
+/// Pop the next job for `own`: own shard first, then steal the best of
+/// the next non-empty shard.  Each heap pops in (priority, deadline,
+/// FIFO) order.
+fn pop_job(shards: &mut [Shard], own: usize) -> Option<Queued> {
+    if let Some(j) = shards[own].heap.pop() {
         return Some(j);
     }
-    let n = queues.len();
+    let n = shards.len();
     for k in 1..n {
-        if let Some(j) = queues[(own + k) % n].pop_front() {
+        if let Some(j) = shards[(own + k) % n].heap.pop() {
             return Some(j);
         }
     }
@@ -303,7 +541,7 @@ fn worker_loop(
         let next = {
             let mut q = shared.queues.lock().unwrap();
             loop {
-                if let Some(job) = pop_job(q.as_mut_slice(), shard) {
+                if let Some(job) = pop_job(q.shards.as_mut_slice(), shard) {
                     break Some(job);
                 }
                 if shared.stop.load(Ordering::Acquire) {
@@ -312,12 +550,16 @@ fn worker_loop(
                 q = shared.ready.wait(q).unwrap();
             }
         };
-        let Some(Queued { id, work }) = next else { return };
+        let Some(Queued { id, work, .. }) = next else { return };
         if !registry.start(&id) {
             // Cancelled while queued: the registry already holds the
             // terminal state; nothing to run.
             metrics.record_job_end(&JobState::Cancelled);
             continue;
+        }
+        // The registry stamped the job's time-in-queue at start.
+        if let Some(wait) = registry.queue_wait(&id) {
+            metrics.record_queue_wait(wait);
         }
         let ctl = JobCtl {
             id: id.clone(),
@@ -362,14 +604,15 @@ mod tests {
         let out = e.run_sync("t", Box::new(|_| Ok(Json::str("hi")))).unwrap();
         assert_eq!(out.as_str(), Some("hi"));
         let err = e.run_sync("t", Box::new(|_| Err("nope".into()))).unwrap_err();
-        assert_eq!(err, "nope");
+        assert_eq!(err, JobError::Failed("nope".into()));
+        assert_eq!(err.to_string(), "nope");
     }
 
     #[test]
     fn panicking_job_fails_without_killing_the_worker() {
         let e = engine(1);
         let err = e.run_sync("t", Box::new(|_| panic!("kaboom"))).unwrap_err();
-        assert!(err.contains("panicked"), "{err}");
+        assert!(err.to_string().contains("panicked"), "{err}");
         // The single worker survived and still runs jobs.
         let out = e.run_sync("t", Box::new(|_| Ok(Json::num(1.0)))).unwrap();
         assert_eq!(out.as_f64(), Some(1.0));
@@ -459,5 +702,78 @@ mod tests {
                 assert_eq!(s, shard_of(&id, n), "stable");
             }
         }
+    }
+
+    #[test]
+    fn queue_order_is_priority_then_deadline_then_fifo() {
+        // Pure key ordering, no threads: greatest = runs first.
+        let q = |priority: u8, deadline: Option<Instant>, seq: u64| Queued {
+            priority,
+            deadline,
+            seq,
+            id: String::new(),
+            work: Box::new(|_| Ok(Json::Null)),
+        };
+        let now = Instant::now();
+        let soon = now + Duration::from_millis(10);
+        let later = now + Duration::from_secs(60);
+        let mut heap = BinaryHeap::new();
+        heap.push(q(0, None, 0)); // first in, lowest band
+        heap.push(q(0, None, 1));
+        heap.push(q(9, None, 2)); // urgent band
+        heap.push(q(5, Some(later), 3));
+        heap.push(q(5, Some(soon), 4)); // same band, nearer deadline
+        heap.push(q(5, None, 5)); // same band, no deadline: after EDF jobs
+        let order: Vec<u64> = std::iter::from_fn(|| heap.pop()).map(|j| j.seq).collect();
+        assert_eq!(order, vec![2, 4, 3, 5, 0, 1]);
+    }
+
+    #[test]
+    fn backlog_bound_rejects_with_busy() {
+        let metrics = Arc::new(Metrics::new());
+        let e = JobEngine::with_backlog(1, 2, Arc::clone(&metrics));
+        assert_eq!(e.max_backlog(), 2);
+        // Occupy the only worker so everything else queues.
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let (go_tx, go_rx) = std::sync::mpsc::channel::<()>();
+        let blocker = e.submit(
+            "t",
+            Box::new(move |_| {
+                tx.send(()).unwrap();
+                go_rx.recv().unwrap();
+                Ok(Json::Null)
+            }),
+        );
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        // Two fit in the queue; the third is rejected, not queued.
+        let a = e.try_submit("t", JobPriority::default(), Box::new(|_| Ok(Json::Null))).unwrap();
+        let b = e.try_submit("t", JobPriority::default(), Box::new(|_| Ok(Json::Null))).unwrap();
+        let busy = e
+            .try_submit("t", JobPriority::default(), Box::new(|_| Ok(Json::Null)))
+            .unwrap_err();
+        assert_eq!(busy, Busy { shard: 0, backlog: 2 });
+        // The rejected submission left no registry record behind.
+        assert_eq!(e.registry().list().as_arr().unwrap().len(), 3);
+        let stats = e.shard_stats();
+        assert_eq!(stats[0].depth, 2);
+        assert_eq!(stats[0].high_water, 2);
+        assert_eq!(stats[0].rejected, 1);
+        go_tx.send(()).unwrap();
+        for id in [&blocker, &a, &b] {
+            assert_eq!(
+                e.registry().wait_terminal(id, Duration::from_secs(10)),
+                Some(JobState::Done)
+            );
+        }
+        // Queue drained: admission accepts again.
+        let ok = e.try_submit("t", JobPriority::default(), Box::new(|_| Ok(Json::Null)));
+        assert!(ok.is_ok());
+    }
+
+    #[test]
+    fn resolve_backlog_defaults_and_clamps() {
+        assert_eq!(resolve_backlog(0), DEFAULT_MAX_BACKLOG);
+        assert_eq!(resolve_backlog(7), 7);
+        assert_eq!(resolve_backlog(usize::MAX), MAX_BACKLOG_LIMIT);
     }
 }

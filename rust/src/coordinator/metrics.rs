@@ -20,9 +20,16 @@ struct Inner {
     jobs_done: u64,
     jobs_failed: u64,
     jobs_cancelled: u64,
+    /// Submits rejected at admission (a shard queue at its backlog
+    /// bound) — nothing was queued or registered for these.
+    jobs_rejected: u64,
     /// Microsecond latencies of the most recent requests (ring buffer).
     latencies_us: Vec<u64>,
     latency_pos: usize,
+    /// Microsecond time-in-queue of the most recently started jobs
+    /// (ring buffer, same reservoir scheme as request latencies).
+    queue_waits_us: Vec<u64>,
+    queue_wait_pos: usize,
 }
 
 const RESERVOIR: usize = 4096;
@@ -70,6 +77,24 @@ impl Metrics {
         self.inner.lock().unwrap().jobs_submitted += 1;
     }
 
+    /// One submit rejected at the backlog bound.
+    pub fn record_job_rejected(&self) {
+        self.inner.lock().unwrap().jobs_rejected += 1;
+    }
+
+    /// One job's time-in-queue (admission to worker pickup).
+    pub fn record_queue_wait(&self, wait: Duration) {
+        let mut m = self.inner.lock().unwrap();
+        let us = wait.as_micros().min(u128::from(u64::MAX)) as u64;
+        if m.queue_waits_us.len() < RESERVOIR {
+            m.queue_waits_us.push(us);
+        } else {
+            let pos = m.queue_wait_pos;
+            m.queue_waits_us[pos] = us;
+            m.queue_wait_pos = (pos + 1) % RESERVOIR;
+        }
+    }
+
     /// One job reaching a terminal state (counted by its final registry
     /// state, so a cancel that raced a finish counts as cancelled).
     pub fn record_job_end(&self, state: &JobState) {
@@ -84,15 +109,8 @@ impl Metrics {
 
     pub fn snapshot(&self) -> Json {
         let m = self.inner.lock().unwrap();
-        let mut lat: Vec<f64> = m.latencies_us.iter().map(|&u| u as f64).collect();
-        lat.sort_by(f64::total_cmp);
-        let pct = |p: f64| -> f64 {
-            if lat.is_empty() {
-                0.0
-            } else {
-                lat[((lat.len() - 1) as f64 * p) as usize]
-            }
-        };
+        let lat = sorted(&m.latencies_us);
+        let waits = sorted(&m.queue_waits_us);
         let avg_batch = if m.eval_batches == 0 {
             0.0
         } else {
@@ -109,10 +127,27 @@ impl Metrics {
             ("jobs_done", Json::num(m.jobs_done as f64)),
             ("jobs_failed", Json::num(m.jobs_failed as f64)),
             ("jobs_cancelled", Json::num(m.jobs_cancelled as f64)),
-            ("latency_us_p50", Json::num(pct(0.50))),
-            ("latency_us_p95", Json::num(pct(0.95))),
-            ("latency_us_p99", Json::num(pct(0.99))),
+            ("jobs_rejected", Json::num(m.jobs_rejected as f64)),
+            ("latency_us_p50", Json::num(pct(&lat, 0.50))),
+            ("latency_us_p95", Json::num(pct(&lat, 0.95))),
+            ("latency_us_p99", Json::num(pct(&lat, 0.99))),
+            ("queue_wait_us_p50", Json::num(pct(&waits, 0.50))),
+            ("queue_wait_us_p95", Json::num(pct(&waits, 0.95))),
         ])
+    }
+}
+
+fn sorted(us: &[u64]) -> Vec<f64> {
+    let mut v: Vec<f64> = us.iter().map(|&u| u as f64).collect();
+    v.sort_by(f64::total_cmp);
+    v
+}
+
+fn pct(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        0.0
+    } else {
+        sorted[((sorted.len() - 1) as f64 * p) as usize]
     }
 }
 
@@ -132,6 +167,9 @@ mod tests {
         m.record_job_submitted();
         m.record_job_end(&JobState::Done);
         m.record_job_end(&JobState::Cancelled);
+        m.record_job_rejected();
+        m.record_queue_wait(Duration::from_micros(250));
+        m.record_queue_wait(Duration::from_micros(750));
         let s = m.snapshot();
         assert_eq!(s.get("requests").unwrap().as_f64(), Some(2.0));
         assert_eq!(s.get("errors").unwrap().as_f64(), Some(1.0));
@@ -141,7 +179,12 @@ mod tests {
         assert_eq!(s.get("jobs_done").unwrap().as_f64(), Some(1.0));
         assert_eq!(s.get("jobs_cancelled").unwrap().as_f64(), Some(1.0));
         assert_eq!(s.get("jobs_failed").unwrap().as_f64(), Some(0.0));
+        assert_eq!(s.get("jobs_rejected").unwrap().as_f64(), Some(1.0));
         assert!(s.get("latency_us_p95").unwrap().as_f64().unwrap() >= 100.0);
+        // Two samples: floor-indexed percentiles both land on the lower
+        // sample (index (n-1)*p truncates to 0), like the latency pins.
+        assert_eq!(s.get("queue_wait_us_p50").unwrap().as_f64(), Some(250.0));
+        assert!(s.get("queue_wait_us_p95").unwrap().as_f64().unwrap() >= 250.0);
     }
 
     #[test]

@@ -1,20 +1,53 @@
-//! The long-running coordinator (leader) process.
+//! The long-running coordinator (leader) process: an
+//! **admission-controlled serving core**.
 //!
-//! A thread-per-connection TCP server speaking line-delimited JSON, with
-//! job execution unified behind one sharded [`JobEngine`]: a bounded
-//! worker pool (`--shards`, default one per core) onto which job ids
-//! hash, with FIFO order per shard and work stealing across shards.
-//! `submit` enqueues any request as an asynchronous job; synchronous
-//! `campaign`/`sweep` calls run on the *same* pool (the connection just
-//! waits for its own job), so the pool bounds all campaign/sweep
-//! concurrency.  (Single-request `plan`/`simulate` ops still solve
-//! inline on their connection thread — they are the latency-sensitive
-//! request path; their `threads` knob is wire-bounded at 256 per
-//! request.)  All candidate-plan scoring
-//! funnels through one shared evaluator — the PJRT/XLA artifact when
-//! built, with a [`BatchingEvaluator`] in front of it that coalesces
-//! scoring requests from concurrent planner threads into single padded
-//! XLA executions.
+//! ## Connection layer (non-blocking, fixed threads)
+//!
+//! The TCP server speaks line-delimited JSON through a *fixed* pool of
+//! readiness-driven connection workers (`--conn-workers`, default one
+//! per core capped at 4) built on a dependency-free `poll(2)` wrapper
+//! ([`crate::util::netpoll`]).  Each worker owns its connections'
+//! non-blocking sockets and per-connection line buffers; a small
+//! request-executor pool (2× the workers) runs the protocol handlers,
+//! so a slow request parks an executor, never a connection worker.
+//! Thousands of idle clients cost a poll slot each — **zero threads** —
+//! and `shutdown` completes even with idle connections still open.  At
+//! most one request per connection executes at a time, so pipelined
+//! lines keep the one-JSON-line-per-request framing and response order.
+//!
+//! ## Queue layer (bounded, priority/deadline-aware)
+//!
+//! Job execution is unified behind one sharded [`JobEngine`]: a bounded
+//! worker pool (`--shards`, default one per core capped at 8) onto
+//! which job ids hash, with work stealing across shards.  Shard queues
+//! are **bounded priority queues**:
+//!
+//! * Every engine-bound request (`submit`, and synchronous
+//!   `campaign`/`sweep`) may carry `"priority"` (0..=9, default 0,
+//!   9 = most urgent) and `"deadline_ms"` (relative to submission).
+//!   Queues pop in (priority, earliest-deadline, FIFO) order; requests
+//!   with neither field get exactly the legacy FIFO behaviour.
+//! * Each shard's backlog is bounded (`--max-backlog`, default 256).
+//!   A submit that finds its shard full is **rejected** with the
+//!   structured response `{"ok":false,"error":"busy","shard":S,
+//!   "backlog":N}` instead of queuing unboundedly — synchronous
+//!   campaign/sweep callers get the same `busy` reply.
+//!
+//! (Single-request `plan`/`simulate` ops still solve inline on their
+//! executor — they are the latency-sensitive request path; their
+//! `threads` knob is wire-bounded at 256 per request.)  All
+//! candidate-plan scoring funnels through one shared evaluator — the
+//! PJRT/XLA artifact when built, with a [`BatchingEvaluator`] in front
+//! of it that coalesces scoring requests from concurrent planner
+//! threads into single padded XLA executions.
+//!
+//! ## Observability
+//!
+//! `stats` reports request metrics (now including `jobs_rejected` and
+//! queue-wait percentiles) plus per-shard `depth` / `high_water` /
+//! `rejected` gauges and the configured `max_backlog`; `status` reports
+//! each job's `queue_wait_ms` (time from admission to worker pickup)
+//! and echoes non-default `priority`/`deadline_ms`.
 //!
 //! Jobs are **cancellable mid-flight**: `cancel` fires the job's
 //! [`CancelToken`](crate::util::CancelToken), and the running work stops
@@ -46,11 +79,18 @@
 //! {"op":"estimate_perf","system":"paper","per_cell":20,"noise":{"task_sigma":0.05}}
 //! {"op":"plan","budget":80,"detail":true}        # full task-level plan
 //!
-//! # async jobs on the sharded engine:
-//! {"op":"submit","job":{"op":"campaign","budget":150,"replications":64}}
+//! # async jobs on the sharded engine (priority/deadline ride on the
+//! # outer submit object; "deadline_ms" is the *queue* deadline, not
+//! # the planning-deadline knob "deadline"):
+//! {"op":"submit","priority":9,"deadline_ms":5000,
+//!  "job":{"op":"campaign","budget":150,"replications":64}}
 //!   -> {"ok":true,"job_id":"j-0"}
+//!    | {"ok":false,"error":"busy","shard":3,"backlog":256}
+//!      # shard queue at --max-backlog: rejected, nothing queued
 //! {"op":"status","job_id":"j-0"}
 //!   -> {"ok":true,"job":{"id":"j-0","op":"campaign","state":"running",
+//!                        "priority":9,"deadline_ms":5000,
+//!                        "queue_wait_ms":1.8,
 //!                        "progress":{"done":17,"total":64},
 //!                        "partial_results":[{"wall_clock":...,"spent":...},...],
 //!                        "partials_next":17}}
@@ -62,7 +102,9 @@
 //!                                  # running work stops at the next
 //!                                  # replication/cell/iteration boundary
 //!
-//! {"op":"stats"}         # metrics + engine shard/queue gauges
+//! {"op":"stats"}         # metrics + engine gauges: per-shard depth /
+//!                        # high_water / rejected, max_backlog,
+//!                        # jobs_rejected, queue-wait percentiles
 //! {"op":"shutdown"}
 //! ```
 
@@ -74,7 +116,7 @@ pub mod server;
 pub mod state;
 
 pub use batcher::BatchingEvaluator;
-pub use engine::{JobCtl, JobEngine};
+pub use engine::{Busy, JobCtl, JobEngine, JobError, JobPriority};
 pub use metrics::Metrics;
 pub use server::{Coordinator, CoordinatorConfig};
 pub use state::{JobRegistry, JobState};

@@ -20,7 +20,7 @@ use crate::model::System;
 use crate::scheduler::{PolicyRegistry, SolveOutcome};
 use crate::util::{CancelToken, Json};
 
-use super::engine::{JobCtl, JobEngine};
+use super::engine::{JobCtl, JobEngine, JobError};
 use super::state::JobRegistry;
 use super::Metrics;
 
@@ -96,6 +96,23 @@ fn ok(mut fields: Vec<(&str, Json)>) -> Reply {
     Reply { body: Json::obj(fields), shutdown: false }
 }
 
+/// The structured admission-control rejection: the target shard's queue
+/// is at its backlog bound.  Built directly (not through the anyhow
+/// error path) so the shape is exactly
+/// `{"ok":false,"error":"busy","shard":…,"backlog":…}` — clients key on
+/// `error == "busy"` to back off or shed load.
+fn busy_reply(shard: usize, backlog: usize) -> Reply {
+    Reply {
+        body: Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("error", Json::str("busy")),
+            ("shard", Json::num(shard as f64)),
+            ("backlog", Json::num(backlog as f64)),
+        ]),
+        shutdown: false,
+    }
+}
+
 /// Handle one request line.  Errors are mapped to `{"ok":false,...}` by
 /// the caller so the connection survives malformed input; every error is
 /// prefixed with the offending request's `op` (and `policy`, when one was
@@ -115,19 +132,34 @@ pub fn handle(ctx: &Context, line: &str) -> Result<Reply> {
 fn dispatch(ctx: &Context, op: &str, req: &Json) -> Result<Reply> {
     match op {
         "ping" => Ok(ok(vec![("pong", Json::Bool(true))])),
-        "stats" => Ok(ok(vec![
-            ("stats", ctx.metrics.snapshot()),
-            (
-                "engine",
-                Json::obj(vec![
-                    ("shards", Json::num(ctx.engine.n_shards() as f64)),
-                    (
-                        "queued",
-                        Json::num(ctx.engine.queue_depths().iter().sum::<usize>() as f64),
-                    ),
-                ]),
-            ),
-        ])),
+        "stats" => {
+            let shard_stats = ctx.engine.shard_stats();
+            Ok(ok(vec![
+                ("stats", ctx.metrics.snapshot()),
+                (
+                    "engine",
+                    Json::obj(vec![
+                        ("shards", Json::num(ctx.engine.n_shards() as f64)),
+                        (
+                            "queued",
+                            Json::num(shard_stats.iter().map(|s| s.depth).sum::<usize>() as f64),
+                        ),
+                        ("max_backlog", Json::num(ctx.engine.max_backlog() as f64)),
+                        (
+                            "shard_stats",
+                            Json::arr(shard_stats.iter().enumerate().map(|(i, s)| {
+                                Json::obj(vec![
+                                    ("shard", Json::num(i as f64)),
+                                    ("depth", Json::num(s.depth as f64)),
+                                    ("high_water", Json::num(s.high_water as f64)),
+                                    ("rejected", Json::num(s.rejected as f64)),
+                                ])
+                            })),
+                        ),
+                    ]),
+                ),
+            ]))
+        }
         "shutdown" => Ok(Reply {
             body: Json::obj(vec![("ok", Json::Bool(true)), ("bye", Json::Bool(true))]),
             shutdown: true,
@@ -163,8 +195,11 @@ fn policy_name(req: &Json) -> Option<&str> {
 
 /// `submit`: run any other request asynchronously on the sharded
 /// engine; poll with `status`, stop with `cancel`.  No thread is
-/// spawned here — the job queues onto its shard and runs when a pool
-/// worker frees up.
+/// spawned here — the job queues onto its shard (in `priority` /
+/// `deadline_ms` / FIFO order; both fields ride on the *outer* submit
+/// object) and runs when a pool worker frees up.  A shard at its
+/// backlog bound rejects the submit with the structured `busy` reply
+/// instead of queueing.
 fn op_submit(ctx: &Context, req: &Json) -> Result<Reply> {
     let inner = req
         .get("job")
@@ -177,10 +212,12 @@ fn op_submit(ctx: &Context, req: &Json) -> Result<Reply> {
     if matches!(inner_op, "submit" | "shutdown" | "status" | "jobs" | "cancel") {
         return Err(anyhow!("submit: op {inner_op:?} cannot run as a job"));
     }
+    let prio = config::job_priority_from_json(req)?;
     let worker_ctx = ctx.clone_shared();
     let line = inner.to_string();
-    let job_id = ctx.engine.submit(
+    let submitted = ctx.engine.try_submit(
         inner_op,
+        prio,
         Box::new(move |ctl| {
             let mut job_ctx = worker_ctx;
             job_ctx.job = Some(ctl.clone());
@@ -190,7 +227,10 @@ fn op_submit(ctx: &Context, req: &Json) -> Result<Reply> {
             }
         }),
     );
-    Ok(ok(vec![("job_id", Json::str(job_id))]))
+    match submitted {
+        Ok(job_id) => Ok(ok(vec![("job_id", Json::str(job_id))])),
+        Err(busy) => Ok(busy_reply(busy.shard, busy.backlog)),
+    }
 }
 
 /// `status`: current state, progress and streaming partial results.
@@ -384,13 +424,18 @@ fn op_sweep(ctx: &Context, req: &Json) -> Result<Reply> {
         // Already on a pool worker (async submit): run inline.
         Some(ctl) => Ok(exec_sweep(&job, ctl)),
         // Synchronous call: the same execution, behind the same bounded
-        // pool — the connection thread just waits for its own job.
+        // pool — the caller's thread just waits for its own job, and a
+        // shard at its backlog bound rejects with `busy` like a submit.
         None => {
-            let body = ctx
+            let prio = config::job_priority_from_json(req)?;
+            match ctx
                 .engine
-                .run_sync("sweep", Box::new(move |ctl| Ok(exec_sweep(&job, ctl).body)))
-                .map_err(|e| anyhow!("{e}"))?;
-            Ok(Reply { body, shutdown: false })
+                .run_sync_with("sweep", prio, Box::new(move |ctl| Ok(exec_sweep(&job, ctl).body)))
+            {
+                Ok(body) => Ok(Reply { body, shutdown: false }),
+                Err(JobError::Busy { shard, backlog }) => Ok(busy_reply(shard, backlog)),
+                Err(JobError::Failed(e)) => Err(anyhow!("{e}")),
+            }
         }
     }
 }
@@ -598,13 +643,19 @@ fn op_campaign(ctx: &Context, req: &Json) -> Result<Reply> {
         // Already on a pool worker (async submit): run inline.
         Some(ctl) => Ok(exec_campaign(&job, ctl)),
         // Synchronous call: identical execution behind the same bounded
-        // pool; the connection thread waits for its own job.
+        // pool; the caller's thread waits for its own job, and a shard
+        // at its backlog bound rejects with `busy` like a submit.
         None => {
-            let body = ctx
-                .engine
-                .run_sync("campaign", Box::new(move |ctl| Ok(exec_campaign(&job, ctl).body)))
-                .map_err(|e| anyhow!("{e}"))?;
-            Ok(Reply { body, shutdown: false })
+            let prio = config::job_priority_from_json(req)?;
+            match ctx.engine.run_sync_with(
+                "campaign",
+                prio,
+                Box::new(move |ctl| Ok(exec_campaign(&job, ctl).body)),
+            ) {
+                Ok(body) => Ok(Reply { body, shutdown: false }),
+                Err(JobError::Busy { shard, backlog }) => Ok(busy_reply(shard, backlog)),
+                Err(JobError::Failed(e)) => Err(anyhow!("{e}")),
+            }
         }
     }
 }
@@ -1004,5 +1055,114 @@ mod tests {
         let r = handle(&c, r#"{"op":"sweep","budgets":[60,80]}"#).unwrap();
         let rows = r.body.path(&["sweep", "rows"]).unwrap().as_arr().unwrap();
         assert_eq!(rows.len(), 6);
+    }
+
+    #[test]
+    fn stats_reports_backlog_bound_and_per_shard_gauges() {
+        let c = ctx();
+        let r = handle(&c, r#"{"op":"stats"}"#).unwrap();
+        let engine = r.body.get("engine").unwrap();
+        let shards = engine.get("shards").unwrap().as_f64().unwrap() as usize;
+        assert!(shards >= 1);
+        assert!(engine.get("max_backlog").unwrap().as_f64().unwrap() >= 1.0);
+        let per_shard = engine.get("shard_stats").unwrap().as_arr().unwrap();
+        assert_eq!(per_shard.len(), shards);
+        for (i, s) in per_shard.iter().enumerate() {
+            assert_eq!(s.get("shard").unwrap().as_f64(), Some(i as f64));
+            assert_eq!(s.get("depth").unwrap().as_f64(), Some(0.0));
+            assert!(s.get("high_water").is_some());
+            assert_eq!(s.get("rejected").unwrap().as_f64(), Some(0.0));
+        }
+        assert_eq!(r.body.path(&["stats", "jobs_rejected"]).unwrap().as_f64(), Some(0.0));
+        assert!(r.body.path(&["stats", "queue_wait_us_p50"]).is_some());
+    }
+
+    #[test]
+    fn submit_validates_priority_and_deadline_fields() {
+        let c = ctx();
+        let e = handle(
+            &c,
+            r#"{"op":"submit","priority":12,"job":{"op":"plan","budget":80}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("0..=9"), "{e:#}");
+        let e = handle(
+            &c,
+            r#"{"op":"submit","priority":"high","job":{"op":"plan","budget":80}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("priority"), "{e:#}");
+        let e = handle(
+            &c,
+            r#"{"op":"submit","deadline_ms":"soon","job":{"op":"plan","budget":80}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("deadline_ms"), "{e:#}");
+        // A valid placement is accepted and echoed through status, along
+        // with the job's recorded queue wait.
+        let r = handle(
+            &c,
+            r#"{"op":"submit","priority":4,"deadline_ms":60000,"job":{"op":"plan","budget":80}}"#,
+        )
+        .unwrap();
+        let id = r.body.get("job_id").unwrap().as_str().unwrap().to_string();
+        assert_eq!(
+            c.jobs().wait_terminal(&id, std::time::Duration::from_secs(60)),
+            Some(crate::coordinator::JobState::Done)
+        );
+        let job = c.jobs().status(&id).unwrap();
+        assert_eq!(job.get("priority").unwrap().as_f64(), Some(4.0));
+        assert_eq!(job.get("deadline_ms").unwrap().as_f64(), Some(60000.0));
+        assert!(job.get("queue_wait_ms").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn saturated_shard_rejects_with_structured_busy() {
+        use std::time::Duration;
+        let metrics = Arc::new(Metrics::new());
+        // One shard, backlog bound of one: trivially saturated.
+        let engine = Arc::new(JobEngine::with_backlog(1, 1, Arc::clone(&metrics)));
+        let c = Context::with_engine(Arc::new(NativeEvaluator), metrics, Arc::clone(&engine));
+        // Occupy the worker, then fill the single queue slot.
+        let (started_tx, started_rx) = std::sync::mpsc::channel::<()>();
+        let (go_tx, go_rx) = std::sync::mpsc::channel::<()>();
+        let blocker = engine.submit(
+            "block",
+            Box::new(move |_| {
+                started_tx.send(()).unwrap();
+                go_rx.recv().unwrap();
+                Ok(Json::Null)
+            }),
+        );
+        started_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let filler = engine.submit("fill", Box::new(|_| Ok(Json::Null)));
+        // Async submit is rejected with the structured shape, not an
+        // opaque error string and not a hang.
+        let r = handle(&c, r#"{"op":"submit","job":{"op":"plan","budget":80}}"#).unwrap();
+        assert_eq!(r.body.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(r.body.get("error").unwrap().as_str(), Some("busy"));
+        assert_eq!(r.body.get("shard").unwrap().as_f64(), Some(0.0));
+        assert_eq!(r.body.get("backlog").unwrap().as_f64(), Some(1.0));
+        // Synchronous heavy ops get the same rejection.
+        let r = handle(&c, r#"{"op":"sweep","budgets":[60]}"#).unwrap();
+        assert_eq!(r.body.get("error").unwrap().as_str(), Some("busy"));
+        let r = handle(&c, r#"{"op":"campaign","budget":120}"#).unwrap();
+        assert_eq!(r.body.get("error").unwrap().as_str(), Some("busy"));
+        // The rejections are visible in stats.
+        let r = handle(&c, r#"{"op":"stats"}"#).unwrap();
+        assert!(r.body.path(&["stats", "jobs_rejected"]).unwrap().as_f64().unwrap() >= 3.0);
+        let shard0 = &r.body.path(&["engine", "shard_stats"]).unwrap().as_arr().unwrap()[0];
+        assert!(shard0.get("rejected").unwrap().as_f64().unwrap() >= 3.0);
+        assert_eq!(shard0.get("high_water").unwrap().as_f64(), Some(1.0));
+        // Drain: the saturated server recovers without restarts.
+        go_tx.send(()).unwrap();
+        for id in [&blocker, &filler] {
+            assert_eq!(
+                c.jobs().wait_terminal(id, Duration::from_secs(10)),
+                Some(crate::coordinator::JobState::Done)
+            );
+        }
+        let r = handle(&c, r#"{"op":"submit","job":{"op":"plan","budget":80}}"#).unwrap();
+        assert_eq!(r.body.get("ok"), Some(&Json::Bool(true)));
     }
 }

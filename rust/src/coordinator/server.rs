@@ -1,22 +1,43 @@
-//! The TCP transport: thread-per-connection line server around
-//! [`protocol::handle`].
+//! The TCP transport: a readiness-driven, admission-controlled line
+//! server around [`protocol::handle`].
 //!
-//! The listener accepts on a configurable address; each connection reads
-//! newline-delimited JSON requests and writes one JSON response line per
-//! request.  A `{"op":"shutdown"}` request stops the listener (used by
-//! the tests and the `serve_demo` example; production deployments would
-//! front this with their own process manager).
+//! Threads are fixed at startup and independent of the connection count:
+//!
+//! * **1 accept thread** — polls the listener, hands each accepted
+//!   socket to a connection worker round-robin.
+//! * **`--conn-workers` connection workers** (default: one per core,
+//!   capped at 4) — each owns a set of *non-blocking* sockets plus a
+//!   [`netpoll`](crate::util::netpoll) poller and a self-pipe waker.  A
+//!   worker buffers reads per connection, splits newline-delimited JSON
+//!   requests, and queues at most **one in-flight request per
+//!   connection** (pipelined lines wait their turn, so responses keep
+//!   the one-JSON-line-per-request framing and ordering).  Thousands of
+//!   idle clients therefore cost a poll slot each — zero threads.
+//! * **a small request-executor pool** (2× the connection workers,
+//!   clamped to [2, 32]) — runs [`protocol::handle`] for dispatched
+//!   lines.  Synchronous heavy ops (`campaign`/`sweep`) park *here*
+//!   while they wait on the job engine, never on a connection worker, so
+//!   slow requests cannot stall unrelated connections' I/O.
+//! * **the [`JobEngine`] shards** (`--shards`) — execute every job under
+//!   per-shard admission control (`--max-backlog`): a full shard rejects
+//!   with the structured `busy` response instead of queuing unboundedly.
+//!
+//! A `{"op":"shutdown"}` request stops the whole stack — and unlike the
+//! old thread-per-connection server, shutdown completes even while idle
+//! connections are still open (workers flush pending responses
+//! best-effort and drop their sockets).
 
-use std::io::{BufRead, BufReader, Write};
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context as _, Result};
 
 use crate::eval::{NativeEvaluator, PlanEvaluator};
-use crate::util::Json;
+use crate::util::{netpoll, Json};
 
 use super::engine::JobEngine;
 use super::protocol::{self, Context};
@@ -33,10 +54,22 @@ pub struct CoordinatorConfig {
     pub batching: bool,
     /// Batcher linger time.
     pub batch_wait: Duration,
-    /// Worker shards of the job engine (0 = auto: one per core, capped
-    /// at 8).  Every campaign/sweep — synchronous or submitted — runs on
-    /// this pool; at most `shards` of them execute at once.
+    /// Worker shards of the job engine.  `0` = auto: one per available
+    /// core, capped at 8 (job execution itself fans out over
+    /// `util::parallel`, so more shards mostly add idle threads).
+    /// Explicit values are clamped at 256.  Every campaign/sweep —
+    /// synchronous or submitted — runs on this pool; at most `shards`
+    /// of them execute at once.
     pub shards: usize,
+    /// Readiness-driven connection workers (`--conn-workers`).  `0` =
+    /// auto: one per available core, capped at 4; explicit values are
+    /// clamped at 64.  The connection count is independent of this —
+    /// idle clients cost a poll slot, not a thread.
+    pub conn_workers: usize,
+    /// Per-shard job-queue bound (`--max-backlog`).  `0` = the default
+    /// (256).  Submits beyond the bound are rejected with the
+    /// structured `{"error":"busy",...}` response.
+    pub max_backlog: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -47,9 +80,49 @@ impl Default for CoordinatorConfig {
             batching: true,
             batch_wait: Duration::from_millis(2),
             shards: 0,
+            conn_workers: 0,
+            max_backlog: 0,
         }
     }
 }
+
+/// Resolve a connection-worker request: `0` = auto (one per available
+/// core, capped at 4 — the workers only shuffle bytes; request execution
+/// lives in the executor pool).  Explicit requests are clamped to
+/// `[1, 64]`.
+pub fn resolve_conn_workers(requested: usize) -> usize {
+    const MAX_CONN_WORKERS: usize = 64;
+    if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).clamp(1, 4)
+    } else {
+        requested.clamp(1, MAX_CONN_WORKERS)
+    }
+}
+
+/// Size of the request-executor pool for a given connection-worker
+/// count: 2× the workers, clamped to `[2, 32]`.  Executors are where
+/// synchronous heavy ops park while waiting on the job engine.
+pub fn request_executors(conn_workers: usize) -> usize {
+    (conn_workers * 2).clamp(2, 32)
+}
+
+/// How long a connection worker sleeps in `poll` with nothing to do.
+/// Wakeups (new connections, finished requests, shutdown) arrive via the
+/// self-pipe waker; the timeout is only a safety net.
+const POLL_TIMEOUT: Duration = Duration::from_millis(100);
+
+/// Requests a single connection may have parsed-but-unexecuted before
+/// the worker stops reading from its socket (TCP backpressure on
+/// pipelining abusers; normal clients send one line per response).
+const PENDING_MAX: usize = 64;
+
+/// A request line larger than this kills the connection (the old
+/// BufReader server would buffer it without bound).
+const MAX_LINE: usize = 4 << 20;
+
+/// Socket reads drained per connection per poll tick (fairness between
+/// connections sharing a worker; level-triggered polling re-reports).
+const MAX_READS_PER_TICK: usize = 64;
 
 /// A running coordinator.
 pub struct Coordinator {
@@ -88,13 +161,61 @@ impl Coordinator {
         listener.set_nonblocking(true)?;
 
         let stop = Arc::new(AtomicBool::new(false));
-        let shards = config.shards;
-        let accept_thread = {
-            let stop = Arc::clone(&stop);
-            let metrics = Arc::clone(&metrics);
-            std::thread::spawn(move || {
-                accept_loop(listener, stop, evaluator, metrics, shards);
+        // One job engine + one policy registry for the whole server:
+        // every campaign/sweep/submit executes on the sharded pool, and
+        // job ids are visible across connections (submit on one socket,
+        // poll/cancel on another).
+        let engine = Arc::new(JobEngine::with_backlog(
+            config.shards,
+            config.max_backlog,
+            Arc::clone(&metrics),
+        ));
+        let n_workers = resolve_conn_workers(config.conn_workers);
+        let workers: Vec<Arc<WorkerShared>> = (0..n_workers)
+            .map(|_| {
+                Ok(Arc::new(WorkerShared {
+                    waker: netpoll::Waker::new().context("creating connection-worker waker")?,
+                    inbox: Mutex::new(Inbox::default()),
+                }))
             })
+            .collect::<Result<_>>()?;
+        let core = Arc::new(ServerCore {
+            stop: Arc::clone(&stop),
+            workers,
+            exec: Arc::new(ExecShared {
+                queue: Mutex::new(VecDeque::new()),
+                ready: Condvar::new(),
+            }),
+            evaluator,
+            metrics: Arc::clone(&metrics),
+            engine,
+            policies: Arc::new(crate::scheduler::PolicyRegistry::builtin()),
+        });
+
+        let conn_handles: Vec<_> = (0..n_workers)
+            .map(|i| {
+                let core = Arc::clone(&core);
+                std::thread::Builder::new()
+                    .name(format!("conn-worker-{i}"))
+                    .spawn(move || conn_worker_loop(i, &core))
+                    .expect("spawning connection worker")
+            })
+            .collect();
+        let exec_handles: Vec<_> = (0..request_executors(n_workers))
+            .map(|i| {
+                let core = Arc::clone(&core);
+                std::thread::Builder::new()
+                    .name(format!("req-exec-{i}"))
+                    .spawn(move || exec_loop(&core))
+                    .expect("spawning request executor")
+            })
+            .collect();
+        let accept_thread = {
+            let core = Arc::clone(&core);
+            std::thread::Builder::new()
+                .name("accept".into())
+                .spawn(move || accept_loop(listener, core, conn_handles, exec_handles))
+                .expect("spawning accept thread")
         };
 
         Ok(Self { local_addr, metrics, stop, accept_thread: Some(accept_thread) })
@@ -125,67 +246,170 @@ impl Drop for Coordinator {
     }
 }
 
-fn accept_loop(
-    listener: TcpListener,
+/// Everything the fixed thread pools share.
+struct ServerCore {
     stop: Arc<AtomicBool>,
+    workers: Vec<Arc<WorkerShared>>,
+    exec: Arc<ExecShared>,
     evaluator: Arc<dyn PlanEvaluator>,
     metrics: Arc<Metrics>,
-    shards: usize,
-) {
-    let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
-    // One job engine for the whole server: every campaign/sweep/submit
-    // executes on its sharded pool, and job ids are visible across
-    // connections (submit on one socket, poll/cancel on another).
-    // Likewise one policy registry, shared by every connection thread.
-    let engine = Arc::new(JobEngine::new(shards, Arc::clone(&metrics)));
-    let registry = Arc::new(crate::scheduler::PolicyRegistry::builtin());
-    while !stop.load(Ordering::Acquire) {
-        match listener.accept() {
-            Ok((stream, _peer)) => {
-                let ctx_stop = Arc::clone(&stop);
-                let ctx = Context {
-                    evaluator: Arc::clone(&evaluator),
-                    metrics: Arc::clone(&metrics),
-                    engine: Arc::clone(&engine),
-                    registry: Arc::clone(&registry),
-                    job: None,
-                };
-                workers.push(std::thread::spawn(move || {
-                    if let Err(e) = serve_connection(stream, ctx, ctx_stop) {
-                        eprintln!("coordinator: connection error: {e:#}");
-                    }
-                }));
-                workers.retain(|w| !w.is_finished());
-            }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(Duration::from_millis(5));
-            }
-            Err(e) => {
-                eprintln!("coordinator: accept error: {e}");
-                break;
-            }
-        }
-    }
-    for w in workers {
-        let _ = w.join();
-    }
-    // Connections are drained; stop the pool (cancels any jobs still
-    // queued or running — their tokens fire and work stops at the next
-    // cooperative checkpoint).
-    engine.shutdown();
+    engine: Arc<JobEngine>,
+    policies: Arc<crate::scheduler::PolicyRegistry>,
 }
 
-fn serve_connection(stream: TcpStream, ctx: Context, stop: Arc<AtomicBool>) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+/// One connection worker's mailbox: new sockets from the accept thread,
+/// finished requests from the executors.  The waker interrupts the
+/// worker's poll whenever either arrives.
+struct WorkerShared {
+    waker: netpoll::Waker,
+    inbox: Mutex<Inbox>,
+}
+
+#[derive(Default)]
+struct Inbox {
+    conns: Vec<TcpStream>,
+    done: Vec<Completion>,
+}
+
+/// A finished request on its way back to the connection that sent it.
+struct Completion {
+    conn: u64,
+    line: Vec<u8>,
+    shutdown: bool,
+}
+
+/// One dispatched request line awaiting an executor.
+struct ExecTask {
+    worker: usize,
+    conn: u64,
+    line: String,
+}
+
+struct ExecShared {
+    queue: Mutex<VecDeque<ExecTask>>,
+    ready: Condvar,
+}
+
+fn wake_all(core: &ServerCore) {
+    for w in &core.workers {
+        w.waker.wake();
+    }
+    core.exec.ready.notify_all();
+}
+
+#[cfg(unix)]
+fn fd_of(s: &TcpStream) -> netpoll::Fd {
+    use std::os::unix::io::AsRawFd;
+    s.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+fn fd_of(_s: &TcpStream) -> netpoll::Fd {
+    0
+}
+
+#[cfg(unix)]
+fn fd_of_listener(l: &TcpListener) -> netpoll::Fd {
+    use std::os::unix::io::AsRawFd;
+    l.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+fn fd_of_listener(_l: &TcpListener) -> netpoll::Fd {
+    0
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    core: Arc<ServerCore>,
+    conn_handles: Vec<std::thread::JoinHandle<()>>,
+    exec_handles: Vec<std::thread::JoinHandle<()>>,
+) {
+    let mut poller = netpoll::Poller::new();
+    let mut events = Vec::new();
+    let mut next_worker = 0usize;
+    while !core.stop.load(Ordering::Acquire) {
+        loop {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    let w = &core.workers[next_worker];
+                    next_worker = (next_worker + 1) % core.workers.len();
+                    w.inbox.lock().unwrap().conns.push(stream);
+                    w.waker.wake();
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::ConnectionAborted
+                            | std::io::ErrorKind::ConnectionReset
+                            | std::io::ErrorKind::Interrupted
+                    ) =>
+                {
+                    // Only that one pending connection died; keep going.
+                    continue;
+                }
+                Err(e) => {
+                    // Transient resource errors (EMFILE/ENFILE under fd
+                    // exhaustion, etc.) must not tear down a server that
+                    // is holding thousands of live connections: log,
+                    // back off a beat, and retry — existing connections
+                    // keep being served throughout.
+                    eprintln!("coordinator: accept error (retrying): {e}");
+                    std::thread::sleep(Duration::from_millis(100));
+                    break;
+                }
+            }
         }
+        if core.stop.load(Ordering::Acquire) {
+            break;
+        }
+        let sources = [(fd_of_listener(&listener), netpoll::Interest::READ)];
+        if poller.wait(&sources, Duration::from_millis(50), &mut events).is_err() {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+    // Tear-down, in dependency order: connection workers first (they
+    // flush pending responses best-effort and drop their sockets, so
+    // shutdown completes even with idle connections still open), then
+    // the engine (cancels live jobs, which releases any executor parked
+    // in run_sync), then the executors.
+    wake_all(&core);
+    for h in conn_handles {
+        let _ = h.join();
+    }
+    core.engine.shutdown();
+    core.exec.ready.notify_all();
+    for h in exec_handles {
+        let _ = h.join();
+    }
+}
+
+/// Request-executor thread: pops dispatched lines, runs the protocol,
+/// posts the response line back to the owning connection worker.
+fn exec_loop(core: &ServerCore) {
+    loop {
+        let task = {
+            let mut q = core.exec.queue.lock().unwrap();
+            loop {
+                if core.stop.load(Ordering::Acquire) {
+                    return;
+                }
+                if let Some(t) = q.pop_front() {
+                    break t;
+                }
+                q = core.exec.ready.wait(q).unwrap();
+            }
+        };
+        let ctx = Context {
+            evaluator: Arc::clone(&core.evaluator),
+            metrics: Arc::clone(&core.metrics),
+            engine: Arc::clone(&core.engine),
+            registry: Arc::clone(&core.policies),
+            job: None,
+        };
         let t0 = Instant::now();
-        let (body, shutdown) = match protocol::handle(&ctx, &line) {
+        let (body, shutdown) = match protocol::handle(&ctx, &task.line) {
             Ok(reply) => (reply.body, reply.shutdown),
             Err(e) => (
                 Json::obj(vec![
@@ -196,16 +420,270 @@ fn serve_connection(stream: TcpStream, ctx: Context, stop: Arc<AtomicBool>) -> R
             ),
         };
         let ok = body.get("ok") == Some(&Json::Bool(true));
-        ctx.metrics.record_request(t0.elapsed(), ok);
-        writer.write_all(body.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
-        if shutdown {
-            stop.store(true, Ordering::Release);
-            break;
+        core.metrics.record_request(t0.elapsed(), ok);
+        let mut line = body.to_string().into_bytes();
+        line.push(b'\n');
+        let w = &core.workers[task.worker];
+        w.inbox.lock().unwrap().done.push(Completion { conn: task.conn, line, shutdown });
+        w.waker.wake();
+    }
+}
+
+/// Per-connection state owned by exactly one connection worker.
+struct Conn {
+    stream: TcpStream,
+    /// Bytes read but not yet split into lines.
+    rbuf: Vec<u8>,
+    /// `rbuf[..scan_from]` is known newline-free: the line splitter
+    /// resumes scanning here instead of rescanning the whole buffer.
+    scan_from: usize,
+    /// Response bytes not yet written (`wpos` = progress cursor).
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Parsed request lines awaiting dispatch (one at a time).
+    pending: VecDeque<String>,
+    /// A request from this connection is at / in the executor pool;
+    /// responses stay in request order because nothing else dispatches
+    /// until its completion lands.
+    inflight: bool,
+    read_closed: bool,
+    close_after_flush: bool,
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Self {
+        Self {
+            stream,
+            rbuf: Vec::new(),
+            scan_from: 0,
+            wbuf: Vec::new(),
+            wpos: 0,
+            pending: VecDeque::new(),
+            inflight: false,
+            read_closed: false,
+            close_after_flush: false,
+            dead: false,
         }
     }
-    Ok(())
+
+    fn interest(&self) -> netpoll::Interest {
+        netpoll::Interest {
+            readable: !self.read_closed && self.pending.len() < PENDING_MAX,
+            writable: self.wpos < self.wbuf.len(),
+        }
+    }
+
+    /// Drain the socket (bounded per tick), split complete lines into
+    /// `pending`.  EOF with a final unterminated line still yields that
+    /// line — parity with the old `BufRead::lines` server.
+    fn read_some(&mut self) {
+        let mut buf = [0u8; 8192];
+        for _ in 0..MAX_READS_PER_TICK {
+            match (&self.stream).read(&mut buf) {
+                Ok(0) => {
+                    self.read_closed = true;
+                    break;
+                }
+                Ok(n) => self.rbuf.extend_from_slice(&buf[..n]),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    return;
+                }
+            }
+        }
+        self.extract_lines();
+        // After the splitter, rbuf holds only a newline-free partial
+        // line; per-tick intake is bounded, so one post-loop check
+        // suffices to bound memory.
+        if self.rbuf.len() > MAX_LINE {
+            self.dead = true;
+            return;
+        }
+        if self.read_closed && !self.rbuf.is_empty() {
+            let tail = String::from_utf8_lossy(&self.rbuf).trim().to_string();
+            self.rbuf.clear();
+            self.scan_from = 0;
+            if !tail.is_empty() {
+                self.pending.push_back(tail);
+            }
+        }
+    }
+
+    /// Split complete lines out of `rbuf` in one forward pass (resuming
+    /// at `scan_from`), draining the consumed prefix exactly once — a
+    /// burst of pipelined lines costs O(bytes), not O(lines x bytes).
+    fn extract_lines(&mut self) {
+        let mut start = 0usize;
+        let mut i = self.scan_from;
+        while i < self.rbuf.len() {
+            if self.rbuf[i] == b'\n' {
+                let s = String::from_utf8_lossy(&self.rbuf[start..i]);
+                let s = s.trim();
+                if !s.is_empty() {
+                    self.pending.push_back(s.to_string());
+                }
+                start = i + 1;
+            }
+            i += 1;
+        }
+        if start > 0 {
+            self.rbuf.drain(..start);
+        }
+        self.scan_from = self.rbuf.len();
+    }
+
+    /// Write as much of `wbuf` as the socket accepts right now.
+    fn flush_nonblocking(&mut self) {
+        while self.wpos < self.wbuf.len() {
+            match (&self.stream).write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    return;
+                }
+                Ok(n) => self.wpos += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    return;
+                }
+            }
+        }
+        self.wbuf.clear();
+        self.wpos = 0;
+        if self.close_after_flush {
+            self.dead = true;
+        }
+    }
+
+    /// Best-effort blocking flush at server shutdown (the shutdown reply
+    /// must reach its client even though the worker is about to exit).
+    fn final_flush(&mut self) {
+        if self.wpos >= self.wbuf.len() {
+            return;
+        }
+        self.stream.set_nonblocking(false).ok();
+        self.stream.set_write_timeout(Some(Duration::from_millis(200))).ok();
+        let _ = (&self.stream).write_all(&self.wbuf[self.wpos..]);
+        self.wbuf.clear();
+        self.wpos = 0;
+    }
+
+    /// Nothing left to do for this connection.
+    fn finished(&self) -> bool {
+        self.dead
+            || (self.read_closed
+                && !self.inflight
+                && self.pending.is_empty()
+                && self.wpos >= self.wbuf.len())
+    }
+}
+
+fn conn_worker_loop(index: usize, core: &ServerCore) {
+    let shared = &core.workers[index];
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_conn: u64 = 0;
+    let mut poller = netpoll::Poller::new();
+    let mut sources: Vec<(netpoll::Fd, netpoll::Interest)> = Vec::new();
+    let mut keys: Vec<u64> = Vec::new();
+    let mut events: Vec<netpoll::Readiness> = Vec::new();
+    // Poll-set key of the worker's own waker.
+    const WAKER_KEY: u64 = u64::MAX;
+    loop {
+        // 1. Mailbox: adopt new sockets, apply finished requests.
+        let (fresh, done) = {
+            let mut inbox = shared.inbox.lock().unwrap();
+            (std::mem::take(&mut inbox.conns), std::mem::take(&mut inbox.done))
+        };
+        for stream in fresh {
+            stream.set_nonblocking(true).ok();
+            stream.set_nodelay(true).ok();
+            conns.insert(next_conn, Conn::new(stream));
+            next_conn += 1;
+        }
+        for c in done {
+            if c.shutdown {
+                core.stop.store(true, Ordering::Release);
+                wake_all(core);
+            }
+            if let Some(conn) = conns.get_mut(&c.conn) {
+                conn.wbuf.extend_from_slice(&c.line);
+                conn.inflight = false;
+                if c.shutdown {
+                    conn.close_after_flush = true;
+                }
+            }
+        }
+        // 2. Opportunistic writes (most responses fit the socket buffer
+        // and never need a writable-poll round trip).
+        for conn in conns.values_mut() {
+            if conn.wpos < conn.wbuf.len() {
+                conn.flush_nonblocking();
+            }
+        }
+        // 3. Server stopping: flush what we can and drop everything.
+        if core.stop.load(Ordering::Acquire) {
+            for conn in conns.values_mut() {
+                conn.final_flush();
+            }
+            return;
+        }
+        // 4. Reap finished connections.
+        conns.retain(|_, c| !c.finished());
+        // 5. Dispatch: at most one in-flight request per connection, and
+        // only once the previous response is fully written — a client
+        // that pipelines requests without reading responses stalls its
+        // own connection instead of growing the write buffer unboundedly.
+        let mut dispatched = false;
+        {
+            let mut q = None;
+            for (&id, conn) in conns.iter_mut() {
+                if !conn.inflight && conn.wbuf.is_empty() {
+                    if let Some(line) = conn.pending.pop_front() {
+                        conn.inflight = true;
+                        q.get_or_insert_with(|| core.exec.queue.lock().unwrap())
+                            .push_back(ExecTask { worker: index, conn: id, line });
+                        dispatched = true;
+                    }
+                }
+            }
+        }
+        if dispatched {
+            core.exec.ready.notify_all();
+        }
+        // 6. Poll: the waker plus every connection's current interest.
+        sources.clear();
+        keys.clear();
+        sources.push((shared.waker.fd(), netpoll::Interest::READ));
+        keys.push(WAKER_KEY);
+        for (&id, conn) in conns.iter() {
+            sources.push((fd_of(&conn.stream), conn.interest()));
+            keys.push(id);
+        }
+        if poller.wait(&sources, POLL_TIMEOUT, &mut events).is_err() {
+            std::thread::sleep(Duration::from_millis(5));
+            continue;
+        }
+        // 7. Readiness: drain the waker, read/write ready connections.
+        for (k, ev) in keys.iter().zip(events.iter()) {
+            if *k == WAKER_KEY {
+                if ev.readable {
+                    shared.waker.drain();
+                }
+                continue;
+            }
+            let Some(conn) = conns.get_mut(k) else { continue };
+            if ev.readable || ev.closed {
+                conn.read_some();
+            }
+            if ev.writable {
+                conn.flush_nonblocking();
+            }
+        }
+    }
 }
 
 /// Minimal blocking client for tests, examples and the CLI's `client` op.

@@ -9,7 +9,9 @@
 //! sweep cells, FIND iterations) stops cooperatively at its next
 //! checkpoint.  Long jobs publish `done/total` progress and append
 //! partial result rows that `status` streams back before the job
-//! finishes.
+//! finishes.  Each record also carries the job's queue placement
+//! ([`JobPriority`], echoed on `status` when non-default) and its
+//! time-in-queue (`queue_wait_ms`, stamped when a worker starts it).
 //!
 //! Protocol surface (see [`super::protocol`]):
 //!
@@ -29,9 +31,11 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::util::{CancelToken, Json};
+
+use super::engine::JobPriority;
 
 /// Partial-result rows retained per job (older rows are dropped first;
 /// the drop count is reported so clients can detect truncation).
@@ -86,6 +90,14 @@ struct Job {
     partials: VecDeque<Json>,
     /// Rows dropped from the front of `partials` once the cap was hit.
     partials_dropped: u64,
+    /// Queue placement the job was admitted with (surfaced on `status`
+    /// when it differs from the all-defaults legacy shape).
+    priority: JobPriority,
+    /// When the job was admitted to its shard queue.
+    queued_at: Instant,
+    /// Time spent queued before a worker picked the job up (stamped by
+    /// [`JobRegistry::start`], surfaced as `queue_wait_ms` on `status`).
+    queue_wait: Option<Duration>,
 }
 
 /// Thread-safe registry of submitted jobs.
@@ -113,6 +125,11 @@ impl JobRegistry {
 
     /// Register a new job; returns its id.
     pub fn create(&self, request_op: &str) -> String {
+        self.create_with(request_op, JobPriority::default())
+    }
+
+    /// [`create`](Self::create) with an explicit queue placement.
+    pub fn create_with(&self, request_op: &str, priority: JobPriority) -> String {
         let mut g = self.inner.lock().unwrap();
         let id = format!("j-{}", g.next_id);
         g.next_id += 1;
@@ -128,6 +145,9 @@ impl JobRegistry {
                 progress: None,
                 partials: VecDeque::new(),
                 partials_dropped: 0,
+                priority,
+                queued_at: Instant::now(),
+                queue_wait: None,
             },
         );
         g.order.push_back(id.clone());
@@ -160,17 +180,39 @@ impl JobRegistry {
         g.jobs.get(id).map(|j| j.cancel.clone())
     }
 
+    /// Forget a job that was never admitted (the engine rejected it at
+    /// the backlog bound): removes the record and its listing entry so
+    /// rejected traffic cannot grow the registry.  The discarded id is
+    /// always the most recently created, so the listing scan is O(1)
+    /// from the back.
+    pub fn discard(&self, id: &str) {
+        let mut g = self.inner.lock().unwrap();
+        if g.jobs.remove(id).is_some() {
+            if let Some(pos) = g.order.iter().rposition(|x| x == id) {
+                g.order.remove(pos);
+            }
+        }
+    }
+
     /// Transition to running unless the job was cancelled while queued.
-    /// Returns false when the worker should skip the job.
+    /// Returns false when the worker should skip the job.  Stamps the
+    /// job's time-in-queue on the successful transition.
     pub fn start(&self, id: &str) -> bool {
         let mut g = self.inner.lock().unwrap();
         match g.jobs.get_mut(id) {
             Some(j) if j.state == JobState::Queued => {
                 j.state = JobState::Running;
+                j.queue_wait = Some(j.queued_at.elapsed());
                 true
             }
             _ => false,
         }
+    }
+
+    /// Time the job spent queued before starting (None while queued).
+    pub fn queue_wait(&self, id: &str) -> Option<Duration> {
+        let g = self.inner.lock().unwrap();
+        g.jobs.get(id).and_then(|j| j.queue_wait)
     }
 
     pub fn finish(&self, id: &str, result: Json) {
@@ -354,6 +396,17 @@ fn job_json(j: &Job, from: u64) -> Json {
         ("op", Json::str(&j.request_op)),
         ("state", Json::str(j.state.as_str())),
     ];
+    // Non-default queue placement is echoed back; the legacy shape
+    // (priority 0, no deadline) stays byte-identical.
+    if j.priority.priority != 0 {
+        fields.push(("priority", Json::num(f64::from(j.priority.priority))));
+    }
+    if let Some(ms) = j.priority.deadline_ms {
+        fields.push(("deadline_ms", Json::num(ms as f64)));
+    }
+    if let Some(wait) = j.queue_wait {
+        fields.push(("queue_wait_ms", Json::num(wait.as_secs_f64() * 1e3)));
+    }
     if let Some((done, total)) = j.progress {
         fields.push(("progress", progress_json(done, total)));
     }
@@ -560,6 +613,48 @@ mod tests {
         // A cursor below the evicted range just returns what is retained.
         let s = r.status_from(&id, 0).unwrap();
         assert_eq!(s.get("partial_results").unwrap().as_arr().unwrap().len(), 7);
+    }
+
+    #[test]
+    fn start_stamps_queue_wait_and_status_reports_it() {
+        let r = JobRegistry::new();
+        let id = r.create("plan");
+        assert!(r.queue_wait(&id).is_none(), "no wait before start");
+        let s = r.status(&id).unwrap();
+        assert!(s.get("queue_wait_ms").is_none());
+        assert!(s.get("priority").is_none(), "default placement stays implicit");
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(r.start(&id));
+        let wait = r.queue_wait(&id).expect("stamped at start");
+        assert!(wait >= Duration::from_millis(4), "{wait:?}");
+        let ms = r.status(&id).unwrap().get("queue_wait_ms").unwrap().as_f64().unwrap();
+        assert!(ms >= 4.0, "{ms}");
+    }
+
+    #[test]
+    fn non_default_placement_is_echoed_on_status() {
+        let r = JobRegistry::new();
+        let id = r.create_with("sweep", JobPriority::new(7).with_deadline_ms(1500));
+        let s = r.status(&id).unwrap();
+        assert_eq!(s.get("priority").unwrap().as_f64(), Some(7.0));
+        assert_eq!(s.get("deadline_ms").unwrap().as_f64(), Some(1500.0));
+    }
+
+    #[test]
+    fn discard_forgets_an_unadmitted_job() {
+        let r = JobRegistry::new();
+        let keep = r.create("plan");
+        let reject = r.create("sweep");
+        r.discard(&reject);
+        assert!(r.status(&reject).is_none());
+        assert!(r.token(&reject).is_none());
+        let list = r.list();
+        let arr = list.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("id").unwrap().as_str(), Some(keep.as_str()));
+        // Discarding twice (or an unknown id) is a no-op.
+        r.discard(&reject);
+        r.discard("j-999");
     }
 
     #[test]

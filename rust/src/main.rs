@@ -10,7 +10,9 @@
 //! botsched estimate [--per-cell n] [--sigma s] [--seed n]
 //! botsched bounds   [--budgets ...]
 //! botsched serve   [--addr 127.0.0.1:7077] [--no-xla] [--no-batching] [--shards N]
+//!                  [--conn-workers N] [--max-backlog N]
 //! botsched client  --addr host:port '<json request>'
+//! botsched submit  [--priority P] [--deadline-ms D] [--addr host:port] '<json job>'
 //! botsched jobs    [--addr host:port]            # list the engine's jobs
 //! botsched cancel  --job j-3 [--addr host:port]  # cancel a running job
 //! ```
@@ -151,6 +153,7 @@ fn run(args: Vec<String>) -> Result<()> {
         "trace" => cmd_trace(&a),
         "serve" => cmd_serve(&a),
         "client" => cmd_client(&a),
+        "submit" => cmd_submit(&a),
         "jobs" => cmd_jobs(&a),
         "cancel" => cmd_cancel(&a),
         "help" | "--help" | "-h" => {
@@ -177,8 +180,10 @@ fn print_help() {
          \x20 bounds    LP cost floor and budget-capped makespan floor\n\
          \x20 pareto    budget/makespan Pareto frontier + knee\n\
          \x20 trace     gen/replay multi-campaign arrival traces\n\
-         \x20 serve     start the coordinator (--addr, --no-xla, --no-batching, --shards N)\n\
+         \x20 serve     start the coordinator (--addr, --no-xla, --no-batching, --shards N,\n\
+         \x20           --conn-workers N, --max-backlog N)\n\
          \x20 client    send one JSON request to a coordinator\n\
+         \x20 submit    enqueue a job (--priority 0..=9, --deadline-ms D) and print its id\n\
          \x20 jobs      list a coordinator's jobs (state, progress)\n\
          \x20 cancel    cancel a coordinator job (--job j-3)\n\n\
          common flags: --system paper|paper:<overhead>|file.json, --overhead o, --no-xla"
@@ -518,6 +523,8 @@ fn cmd_serve(a: &Args) -> Result<()> {
         batching: !a.has("no-batching"),
         batch_wait: std::time::Duration::from_millis(a.u64("batch-wait-ms")?.unwrap_or(2)),
         shards: a.u64("shards")?.unwrap_or(0) as usize,
+        conn_workers: a.u64("conn-workers")?.unwrap_or(0) as usize,
+        max_backlog: a.u64("max-backlog")?.unwrap_or(0) as usize,
     };
     let c = Coordinator::start(cfg)?;
     println!("coordinator listening on {} (send {{\"op\":\"shutdown\"}} to stop)", c.local_addr);
@@ -534,6 +541,42 @@ fn cmd_client(a: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("usage: botsched client --addr host:port '<json>'"))?;
     let reply = botsched::coordinator::server::request(&addr, line)?;
     println!("{reply}");
+    Ok(())
+}
+
+/// `botsched submit --priority 9 --deadline-ms 5000 '<json job>'`: wrap
+/// a request as an async engine job with an explicit queue placement.
+/// Prints the job id to poll with `status` — or the structured `busy`
+/// rejection when the target shard's backlog is at its bound.
+fn cmd_submit(a: &Args) -> Result<()> {
+    let raw = a
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: botsched submit [--priority P] [--deadline-ms D] '<json job>'"))?;
+    let job = botsched::util::Json::parse(raw).map_err(|e| anyhow!("bad job json: {e}"))?;
+    let mut fields = vec![
+        ("op", botsched::util::Json::str("submit")),
+        ("job", job),
+    ];
+    if let Some(p) = a.u64("priority")? {
+        fields.push(("priority", botsched::util::Json::num(p as f64)));
+    }
+    if let Some(d) = a.u64("deadline-ms")? {
+        fields.push(("deadline_ms", botsched::util::Json::num(d as f64)));
+    }
+    let line = botsched::util::Json::obj(fields).to_string();
+    let reply = botsched::coordinator::server::request(&client_addr(a)?, &line)?;
+    match reply.get("job_id").and_then(|v| v.as_str()) {
+        Some(id) => println!("{id}: submitted (poll with `botsched jobs` or the status op)"),
+        None if reply.get("error").and_then(|v| v.as_str()) == Some("busy") => {
+            println!(
+                "busy: shard {} backlog {} is at its bound — retry later or lower the load",
+                reply.get("shard").and_then(|v| v.as_f64()).unwrap_or(-1.0),
+                reply.get("backlog").and_then(|v| v.as_f64()).unwrap_or(-1.0),
+            );
+        }
+        None => println!("{reply}"),
+    }
     Ok(())
 }
 

@@ -9,10 +9,14 @@
 //! * [`parallel`] — a scoped-thread worker pool with deterministic
 //!   ordered merge, driving the multistart/sweep/campaign outer loops;
 //! * [`cancel`] — a cooperative cancellation token threaded from the
-//!   coordinator's job engine into the long planner/simulator loops.
+//!   coordinator's job engine into the long planner/simulator loops;
+//! * [`netpoll`] — a dependency-free `poll(2)` wrapper + self-pipe
+//!   waker, the readiness substrate of the coordinator's non-blocking
+//!   connection workers.
 
 pub mod cancel;
 pub mod json;
+pub mod netpoll;
 pub mod parallel;
 pub mod rng;
 

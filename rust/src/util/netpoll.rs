@@ -1,0 +1,369 @@
+//! A tiny dependency-free readiness layer over `poll(2)` for the
+//! coordinator's non-blocking connection workers.
+//!
+//! Two pieces:
+//!
+//! * [`Poller`] — level-triggered readiness over a slice of file
+//!   descriptors (`(fd, Interest)` pairs), one `poll(2)` call per wait.
+//!   Level-triggering keeps the callers simple: a socket with unread
+//!   bytes (even bytes that arrived *before* it was registered) reports
+//!   readable on every wait until drained.
+//! * [`Waker`] — a self-pipe that makes a blocked [`Poller::wait`]
+//!   return immediately from another thread (used to deliver new
+//!   connections and finished request results to a connection worker).
+//!
+//! On non-unix targets both degrade to a timed sleep that reports every
+//! source ready — a busy-poll fallback that is correct (callers use
+//! non-blocking sockets and tolerate `WouldBlock`) but wasteful; the
+//! serving path is only deployed on unix.
+
+use std::io;
+use std::time::Duration;
+
+/// What a caller wants to be told about one descriptor.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Interest {
+    pub readable: bool,
+    pub writable: bool,
+}
+
+impl Interest {
+    pub const READ: Interest = Interest { readable: true, writable: false };
+    pub const WRITE: Interest = Interest { readable: false, writable: true };
+
+    pub fn read_write() -> Interest {
+        Interest { readable: true, writable: true }
+    }
+}
+
+/// What `poll(2)` reported for one descriptor.  `closed` maps
+/// `POLLHUP | POLLERR | POLLNVAL`: the caller should read to observe the
+/// EOF/error and drop the connection.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Readiness {
+    pub readable: bool,
+    pub writable: bool,
+    pub closed: bool,
+}
+
+impl Readiness {
+    pub fn any(&self) -> bool {
+        self.readable || self.writable || self.closed
+    }
+}
+
+#[cfg(unix)]
+pub type Fd = std::os::unix::io::RawFd;
+#[cfg(not(unix))]
+pub type Fd = i32;
+
+#[cfg(unix)]
+mod sys {
+    use super::{Fd, Interest, Readiness};
+    use std::io;
+    use std::time::Duration;
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+    pub const POLLNVAL: i16 = 0x020;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: i32,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    // `nfds_t` is `unsigned long` on Linux and `unsigned int` on the
+    // BSDs/macOS; both are passed in a register, but keep the ABI exact.
+    #[cfg(target_os = "macos")]
+    type NFds = core::ffi::c_uint;
+    #[cfg(not(target_os = "macos"))]
+    type NFds = core::ffi::c_ulong;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: NFds, timeout: core::ffi::c_int) -> core::ffi::c_int;
+        fn pipe(fds: *mut core::ffi::c_int) -> core::ffi::c_int;
+    }
+
+    /// One `poll(2)` call.  `EINTR` reports as zero ready descriptors
+    /// (the caller loops anyway); any other failure is a real error.
+    pub fn wait(
+        fds: &mut Vec<PollFd>,
+        sources: &[(Fd, Interest)],
+        timeout: Duration,
+        out: &mut Vec<Readiness>,
+    ) -> io::Result<usize> {
+        fds.clear();
+        for (fd, interest) in sources {
+            let mut events = 0i16;
+            if interest.readable {
+                events |= POLLIN;
+            }
+            if interest.writable {
+                events |= POLLOUT;
+            }
+            fds.push(PollFd { fd: *fd, events, revents: 0 });
+        }
+        let ms = timeout.as_millis().min(i32::MAX as u128) as core::ffi::c_int;
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as NFds, ms) };
+        out.clear();
+        if rc < 0 {
+            let err = io::Error::last_os_error();
+            if err.kind() == io::ErrorKind::Interrupted {
+                out.resize(sources.len(), Readiness::default());
+                return Ok(0);
+            }
+            return Err(err);
+        }
+        let mut ready = 0usize;
+        for pf in fds.iter() {
+            let r = Readiness {
+                readable: pf.revents & POLLIN != 0,
+                writable: pf.revents & POLLOUT != 0,
+                closed: pf.revents & (POLLERR | POLLHUP | POLLNVAL) != 0,
+            };
+            if r.any() {
+                ready += 1;
+            }
+            out.push(r);
+        }
+        Ok(ready)
+    }
+
+    /// A `pipe(2)` pair as blocking `File`s (the writer only ever sends
+    /// one byte between drains, so it can never fill the pipe buffer;
+    /// the reader only reads after `poll` reported it readable, so it
+    /// never blocks).
+    pub fn pipe_pair() -> io::Result<(std::fs::File, std::fs::File)> {
+        use std::os::unix::io::FromRawFd;
+        let mut fds = [0 as core::ffi::c_int; 2];
+        if unsafe { pipe(fds.as_mut_ptr()) } != 0 {
+            return Err(io::Error::last_os_error());
+        }
+        // SAFETY: both fds were just created by pipe() and are owned
+        // exclusively by the returned Files.
+        unsafe { Ok((std::fs::File::from_raw_fd(fds[0]), std::fs::File::from_raw_fd(fds[1]))) }
+    }
+}
+
+/// Reusable readiness poller (the pollfd array is kept across calls).
+#[derive(Default)]
+pub struct Poller {
+    #[cfg(unix)]
+    fds: Vec<sys::PollFd>,
+}
+
+impl Poller {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Wait up to `timeout` for readiness on `sources`; fills `out` with
+    /// one [`Readiness`] per source (same order) and returns how many
+    /// reported any event.  A timeout is not an error — it returns
+    /// `Ok(0)` with every entry idle.
+    #[cfg(unix)]
+    pub fn wait(
+        &mut self,
+        sources: &[(Fd, Interest)],
+        timeout: Duration,
+        out: &mut Vec<Readiness>,
+    ) -> io::Result<usize> {
+        sys::wait(&mut self.fds, sources, timeout, out)
+    }
+
+    /// Non-unix fallback: sleep a beat and report every source both
+    /// readable and writable (callers' non-blocking reads/writes then
+    /// see `WouldBlock` when there is nothing to do).
+    #[cfg(not(unix))]
+    pub fn wait(
+        &mut self,
+        sources: &[(Fd, Interest)],
+        timeout: Duration,
+        out: &mut Vec<Readiness>,
+    ) -> io::Result<usize> {
+        std::thread::sleep(timeout.min(Duration::from_millis(2)));
+        out.clear();
+        for (_, interest) in sources {
+            out.push(Readiness {
+                readable: interest.readable,
+                writable: interest.writable,
+                closed: false,
+            });
+        }
+        Ok(sources.len())
+    }
+}
+
+/// Cross-thread wakeup for a poller: a self-pipe whose read end joins
+/// the poll set.  `wake` is deduplicated through an atomic flag, so the
+/// pipe never holds more than one unread byte and neither end needs to
+/// be non-blocking.
+pub struct Waker {
+    #[cfg(unix)]
+    reader: std::fs::File,
+    #[cfg(unix)]
+    writer: std::fs::File,
+    pending: std::sync::atomic::AtomicBool,
+}
+
+impl Waker {
+    #[cfg(unix)]
+    pub fn new() -> io::Result<Self> {
+        let (reader, writer) = sys::pipe_pair()?;
+        Ok(Self { reader, writer, pending: std::sync::atomic::AtomicBool::new(false) })
+    }
+
+    #[cfg(not(unix))]
+    pub fn new() -> io::Result<Self> {
+        Ok(Self { pending: std::sync::atomic::AtomicBool::new(false) })
+    }
+
+    /// The descriptor to register with [`Poller::wait`] (readable
+    /// interest).  On non-unix targets this is a dummy; the fallback
+    /// poller reports everything ready anyway.
+    #[cfg(unix)]
+    pub fn fd(&self) -> Fd {
+        use std::os::unix::io::AsRawFd;
+        self.reader.as_raw_fd()
+    }
+
+    #[cfg(not(unix))]
+    pub fn fd(&self) -> Fd {
+        -1
+    }
+
+    /// Make the owning poller's current (or next) `wait` return.
+    /// Cheap and idempotent between drains.
+    pub fn wake(&self) {
+        use std::sync::atomic::Ordering;
+        if !self.pending.swap(true, Ordering::AcqRel) {
+            #[cfg(unix)]
+            {
+                use std::io::Write;
+                let _ = (&self.writer).write_all(&[1u8]);
+            }
+        }
+    }
+
+    /// Consume a wakeup after `wait` reported the waker's fd readable.
+    /// Clears the dedup flag *before* reading, so a wake racing the
+    /// drain at worst causes one spurious (harmless) extra wakeup and
+    /// never a lost one.
+    // At most one byte is ever pending (see `wake`), so a short read is
+    // impossible and a failed one only costs a spurious wakeup later.
+    #[allow(clippy::unused_io_amount)]
+    pub fn drain(&self) {
+        use std::sync::atomic::Ordering;
+        self.pending.store(false, Ordering::Release);
+        #[cfg(unix)]
+        {
+            use std::io::Read;
+            let mut buf = [0u8; 8];
+            let _ = (&self.reader).read(&mut buf);
+        }
+    }
+}
+
+impl std::fmt::Debug for Waker {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Waker").finish()
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let a = TcpStream::connect(addr).unwrap();
+        let (b, _) = listener.accept().unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn reports_readable_once_data_arrives() {
+        let (mut a, b) = pair();
+        let mut poller = Poller::new();
+        let mut out = Vec::new();
+        let sources = [(b.as_raw_fd(), Interest::READ)];
+        // Nothing written yet: times out idle.
+        let n = poller.wait(&sources, Duration::from_millis(10), &mut out).unwrap();
+        assert_eq!(n, 0);
+        assert!(!out[0].readable);
+        a.write_all(b"hi").unwrap();
+        let n = poller.wait(&sources, Duration::from_secs(5), &mut out).unwrap();
+        assert_eq!(n, 1);
+        assert!(out[0].readable);
+        // Level-triggered: still readable until drained.
+        let n = poller.wait(&sources, Duration::from_millis(50), &mut out).unwrap();
+        assert_eq!(n, 1);
+        let mut buf = [0u8; 8];
+        let got = (&b).read(&mut buf).unwrap();
+        assert_eq!(&buf[..got], b"hi");
+    }
+
+    #[test]
+    fn reports_closed_or_readable_on_peer_hangup() {
+        let (a, b) = pair();
+        drop(a);
+        let mut poller = Poller::new();
+        let mut out = Vec::new();
+        let sources = [(b.as_raw_fd(), Interest::READ)];
+        poller.wait(&sources, Duration::from_secs(5), &mut out).unwrap();
+        // A closed peer surfaces as POLLIN (read -> 0) and/or POLLHUP.
+        assert!(out[0].readable || out[0].closed, "{:?}", out[0]);
+    }
+
+    #[test]
+    fn waker_interrupts_a_blocked_wait() {
+        let waker = std::sync::Arc::new(Waker::new().unwrap());
+        let w2 = std::sync::Arc::clone(&waker);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            w2.wake();
+        });
+        let mut poller = Poller::new();
+        let mut out = Vec::new();
+        let sources = [(waker.fd(), Interest::READ)];
+        let t0 = std::time::Instant::now();
+        let n = poller.wait(&sources, Duration::from_secs(30), &mut out).unwrap();
+        assert_eq!(n, 1, "waker must interrupt the wait");
+        assert!(t0.elapsed() < Duration::from_secs(10));
+        waker.drain();
+        t.join().unwrap();
+        // Drained: the next wait is idle again.
+        let n = poller.wait(&sources, Duration::from_millis(10), &mut out).unwrap();
+        assert_eq!(n, 0);
+        // Wake twice between drains: one byte, one wakeup, no backlog.
+        waker.wake();
+        waker.wake();
+        let n = poller.wait(&sources, Duration::from_secs(5), &mut out).unwrap();
+        assert_eq!(n, 1);
+        waker.drain();
+        let n = poller.wait(&sources, Duration::from_millis(10), &mut out).unwrap();
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn writable_interest_reports_on_an_open_socket() {
+        let (a, _b) = pair();
+        let mut poller = Poller::new();
+        let mut out = Vec::new();
+        let n = poller
+            .wait(&[(a.as_raw_fd(), Interest::WRITE)], Duration::from_secs(5), &mut out)
+            .unwrap();
+        assert_eq!(n, 1);
+        assert!(out[0].writable);
+        assert!(Interest::read_write().readable && Interest::read_write().writable);
+    }
+}

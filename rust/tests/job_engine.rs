@@ -10,7 +10,7 @@ use std::time::Duration;
 
 use botsched::cloudsim::{run_campaign_replications_ctl, CampaignSpec, NoiseModel};
 use botsched::coordinator::protocol::{handle, Context};
-use botsched::coordinator::{JobEngine, JobState, Metrics};
+use botsched::coordinator::{Busy, JobEngine, JobPriority, JobState, Metrics};
 use botsched::eval::NativeEvaluator;
 use botsched::scheduler::{PolicyRegistry, SolveRequest};
 use botsched::util::{CancelToken, Json};
@@ -176,6 +176,109 @@ fn concurrent_submit_cancel_status_races_stay_consistent() {
     // Every id is listed exactly once.
     let list = e.registry().list();
     assert_eq!(list.as_arr().unwrap().len(), 200);
+}
+
+#[test]
+fn priority_and_deadline_govern_start_order_and_saturation_rejects() {
+    // One shard, bounded at 8: everything below runs on one worker, so
+    // the observed execution order is exactly the queue's pop order.
+    let e = JobEngine::with_backlog(1, 8, Arc::new(Metrics::new()));
+    let (started_tx, started_rx) = std::sync::mpsc::channel::<()>();
+    let (go_tx, go_rx) = std::sync::mpsc::channel::<()>();
+    let blocker = e
+        .try_submit(
+            "block",
+            JobPriority::default(),
+            Box::new(move |_| {
+                started_tx.send(()).unwrap();
+                go_rx.recv().unwrap();
+                Ok(Json::Null)
+            }),
+        )
+        .unwrap();
+    started_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+
+    let order = Arc::new(Mutex::new(Vec::<&'static str>::new()));
+    let tag = |name: &'static str| -> botsched::coordinator::engine::JobFn {
+        let order = Arc::clone(&order);
+        Box::new(move |_| {
+            order.lock().unwrap().push(name);
+            Ok(Json::Null)
+        })
+    };
+    let mut ids = Vec::new();
+    // Submission order deliberately scrambles the intended run order.
+    ids.push(e.try_submit("t", JobPriority::default(), tag("p0-first")).unwrap());
+    ids.push(e.try_submit("t", JobPriority::default(), tag("p0-second")).unwrap());
+    let p5_late = JobPriority::new(5).with_deadline_ms(600_000);
+    ids.push(e.try_submit("t", p5_late, tag("p5-late")).unwrap());
+    let p5_soon = JobPriority::new(5).with_deadline_ms(1_000);
+    ids.push(e.try_submit("t", p5_soon, tag("p5-soon")).unwrap());
+    ids.push(e.try_submit("t", JobPriority::new(5), tag("p5-nodeadline")).unwrap());
+    ids.push(e.try_submit("t", JobPriority::new(9), tag("p9")).unwrap());
+    ids.push(e.try_submit("t", JobPriority::default(), tag("p0-third")).unwrap());
+    ids.push(e.try_submit("t", JobPriority::default(), tag("p0-fourth")).unwrap());
+    // The queue is now at its bound of 8: the next submit is rejected —
+    // admission control is checked before priority, so even a 9 bounces.
+    let busy = e
+        .try_submit("t", JobPriority::new(9), Box::new(|_| Ok(Json::Null)))
+        .unwrap_err();
+    assert_eq!(busy, Busy { shard: 0, backlog: 8 });
+
+    go_tx.send(()).unwrap();
+    for id in ids.iter().chain(std::iter::once(&blocker)) {
+        assert_eq!(
+            e.registry().wait_terminal(id, Duration::from_secs(30)),
+            Some(JobState::Done),
+            "{id}"
+        );
+    }
+    let order = order.lock().unwrap();
+    assert_eq!(
+        *order,
+        [
+            "p9",            // highest priority overtakes the whole queue
+            "p5-soon",       // earliest deadline wins within the band
+            "p5-late",
+            "p5-nodeadline", // deadline-less jobs run after EDF peers
+            "p0-first",      // the default band keeps plain FIFO
+            "p0-second",
+            "p0-third",
+            "p0-fourth",
+        ],
+        "queue pop order must be (priority, deadline, FIFO)"
+    );
+}
+
+#[test]
+fn default_priority_jobs_keep_exact_fifo_and_record_queue_wait() {
+    // No priority/deadline fields anywhere: the bounded priority queue
+    // must degenerate to the old FIFO behaviour bit-for-bit.
+    let e = JobEngine::with_backlog(1, 64, Arc::new(Metrics::new()));
+    let order = Arc::new(Mutex::new(Vec::new()));
+    let mut ids = Vec::new();
+    for i in 0..16usize {
+        let order = Arc::clone(&order);
+        ids.push(e.submit(
+            "t",
+            Box::new(move |_| {
+                order.lock().unwrap().push(i);
+                std::thread::sleep(Duration::from_millis(1));
+                Ok(Json::Null)
+            }),
+        ));
+    }
+    for id in &ids {
+        assert_eq!(
+            e.registry().wait_terminal(id, Duration::from_secs(30)),
+            Some(JobState::Done)
+        );
+        // Every executed job carries its recorded time-in-queue.
+        let status = e.registry().status(id).unwrap();
+        assert!(status.get("queue_wait_ms").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(status.get("priority").is_none(), "default placement stays implicit");
+    }
+    assert_eq!(*order.lock().unwrap(), (0..16).collect::<Vec<_>>());
 }
 
 // ---------------------------------------------------------------------------
