@@ -22,8 +22,7 @@ use std::time::Duration;
 
 use botsched::benchkit::Bench;
 use botsched::cloudsim::{SimConfig, Simulator};
-use botsched::coordinator::server::request;
-use botsched::coordinator::{Coordinator, CoordinatorConfig, JobEngine, Metrics};
+use botsched::coordinator::{Client, Coordinator, CoordinatorConfig, JobEngine, Metrics};
 use botsched::scheduler::{PolicyRegistry, SolveRequest};
 use botsched::util::Json;
 use botsched::workload::{SizeDistribution, WorkloadGenerator, WorkloadSpec};
@@ -166,8 +165,9 @@ fn main() {
         Some(churn as f64),
         || {
             for _ in 0..churn {
-                let r = request(&addr, r#"{"op":"ping"}"#).expect("ping reply");
-                assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "bad reply: {r}");
+                // Connect–request–disconnect through the typed client.
+                let mut client = Client::connect(&addr).expect("churn connect");
+                client.ping().expect("ping reply");
             }
         },
     );

@@ -1,27 +1,29 @@
-//! Coordinator demo: start the leader, drive it with concurrent clients
-//! over the JSON-line TCP protocol, print the metrics, shut down.
+//! Coordinator demo: start the leader, drive it with concurrent typed
+//! clients over the v2 wire API, print the metrics, shut down.
 //!
 //! ```bash
 //! cargo run --release --example serve_demo
 //! ```
 //!
-//! This is the serving deployment in miniature.  Connections land on a
-//! small fixed pool of readiness-driven workers (non-blocking sockets
-//! over `poll(2)` — idle clients cost no threads), requests execute on
-//! a bounded executor pool, and every job flows through the sharded
-//! engine's *bounded priority queues*: `submit` (and sync
-//! campaign/sweep) may carry `"priority"` (0..=9) and `"deadline_ms"`,
-//! and a shard at its `--max-backlog` bound answers
-//! `{"ok":false,"error":"busy","shard":…,"backlog":…}` instead of
-//! queueing without limit.  The XLA artifact (when built) scores every
-//! candidate plan and the dynamic batcher coalesces scoring traffic
-//! from concurrent planning requests; the protocol surface covers
-//! plan / sweep / simulate / campaign / estimate plus the async job ops.
+//! This is the serving deployment in miniature — and the tour of the
+//! typed client: every request below is an [`api`] struct encoded by
+//! [`Client`], every reply a typed response, and failures (including the
+//! admission-control `busy` rejection with its `retry_after_ms` hint)
+//! come back as typed `ClientError`s.  Connections land on a small fixed
+//! pool of readiness-driven workers (idle clients cost no threads),
+//! requests execute on a bounded executor pool, and every job flows
+//! through the sharded engine's bounded priority queues.  The XLA
+//! artifact (when built) scores every candidate plan; the protocol
+//! surface covers plan / sweep / simulate / campaign / estimate plus
+//! the async job ops, `list_scenarios` and the v2 `describe` schema.
 
 use std::time::Duration;
 
-use botsched::coordinator::server::request;
-use botsched::coordinator::{Coordinator, CoordinatorConfig};
+use botsched::coordinator::api::{
+    CampaignRequest, CampaignResponse, EstimatePerfRequest, NoiseSpec, Placement, PlanRequest,
+    Request, SimulateRequest, SystemRef,
+};
+use botsched::coordinator::{Client, Coordinator, CoordinatorConfig};
 
 fn main() -> anyhow::Result<()> {
     let coord = Coordinator::start(CoordinatorConfig {
@@ -34,121 +36,140 @@ fn main() -> anyhow::Result<()> {
     let addr = coord.local_addr;
     println!("coordinator up on {addr}\n");
 
-    // Discover the policy surface first: anything listed here can be
-    // named in a "policy" field on plan/simulate/campaign requests.
-    let pols = request(&addr, r#"{"op":"list_policies"}"#)?;
-    let names: Vec<&str> = pols
-        .get("policies")
-        .unwrap()
-        .as_arr()
-        .unwrap()
-        .iter()
-        .filter_map(|p| p.get("name").and_then(|n| n.as_str()))
-        .collect();
-    println!("policies: {}\n", names.join(", "));
+    let mut client = Client::connect(&addr)?;
+
+    // Discover the surface first: policies, scenarios, and (v2) the
+    // machine-readable op schema.
+    let policies = client.list_policies()?;
+    let names: Vec<&str> = policies.iter().map(|p| p.name.as_str()).collect();
+    println!("policies: {}", names.join(", "));
+    let scenarios = client.list_scenarios()?;
+    let names: Vec<&str> = scenarios.iter().map(|s| s.name.as_str()).collect();
+    println!("scenarios: {}", names.join(", "));
+    let schema = client.describe()?;
+    println!(
+        "describe: {} ops, error codes {}\n",
+        schema.get("ops").unwrap().as_arr().unwrap().len(),
+        schema.get("error_codes").unwrap(),
+    );
 
     // Concurrent planning clients (a campaign team sweeping budgets).
     let mut handles = Vec::new();
-    for budget in [60, 65, 70, 75, 80, 85] {
+    for budget in [60.0, 65.0, 70.0, 75.0, 80.0, 85.0] {
         handles.push(std::thread::spawn(move || {
-            let line =
-                format!(r#"{{"op":"plan","budget":{budget},"policy":"budget-heuristic"}}"#);
-            (budget, request(&addr, &line).expect("plan reply"))
+            let mut c = Client::connect(&addr).expect("connect");
+            let plan = c
+                .plan(&PlanRequest::new(budget).with_policy("budget-heuristic"))
+                .expect("plan reply");
+            (budget, plan)
         }));
     }
     for h in handles {
-        let (budget, reply) = h.join().unwrap();
+        let (budget, plan) = h.join().unwrap();
         println!(
             "plan @ {budget}: makespan {:>7.1}s cost {:>5} feasible {} vms {}",
-            reply.get("makespan").unwrap().as_f64().unwrap(),
-            reply.get("cost").unwrap().as_f64().unwrap(),
-            reply.get("feasible").unwrap().as_bool().unwrap(),
-            reply.get("n_vms").unwrap().as_f64().unwrap(),
+            plan.makespan,
+            plan.cost,
+            plan.feasible,
+            plan.vms.len(),
         );
     }
 
-    // Any registered policy is one "policy" field away — here the
-    // deadline search (cheapest plan finishing within an hour).
-    let dl = request(
-        &addr,
-        r#"{"op":"plan","budget":300,"policy":"deadline","deadline":3600}"#,
-    )?;
+    // Any registered policy is one typed field away — here the deadline
+    // search (cheapest plan finishing within an hour).
+    let dl = client.plan(&PlanRequest::new(300.0).with_policy("deadline").with_deadline(3600.0))?;
     println!(
         "\ndeadline 1h: cost {} makespan {:.1}s (effective budget {:.2})",
-        dl.get("cost").unwrap().as_f64().unwrap(),
-        dl.get("makespan").unwrap().as_f64().unwrap(),
-        dl.get("effective_budget").unwrap().as_f64().unwrap(),
+        dl.cost, dl.makespan, dl.effective_budget,
+    );
+
+    // A named scenario replaces an inline system object.
+    let ht = client.plan(
+        &PlanRequest::new(500.0).with_target(SystemRef::scenario("heavy-tail")),
+    )?;
+    println!(
+        "scenario heavy-tail @ 500: makespan {:.1}s over {} VMs",
+        ht.makespan,
+        ht.vms.len()
     );
 
     // One simulation and one failure campaign through the same socket.
-    let sim = request(
-        &addr,
-        r#"{"op":"simulate","budget":80,"noise":{"task_sigma":0.08},"seed":5}"#,
+    let sim = client.simulate(
+        &SimulateRequest::new(80.0)
+            .with_noise(NoiseSpec { task_sigma: Some(0.08), ..NoiseSpec::default() })
+            .with_seed(5),
     )?;
     println!(
         "\nsimulate @ 80 (jitter 8%): makespan {:.1}s cost {} completed {}",
-        sim.get("makespan").unwrap().as_f64().unwrap(),
-        sim.get("cost").unwrap().as_f64().unwrap(),
-        sim.get("completed").unwrap().as_f64().unwrap(),
+        sim.makespan, sim.cost, sim.completed,
     );
-    let camp = request(
-        &addr,
-        r#"{"op":"campaign","budget":200,"noise":{"mean_lifetime":3000},"seed":2,"max_rounds":6}"#,
+    let camp = client.campaign(
+        &CampaignRequest::new(200.0)
+            .with_noise(NoiseSpec { mean_lifetime: Some(3000.0), ..NoiseSpec::default() })
+            .with_seed(2)
+            .with_max_rounds(6),
     )?;
-    println!(
-        "campaign @ 200 (failing cloud): rounds {} wall {:.1}s spent {} complete {}",
-        camp.get("rounds").unwrap().as_f64().unwrap(),
-        camp.get("wall_clock").unwrap().as_f64().unwrap(),
-        camp.get("spent").unwrap().as_f64().unwrap(),
-        camp.get("complete").unwrap().as_bool().unwrap(),
-    );
-
-    // Estimate op exercises the perf_estim artifact.
-    let est = request(&addr, r#"{"op":"estimate_perf","per_cell":15,"noise":{"task_sigma":0.05}}"#)?;
-    println!(
-        "estimate_perf: {} samples, max rel err {:.2}%",
-        est.get("samples").unwrap().as_f64().unwrap(),
-        est.get("max_rel_error").unwrap().as_f64().unwrap() * 100.0,
-    );
-
-    // Async job flow: submit a campaign with an explicit queue
-    // placement (priority 0..=9 plus a relative deadline_ms; both ride
-    // on the outer submit object) and poll it to completion.  Under
-    // saturation this submit would come back as
-    // {"ok":false,"error":"busy","shard":…,"backlog":…} instead.
-    let sub = request(
-        &addr,
-        r#"{"op":"submit","priority":7,"deadline_ms":30000,"job":{"op":"campaign","budget":220,"noise":{"mean_lifetime":2500},"seed":9,"max_rounds":6}}"#,
-    )?;
-    let job_id = sub.get("job_id").unwrap().as_str().unwrap().to_string();
-    println!("
-submitted campaign as {job_id}");
-    loop {
-        let st = request(&addr, &format!(r#"{{"op":"status","job_id":"{job_id}"}}"#))?;
-        let state = st.path(&["job", "state"]).unwrap().as_str().unwrap().to_string();
-        if state == "done" {
-            let result = st.path(&["job", "result"]).unwrap();
-            println!(
-                "job {job_id} done: rounds {} complete {}",
-                result.get("rounds").unwrap().as_f64().unwrap(),
-                result.get("complete").unwrap().as_bool().unwrap(),
-            );
-            break;
-        }
-        if state == "failed" {
-            println!("job failed: {}", st.path(&["job", "error"]).unwrap());
-            break;
-        }
-        std::thread::sleep(Duration::from_millis(20));
+    if let CampaignResponse::Single { rounds, wall_clock, spent, complete, .. } = camp {
+        println!(
+            "campaign @ 200 (failing cloud): rounds {rounds} wall {wall_clock:.1}s \
+             spent {spent} complete {complete}"
+        );
     }
 
-    // Metrics + shutdown: stats now carries per-shard queue gauges
+    // Estimate op exercises the perf_estim artifact.
+    let est = client.estimate_perf(&EstimatePerfRequest {
+        per_cell: Some(15),
+        noise: Some(NoiseSpec { task_sigma: Some(0.05), ..NoiseSpec::default() }),
+        ..EstimatePerfRequest::default()
+    })?;
+    println!(
+        "estimate_perf: {} samples, max rel err {:.2}%",
+        est.samples,
+        est.max_rel_error * 100.0,
+    );
+
+    // Async job flow: submit a campaign with an explicit queue placement
+    // (priority 0..=9 plus a relative deadline_ms) and poll it to
+    // completion.  Under saturation submit_with_retry would sleep the
+    // server's retry_after_ms hint and try again.
+    let job = Request::Campaign(
+        CampaignRequest::new(220.0)
+            .with_noise(NoiseSpec { mean_lifetime: Some(2500.0), ..NoiseSpec::default() })
+            .with_seed(9)
+            .with_max_rounds(6),
+    );
+    let placement = Placement { priority: Some(7), deadline_ms: Some(30_000) };
+    let job_id = client.submit_with_retry(&job, placement, 3)?;
+    println!("\nsubmitted campaign as {job_id}");
+    let status = client.wait_job(&job_id, Duration::from_millis(20), Duration::from_secs(300))?;
+    match status.state.as_str() {
+        "done" => {
+            let result = status.result.expect("done jobs carry their reply");
+            let camp = CampaignResponse::decode(&result).expect("campaign body");
+            if let CampaignResponse::Single { rounds, complete, .. } = camp {
+                println!("job {job_id} done: rounds {rounds} complete {complete}");
+            }
+        }
+        other => println!("job {job_id} ended as {other}: {:?}", status.error),
+    }
+
+    // Metrics + shutdown: stats carries per-shard queue gauges
     // (depth / high_water / rejected) and queue-wait percentiles next
     // to the request counters.
-    let stats = request(&addr, r#"{"op":"stats"}"#)?;
-    println!("\ncoordinator stats: {}", stats.get("stats").unwrap());
-    println!("engine gauges: {}", stats.get("engine").unwrap());
-    request(&addr, r#"{"op":"shutdown"}"#)?;
+    let stats = client.stats()?;
+    println!("\ncoordinator stats: {}", stats.stats);
+    println!(
+        "engine gauges: {} shards, backlog bound {}, per-shard {:?}",
+        stats.engine.shards,
+        stats.engine.max_backlog,
+        stats
+            .engine
+            .shard_stats
+            .iter()
+            .map(|s| (s.depth, s.high_water, s.rejected))
+            .collect::<Vec<_>>(),
+    );
+    client.shutdown()?;
     coord.wait();
     println!("coordinator stopped cleanly");
     Ok(())

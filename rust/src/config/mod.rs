@@ -27,37 +27,19 @@ use crate::model::{BillingPolicy, System, SystemBuilder};
 use crate::scheduler::{PlannerConfig, SolveRequest};
 use crate::util::Json;
 
-/// Ceiling on a wire-supplied relative queue deadline (~1000 days) —
-/// keeps `Instant + deadline` arithmetic comfortably clear of overflow
-/// and rejects nonsense early.
-const MAX_DEADLINE_MS: u64 = 86_400_000_000;
-
 /// Parse a request's queue placement: `priority` (0..=9, default 0;
 /// 9 = most urgent) and an optional `deadline_ms` *relative to
 /// submission*.  Both fields are strict: present-but-mistyped or
 /// out-of-range values are errors, never silent defaults.  Requests
 /// carrying neither field get the all-defaults placement, which the
 /// engine schedules in plain FIFO order — exactly the legacy behaviour.
+///
+/// Thin wrapper over [`crate::coordinator::api::Placement`] — the typed
+/// API owns the field rules; this keeps the historical entry point.
 pub fn job_priority_from_json(j: &Json) -> Result<JobPriority> {
-    let u64_knob = |key: &str| -> Result<Option<u64>> {
-        j.get(key)
-            .map(|v| {
-                v.as_u64()
-                    .ok_or_else(|| anyhow!("\"{key}\" must be a non-negative integer, got {v}"))
-            })
-            .transpose()
-    };
-    let priority = u64_knob("priority")?.unwrap_or(0);
-    if priority > 9 {
-        bail!("\"priority\" must be in 0..=9, got {priority}");
-    }
-    let deadline_ms = u64_knob("deadline_ms")?;
-    if let Some(d) = deadline_ms {
-        if d > MAX_DEADLINE_MS {
-            bail!("\"deadline_ms\" {d} exceeds the limit of {MAX_DEADLINE_MS}");
-        }
-    }
-    Ok(JobPriority { priority: priority as u8, deadline_ms })
+    Ok(crate::coordinator::api::Placement::decode(j)
+        .map_err(|e| anyhow!("{}", e.message))?
+        .job_priority())
 }
 
 /// Parse a [`System`] from its JSON description.
@@ -236,117 +218,33 @@ pub fn load_system(spec: &str) -> Result<System> {
     system_from_json(&j)
 }
 
-/// Parse a [`PlannerConfig`] from JSON (all fields optional).
+/// Parse a [`PlannerConfig`] from JSON (all fields optional).  Thin
+/// wrapper over [`crate::coordinator::api::PlannerOverrides`].
 pub fn planner_config_from_json(j: &Json) -> Result<PlannerConfig> {
-    let mut cfg = PlannerConfig::default();
-    if let Some(n) = j.get("max_iters").and_then(Json::as_u64) {
-        cfg.max_iters = n as usize;
-    }
-    if let Some(k) = j.get("replace_k").and_then(Json::as_u64) {
-        cfg.replace_k = k as usize;
-    }
-    let flag = |key: &str, default: bool| j.get(key).and_then(Json::as_bool).unwrap_or(default);
-    cfg.enable_reduce = flag("enable_reduce", cfg.enable_reduce);
-    cfg.enable_add = flag("enable_add", cfg.enable_add);
-    cfg.enable_balance = flag("enable_balance", cfg.enable_balance);
-    cfg.enable_split = flag("enable_split", cfg.enable_split);
-    cfg.enable_replace = flag("enable_replace", cfg.enable_replace);
-    Ok(cfg)
+    Ok(crate::coordinator::api::PlannerOverrides::decode(j).to_config())
 }
 
 /// Parse a [`SolveRequest`] from JSON: `budget` (required) plus the
 /// optional policy knobs `deadline`, `seed`, `n_starts`, `perf_jitter`,
 /// `sample_frac`, `threads` (worker threads for parallelisable
-/// policies; 0 = auto), `remaining` (residual task ids for `"dynamic"`
-/// re-planning) and a nested `planner` config.  The evaluator handle is
-/// attached by the caller ([`SolveRequest::with_evaluator`]).
+/// policies; 0 = auto, bounded at 256), `remaining` (residual task ids
+/// for `"dynamic"` re-planning) and a nested `planner` config.  The
+/// evaluator handle is attached by the caller
+/// ([`SolveRequest::with_evaluator`]).
+///
+/// Thin wrapper over [`crate::coordinator::api::SolveParams`] — the
+/// typed API owns the field rules (strictness, bounds, error strings);
+/// this keeps the historical entry point for file-driven callers.
 pub fn solve_request_from_json(j: &Json) -> Result<SolveRequest<'static>> {
-    // Knobs are strict: a present-but-mistyped value is an error, never
-    // silently dropped (a string "deadline" must not degrade the request
-    // to an unconstrained solve).
-    let f64_knob = |key: &str| -> Result<Option<f64>> {
-        j.get(key)
-            .map(|v| {
-                v.as_f64()
-                    .ok_or_else(|| anyhow!("\"{key}\" must be a number, got {v}"))
-            })
-            .transpose()
-    };
-    let u64_knob = |key: &str| -> Result<Option<u64>> {
-        j.get(key)
-            .map(|v| {
-                v.as_u64()
-                    .ok_or_else(|| anyhow!("\"{key}\" must be a non-negative integer, got {v}"))
-            })
-            .transpose()
-    };
-    let budget = f64_knob("budget")?.ok_or_else(|| anyhow!("missing \"budget\""))?;
-    let mut req = SolveRequest::new(budget);
-    if let Some(d) = f64_knob("deadline")? {
-        req = req.with_deadline(d);
-    }
-    if let Some(s) = u64_knob("seed")? {
-        req = req.with_seed(s);
-    }
-    if let Some(n) = u64_knob("n_starts")? {
-        req = req.with_starts(n as usize);
-    }
-    if let Some(x) = f64_knob("perf_jitter")? {
-        if !(0.0..1.0).contains(&x) {
-            bail!("perf_jitter must be in [0, 1), got {x}");
-        }
-        req = req.with_perf_jitter(x);
-    }
-    if let Some(f) = f64_knob("sample_frac")? {
-        if !(f > 0.0 && f <= 1.0) {
-            bail!("sample_frac must be in (0, 1], got {f}");
-        }
-        req = req.with_sample_frac(f);
-    }
-    if let Some(t) = u64_knob("threads")? {
-        // Thread counts are wire/file-controlled: bound them so a tiny
-        // request cannot drive unbounded OS-thread spawns (0 = auto is
-        // always allowed; `parallel_map` caps auto at the core count).
-        const MAX_THREADS: u64 = 256;
-        if t > MAX_THREADS {
-            bail!("threads {t} exceeds the limit of {MAX_THREADS}");
-        }
-        req = req.with_threads(t as usize);
-    }
-    if let Some(r) = j.get("remaining") {
-        let arr = r
-            .as_arr()
-            .ok_or_else(|| anyhow!("\"remaining\" must be an array of task ids, got {r}"))?;
-        if arr.is_empty() {
-            bail!("\"remaining\" must name at least one task (omit it for the full workload)");
-        }
-        let ids: Vec<crate::model::TaskId> = arr
-            .iter()
-            .map(|v| {
-                let t = v
-                    .as_u64()
-                    .ok_or_else(|| anyhow!("\"remaining\" task id must be a non-negative integer, got {v}"))?;
-                if t > u32::MAX as u64 {
-                    bail!("\"remaining\" task id {t} out of range");
-                }
-                Ok(crate::model::TaskId(t as u32))
-            })
-            .collect::<Result<_>>()?;
-        req = req.with_remaining(ids);
-    }
-    if let Some(p) = j.get("planner") {
-        req = req.with_planner(planner_config_from_json(p)?);
-    }
-    Ok(req)
+    Ok(crate::coordinator::api::SolveParams::decode(j)
+        .map_err(|e| anyhow!("{}", e.message))?
+        .solve_request())
 }
 
-/// Parse a [`NoiseModel`] from JSON (all fields optional, default none).
+/// Parse a [`NoiseModel`] from JSON (all fields optional, default
+/// none).  Thin wrapper over [`crate::coordinator::api::NoiseSpec`].
 pub fn noise_from_json(j: &Json) -> NoiseModel {
-    NoiseModel {
-        task_sigma: j.get("task_sigma").and_then(Json::as_f64).unwrap_or(0.0),
-        boot_sigma: j.get("boot_sigma").and_then(Json::as_f64).unwrap_or(0.0),
-        mean_lifetime: j.get("mean_lifetime").and_then(Json::as_f64),
-    }
+    crate::coordinator::api::NoiseSpec::decode(j).model()
 }
 
 #[cfg(test)]

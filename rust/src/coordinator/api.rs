@@ -1,0 +1,2038 @@
+//! The typed, versioned coordinator API: the single source of truth for
+//! the wire protocol.
+//!
+//! Every request the coordinator accepts and every reply it produces is
+//! described here as a plain Rust type with `encode`/`decode` through
+//! [`crate::util::Json`].  The protocol layer
+//! ([`super::protocol::handle`]) is a thin `decode → dispatch(typed) →
+//! encode` pipeline over these types, and the first-class client
+//! ([`super::client::Client`]) speaks them directly — nothing in the
+//! repo hand-assembles op JSON strings (the explicit v1-parity test
+//! fixtures excepted).
+//!
+//! ## Versioning
+//!
+//! Requests may carry an optional `"v"` field:
+//!
+//! * **absent or `1`** — v1 semantics.  Reply shapes are byte-identical
+//!   to the historical protocol: success bodies are unchanged, errors
+//!   are `{"ok":false,"error":"<string>"}`, and the admission-control
+//!   rejection keeps its legacy shape
+//!   `{"ok":false,"error":"busy","shard":S,"backlog":N}`.
+//! * **`2`** — structured errors.  Every failure becomes
+//!   `{"ok":false,"error":{"code":…,"message":…,"detail":…?}}` with a
+//!   code from the [`ErrorCode`] taxonomy; `busy` rejections carry
+//!   `detail.shard` / `detail.backlog` / `detail.retry_after_ms` (the
+//!   hint is derived from the queue-wait p50 reservoir in
+//!   [`super::Metrics`]); and the `describe` op becomes available,
+//!   returning the machine-readable op/field schema
+//!   ([`describe_schema`]) that the drift tests snapshot.
+//!
+//! Success reply shapes are identical across versions — only error
+//! encoding and the `describe` op differ, so a v1 client never sees a
+//! byte it does not expect.
+//!
+//! ## Error codes
+//!
+//! | code             | meaning                                              |
+//! |------------------|------------------------------------------------------|
+//! | `bad_request`    | malformed JSON, missing/mistyped/out-of-range fields |
+//! | `unknown_policy` | the named policy is not in the registry              |
+//! | `unknown_op`     | the `"op"` is not one the coordinator serves         |
+//! | `busy`           | admission control rejected the job (shard at bound)  |
+//! | `cancelled`      | the job was cancelled before it produced a result    |
+//! | `evicted`        | the job id is unknown (never existed or evicted)     |
+//! | `internal`       | the job ran and failed                               |
+
+use std::fmt;
+
+use crate::model::System;
+use crate::util::Json;
+
+use super::engine::JobPriority;
+
+/// Protocol version 1: the historical, string-error wire dialect.
+pub const V1: u8 = 1;
+/// Protocol version 2: structured errors + the `describe` op.
+pub const V2: u8 = 2;
+
+/// Ceiling on a wire-supplied relative queue deadline (~1000 days) —
+/// mirrors `config::job_priority_from_json` so both decoders agree.
+const MAX_DEADLINE_MS: u64 = 86_400_000_000;
+
+/// Wire-bounded worker-thread ceiling (0 = auto stays allowed).
+const MAX_THREADS: u64 = 256;
+
+/// Wire-bounded campaign Monte-Carlo fan-out ceiling.
+const MAX_REPLICATIONS: u64 = 4096;
+
+/// Parse a request's protocol version: absent ⇒ v1.
+pub fn version_of(req: &Json) -> Result<u8, ApiError> {
+    match req.get("v") {
+        None => Ok(V1),
+        Some(v) => match v.as_u64() {
+            Some(n @ 1..=2) => Ok(n as u8),
+            _ => Err(ApiError::bad_request(format!("\"v\" must be 1 or 2, got {v}"))),
+        },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Errors.
+
+/// The error taxonomy (see the module docs for the meaning of each).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    BadRequest,
+    UnknownPolicy,
+    UnknownOp,
+    Busy,
+    Cancelled,
+    Evicted,
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::UnknownPolicy => "unknown_policy",
+            ErrorCode::UnknownOp => "unknown_op",
+            ErrorCode::Busy => "busy",
+            ErrorCode::Cancelled => "cancelled",
+            ErrorCode::Evicted => "evicted",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "bad_request" => ErrorCode::BadRequest,
+            "unknown_policy" => ErrorCode::UnknownPolicy,
+            "unknown_op" => ErrorCode::UnknownOp,
+            "busy" => ErrorCode::Busy,
+            "cancelled" => ErrorCode::Cancelled,
+            "evicted" => ErrorCode::Evicted,
+            "internal" => ErrorCode::Internal,
+            _ => return None,
+        })
+    }
+}
+
+/// Every code, in `describe` order.
+pub const ERROR_CODES: &[ErrorCode] = &[
+    ErrorCode::BadRequest,
+    ErrorCode::UnknownPolicy,
+    ErrorCode::UnknownOp,
+    ErrorCode::Busy,
+    ErrorCode::Cancelled,
+    ErrorCode::Evicted,
+    ErrorCode::Internal,
+];
+
+/// A structured protocol error: taxonomy code + human message + optional
+/// machine-readable detail (e.g. `busy` carries shard/backlog/retry).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ApiError {
+    pub code: ErrorCode,
+    pub message: String,
+    pub detail: Option<Json>,
+}
+
+/// The typed form of a `busy` rejection on the client side.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BusyInfo {
+    pub shard: u64,
+    pub backlog: u64,
+    /// Server hint: the queue-wait p50, i.e. roughly how long freshly
+    /// admitted work is currently waiting for a worker.
+    pub retry_after_ms: Option<u64>,
+}
+
+impl ApiError {
+    fn new(code: ErrorCode, message: impl Into<String>) -> Self {
+        Self { code, message: message.into(), detail: None }
+    }
+
+    pub fn bad_request(message: impl Into<String>) -> Self {
+        Self::new(ErrorCode::BadRequest, message)
+    }
+
+    pub fn unknown_policy(message: impl Into<String>) -> Self {
+        Self::new(ErrorCode::UnknownPolicy, message)
+    }
+
+    pub fn unknown_op(message: impl Into<String>) -> Self {
+        Self::new(ErrorCode::UnknownOp, message)
+    }
+
+    pub fn cancelled(message: impl Into<String>) -> Self {
+        Self::new(ErrorCode::Cancelled, message)
+    }
+
+    pub fn evicted(message: impl Into<String>) -> Self {
+        Self::new(ErrorCode::Evicted, message)
+    }
+
+    pub fn internal(message: impl Into<String>) -> Self {
+        Self::new(ErrorCode::Internal, message)
+    }
+
+    /// The admission-control rejection.  `retry_after_ms` is the v2
+    /// hint (callers omit it for v1 requests, whose byte-pinned reply
+    /// never carries it — computing the percentile would be wasted work
+    /// on the load-shed path).
+    pub fn busy(shard: usize, backlog: usize, retry_after_ms: Option<u64>) -> Self {
+        let mut detail = vec![
+            ("shard", Json::num(shard as f64)),
+            ("backlog", Json::num(backlog as f64)),
+        ];
+        if let Some(ms) = retry_after_ms {
+            detail.push(("retry_after_ms", Json::num(ms as f64)));
+        }
+        Self {
+            code: ErrorCode::Busy,
+            message: format!("busy: shard {shard} backlog {backlog} is at its bound"),
+            detail: Some(Json::obj(detail)),
+        }
+    }
+
+    /// The typed busy payload, when this is a `busy` error.
+    pub fn busy_info(&self) -> Option<BusyInfo> {
+        if self.code != ErrorCode::Busy {
+            return None;
+        }
+        let d = self.detail.as_ref()?;
+        Some(BusyInfo {
+            shard: d.get("shard").and_then(Json::as_u64)?,
+            backlog: d.get("backlog").and_then(Json::as_u64)?,
+            retry_after_ms: d.get("retry_after_ms").and_then(Json::as_u64),
+        })
+    }
+
+    /// The v1 error body.  `busy` keeps its exact legacy shape (no
+    /// retry hint: the v1 reply is byte-pinned); everything else is the
+    /// legacy `{"ok":false,"error":"<message>"}` string form.
+    pub fn encode_v1(&self) -> Json {
+        if self.code == ErrorCode::Busy {
+            let info = self.busy_info().unwrap_or(BusyInfo {
+                shard: 0,
+                backlog: 0,
+                retry_after_ms: None,
+            });
+            return Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::str("busy")),
+                ("shard", Json::num(info.shard as f64)),
+                ("backlog", Json::num(info.backlog as f64)),
+            ]);
+        }
+        Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("error", Json::str(&self.message)),
+        ])
+    }
+
+    /// The v2 structured error body.
+    pub fn encode_v2(&self) -> Json {
+        let mut err = vec![
+            ("code", Json::str(self.code.as_str())),
+            ("message", Json::str(&self.message)),
+        ];
+        if let Some(d) = &self.detail {
+            err.push(("detail", d.clone()));
+        }
+        Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::obj(err))])
+    }
+
+    /// Parse an error out of a reply body (either version's shape).
+    /// `None` when the body is not an error (`ok` is not `false`).
+    pub fn decode(body: &Json) -> Option<ApiError> {
+        if body.get("ok") != Some(&Json::Bool(false)) {
+            return None;
+        }
+        match body.get("error") {
+            Some(Json::Obj(_)) => {
+                let e = body.get("error").unwrap();
+                let code = e
+                    .get("code")
+                    .and_then(Json::as_str)
+                    .and_then(ErrorCode::parse)
+                    .unwrap_or(ErrorCode::Internal);
+                Some(ApiError {
+                    code,
+                    message: e
+                        .get("message")
+                        .and_then(Json::as_str)
+                        .unwrap_or("unspecified error")
+                        .to_string(),
+                    detail: e.get("detail").cloned(),
+                })
+            }
+            Some(Json::Str(s)) if s == "busy" => {
+                // Legacy busy shape: shard/backlog ride at the top level.
+                let shard = body.get("shard").and_then(Json::as_u64).unwrap_or(0);
+                let backlog = body.get("backlog").and_then(Json::as_u64).unwrap_or(0);
+                Some(ApiError {
+                    code: ErrorCode::Busy,
+                    message: format!("busy: shard {shard} backlog {backlog} is at its bound"),
+                    detail: Some(Json::obj(vec![
+                        ("shard", Json::num(shard as f64)),
+                        ("backlog", Json::num(backlog as f64)),
+                    ])),
+                })
+            }
+            Some(Json::Str(s)) => Some(ApiError::internal(s.clone())),
+            _ => Some(ApiError::internal("malformed error reply")),
+        }
+    }
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.code.as_str(), self.message)
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+// ---------------------------------------------------------------------------
+// Strict/lenient field readers (string-for-string with the historical
+// parsers, so v1 error messages stay byte-identical).
+
+fn strict_f64(j: &Json, key: &str) -> Result<Option<f64>, ApiError> {
+    j.get(key)
+        .map(|v| {
+            v.as_f64()
+                .ok_or_else(|| {
+                    ApiError::bad_request(format!("\"{key}\" must be a number, got {v}"))
+                })
+        })
+        .transpose()
+}
+
+fn strict_u64(j: &Json, key: &str) -> Result<Option<u64>, ApiError> {
+    j.get(key)
+        .map(|v| {
+            v.as_u64().ok_or_else(|| {
+                ApiError::bad_request(format!("\"{key}\" must be a non-negative integer, got {v}"))
+            })
+        })
+        .transpose()
+}
+
+fn strict_str(j: &Json, key: &str) -> Result<Option<String>, ApiError> {
+    j.get(key)
+        .map(|v| {
+            v.as_str().map(str::to_string).ok_or_else(|| {
+                ApiError::bad_request(format!("\"{key}\" must be a string, got {v}"))
+            })
+        })
+        .transpose()
+}
+
+/// The wire-bounded `threads` knob, shared by every op that carries it
+/// (plan/simulate/campaign via [`SolveParams`], and sweep).
+fn bounded_threads_field(j: &Json) -> Result<Option<u64>, ApiError> {
+    let threads = strict_u64(j, "threads")?;
+    if let Some(t) = threads {
+        if t > MAX_THREADS {
+            return Err(ApiError::bad_request(format!(
+                "threads {t} exceeds the limit of {MAX_THREADS}"
+            )));
+        }
+    }
+    Ok(threads)
+}
+
+// ---------------------------------------------------------------------------
+// Shared request components.
+
+/// Which problem instance a request targets.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SystemSpec {
+    /// `"paper"`, `"paper:<overhead>"` or a JSON file path (resolved
+    /// server-side via `config::load_system`).
+    Named(String),
+    /// An inline system object (`config::system_from_json` schema).
+    Inline(Json),
+}
+
+/// The system selector shared by every planning/simulation op: an
+/// explicit `system`, a named `scenario` preset, or (neither) the
+/// paper's Table I setup with an optional `overhead`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SystemRef {
+    pub system: Option<SystemSpec>,
+    pub scenario: Option<String>,
+    /// Boot overhead for the default (Table I) system; ignored when
+    /// `system`/`scenario` is given.
+    pub overhead: Option<f64>,
+}
+
+impl SystemRef {
+    /// A named scenario preset (see [`crate::workload::scenario`]).
+    pub fn scenario(name: impl Into<String>) -> Self {
+        Self { scenario: Some(name.into()), ..Self::default() }
+    }
+
+    /// A named system (`"paper"`, `"paper:<overhead>"`, file path).
+    pub fn named(name: impl Into<String>) -> Self {
+        Self { system: Some(SystemSpec::Named(name.into())), ..Self::default() }
+    }
+
+    fn decode(j: &Json) -> Result<Self, ApiError> {
+        let system = j.get("system").map(|v| match v {
+            Json::Str(s) => SystemSpec::Named(s.clone()),
+            other => SystemSpec::Inline(other.clone()),
+        });
+        Ok(Self {
+            system,
+            scenario: strict_str(j, "scenario")?,
+            overhead: j.get("overhead").and_then(Json::as_f64),
+        })
+    }
+
+    fn encode_into(&self, fields: &mut Vec<(&'static str, Json)>) {
+        match &self.system {
+            Some(SystemSpec::Named(s)) => fields.push(("system", Json::str(s))),
+            Some(SystemSpec::Inline(j)) => fields.push(("system", j.clone())),
+            None => {}
+        }
+        if let Some(s) = &self.scenario {
+            fields.push(("scenario", Json::str(s)));
+        }
+        if let Some(o) = self.overhead {
+            fields.push(("overhead", Json::num(o)));
+        }
+    }
+
+    /// Build the targeted [`System`].
+    pub fn resolve(&self) -> Result<System, ApiError> {
+        match (&self.scenario, &self.system) {
+            (Some(_), Some(_)) => Err(ApiError::bad_request(
+                "\"scenario\" and \"system\" are mutually exclusive — name one of them",
+            )),
+            (Some(name), None) => crate::workload::build_scenario(name).ok_or_else(|| {
+                ApiError::bad_request(format!(
+                    "unknown scenario {name:?} (known: {})",
+                    crate::workload::scenario_names().join(", ")
+                ))
+            }),
+            (None, Some(SystemSpec::Named(s))) => crate::config::load_system(s)
+                .map_err(|e| ApiError::bad_request(format!("{e:#}"))),
+            (None, Some(SystemSpec::Inline(j))) => crate::config::system_from_json(j)
+                .map_err(|e| ApiError::bad_request(format!("{e:#}"))),
+            (None, None) => Ok(crate::workload::paper::table1_system(
+                self.overhead.unwrap_or(0.0),
+            )),
+        }
+    }
+}
+
+/// Planner-phase overrides (the nested `"planner"` object).  All fields
+/// optional; decoding is lenient like the historical parser.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PlannerOverrides {
+    pub max_iters: Option<u64>,
+    pub replace_k: Option<u64>,
+    pub enable_reduce: Option<bool>,
+    pub enable_add: Option<bool>,
+    pub enable_balance: Option<bool>,
+    pub enable_split: Option<bool>,
+    pub enable_replace: Option<bool>,
+}
+
+impl PlannerOverrides {
+    pub(crate) fn decode(j: &Json) -> Self {
+        let b = |key: &str| j.get(key).and_then(Json::as_bool);
+        Self {
+            max_iters: j.get("max_iters").and_then(Json::as_u64),
+            replace_k: j.get("replace_k").and_then(Json::as_u64),
+            enable_reduce: b("enable_reduce"),
+            enable_add: b("enable_add"),
+            enable_balance: b("enable_balance"),
+            enable_split: b("enable_split"),
+            enable_replace: b("enable_replace"),
+        }
+    }
+
+    fn encode(&self) -> Json {
+        let mut fields = Vec::new();
+        if let Some(n) = self.max_iters {
+            fields.push(("max_iters", Json::num(n as f64)));
+        }
+        if let Some(k) = self.replace_k {
+            fields.push(("replace_k", Json::num(k as f64)));
+        }
+        let mut flag = |key: &'static str, v: Option<bool>| {
+            if let Some(b) = v {
+                fields.push((key, Json::Bool(b)));
+            }
+        };
+        flag("enable_reduce", self.enable_reduce);
+        flag("enable_add", self.enable_add);
+        flag("enable_balance", self.enable_balance);
+        flag("enable_split", self.enable_split);
+        flag("enable_replace", self.enable_replace);
+        Json::obj(fields)
+    }
+
+    /// Apply the overrides to the default [`PlannerConfig`].
+    pub fn to_config(&self) -> crate::scheduler::PlannerConfig {
+        let mut cfg = crate::scheduler::PlannerConfig::default();
+        if let Some(n) = self.max_iters {
+            cfg.max_iters = n as usize;
+        }
+        if let Some(k) = self.replace_k {
+            cfg.replace_k = k as usize;
+        }
+        cfg.enable_reduce = self.enable_reduce.unwrap_or(cfg.enable_reduce);
+        cfg.enable_add = self.enable_add.unwrap_or(cfg.enable_add);
+        cfg.enable_balance = self.enable_balance.unwrap_or(cfg.enable_balance);
+        cfg.enable_split = self.enable_split.unwrap_or(cfg.enable_split);
+        cfg.enable_replace = self.enable_replace.unwrap_or(cfg.enable_replace);
+        cfg
+    }
+}
+
+/// The solver knobs shared by `plan`, `simulate` and `campaign`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SolveParams {
+    pub budget: f64,
+    /// Canonical `"policy"` (decode also accepts the legacy
+    /// `"approach"` spelling; a non-string value is ignored, exactly
+    /// like the historical parser).
+    pub policy: Option<String>,
+    pub deadline: Option<f64>,
+    pub seed: Option<u64>,
+    pub n_starts: Option<u64>,
+    pub perf_jitter: Option<f64>,
+    pub sample_frac: Option<f64>,
+    /// Worker threads (0 = auto), wire-bounded at 256.
+    pub threads: Option<u64>,
+    /// Residual task ids for `"dynamic"` re-planning.
+    pub remaining: Option<Vec<u32>>,
+    pub planner: Option<PlannerOverrides>,
+}
+
+impl SolveParams {
+    pub fn new(budget: f64) -> Self {
+        Self {
+            budget,
+            policy: None,
+            deadline: None,
+            seed: None,
+            n_starts: None,
+            perf_jitter: None,
+            sample_frac: None,
+            threads: None,
+            remaining: None,
+            planner: None,
+        }
+    }
+
+    pub(crate) fn decode(j: &Json) -> Result<Self, ApiError> {
+        // Historical quirk, kept for v1 parity: the legacy wire path
+        // reported a present-but-mistyped budget as missing (its lenient
+        // `budget_of` ran before the strict knob parser could object).
+        let budget = j
+            .get("budget")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| ApiError::bad_request("missing \"budget\""))?;
+        let policy = j
+            .get("policy")
+            .or_else(|| j.get("approach"))
+            .and_then(Json::as_str)
+            .map(str::to_string);
+        let perf_jitter = strict_f64(j, "perf_jitter")?;
+        if let Some(x) = perf_jitter {
+            if !(0.0..1.0).contains(&x) {
+                return Err(ApiError::bad_request(format!(
+                    "perf_jitter must be in [0, 1), got {x}"
+                )));
+            }
+        }
+        let sample_frac = strict_f64(j, "sample_frac")?;
+        if let Some(f) = sample_frac {
+            if !(f > 0.0 && f <= 1.0) {
+                return Err(ApiError::bad_request(format!(
+                    "sample_frac must be in (0, 1], got {f}"
+                )));
+            }
+        }
+        let threads = bounded_threads_field(j)?;
+        let remaining = match j.get("remaining") {
+            None => None,
+            Some(r) => {
+                let arr = r.as_arr().ok_or_else(|| {
+                    ApiError::bad_request(format!(
+                        "\"remaining\" must be an array of task ids, got {r}"
+                    ))
+                })?;
+                if arr.is_empty() {
+                    return Err(ApiError::bad_request(
+                        "\"remaining\" must name at least one task (omit it for the full workload)",
+                    ));
+                }
+                let ids: Vec<u32> = arr
+                    .iter()
+                    .map(|v| {
+                        let t = v.as_u64().ok_or_else(|| {
+                            ApiError::bad_request(format!(
+                                "\"remaining\" task id must be a non-negative integer, got {v}"
+                            ))
+                        })?;
+                        if t > u64::from(u32::MAX) {
+                            return Err(ApiError::bad_request(format!(
+                                "\"remaining\" task id {t} out of range"
+                            )));
+                        }
+                        Ok(t as u32)
+                    })
+                    .collect::<Result<_, ApiError>>()?;
+                Some(ids)
+            }
+        };
+        Ok(Self {
+            budget,
+            policy,
+            deadline: strict_f64(j, "deadline")?,
+            seed: strict_u64(j, "seed")?,
+            n_starts: strict_u64(j, "n_starts")?,
+            perf_jitter,
+            sample_frac,
+            threads,
+            remaining,
+            planner: j.get("planner").map(PlannerOverrides::decode),
+        })
+    }
+
+    fn encode_into(&self, fields: &mut Vec<(&'static str, Json)>) {
+        fields.push(("budget", Json::num(self.budget)));
+        if let Some(p) = &self.policy {
+            fields.push(("policy", Json::str(p)));
+        }
+        if let Some(d) = self.deadline {
+            fields.push(("deadline", Json::num(d)));
+        }
+        if let Some(s) = self.seed {
+            fields.push(("seed", Json::num(s as f64)));
+        }
+        if let Some(n) = self.n_starts {
+            fields.push(("n_starts", Json::num(n as f64)));
+        }
+        if let Some(x) = self.perf_jitter {
+            fields.push(("perf_jitter", Json::num(x)));
+        }
+        if let Some(f) = self.sample_frac {
+            fields.push(("sample_frac", Json::num(f)));
+        }
+        if let Some(t) = self.threads {
+            fields.push(("threads", Json::num(t as f64)));
+        }
+        if let Some(r) = &self.remaining {
+            fields.push(("remaining", Json::arr(r.iter().map(|t| Json::num(f64::from(*t))))));
+        }
+        if let Some(p) = &self.planner {
+            fields.push(("planner", p.encode()));
+        }
+    }
+
+    /// Build the in-process [`crate::scheduler::SolveRequest`] these
+    /// knobs describe (evaluator/cancel handles attached by the caller).
+    pub fn solve_request(&self) -> crate::scheduler::SolveRequest<'static> {
+        let mut req = crate::scheduler::SolveRequest::new(self.budget);
+        if let Some(d) = self.deadline {
+            req = req.with_deadline(d);
+        }
+        if let Some(s) = self.seed {
+            req = req.with_seed(s);
+        }
+        if let Some(n) = self.n_starts {
+            req = req.with_starts(n as usize);
+        }
+        if let Some(x) = self.perf_jitter {
+            req = req.with_perf_jitter(x);
+        }
+        if let Some(f) = self.sample_frac {
+            req = req.with_sample_frac(f);
+        }
+        if let Some(t) = self.threads {
+            req = req.with_threads(t as usize);
+        }
+        if let Some(r) = &self.remaining {
+            req = req.with_remaining(r.iter().map(|t| crate::model::TaskId(*t)).collect());
+        }
+        if let Some(p) = &self.planner {
+            req = req.with_planner(p.to_config());
+        }
+        req
+    }
+}
+
+/// The simulator noise model (lenient decode, like the historical
+/// parser: mistyped fields fall back to their defaults).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct NoiseSpec {
+    pub task_sigma: Option<f64>,
+    pub boot_sigma: Option<f64>,
+    pub mean_lifetime: Option<f64>,
+}
+
+impl NoiseSpec {
+    pub(crate) fn decode(j: &Json) -> Self {
+        Self {
+            task_sigma: j.get("task_sigma").and_then(Json::as_f64),
+            boot_sigma: j.get("boot_sigma").and_then(Json::as_f64),
+            mean_lifetime: j.get("mean_lifetime").and_then(Json::as_f64),
+        }
+    }
+
+    fn encode(&self) -> Json {
+        let mut fields = Vec::new();
+        if let Some(x) = self.task_sigma {
+            fields.push(("task_sigma", Json::num(x)));
+        }
+        if let Some(x) = self.boot_sigma {
+            fields.push(("boot_sigma", Json::num(x)));
+        }
+        if let Some(x) = self.mean_lifetime {
+            fields.push(("mean_lifetime", Json::num(x)));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn model(&self) -> crate::cloudsim::NoiseModel {
+        crate::cloudsim::NoiseModel {
+            task_sigma: self.task_sigma.unwrap_or(0.0),
+            boot_sigma: self.boot_sigma.unwrap_or(0.0),
+            mean_lifetime: self.mean_lifetime,
+        }
+    }
+}
+
+/// Queue placement of an engine-bound request (`submit`, sync
+/// `sweep`/`campaign`): `priority` 0..=9 and a relative `deadline_ms`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Placement {
+    pub priority: Option<u64>,
+    pub deadline_ms: Option<u64>,
+}
+
+impl Placement {
+    pub(crate) fn decode(j: &Json) -> Result<Self, ApiError> {
+        let priority = strict_u64(j, "priority")?;
+        if let Some(p) = priority {
+            if p > 9 {
+                return Err(ApiError::bad_request(format!(
+                    "\"priority\" must be in 0..=9, got {p}"
+                )));
+            }
+        }
+        let deadline_ms = strict_u64(j, "deadline_ms")?;
+        if let Some(d) = deadline_ms {
+            if d > MAX_DEADLINE_MS {
+                return Err(ApiError::bad_request(format!(
+                    "\"deadline_ms\" {d} exceeds the limit of {MAX_DEADLINE_MS}"
+                )));
+            }
+        }
+        Ok(Self { priority, deadline_ms })
+    }
+
+    fn encode_into(&self, fields: &mut Vec<(&'static str, Json)>) {
+        if let Some(p) = self.priority {
+            fields.push(("priority", Json::num(p as f64)));
+        }
+        if let Some(d) = self.deadline_ms {
+            fields.push(("deadline_ms", Json::num(d as f64)));
+        }
+    }
+
+    /// The engine's queue-placement struct.
+    pub fn job_priority(&self) -> JobPriority {
+        JobPriority {
+            priority: self.priority.unwrap_or(0) as u8,
+            deadline_ms: self.deadline_ms,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Requests: one struct per op.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanRequest {
+    pub params: SolveParams,
+    pub target: SystemRef,
+    /// Include the full task-level assignment in the reply.
+    pub detail: bool,
+}
+
+impl PlanRequest {
+    pub fn new(budget: f64) -> Self {
+        Self { params: SolveParams::new(budget), target: SystemRef::default(), detail: false }
+    }
+
+    pub fn with_policy(mut self, policy: impl Into<String>) -> Self {
+        self.params.policy = Some(policy.into());
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: f64) -> Self {
+        self.params.deadline = Some(deadline);
+        self
+    }
+
+    pub fn with_threads(mut self, threads: u64) -> Self {
+        self.params.threads = Some(threads);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.params.seed = Some(seed);
+        self
+    }
+
+    pub fn with_target(mut self, target: SystemRef) -> Self {
+        self.target = target;
+        self
+    }
+
+    pub fn with_detail(mut self) -> Self {
+        self.detail = true;
+        self
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimulateRequest {
+    pub params: SolveParams,
+    pub target: SystemRef,
+    pub noise: Option<NoiseSpec>,
+}
+
+impl SimulateRequest {
+    pub fn new(budget: f64) -> Self {
+        Self { params: SolveParams::new(budget), target: SystemRef::default(), noise: None }
+    }
+
+    pub fn with_noise(mut self, noise: NoiseSpec) -> Self {
+        self.noise = Some(noise);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.params.seed = Some(seed);
+        self
+    }
+
+    pub fn with_target(mut self, target: SystemRef) -> Self {
+        self.target = target;
+        self
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SweepRequest {
+    pub target: SystemRef,
+    /// `None` = the paper's budget grid.
+    pub budgets: Option<Vec<f64>>,
+    pub threads: Option<u64>,
+    pub placement: Placement,
+}
+
+impl SweepRequest {
+    pub fn with_budgets(mut self, budgets: Vec<f64>) -> Self {
+        self.budgets = Some(budgets);
+        self
+    }
+
+    pub fn with_threads(mut self, threads: u64) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CampaignRequest {
+    pub params: SolveParams,
+    pub target: SystemRef,
+    pub noise: Option<NoiseSpec>,
+    pub max_rounds: Option<u64>,
+    /// Monte-Carlo replications (1 = a single closed-loop campaign).
+    pub replications: Option<u64>,
+    pub placement: Placement,
+}
+
+impl CampaignRequest {
+    pub fn new(budget: f64) -> Self {
+        Self {
+            params: SolveParams::new(budget),
+            target: SystemRef::default(),
+            noise: None,
+            max_rounds: None,
+            replications: None,
+            placement: Placement::default(),
+        }
+    }
+
+    pub fn with_policy(mut self, policy: impl Into<String>) -> Self {
+        self.params.policy = Some(policy.into());
+        self
+    }
+
+    pub fn with_noise(mut self, noise: NoiseSpec) -> Self {
+        self.noise = Some(noise);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.params.seed = Some(seed);
+        self
+    }
+
+    pub fn with_max_rounds(mut self, rounds: u64) -> Self {
+        self.max_rounds = Some(rounds);
+        self
+    }
+
+    pub fn with_replications(mut self, n: u64) -> Self {
+        self.replications = Some(n);
+        self
+    }
+
+    pub fn with_threads(mut self, threads: u64) -> Self {
+        self.params.threads = Some(threads);
+        self
+    }
+
+    pub fn with_target(mut self, target: SystemRef) -> Self {
+        self.target = target;
+        self
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct EstimatePerfRequest {
+    pub target: SystemRef,
+    pub per_cell: Option<u64>,
+    pub noise: Option<NoiseSpec>,
+    pub seed: Option<u64>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmitRequest {
+    /// The inner request to run asynchronously (decoded when the job
+    /// executes; only its `"op"` is validated at submit time, exactly
+    /// like the historical behaviour).
+    pub job: Json,
+    pub placement: Placement,
+}
+
+impl SubmitRequest {
+    /// Wrap a typed request as an async job.
+    pub fn from_request(job: &Request, placement: Placement) -> Self {
+        Self { job: job.encode(), placement }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatusRequest {
+    pub job_id: String,
+    /// Streaming cursor: the previous reply's `partials_next`.
+    pub partials_from: Option<u64>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CancelRequest {
+    pub job_id: String,
+}
+
+/// A decoded coordinator request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Ping,
+    Stats,
+    Shutdown,
+    Jobs,
+    ListPolicies,
+    ListScenarios,
+    /// v2 only: the machine-readable op/field schema.
+    Describe,
+    Plan(PlanRequest),
+    Simulate(SimulateRequest),
+    Sweep(SweepRequest),
+    Campaign(CampaignRequest),
+    EstimatePerf(EstimatePerfRequest),
+    Submit(SubmitRequest),
+    Status(StatusRequest),
+    Cancel(CancelRequest),
+}
+
+impl Request {
+    /// The wire op name.
+    pub fn op(&self) -> &'static str {
+        match self {
+            Request::Ping => "ping",
+            Request::Stats => "stats",
+            Request::Shutdown => "shutdown",
+            Request::Jobs => "jobs",
+            Request::ListPolicies => "list_policies",
+            Request::ListScenarios => "list_scenarios",
+            Request::Describe => "describe",
+            Request::Plan(_) => "plan",
+            Request::Simulate(_) => "simulate",
+            Request::Sweep(_) => "sweep",
+            Request::Campaign(_) => "campaign",
+            Request::EstimatePerf(_) => "estimate_perf",
+            Request::Submit(_) => "submit",
+            Request::Status(_) => "status",
+            Request::Cancel(_) => "cancel",
+        }
+    }
+
+    /// The request's policy name, when the op carries one.
+    pub fn policy(&self) -> Option<&str> {
+        match self {
+            Request::Plan(r) => r.params.policy.as_deref(),
+            Request::Simulate(r) => r.params.policy.as_deref(),
+            Request::Campaign(r) => r.params.policy.as_deref(),
+            _ => None,
+        }
+    }
+
+    /// Decode a parsed request object.  Field validation errors carry
+    /// the exact historical message strings (pinned by the v1 parity
+    /// tests); for a request with *several* invalid fields the one
+    /// reported first may differ from the legacy parser, which
+    /// interleaved field checks with dispatch-time work.  One deliberate
+    /// tightening: `priority`/`deadline_ms` on a sweep/campaign are now
+    /// validated wherever the request appears — including inside an
+    /// async `submit` job object, where the legacy path silently
+    /// ignored them (placement rides on the *outer* submit).
+    pub fn decode(j: &Json) -> Result<Request, ApiError> {
+        let op = j
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or_else(|| ApiError::bad_request("missing \"op\""))?;
+        Ok(match op {
+            "ping" => Request::Ping,
+            "stats" => Request::Stats,
+            "shutdown" => Request::Shutdown,
+            "jobs" => Request::Jobs,
+            "list_policies" => Request::ListPolicies,
+            "list_scenarios" => Request::ListScenarios,
+            "describe" => Request::Describe,
+            "plan" => Request::Plan(PlanRequest {
+                params: SolveParams::decode(j)?,
+                target: SystemRef::decode(j)?,
+                detail: j.get("detail").and_then(Json::as_bool).unwrap_or(false),
+            }),
+            "simulate" => Request::Simulate(SimulateRequest {
+                params: SolveParams::decode(j)?,
+                target: SystemRef::decode(j)?,
+                noise: j.get("noise").map(NoiseSpec::decode),
+            }),
+            "sweep" => Request::Sweep(SweepRequest {
+                target: SystemRef::decode(j)?,
+                budgets: j
+                    .get("budgets")
+                    .and_then(Json::as_arr)
+                    .map(|arr| arr.iter().filter_map(Json::as_f64).collect()),
+                threads: bounded_threads_field(j)?,
+                placement: Placement::decode(j)?,
+            }),
+            "campaign" => {
+                let replications = strict_u64(j, "replications")?;
+                if let Some(r) = replications {
+                    if r > MAX_REPLICATIONS {
+                        return Err(ApiError::bad_request(format!(
+                            "replications {r} exceeds the limit of {MAX_REPLICATIONS}"
+                        )));
+                    }
+                }
+                Request::Campaign(CampaignRequest {
+                    params: SolveParams::decode(j)?,
+                    target: SystemRef::decode(j)?,
+                    noise: j.get("noise").map(NoiseSpec::decode),
+                    max_rounds: j.get("max_rounds").and_then(Json::as_u64),
+                    replications,
+                    placement: Placement::decode(j)?,
+                })
+            }
+            "estimate_perf" => Request::EstimatePerf(EstimatePerfRequest {
+                target: SystemRef::decode(j)?,
+                per_cell: j.get("per_cell").and_then(Json::as_u64),
+                noise: j.get("noise").map(NoiseSpec::decode),
+                seed: j.get("seed").and_then(Json::as_u64),
+            }),
+            "submit" => {
+                let job = j
+                    .get("job")
+                    .ok_or_else(|| ApiError::bad_request("submit: missing \"job\" object"))?
+                    .clone();
+                let inner_op = job
+                    .get("op")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| ApiError::bad_request("submit: job missing \"op\""))?;
+                if matches!(inner_op, "submit" | "shutdown" | "status" | "jobs" | "cancel") {
+                    return Err(ApiError::bad_request(format!(
+                        "submit: op {inner_op:?} cannot run as a job"
+                    )));
+                }
+                Request::Submit(SubmitRequest { job, placement: Placement::decode(j)? })
+            }
+            "status" => Request::Status(StatusRequest {
+                job_id: j
+                    .get("job_id")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| ApiError::bad_request("status: missing \"job_id\""))?
+                    .to_string(),
+                partials_from: strict_u64(j, "partials_from")?,
+            }),
+            "cancel" => Request::Cancel(CancelRequest {
+                job_id: j
+                    .get("job_id")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| ApiError::bad_request("cancel: missing \"job_id\""))?
+                    .to_string(),
+            }),
+            _ => {
+                return Err(ApiError::unknown_op(
+                    "no such op (try list_policies, list_scenarios, describe, plan, sweep, \
+                     simulate, campaign, estimate_perf, submit, status, jobs, cancel, stats, \
+                     ping, shutdown)",
+                ))
+            }
+        })
+    }
+
+    /// Encode to the canonical wire object (no `"v"`; see
+    /// [`Request::encode_versioned`]).
+    pub fn encode(&self) -> Json {
+        let mut fields: Vec<(&'static str, Json)> = vec![("op", Json::str(self.op()))];
+        match self {
+            Request::Ping
+            | Request::Stats
+            | Request::Shutdown
+            | Request::Jobs
+            | Request::ListPolicies
+            | Request::ListScenarios
+            | Request::Describe => {}
+            Request::Plan(r) => {
+                r.params.encode_into(&mut fields);
+                r.target.encode_into(&mut fields);
+                if r.detail {
+                    fields.push(("detail", Json::Bool(true)));
+                }
+            }
+            Request::Simulate(r) => {
+                r.params.encode_into(&mut fields);
+                r.target.encode_into(&mut fields);
+                if let Some(n) = &r.noise {
+                    fields.push(("noise", n.encode()));
+                }
+            }
+            Request::Sweep(r) => {
+                r.target.encode_into(&mut fields);
+                if let Some(b) = &r.budgets {
+                    fields.push(("budgets", Json::arr(b.iter().map(|x| Json::num(*x)))));
+                }
+                if let Some(t) = r.threads {
+                    fields.push(("threads", Json::num(t as f64)));
+                }
+                r.placement.encode_into(&mut fields);
+            }
+            Request::Campaign(r) => {
+                r.params.encode_into(&mut fields);
+                r.target.encode_into(&mut fields);
+                if let Some(n) = &r.noise {
+                    fields.push(("noise", n.encode()));
+                }
+                if let Some(m) = r.max_rounds {
+                    fields.push(("max_rounds", Json::num(m as f64)));
+                }
+                if let Some(n) = r.replications {
+                    fields.push(("replications", Json::num(n as f64)));
+                }
+                r.placement.encode_into(&mut fields);
+            }
+            Request::EstimatePerf(r) => {
+                r.target.encode_into(&mut fields);
+                if let Some(n) = r.per_cell {
+                    fields.push(("per_cell", Json::num(n as f64)));
+                }
+                if let Some(n) = &r.noise {
+                    fields.push(("noise", n.encode()));
+                }
+                if let Some(s) = r.seed {
+                    fields.push(("seed", Json::num(s as f64)));
+                }
+            }
+            Request::Submit(r) => {
+                r.placement.encode_into(&mut fields);
+                fields.push(("job", r.job.clone()));
+            }
+            Request::Status(r) => {
+                fields.push(("job_id", Json::str(&r.job_id)));
+                if let Some(f) = r.partials_from {
+                    fields.push(("partials_from", Json::num(f as f64)));
+                }
+            }
+            Request::Cancel(r) => {
+                fields.push(("job_id", Json::str(&r.job_id)));
+            }
+        }
+        Json::obj(fields)
+    }
+
+    /// Encode with an explicit protocol version field.
+    pub fn encode_versioned(&self, v: u8) -> Json {
+        let mut j = self.encode();
+        if let Json::Obj(m) = &mut j {
+            m.insert("v".into(), Json::num(f64::from(v)));
+        }
+        j
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Responses: one struct per op, encoding to the exact historical shapes.
+
+fn need<'a>(j: &'a Json, key: &str) -> Result<&'a Json, String> {
+    j.get(key).ok_or_else(|| format!("reply missing \"{key}\": {j}"))
+}
+
+fn need_f64(j: &Json, key: &str) -> Result<f64, String> {
+    need(j, key)?.as_f64().ok_or_else(|| format!("reply field \"{key}\" not a number"))
+}
+
+fn need_u64(j: &Json, key: &str) -> Result<u64, String> {
+    need(j, key)?.as_u64().ok_or_else(|| format!("reply field \"{key}\" not an integer"))
+}
+
+fn need_str(j: &Json, key: &str) -> Result<String, String> {
+    Ok(need(j, key)?
+        .as_str()
+        .ok_or_else(|| format!("reply field \"{key}\" not a string"))?
+        .to_string())
+}
+
+fn need_bool(j: &Json, key: &str) -> Result<bool, String> {
+    need(j, key)?.as_bool().ok_or_else(|| format!("reply field \"{key}\" not a bool"))
+}
+
+/// A registered policy, as listed by `list_policies`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PolicyInfo {
+    pub name: String,
+    pub description: String,
+}
+
+/// A named scenario, as listed by `list_scenarios`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScenarioInfo {
+    pub name: String,
+    pub description: String,
+}
+
+/// One VM row of a `plan` reply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VmRow {
+    pub instance_type: String,
+    pub tasks: u64,
+    pub exec: f64,
+    pub cost: f64,
+}
+
+/// The `plan` reply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanResponse {
+    pub policy: String,
+    /// Legacy field: the historical spelling of the policy name.
+    pub approach: String,
+    pub budget: f64,
+    pub effective_budget: f64,
+    pub makespan: f64,
+    pub cost: f64,
+    pub feasible: bool,
+    pub iterations: u64,
+    pub probes: u64,
+    pub vms: Vec<VmRow>,
+    /// Full task-level assignment (`detail: true` requests only).
+    pub plan: Option<Json>,
+}
+
+impl PlanResponse {
+    pub fn decode(j: &Json) -> Result<Self, String> {
+        let vms = need(j, "vms")?
+            .as_arr()
+            .ok_or("reply field \"vms\" not an array")?
+            .iter()
+            .map(|vm| {
+                Ok(VmRow {
+                    instance_type: need_str(vm, "instance_type")?,
+                    tasks: need_u64(vm, "tasks")?,
+                    exec: need_f64(vm, "exec")?,
+                    cost: need_f64(vm, "cost")?,
+                })
+            })
+            .collect::<Result<_, String>>()?;
+        Ok(Self {
+            policy: need_str(j, "policy")?,
+            approach: need_str(j, "approach")?,
+            budget: need_f64(j, "budget")?,
+            effective_budget: need_f64(j, "effective_budget")?,
+            makespan: need_f64(j, "makespan")?,
+            cost: need_f64(j, "cost")?,
+            feasible: need_bool(j, "feasible")?,
+            iterations: need_u64(j, "iterations")?,
+            probes: need_u64(j, "probes")?,
+            vms,
+            plan: j.get("plan").cloned(),
+        })
+    }
+}
+
+/// The `simulate` reply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimulateResponse {
+    pub policy: String,
+    pub planned_feasible: bool,
+    pub makespan: f64,
+    pub cost: f64,
+    pub completed: u64,
+    pub stranded: u64,
+    pub failures: u64,
+}
+
+impl SimulateResponse {
+    pub fn decode(j: &Json) -> Result<Self, String> {
+        Ok(Self {
+            policy: need_str(j, "policy")?,
+            planned_feasible: need_bool(j, "planned_feasible")?,
+            makespan: need_f64(j, "makespan")?,
+            cost: need_f64(j, "cost")?,
+            completed: need_u64(j, "completed")?,
+            stranded: need_u64(j, "stranded")?,
+            failures: need_u64(j, "failures")?,
+        })
+    }
+}
+
+/// The `sweep` reply: the full report object (schema documented in
+/// `analysis::report`; kept as a payload because it nests per-cell rows
+/// that downstream tooling consumes as JSON anyway).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepResponse {
+    pub sweep: Json,
+}
+
+impl SweepResponse {
+    pub fn decode(j: &Json) -> Result<Self, String> {
+        Ok(Self { sweep: need(j, "sweep")?.clone() })
+    }
+}
+
+/// One Monte-Carlo replication row of a replicated `campaign` reply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunRow {
+    pub wall_clock: f64,
+    pub spent: f64,
+    pub complete: bool,
+    pub within_budget: bool,
+    pub rounds: u64,
+}
+
+impl RunRow {
+    fn decode(j: &Json) -> Result<Self, String> {
+        Ok(Self {
+            wall_clock: need_f64(j, "wall_clock")?,
+            spent: need_f64(j, "spent")?,
+            complete: need_bool(j, "complete")?,
+            within_budget: need_bool(j, "within_budget")?,
+            rounds: need_u64(j, "rounds")?,
+        })
+    }
+
+    fn encode(&self) -> Json {
+        Json::obj(vec![
+            ("wall_clock", Json::num(self.wall_clock)),
+            ("spent", Json::num(self.spent)),
+            ("complete", Json::Bool(self.complete)),
+            ("within_budget", Json::Bool(self.within_budget)),
+            ("rounds", Json::num(self.rounds as f64)),
+        ])
+    }
+}
+
+/// The `campaign` reply: a single closed-loop run, or a Monte-Carlo
+/// aggregate over `replications` runs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CampaignResponse {
+    Single {
+        policy: String,
+        wall_clock: f64,
+        spent: f64,
+        complete: bool,
+        within_budget: bool,
+        rounds: u64,
+        planned_makespan: f64,
+        cancelled: bool,
+    },
+    Replicated {
+        policy: String,
+        replications: u64,
+        cancelled: bool,
+        /// Absent only when a cancel fired before any replication ran.
+        summary: Option<ReplicationSummary>,
+    },
+}
+
+/// The aggregate block of a replicated campaign.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplicationSummary {
+    pub complete_frac: f64,
+    pub within_budget_frac: f64,
+    pub mean_wall_clock: f64,
+    pub mean_spent: f64,
+    pub runs: Vec<RunRow>,
+}
+
+impl CampaignResponse {
+    pub fn decode(j: &Json) -> Result<Self, String> {
+        let cancelled = j.get("cancelled").and_then(Json::as_bool).unwrap_or(false);
+        if j.get("replications").is_some() {
+            let summary = if j.get("runs").is_some() {
+                Some(ReplicationSummary {
+                    complete_frac: need_f64(j, "complete_frac")?,
+                    within_budget_frac: need_f64(j, "within_budget_frac")?,
+                    mean_wall_clock: need_f64(j, "mean_wall_clock")?,
+                    mean_spent: need_f64(j, "mean_spent")?,
+                    runs: need(j, "runs")?
+                        .as_arr()
+                        .ok_or("reply field \"runs\" not an array")?
+                        .iter()
+                        .map(RunRow::decode)
+                        .collect::<Result<_, String>>()?,
+                })
+            } else {
+                None
+            };
+            return Ok(CampaignResponse::Replicated {
+                policy: need_str(j, "policy")?,
+                replications: need_u64(j, "replications")?,
+                cancelled,
+                summary,
+            });
+        }
+        Ok(CampaignResponse::Single {
+            policy: need_str(j, "policy")?,
+            wall_clock: need_f64(j, "wall_clock")?,
+            spent: need_f64(j, "spent")?,
+            complete: need_bool(j, "complete")?,
+            within_budget: need_bool(j, "within_budget")?,
+            rounds: need_u64(j, "rounds")?,
+            planned_makespan: need_f64(j, "planned_makespan")?,
+            cancelled,
+        })
+    }
+}
+
+/// The `estimate_perf` reply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EstimatePerfResponse {
+    pub samples: u64,
+    pub estimate: Vec<f64>,
+    pub max_rel_error: f64,
+}
+
+impl EstimatePerfResponse {
+    pub fn decode(j: &Json) -> Result<Self, String> {
+        Ok(Self {
+            samples: need_u64(j, "samples")?,
+            estimate: need(j, "estimate")?
+                .as_arr()
+                .ok_or("reply field \"estimate\" not an array")?
+                .iter()
+                .map(|v| v.as_f64().ok_or_else(|| "non-numeric estimate entry".to_string()))
+                .collect::<Result<_, String>>()?,
+            max_rel_error: need_f64(j, "max_rel_error")?,
+        })
+    }
+}
+
+/// One shard's queue gauges in a `stats` reply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardRow {
+    pub shard: u64,
+    pub depth: u64,
+    pub high_water: u64,
+    pub rejected: u64,
+}
+
+/// The engine block of a `stats` reply.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EngineInfo {
+    pub shards: u64,
+    pub queued: u64,
+    pub max_backlog: u64,
+    pub shard_stats: Vec<ShardRow>,
+}
+
+/// The `stats` reply: request/job metrics (schema owned by
+/// [`super::Metrics::snapshot`]) plus the typed engine gauges.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatsResponse {
+    pub stats: Json,
+    pub engine: EngineInfo,
+}
+
+impl StatsResponse {
+    pub fn decode(j: &Json) -> Result<Self, String> {
+        let e = need(j, "engine")?;
+        let shard_stats = need(e, "shard_stats")?
+            .as_arr()
+            .ok_or("reply field \"shard_stats\" not an array")?
+            .iter()
+            .map(|s| {
+                Ok(ShardRow {
+                    shard: need_u64(s, "shard")?,
+                    depth: need_u64(s, "depth")?,
+                    high_water: need_u64(s, "high_water")?,
+                    rejected: need_u64(s, "rejected")?,
+                })
+            })
+            .collect::<Result<_, String>>()?;
+        Ok(Self {
+            stats: need(j, "stats")?.clone(),
+            engine: EngineInfo {
+                shards: need_u64(e, "shards")?,
+                queued: need_u64(e, "queued")?,
+                max_backlog: need_u64(e, "max_backlog")?,
+                shard_stats,
+            },
+        })
+    }
+}
+
+/// A decoded coordinator reply.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Pong,
+    Bye,
+    Policies(Vec<PolicyInfo>),
+    Scenarios(Vec<ScenarioInfo>),
+    /// The `describe` reply: the op/field schema ([`describe_schema`]).
+    Schema(Json),
+    Plan(Box<PlanResponse>),
+    Simulate(SimulateResponse),
+    Sweep(SweepResponse),
+    Campaign(CampaignResponse),
+    EstimatePerf(EstimatePerfResponse),
+    Stats(StatsResponse),
+    Submitted { job_id: String },
+    /// The `status` reply: the job object (schema owned by
+    /// [`super::state::JobRegistry`]; `super::client::JobStatus` is the
+    /// typed view).
+    Status { job: Json },
+    Jobs { jobs: Json },
+    Cancelled { cancelled: bool },
+}
+
+impl Response {
+    /// Whether this reply instructs the server to shut down.
+    pub fn is_shutdown(&self) -> bool {
+        matches!(self, Response::Bye)
+    }
+
+    /// Encode to the wire body.  Shapes are byte-identical to the
+    /// historical per-op builders (object keys sort, so field order is
+    /// canonical by construction).
+    pub fn encode(&self) -> Json {
+        let ok = ("ok", Json::Bool(true));
+        match self {
+            Response::Pong => Json::obj(vec![ok, ("pong", Json::Bool(true))]),
+            Response::Bye => Json::obj(vec![ok, ("bye", Json::Bool(true))]),
+            Response::Policies(ps) => Json::obj(vec![
+                ok,
+                (
+                    "policies",
+                    Json::arr(ps.iter().map(|p| {
+                        Json::obj(vec![
+                            ("name", Json::str(&p.name)),
+                            ("description", Json::str(&p.description)),
+                        ])
+                    })),
+                ),
+            ]),
+            Response::Scenarios(ss) => Json::obj(vec![
+                ok,
+                (
+                    "scenarios",
+                    Json::arr(ss.iter().map(|s| {
+                        Json::obj(vec![
+                            ("name", Json::str(&s.name)),
+                            ("description", Json::str(&s.description)),
+                        ])
+                    })),
+                ),
+            ]),
+            Response::Schema(schema) => Json::obj(vec![ok, ("schema", schema.clone())]),
+            Response::Plan(r) => {
+                let mut fields = vec![
+                    ok,
+                    ("policy", Json::str(&r.policy)),
+                    ("approach", Json::str(&r.approach)),
+                    ("budget", Json::num(r.budget)),
+                    ("effective_budget", Json::num(r.effective_budget)),
+                    ("makespan", Json::num(r.makespan)),
+                    ("cost", Json::num(r.cost)),
+                    ("feasible", Json::Bool(r.feasible)),
+                    ("iterations", Json::num(r.iterations as f64)),
+                    ("probes", Json::num(r.probes as f64)),
+                    ("n_vms", Json::num(r.vms.len() as f64)),
+                    (
+                        "vms",
+                        Json::arr(r.vms.iter().map(|vm| {
+                            Json::obj(vec![
+                                ("instance_type", Json::str(&vm.instance_type)),
+                                ("tasks", Json::num(vm.tasks as f64)),
+                                ("exec", Json::num(vm.exec)),
+                                ("cost", Json::num(vm.cost)),
+                            ])
+                        })),
+                    ),
+                ];
+                if let Some(plan) = &r.plan {
+                    fields.push(("plan", plan.clone()));
+                }
+                Json::obj(fields)
+            }
+            Response::Simulate(r) => Json::obj(vec![
+                ok,
+                ("policy", Json::str(&r.policy)),
+                ("planned_feasible", Json::Bool(r.planned_feasible)),
+                ("makespan", Json::num(r.makespan)),
+                ("cost", Json::num(r.cost)),
+                ("completed", Json::num(r.completed as f64)),
+                ("stranded", Json::num(r.stranded as f64)),
+                ("failures", Json::num(r.failures as f64)),
+            ]),
+            Response::Sweep(r) => Json::obj(vec![ok, ("sweep", r.sweep.clone())]),
+            Response::Campaign(CampaignResponse::Single {
+                policy,
+                wall_clock,
+                spent,
+                complete,
+                within_budget,
+                rounds,
+                planned_makespan,
+                cancelled,
+            }) => {
+                let mut fields = vec![
+                    ok,
+                    ("policy", Json::str(policy)),
+                    ("wall_clock", Json::num(*wall_clock)),
+                    ("spent", Json::num(*spent)),
+                    ("complete", Json::Bool(*complete)),
+                    ("within_budget", Json::Bool(*within_budget)),
+                    ("rounds", Json::num(*rounds as f64)),
+                    ("planned_makespan", Json::num(*planned_makespan)),
+                ];
+                if *cancelled {
+                    fields.push(("cancelled", Json::Bool(true)));
+                }
+                Json::obj(fields)
+            }
+            Response::Campaign(CampaignResponse::Replicated {
+                policy,
+                replications,
+                cancelled,
+                summary,
+            }) => {
+                let mut fields = vec![
+                    ok,
+                    ("policy", Json::str(policy)),
+                    ("replications", Json::num(*replications as f64)),
+                ];
+                if *cancelled {
+                    fields.push(("cancelled", Json::Bool(true)));
+                }
+                if let Some(s) = summary {
+                    fields.extend([
+                        ("complete_frac", Json::num(s.complete_frac)),
+                        ("within_budget_frac", Json::num(s.within_budget_frac)),
+                        ("mean_wall_clock", Json::num(s.mean_wall_clock)),
+                        ("mean_spent", Json::num(s.mean_spent)),
+                        ("runs", Json::arr(s.runs.iter().map(RunRow::encode))),
+                    ]);
+                }
+                Json::obj(fields)
+            }
+            Response::EstimatePerf(r) => Json::obj(vec![
+                ok,
+                ("samples", Json::num(r.samples as f64)),
+                ("estimate", Json::arr(r.estimate.iter().map(|p| Json::num(*p)))),
+                ("max_rel_error", Json::num(r.max_rel_error)),
+            ]),
+            Response::Stats(r) => Json::obj(vec![
+                ok,
+                ("stats", r.stats.clone()),
+                (
+                    "engine",
+                    Json::obj(vec![
+                        ("shards", Json::num(r.engine.shards as f64)),
+                        ("queued", Json::num(r.engine.queued as f64)),
+                        ("max_backlog", Json::num(r.engine.max_backlog as f64)),
+                        (
+                            "shard_stats",
+                            Json::arr(r.engine.shard_stats.iter().map(|s| {
+                                Json::obj(vec![
+                                    ("shard", Json::num(s.shard as f64)),
+                                    ("depth", Json::num(s.depth as f64)),
+                                    ("high_water", Json::num(s.high_water as f64)),
+                                    ("rejected", Json::num(s.rejected as f64)),
+                                ])
+                            })),
+                        ),
+                    ]),
+                ),
+            ]),
+            Response::Submitted { job_id } => {
+                Json::obj(vec![ok, ("job_id", Json::str(job_id))])
+            }
+            Response::Status { job } => Json::obj(vec![ok, ("job", job.clone())]),
+            Response::Jobs { jobs } => Json::obj(vec![ok, ("jobs", jobs.clone())]),
+            Response::Cancelled { cancelled } => {
+                Json::obj(vec![ok, ("cancelled", Json::Bool(*cancelled))])
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The machine-readable schema (`describe`, v2).
+
+/// One request field in the schema table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FieldSpec {
+    pub name: &'static str,
+    pub ty: &'static str,
+    pub required: bool,
+}
+
+/// One op in the schema table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpSpec {
+    pub name: &'static str,
+    pub doc: &'static str,
+    pub fields: &'static [FieldSpec],
+}
+
+const fn f(name: &'static str, ty: &'static str, required: bool) -> FieldSpec {
+    FieldSpec { name, ty, required }
+}
+
+/// The system-selector fields shared by planning/simulation ops.
+const TARGET_FIELDS: [FieldSpec; 3] = [
+    f("system", "string|object", false),
+    f("scenario", "string", false),
+    f("overhead", "number", false),
+];
+
+const SOLVE_FIELDS: [FieldSpec; 10] = [
+    f("budget", "number", true),
+    f("policy", "string", false),
+    f("approach", "string", false),
+    f("deadline", "number", false),
+    f("seed", "integer", false),
+    f("n_starts", "integer", false),
+    f("perf_jitter", "number", false),
+    f("sample_frac", "number", false),
+    f("threads", "integer", false),
+    f("remaining", "array[integer]", false),
+];
+
+/// The full op table the coordinator serves.  `describe` renders it;
+/// the drift tests snapshot that rendering and assert the table covers
+/// every [`Request`] variant.
+pub const OP_SPECS: &[OpSpec] = &[
+    OpSpec { name: "ping", doc: "liveness probe", fields: &[] },
+    OpSpec { name: "stats", doc: "request metrics + engine queue gauges", fields: &[] },
+    OpSpec { name: "list_policies", doc: "registered scheduling policies", fields: &[] },
+    OpSpec { name: "list_scenarios", doc: "named workload presets", fields: &[] },
+    OpSpec { name: "describe", doc: "this schema (v2 only)", fields: &[] },
+    OpSpec {
+        name: "plan",
+        doc: "solve one budget through a named policy",
+        fields: &[
+            SOLVE_FIELDS[0], SOLVE_FIELDS[1], SOLVE_FIELDS[2], SOLVE_FIELDS[3],
+            SOLVE_FIELDS[4], SOLVE_FIELDS[5], SOLVE_FIELDS[6], SOLVE_FIELDS[7],
+            SOLVE_FIELDS[8], SOLVE_FIELDS[9],
+            f("planner", "object", false),
+            TARGET_FIELDS[0], TARGET_FIELDS[1], TARGET_FIELDS[2],
+            f("detail", "bool", false),
+        ],
+    },
+    OpSpec {
+        name: "simulate",
+        doc: "plan + execute once on the simulated cloud",
+        fields: &[
+            SOLVE_FIELDS[0], SOLVE_FIELDS[1], SOLVE_FIELDS[2], SOLVE_FIELDS[3],
+            SOLVE_FIELDS[4], SOLVE_FIELDS[5], SOLVE_FIELDS[6], SOLVE_FIELDS[7],
+            SOLVE_FIELDS[8], SOLVE_FIELDS[9],
+            f("planner", "object", false),
+            TARGET_FIELDS[0], TARGET_FIELDS[1], TARGET_FIELDS[2],
+            f("noise", "object", false),
+        ],
+    },
+    OpSpec {
+        name: "sweep",
+        doc: "budget x policy sweep (runs on the job engine)",
+        fields: &[
+            f("budgets", "array[number]", false),
+            f("threads", "integer", false),
+            TARGET_FIELDS[0], TARGET_FIELDS[1], TARGET_FIELDS[2],
+            f("priority", "integer", false),
+            f("deadline_ms", "integer", false),
+        ],
+    },
+    OpSpec {
+        name: "campaign",
+        doc: "closed-loop execution with failures + replanning (runs on the job engine)",
+        fields: &[
+            SOLVE_FIELDS[0], SOLVE_FIELDS[1], SOLVE_FIELDS[2], SOLVE_FIELDS[3],
+            SOLVE_FIELDS[4], SOLVE_FIELDS[5], SOLVE_FIELDS[6], SOLVE_FIELDS[7],
+            SOLVE_FIELDS[8],
+            f("planner", "object", false),
+            TARGET_FIELDS[0], TARGET_FIELDS[1], TARGET_FIELDS[2],
+            f("noise", "object", false),
+            f("max_rounds", "integer", false),
+            f("replications", "integer", false),
+            f("priority", "integer", false),
+            f("deadline_ms", "integer", false),
+        ],
+    },
+    OpSpec {
+        name: "estimate_perf",
+        doc: "bootstrap the performance matrix from sampled runs",
+        fields: &[
+            f("per_cell", "integer", false),
+            f("noise", "object", false),
+            f("seed", "integer", false),
+            TARGET_FIELDS[0], TARGET_FIELDS[1], TARGET_FIELDS[2],
+        ],
+    },
+    OpSpec {
+        name: "submit",
+        doc: "run any planning op asynchronously on the sharded engine",
+        fields: &[
+            f("job", "object", true),
+            f("priority", "integer", false),
+            f("deadline_ms", "integer", false),
+        ],
+    },
+    OpSpec {
+        name: "status",
+        doc: "job state, progress and streaming partial results",
+        fields: &[f("job_id", "string", true), f("partials_from", "integer", false)],
+    },
+    OpSpec { name: "jobs", doc: "all jobs with state + progress", fields: &[] },
+    OpSpec {
+        name: "cancel",
+        doc: "fire a job's cancel token",
+        fields: &[f("job_id", "string", true)],
+    },
+    OpSpec { name: "shutdown", doc: "stop the coordinator", fields: &[] },
+];
+
+/// Render the schema `describe` returns: versions, error codes, the op
+/// table and the scenario names.  Deterministic (object keys sort), so
+/// the drift test can snapshot its exact serialisation.
+pub fn describe_schema() -> Json {
+    Json::obj(vec![
+        ("v", Json::num(f64::from(V2))),
+        ("versions", Json::arr([Json::num(1.0), Json::num(2.0)])),
+        (
+            "error_codes",
+            Json::arr(ERROR_CODES.iter().map(|c| Json::str(c.as_str()))),
+        ),
+        (
+            "ops",
+            Json::arr(OP_SPECS.iter().map(|op| {
+                Json::obj(vec![
+                    ("op", Json::str(op.name)),
+                    ("doc", Json::str(op.doc)),
+                    (
+                        "fields",
+                        Json::arr(op.fields.iter().map(|fs| {
+                            Json::obj(vec![
+                                ("name", Json::str(fs.name)),
+                                ("type", Json::str(fs.ty)),
+                                ("required", Json::Bool(fs.required)),
+                            ])
+                        })),
+                    ),
+                ])
+            })),
+        ),
+        (
+            "scenarios",
+            Json::arr(crate::workload::scenario_names().into_iter().map(Json::str)),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn version_negotiation() {
+        assert_eq!(version_of(&Json::parse(r#"{"op":"ping"}"#).unwrap()).unwrap(), V1);
+        assert_eq!(version_of(&Json::parse(r#"{"op":"ping","v":1}"#).unwrap()).unwrap(), V1);
+        assert_eq!(version_of(&Json::parse(r#"{"op":"ping","v":2}"#).unwrap()).unwrap(), V2);
+        for bad in [r#"{"v":3}"#, r#"{"v":0}"#, r#"{"v":"2"}"#, r#"{"v":1.5}"#] {
+            let e = version_of(&Json::parse(bad).unwrap()).unwrap_err();
+            assert_eq!(e.code, ErrorCode::BadRequest, "{bad}");
+        }
+    }
+
+    #[test]
+    fn decode_keeps_historical_error_strings() {
+        let dec = |s: &str| Request::decode(&Json::parse(s).unwrap());
+        assert_eq!(dec(r#"{"nop":1}"#).unwrap_err().message, "missing \"op\"");
+        assert_eq!(dec(r#"{"op":"plan"}"#).unwrap_err().message, "missing \"budget\"");
+        // Historical quirk kept for parity: a mistyped budget reports
+        // as missing, exactly like the legacy wire path.
+        assert_eq!(
+            dec(r#"{"op":"plan","budget":"80"}"#).unwrap_err().message,
+            "missing \"budget\""
+        );
+        assert_eq!(
+            dec(r#"{"op":"plan","budget":10,"threads":"x"}"#).unwrap_err().message,
+            "\"threads\" must be a non-negative integer, got \"x\""
+        );
+        assert_eq!(
+            dec(r#"{"op":"plan","budget":10,"threads":9999}"#).unwrap_err().message,
+            "threads 9999 exceeds the limit of 256"
+        );
+        assert_eq!(
+            dec(r#"{"op":"submit"}"#).unwrap_err().message,
+            "submit: missing \"job\" object"
+        );
+        assert_eq!(
+            dec(r#"{"op":"submit","job":{"op":"shutdown"}}"#).unwrap_err().message,
+            "submit: op \"shutdown\" cannot run as a job"
+        );
+        assert_eq!(
+            dec(r#"{"op":"status"}"#).unwrap_err().message,
+            "status: missing \"job_id\""
+        );
+        let e = dec(r#"{"op":"nope"}"#).unwrap_err();
+        assert_eq!(e.code, ErrorCode::UnknownOp);
+        assert!(e.message.contains("list_policies"), "{}", e.message);
+        assert!(e.message.contains("describe"), "{}", e.message);
+    }
+
+    #[test]
+    fn placement_bounds_match_config() {
+        let dec = |s: &str| Request::decode(&Json::parse(s).unwrap());
+        let e = dec(r#"{"op":"submit","priority":12,"job":{"op":"ping"}}"#).unwrap_err();
+        assert!(e.message.contains("0..=9"), "{}", e.message);
+        let e = dec(r#"{"op":"submit","deadline_ms":99999999999999,"job":{"op":"ping"}}"#)
+            .unwrap_err();
+        assert!(e.message.contains("exceeds the limit"), "{}", e.message);
+        // The api decoder and the config decoder agree on every case.
+        for s in [
+            r#"{"priority":9,"deadline_ms":2500}"#,
+            r#"{"priority":10}"#,
+            r#"{"priority":"urgent"}"#,
+            r#"{"deadline_ms":1.5}"#,
+            r#"{}"#,
+        ] {
+            let j = Json::parse(s).unwrap();
+            let api = Placement::decode(&j);
+            let cfg = crate::config::job_priority_from_json(&j);
+            assert_eq!(api.is_ok(), cfg.is_ok(), "{s}");
+            if let (Ok(a), Ok(c)) = (api, cfg) {
+                assert_eq!(a.job_priority(), c, "{s}");
+            }
+        }
+    }
+
+    #[test]
+    fn request_decode_canonicalises_the_legacy_approach_spelling() {
+        let j = Json::parse(r#"{"op":"plan","budget":20,"approach":"mp"}"#).unwrap();
+        let Request::Plan(r) = Request::decode(&j).unwrap() else { panic!() };
+        assert_eq!(r.params.policy.as_deref(), Some("mp"));
+        assert_eq!(
+            r#"{"budget":20,"op":"plan","policy":"mp"}"#,
+            Request::Plan(r).encode().to_string()
+        );
+    }
+
+    #[test]
+    fn error_encodings() {
+        let e = ApiError::busy(3, 256, Some(42));
+        assert_eq!(
+            e.encode_v1().to_string(),
+            r#"{"backlog":256,"error":"busy","ok":false,"shard":3}"#
+        );
+        let v2 = e.encode_v2();
+        assert_eq!(v2.path(&["error", "code"]).unwrap().as_str(), Some("busy"));
+        assert_eq!(
+            v2.path(&["error", "detail", "retry_after_ms"]).unwrap().as_u64(),
+            Some(42)
+        );
+        let back = ApiError::decode(&v2).unwrap();
+        assert_eq!(back.code, ErrorCode::Busy);
+        assert_eq!(
+            back.busy_info(),
+            Some(BusyInfo { shard: 3, backlog: 256, retry_after_ms: Some(42) })
+        );
+        // The legacy shapes decode too.
+        let legacy = ApiError::decode(&e.encode_v1()).unwrap();
+        assert_eq!(legacy.busy_info().unwrap().shard, 3);
+        assert_eq!(legacy.busy_info().unwrap().retry_after_ms, None);
+        let plain = ApiError::bad_request("nope").encode_v1();
+        assert_eq!(plain.to_string(), r#"{"error":"nope","ok":false}"#);
+        assert!(ApiError::decode(&Json::parse(r#"{"ok":true}"#).unwrap()).is_none());
+    }
+
+    #[test]
+    fn scenario_field_is_strict_and_exclusive() {
+        let j = Json::parse(r#"{"op":"plan","budget":10,"scenario":7}"#).unwrap();
+        let e = Request::decode(&j).unwrap_err();
+        assert!(e.message.contains("scenario"), "{}", e.message);
+        let j = Json::parse(r#"{"op":"plan","budget":10,"scenario":"paper","system":"paper"}"#)
+            .unwrap();
+        let Request::Plan(r) = Request::decode(&j).unwrap() else { panic!() };
+        let e = r.target.resolve().unwrap_err();
+        assert!(e.message.contains("mutually exclusive"), "{}", e.message);
+        let e = SystemRef::scenario("warp9").resolve().unwrap_err();
+        assert!(e.message.contains("unknown scenario"), "{}", e.message);
+        assert!(e.message.contains("heavy-tail"), "{}", e.message);
+        let sys = SystemRef::scenario("paper").resolve().unwrap();
+        assert_eq!(sys.tasks().len(), 750);
+    }
+
+    #[test]
+    fn op_table_covers_every_request_variant() {
+        let table: Vec<&str> = OP_SPECS.iter().map(|o| o.name).collect();
+        for op in [
+            "ping", "stats", "shutdown", "jobs", "list_policies", "list_scenarios",
+            "describe", "plan", "simulate", "sweep", "campaign", "estimate_perf",
+            "submit", "status", "cancel",
+        ] {
+            assert!(table.contains(&op), "op {op:?} missing from OP_SPECS");
+        }
+        assert_eq!(table.len(), 15, "unknown extra op in OP_SPECS: {table:?}");
+        let schema = describe_schema();
+        assert_eq!(schema.get("ops").unwrap().as_arr().unwrap().len(), 15);
+        assert_eq!(schema.get("error_codes").unwrap().as_arr().unwrap().len(), 7);
+    }
+}

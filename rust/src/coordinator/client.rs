@@ -1,0 +1,513 @@
+//! The first-class blocking Rust client for the coordinator protocol.
+//!
+//! [`Client`] holds one persistent TCP connection and speaks the typed
+//! [`super::api`] surface at protocol **v2**: every request is encoded
+//! from an [`api::Request`], every reply decodes into the op's typed
+//! response struct, and failures come back as [`ClientError`] — with
+//! admission-control rejections surfaced as the typed
+//! [`BusyInfo`](api::BusyInfo) (shard, backlog and the server's
+//! `retry_after_ms` hint, which [`Client::submit_with_retry`] honours).
+//!
+//! Pipelining: the server executes at most one request per connection at
+//! a time but buffers up to 64 pending lines, so [`Client::send`] /
+//! [`Client::recv`] let a caller keep several requests in flight on one
+//! socket; responses come back in request order.  The convenience
+//! methods ([`Client::plan`], [`Client::sweep`], …) are
+//! `send`-then-`recv` and therefore must not be interleaved with
+//! outstanding pipelined sends — [`Client::call`] enforces that.
+//!
+//! ```no_run
+//! use botsched::coordinator::api::PlanRequest;
+//! use botsched::coordinator::Client;
+//!
+//! # fn main() -> Result<(), botsched::coordinator::ClientError> {
+//! let addr: std::net::SocketAddr = "127.0.0.1:7077".parse().unwrap();
+//! let mut client = Client::connect(&addr)?;
+//! let plan = client.plan(&PlanRequest::new(80.0).with_policy("mp"))?;
+//! println!("makespan {:.1}s over {} VMs", plan.makespan, plan.vms.len());
+//! # Ok(())
+//! # }
+//! ```
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use crate::util::Json;
+
+use super::api::{self, ApiError, BusyInfo};
+
+/// Connection options for [`Client::connect_with`].
+#[derive(Debug, Clone, Default)]
+pub struct ClientOptions {
+    /// Bound on the TCP connect; `None` = the OS default.
+    pub connect_timeout: Option<Duration>,
+    /// Per-reply read bound; `None` = wait indefinitely (synchronous
+    /// sweeps/campaigns can legitimately run for minutes).  An expired
+    /// timeout *poisons* the connection — part of the reply may already
+    /// be consumed, so the client refuses further use; reconnect rather
+    /// than retrying on the same socket.
+    pub read_timeout: Option<Duration>,
+    /// Per-request write bound; `None` = the OS default.
+    pub write_timeout: Option<Duration>,
+}
+
+/// Why a client call failed.
+#[derive(Debug)]
+pub enum ClientError {
+    /// Transport failure (connect, read, write, connection closed).
+    Io(std::io::Error),
+    /// The server rejected the request at admission control; retry
+    /// after `retry_after_ms` or shed load.
+    Busy(BusyInfo),
+    /// The server answered with a structured protocol error.
+    Api(ApiError),
+    /// The reply was not something this client understands.
+    Protocol(String),
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "io: {e}"),
+            ClientError::Busy(b) => {
+                write!(f, "busy: shard {} backlog {} is at its bound", b.shard, b.backlog)?;
+                if let Some(ms) = b.retry_after_ms {
+                    write!(f, " (retry after ~{ms}ms)")?;
+                }
+                Ok(())
+            }
+            ClientError::Api(e) => write!(f, "{e}"),
+            ClientError::Protocol(m) => write!(f, "protocol: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ClientError::Io(e) => Some(e),
+            ClientError::Api(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ClientError {
+    fn from(e: std::io::Error) -> Self {
+        ClientError::Io(e)
+    }
+}
+
+/// A typed view of one job object (`status` replies and `jobs` rows);
+/// `raw` keeps the full payload for fields this view does not lift.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobStatus {
+    pub id: String,
+    pub op: String,
+    pub state: String,
+    /// `(done, total)` units of work, once the job published any.
+    pub progress: Option<(u64, u64)>,
+    /// The reply body of a finished (`"done"`) job.
+    pub result: Option<Json>,
+    /// The failure message of a `"failed"` job.
+    pub error: Option<String>,
+    /// Streaming partial rows (respecting the `partials_from` cursor).
+    pub partial_results: Vec<Json>,
+    /// Cursor to pass as the next poll's `partials_from`.
+    pub partials_next: Option<u64>,
+    pub raw: Json,
+}
+
+impl JobStatus {
+    fn decode(j: &Json) -> Result<Self, ClientError> {
+        let field = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| ClientError::Protocol(format!("job object missing \"{k}\": {j}")))
+        };
+        Ok(Self {
+            id: field("id")?,
+            op: field("op")?,
+            state: field("state")?,
+            progress: match (
+                j.path(&["progress", "done"]).and_then(Json::as_u64),
+                j.path(&["progress", "total"]).and_then(Json::as_u64),
+            ) {
+                (Some(d), Some(t)) => Some((d, t)),
+                _ => None,
+            },
+            result: j.get("result").cloned(),
+            error: j.get("error").and_then(Json::as_str).map(str::to_string),
+            partial_results: j
+                .get("partial_results")
+                .and_then(Json::as_arr)
+                .map(<[Json]>::to_vec)
+                .unwrap_or_default(),
+            partials_next: j.get("partials_next").and_then(Json::as_u64),
+            raw: j.clone(),
+        })
+    }
+
+    /// Whether the job reached a terminal state.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self.state.as_str(), "done" | "failed" | "cancelled")
+    }
+}
+
+/// A blocking coordinator client over one persistent connection.
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+    /// Requests sent but not yet answered (pipelining depth).
+    pending: VecDeque<&'static str>,
+    /// Set when a read failed mid-reply (e.g. a `read_timeout` fired
+    /// with half a line consumed): the stream position is unknowable, so
+    /// every further use would misframe replies.  Poisoned clients error
+    /// on every call — reconnect instead.
+    poisoned: bool,
+}
+
+impl Client {
+    /// Connect with default options.
+    pub fn connect(addr: &SocketAddr) -> Result<Self, ClientError> {
+        Self::connect_with(addr, &ClientOptions::default())
+    }
+
+    /// Connect with explicit connect/read/write timeouts.
+    pub fn connect_with(addr: &SocketAddr, opts: &ClientOptions) -> Result<Self, ClientError> {
+        let stream = match opts.connect_timeout {
+            Some(t) => TcpStream::connect_timeout(addr, t)?,
+            None => TcpStream::connect(addr)?,
+        };
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(opts.read_timeout)?;
+        stream.set_write_timeout(opts.write_timeout)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Self { stream, reader, pending: VecDeque::new(), poisoned: false })
+    }
+
+    /// Requests currently in flight on this connection.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    // ----- pipelining ---------------------------------------------------
+
+    fn check_poisoned(&self) -> Result<(), ClientError> {
+        if self.poisoned {
+            return Err(ClientError::Protocol(
+                "connection poisoned by an earlier mid-reply read failure — reconnect".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Send one request without waiting for its reply (pipelining).
+    /// Replies arrive in request order via [`Client::recv`].
+    pub fn send(&mut self, req: &api::Request) -> Result<(), ClientError> {
+        self.check_poisoned()?;
+        let line = req.encode_versioned(api::V2).to_string();
+        self.stream.write_all(line.as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        self.stream.flush()?;
+        self.pending.push_back(req.op());
+        Ok(())
+    }
+
+    /// Receive the next pipelined reply body (the `ok:true` object).
+    /// Errors are classified: `busy` → [`ClientError::Busy`], other
+    /// protocol errors → [`ClientError::Api`].
+    ///
+    /// A transport-level read failure (including an expired
+    /// `read_timeout`) may leave part of the reply consumed, so it
+    /// poisons the connection: the request/reply framing can no longer
+    /// be trusted and every further call errors — reconnect instead.
+    pub fn recv(&mut self) -> Result<Json, ClientError> {
+        self.check_poisoned()?;
+        let mut line = String::new();
+        let n = match self.reader.read_line(&mut line) {
+            Ok(n) => n,
+            Err(e) => {
+                self.poisoned = true;
+                return Err(ClientError::Io(e));
+            }
+        };
+        self.pending.pop_front();
+        if n == 0 {
+            self.poisoned = true;
+            return Err(ClientError::Io(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "server closed the connection",
+            )));
+        }
+        let body = Json::parse(line.trim())
+            .map_err(|e| ClientError::Protocol(format!("bad reply json: {e}")))?;
+        if let Some(err) = ApiError::decode(&body) {
+            if let Some(busy) = err.busy_info() {
+                return Err(ClientError::Busy(busy));
+            }
+            return Err(ClientError::Api(err));
+        }
+        Ok(body)
+    }
+
+    /// One synchronous round trip.  Refuses to run with pipelined
+    /// requests outstanding (their replies would be misattributed).
+    pub fn call(&mut self, req: &api::Request) -> Result<Json, ClientError> {
+        if !self.pending.is_empty() {
+            return Err(ClientError::Protocol(format!(
+                "{} pipelined request(s) outstanding — drain with recv() first",
+                self.pending.len()
+            )));
+        }
+        self.send(req)?;
+        self.recv()
+    }
+
+    // ----- typed ops ----------------------------------------------------
+
+    /// `ping`: liveness probe.
+    pub fn ping(&mut self) -> Result<(), ClientError> {
+        self.call(&api::Request::Ping).map(|_| ())
+    }
+
+    /// `plan`: solve one budget through a named policy.
+    pub fn plan(&mut self, req: &api::PlanRequest) -> Result<api::PlanResponse, ClientError> {
+        let body = self.call(&api::Request::Plan(req.clone()))?;
+        api::PlanResponse::decode(&body).map_err(ClientError::Protocol)
+    }
+
+    /// `simulate`: plan + execute once on the simulated cloud.
+    pub fn simulate(
+        &mut self,
+        req: &api::SimulateRequest,
+    ) -> Result<api::SimulateResponse, ClientError> {
+        let body = self.call(&api::Request::Simulate(req.clone()))?;
+        api::SimulateResponse::decode(&body).map_err(ClientError::Protocol)
+    }
+
+    /// `sweep`: budget × policy sweep on the job engine.
+    pub fn sweep(&mut self, req: &api::SweepRequest) -> Result<api::SweepResponse, ClientError> {
+        let body = self.call(&api::Request::Sweep(req.clone()))?;
+        api::SweepResponse::decode(&body).map_err(ClientError::Protocol)
+    }
+
+    /// `campaign`: closed-loop execution (optionally Monte-Carlo
+    /// replicated) on the job engine.
+    pub fn campaign(
+        &mut self,
+        req: &api::CampaignRequest,
+    ) -> Result<api::CampaignResponse, ClientError> {
+        let body = self.call(&api::Request::Campaign(req.clone()))?;
+        api::CampaignResponse::decode(&body).map_err(ClientError::Protocol)
+    }
+
+    /// `estimate_perf`: bootstrap the performance matrix estimate.
+    pub fn estimate_perf(
+        &mut self,
+        req: &api::EstimatePerfRequest,
+    ) -> Result<api::EstimatePerfResponse, ClientError> {
+        let body = self.call(&api::Request::EstimatePerf(req.clone()))?;
+        api::EstimatePerfResponse::decode(&body).map_err(ClientError::Protocol)
+    }
+
+    /// `list_policies`: the registered scheduling policies.
+    pub fn list_policies(&mut self) -> Result<Vec<api::PolicyInfo>, ClientError> {
+        let body = self.call(&api::Request::ListPolicies)?;
+        decode_named_list(&body, "policies")
+            .map(|rows| {
+                rows.into_iter()
+                    .map(|(name, description)| api::PolicyInfo { name, description })
+                    .collect()
+            })
+            .map_err(ClientError::Protocol)
+    }
+
+    /// `list_scenarios`: the named workload presets.
+    pub fn list_scenarios(&mut self) -> Result<Vec<api::ScenarioInfo>, ClientError> {
+        let body = self.call(&api::Request::ListScenarios)?;
+        decode_named_list(&body, "scenarios")
+            .map(|rows| {
+                rows.into_iter()
+                    .map(|(name, description)| api::ScenarioInfo { name, description })
+                    .collect()
+            })
+            .map_err(ClientError::Protocol)
+    }
+
+    /// `describe` (v2): the machine-readable op/field schema.
+    pub fn describe(&mut self) -> Result<Json, ClientError> {
+        let body = self.call(&api::Request::Describe)?;
+        body.get("schema")
+            .cloned()
+            .ok_or_else(|| ClientError::Protocol(format!("describe reply missing schema: {body}")))
+    }
+
+    /// `stats`: request metrics + engine queue gauges.
+    pub fn stats(&mut self) -> Result<api::StatsResponse, ClientError> {
+        let body = self.call(&api::Request::Stats)?;
+        api::StatsResponse::decode(&body).map_err(ClientError::Protocol)
+    }
+
+    /// `submit`: run a typed request asynchronously; returns the job id.
+    pub fn submit(
+        &mut self,
+        job: &api::Request,
+        placement: api::Placement,
+    ) -> Result<String, ClientError> {
+        self.submit_raw(job.encode(), placement)
+    }
+
+    /// [`Client::submit`] for an already-encoded job object (the CLI's
+    /// pass-through path).
+    pub fn submit_raw(
+        &mut self,
+        job: Json,
+        placement: api::Placement,
+    ) -> Result<String, ClientError> {
+        let body = self.call(&api::Request::Submit(api::SubmitRequest { job, placement }))?;
+        body.get("job_id")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| ClientError::Protocol(format!("submit reply missing job_id: {body}")))
+    }
+
+    /// [`Client::submit`] with bounded retries on `busy`, sleeping the
+    /// server's `retry_after_ms` hint (capped at 2s per attempt) between
+    /// attempts.  Returns the final `busy` error once retries run out.
+    pub fn submit_with_retry(
+        &mut self,
+        job: &api::Request,
+        placement: api::Placement,
+        max_retries: usize,
+    ) -> Result<String, ClientError> {
+        let encoded = job.encode();
+        let mut attempt = 0;
+        loop {
+            match self.submit_raw(encoded.clone(), placement) {
+                Err(ClientError::Busy(busy)) if attempt < max_retries => {
+                    attempt += 1;
+                    let ms = busy.retry_after_ms.unwrap_or(50).clamp(1, 2_000);
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                other => return other,
+            }
+        }
+    }
+
+    /// `status`: one job's state/progress/partials.  `partials_from` is
+    /// the previous reply's `partials_next` streaming cursor.
+    pub fn status(
+        &mut self,
+        job_id: &str,
+        partials_from: Option<u64>,
+    ) -> Result<JobStatus, ClientError> {
+        let body = self.call(&api::Request::Status(api::StatusRequest {
+            job_id: job_id.to_string(),
+            partials_from,
+        }))?;
+        let job = body
+            .get("job")
+            .ok_or_else(|| ClientError::Protocol(format!("status reply missing job: {body}")))?;
+        JobStatus::decode(job)
+    }
+
+    /// `jobs`: every job with state + progress.
+    pub fn jobs(&mut self) -> Result<Vec<JobStatus>, ClientError> {
+        let body = self.call(&api::Request::Jobs)?;
+        body.get("jobs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| ClientError::Protocol(format!("jobs reply missing jobs: {body}")))?
+            .iter()
+            .map(JobStatus::decode)
+            .collect()
+    }
+
+    /// `cancel`: fire a job's cancel token; `true` when the job existed
+    /// and had not already finished.
+    pub fn cancel(&mut self, job_id: &str) -> Result<bool, ClientError> {
+        let body = self
+            .call(&api::Request::Cancel(api::CancelRequest { job_id: job_id.to_string() }))?;
+        body.get("cancelled")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| ClientError::Protocol(format!("cancel reply malformed: {body}")))
+    }
+
+    /// Poll `status` until the job reaches a terminal state (or
+    /// `timeout` expires — then the last observed status is returned).
+    pub fn wait_job(
+        &mut self,
+        job_id: &str,
+        poll: Duration,
+        timeout: Duration,
+    ) -> Result<JobStatus, ClientError> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let status = self.status(job_id, None)?;
+            if status.is_terminal() || std::time::Instant::now() >= deadline {
+                return Ok(status);
+            }
+            std::thread::sleep(poll);
+        }
+    }
+
+    /// `shutdown`: stop the coordinator.
+    pub fn shutdown(&mut self) -> Result<(), ClientError> {
+        self.call(&api::Request::Shutdown).map(|_| ())
+    }
+}
+
+/// Decode a `[{"name":…,"description":…},…]` listing field.
+fn decode_named_list(body: &Json, key: &str) -> Result<Vec<(String, String)>, String> {
+    body.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("reply missing \"{key}\": {body}"))?
+        .iter()
+        .map(|row| {
+            let get = |k: &str| {
+                row.get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| format!("listing row missing \"{k}\": {row}"))
+            };
+            Ok((get("name")?, get("description")?))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_status_decodes_progress_and_partials() {
+        let j = Json::parse(
+            r#"{"id":"j-1","op":"campaign","state":"running",
+                "progress":{"done":3,"total":8},
+                "partial_results":[{"wall_clock":1.0}],"partials_next":3}"#,
+        )
+        .unwrap();
+        let s = JobStatus::decode(&j).unwrap();
+        assert_eq!(s.id, "j-1");
+        assert_eq!(s.progress, Some((3, 8)));
+        assert_eq!(s.partial_results.len(), 1);
+        assert_eq!(s.partials_next, Some(3));
+        assert!(!s.is_terminal());
+        let done = Json::parse(r#"{"id":"j-2","op":"plan","state":"done","result":{"ok":true}}"#)
+            .unwrap();
+        let s = JobStatus::decode(&done).unwrap();
+        assert!(s.is_terminal());
+        assert!(s.result.is_some());
+        assert!(JobStatus::decode(&Json::parse(r#"{"id":"x"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn busy_error_displays_the_retry_hint() {
+        let e = ClientError::Busy(BusyInfo { shard: 2, backlog: 256, retry_after_ms: Some(40) });
+        let s = e.to_string();
+        assert!(s.contains("shard 2") && s.contains("40ms"), "{s}");
+    }
+}

@@ -101,7 +101,10 @@ pub struct Busy {
 pub enum JobError {
     /// Rejected at admission — nothing was queued; retry later or shed.
     Busy { shard: usize, backlog: usize },
-    /// The job ran (or was cancelled/lost) and failed with this message.
+    /// The job was cancelled before it produced a result (explicit
+    /// cancel op, engine shutdown, or an abandoning synchronous waiter).
+    Cancelled(String),
+    /// The job ran (or was lost) and failed with this message.
     Failed(String),
 }
 
@@ -111,7 +114,7 @@ impl std::fmt::Display for JobError {
             JobError::Busy { shard, backlog } => {
                 write!(f, "busy: shard {shard} backlog {backlog} is at its bound")
             }
-            JobError::Failed(e) => f.write_str(e),
+            JobError::Cancelled(e) | JobError::Failed(e) => f.write_str(e),
         }
     }
 }
@@ -448,7 +451,7 @@ impl JobEngine {
                 Err(JobError::Failed(error.unwrap_or_else(|| "job failed".into())))
             }
             Some((JobState::Cancelled, _, _)) => {
-                Err(JobError::Failed(format!("job {id} was cancelled")))
+                Err(JobError::Cancelled(format!("job {id} was cancelled")))
             }
             Some((state, _, _)) => {
                 // Timed out with the job still live: cancel it so the

@@ -107,6 +107,21 @@ impl Metrics {
         }
     }
 
+    /// The retry hint attached to v2 `busy` rejections: the queue-wait
+    /// p50 (how long freshly admitted work is currently waiting for a
+    /// worker), in milliseconds, clamped to [1, 60000].  With an empty
+    /// reservoir (no job has started yet) a conservative 50ms default
+    /// keeps clients from hammering a cold server.
+    pub fn retry_after_ms(&self) -> u64 {
+        let m = self.inner.lock().unwrap();
+        if m.queue_waits_us.is_empty() {
+            return 50;
+        }
+        let waits = sorted(&m.queue_waits_us);
+        let p50_us = pct(&waits, 0.50);
+        ((p50_us / 1e3).ceil() as u64).clamp(1, 60_000)
+    }
+
     pub fn snapshot(&self) -> Json {
         let m = self.inner.lock().unwrap();
         let lat = sorted(&m.latencies_us);
@@ -185,6 +200,21 @@ mod tests {
         // sample (index (n-1)*p truncates to 0), like the latency pins.
         assert_eq!(s.get("queue_wait_us_p50").unwrap().as_f64(), Some(250.0));
         assert!(s.get("queue_wait_us_p95").unwrap().as_f64().unwrap() >= 250.0);
+    }
+
+    #[test]
+    fn retry_after_tracks_the_queue_wait_p50() {
+        let m = Metrics::new();
+        assert_eq!(m.retry_after_ms(), 50, "cold default");
+        for us in [2_000u64, 4_000, 900_000] {
+            m.record_queue_wait(Duration::from_micros(us));
+        }
+        // Three samples: floor-indexed p50 lands on the middle one (4ms).
+        assert_eq!(m.retry_after_ms(), 4);
+        // Sub-millisecond waits round up to the 1ms floor, never 0.
+        let m = Metrics::new();
+        m.record_queue_wait(Duration::from_micros(10));
+        assert_eq!(m.retry_after_ms(), 1);
     }
 
     #[test]

@@ -59,24 +59,45 @@
 //!
 //! Python never runs here; the request path is rust + the AOT artifact.
 //!
-//! Protocol (one JSON object per line, response mirrors `"op"`):
+//! ## The typed, versioned wire API
+//!
+//! The protocol's single source of truth is [`api`]: a typed
+//! [`api::Request`] / [`api::Response`] pair per op, a structured
+//! [`api::ApiError`] taxonomy (`bad_request`, `unknown_policy`,
+//! `unknown_op`, `busy`, `cancelled`, `evicted`, `internal`), and
+//! encode/decode through [`crate::util::Json`].  [`protocol::handle`]
+//! is a thin `decode → dispatch(typed) → encode` pipeline over it, and
+//! [`client::Client`] is the first-class blocking Rust client (typed
+//! methods per op, pipelining via `send`/`recv`, typed
+//! [`api::BusyInfo`] rejections with retry helpers).
+//!
+//! Requests may carry `"v"`: **absent/1** keeps v1 semantics — reply
+//! shapes byte-identical to the historical protocol, string errors, the
+//! legacy `busy` shape; **2** switches failures to structured
+//! `{"ok":false,"error":{"code":…,"message":…,"detail":…?}}` bodies
+//! (`busy` gains a `retry_after_ms` hint from the queue-wait p50
+//! reservoir) and unlocks `describe`, which returns the machine-readable
+//! op/field schema ([`api::describe_schema`]) pinned by the drift tests.
+//! Success bodies are identical in both versions.
 //!
 //! Planning ops resolve their `"policy"` through the shared
 //! [`crate::scheduler::PolicyRegistry`] (`"approach"` is the accepted
-//! legacy spelling), so every registered policy — budget heuristic,
-//! baselines, multistart, deadline, dynamic, non-clairvoyant — is
-//! reachable over the wire; `list_policies` enumerates them.
+//! legacy spelling) — `list_policies` enumerates them — and may name a
+//! workload preset via `"scenario"` instead of inlining a `"system"`
+//! object (`list_scenarios` enumerates those).
+//!
+//! Protocol sketch (one JSON object per line; `{"op":"describe","v":2}`
+//! returns the complete field-level schema):
 //!
 //! ```text
 //! {"op":"ping"}
-//! {"op":"list_policies"}
-//! {"op":"plan","budget":80,"system":"paper","policy":"budget-heuristic"}
+//! {"op":"list_policies"} / {"op":"list_scenarios"}
+//! {"op":"plan","budget":80,"scenario":"heavy-tail","policy":"multistart","n_starts":8}
 //! {"op":"plan","budget":150,"policy":"deadline","deadline":3600,"threads":4}
-//! {"op":"plan","budget":80,"policy":"multistart","n_starts":8,"seed":7}
 //! {"op":"sweep","budgets":[40,45],"system":"paper"}
-//! {"op":"simulate","budget":80,"system":"paper","noise":{"task_sigma":0.1},"seed":7}
+//! {"op":"simulate","budget":80,"noise":{"task_sigma":0.1},"seed":7}
 //! {"op":"campaign","budget":120,"policy":"mi","noise":{"mean_lifetime":2500}}
-//! {"op":"estimate_perf","system":"paper","per_cell":20,"noise":{"task_sigma":0.05}}
+//! {"op":"estimate_perf","per_cell":20,"noise":{"task_sigma":0.05}}
 //! {"op":"plan","budget":80,"detail":true}        # full task-level plan
 //!
 //! # async jobs on the sharded engine (priority/deadline ride on the
@@ -85,37 +106,34 @@
 //! {"op":"submit","priority":9,"deadline_ms":5000,
 //!  "job":{"op":"campaign","budget":150,"replications":64}}
 //!   -> {"ok":true,"job_id":"j-0"}
-//!    | {"ok":false,"error":"busy","shard":3,"backlog":256}
-//!      # shard queue at --max-backlog: rejected, nothing queued
-//! {"op":"status","job_id":"j-0"}
-//!   -> {"ok":true,"job":{"id":"j-0","op":"campaign","state":"running",
-//!                        "priority":9,"deadline_ms":5000,
-//!                        "queue_wait_ms":1.8,
-//!                        "progress":{"done":17,"total":64},
-//!                        "partial_results":[{"wall_clock":...,"spent":...},...],
-//!                        "partials_next":17}}
+//!    | {"ok":false,"error":"busy","shard":3,"backlog":256}          # v1
+//!    | {"ok":false,"error":{"code":"busy","message":…,              # v2
+//!        "detail":{"shard":3,"backlog":256,"retry_after_ms":40}}}
 //! {"op":"status","job_id":"j-0","partials_from":17}
 //!   # streaming cursor: only partial rows >= 17 (pass the previous
 //!   # reply's "partials_next"), so pollers receive each row once
 //! {"op":"jobs"}          # all jobs with state + progress
-//! {"op":"cancel","job_id":"j-0"}   # fires the job's cancel token:
-//!                                  # running work stops at the next
-//!                                  # replication/cell/iteration boundary
+//! {"op":"cancel","job_id":"j-0"}   # fires the job's cancel token
 //!
 //! {"op":"stats"}         # metrics + engine gauges: per-shard depth /
 //!                        # high_water / rejected, max_backlog,
 //!                        # jobs_rejected, queue-wait percentiles
+//! {"op":"describe","v":2}          # machine-readable op/field schema
 //! {"op":"shutdown"}
 //! ```
 
+pub mod api;
 pub mod batcher;
+pub mod client;
 pub mod engine;
 pub mod metrics;
 pub mod protocol;
 pub mod server;
 pub mod state;
 
+pub use api::{ApiError, BusyInfo, ErrorCode, Request, Response};
 pub use batcher::BatchingEvaluator;
+pub use client::{Client, ClientError, ClientOptions, JobStatus};
 pub use engine::{Busy, JobCtl, JobEngine, JobError, JobPriority};
 pub use metrics::Metrics;
 pub use server::{Coordinator, CoordinatorConfig};

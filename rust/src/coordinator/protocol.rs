@@ -1,8 +1,22 @@
-//! Request handling for the coordinator's line-delimited JSON protocol.
+//! Request handling for the coordinator's line-delimited JSON protocol:
+//! a thin `decode → dispatch(typed) → encode` pipeline over the
+//! [`super::api`] types.
 //!
-//! Pure functions from a parsed request to a response object — the TCP
-//! server is a thin transport around [`handle`], and the protocol tests
-//! drive it without sockets.
+//! [`handle`] parses one request line into an [`api::Request`], runs the
+//! typed dispatcher, and encodes the typed [`api::Response`] (or the
+//! [`api::ApiError`]) back to a wire body.  The TCP server is a thin
+//! transport around [`handle_line`], and the protocol tests drive the
+//! pipeline without sockets.
+//!
+//! Version negotiation (see [`super::api`] for the full rules): a
+//! version-less request gets v1 semantics — success bodies are the
+//! historical shapes, non-`busy` errors surface as `Err` here (the
+//! transport encodes them as `{"ok":false,"error":"<string>"}`), and
+//! `busy` keeps its legacy reply shape.  A `"v":2` request never gets an
+//! `Err`: every failure is encoded as the structured
+//! `{"ok":false,"error":{"code":…,"message":…,"detail":…?}}` body, with
+//! `busy` carrying a `retry_after_ms` hint derived from the queue-wait
+//! p50 reservoir.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -12,7 +26,7 @@ use anyhow::{anyhow, Result};
 use crate::analysis::report::{run_policy_sweep_ctl, CORE_POLICIES};
 use crate::cloudsim::{
     run_campaign_ctl, run_campaign_replications_ctl, sample_runs, summarise_replications,
-    CampaignOutcome, CampaignSpec, SimConfig, SimOutcome, Simulator,
+    CampaignOutcome, CampaignSpec, NoiseModel, SimConfig, SimOutcome, Simulator,
 };
 use crate::config;
 use crate::eval::PlanEvaluator;
@@ -20,6 +34,7 @@ use crate::model::System;
 use crate::scheduler::{PolicyRegistry, SolveOutcome};
 use crate::util::{CancelToken, Json};
 
+use super::api::{self, ApiError};
 use super::engine::{JobCtl, JobEngine, JobError};
 use super::state::JobRegistry;
 use super::Metrics;
@@ -82,6 +97,15 @@ impl Context {
     fn cancel_token(&self) -> CancelToken {
         self.job.as_ref().map(JobCtl::cancel_token).unwrap_or_default()
     }
+
+    /// The admission-control busy rejection.  The queue-wait-derived
+    /// retry hint is computed only for v2 requests — the byte-pinned v1
+    /// busy reply never carries it, and rejections are the load-shed
+    /// path (no point sorting the reservoir for a discarded value).
+    fn busy_error(&self, shard: usize, backlog: usize, version: u8) -> ApiError {
+        let hint = (version >= api::V2).then(|| self.metrics.retry_after_ms());
+        ApiError::busy(shard, backlog, hint)
+    }
 }
 
 /// Outcome of one request: the response plus whether the server should
@@ -91,99 +115,76 @@ pub struct Reply {
     pub shutdown: bool,
 }
 
-fn ok(mut fields: Vec<(&str, Json)>) -> Reply {
-    fields.insert(0, ("ok", Json::Bool(true)));
-    Reply { body: Json::obj(fields), shutdown: false }
-}
-
-/// The structured admission-control rejection: the target shard's queue
-/// is at its backlog bound.  Built directly (not through the anyhow
-/// error path) so the shape is exactly
-/// `{"ok":false,"error":"busy","shard":…,"backlog":…}` — clients key on
-/// `error == "busy"` to back off or shed load.
-fn busy_reply(shard: usize, backlog: usize) -> Reply {
-    Reply {
-        body: Json::obj(vec![
-            ("ok", Json::Bool(false)),
-            ("error", Json::str("busy")),
-            ("shard", Json::num(shard as f64)),
-            ("backlog", Json::num(backlog as f64)),
-        ]),
-        shutdown: false,
+impl Reply {
+    fn new(resp: api::Response) -> Self {
+        let shutdown = resp.is_shutdown();
+        Self { body: resp.encode(), shutdown }
     }
 }
 
-/// Handle one request line.  Errors are mapped to `{"ok":false,...}` by
-/// the caller so the connection survives malformed input; every error is
-/// prefixed with the offending request's `op` (and `policy`, when one was
-/// given) so wire clients can diagnose bad requests.
+/// Handle one request line.  v1 (version-less) errors other than `busy`
+/// are returned as `Err` — the transport maps them to
+/// `{"ok":false,...}` so the connection survives malformed input; every
+/// such error is prefixed with the offending request's `op` (and
+/// `policy`, when one was given) so wire clients can diagnose bad
+/// requests.  v2 requests never produce an `Err`: their failures come
+/// back as structured error bodies.
 pub fn handle(ctx: &Context, line: &str) -> Result<Reply> {
-    let req = Json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
-    let op = req
+    match run(ctx, line) {
+        Ok(reply) => Ok(reply),
+        Err((version, e)) => {
+            if version >= api::V2 {
+                Ok(Reply { body: e.encode_v2(), shutdown: false })
+            } else if e.code == api::ErrorCode::Busy {
+                // The legacy busy reply is an `ok:false` body, not an
+                // error: clients key on `error == "busy"` to back off.
+                Ok(Reply { body: e.encode_v1(), shutdown: false })
+            } else {
+                Err(anyhow!("{}", e.message))
+            }
+        }
+    }
+}
+
+/// [`handle`] with every failure encoded into a reply body — the single
+/// error-shape funnel the transport uses, so server-side decode failures
+/// and protocol-level failures produce identical wire bytes.
+pub fn handle_line(ctx: &Context, line: &str) -> Reply {
+    match handle(ctx, line) {
+        Ok(reply) => reply,
+        Err(e) => Reply {
+            body: Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(format!("{e:#}"))),
+            ]),
+            shutdown: false,
+        },
+    }
+}
+
+fn run(ctx: &Context, line: &str) -> Result<Reply, (u8, ApiError)> {
+    let raw = Json::parse(line)
+        .map_err(|e| (api::V1, ApiError::bad_request(format!("bad json: {e}"))))?;
+    let version = api::version_of(&raw).map_err(|e| (api::V1, e))?;
+    let op = raw
         .get("op")
         .and_then(Json::as_str)
-        .ok_or_else(|| anyhow!("missing \"op\""))?;
-    dispatch(ctx, op, &req).map_err(|e| match policy_name(&req) {
-        Some(p) => anyhow!("op {op:?} (policy {p:?}): {e:#}"),
-        None => anyhow!("op {op:?}: {e:#}"),
-    })
-}
-
-fn dispatch(ctx: &Context, op: &str, req: &Json) -> Result<Reply> {
-    match op {
-        "ping" => Ok(ok(vec![("pong", Json::Bool(true))])),
-        "stats" => {
-            let shard_stats = ctx.engine.shard_stats();
-            Ok(ok(vec![
-                ("stats", ctx.metrics.snapshot()),
-                (
-                    "engine",
-                    Json::obj(vec![
-                        ("shards", Json::num(ctx.engine.n_shards() as f64)),
-                        (
-                            "queued",
-                            Json::num(shard_stats.iter().map(|s| s.depth).sum::<usize>() as f64),
-                        ),
-                        ("max_backlog", Json::num(ctx.engine.max_backlog() as f64)),
-                        (
-                            "shard_stats",
-                            Json::arr(shard_stats.iter().enumerate().map(|(i, s)| {
-                                Json::obj(vec![
-                                    ("shard", Json::num(i as f64)),
-                                    ("depth", Json::num(s.depth as f64)),
-                                    ("high_water", Json::num(s.high_water as f64)),
-                                    ("rejected", Json::num(s.rejected as f64)),
-                                ])
-                            })),
-                        ),
-                    ]),
-                ),
-            ]))
+        .ok_or_else(|| (version, ApiError::bad_request("missing \"op\"")))?
+        .to_string();
+    // Errors are prefixed with the op (and the policy, when one was
+    // given) — except `busy`, whose v1 encoding is field-keyed.
+    let prefix = |e: ApiError| -> (u8, ApiError) {
+        if e.code == api::ErrorCode::Busy {
+            return (version, e);
         }
-        "shutdown" => Ok(Reply {
-            body: Json::obj(vec![("ok", Json::Bool(true)), ("bye", Json::Bool(true))]),
-            shutdown: true,
-        }),
-        "list_policies" => Ok(ok(vec![(
-            "policies",
-            Json::arr(ctx.registry.iter().map(|p| {
-                Json::obj(vec![
-                    ("name", Json::str(p.name())),
-                    ("description", Json::str(p.description())),
-                ])
-            })),
-        )])),
-        "plan" => op_plan(ctx, req),
-        "sweep" => op_sweep(ctx, req),
-        "simulate" => op_simulate(ctx, req),
-        "campaign" => op_campaign(ctx, req),
-        "estimate_perf" => op_estimate_perf(req),
-        "submit" => op_submit(ctx, req),
-        "status" => op_status(ctx, req),
-        "jobs" => Ok(ok(vec![("jobs", ctx.jobs().list())])),
-        "cancel" => op_cancel(ctx, req),
-        _ => Err(anyhow!("no such op (try list_policies, plan, sweep, simulate, campaign, estimate_perf, submit, status, jobs, cancel, stats, ping, shutdown)")),
-    }
+        let message = match policy_name(&raw) {
+            Some(p) => format!("op {op:?} (policy {p:?}): {}", e.message),
+            None => format!("op {op:?}: {}", e.message),
+        };
+        (version, ApiError { message, ..e })
+    };
+    let req = api::Request::decode(&raw).map_err(&prefix)?;
+    dispatch(ctx, &req, version).map_err(prefix)
 }
 
 /// The request's policy name: `"policy"`, or the legacy `"approach"`.
@@ -193,115 +194,165 @@ fn policy_name(req: &Json) -> Option<&str> {
         .and_then(Json::as_str)
 }
 
+fn dispatch(ctx: &Context, req: &api::Request, version: u8) -> Result<Reply, ApiError> {
+    use api::Request as R;
+    match req {
+        R::Ping => Ok(Reply::new(api::Response::Pong)),
+        R::Shutdown => Ok(Reply::new(api::Response::Bye)),
+        R::Stats => Ok(Reply::new(op_stats(ctx))),
+        R::Jobs => Ok(Reply::new(api::Response::Jobs { jobs: ctx.jobs().list() })),
+        R::ListPolicies => Ok(Reply::new(api::Response::Policies(
+            ctx.registry
+                .iter()
+                .map(|p| api::PolicyInfo {
+                    name: p.name().to_string(),
+                    description: p.description().to_string(),
+                })
+                .collect(),
+        ))),
+        R::ListScenarios => Ok(Reply::new(api::Response::Scenarios(
+            crate::workload::SCENARIOS
+                .iter()
+                .map(|s| api::ScenarioInfo {
+                    name: s.name.to_string(),
+                    description: s.description.to_string(),
+                })
+                .collect(),
+        ))),
+        R::Describe => {
+            if version < api::V2 {
+                return Err(ApiError::bad_request(
+                    "\"describe\" requires protocol version 2 (send \"v\":2)",
+                ));
+            }
+            Ok(Reply::new(api::Response::Schema(api::describe_schema())))
+        }
+        R::Plan(r) => op_plan(ctx, r).map(Reply::new),
+        R::Simulate(r) => op_simulate(ctx, r).map(Reply::new),
+        R::Sweep(r) => op_sweep(ctx, r, version),
+        R::Campaign(r) => op_campaign(ctx, r, version),
+        R::EstimatePerf(r) => op_estimate_perf(r).map(Reply::new),
+        R::Submit(r) => op_submit(ctx, r, version),
+        R::Status(r) => op_status(ctx, r).map(Reply::new),
+        R::Cancel(r) => Ok(Reply::new(api::Response::Cancelled {
+            cancelled: ctx.jobs().cancel(&r.job_id),
+        })),
+    }
+}
+
+fn op_stats(ctx: &Context) -> api::Response {
+    let shard_stats = ctx.engine.shard_stats();
+    api::Response::Stats(api::StatsResponse {
+        stats: ctx.metrics.snapshot(),
+        engine: api::EngineInfo {
+            shards: ctx.engine.n_shards() as u64,
+            queued: shard_stats.iter().map(|s| s.depth).sum::<usize>() as u64,
+            max_backlog: ctx.engine.max_backlog() as u64,
+            shard_stats: shard_stats
+                .iter()
+                .enumerate()
+                .map(|(i, s)| api::ShardRow {
+                    shard: i as u64,
+                    depth: s.depth as u64,
+                    high_water: s.high_water as u64,
+                    rejected: s.rejected,
+                })
+                .collect(),
+        },
+    })
+}
+
 /// `submit`: run any other request asynchronously on the sharded
 /// engine; poll with `status`, stop with `cancel`.  No thread is
 /// spawned here — the job queues onto its shard (in `priority` /
 /// `deadline_ms` / FIFO order; both fields ride on the *outer* submit
 /// object) and runs when a pool worker frees up.  A shard at its
-/// backlog bound rejects the submit with the structured `busy` reply
-/// instead of queueing.
-fn op_submit(ctx: &Context, req: &Json) -> Result<Reply> {
-    let inner = req
-        .get("job")
-        .ok_or_else(|| anyhow!("submit: missing \"job\" object"))?
-        .clone();
-    let inner_op = inner
-        .get("op")
-        .and_then(Json::as_str)
-        .ok_or_else(|| anyhow!("submit: job missing \"op\""))?;
-    if matches!(inner_op, "submit" | "shutdown" | "status" | "jobs" | "cancel") {
-        return Err(anyhow!("submit: op {inner_op:?} cannot run as a job"));
-    }
-    let prio = config::job_priority_from_json(req)?;
+/// backlog bound rejects the submit with the `busy` rejection instead
+/// of queueing.
+fn op_submit(ctx: &Context, r: &api::SubmitRequest, version: u8) -> Result<Reply, ApiError> {
+    // Decode validated the inner op's presence and rejected control ops.
+    let inner_op = r.job.get("op").and_then(Json::as_str).unwrap_or("?").to_string();
+    let prio = r.placement.job_priority();
     let worker_ctx = ctx.clone_shared();
-    let line = inner.to_string();
+    let line = r.job.to_string();
     let submitted = ctx.engine.try_submit(
-        inner_op,
+        &inner_op,
         prio,
         Box::new(move |ctl| {
             let mut job_ctx = worker_ctx;
             job_ctx.job = Some(ctl.clone());
             match handle(&job_ctx, &line) {
+                // A v2 job encodes its failures into the body; surface
+                // them as job failures so `status` reports `"failed"`.
+                Ok(reply) if reply.body.get("ok") == Some(&Json::Bool(false)) => {
+                    let msg = reply
+                        .body
+                        .path(&["error", "message"])
+                        .or_else(|| reply.body.get("error"))
+                        .and_then(Json::as_str)
+                        .unwrap_or("job failed")
+                        .to_string();
+                    Err(msg)
+                }
                 Ok(reply) => Ok(reply.body),
                 Err(e) => Err(format!("{e:#}")),
             }
         }),
     );
     match submitted {
-        Ok(job_id) => Ok(ok(vec![("job_id", Json::str(job_id))])),
-        Err(busy) => Ok(busy_reply(busy.shard, busy.backlog)),
+        Ok(job_id) => Ok(Reply::new(api::Response::Submitted { job_id })),
+        Err(busy) => Err(ctx.busy_error(busy.shard, busy.backlog, version)),
     }
 }
 
 /// `status`: current state, progress and streaming partial results.
 /// Pass `"partials_from"` (the previous reply's `partials_next`) to
 /// receive only new partial rows instead of the whole backlog.
-fn op_status(ctx: &Context, req: &Json) -> Result<Reply> {
-    let id = req
-        .get("job_id")
-        .and_then(Json::as_str)
-        .ok_or_else(|| anyhow!("status: missing \"job_id\""))?;
-    let from = u64_field(req, "partials_from")?.unwrap_or(0);
+fn op_status(ctx: &Context, r: &api::StatusRequest) -> Result<api::Response, ApiError> {
+    let from = r.partials_from.unwrap_or(0);
     let status = ctx
         .jobs()
-        .status_from(id, from)
-        .ok_or_else(|| anyhow!("unknown job {id:?}"))?;
-    Ok(ok(vec![("job", status)]))
-}
-
-/// `cancel`: fires the job's cancel token; queued jobs never start and
-/// running jobs stop at their next cooperative checkpoint (replication
-/// boundary, sweep cell, FIND iteration).
-fn op_cancel(ctx: &Context, req: &Json) -> Result<Reply> {
-    let id = req
-        .get("job_id")
-        .and_then(Json::as_str)
-        .ok_or_else(|| anyhow!("cancel: missing \"job_id\""))?;
-    Ok(ok(vec![("cancelled", Json::Bool(ctx.jobs().cancel(id)))]))
-}
-
-fn parse_system(req: &Json) -> Result<System> {
-    match req.get("system") {
-        None => Ok(crate::workload::paper::table1_system(
-            req.get("overhead").and_then(Json::as_f64).unwrap_or(0.0),
-        )),
-        Some(Json::Str(s)) => config::load_system(s),
-        Some(obj) => config::system_from_json(obj),
-    }
-}
-
-fn budget_of(req: &Json) -> Result<f64> {
-    req.get("budget")
-        .and_then(Json::as_f64)
-        .ok_or_else(|| anyhow!("missing \"budget\""))
+        .status_from(&r.job_id, from)
+        .ok_or_else(|| ApiError::evicted(format!("unknown job {:?}", r.job_id)))?;
+    Ok(api::Response::Status { job: status })
 }
 
 /// Resolve the request's policy and solve it through the shared
 /// evaluator.  All planning ops (`plan`, `simulate`) funnel through here.
-fn solve_with(ctx: &Context, sys: &System, req: &Json) -> Result<SolveOutcome> {
-    let name = match policy_name(req) {
+fn solve_with(
+    ctx: &Context,
+    sys: &System,
+    params: &api::SolveParams,
+) -> Result<SolveOutcome, ApiError> {
+    let name = match params.policy.as_deref() {
         Some(n) => n,
         // Deadline + remaining with no policy is ambiguous (the deadline
         // search ignores residual sets, dynamic ignores deadlines) —
         // refuse rather than guess and then blame the guess.
-        None if req.get("deadline").is_some() && req.get("remaining").is_some() => {
-            return Err(anyhow!(
+        None if params.deadline.is_some() && params.remaining.is_some() => {
+            return Err(ApiError::bad_request(
                 "both \"deadline\" and \"remaining\" given without a \"policy\" — \
-                 name the policy explicitly"
+                 name the policy explicitly",
             ));
         }
         // A deadline with no explicit policy selects the deadline search
         // (mirrors the CLI) — the budget heuristic would silently ignore it.
-        None if req.get("deadline").is_some() => "deadline",
+        None if params.deadline.is_some() => "deadline",
         // A residual task set with no explicit policy selects dynamic
         // re-planning for the same reason.
-        None if req.get("remaining").is_some() => "dynamic",
+        None if params.remaining.is_some() => "dynamic",
         None => "budget-heuristic",
     };
-    // Resolve first so a typoed policy name reports as unknown-policy,
-    // not as a misleading knob error.
-    let policy = ctx.registry.resolve(name).map_err(anyhow::Error::new)?;
-    let sreq = config::solve_request_from_json(req)?
+    // Resolve before the remaining-validation below so a typoed policy
+    // name reports as unknown-policy, not as a misleading complaint
+    // about `remaining`.  (Knob *type/bound* errors surface earlier, at
+    // Request::decode — see its doc on error precedence.)
+    let policy = ctx
+        .registry
+        .resolve(name)
+        .map_err(|e| ApiError::unknown_policy(format!("{e}")))?;
+    let sreq = params
+        .solve_request()
         .with_evaluator(ctx.evaluator.as_ref())
         .with_cancel(ctx.cancel_token());
     if let Some(remaining) = &sreq.remaining {
@@ -309,19 +360,23 @@ fn solve_with(ctx: &Context, sys: &System, req: &Json) -> Result<SolveOutcome> {
         // would silently plan the full workload, so reject it rather
         // than mislead the client.
         if policy.name() != "dynamic" {
-            return Err(anyhow!(
+            return Err(ApiError::bad_request(format!(
                 "\"remaining\" is only honoured by the \"dynamic\" policy (got {name:?})"
-            ));
+            )));
         }
         let n = sys.tasks().len();
         let mut seen = vec![false; n];
         for t in remaining {
             let i = t.index();
             if i >= n {
-                return Err(anyhow!("\"remaining\" names unknown task {i} (system has {n})"));
+                return Err(ApiError::bad_request(format!(
+                    "\"remaining\" names unknown task {i} (system has {n})"
+                )));
             }
             if seen[i] {
-                return Err(anyhow!("\"remaining\" lists task {i} twice"));
+                return Err(ApiError::bad_request(format!(
+                    "\"remaining\" lists task {i} twice"
+                )));
             }
             seen[i] = true;
         }
@@ -329,42 +384,53 @@ fn solve_with(ctx: &Context, sys: &System, req: &Json) -> Result<SolveOutcome> {
     Ok(policy.solve(sys, &sreq))
 }
 
-fn plan_json(sys: &System, plan: &crate::model::Plan) -> Json {
-    Json::arr(plan.vms.iter().map(|vm| {
-        Json::obj(vec![
-            ("instance_type", Json::str(&sys.instance_type(vm.it).name)),
-            ("tasks", Json::num(vm.len() as f64)),
-            ("exec", Json::num(vm.exec(sys))),
-            ("cost", Json::num(vm.cost(sys))),
-        ])
-    }))
+fn op_plan(ctx: &Context, r: &api::PlanRequest) -> Result<api::Response, ApiError> {
+    let sys = r.target.resolve()?;
+    let outcome = solve_with(ctx, &sys, &r.params)?;
+    ctx.metrics.record_plan();
+    Ok(api::Response::Plan(Box::new(api::PlanResponse {
+        policy: outcome.policy.to_string(),
+        approach: crate::scheduler::legacy_name(outcome.policy).to_string(),
+        budget: r.params.budget,
+        effective_budget: outcome.effective_budget,
+        makespan: outcome.score.makespan,
+        cost: outcome.score.cost,
+        feasible: outcome.feasible,
+        iterations: outcome.iterations as u64,
+        probes: outcome.probes as u64,
+        vms: outcome
+            .plan
+            .vms
+            .iter()
+            .map(|vm| api::VmRow {
+                instance_type: sys.instance_type(vm.it).name.clone(),
+                tasks: vm.len() as u64,
+                exec: vm.exec(&sys),
+                cost: vm.cost(&sys),
+            })
+            .collect(),
+        // Full task-level assignment on request (importable via
+        // config::plan_from_json for external execution engines).
+        plan: r.detail.then(|| config::plan_to_json(&sys, &outcome.plan)),
+    })))
 }
 
-fn op_plan(ctx: &Context, req: &Json) -> Result<Reply> {
-    let sys = parse_system(req)?;
-    let budget = budget_of(req)?;
-    let outcome = solve_with(ctx, &sys, req)?;
+fn op_simulate(ctx: &Context, r: &api::SimulateRequest) -> Result<api::Response, ApiError> {
+    let sys = r.target.resolve()?;
+    let outcome = solve_with(ctx, &sys, &r.params)?;
     ctx.metrics.record_plan();
-    let mut fields = vec![
-        ("policy", Json::str(outcome.policy)),
-        // Legacy field name and spelling, kept for wire compatibility.
-        ("approach", Json::str(crate::scheduler::legacy_name(outcome.policy))),
-        ("budget", Json::num(budget)),
-        ("effective_budget", Json::num(outcome.effective_budget)),
-        ("makespan", Json::num(outcome.score.makespan)),
-        ("cost", Json::num(outcome.score.cost)),
-        ("feasible", Json::Bool(outcome.feasible)),
-        ("iterations", Json::num(outcome.iterations as f64)),
-        ("probes", Json::num(outcome.probes as f64)),
-        ("n_vms", Json::num(outcome.plan.n_vms() as f64)),
-        ("vms", plan_json(&sys, &outcome.plan)),
-    ];
-    // Full task-level assignment on request (importable via
-    // config::plan_from_json for external execution engines).
-    if req.get("detail").and_then(Json::as_bool).unwrap_or(false) {
-        fields.push(("plan", config::plan_to_json(&sys, &outcome.plan)));
-    }
-    Ok(ok(fields))
+    let noise = r.noise.map(|n| n.model()).unwrap_or_else(NoiseModel::none);
+    let seed = r.params.seed.unwrap_or(0);
+    let sim = Simulator::run_plan(&sys, &outcome.plan, &SimConfig { noise, seed });
+    Ok(api::Response::Simulate(api::SimulateResponse {
+        policy: outcome.policy.to_string(),
+        planned_feasible: outcome.feasible,
+        makespan: sim.makespan,
+        cost: sim.cost,
+        completed: sim.completed.len() as u64,
+        stranded: sim.stranded.len() as u64,
+        failures: sim.failures as u64,
+    }))
 }
 
 /// A fully validated sweep, ready to execute on a pool worker.
@@ -377,8 +443,8 @@ struct SweepJob {
 }
 
 /// Run a validated sweep, publishing per-cell progress and streaming
-/// each finished cell as a partial result.
-fn exec_sweep(job: &SweepJob, ctl: &JobCtl) -> Reply {
+/// each finished cell as a partial result; returns the report payload.
+fn exec_sweep(job: &SweepJob, ctl: &JobCtl) -> Json {
     let total = (job.budgets.len() * CORE_POLICIES.len()) as u64;
     ctl.progress(0, total);
     let done = AtomicU64::new(0);
@@ -399,19 +465,19 @@ fn exec_sweep(job: &SweepJob, ctl: &JobCtl) -> Reply {
     // Final authoritative count (observers race under parallelism;
     // set_progress is max-monotonic).
     ctl.progress(report.rows.len() as u64, total);
-    ok(vec![("sweep", report.to_json())])
+    report.to_json()
 }
 
-fn op_sweep(ctx: &Context, req: &Json) -> Result<Reply> {
-    let sys = parse_system(req)?;
-    let budgets: Vec<f64> = match req.get("budgets").and_then(Json::as_arr) {
-        Some(arr) => arr.iter().filter_map(Json::as_f64).collect(),
-        None => crate::workload::paper::BUDGETS.to_vec(),
-    };
+fn op_sweep(ctx: &Context, r: &api::SweepRequest, version: u8) -> Result<Reply, ApiError> {
+    let sys = r.target.resolve()?;
+    let budgets = r
+        .budgets
+        .clone()
+        .unwrap_or_else(|| crate::workload::paper::BUDGETS.to_vec());
     if budgets.is_empty() {
-        return Err(anyhow!("empty budgets"));
+        return Err(ApiError::bad_request("empty budgets"));
     }
-    let threads = bounded_threads(u64_field(req, "threads")?.unwrap_or(1))?;
+    let threads = r.threads.unwrap_or(1) as usize;
     let job = SweepJob {
         sys,
         budgets,
@@ -422,63 +488,31 @@ fn op_sweep(ctx: &Context, req: &Json) -> Result<Reply> {
     ctx.metrics.record_plan();
     match &ctx.job {
         // Already on a pool worker (async submit): run inline.
-        Some(ctl) => Ok(exec_sweep(&job, ctl)),
+        Some(ctl) => Ok(Reply::new(api::Response::Sweep(api::SweepResponse {
+            sweep: exec_sweep(&job, ctl),
+        }))),
         // Synchronous call: the same execution, behind the same bounded
         // pool — the caller's thread just waits for its own job, and a
         // shard at its backlog bound rejects with `busy` like a submit.
         None => {
-            let prio = config::job_priority_from_json(req)?;
-            match ctx
-                .engine
-                .run_sync_with("sweep", prio, Box::new(move |ctl| Ok(exec_sweep(&job, ctl).body)))
-            {
+            let prio = r.placement.job_priority();
+            match ctx.engine.run_sync_with(
+                "sweep",
+                prio,
+                Box::new(move |ctl| {
+                    let sweep = exec_sweep(&job, ctl);
+                    Ok(api::Response::Sweep(api::SweepResponse { sweep }).encode())
+                }),
+            ) {
                 Ok(body) => Ok(Reply { body, shutdown: false }),
-                Err(JobError::Busy { shard, backlog }) => Ok(busy_reply(shard, backlog)),
-                Err(JobError::Failed(e)) => Err(anyhow!("{e}")),
+                Err(JobError::Busy { shard, backlog }) => {
+                    Err(ctx.busy_error(shard, backlog, version))
+                }
+                Err(JobError::Cancelled(e)) => Err(ApiError::cancelled(e)),
+                Err(JobError::Failed(e)) => Err(ApiError::internal(e)),
             }
         }
     }
-}
-
-/// Bound a wire-controlled worker-thread count (0 = auto is allowed;
-/// `parallel_map` caps auto at the machine's core count).
-fn bounded_threads(threads: u64) -> Result<usize> {
-    const MAX_THREADS: u64 = 256;
-    if threads > MAX_THREADS {
-        return Err(anyhow!("threads {threads} exceeds the limit of {MAX_THREADS}"));
-    }
-    Ok(threads as usize)
-}
-
-/// A strictly-typed optional u64 field: present-but-mistyped is an
-/// error, never a silent default.
-fn u64_field(req: &Json, key: &str) -> Result<Option<u64>> {
-    req.get(key)
-        .map(|v| {
-            v.as_u64()
-                .ok_or_else(|| anyhow!("\"{key}\" must be a non-negative integer, got {v}"))
-        })
-        .transpose()
-}
-
-fn op_simulate(ctx: &Context, req: &Json) -> Result<Reply> {
-    let sys = parse_system(req)?;
-    let outcome = solve_with(ctx, &sys, req)?;
-    ctx.metrics.record_plan();
-    let noise = req.get("noise").map(config::noise_from_json).unwrap_or_else(
-        crate::cloudsim::NoiseModel::none,
-    );
-    let seed = req.get("seed").and_then(Json::as_u64).unwrap_or(0);
-    let sim = Simulator::run_plan(&sys, &outcome.plan, &SimConfig { noise, seed });
-    Ok(ok(vec![
-        ("policy", Json::str(outcome.policy)),
-        ("planned_feasible", Json::Bool(outcome.feasible)),
-        ("makespan", Json::num(sim.makespan)),
-        ("cost", Json::num(sim.cost)),
-        ("completed", Json::num(sim.completed.len() as f64)),
-        ("stranded", Json::num(sim.stranded.len() as f64)),
-        ("failures", Json::num(sim.failures as f64)),
-    ]))
 }
 
 /// A fully validated campaign, ready to execute on a pool worker.
@@ -489,7 +523,7 @@ struct CampaignJob {
     threads: usize,
 }
 
-/// One finished replication as a partial/summary row.
+/// One finished replication as a streaming partial row.
 fn replication_row(out: &CampaignOutcome) -> Json {
     Json::obj(vec![
         ("wall_clock", Json::num(out.wall_clock)),
@@ -500,7 +534,7 @@ fn replication_row(out: &CampaignOutcome) -> Json {
     ])
 }
 
-/// One finished campaign round as a partial row.
+/// One finished campaign round as a streaming partial row.
 fn round_row(round: usize, sim: &SimOutcome) -> Json {
     Json::obj(vec![
         ("round", Json::num(round as f64)),
@@ -516,7 +550,7 @@ fn round_row(round: usize, sim: &SimOutcome) -> Json {
 /// rounds done for a single run) and streaming partial rows.  A cancel
 /// stops the fan-out at the next replication/round boundary; the reply
 /// then covers only the work that ran (`cancelled: true`).
-fn exec_campaign(job: &CampaignJob, ctl: &JobCtl) -> Reply {
+fn exec_campaign(job: &CampaignJob, ctl: &JobCtl) -> Json {
     let cancel = ctl.cancel_token();
     if job.replications > 1 {
         // Monte-Carlo mode: fan the replications out and report the
@@ -539,29 +573,38 @@ fn exec_campaign(job: &CampaignJob, ctl: &JobCtl) -> Reply {
         // Final authoritative count: racing observers may have published
         // out of order (set_progress is max-monotonic, never regressing).
         ctl.progress(outs.len() as u64, total);
-        let mut fields = vec![
-            ("policy", Json::str(job.spec.policy.name())),
-            ("replications", Json::num(outs.len() as f64)),
-        ];
-        if cancel.is_cancelled() {
-            fields.push(("cancelled", Json::Bool(true)));
-        }
-        if outs.is_empty() {
+        let summary = if outs.is_empty() {
             // Cancelled before any replication completed: nothing to
             // aggregate (only reachable through a cancelled job, whose
             // result is discarded anyway).
-            return ok(fields);
-        }
-        let s = summarise_replications(&outs);
-        let n = s.replications as f64;
-        fields.extend([
-            ("complete_frac", Json::num(s.complete as f64 / n)),
-            ("within_budget_frac", Json::num(s.within_budget as f64 / n)),
-            ("mean_wall_clock", Json::num(s.mean_wall_clock)),
-            ("mean_spent", Json::num(s.mean_spent)),
-            ("runs", Json::arr(outs.iter().map(replication_row))),
-        ]);
-        return ok(fields);
+            None
+        } else {
+            let s = summarise_replications(&outs);
+            let n = s.replications as f64;
+            Some(api::ReplicationSummary {
+                complete_frac: s.complete as f64 / n,
+                within_budget_frac: s.within_budget as f64 / n,
+                mean_wall_clock: s.mean_wall_clock,
+                mean_spent: s.mean_spent,
+                runs: outs
+                    .iter()
+                    .map(|o| api::RunRow {
+                        wall_clock: o.wall_clock,
+                        spent: o.spent,
+                        complete: o.complete,
+                        within_budget: o.within_budget,
+                        rounds: o.rounds.len() as u64,
+                    })
+                    .collect(),
+            })
+        };
+        return api::Response::Campaign(api::CampaignResponse::Replicated {
+            policy: job.spec.policy.name().to_string(),
+            replications: outs.len() as u64,
+            cancelled: cancel.is_cancelled(),
+            summary,
+        })
+        .encode();
     }
     // Single campaign: progress over re-planning rounds.
     let total = job.spec.max_rounds as u64;
@@ -570,34 +613,34 @@ fn exec_campaign(job: &CampaignJob, ctl: &JobCtl) -> Reply {
         ctl.progress(round as u64 + 1, total);
         ctl.partial(round_row(round, sim));
     });
-    let mut fields = vec![
-        ("policy", Json::str(job.spec.policy.name())),
-        ("wall_clock", Json::num(out.wall_clock)),
-        ("spent", Json::num(out.spent)),
-        ("complete", Json::Bool(out.complete)),
-        ("within_budget", Json::Bool(out.within_budget)),
-        ("rounds", Json::num(out.rounds.len() as f64)),
-        ("planned_makespan", Json::num(out.planned.makespan)),
-    ];
-    if cancel.is_cancelled() {
-        fields.push(("cancelled", Json::Bool(true)));
-    }
-    ok(fields)
+    api::Response::Campaign(api::CampaignResponse::Single {
+        policy: job.spec.policy.name().to_string(),
+        wall_clock: out.wall_clock,
+        spent: out.spent,
+        complete: out.complete,
+        within_budget: out.within_budget,
+        rounds: out.rounds.len() as u64,
+        planned_makespan: out.planned.makespan,
+        cancelled: cancel.is_cancelled(),
+    })
+    .encode()
 }
 
 /// Validate a campaign request into a [`CampaignJob`] (every error
 /// surfaces here, synchronously, before anything queues).
-fn parse_campaign(ctx: &Context, req: &Json) -> Result<CampaignJob> {
-    let sys = parse_system(req)?;
-    let budget = budget_of(req)?;
-    let mut spec = CampaignSpec::new(budget);
-    match policy_name(req) {
+fn parse_campaign(ctx: &Context, r: &api::CampaignRequest) -> Result<CampaignJob, ApiError> {
+    let sys = r.target.resolve()?;
+    let mut spec = CampaignSpec::new(r.params.budget);
+    match r.params.policy.as_deref() {
         Some(name) => {
-            spec.policy = ctx.registry.resolve_arc(name).map_err(anyhow::Error::new)?;
+            spec.policy = ctx
+                .registry
+                .resolve_arc(name)
+                .map_err(|e| ApiError::unknown_policy(format!("{e}")))?;
         }
         // Same rule as plan/simulate: an orphan deadline selects the
         // deadline policy rather than being silently ignored.
-        None if req.get("deadline").is_some() => {
+        None if r.params.deadline.is_some() => {
             spec.policy = ctx.registry.get_arc("deadline").expect("builtin");
         }
         None => {}
@@ -605,68 +648,62 @@ fn parse_campaign(ctx: &Context, req: &Json) -> Result<CampaignJob> {
     // Policy knobs (deadline, n_starts, sample_frac, planner, ...) ride
     // on the per-round request template; budget and seed are overridden
     // by the campaign loop itself.
-    spec.base_request = config::solve_request_from_json(req)?;
+    spec.base_request = r.params.solve_request();
     if spec.base_request.remaining.is_some() {
-        return Err(anyhow!(
-            "\"remaining\" is not accepted on campaigns (each round re-plans its own residual)"
+        return Err(ApiError::bad_request(
+            "\"remaining\" is not accepted on campaigns (each round re-plans its own residual)",
         ));
     }
     spec.evaluator = Some(Arc::clone(&ctx.evaluator));
-    if let Some(n) = req.get("noise") {
-        spec.sim.noise = config::noise_from_json(n);
+    if let Some(n) = &r.noise {
+        spec.sim.noise = n.model();
     }
-    spec.sim.seed = req.get("seed").and_then(Json::as_u64).unwrap_or(0);
-    if let Some(r) = req.get("max_rounds").and_then(Json::as_u64) {
-        spec.max_rounds = r as usize;
+    spec.sim.seed = r.params.seed.unwrap_or(0);
+    if let Some(m) = r.max_rounds {
+        spec.max_rounds = m as usize;
     }
-    // A campaign is expensive; bound the wire-driven fan-out so a tiny
-    // request cannot trigger unbounded work or thread allocation.
-    const MAX_REPLICATIONS: u64 = 4096;
-    let replications = u64_field(req, "replications")?.unwrap_or(1).max(1);
-    if replications > MAX_REPLICATIONS {
-        return Err(anyhow!(
-            "replications {replications} exceeds the limit of {MAX_REPLICATIONS}"
-        ));
-    }
-    let threads = bounded_threads(u64_field(req, "threads")?.unwrap_or(1))?;
+    // Replications are wire-bounded at decode time (4096); the single
+    // "threads" field must not also multiply into every round's inner
+    // solver, so the outer fan-out owns the parallelism.
+    let replications = r.replications.unwrap_or(1).max(1) as usize;
+    let threads = r.params.threads.unwrap_or(1) as usize;
     if replications > 1 {
-        // The outer fan-out owns the parallelism — the single "threads"
-        // field must not also multiply into every round's inner solver.
         spec.base_request.threads = 1;
     }
-    Ok(CampaignJob { sys, spec, replications: replications as usize, threads })
+    Ok(CampaignJob { sys, spec, replications, threads })
 }
 
-fn op_campaign(ctx: &Context, req: &Json) -> Result<Reply> {
-    let job = parse_campaign(ctx, req)?;
+fn op_campaign(ctx: &Context, r: &api::CampaignRequest, version: u8) -> Result<Reply, ApiError> {
+    let job = parse_campaign(ctx, r)?;
     match &ctx.job {
         // Already on a pool worker (async submit): run inline.
-        Some(ctl) => Ok(exec_campaign(&job, ctl)),
+        Some(ctl) => Ok(Reply { body: exec_campaign(&job, ctl), shutdown: false }),
         // Synchronous call: identical execution behind the same bounded
         // pool; the caller's thread waits for its own job, and a shard
         // at its backlog bound rejects with `busy` like a submit.
         None => {
-            let prio = config::job_priority_from_json(req)?;
+            let prio = r.placement.job_priority();
             match ctx.engine.run_sync_with(
                 "campaign",
                 prio,
-                Box::new(move |ctl| Ok(exec_campaign(&job, ctl).body)),
+                Box::new(move |ctl| Ok(exec_campaign(&job, ctl))),
             ) {
                 Ok(body) => Ok(Reply { body, shutdown: false }),
-                Err(JobError::Busy { shard, backlog }) => Ok(busy_reply(shard, backlog)),
-                Err(JobError::Failed(e)) => Err(anyhow!("{e}")),
+                Err(JobError::Busy { shard, backlog }) => {
+                    Err(ctx.busy_error(shard, backlog, version))
+                }
+                Err(JobError::Cancelled(e)) => Err(ApiError::cancelled(e)),
+                Err(JobError::Failed(e)) => Err(ApiError::internal(e)),
             }
         }
     }
 }
 
-fn op_estimate_perf(req: &Json) -> Result<Reply> {
-    let sys = parse_system(req)?;
-    let per_cell = req.get("per_cell").and_then(Json::as_u64).unwrap_or(10) as usize;
-    let noise = req.get("noise").map(config::noise_from_json).unwrap_or_else(
-        crate::cloudsim::NoiseModel::none,
-    );
-    let seed = req.get("seed").and_then(Json::as_u64).unwrap_or(0);
+fn op_estimate_perf(r: &api::EstimatePerfRequest) -> Result<api::Response, ApiError> {
+    let sys = r.target.resolve()?;
+    let per_cell = r.per_cell.unwrap_or(10) as usize;
+    let noise = r.noise.map(|n| n.model()).unwrap_or_else(NoiseModel::none);
+    let seed = r.seed.unwrap_or(0);
     let obs = sample_runs(&sys, per_cell, &noise, seed);
     let cells = sys.n_types() * sys.n_apps();
     let prior = vec![0.0; cells];
@@ -686,11 +723,11 @@ fn op_estimate_perf(req: &Json) -> Result<Reply> {
             max_rel = max_rel.max((got - truth).abs() / truth);
         }
     }
-    Ok(ok(vec![
-        ("samples", Json::num(obs.len() as f64)),
-        ("estimate", Json::arr(est.iter().map(|p| Json::num(*p)))),
-        ("max_rel_error", Json::num(max_rel)),
-    ]))
+    Ok(api::Response::EstimatePerf(api::EstimatePerfResponse {
+        samples: obs.len() as u64,
+        estimate: est,
+        max_rel_error: max_rel,
+    }))
 }
 
 #[cfg(test)]
@@ -716,6 +753,27 @@ mod tests {
     fn shutdown_flag() {
         let r = handle(&ctx(), r#"{"op":"shutdown"}"#).unwrap();
         assert!(r.shutdown);
+    }
+
+    #[test]
+    fn v1_reply_bytes_are_pinned() {
+        // Exact wire bytes of the fixed-shape v1 replies: the typed
+        // pipeline must not move a byte.  (These raw strings are the
+        // explicit v1-parity fixtures.)
+        let c = ctx();
+        let body = |line: &str| handle(&c, line).unwrap().body.to_string();
+        assert_eq!(body(r#"{"op":"ping"}"#), r#"{"ok":true,"pong":true}"#);
+        assert_eq!(body(r#"{"op":"shutdown"}"#), r#"{"bye":true,"ok":true}"#);
+        assert_eq!(
+            body(r#"{"op":"cancel","job_id":"j-999"}"#),
+            r#"{"cancelled":false,"ok":true}"#
+        );
+        // Error strings keep their exact v1 text through handle_line
+        // (the transport funnel).
+        let err = handle_line(&c, r#"{"op":"plan"}"#).body.to_string();
+        assert_eq!(err, r#"{"error":"op \"plan\": missing \"budget\"","ok":false}"#);
+        let err = handle_line(&c, "not json").body;
+        assert!(err.get("error").unwrap().as_str().unwrap().starts_with("bad json:"));
     }
 
     #[test]
@@ -799,6 +857,112 @@ mod tests {
         let msg = format!("{e:#}");
         assert!(msg.contains("\"nope\""), "{msg}");
         assert!(msg.contains("list_policies"), "{msg}");
+    }
+
+    #[test]
+    fn v2_errors_are_structured_bodies() {
+        let c = ctx();
+        // Same failure, v2: no Err — a structured error body instead.
+        let r = handle(&c, r#"{"op":"plan","v":2}"#).unwrap();
+        assert_eq!(r.body.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(
+            r.body.path(&["error", "code"]).unwrap().as_str(),
+            Some("bad_request")
+        );
+        let msg = r.body.path(&["error", "message"]).unwrap().as_str().unwrap();
+        assert!(msg.contains("\"plan\"") && msg.contains("budget"), "{msg}");
+        // Code taxonomy: unknown policy / unknown op get their codes.
+        let r = handle(&c, r#"{"op":"plan","budget":10,"policy":"warp","v":2}"#).unwrap();
+        assert_eq!(
+            r.body.path(&["error", "code"]).unwrap().as_str(),
+            Some("unknown_policy")
+        );
+        let r = handle(&c, r#"{"op":"nope","v":2}"#).unwrap();
+        assert_eq!(
+            r.body.path(&["error", "code"]).unwrap().as_str(),
+            Some("unknown_op")
+        );
+        // Unknown job ids report as evicted.
+        let r = handle(&c, r#"{"op":"status","job_id":"j-9","v":2}"#).unwrap();
+        assert_eq!(r.body.path(&["error", "code"]).unwrap().as_str(), Some("evicted"));
+        // Bad version values are rejected, not treated as v1.
+        let r = handle(&c, r#"{"op":"ping","v":3}"#);
+        assert!(r.is_err(), "unsupported version must error");
+        // v2 success bodies are byte-identical to v1.
+        let v1 = handle(&c, r#"{"op":"plan","budget":80}"#).unwrap().body.to_string();
+        let v2 = handle(&c, r#"{"op":"plan","budget":80,"v":2}"#).unwrap().body.to_string();
+        assert_eq!(v1, v2);
+    }
+
+    #[test]
+    fn describe_is_v2_only_and_lists_every_op() {
+        let c = ctx();
+        let e = handle(&c, r#"{"op":"describe"}"#).unwrap_err();
+        assert!(format!("{e:#}").contains("\"v\":2"), "{e:#}");
+        let r = handle(&c, r#"{"op":"describe","v":2}"#).unwrap();
+        let schema = r.body.get("schema").unwrap();
+        assert_eq!(schema, &api::describe_schema());
+        let ops: Vec<&str> = schema
+            .get("ops")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|o| o.get("op").unwrap().as_str().unwrap())
+            .collect();
+        for op in ["plan", "sweep", "simulate", "campaign", "submit", "describe"] {
+            assert!(ops.contains(&op), "{op} missing from describe");
+        }
+    }
+
+    #[test]
+    fn scenarios_are_listable_and_plannable() {
+        let c = ctx();
+        let r = handle(&c, r#"{"op":"list_scenarios"}"#).unwrap();
+        let names: Vec<&str> = r
+            .body
+            .get("scenarios")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|s| s.get("name").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(names, crate::workload::scenario_names());
+        // The "paper" scenario plans identically to the default system.
+        let a = handle(&c, r#"{"op":"plan","budget":80}"#).unwrap().body.to_string();
+        let b = handle(&c, r#"{"op":"plan","budget":80,"scenario":"paper"}"#)
+            .unwrap()
+            .body
+            .to_string();
+        assert_eq!(a, b);
+        // A generated scenario is solvable end-to-end.
+        let r = handle(&c, r#"{"op":"plan","budget":500,"scenario":"heavy-tail"}"#).unwrap();
+        assert_eq!(r.body.get("ok"), Some(&Json::Bool(true)));
+        assert!(r.body.get("makespan").unwrap().as_f64().unwrap() > 0.0);
+        // Conflicts and unknown names are named in the error.
+        let e = handle(
+            &c,
+            r#"{"op":"plan","budget":80,"scenario":"paper","system":"paper"}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("mutually exclusive"), "{e:#}");
+        let e = handle(&c, r#"{"op":"plan","budget":80,"scenario":"warp9"}"#).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("unknown scenario") && msg.contains("heavy-tail"), "{msg}");
+        // Scenario presets work on simulate and campaign too.
+        let r = handle(
+            &c,
+            r#"{"op":"simulate","budget":400,"scenario":"uniform-small","seed":1}"#,
+        )
+        .unwrap();
+        assert_eq!(r.body.get("ok"), Some(&Json::Bool(true)));
+        let r = handle(
+            &c,
+            r#"{"op":"campaign","budget":600,"scenario":"uniform-small","max_rounds":4}"#,
+        )
+        .unwrap();
+        assert_eq!(r.body.get("ok"), Some(&Json::Bool(true)));
     }
 
     #[test]
@@ -1036,6 +1200,25 @@ mod tests {
     }
 
     #[test]
+    fn submitted_v2_job_failures_report_as_failed() {
+        let c = ctx();
+        // The inner job is v2 and invalid: its error is encoded into a
+        // body, which the submit closure must surface as a job failure.
+        let r = handle(
+            &c,
+            r#"{"op":"submit","job":{"op":"plan","v":2,"policy":"warp","budget":10}}"#,
+        )
+        .unwrap();
+        let id = r.body.get("job_id").unwrap().as_str().unwrap().to_string();
+        assert_eq!(
+            c.jobs().wait_terminal(&id, std::time::Duration::from_secs(30)),
+            Some(crate::coordinator::JobState::Failed)
+        );
+        let err = c.jobs().error(&id).unwrap();
+        assert!(err.contains("unknown policy"), "{err}");
+    }
+
+    #[test]
     fn plan_detail_roundtrips_through_config() {
         let c = ctx();
         let r = handle(&c, r#"{"op":"plan","budget":70,"detail":true}"#).unwrap();
@@ -1136,18 +1319,29 @@ mod tests {
         );
         started_rx.recv_timeout(Duration::from_secs(5)).unwrap();
         let filler = engine.submit("fill", Box::new(|_| Ok(Json::Null)));
-        // Async submit is rejected with the structured shape, not an
-        // opaque error string and not a hang.
+        // Async submit is rejected with the exact legacy v1 shape, not
+        // an opaque error string and not a hang.
         let r = handle(&c, r#"{"op":"submit","job":{"op":"plan","budget":80}}"#).unwrap();
-        assert_eq!(r.body.get("ok"), Some(&Json::Bool(false)));
-        assert_eq!(r.body.get("error").unwrap().as_str(), Some("busy"));
-        assert_eq!(r.body.get("shard").unwrap().as_f64(), Some(0.0));
-        assert_eq!(r.body.get("backlog").unwrap().as_f64(), Some(1.0));
+        assert_eq!(
+            r.body.to_string(),
+            r#"{"backlog":1,"error":"busy","ok":false,"shard":0}"#
+        );
+        // The same rejection under v2 is a structured error carrying
+        // the queue-wait-derived retry hint.
+        let r = handle(&c, r#"{"op":"submit","v":2,"job":{"op":"plan","budget":80}}"#).unwrap();
+        assert_eq!(r.body.path(&["error", "code"]).unwrap().as_str(), Some("busy"));
+        assert_eq!(r.body.path(&["error", "detail", "shard"]).unwrap().as_f64(), Some(0.0));
+        assert_eq!(r.body.path(&["error", "detail", "backlog"]).unwrap().as_f64(), Some(1.0));
+        assert!(
+            r.body.path(&["error", "detail", "retry_after_ms"]).unwrap().as_u64().unwrap() >= 1
+        );
         // Synchronous heavy ops get the same rejection.
         let r = handle(&c, r#"{"op":"sweep","budgets":[60]}"#).unwrap();
         assert_eq!(r.body.get("error").unwrap().as_str(), Some("busy"));
         let r = handle(&c, r#"{"op":"campaign","budget":120}"#).unwrap();
         assert_eq!(r.body.get("error").unwrap().as_str(), Some("busy"));
+        let r = handle(&c, r#"{"op":"sweep","budgets":[60],"v":2}"#).unwrap();
+        assert_eq!(r.body.path(&["error", "code"]).unwrap().as_str(), Some("busy"));
         // The rejections are visible in stats.
         let r = handle(&c, r#"{"op":"stats"}"#).unwrap();
         assert!(r.body.path(&["stats", "jobs_rejected"]).unwrap().as_f64().unwrap() >= 3.0);

@@ -409,16 +409,11 @@ fn exec_loop(core: &ServerCore) {
             job: None,
         };
         let t0 = Instant::now();
-        let (body, shutdown) = match protocol::handle(&ctx, &task.line) {
-            Ok(reply) => (reply.body, reply.shutdown),
-            Err(e) => (
-                Json::obj(vec![
-                    ("ok", Json::Bool(false)),
-                    ("error", Json::str(format!("{e:#}"))),
-                ]),
-                false,
-            ),
-        };
+        // handle_line is the single error-shape funnel: decode failures
+        // and protocol failures encode identically (v1 string form for
+        // version-less requests, structured ApiError bodies for v2).
+        let reply = protocol::handle_line(&ctx, &task.line);
+        let (body, shutdown) = (reply.body, reply.shutdown);
         let ok = body.get("ok") == Some(&Json::Bool(true));
         core.metrics.record_request(t0.elapsed(), ok);
         let mut line = body.to_string().into_bytes();
@@ -686,7 +681,10 @@ fn conn_worker_loop(index: usize, core: &ServerCore) {
     }
 }
 
-/// Minimal blocking client for tests, examples and the CLI's `client` op.
+/// Minimal *raw-line* blocking helper: one connection, one verbatim
+/// request line, one reply.  This is the v1 escape hatch — the CLI's
+/// `client` command (user-supplied JSON) and the v1-parity tests use
+/// it; everything else should speak [`super::client::Client`].
 pub fn request(addr: &std::net::SocketAddr, line: &str) -> Result<Json> {
     let mut stream = TcpStream::connect(addr)?;
     stream.set_nodelay(true).ok();

@@ -40,7 +40,11 @@
 //!   `SolveRequest` carries).
 //! * [`coordinator`] — the long-running leader: a TCP JSON protocol server
 //!   with request batching that plans (any policy, by name, with
-//!   `list_policies` discovery), simulates and reports.
+//!   `list_policies` discovery), simulates and reports.  Its wire surface
+//!   is the typed, versioned [`coordinator::api`] (one `Request`/`Response`
+//!   struct per op, structured `ApiError` codes, v2 `describe` schema),
+//!   spoken natively by the first-class blocking
+//!   [`coordinator::Client`].
 //! * [`analysis`] — lower bounds, statistics and the policy-generic
 //!   sweep/figure printers used by the benchmark harness.
 

@@ -2,7 +2,9 @@
 //!
 //! ```text
 //! botsched figures [--fig 1|2] [--overhead o] [--json out.json]
-//! botsched plan    --budget B [--system paper|file.json] [--policy <name>] [--threads T]
+//! botsched scenarios                             # named workload presets
+//! botsched plan    --budget B [--system paper|file.json | --scenario <name>]
+//!                  [--policy <name>] [--threads T]
 //! botsched sweep   [--budgets 40,45,..] [--system ...] [--threads T] [--ablate]
 //! botsched simulate --budget B [--sigma s] [--lifetime m] [--seed n]
 //! botsched campaign --budget B [--lifetime m] [--reserve f] [--seed n]
@@ -28,7 +30,6 @@ use anyhow::{anyhow, bail, Context, Result};
 use botsched::analysis::report::{run_sweep, run_sweep_threads};
 use botsched::analysis::{fractional_cost_floor, makespan_floor};
 use botsched::cloudsim::{run_campaign, sample_runs, CampaignSpec, NoiseModel, SimConfig, Simulator};
-use botsched::config;
 use botsched::coordinator::{Coordinator, CoordinatorConfig};
 use botsched::eval::{NativeEvaluator, PlanEvaluator};
 use botsched::model::System;
@@ -97,10 +98,23 @@ impl Args {
 }
 
 fn load_sys(a: &Args) -> Result<System> {
-    match a.get("system") {
-        Some(spec) => config::load_system(spec),
-        None => Ok(paper::table1_system(a.f64("overhead")?.unwrap_or(0.0))),
-    }
+    // One resolver for --system/--scenario/--overhead: the same
+    // api::SystemRef the wire protocol uses (exclusivity rule, unknown
+    // scenario listing, Table I fallback).
+    let target = botsched::coordinator::api::SystemRef {
+        system: a
+            .get("system")
+            .map(|s| botsched::coordinator::api::SystemSpec::Named(s.to_string())),
+        scenario: a.get("scenario").map(str::to_string),
+        overhead: a.f64("overhead")?,
+    };
+    target.resolve().map_err(|e| {
+        if e.message.contains("unknown scenario") {
+            anyhow!("{} — see `botsched scenarios`", e.message)
+        } else {
+            anyhow!("{}", e.message)
+        }
+    })
 }
 
 fn evaluator(a: &Args) -> Box<dyn PlanEvaluator> {
@@ -143,6 +157,7 @@ fn run(args: Vec<String>) -> Result<()> {
     match cmd.as_str() {
         "figures" => cmd_figures(&a),
         "policies" => cmd_policies(),
+        "scenarios" => cmd_scenarios(),
         "plan" => cmd_plan(&a),
         "sweep" => cmd_sweep(&a),
         "simulate" => cmd_simulate(&a),
@@ -171,6 +186,7 @@ fn print_help() {
          commands:\n\
          \x20 figures   regenerate Table I, Fig. 1, Fig. 2 and the headline claims\n\
          \x20 policies  list the registered scheduling policies\n\
+         \x20 scenarios list the named workload presets (--scenario <name>)\n\
          \x20 plan      plan one budget (--budget B, --policy <name>, --deadline D, --multistart N, --threads T)\n\
          \x20 sweep     full budget sweep (--budgets 40,45,.. --threads T, --ablate for phase ablation)\n\
          \x20 simulate  plan + execute on the simulated cloud (--sigma, --lifetime, --seed)\n\
@@ -186,7 +202,8 @@ fn print_help() {
          \x20 submit    enqueue a job (--priority 0..=9, --deadline-ms D) and print its id\n\
          \x20 jobs      list a coordinator's jobs (state, progress)\n\
          \x20 cancel    cancel a coordinator job (--job j-3)\n\n\
-         common flags: --system paper|paper:<overhead>|file.json, --overhead o, --no-xla"
+         common flags: --system paper|paper:<overhead>|file.json, --scenario <name>,\n\
+         \x20             --overhead o, --no-xla"
     );
 }
 
@@ -219,6 +236,15 @@ fn cmd_policies() -> Result<()> {
         println!("  {:<16} {}", p.name(), p.description());
     }
     println!("\n(select with --policy <name>; \"heuristic\" is accepted as an alias)");
+    Ok(())
+}
+
+fn cmd_scenarios() -> Result<()> {
+    println!("named workload scenarios:");
+    for s in botsched::workload::SCENARIOS {
+        println!("  {:<16} {}", s.name, s.description);
+    }
+    println!("\n(select with --scenario <name>, or \"scenario\" on wire requests)");
     Ok(())
 }
 
@@ -546,36 +572,33 @@ fn cmd_client(a: &Args) -> Result<()> {
 
 /// `botsched submit --priority 9 --deadline-ms 5000 '<json job>'`: wrap
 /// a request as an async engine job with an explicit queue placement.
-/// Prints the job id to poll with `status` — or the structured `busy`
-/// rejection when the target shard's backlog is at its bound.
+/// Prints the job id to poll with `status` — or the typed `busy`
+/// rejection (with the server's retry hint) when the target shard's
+/// backlog is at its bound.
 fn cmd_submit(a: &Args) -> Result<()> {
     let raw = a
         .positional
         .first()
         .ok_or_else(|| anyhow!("usage: botsched submit [--priority P] [--deadline-ms D] '<json job>'"))?;
     let job = botsched::util::Json::parse(raw).map_err(|e| anyhow!("bad job json: {e}"))?;
-    let mut fields = vec![
-        ("op", botsched::util::Json::str("submit")),
-        ("job", job),
-    ];
-    if let Some(p) = a.u64("priority")? {
-        fields.push(("priority", botsched::util::Json::num(p as f64)));
-    }
-    if let Some(d) = a.u64("deadline-ms")? {
-        fields.push(("deadline_ms", botsched::util::Json::num(d as f64)));
-    }
-    let line = botsched::util::Json::obj(fields).to_string();
-    let reply = botsched::coordinator::server::request(&client_addr(a)?, &line)?;
-    match reply.get("job_id").and_then(|v| v.as_str()) {
-        Some(id) => println!("{id}: submitted (poll with `botsched jobs` or the status op)"),
-        None if reply.get("error").and_then(|v| v.as_str()) == Some("busy") => {
-            println!(
+    let placement = botsched::coordinator::api::Placement {
+        priority: a.u64("priority")?,
+        deadline_ms: a.u64("deadline-ms")?,
+    };
+    let mut client = botsched::coordinator::Client::connect(&client_addr(a)?)?;
+    match client.submit_raw(job, placement) {
+        Ok(id) => println!("{id}: submitted (poll with `botsched jobs` or the status op)"),
+        Err(botsched::coordinator::ClientError::Busy(b)) => {
+            print!(
                 "busy: shard {} backlog {} is at its bound — retry later or lower the load",
-                reply.get("shard").and_then(|v| v.as_f64()).unwrap_or(-1.0),
-                reply.get("backlog").and_then(|v| v.as_f64()).unwrap_or(-1.0),
+                b.shard, b.backlog
             );
+            match b.retry_after_ms {
+                Some(ms) => println!(" (server suggests ~{ms}ms)"),
+                None => println!(),
+            }
         }
-        None => println!("{reply}"),
+        Err(e) => return Err(e.into()),
     }
     Ok(())
 }
@@ -589,44 +612,33 @@ fn client_addr(a: &Args) -> Result<std::net::SocketAddr> {
 
 /// `botsched jobs`: list the coordinator's jobs with state + progress.
 fn cmd_jobs(a: &Args) -> Result<()> {
-    let reply = botsched::coordinator::server::request(&client_addr(a)?, r#"{"op":"jobs"}"#)?;
-    let Some(jobs) = reply.get("jobs").and_then(|j| j.as_arr()) else {
-        anyhow::bail!("unexpected reply: {reply}");
-    };
+    let mut client = botsched::coordinator::Client::connect(&client_addr(a)?)?;
+    let jobs = client.jobs()?;
     if jobs.is_empty() {
         println!("no jobs");
         return Ok(());
     }
     println!("{:<8} {:<12} {:<10} progress", "id", "op", "state");
     for j in jobs {
-        let field = |k: &str| j.get(k).and_then(|v| v.as_str()).unwrap_or("?").to_string();
-        let progress = match (
-            j.path(&["progress", "done"]).and_then(|v| v.as_f64()),
-            j.path(&["progress", "total"]).and_then(|v| v.as_f64()),
-        ) {
-            (Some(d), Some(t)) => format!("{d:.0}/{t:.0}"),
-            _ => "-".into(),
+        let progress = match j.progress {
+            Some((d, t)) => format!("{d}/{t}"),
+            None => "-".into(),
         };
-        println!("{:<8} {:<12} {:<10} {progress}", field("id"), field("op"), field("state"));
+        println!("{:<8} {:<12} {:<10} {progress}", j.id, j.op, j.state);
     }
     Ok(())
 }
 
-/// `botsched cancel --job j-3`: fire a job's cancel token.
+/// `botsched cancel --job j-3`: fire a job's cancel token.  The typed
+/// client encodes the request, so a hostile job id cannot inject fields
+/// into the wire line.
 fn cmd_cancel(a: &Args) -> Result<()> {
     let job = a.get("job").ok_or_else(|| anyhow!("--job <job_id> required"))?;
-    // Build the request through the Json writer so a hostile job id
-    // cannot inject fields into the wire line.
-    let line = botsched::util::Json::obj(vec![
-        ("op", botsched::util::Json::str("cancel")),
-        ("job_id", botsched::util::Json::str(job)),
-    ])
-    .to_string();
-    let reply = botsched::coordinator::server::request(&client_addr(a)?, &line)?;
-    match reply.get("cancelled").and_then(|v| v.as_bool()) {
-        Some(true) => println!("{job}: cancellation requested (work stops at its next checkpoint)"),
-        Some(false) => println!("{job}: not cancellable (already finished or unknown)"),
-        None => println!("{reply}"),
+    let mut client = botsched::coordinator::Client::connect(&client_addr(a)?)?;
+    if client.cancel(job)? {
+        println!("{job}: cancellation requested (work stops at its next checkpoint)");
+    } else {
+        println!("{job}: not cancellable (already finished or unknown)");
     }
     Ok(())
 }

@@ -6,11 +6,16 @@
 //! * [`generator`] — seeded random systems (apps, task-size
 //!   distributions, instance catalogues, performance matrices) used by
 //!   the property tests, the scaling benches and the coordinator demo
-//!   traffic.
+//!   traffic;
+//! * [`scenario`] — named presets over the two above, selectable by name
+//!   from the coordinator protocol (`"scenario"` field, `list_scenarios`)
+//!   and the CLI (`--scenario`).
 
 pub mod generator;
 pub mod paper;
+pub mod scenario;
 pub mod traces;
 
 pub use generator::{SizeDistribution, WorkloadGenerator, WorkloadSpec};
+pub use scenario::{build_scenario, scenario_names, Scenario, SCENARIOS};
 pub use traces::{replay, ReplayRow, Trace, TraceEntry};

@@ -1,0 +1,126 @@
+//! Named workload scenarios: curated presets selectable by name.
+//!
+//! The coordinator's wire protocol (the `"scenario"` request field and
+//! the `list_scenarios` op), the CLI (`--scenario`) and tests all pick
+//! problem instances from this one table instead of inlining a full
+//! `"system"` object.  Every scenario is deterministic: the generated
+//! ones are seeded [`WorkloadGenerator`] specs, so two processes (or a
+//! client and a server) naming the same scenario solve the same system.
+
+use crate::model::System;
+use crate::workload::generator::{SizeDistribution, WorkloadGenerator, WorkloadSpec};
+use crate::workload::paper;
+
+/// One named preset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub description: &'static str,
+}
+
+/// The scenario table (stable order: listed / described in this order).
+pub const SCENARIOS: &[Scenario] = &[
+    Scenario {
+        name: "paper",
+        description: "the paper's Table I setup: 3 apps x 250 tasks, 4 instance types, no overhead",
+    },
+    Scenario {
+        name: "uniform-small",
+        description: "generated 3 apps x 100 tasks, 4 types, integer sizes 1..=5 (seed 11)",
+    },
+    Scenario {
+        name: "heavy-tail",
+        description: "generated 4 apps x 250 tasks, 6 types, log-normal task sizes (seed 12)",
+    },
+    Scenario {
+        name: "wide-catalogue",
+        description: "generated 3 apps x 200 tasks, 16 instance types, uniform sizes (seed 13)",
+    },
+];
+
+/// The scenario names, in table order (for error messages and `describe`).
+pub fn scenario_names() -> Vec<&'static str> {
+    SCENARIOS.iter().map(|s| s.name).collect()
+}
+
+/// Build the named scenario's [`System`], or `None` for an unknown name.
+pub fn build_scenario(name: &str) -> Option<System> {
+    match name {
+        "paper" => Some(paper::table1_system(0.0)),
+        "uniform-small" => Some(WorkloadGenerator::new(11).system(&WorkloadSpec {
+            n_apps: 3,
+            n_types: 4,
+            tasks_per_app: 100,
+            sizes: SizeDistribution::EquallySpaced { lo: 1, hi: 5 },
+            ..WorkloadSpec::default()
+        })),
+        "heavy-tail" => Some(WorkloadGenerator::new(12).system(&WorkloadSpec {
+            n_apps: 4,
+            n_types: 6,
+            tasks_per_app: 250,
+            sizes: SizeDistribution::LogNormal { mu: 1.0, sigma: 0.8 },
+            ..WorkloadSpec::default()
+        })),
+        "wide-catalogue" => Some(WorkloadGenerator::new(13).system(&WorkloadSpec {
+            n_apps: 3,
+            n_types: 16,
+            tasks_per_app: 200,
+            sizes: SizeDistribution::Uniform { lo: 0.5, hi: 9.0 },
+            ..WorkloadSpec::default()
+        })),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_listed_scenario_builds() {
+        for s in SCENARIOS {
+            let sys = build_scenario(s.name)
+                .unwrap_or_else(|| panic!("scenario {:?} listed but not buildable", s.name));
+            assert!(!sys.tasks().is_empty(), "{}", s.name);
+            assert!(sys.n_types() >= 1, "{}", s.name);
+            assert!(!s.description.is_empty(), "{}", s.name);
+        }
+        assert!(build_scenario("nope").is_none());
+    }
+
+    #[test]
+    fn scenarios_are_deterministic() {
+        for s in SCENARIOS {
+            let a = build_scenario(s.name).unwrap();
+            let b = build_scenario(s.name).unwrap();
+            assert_eq!(a.tasks().len(), b.tasks().len(), "{}", s.name);
+            for (x, y) in a.tasks().iter().zip(b.tasks()) {
+                assert_eq!(x.size, y.size, "{}", s.name);
+            }
+            for (x, y) in a.instance_types.iter().zip(&b.instance_types) {
+                assert_eq!(x.cost_per_hour, y.cost_per_hour, "{}", s.name);
+            }
+        }
+    }
+
+    #[test]
+    fn paper_scenario_is_the_table1_system() {
+        let sys = build_scenario("paper").unwrap();
+        assert_eq!(sys.tasks().len(), 750);
+        assert_eq!(sys.n_types(), 4);
+        assert_eq!(sys.overhead, 0.0);
+    }
+
+    #[test]
+    fn shapes_match_their_descriptions() {
+        let s = build_scenario("heavy-tail").unwrap();
+        assert_eq!(s.n_apps(), 4);
+        assert_eq!(s.n_types(), 6);
+        assert_eq!(s.tasks().len(), 1000);
+        let s = build_scenario("wide-catalogue").unwrap();
+        assert_eq!(s.n_types(), 16);
+        assert_eq!(s.tasks().len(), 600);
+        let s = build_scenario("uniform-small").unwrap();
+        assert_eq!(s.tasks().len(), 300);
+    }
+}

@@ -1,0 +1,494 @@
+//! The typed API's own test suite: encode→decode round-trips over every
+//! `Request`/`Response` variant (including boundary values), per-op
+//! client-vs-raw-JSON parity over a live coordinator (a v2 typed client
+//! and a raw v1 line must receive byte-identical success bodies), and
+//! the `describe` schema drift snapshot — the test that fails when an
+//! op or field changes without the snapshot being updated.
+
+use botsched::coordinator::api::{
+    describe_schema, ApiError, CampaignRequest, CampaignResponse, CancelRequest, EngineInfo,
+    ErrorCode, EstimatePerfRequest, EstimatePerfResponse, NoiseSpec, Placement, PlanRequest,
+    PlanResponse, PlannerOverrides, ReplicationSummary, Request, Response, RunRow, ShardRow,
+    SimulateRequest, SimulateResponse, SolveParams, StatsResponse, StatusRequest, SubmitRequest,
+    SweepRequest, SweepResponse, SystemRef, SystemSpec, VmRow,
+};
+use botsched::coordinator::server::request as raw_request;
+use botsched::coordinator::{Client, Coordinator, CoordinatorConfig};
+use botsched::util::Json;
+
+fn roundtrip(req: Request) {
+    let encoded = req.encode();
+    let back = Request::decode(&encoded)
+        .unwrap_or_else(|e| panic!("decode({encoded}) failed: {e}"));
+    assert_eq!(back, req, "round-trip drift through {encoded}");
+    // A second encode is bit-stable (canonical form).
+    assert_eq!(back.encode().to_string(), encoded.to_string());
+}
+
+#[test]
+fn every_request_variant_roundtrips() {
+    roundtrip(Request::Ping);
+    roundtrip(Request::Stats);
+    roundtrip(Request::Shutdown);
+    roundtrip(Request::Jobs);
+    roundtrip(Request::ListPolicies);
+    roundtrip(Request::ListScenarios);
+    roundtrip(Request::Describe);
+    roundtrip(Request::Plan(PlanRequest::new(80.0)));
+    roundtrip(Request::Plan(
+        PlanRequest::new(80.0)
+            .with_policy("multistart")
+            .with_deadline(3600.0)
+            .with_seed(7)
+            .with_threads(4)
+            .with_target(SystemRef::scenario("heavy-tail"))
+            .with_detail(),
+    ));
+    roundtrip(Request::Simulate(
+        SimulateRequest::new(80.0)
+            .with_noise(NoiseSpec {
+                task_sigma: Some(0.1),
+                boot_sigma: Some(0.05),
+                mean_lifetime: Some(2500.0),
+            })
+            .with_seed(3)
+            .with_target(SystemRef::named("paper:30")),
+    ));
+    roundtrip(Request::Sweep(
+        SweepRequest::default().with_budgets(vec![40.0, 60.5, 80.0]).with_threads(2),
+    ));
+    roundtrip(Request::Campaign(
+        CampaignRequest::new(150.0)
+            .with_policy("mi")
+            .with_noise(NoiseSpec { mean_lifetime: Some(2500.0), ..NoiseSpec::default() })
+            .with_seed(3)
+            .with_max_rounds(6)
+            .with_replications(64)
+            .with_threads(8),
+    ));
+    roundtrip(Request::EstimatePerf(EstimatePerfRequest {
+        target: SystemRef::default(),
+        per_cell: Some(20),
+        noise: Some(NoiseSpec { task_sigma: Some(0.05), ..NoiseSpec::default() }),
+        seed: Some(9),
+    }));
+    roundtrip(Request::Submit(SubmitRequest::from_request(
+        &Request::Plan(PlanRequest::new(80.0)),
+        Placement { priority: Some(7), deadline_ms: Some(30_000) },
+    )));
+    roundtrip(Request::Status(StatusRequest {
+        job_id: "j-3".into(),
+        partials_from: Some(17),
+    }));
+    roundtrip(Request::Cancel(CancelRequest { job_id: "j-3".into() }));
+}
+
+#[test]
+fn boundary_values_roundtrip_and_out_of_range_rejects() {
+    // Queue placement extremes on submit and sync sweep/campaign.
+    for (priority, deadline_ms) in
+        [(Some(0u64), Some(0u64)), (Some(9), Some(86_400_000_000)), (None, None)]
+    {
+        roundtrip(Request::Submit(SubmitRequest::from_request(
+            &Request::Plan(PlanRequest::new(1.0)),
+            Placement { priority, deadline_ms },
+        )));
+        roundtrip(Request::Sweep(SweepRequest {
+            budgets: Some(vec![1.0]),
+            placement: Placement { priority, deadline_ms },
+            ..SweepRequest::default()
+        }));
+    }
+    // Thread-count bounds (0 = auto, 256 = ceiling) and the solver-knob
+    // edges; remaining may name task id u32::MAX.
+    let mut params = SolveParams::new(0.0);
+    params.threads = Some(0);
+    params.perf_jitter = Some(0.0);
+    params.sample_frac = Some(1.0);
+    params.n_starts = Some(1);
+    params.remaining = Some(vec![0, u32::MAX]);
+    params.planner = Some(PlannerOverrides {
+        max_iters: Some(0),
+        replace_k: Some(3),
+        enable_split: Some(false),
+        ..PlannerOverrides::default()
+    });
+    roundtrip(Request::Plan(PlanRequest {
+        params,
+        target: SystemRef { overhead: Some(30.0), ..SystemRef::default() },
+        detail: false,
+    }));
+    let mut params = SolveParams::new(1e9);
+    params.threads = Some(256);
+    roundtrip(Request::Plan(PlanRequest {
+        params,
+        target: SystemRef {
+            system: Some(SystemSpec::Inline(
+                Json::parse(r#"{"apps":[{"task_sizes":[1]}]}"#).unwrap(),
+            )),
+            ..SystemRef::default()
+        },
+        detail: true,
+    }));
+    roundtrip(Request::Campaign(CampaignRequest::new(1.0).with_replications(4096)));
+    // One-past-the-edge rejects with the bad_request code.
+    for bad in [
+        r#"{"op":"plan","budget":1,"threads":257}"#,
+        r#"{"op":"campaign","budget":1,"replications":4097}"#,
+        r#"{"op":"submit","priority":10,"job":{"op":"ping"}}"#,
+        r#"{"op":"submit","deadline_ms":86400000001,"job":{"op":"ping"}}"#,
+        r#"{"op":"plan","budget":1,"perf_jitter":1.0}"#,
+        r#"{"op":"plan","budget":1,"sample_frac":0}"#,
+        r#"{"op":"plan","budget":1,"remaining":[]}"#,
+        r#"{"op":"plan","budget":1,"remaining":[4294967296]}"#,
+    ] {
+        let e = Request::decode(&Json::parse(bad).unwrap()).unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadRequest, "{bad}");
+    }
+}
+
+fn resp_roundtrip(resp: &Response, decode: impl Fn(&Json) -> Response) {
+    let body = resp.encode();
+    assert_eq!(body.get("ok"), Some(&Json::Bool(true)), "{body}");
+    let back = decode(&body);
+    assert_eq!(&back, resp, "response round-trip drift through {body}");
+    assert_eq!(back.encode().to_string(), body.to_string());
+}
+
+#[test]
+fn every_response_variant_roundtrips() {
+    let plan = PlanResponse {
+        policy: "budget-heuristic".into(),
+        approach: "heuristic".into(),
+        budget: 80.0,
+        effective_budget: 78.5,
+        makespan: 6260.4,
+        cost: 78.0,
+        feasible: true,
+        iterations: 4,
+        probes: 1,
+        vms: vec![
+            VmRow { instance_type: "it2.large".into(), tasks: 120, exec: 3000.5, cost: 12.0 },
+            VmRow { instance_type: "it1".into(), tasks: 0, exec: 0.0, cost: 5.0 },
+        ],
+        plan: Some(Json::parse(r#"{"vms":[]}"#).unwrap()),
+    };
+    resp_roundtrip(&Response::Plan(Box::new(plan)), |b| {
+        Response::Plan(Box::new(PlanResponse::decode(b).unwrap()))
+    });
+    resp_roundtrip(
+        &Response::Simulate(SimulateResponse {
+            policy: "mp".into(),
+            planned_feasible: false,
+            makespan: 100.0,
+            cost: 9.0,
+            completed: 750,
+            stranded: 0,
+            failures: 3,
+        }),
+        |b| Response::Simulate(SimulateResponse::decode(b).unwrap()),
+    );
+    resp_roundtrip(
+        &Response::Sweep(SweepResponse {
+            sweep: Json::parse(r#"{"rows":[{"budget":60,"policy":"mi"}]}"#).unwrap(),
+        }),
+        |b| Response::Sweep(SweepResponse::decode(b).unwrap()),
+    );
+    resp_roundtrip(
+        &Response::Campaign(CampaignResponse::Single {
+            policy: "deadline".into(),
+            wall_clock: 7205.0,
+            spent: 149.0,
+            complete: true,
+            within_budget: true,
+            rounds: 3,
+            planned_makespan: 3600.0,
+            cancelled: false,
+        }),
+        |b| Response::Campaign(CampaignResponse::decode(b).unwrap()),
+    );
+    resp_roundtrip(
+        &Response::Campaign(CampaignResponse::Replicated {
+            policy: "mi".into(),
+            replications: 2,
+            cancelled: true,
+            summary: Some(ReplicationSummary {
+                complete_frac: 0.5,
+                within_budget_frac: 1.0,
+                mean_wall_clock: 9000.0,
+                mean_spent: 140.5,
+                runs: vec![
+                    RunRow {
+                        wall_clock: 8000.0,
+                        spent: 141.0,
+                        complete: true,
+                        within_budget: true,
+                        rounds: 2,
+                    },
+                    RunRow {
+                        wall_clock: 10000.0,
+                        spent: 140.0,
+                        complete: false,
+                        within_budget: true,
+                        rounds: 4,
+                    },
+                ],
+            }),
+        }),
+        |b| Response::Campaign(CampaignResponse::decode(b).unwrap()),
+    );
+    // Cancelled-before-anything-ran: no aggregate block.
+    resp_roundtrip(
+        &Response::Campaign(CampaignResponse::Replicated {
+            policy: "mi".into(),
+            replications: 0,
+            cancelled: true,
+            summary: None,
+        }),
+        |b| Response::Campaign(CampaignResponse::decode(b).unwrap()),
+    );
+    resp_roundtrip(
+        &Response::EstimatePerf(EstimatePerfResponse {
+            samples: 240,
+            estimate: vec![20.0, 24.5, 18.0],
+            max_rel_error: 1e-9,
+        }),
+        |b| Response::EstimatePerf(EstimatePerfResponse::decode(b).unwrap()),
+    );
+    resp_roundtrip(
+        &Response::Stats(StatsResponse {
+            stats: Json::parse(r#"{"requests":7}"#).unwrap(),
+            engine: EngineInfo {
+                shards: 2,
+                queued: 1,
+                max_backlog: 256,
+                shard_stats: vec![
+                    ShardRow { shard: 0, depth: 1, high_water: 3, rejected: 0 },
+                    ShardRow { shard: 1, depth: 0, high_water: 1, rejected: 2 },
+                ],
+            },
+        }),
+        |b| Response::Stats(StatsResponse::decode(b).unwrap()),
+    );
+    // The fixed-shape variants (plus ApiError, pinned in the api unit
+    // tests) complete the surface.
+    assert_eq!(Response::Pong.encode().to_string(), r#"{"ok":true,"pong":true}"#);
+    assert_eq!(Response::Bye.encode().to_string(), r#"{"bye":true,"ok":true}"#);
+    assert_eq!(
+        Response::Submitted { job_id: "j-9".into() }.encode().to_string(),
+        r#"{"job_id":"j-9","ok":true}"#
+    );
+    assert_eq!(
+        Response::Cancelled { cancelled: true }.encode().to_string(),
+        r#"{"cancelled":true,"ok":true}"#
+    );
+    let err = ApiError::bad_request("x");
+    assert_eq!(ApiError::decode(&err.encode_v2()), Some(err));
+}
+
+// ---------------------------------------------------------------------------
+// Client vs raw JSON: per-op byte parity over a live coordinator.
+
+/// Drop measured wall-time fields (sweep rows carry `plan_micros`, the
+/// real planning time) — everything else in the replies is
+/// deterministic and must match byte-for-byte.
+fn strip_timings(j: &Json) -> Json {
+    match j {
+        Json::Obj(m) => Json::Obj(
+            m.iter()
+                .filter(|(k, _)| k.as_str() != "plan_micros")
+                .map(|(k, v)| (k.clone(), strip_timings(v)))
+                .collect(),
+        ),
+        Json::Arr(a) => Json::Arr(a.iter().map(strip_timings).collect()),
+        other => other.clone(),
+    }
+}
+
+#[test]
+fn typed_v2_client_and_raw_v1_lines_get_identical_success_bodies() {
+    let coord = Coordinator::start(CoordinatorConfig {
+        addr: "127.0.0.1:0".into(),
+        use_xla: false,
+        batching: false,
+        ..CoordinatorConfig::default()
+    })
+    .expect("coordinator starts");
+    let addr = coord.local_addr;
+    let mut client = Client::connect(&addr).unwrap();
+
+    // (raw v1 line, typed request) per deterministic op.  The raw lines
+    // are the explicit v1-parity fixtures.
+    let cases: Vec<(&str, Request)> = vec![
+        (r#"{"op":"ping"}"#, Request::Ping),
+        (r#"{"op":"list_policies"}"#, Request::ListPolicies),
+        (r#"{"op":"list_scenarios"}"#, Request::ListScenarios),
+        (r#"{"op":"plan","budget":80}"#, Request::Plan(PlanRequest::new(80.0))),
+        (
+            r#"{"op":"plan","budget":80,"policy":"mp","detail":true}"#,
+            Request::Plan(PlanRequest::new(80.0).with_policy("mp").with_detail()),
+        ),
+        (
+            r#"{"op":"plan","budget":200,"policy":"deadline","deadline":3600,"threads":2}"#,
+            Request::Plan(
+                PlanRequest::new(200.0)
+                    .with_policy("deadline")
+                    .with_deadline(3600.0)
+                    .with_threads(2),
+            ),
+        ),
+        (
+            r#"{"op":"plan","budget":500,"scenario":"heavy-tail"}"#,
+            Request::Plan(PlanRequest::new(500.0).with_target(SystemRef::scenario("heavy-tail"))),
+        ),
+        (
+            r#"{"op":"simulate","budget":80,"noise":{"task_sigma":0.05},"seed":3}"#,
+            Request::Simulate(
+                SimulateRequest::new(80.0)
+                    .with_noise(NoiseSpec { task_sigma: Some(0.05), ..NoiseSpec::default() })
+                    .with_seed(3),
+            ),
+        ),
+        (
+            r#"{"op":"sweep","budgets":[60,80]}"#,
+            Request::Sweep(SweepRequest::default().with_budgets(vec![60.0, 80.0])),
+        ),
+        (
+            r#"{"op":"campaign","budget":150,"noise":{"mean_lifetime":2500},"seed":3,"max_rounds":6}"#,
+            Request::Campaign(
+                CampaignRequest::new(150.0)
+                    .with_noise(NoiseSpec { mean_lifetime: Some(2500.0), ..NoiseSpec::default() })
+                    .with_seed(3)
+                    .with_max_rounds(6),
+            ),
+        ),
+        (
+            r#"{"op":"estimate_perf","per_cell":5}"#,
+            Request::EstimatePerf(EstimatePerfRequest {
+                per_cell: Some(5),
+                ..EstimatePerfRequest::default()
+            }),
+        ),
+    ];
+    for (raw_line, typed) in cases {
+        let raw = raw_request(&addr, raw_line).expect(raw_line);
+        assert_eq!(raw.get("ok"), Some(&Json::Bool(true)), "{raw_line}: {raw}");
+        let via_client = client.call(&typed).unwrap_or_else(|e| panic!("{raw_line}: {e}"));
+        assert_eq!(
+            strip_timings(&raw).to_string(),
+            strip_timings(&via_client).to_string(),
+            "typed v2 reply differs from raw v1 for {raw_line}"
+        );
+    }
+    client.shutdown().unwrap();
+    coord.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Schema drift snapshot.
+
+/// Compact one line per op: `name = field!type, ...` (`!` marks
+/// required).  Regenerate by updating `api::OP_SPECS` *and* this table
+/// together — that is the point of the test.
+const SCHEMA_SNAPSHOT: &[&str] = &[
+    "ping =",
+    "stats =",
+    "list_policies =",
+    "list_scenarios =",
+    "describe =",
+    "plan = budget!number policy:string approach:string deadline:number seed:integer \
+     n_starts:integer perf_jitter:number sample_frac:number threads:integer \
+     remaining:array[integer] planner:object system:string|object scenario:string \
+     overhead:number detail:bool",
+    "simulate = budget!number policy:string approach:string deadline:number seed:integer \
+     n_starts:integer perf_jitter:number sample_frac:number threads:integer \
+     remaining:array[integer] planner:object system:string|object scenario:string \
+     overhead:number noise:object",
+    "sweep = budgets:array[number] threads:integer system:string|object scenario:string \
+     overhead:number priority:integer deadline_ms:integer",
+    "campaign = budget!number policy:string approach:string deadline:number seed:integer \
+     n_starts:integer perf_jitter:number sample_frac:number threads:integer planner:object \
+     system:string|object scenario:string overhead:number noise:object max_rounds:integer \
+     replications:integer priority:integer deadline_ms:integer",
+    "estimate_perf = per_cell:integer noise:object seed:integer system:string|object \
+     scenario:string overhead:number",
+    "submit = job!object priority:integer deadline_ms:integer",
+    "status = job_id!string partials_from:integer",
+    "jobs =",
+    "cancel = job_id!string",
+    "shutdown =",
+];
+
+#[test]
+fn describe_schema_matches_the_snapshot() {
+    let schema = describe_schema();
+    assert_eq!(schema.get("v").unwrap().as_u64(), Some(2));
+    assert_eq!(
+        schema.get("versions").unwrap().as_arr().unwrap(),
+        &[Json::num(1.0), Json::num(2.0)]
+    );
+    let codes: Vec<&str> = schema
+        .get("error_codes")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|c| c.as_str().unwrap())
+        .collect();
+    assert_eq!(
+        codes,
+        ["bad_request", "unknown_policy", "unknown_op", "busy", "cancelled", "evicted", "internal"]
+    );
+    let scenarios: Vec<&str> = schema
+        .get("scenarios")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|s| s.as_str().unwrap())
+        .collect();
+    assert_eq!(scenarios, ["paper", "uniform-small", "heavy-tail", "wide-catalogue"]);
+    // Render each op to the snapshot's compact line form.
+    let rendered: Vec<String> = schema
+        .get("ops")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|op| {
+            let fields: Vec<String> = op
+                .get("fields")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|f| {
+                    format!(
+                        "{}{}{}",
+                        f.get("name").unwrap().as_str().unwrap(),
+                        if f.get("required").unwrap().as_bool().unwrap() { "!" } else { ":" },
+                        f.get("type").unwrap().as_str().unwrap(),
+                    )
+                })
+                .collect();
+            let mut line = format!("{} =", op.get("op").unwrap().as_str().unwrap());
+            if !fields.is_empty() {
+                line.push(' ');
+                line.push_str(&fields.join(" "));
+            }
+            line
+        })
+        .collect();
+    let expected: Vec<String> = SCHEMA_SNAPSHOT
+        .iter()
+        .map(|l| l.split_whitespace().collect::<Vec<_>>().join(" "))
+        .collect();
+    assert_eq!(
+        rendered, expected,
+        "describe schema drifted — update api::OP_SPECS and SCHEMA_SNAPSHOT together"
+    );
+    // Every op also documents a non-empty doc string.
+    for op in schema.get("ops").unwrap().as_arr().unwrap() {
+        assert!(!op.get("doc").unwrap().as_str().unwrap().is_empty());
+    }
+}

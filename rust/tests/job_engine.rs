@@ -9,6 +9,10 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use botsched::cloudsim::{run_campaign_replications_ctl, CampaignSpec, NoiseModel};
+use botsched::coordinator::api::{
+    CampaignRequest, CancelRequest, NoiseSpec, Placement, Request, StatusRequest, SubmitRequest,
+    SweepRequest,
+};
 use botsched::coordinator::protocol::{handle, Context};
 use botsched::coordinator::{Busy, JobEngine, JobPriority, JobState, Metrics};
 use botsched::eval::NativeEvaluator;
@@ -24,10 +28,33 @@ fn ctx() -> Context {
     Context::new(Arc::new(NativeEvaluator), Arc::new(Metrics::new()))
 }
 
+/// Encode a typed request as one protocol line (nothing in this file
+/// hand-assembles op JSON strings).
+fn line_of(req: &Request) -> String {
+    req.encode().to_string()
+}
+
+/// Submit a typed request as an async engine job; returns the job id.
+fn submit(c: &Context, job: &Request) -> String {
+    let req = Request::Submit(SubmitRequest::from_request(job, Placement::default()));
+    let r = handle(c, &line_of(&req)).expect("submit");
+    r.body.get("job_id").unwrap().as_str().unwrap().to_string()
+}
+
+/// Fire a job's cancel token over the protocol; returns the ack flag.
+fn cancel(c: &Context, id: &str) -> bool {
+    let req = Request::Cancel(CancelRequest { job_id: id.to_string() });
+    let r = handle(c, &line_of(&req)).expect("cancel");
+    r.body.get("cancelled").unwrap().as_bool().unwrap()
+}
+
 /// Poll `status` until `pred` holds or the job goes terminal; returns
 /// the last status body.  Panics after ~30s.
 fn poll_status(c: &Context, id: &str, pred: impl Fn(&Json) -> bool) -> Json {
-    let line = format!(r#"{{"op":"status","job_id":"{id}"}}"#);
+    let line = line_of(&Request::Status(StatusRequest {
+        job_id: id.to_string(),
+        partials_from: None,
+    }));
     for _ in 0..30_000 {
         let s = handle(c, &line).expect("status").body;
         let job = s.get("job").expect("job object").clone();
@@ -316,13 +343,16 @@ fn campaign_cancel_stops_within_one_replication_boundary() {
 fn submitted_campaign_job_reports_progress_and_cancels_mid_flight() {
     let c = ctx();
     // Big Monte-Carlo campaign: hundreds of replications, sequential.
-    let r = handle(
+    let id = submit(
         &c,
-        r#"{"op":"submit","job":{"op":"campaign","budget":150,"replications":2000,
-            "noise":{"mean_lifetime":2500},"seed":3,"max_rounds":6}}"#,
-    )
-    .unwrap();
-    let id = r.body.get("job_id").unwrap().as_str().unwrap().to_string();
+        &Request::Campaign(
+            CampaignRequest::new(150.0)
+                .with_replications(2000)
+                .with_noise(NoiseSpec { mean_lifetime: Some(2500.0), ..NoiseSpec::default() })
+                .with_seed(3)
+                .with_max_rounds(6),
+        ),
+    );
 
     // Wait until at least two replications finished (progress + partials
     // visible while running), then cancel.
@@ -336,8 +366,7 @@ fn submitted_campaign_job_reports_progress_and_cancels_mid_flight() {
     );
     assert!(job.get("partial_results").is_some(), "partials must stream mid-flight");
 
-    let r = handle(&c, &format!(r#"{{"op":"cancel","job_id":"{id}"}}"#)).unwrap();
-    assert_eq!(r.body.get("cancelled"), Some(&Json::Bool(true)));
+    assert!(cancel(&c, &id));
     let state = c.jobs().wait_terminal(&id, Duration::from_secs(60)).unwrap();
     assert_eq!(state, JobState::Cancelled);
 
@@ -355,13 +384,11 @@ fn sweep_status_streams_progress_and_partial_cells() {
     let c = ctx();
     // 30 budgets x 3 policies = 90 cells, sequential: plenty of window
     // to observe an unfinished sweep.
-    let budgets: Vec<String> = (0..30).map(|i| format!("{}", 40 + i * 5)).collect();
-    let line = format!(
-        r#"{{"op":"submit","job":{{"op":"sweep","budgets":[{}],"threads":1}}}}"#,
-        budgets.join(",")
+    let budgets: Vec<f64> = (0..30).map(|i| f64::from(40 + i * 5)).collect();
+    let id = submit(
+        &c,
+        &Request::Sweep(SweepRequest::default().with_budgets(budgets).with_threads(1)),
     );
-    let r = handle(&c, &line).unwrap();
-    let id = r.body.get("job_id").unwrap().as_str().unwrap().to_string();
 
     // Acceptance: status on an unfinished sweep returns progress counts
     // plus at least one partial cell result.
@@ -378,8 +405,7 @@ fn sweep_status_streams_progress_and_partial_cells() {
     assert!(cell.get("budget").is_some());
 
     // Cancel stops the remaining cells.
-    let r = handle(&c, &format!(r#"{{"op":"cancel","job_id":"{id}"}}"#)).unwrap();
-    assert_eq!(r.body.get("cancelled"), Some(&Json::Bool(true)));
+    assert!(cancel(&c, &id));
     assert_eq!(
         c.jobs().wait_terminal(&id, Duration::from_secs(60)),
         Some(JobState::Cancelled)
@@ -399,24 +425,26 @@ fn sweep_status_streams_progress_and_partial_cells() {
 fn synchronous_heavy_ops_flow_through_the_engine() {
     let c = ctx();
     // A sync campaign must produce the usual reply...
-    let r = handle(
-        &c,
-        r#"{"op":"campaign","budget":150,"noise":{"mean_lifetime":2500},"seed":3,"max_rounds":6}"#,
-    )
-    .unwrap();
+    let campaign = Request::Campaign(
+        CampaignRequest::new(150.0)
+            .with_noise(NoiseSpec { mean_lifetime: Some(2500.0), ..NoiseSpec::default() })
+            .with_seed(3)
+            .with_max_rounds(6),
+    );
+    let r = handle(&c, &line_of(&campaign)).unwrap();
     assert_eq!(r.body.get("ok"), Some(&Json::Bool(true)));
     assert!(r.body.get("rounds").unwrap().as_f64().unwrap() >= 1.0);
     // ...and leave a finished job behind in the engine's registry (the
     // proof it ran on the pool, not inline on the connection thread).
-    let jobs = handle(&c, r#"{"op":"jobs"}"#).unwrap();
-    let jobs = jobs.body.get("jobs").unwrap().as_arr().unwrap().clone();
+    let jobs = handle(&c, &line_of(&Request::Jobs)).unwrap();
+    let jobs = jobs.body.get("jobs").unwrap().as_arr().unwrap().to_vec();
     assert!(
         jobs.iter().any(|j| j.get("op").unwrap().as_str() == Some("campaign")
             && j.get("state").unwrap().as_str() == Some("done")),
         "sync campaign missing from the job list: {jobs:?}"
     );
     // stats reports the job counters + engine gauges.
-    let s = handle(&c, r#"{"op":"stats"}"#).unwrap();
+    let s = handle(&c, &line_of(&Request::Stats)).unwrap();
     assert!(s.body.path(&["stats", "jobs_submitted"]).unwrap().as_f64().unwrap() >= 1.0);
     assert!(s.body.path(&["engine", "shards"]).unwrap().as_f64().unwrap() >= 1.0);
     assert_eq!(s.body.path(&["engine", "queued"]).unwrap().as_f64(), Some(0.0));
@@ -426,8 +454,10 @@ fn synchronous_heavy_ops_flow_through_the_engine() {
 fn submitted_plan_jobs_still_roundtrip_on_the_pool() {
     // The pre-engine submit/status/cancel surface is preserved.
     let c = ctx();
-    let r = handle(&c, r#"{"op":"submit","job":{"op":"plan","budget":80}}"#).unwrap();
-    let id = r.body.get("job_id").unwrap().as_str().unwrap().to_string();
+    let id = submit(
+        &c,
+        &Request::Plan(botsched::coordinator::api::PlanRequest::new(80.0)),
+    );
     assert_eq!(
         c.jobs().wait_terminal(&id, Duration::from_secs(60)),
         Some(JobState::Done)
@@ -435,8 +465,7 @@ fn submitted_plan_jobs_still_roundtrip_on_the_pool() {
     let job = c.jobs().status(&id).unwrap();
     assert!(job.path(&["result", "makespan"]).unwrap().as_f64().unwrap() > 0.0);
     // Cancelling a finished job is a no-op.
-    let r = handle(&c, &format!(r#"{{"op":"cancel","job_id":"{id}"}}"#)).unwrap();
-    assert_eq!(r.body.get("cancelled"), Some(&Json::Bool(false)));
+    assert!(!cancel(&c, &id));
 }
 
 // ---------------------------------------------------------------------------

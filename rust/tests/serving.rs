@@ -1,15 +1,19 @@
 //! Integration tests for the admission-controlled serving core: fixed
 //! thread pools under hundreds of idle connections, pipelined-request
-//! ordering on one socket, interleaved correctness across concurrent
-//! sockets, clean shutdown with connections still open, and structured
-//! `busy` rejections at the `--max-backlog` bound over a real socket.
+//! ordering on one socket (driven through the typed client's
+//! `send`/`recv`), interleaved correctness across concurrent sockets,
+//! clean shutdown with connections still open, and `busy` rejections at
+//! the `--max-backlog` bound over a real socket — byte-pinned in the
+//! legacy v1 shape via raw lines (the explicit v1-parity fixtures) and
+//! typed via the client's `ClientError::Busy`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::time::Duration;
 
+use botsched::coordinator::api::{CampaignRequest, NoiseSpec, Placement, PlanRequest, Request};
 use botsched::coordinator::server::request;
-use botsched::coordinator::{Coordinator, CoordinatorConfig};
+use botsched::coordinator::{Client, ClientError, Coordinator, CoordinatorConfig};
 use botsched::util::Json;
 
 fn start(conn_workers: usize, shards: usize, max_backlog: usize) -> Coordinator {
@@ -25,14 +29,15 @@ fn start(conn_workers: usize, shards: usize, max_backlog: usize) -> Coordinator 
     .expect("coordinator starts")
 }
 
-/// A persistent line-protocol client (the `request` helper reconnects
-/// per call; these tests need long-lived and pipelined connections).
-struct LineClient {
+/// A raw line-protocol client for the v1-parity fixtures (byte-exact
+/// lines, blank lines, malformed input).  Typed traffic goes through
+/// [`Client`].
+struct RawClient {
     stream: TcpStream,
     reader: BufReader<TcpStream>,
 }
 
-impl LineClient {
+impl RawClient {
     fn connect(addr: std::net::SocketAddr) -> Self {
         let stream = TcpStream::connect(addr).expect("connect");
         stream.set_nodelay(true).ok();
@@ -92,25 +97,23 @@ fn hundreds_of_idle_connections_cost_no_threads() {
         .collect();
 
     // Active traffic interleaves correctly across the idle crowd: each
-    // client's plan reply echoes the budget it asked for.
-    let mut clients: Vec<(f64, LineClient)> = (0..8)
-        .map(|i| (60.0 + f64::from(i) * 5.0, LineClient::connect(addr)))
+    // typed client's plan reply echoes the budget it asked for.
+    let mut clients: Vec<(f64, Client)> = (0..8)
+        .map(|i| (60.0 + f64::from(i) * 5.0, Client::connect(&addr).expect("connect")))
         .collect();
     for (budget, cl) in clients.iter_mut() {
-        cl.send(&format!(r#"{{"op":"plan","budget":{budget}}}"#));
+        cl.send(&Request::Plan(PlanRequest::new(*budget))).expect("send plan");
     }
     for (budget, cl) in clients.iter_mut() {
-        let r = cl.recv();
-        assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{r}");
-        assert_eq!(r.get("budget").unwrap().as_f64(), Some(*budget));
+        let body = cl.recv().expect("plan reply");
+        let plan = botsched::coordinator::api::PlanResponse::decode(&body).expect("typed plan");
+        assert_eq!(plan.budget, *budget);
+        assert!(plan.makespan > 0.0);
     }
     // The same sockets keep working for a second round (connections are
     // persistent, not request-scoped).
     for (_, cl) in clients.iter_mut() {
-        cl.send(r#"{"op":"ping"}"#);
-    }
-    for (_, cl) in clients.iter_mut() {
-        assert_eq!(cl.recv().get("pong"), Some(&Json::Bool(true)));
+        cl.ping().expect("ping");
     }
 
     // Thread accounting (linux): 300 idle + 8 active connections must
@@ -142,34 +145,49 @@ fn hundreds_of_idle_connections_cost_no_threads() {
 fn pipelined_requests_on_one_socket_respond_in_order() {
     let c = start(1, 1, 0);
     let addr = c.local_addr;
-    let mut cl = LineClient::connect(addr);
-    // Three requests in a single write: the server must answer each on
-    // its own line, in request order (one in-flight request at a time
-    // per connection pins the framing).
+    // Three requests in flight on one connection through the typed
+    // client: the server must answer each on its own line, in request
+    // order (one in-flight request at a time per connection pins the
+    // framing).
+    let mut cl = Client::connect(&addr).unwrap();
+    cl.send(&Request::Ping).unwrap();
+    cl.send(&Request::Plan(PlanRequest::new(60.0))).unwrap();
+    cl.send(&Request::Plan(PlanRequest::new(80.0))).unwrap();
+    assert_eq!(cl.pending(), 3);
+    let first = cl.recv().unwrap();
+    assert_eq!(first.get("pong"), Some(&Json::Bool(true)), "{first}");
+    let second = cl.recv().unwrap();
+    assert_eq!(second.get("budget").unwrap().as_f64(), Some(60.0));
+    let third = cl.recv().unwrap();
+    assert_eq!(third.get("budget").unwrap().as_f64(), Some(80.0));
+    assert_eq!(cl.pending(), 0);
+    // Synchronous calls refuse to run with pipelined replies pending.
+    cl.send(&Request::Ping).unwrap();
+    assert!(matches!(cl.ping(), Err(ClientError::Protocol(_))));
+    cl.recv().unwrap();
+    cl.ping().unwrap();
+
+    // v1-parity fixtures (raw bytes): a multi-line burst in a single
+    // write, blank lines skipped, malformed input answered with an
+    // error while the socket survives.
+    let mut raw = RawClient::connect(addr);
     let batch = concat!(
         r#"{"op":"ping"}"#,
         "\n",
         r#"{"op":"plan","budget":60}"#,
-        "\n",
-        r#"{"op":"plan","budget":80}"#,
         "\n"
     );
-    cl.stream.write_all(batch.as_bytes()).unwrap();
-    let first = cl.recv();
-    assert_eq!(first.get("pong"), Some(&Json::Bool(true)), "{first}");
-    let second = cl.recv();
-    assert_eq!(second.get("budget").unwrap().as_f64(), Some(60.0));
-    let third = cl.recv();
-    assert_eq!(third.get("budget").unwrap().as_f64(), Some(80.0));
-    // Blank lines are skipped, not answered (parity with the old server).
-    cl.stream.write_all(b"\n  \n{\"op\":\"ping\"}\n").unwrap();
-    assert_eq!(cl.recv().get("pong"), Some(&Json::Bool(true)));
-    // Malformed input still gets an error reply and keeps the socket.
-    cl.send("this is not json");
-    let r = cl.recv();
+    raw.stream.write_all(batch.as_bytes()).unwrap();
+    assert_eq!(raw.recv().get("pong"), Some(&Json::Bool(true)));
+    assert_eq!(raw.recv().get("budget").unwrap().as_f64(), Some(60.0));
+    raw.stream.write_all(b"\n  \n{\"op\":\"ping\"}\n").unwrap();
+    assert_eq!(raw.recv().get("pong"), Some(&Json::Bool(true)));
+    raw.send("this is not json");
+    let r = raw.recv();
     assert_eq!(r.get("ok"), Some(&Json::Bool(false)));
-    cl.send(r#"{"op":"ping"}"#);
-    assert_eq!(cl.recv().get("pong"), Some(&Json::Bool(true)));
+    assert!(r.get("error").unwrap().as_str().is_some(), "v1 errors stay strings: {r}");
+    raw.send(r#"{"op":"ping"}"#);
+    assert_eq!(raw.recv().get("pong"), Some(&Json::Bool(true)));
     c.shutdown();
 }
 
@@ -183,28 +201,33 @@ fn shutdown_completes_with_idle_connections_still_open() {
     // The old thread-per-connection server joined every connection
     // thread on shutdown — with idle clients attached it could never
     // finish.  The readiness-driven server must stop promptly.
-    let r = request(&addr, r#"{"op":"shutdown"}"#).unwrap();
-    assert_eq!(r.get("ok"), Some(&Json::Bool(true)));
+    let mut cl = Client::connect(&addr).unwrap();
+    cl.shutdown().unwrap();
     c.wait(); // returns only after full teardown; a hang here fails CI
     std::thread::sleep(Duration::from_millis(50));
-    assert!(request(&addr, r#"{"op":"ping"}"#).is_err(), "listener must be closed");
+    assert!(Client::connect(&addr).and_then(|mut c| c.ping()).is_err(), "listener must close");
     drop(idle);
 }
 
 #[test]
 fn saturating_a_shard_over_the_wire_yields_structured_busy() {
     // One shard, one queue slot: the third concurrent submit must be
-    // rejected with the structured busy shape, not hang or queue.
+    // rejected with the busy shape, not hang or queue.
     let c = start(1, 1, 1);
     let addr = c.local_addr;
-    let slow = r#"{"op":"submit","job":{"op":"campaign","budget":150,"replications":2000,"noise":{"mean_lifetime":2500},"seed":3,"max_rounds":6}}"#;
-    let r1 = request(&addr, slow).unwrap();
-    let running = r1.get("job_id").unwrap().as_str().unwrap().to_string();
+    let mut cl = Client::connect(&addr).unwrap();
+    let slow_job = Request::Campaign(
+        CampaignRequest::new(150.0)
+            .with_replications(2000)
+            .with_noise(NoiseSpec { mean_lifetime: Some(2500.0), ..NoiseSpec::default() })
+            .with_seed(3)
+            .with_max_rounds(6),
+    );
+    let running = cl.submit(&slow_job, Placement::default()).unwrap();
     // Wait until the first job occupies the worker.
     let mut state = String::new();
     for _ in 0..3000 {
-        let s = request(&addr, &format!(r#"{{"op":"status","job_id":"{running}"}}"#)).unwrap();
-        state = s.path(&["job", "state"]).unwrap().as_str().unwrap().to_string();
+        state = cl.status(&running, None).unwrap().state;
         if state == "running" {
             break;
         }
@@ -213,25 +236,36 @@ fn saturating_a_shard_over_the_wire_yields_structured_busy() {
     assert_eq!(state, "running", "first job never started");
     // Second fills the single queue slot; a high priority cannot talk
     // its way past admission control.
-    let r2 = request(&addr, slow).unwrap();
-    let queued = r2.get("job_id").unwrap().as_str().unwrap().to_string();
-    let r3 = request(
+    let queued = cl.submit(&slow_job, Placement::default()).unwrap();
+    // v1-parity fixture: the raw version-less reply keeps the exact
+    // legacy busy bytes (no retry hint).
+    let raw = request(
         &addr,
         r#"{"op":"submit","priority":9,"job":{"op":"plan","budget":80}}"#,
     )
     .unwrap();
-    assert_eq!(r3.get("ok"), Some(&Json::Bool(false)), "{r3}");
-    assert_eq!(r3.get("error").unwrap().as_str(), Some("busy"));
-    assert_eq!(r3.get("shard").unwrap().as_f64(), Some(0.0));
-    assert_eq!(r3.get("backlog").unwrap().as_f64(), Some(1.0));
-    // The rejection shows up in the shard gauges.
-    let stats = request(&addr, r#"{"op":"stats"}"#).unwrap();
-    let shard0 = &stats.path(&["engine", "shard_stats"]).unwrap().as_arr().unwrap()[0];
-    assert!(shard0.get("rejected").unwrap().as_f64().unwrap() >= 1.0);
-    assert_eq!(stats.path(&["engine", "max_backlog"]).unwrap().as_f64(), Some(1.0));
+    assert_eq!(
+        raw.to_string(),
+        r#"{"backlog":1,"error":"busy","ok":false,"shard":0}"#
+    );
+    // The typed client gets the typed rejection, with the queue-wait
+    // derived retry hint (the first job started, so the reservoir has
+    // at least one sample).
+    let placement = Placement { priority: Some(9), deadline_ms: None };
+    let err = cl
+        .submit(&Request::Plan(PlanRequest::new(80.0)), placement)
+        .unwrap_err();
+    let ClientError::Busy(busy) = err else { panic!("expected Busy, got {err}") };
+    assert_eq!(busy.shard, 0);
+    assert_eq!(busy.backlog, 1);
+    assert!(busy.retry_after_ms.unwrap() >= 1, "{busy:?}");
+    // The rejections show up in the typed shard gauges.
+    let stats = cl.stats().unwrap();
+    assert_eq!(stats.engine.max_backlog, 1);
+    assert!(stats.engine.shard_stats[0].rejected >= 2);
     // Clean up: cancel both campaign jobs, then stop the server.
     for id in [&running, &queued] {
-        request(&addr, &format!(r#"{{"op":"cancel","job_id":"{id}"}}"#)).unwrap();
+        cl.cancel(id).unwrap();
     }
     c.shutdown();
 }
