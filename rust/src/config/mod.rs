@@ -42,6 +42,17 @@ pub fn job_priority_from_json(j: &Json) -> Result<JobPriority> {
         .job_priority())
 }
 
+/// The inverse of [`job_priority_from_json`]: encode a placement into
+/// the same JSON shape it parses.  The journal's `accept` records use
+/// this so replayed jobs re-enqueue under their original placement.
+pub fn job_priority_to_json(p: &JobPriority) -> Json {
+    let mut fields = vec![("priority", Json::num(f64::from(p.priority)))];
+    if let Some(ms) = p.deadline_ms {
+        fields.push(("deadline_ms", Json::num(ms as f64)));
+    }
+    Json::obj(fields)
+}
+
 /// Parse a [`System`] from its JSON description.
 pub fn system_from_json(j: &Json) -> Result<System> {
     let mut b = SystemBuilder::new();
@@ -269,6 +280,20 @@ mod tests {
             let j = Json::parse(bad).unwrap();
             assert!(job_priority_from_json(&j).is_err(), "{bad} must be rejected");
         }
+    }
+
+    #[test]
+    fn job_priority_roundtrips_through_json() {
+        for p in [
+            JobPriority::default(),
+            JobPriority::new(7),
+            JobPriority::new(3).with_deadline_ms(2500),
+        ] {
+            let j = job_priority_to_json(&p);
+            assert_eq!(job_priority_from_json(&j).unwrap(), p, "{j}");
+        }
+        // Defaults encode compactly: no deadline field when none is set.
+        assert_eq!(job_priority_to_json(&JobPriority::new(2)).to_string(), r#"{"priority":2}"#);
     }
 
     #[test]

@@ -804,6 +804,28 @@ impl PlanRequest {
         self.detail = true;
         self
     }
+
+    /// The canonical solve-cache key for this request: a sorted-field
+    /// JSON rendering of the system target and the solve knobs, with
+    /// [`crate::persist::CACHE_VERSION`] baked in.  Outcome-irrelevant
+    /// knobs are excluded — `threads` only changes how fast the solve
+    /// runs (pinned by the sweep determinism tests) and `detail` only
+    /// shapes the reply, which is rebuilt per request from the cached
+    /// [`crate::scheduler::SolveOutcome`].  `seed` stays in the key
+    /// because it changes the solution.  Field order on the wire is
+    /// irrelevant: [`Json::obj`] sorts keys, so permuted requests hash
+    /// identically.
+    pub fn cache_key(&self) -> String {
+        let mut params = self.params.clone();
+        params.threads = None;
+        let mut fields: Vec<(&'static str, Json)> = vec![
+            ("cache_version", Json::num(f64::from(crate::persist::CACHE_VERSION))),
+            ("op", Json::str("plan")),
+        ];
+        params.encode_into(&mut fields);
+        self.target.encode_into(&mut fields);
+        Json::obj(fields).to_string()
+    }
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -950,6 +972,44 @@ pub struct CancelRequest {
     pub job_id: String,
 }
 
+/// What a `persist` request asks of the durability layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PersistAction {
+    /// Journal + cache statistics (the default when `action` is absent).
+    Stats,
+    /// Trigger a journal compaction, then report statistics.
+    Compact,
+}
+
+/// The `persist` op (v2 only): durability statistics and maintenance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PersistRequest {
+    pub action: PersistAction,
+}
+
+impl PersistRequest {
+    fn decode(j: &Json) -> Result<Self, ApiError> {
+        let action = match j.get("action") {
+            None => PersistAction::Stats,
+            Some(v) => match v.as_str() {
+                Some("stats") => PersistAction::Stats,
+                Some("compact") => PersistAction::Compact,
+                Some(other) => {
+                    return Err(ApiError::bad_request(format!(
+                        "persist: unknown action {other:?} (try \"stats\" or \"compact\")"
+                    )))
+                }
+                None => {
+                    return Err(ApiError::bad_request(format!(
+                        "persist: \"action\" must be a string, got {v}"
+                    )))
+                }
+            },
+        };
+        Ok(Self { action })
+    }
+}
+
 /// A decoded coordinator request.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
@@ -969,6 +1029,8 @@ pub enum Request {
     Submit(SubmitRequest),
     Status(StatusRequest),
     Cancel(CancelRequest),
+    /// v2 only: journal + cache statistics and manual compaction.
+    Persist(PersistRequest),
 }
 
 impl Request {
@@ -990,6 +1052,7 @@ impl Request {
             Request::Submit(_) => "submit",
             Request::Status(_) => "status",
             Request::Cancel(_) => "cancel",
+            Request::Persist(_) => "persist",
         }
     }
 
@@ -1099,11 +1162,12 @@ impl Request {
                     .ok_or_else(|| ApiError::bad_request("cancel: missing \"job_id\""))?
                     .to_string(),
             }),
+            "persist" => Request::Persist(PersistRequest::decode(j)?),
             _ => {
                 return Err(ApiError::unknown_op(
-                    "no such op (try list_policies, list_scenarios, describe, plan, sweep, \
-                     simulate, campaign, estimate_perf, submit, status, jobs, cancel, stats, \
-                     ping, shutdown)",
+                    "no such op (try list_policies, list_scenarios, describe, persist, plan, \
+                     sweep, simulate, campaign, estimate_perf, submit, status, jobs, cancel, \
+                     stats, ping, shutdown)",
                 ))
             }
         })
@@ -1183,6 +1247,13 @@ impl Request {
             }
             Request::Cancel(r) => {
                 fields.push(("job_id", Json::str(&r.job_id)));
+            }
+            Request::Persist(r) => {
+                // Stats is the default: encode it bare so the canonical
+                // wire form round-trips.
+                if r.action == PersistAction::Compact {
+                    fields.push(("action", Json::str("compact")));
+                }
             }
         }
         Json::obj(fields)
@@ -1540,6 +1611,9 @@ pub enum Response {
     Status { job: Json },
     Jobs { jobs: Json },
     Cancelled { cancelled: bool },
+    /// The `persist` reply: journal + cache durability statistics
+    /// (schema owned by the protocol layer's `op_persist`).
+    Persist { persist: Json },
 }
 
 impl Response {
@@ -1709,6 +1783,7 @@ impl Response {
             Response::Cancelled { cancelled } => {
                 Json::obj(vec![ok, ("cancelled", Json::Bool(*cancelled))])
             }
+            Response::Persist { persist } => Json::obj(vec![ok, ("persist", persist.clone())]),
         }
     }
 }
@@ -1765,6 +1840,11 @@ pub const OP_SPECS: &[OpSpec] = &[
     OpSpec { name: "list_policies", doc: "registered scheduling policies", fields: &[] },
     OpSpec { name: "list_scenarios", doc: "named workload presets", fields: &[] },
     OpSpec { name: "describe", doc: "this schema (v2 only)", fields: &[] },
+    OpSpec {
+        name: "persist",
+        doc: "journal + cache durability stats; action \"compact\" rewrites the journal (v2 only)",
+        fields: &[f("action", "string", false)],
+    },
     OpSpec {
         name: "plan",
         doc: "solve one budget through a named policy",
@@ -2025,14 +2105,78 @@ mod tests {
         let table: Vec<&str> = OP_SPECS.iter().map(|o| o.name).collect();
         for op in [
             "ping", "stats", "shutdown", "jobs", "list_policies", "list_scenarios",
-            "describe", "plan", "simulate", "sweep", "campaign", "estimate_perf",
-            "submit", "status", "cancel",
+            "describe", "persist", "plan", "simulate", "sweep", "campaign",
+            "estimate_perf", "submit", "status", "cancel",
         ] {
             assert!(table.contains(&op), "op {op:?} missing from OP_SPECS");
         }
-        assert_eq!(table.len(), 15, "unknown extra op in OP_SPECS: {table:?}");
+        assert_eq!(table.len(), 16, "unknown extra op in OP_SPECS: {table:?}");
         let schema = describe_schema();
-        assert_eq!(schema.get("ops").unwrap().as_arr().unwrap().len(), 15);
+        assert_eq!(schema.get("ops").unwrap().as_arr().unwrap().len(), 16);
         assert_eq!(schema.get("error_codes").unwrap().as_arr().unwrap().len(), 7);
+    }
+
+    #[test]
+    fn persist_request_decodes_and_roundtrips() {
+        let dec = |s: &str| Request::decode(&Json::parse(s).unwrap());
+        assert_eq!(
+            dec(r#"{"op":"persist"}"#).unwrap(),
+            Request::Persist(PersistRequest { action: PersistAction::Stats })
+        );
+        assert_eq!(
+            dec(r#"{"op":"persist","action":"stats"}"#).unwrap(),
+            Request::Persist(PersistRequest { action: PersistAction::Stats })
+        );
+        let compact = dec(r#"{"op":"persist","action":"compact"}"#).unwrap();
+        assert_eq!(
+            compact,
+            Request::Persist(PersistRequest { action: PersistAction::Compact })
+        );
+        assert_eq!(
+            compact.encode().to_string(),
+            r#"{"action":"compact","op":"persist"}"#
+        );
+        // The canonical Stats encoding drops the default action.
+        assert_eq!(
+            Request::Persist(PersistRequest { action: PersistAction::Stats })
+                .encode()
+                .to_string(),
+            r#"{"op":"persist"}"#
+        );
+        let e = dec(r#"{"op":"persist","action":"flush"}"#).unwrap_err();
+        assert_eq!(e.code, ErrorCode::BadRequest);
+        assert_eq!(
+            e.message,
+            "persist: unknown action \"flush\" (try \"stats\" or \"compact\")"
+        );
+        let e = dec(r#"{"op":"persist","action":7}"#).unwrap_err();
+        assert_eq!(e.message, "persist: \"action\" must be a string, got 7");
+    }
+
+    #[test]
+    fn plan_cache_key_is_canonical() {
+        let dec = |s: &str| match Request::decode(&Json::parse(s).unwrap()).unwrap() {
+            Request::Plan(r) => r,
+            other => panic!("expected plan, got {other:?}"),
+        };
+        // Wire field order does not matter.
+        let a = dec(r#"{"op":"plan","budget":80,"policy":"mbf","seed":7}"#);
+        let b = dec(r#"{"seed":7,"policy":"mbf","budget":80,"op":"plan"}"#);
+        assert_eq!(a.cache_key(), b.cache_key());
+        // Outcome-irrelevant knobs are excluded from the key...
+        let threaded = dec(r#"{"op":"plan","budget":80,"policy":"mbf","seed":7,"threads":4}"#);
+        assert_eq!(a.cache_key(), threaded.cache_key());
+        let detailed = dec(r#"{"op":"plan","budget":80,"policy":"mbf","seed":7,"detail":true}"#);
+        assert_eq!(a.cache_key(), detailed.cache_key());
+        // ...while outcome-relevant ones all miss.
+        for other in [
+            r#"{"op":"plan","budget":90,"policy":"mbf","seed":7}"#,
+            r#"{"op":"plan","budget":80,"policy":"mp","seed":7}"#,
+            r#"{"op":"plan","budget":80,"policy":"mbf","seed":8}"#,
+            r#"{"op":"plan","budget":80,"policy":"mbf","seed":7,"scenario":"paper"}"#,
+        ] {
+            assert_ne!(a.cache_key(), dec(other).cache_key(), "{other}");
+        }
+        assert!(a.cache_key().contains("cache_version"), "{}", a.cache_key());
     }
 }

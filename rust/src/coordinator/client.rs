@@ -346,6 +346,18 @@ impl Client {
             .ok_or_else(|| ClientError::Protocol(format!("describe reply missing schema: {body}")))
     }
 
+    /// `persist` (v2): journal + solve-cache durability stats; pass
+    /// `compact: true` to rewrite the journal down to its live records
+    /// first.
+    pub fn persist(&mut self, compact: bool) -> Result<Json, ClientError> {
+        let action =
+            if compact { api::PersistAction::Compact } else { api::PersistAction::Stats };
+        let body = self.call(&api::Request::Persist(api::PersistRequest { action }))?;
+        body.get("persist")
+            .cloned()
+            .ok_or_else(|| ClientError::Protocol(format!("persist reply missing persist: {body}")))
+    }
+
     /// `stats`: request metrics + engine queue gauges.
     pub fn stats(&mut self) -> Result<api::StatsResponse, ClientError> {
         let body = self.call(&api::Request::Stats)?;

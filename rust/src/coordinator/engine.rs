@@ -360,6 +360,24 @@ impl JobEngine {
     /// starts when a worker for its shard (or a stealing neighbour)
     /// frees up, in (priority, deadline, FIFO) order.
     pub fn try_submit(&self, op: &str, prio: JobPriority, work: JobFn) -> Result<String, Busy> {
+        self.try_submit_journaled(op, prio, None, work)
+    }
+
+    /// [`try_submit`](Self::try_submit) that also journals the accepted
+    /// job when `line` (the raw request to re-execute after a crash) is
+    /// given and a journal is attached.  The accept record is fsynced
+    /// *under the queues lock*, after the stop/backlog checks and before
+    /// the heap push — durability before visibility: no worker can
+    /// observe (or finish) a job whose admission is not yet on disk,
+    /// and busy-rejected submissions are never journaled.  Sync heavy
+    /// ops pass `line = None` and stay off the journal entirely.
+    pub fn try_submit_journaled(
+        &self,
+        op: &str,
+        prio: JobPriority,
+        line: Option<&str>,
+        work: JobFn,
+    ) -> Result<String, Busy> {
         // Relative deadline -> absolute instant at admission time, so
         // EDF ordering compares real urgency across submission times.
         // (The wire layer bounds deadline_ms; for direct library callers
@@ -397,6 +415,10 @@ impl JobEngine {
                 self.registry.discard(&id);
                 self.metrics.record_job_rejected();
                 return Err(Busy { shard, backlog });
+            }
+            if let (Some(line), Some(journal)) = (line, self.registry.journal()) {
+                // Durability before visibility (see the method doc).
+                journal.admit(&id, op, line, prio);
             }
             let seq = q.next_seq;
             q.next_seq += 1;
@@ -465,6 +487,45 @@ impl JobEngine {
             }
             None => Err(JobError::Failed(format!("job {id} unknown to the registry"))),
         }
+    }
+
+    /// Re-enqueue a journal-recovered job under its pre-crash id (the
+    /// registry record must already exist via `restore`).  Replay only,
+    /// at startup.  Deliberately bypasses the backlog bound: admission
+    /// was granted before the crash, and recovery must not turn a full
+    /// queue into data loss.  Writes no journal record — the original
+    /// accept still covers this job.  Relative deadlines restart from
+    /// recovery time (the original submission instant did not survive).
+    pub fn resubmit_recovered(&self, id: &str, prio: JobPriority, work: JobFn) {
+        let deadline = prio.deadline_ms.map(|ms| {
+            let now = Instant::now();
+            now.checked_add(Duration::from_millis(ms))
+                .unwrap_or_else(|| now + Duration::from_secs(u64::from(u32::MAX)))
+        });
+        let shard = shard_of(id, self.n_shards);
+        {
+            let mut q = self.shared.queues.lock().unwrap();
+            if self.shared.stop.load(Ordering::Acquire) {
+                drop(q);
+                self.metrics.record_job_submitted();
+                self.registry.fail(id, "engine shutting down".into());
+                self.metrics.record_job_end(&JobState::Failed);
+                return;
+            }
+            let seq = q.next_seq;
+            q.next_seq += 1;
+            let s = &mut q.shards[shard];
+            s.heap.push(Queued {
+                priority: prio.priority,
+                deadline,
+                seq,
+                id: id.to_string(),
+                work,
+            });
+            s.high_water = s.high_water.max(s.heap.len());
+        }
+        self.metrics.record_job_submitted();
+        self.shared.ready.notify_all();
     }
 
     /// Stop the pool: cancels every live job (their tokens fire, running
@@ -771,6 +832,18 @@ mod tests {
         // Queue drained: admission accepts again.
         let ok = e.try_submit("t", JobPriority::default(), Box::new(|_| Ok(Json::Null)));
         assert!(ok.is_ok());
+    }
+
+    #[test]
+    fn resubmit_recovered_runs_under_the_pre_crash_id() {
+        let e = engine(2);
+        e.registry().restore("j-41", "plan", JobPriority::default());
+        e.resubmit_recovered("j-41", JobPriority::default(), Box::new(|_| Ok(Json::num(5.0))));
+        assert_eq!(
+            e.registry().wait_terminal("j-41", Duration::from_secs(5)),
+            Some(JobState::Done)
+        );
+        assert_eq!(e.registry().result("j-41"), Some(Json::num(5.0)));
     }
 
     #[test]

@@ -23,6 +23,13 @@ struct Inner {
     /// Submits rejected at admission (a shard queue at its backlog
     /// bound) — nothing was queued or registered for these.
     jobs_rejected: u64,
+    /// Solve-cache accounting: `plan` lookups that hit / missed, plus
+    /// inserts and capacity evictions.  All zero when the server runs
+    /// without `--cache-capacity`.
+    cache_hits: u64,
+    cache_misses: u64,
+    cache_inserts: u64,
+    cache_evictions: u64,
     /// Microsecond latencies of the most recent requests (ring buffer).
     latencies_us: Vec<u64>,
     latency_pos: usize,
@@ -80,6 +87,26 @@ impl Metrics {
     /// One submit rejected at the backlog bound.
     pub fn record_job_rejected(&self) {
         self.inner.lock().unwrap().jobs_rejected += 1;
+    }
+
+    /// One solve-cache lookup that served a stored outcome.
+    pub fn record_cache_hit(&self) {
+        self.inner.lock().unwrap().cache_hits += 1;
+    }
+
+    /// One solve-cache lookup that fell through to the solver.
+    pub fn record_cache_miss(&self) {
+        self.inner.lock().unwrap().cache_misses += 1;
+    }
+
+    /// One outcome stored in the solve cache.
+    pub fn record_cache_insert(&self) {
+        self.inner.lock().unwrap().cache_inserts += 1;
+    }
+
+    /// One LRU entry evicted to make room.
+    pub fn record_cache_evict(&self) {
+        self.inner.lock().unwrap().cache_evictions += 1;
     }
 
     /// One job's time-in-queue (admission to worker pickup).
@@ -143,6 +170,10 @@ impl Metrics {
             ("jobs_failed", Json::num(m.jobs_failed as f64)),
             ("jobs_cancelled", Json::num(m.jobs_cancelled as f64)),
             ("jobs_rejected", Json::num(m.jobs_rejected as f64)),
+            ("cache_hits", Json::num(m.cache_hits as f64)),
+            ("cache_misses", Json::num(m.cache_misses as f64)),
+            ("cache_inserts", Json::num(m.cache_inserts as f64)),
+            ("cache_evictions", Json::num(m.cache_evictions as f64)),
             ("latency_us_p50", Json::num(pct(&lat, 0.50))),
             ("latency_us_p95", Json::num(pct(&lat, 0.95))),
             ("latency_us_p99", Json::num(pct(&lat, 0.99))),
@@ -185,6 +216,11 @@ mod tests {
         m.record_job_rejected();
         m.record_queue_wait(Duration::from_micros(250));
         m.record_queue_wait(Duration::from_micros(750));
+        m.record_cache_miss();
+        m.record_cache_insert();
+        m.record_cache_hit();
+        m.record_cache_hit();
+        m.record_cache_evict();
         let s = m.snapshot();
         assert_eq!(s.get("requests").unwrap().as_f64(), Some(2.0));
         assert_eq!(s.get("errors").unwrap().as_f64(), Some(1.0));
@@ -195,6 +231,10 @@ mod tests {
         assert_eq!(s.get("jobs_cancelled").unwrap().as_f64(), Some(1.0));
         assert_eq!(s.get("jobs_failed").unwrap().as_f64(), Some(0.0));
         assert_eq!(s.get("jobs_rejected").unwrap().as_f64(), Some(1.0));
+        assert_eq!(s.get("cache_hits").unwrap().as_f64(), Some(2.0));
+        assert_eq!(s.get("cache_misses").unwrap().as_f64(), Some(1.0));
+        assert_eq!(s.get("cache_inserts").unwrap().as_f64(), Some(1.0));
+        assert_eq!(s.get("cache_evictions").unwrap().as_f64(), Some(1.0));
         assert!(s.get("latency_us_p95").unwrap().as_f64().unwrap() >= 100.0);
         // Two samples: floor-indexed percentiles both land on the lower
         // sample (index (n-1)*p truncates to 0), like the latency pins.

@@ -59,6 +59,43 @@
 //!
 //! Python never runs here; the request path is rust + the AOT artifact.
 //!
+//! ## Durability (`--journal`, `--cache-capacity`)
+//!
+//! With `--journal <path>` the coordinator writes an append-only,
+//! checksummed job journal ([`crate::persist::Journal`]) and **survives
+//! crashes**:
+//!
+//! * An async submit is fsynced to the journal *before* its job id is
+//!   returned (durability before visibility), and every terminal result
+//!   (`done`/`failed`) is fsynced when it lands.  `start` and `cancel`
+//!   records ride the OS buffer — losing one costs a re-run or a
+//!   re-cancel, never a wrong answer.
+//! * On restart the journal replays: jobs that finished before the
+//!   crash are servable from `status` with their original result bytes;
+//!   jobs that were accepted but unfinished **re-enqueue under their
+//!   original ids** and run again.  Queue deadlines restart from
+//!   recovery time.
+//! * The journal compacts automatically (rewrite-and-swap) once
+//!   obsolete records dominate; `{"op":"persist","action":"compact",
+//!   "v":2}` forces a pass.  A torn tail from a mid-write crash is
+//!   detected by length/checksum framing and truncated on open.
+//! * Journal I/O failures *after* open degrade to lost durability, not
+//!   lost availability: the op still executes, with a warning on
+//!   stderr.
+//!
+//! Synchronous heavy ops (`campaign`/`sweep` without `submit`) are
+//! never journaled — their caller's connection dies with the crash, so
+//! there is nobody to deliver a recovered result to.
+//!
+//! With `--cache-capacity N` repeated identical `plan` requests are
+//! answered from a bounded LRU solve cache
+//! ([`crate::persist::SolveCache`]) keyed by a canonical,
+//! version-stamped encoding of the request (presentation knobs like
+//! `detail`/`threads` excluded).  Cache traffic shows up in `stats`
+//! (`cache_hits` / `cache_misses` / `cache_inserts` /
+//! `cache_evictions`), and `{"op":"persist","v":2}` reports both
+//! stores' state.
+//!
 //! ## The typed, versioned wire API
 //!
 //! The protocol's single source of truth is [`api`]: a typed
@@ -119,6 +156,8 @@
 //!                        # high_water / rejected, max_backlog,
 //!                        # jobs_rejected, queue-wait percentiles
 //! {"op":"describe","v":2}          # machine-readable op/field schema
+//! {"op":"persist","v":2}           # journal + solve-cache stats
+//! {"op":"persist","action":"compact","v":2}   # force journal compaction
 //! {"op":"shutdown"}
 //! ```
 

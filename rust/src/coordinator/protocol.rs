@@ -35,7 +35,7 @@ use crate::scheduler::{PolicyRegistry, SolveOutcome};
 use crate::util::{CancelToken, Json};
 
 use super::api::{self, ApiError};
-use super::engine::{JobCtl, JobEngine, JobError};
+use super::engine::{JobCtl, JobEngine, JobError, JobFn};
 use super::state::JobRegistry;
 use super::Metrics;
 
@@ -52,6 +52,14 @@ pub struct Context {
     /// a job): heavy ops then execute inline with this handle's cancel
     /// token and progress sink instead of re-submitting to the pool.
     pub job: Option<JobCtl>,
+    /// Content-addressed solve cache consulted by `plan` (see
+    /// [`crate::persist::SolveCache`]).  `None` when the server runs
+    /// without `--cache-capacity` — every plan then solves fresh.
+    pub cache: Option<Arc<crate::persist::SolveCache>>,
+    /// Durable job journal backing crash recovery (see
+    /// [`crate::persist::Journal`]).  Present only when the server was
+    /// started with `--journal`; the `persist` op reports on it.
+    pub journal: Option<Arc<crate::persist::Journal>>,
 }
 
 impl Context {
@@ -74,6 +82,8 @@ impl Context {
             engine,
             registry: Arc::new(PolicyRegistry::builtin()),
             job: None,
+            cache: None,
+            journal: None,
         }
     }
 
@@ -89,6 +99,8 @@ impl Context {
             engine: Arc::clone(&self.engine),
             registry: Arc::clone(&self.registry),
             job: None,
+            cache: self.cache.clone(),
+            journal: self.journal.clone(),
         }
     }
 
@@ -227,6 +239,14 @@ fn dispatch(ctx: &Context, req: &api::Request, version: u8) -> Result<Reply, Api
             }
             Ok(Reply::new(api::Response::Schema(api::describe_schema())))
         }
+        R::Persist(r) => {
+            if version < api::V2 {
+                return Err(ApiError::bad_request(
+                    "\"persist\" requires protocol version 2 (send \"v\":2)",
+                ));
+            }
+            op_persist(ctx, r).map(Reply::new)
+        }
         R::Plan(r) => op_plan(ctx, r).map(Reply::new),
         R::Simulate(r) => op_simulate(ctx, r).map(Reply::new),
         R::Sweep(r) => op_sweep(ctx, r, version),
@@ -273,36 +293,43 @@ fn op_submit(ctx: &Context, r: &api::SubmitRequest, version: u8) -> Result<Reply
     // Decode validated the inner op's presence and rejected control ops.
     let inner_op = r.job.get("op").and_then(Json::as_str).unwrap_or("?").to_string();
     let prio = r.placement.job_priority();
-    let worker_ctx = ctx.clone_shared();
     let line = r.job.to_string();
-    let submitted = ctx.engine.try_submit(
+    let submitted = ctx.engine.try_submit_journaled(
         &inner_op,
         prio,
-        Box::new(move |ctl| {
-            let mut job_ctx = worker_ctx;
-            job_ctx.job = Some(ctl.clone());
-            match handle(&job_ctx, &line) {
-                // A v2 job encodes its failures into the body; surface
-                // them as job failures so `status` reports `"failed"`.
-                Ok(reply) if reply.body.get("ok") == Some(&Json::Bool(false)) => {
-                    let msg = reply
-                        .body
-                        .path(&["error", "message"])
-                        .or_else(|| reply.body.get("error"))
-                        .and_then(Json::as_str)
-                        .unwrap_or("job failed")
-                        .to_string();
-                    Err(msg)
-                }
-                Ok(reply) => Ok(reply.body),
-                Err(e) => Err(format!("{e:#}")),
-            }
-        }),
+        Some(&line),
+        job_work(ctx.clone_shared(), line.clone()),
     );
     match submitted {
         Ok(job_id) => Ok(Reply::new(api::Response::Submitted { job_id })),
         Err(busy) => Err(ctx.busy_error(busy.shard, busy.backlog, version)),
     }
+}
+
+/// The pool-worker closure executing one submitted (or journal-replayed)
+/// request line: re-enters [`handle`] with the job's control handle
+/// installed, so heavy ops run inline with its cancel token.
+fn job_work(worker_ctx: Context, line: String) -> JobFn {
+    Box::new(move |ctl| {
+        let mut job_ctx = worker_ctx;
+        job_ctx.job = Some(ctl.clone());
+        match handle(&job_ctx, &line) {
+            // A v2 job encodes its failures into the body; surface
+            // them as job failures so `status` reports `"failed"`.
+            Ok(reply) if reply.body.get("ok") == Some(&Json::Bool(false)) => {
+                let msg = reply
+                    .body
+                    .path(&["error", "message"])
+                    .or_else(|| reply.body.get("error"))
+                    .and_then(Json::as_str)
+                    .unwrap_or("job failed")
+                    .to_string();
+                Err(msg)
+            }
+            Ok(reply) => Ok(reply.body),
+            Err(e) => Err(format!("{e:#}")),
+        }
+    })
 }
 
 /// `status`: current state, progress and streaming partial results.
@@ -386,9 +413,37 @@ fn solve_with(
 
 fn op_plan(ctx: &Context, r: &api::PlanRequest) -> Result<api::Response, ApiError> {
     let sys = r.target.resolve()?;
+    // Consult the solve cache first: the key canonicalises the target
+    // and the outcome-relevant params (response-only knobs like
+    // `detail` and `threads` are excluded — see PlanRequest::cache_key),
+    // so a hit serves the exact prior outcome without re-solving.
+    let key = ctx.cache.as_ref().map(|_| r.cache_key());
+    if let (Some(cache), Some(key)) = (&ctx.cache, &key) {
+        if let Some(outcome) = cache.get(key) {
+            ctx.metrics.record_cache_hit();
+            ctx.metrics.record_plan();
+            return Ok(plan_response(&sys, r, &outcome));
+        }
+        ctx.metrics.record_cache_miss();
+    }
     let outcome = solve_with(ctx, &sys, &r.params)?;
+    // Only successful solves are cached: errors must re-validate.
+    if let (Some(cache), Some(key)) = (&ctx.cache, key) {
+        let evicted = cache.insert(key, outcome.clone());
+        ctx.metrics.record_cache_insert();
+        if evicted {
+            ctx.metrics.record_cache_evict();
+        }
+    }
     ctx.metrics.record_plan();
-    Ok(api::Response::Plan(Box::new(api::PlanResponse {
+    Ok(plan_response(&sys, r, &outcome))
+}
+
+/// Assemble the `plan` reply from a (fresh or cached) solve outcome.
+/// Response-only knobs (`detail`) are applied here, after the cache, so
+/// cached outcomes serve every presentation variant.
+fn plan_response(sys: &System, r: &api::PlanRequest, outcome: &SolveOutcome) -> api::Response {
+    api::Response::Plan(Box::new(api::PlanResponse {
         policy: outcome.policy.to_string(),
         approach: crate::scheduler::legacy_name(outcome.policy).to_string(),
         budget: r.params.budget,
@@ -405,14 +460,14 @@ fn op_plan(ctx: &Context, r: &api::PlanRequest) -> Result<api::Response, ApiErro
             .map(|vm| api::VmRow {
                 instance_type: sys.instance_type(vm.it).name.clone(),
                 tasks: vm.len() as u64,
-                exec: vm.exec(&sys),
-                cost: vm.cost(&sys),
+                exec: vm.exec(sys),
+                cost: vm.cost(sys),
             })
             .collect(),
         // Full task-level assignment on request (importable via
         // config::plan_from_json for external execution engines).
-        plan: r.detail.then(|| config::plan_to_json(&sys, &outcome.plan)),
-    })))
+        plan: r.detail.then(|| config::plan_to_json(sys, &outcome.plan)),
+    }))
 }
 
 fn op_simulate(ctx: &Context, r: &api::SimulateRequest) -> Result<api::Response, ApiError> {
@@ -728,6 +783,77 @@ fn op_estimate_perf(r: &api::EstimatePerfRequest) -> Result<api::Response, ApiEr
         estimate: est,
         max_rel_error: max_rel,
     }))
+}
+
+/// `persist` (v2 only): durability introspection — journal + cache
+/// stats, and on-demand journal compaction.
+fn op_persist(ctx: &Context, r: &api::PersistRequest) -> Result<api::Response, ApiError> {
+    if r.action == api::PersistAction::Compact {
+        let j = ctx.journal.as_ref().ok_or_else(|| {
+            ApiError::bad_request(
+                "\"compact\" requires a journal (start the server with --journal <path>)",
+            )
+        })?;
+        j.compact()
+            .map_err(|e| ApiError::internal(format!("journal compaction failed: {e}")))?;
+    }
+    let journal = match &ctx.journal {
+        Some(j) => j.stats(),
+        None => Json::obj(vec![("enabled", Json::Bool(false))]),
+    };
+    let cache = match &ctx.cache {
+        Some(c) => {
+            let (capacity, entries) = c.stats();
+            Json::obj(vec![
+                ("capacity", Json::num(capacity as f64)),
+                ("enabled", Json::Bool(true)),
+                ("entries", Json::num(entries as f64)),
+            ])
+        }
+        None => Json::obj(vec![("enabled", Json::Bool(false))]),
+    };
+    Ok(api::Response::Persist {
+        persist: Json::obj(vec![("cache", cache), ("journal", journal)]),
+    })
+}
+
+/// Re-install the journal's recovered jobs on startup: terminal jobs
+/// become servable `status` entries with their pre-crash results;
+/// jobs that were accepted but never finished re-enqueue under their
+/// original ids (admission was granted before the crash, so the replay
+/// deliberately bypasses the backlog bound).  Relative deadlines
+/// restart from recovery time — wall-clock elapsed during the outage
+/// is not charged against them.
+pub fn replay_journal(ctx: &Context, recovered: Vec<crate::persist::RecoveredJob>) {
+    let registry = ctx.engine.registry();
+    // Reserve past the highest recovered id so new jobs never collide.
+    let max_id = recovered
+        .iter()
+        .filter_map(|j| j.id.strip_prefix("j-").and_then(|s| s.parse::<u64>().ok()))
+        .max();
+    if let Some(m) = max_id {
+        registry.reserve_ids(m + 1);
+    }
+    for job in recovered {
+        match job.terminal {
+            Some(t) => {
+                let state = match t.state.as_str() {
+                    "done" => super::JobState::Done,
+                    "cancelled" => super::JobState::Cancelled,
+                    _ => super::JobState::Failed,
+                };
+                registry.install_terminal(&job.id, &job.op, job.priority, state, t.result, t.error);
+            }
+            None => {
+                registry.restore(&job.id, &job.op, job.priority);
+                ctx.engine.resubmit_recovered(
+                    &job.id,
+                    job.priority,
+                    job_work(ctx.clone_shared(), job.line.clone()),
+                );
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1297,6 +1423,70 @@ mod tests {
         assert_eq!(job.get("priority").unwrap().as_f64(), Some(4.0));
         assert_eq!(job.get("deadline_ms").unwrap().as_f64(), Some(60000.0));
         assert!(job.get("queue_wait_ms").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn persist_is_v2_only_and_reports_disabled_stores() {
+        let c = ctx();
+        // v1 request: versioned-op gate, same wording as describe's.
+        let e = handle(&c, r#"{"op":"persist"}"#).unwrap_err();
+        assert!(format!("{e:#}").contains("\"v\":2"), "{e:#}");
+        // No journal, no cache configured: both stores report disabled.
+        let r = handle(&c, r#"{"op":"persist","v":2}"#).unwrap();
+        assert_eq!(r.body.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(
+            r.body.path(&["persist", "journal", "enabled"]),
+            Some(&Json::Bool(false))
+        );
+        assert_eq!(
+            r.body.path(&["persist", "cache", "enabled"]),
+            Some(&Json::Bool(false))
+        );
+        // Compaction without a journal is a client error, not a panic.
+        let r = handle(&c, r#"{"op":"persist","action":"compact","v":2}"#).unwrap();
+        assert_eq!(
+            r.body.path(&["error", "code"]).unwrap().as_str(),
+            Some("bad_request")
+        );
+        let msg = r.body.path(&["error", "message"]).unwrap().as_str().unwrap();
+        assert!(msg.contains("--journal"), "{msg}");
+        // Unknown actions are named in the error.
+        let r = handle(&c, r#"{"op":"persist","action":"wipe","v":2}"#).unwrap();
+        let msg = r.body.path(&["error", "message"]).unwrap().as_str().unwrap();
+        assert!(msg.contains("\"wipe\"") && msg.contains("compact"), "{msg}");
+    }
+
+    #[test]
+    fn plan_cache_hit_returns_identical_bytes_and_counts() {
+        let mut c = ctx();
+        c.cache = Some(Arc::new(crate::persist::SolveCache::new(8)));
+        let stat = |c: &Context, key: &str| {
+            handle(c, r#"{"op":"stats"}"#)
+                .unwrap()
+                .body
+                .path(&["stats", key])
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        let a = handle(&c, r#"{"op":"plan","budget":80}"#).unwrap().body.to_string();
+        assert_eq!(stat(&c, "cache_misses"), 1.0);
+        assert_eq!(stat(&c, "cache_inserts"), 1.0);
+        // The identical request is served from the cache, byte-for-byte.
+        let b = handle(&c, r#"{"op":"plan","budget":80}"#).unwrap().body.to_string();
+        assert_eq!(a, b);
+        assert_eq!(stat(&c, "cache_hits"), 1.0);
+        // A different budget is a different key.
+        handle(&c, r#"{"op":"plan","budget":90}"#).unwrap();
+        assert_eq!(stat(&c, "cache_misses"), 2.0);
+        // Response-only knobs don't fragment the key: `detail` hits the
+        // cached outcome and still gets its plan payload, and `threads`
+        // hits too.
+        let r = handle(&c, r#"{"op":"plan","budget":80,"detail":true}"#).unwrap();
+        assert!(r.body.get("plan").is_some());
+        handle(&c, r#"{"op":"plan","budget":80,"threads":2}"#).unwrap();
+        assert_eq!(stat(&c, "cache_hits"), 3.0);
+        assert_eq!(stat(&c, "cache_evictions"), 0.0);
     }
 
     #[test]

@@ -70,6 +70,14 @@ pub struct CoordinatorConfig {
     /// (256).  Submits beyond the bound are rejected with the
     /// structured `{"error":"busy",...}` response.
     pub max_backlog: usize,
+    /// Durable job journal path (`--journal`).  `None` disables
+    /// persistence; with a path, accepted submits and terminal results
+    /// survive a crash and are replayed on the next start.
+    pub journal: Option<std::path::PathBuf>,
+    /// Solve-cache capacity in entries (`--cache-capacity`).  `0`
+    /// disables the cache; otherwise repeated identical `plan`
+    /// requests are answered from the LRU cache without re-solving.
+    pub cache_capacity: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -82,6 +90,8 @@ impl Default for CoordinatorConfig {
             shards: 0,
             conn_workers: 0,
             max_backlog: 0,
+            journal: None,
+            cache_capacity: 0,
         }
     }
 }
@@ -170,6 +180,40 @@ impl Coordinator {
             config.max_backlog,
             Arc::clone(&metrics),
         ));
+        let policies = Arc::new(crate::scheduler::PolicyRegistry::builtin());
+        let cache = (config.cache_capacity > 0)
+            .then(|| Arc::new(crate::persist::SolveCache::new(config.cache_capacity)));
+        // Open the journal (attaching it to the registry so every later
+        // accept/transition writes through) and replay what survived the
+        // last run — all before the transport threads start, so no
+        // client can observe a half-recovered registry.
+        let journal = match &config.journal {
+            Some(path) => {
+                let (j, recovered) = crate::persist::Journal::open(path)
+                    .with_context(|| format!("opening journal {}", path.display()))?;
+                let j = Arc::new(j);
+                engine.registry().attach_journal(Arc::clone(&j));
+                if !recovered.is_empty() {
+                    eprintln!(
+                        "coordinator: journal {} replaying {} job(s)",
+                        path.display(),
+                        recovered.len()
+                    );
+                    let ctx = Context {
+                        evaluator: Arc::clone(&evaluator),
+                        metrics: Arc::clone(&metrics),
+                        engine: Arc::clone(&engine),
+                        registry: Arc::clone(&policies),
+                        job: None,
+                        cache: cache.clone(),
+                        journal: Some(Arc::clone(&j)),
+                    };
+                    protocol::replay_journal(&ctx, recovered);
+                }
+                Some(j)
+            }
+            None => None,
+        };
         let n_workers = resolve_conn_workers(config.conn_workers);
         let workers: Vec<Arc<WorkerShared>> = (0..n_workers)
             .map(|_| {
@@ -189,7 +233,9 @@ impl Coordinator {
             evaluator,
             metrics: Arc::clone(&metrics),
             engine,
-            policies: Arc::new(crate::scheduler::PolicyRegistry::builtin()),
+            policies,
+            cache,
+            journal,
         });
 
         let conn_handles: Vec<_> = (0..n_workers)
@@ -255,6 +301,8 @@ struct ServerCore {
     metrics: Arc<Metrics>,
     engine: Arc<JobEngine>,
     policies: Arc<crate::scheduler::PolicyRegistry>,
+    cache: Option<Arc<crate::persist::SolveCache>>,
+    journal: Option<Arc<crate::persist::Journal>>,
 }
 
 /// One connection worker's mailbox: new sockets from the accept thread,
@@ -407,6 +455,8 @@ fn exec_loop(core: &ServerCore) {
             engine: Arc::clone(&core.engine),
             registry: Arc::clone(&core.policies),
             job: None,
+            cache: core.cache.clone(),
+            journal: core.journal.clone(),
         };
         let t0 = Instant::now();
         // handle_line is the single error-shape funnel: decode failures

@@ -30,9 +30,10 @@
 //! ```
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
+use crate::persist::Journal;
 use crate::util::{CancelToken, Json};
 
 use super::engine::JobPriority;
@@ -108,6 +109,12 @@ pub struct JobRegistry {
     ///
     /// [`wait_terminal`]: Self::wait_terminal
     terminal: Condvar,
+    /// Optional write-through journal (see [`crate::persist`]).  The
+    /// registry decides each transition under its own lock and writes
+    /// the journal record *after* releasing it — transitions are
+    /// once-guarded, so no duplicate records, and the registry lock is
+    /// never held across journal IO.
+    journal: OnceLock<Arc<Journal>>,
 }
 
 #[derive(Debug, Default)]
@@ -121,6 +128,25 @@ struct RegistryInner {
 impl JobRegistry {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Attach the write-through journal (once, at server startup,
+    /// before any traffic).  Later calls are ignored.
+    pub fn attach_journal(&self, journal: Arc<Journal>) {
+        let _ = self.journal.set(journal);
+    }
+
+    /// The attached journal, if any.
+    pub fn journal(&self) -> Option<&Arc<Journal>> {
+        self.journal.get()
+    }
+
+    /// Ensure future generated ids start at `next` or later.  Replay
+    /// only: recovered jobs keep their pre-crash ids, so the generator
+    /// must skip past them.
+    pub fn reserve_ids(&self, next: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.next_id = g.next_id.max(next);
     }
 
     /// Register a new job; returns its id.
@@ -151,27 +177,99 @@ impl JobRegistry {
             },
         );
         g.order.push_back(id.clone());
-        // Bound the registry: evict the oldest *terminal* jobs past the
-        // cap, skipping over live ones (a long-running job at the head
-        // must neither be dropped nor shield everything behind it from
-        // eviction).  The listing stays in insertion order.
-        if g.order.len() > MAX_JOBS {
-            let mut excess = g.order.len() - MAX_JOBS;
-            let inner = &mut *g;
-            let jobs = &mut inner.jobs;
-            inner.order.retain(|jid| {
-                if excess == 0 {
-                    return true;
-                }
-                if jobs.get(jid).is_some_and(|j| !j.state.is_terminal()) {
-                    return true; // live: never evicted
-                }
-                jobs.remove(jid);
-                excess -= 1;
-                false
-            });
-        }
+        Self::evict_capped(&mut g, self.journal.get());
         id
+    }
+
+    /// Bound the registry: evict the oldest *terminal* jobs past the
+    /// cap, skipping over live ones (a long-running job at the head
+    /// must neither be dropped nor shield everything behind it from
+    /// eviction).  The listing stays in insertion order.  Evicted jobs
+    /// are also dropped from the journal's replay index
+    /// ([`Journal::forget`] is index-only, no IO, so calling it under
+    /// the registry lock is fine) — a long-running coordinator's replay
+    /// map, and after compaction its journal file, stays bounded by
+    /// this same cap.
+    fn evict_capped(g: &mut RegistryInner, journal: Option<&Arc<Journal>>) {
+        if g.order.len() <= MAX_JOBS {
+            return;
+        }
+        let mut excess = g.order.len() - MAX_JOBS;
+        let RegistryInner { jobs, order, .. } = g;
+        order.retain(|jid| {
+            if excess == 0 {
+                return true;
+            }
+            if jobs.get(jid).is_some_and(|j| !j.state.is_terminal()) {
+                return true; // live: never evicted
+            }
+            jobs.remove(jid);
+            if let Some(jr) = journal {
+                jr.forget(jid);
+            }
+            excess -= 1;
+            false
+        });
+    }
+
+    /// Re-register a recovered job under its pre-crash id, queued for
+    /// re-execution.  Replay only — ordinary admission goes through
+    /// [`create_with`](Self::create_with).
+    pub fn restore(&self, id: &str, request_op: &str, priority: JobPriority) {
+        let mut g = self.inner.lock().unwrap();
+        g.jobs.insert(
+            id.to_string(),
+            Job {
+                id: id.to_string(),
+                state: JobState::Queued,
+                request_op: request_op.to_string(),
+                result: None,
+                error: None,
+                cancel: CancelToken::new(),
+                progress: None,
+                partials: VecDeque::new(),
+                partials_dropped: 0,
+                priority,
+                queued_at: Instant::now(),
+                queue_wait: None,
+            },
+        );
+        g.order.push_back(id.to_string());
+        Self::evict_capped(&mut g, self.journal.get());
+    }
+
+    /// Re-register a recovered job directly in its terminal state, so
+    /// its pre-crash result (or error) is servable from `status`
+    /// without re-running anything.  Replay only.
+    pub fn install_terminal(
+        &self,
+        id: &str,
+        request_op: &str,
+        priority: JobPriority,
+        state: JobState,
+        result: Option<Json>,
+        error: Option<String>,
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        g.jobs.insert(
+            id.to_string(),
+            Job {
+                id: id.to_string(),
+                state,
+                request_op: request_op.to_string(),
+                result,
+                error,
+                cancel: CancelToken::new(),
+                progress: None,
+                partials: VecDeque::new(),
+                partials_dropped: 0,
+                priority,
+                queued_at: Instant::now(),
+                queue_wait: None,
+            },
+        );
+        g.order.push_back(id.to_string());
+        Self::evict_capped(&mut g, self.journal.get());
     }
 
     /// The job's cancellation token (a clone sharing the same flag).
@@ -198,15 +296,23 @@ impl JobRegistry {
     /// Returns false when the worker should skip the job.  Stamps the
     /// job's time-in-queue on the successful transition.
     pub fn start(&self, id: &str) -> bool {
-        let mut g = self.inner.lock().unwrap();
-        match g.jobs.get_mut(id) {
-            Some(j) if j.state == JobState::Queued => {
-                j.state = JobState::Running;
-                j.queue_wait = Some(j.queued_at.elapsed());
-                true
+        let started = {
+            let mut g = self.inner.lock().unwrap();
+            match g.jobs.get_mut(id) {
+                Some(j) if j.state == JobState::Queued => {
+                    j.state = JobState::Running;
+                    j.queue_wait = Some(j.queued_at.elapsed());
+                    true
+                }
+                _ => false,
             }
-            _ => false,
+        };
+        if started {
+            if let Some(jr) = self.journal.get() {
+                jr.record_start(id);
+            }
         }
+        started
     }
 
     /// Time the job spent queued before starting (None while queued).
@@ -216,23 +322,44 @@ impl JobRegistry {
     }
 
     pub fn finish(&self, id: &str, result: Json) {
-        let mut g = self.inner.lock().unwrap();
-        if let Some(j) = g.jobs.get_mut(id) {
-            if j.state == JobState::Running {
-                j.state = JobState::Done;
-                j.result = Some(result);
-                self.terminal.notify_all();
+        let journal = self.journal.get();
+        // The result is cloned for the journal inside the critical
+        // section (only when a journal is attached) so eviction cannot
+        // race a re-read of the stored copy.
+        let journal_copy = {
+            let mut g = self.inner.lock().unwrap();
+            match g.jobs.get_mut(id) {
+                Some(j) if j.state == JobState::Running => {
+                    let copy = journal.map(|_| result.clone());
+                    j.state = JobState::Done;
+                    j.result = Some(result);
+                    self.terminal.notify_all();
+                    copy
+                }
+                _ => None,
             }
+        };
+        if let (Some(jr), Some(copy)) = (journal, journal_copy) {
+            jr.record_terminal(id, JobState::Done.as_str(), Some(&copy), None);
         }
     }
 
     pub fn fail(&self, id: &str, error: String) {
-        let mut g = self.inner.lock().unwrap();
-        if let Some(j) = g.jobs.get_mut(id) {
-            if j.state == JobState::Running || j.state == JobState::Queued {
-                j.state = JobState::Failed;
-                j.error = Some(error);
-                self.terminal.notify_all();
+        let failed = {
+            let mut g = self.inner.lock().unwrap();
+            match g.jobs.get_mut(id) {
+                Some(j) if j.state == JobState::Running || j.state == JobState::Queued => {
+                    j.state = JobState::Failed;
+                    j.error = Some(error.clone());
+                    self.terminal.notify_all();
+                    true
+                }
+                _ => false,
+            }
+        };
+        if failed {
+            if let Some(jr) = self.journal.get() {
+                jr.record_terminal(id, JobState::Failed.as_str(), None, Some(&error));
             }
         }
     }
@@ -241,28 +368,46 @@ impl JobRegistry {
     /// so running work stops at its next cooperative checkpoint.
     /// Returns whether the job existed and was not yet finished.
     pub fn cancel(&self, id: &str) -> bool {
-        let mut g = self.inner.lock().unwrap();
-        match g.jobs.get_mut(id) {
-            Some(j) if matches!(j.state, JobState::Queued | JobState::Running) => {
-                j.state = JobState::Cancelled;
-                j.cancel.cancel();
-                self.terminal.notify_all();
-                true
+        let cancelled = {
+            let mut g = self.inner.lock().unwrap();
+            match g.jobs.get_mut(id) {
+                Some(j) if matches!(j.state, JobState::Queued | JobState::Running) => {
+                    j.state = JobState::Cancelled;
+                    j.cancel.cancel();
+                    self.terminal.notify_all();
+                    true
+                }
+                _ => false,
             }
-            _ => false,
+        };
+        if cancelled {
+            if let Some(jr) = self.journal.get() {
+                jr.record_cancel(id);
+            }
         }
+        cancelled
     }
 
     /// Cancel every queued or running job (server shutdown).
     pub fn cancel_all(&self) {
-        let mut g = self.inner.lock().unwrap();
-        for j in g.jobs.values_mut() {
-            if matches!(j.state, JobState::Queued | JobState::Running) {
-                j.state = JobState::Cancelled;
-                j.cancel.cancel();
+        let cancelled: Vec<String> = {
+            let mut g = self.inner.lock().unwrap();
+            let mut ids = Vec::new();
+            for j in g.jobs.values_mut() {
+                if matches!(j.state, JobState::Queued | JobState::Running) {
+                    j.state = JobState::Cancelled;
+                    j.cancel.cancel();
+                    ids.push(j.id.clone());
+                }
+            }
+            self.terminal.notify_all();
+            ids
+        };
+        if let Some(jr) = self.journal.get() {
+            for id in &cancelled {
+                jr.record_cancel(id);
             }
         }
-        self.terminal.notify_all();
     }
 
     /// Publish `done/total` progress for a running job.  `done` is
@@ -655,6 +800,28 @@ mod tests {
         // Discarding twice (or an unknown id) is a no-op.
         r.discard(&reject);
         r.discard("j-999");
+    }
+
+    #[test]
+    fn restore_and_install_terminal_recreate_pre_crash_jobs() {
+        let r = JobRegistry::new();
+        r.reserve_ids(5);
+        r.restore("j-2", "campaign", JobPriority::new(1));
+        r.install_terminal(
+            "j-3",
+            "plan",
+            JobPriority::default(),
+            JobState::Done,
+            Some(Json::num(7.0)),
+            None,
+        );
+        assert_eq!(r.state("j-2"), Some(JobState::Queued));
+        let s = r.status("j-3").unwrap();
+        assert_eq!(s.get("state").unwrap().as_str(), Some("done"));
+        assert_eq!(s.get("result").unwrap().as_f64(), Some(7.0));
+        // Fresh ids skip past the reserved range (no collision with
+        // recovered jobs).
+        assert_eq!(r.create("plan"), "j-5");
     }
 
     #[test]

@@ -45,6 +45,10 @@
 //!   struct per op, structured `ApiError` codes, v2 `describe` schema),
 //!   spoken natively by the first-class blocking
 //!   [`coordinator::Client`].
+//! * [`persist`] — dependency-free durability: the coordinator's
+//!   crash-recoverable job journal (append-only, checksummed,
+//!   compacting) and the bounded content-addressed solve cache behind
+//!   `--journal` / `--cache-capacity`.
 //! * [`analysis`] — lower bounds, statistics and the policy-generic
 //!   sweep/figure printers used by the benchmark harness.
 
@@ -55,6 +59,7 @@ pub mod config;
 pub mod coordinator;
 pub mod eval;
 pub mod model;
+pub mod persist;
 pub mod runtime;
 pub mod scheduler;
 pub mod util;

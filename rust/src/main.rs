@@ -12,7 +12,8 @@
 //! botsched estimate [--per-cell n] [--sigma s] [--seed n]
 //! botsched bounds   [--budgets ...]
 //! botsched serve   [--addr 127.0.0.1:7077] [--no-xla] [--no-batching] [--shards N]
-//!                  [--conn-workers N] [--max-backlog N]
+//!                  [--conn-workers N] [--max-backlog N] [--journal state.journal]
+//!                  [--cache-capacity N]
 //! botsched client  --addr host:port '<json request>'
 //! botsched submit  [--priority P] [--deadline-ms D] [--addr host:port] '<json job>'
 //! botsched jobs    [--addr host:port]            # list the engine's jobs
@@ -197,7 +198,8 @@ fn print_help() {
          \x20 pareto    budget/makespan Pareto frontier + knee\n\
          \x20 trace     gen/replay multi-campaign arrival traces\n\
          \x20 serve     start the coordinator (--addr, --no-xla, --no-batching, --shards N,\n\
-         \x20           --conn-workers N, --max-backlog N)\n\
+         \x20           --conn-workers N, --max-backlog N, --journal <path> for crash-recoverable\n\
+         \x20           jobs, --cache-capacity N to cache repeated plan solves)\n\
          \x20 client    send one JSON request to a coordinator\n\
          \x20 submit    enqueue a job (--priority 0..=9, --deadline-ms D) and print its id\n\
          \x20 jobs      list a coordinator's jobs (state, progress)\n\
@@ -551,6 +553,8 @@ fn cmd_serve(a: &Args) -> Result<()> {
         shards: a.u64("shards")?.unwrap_or(0) as usize,
         conn_workers: a.u64("conn-workers")?.unwrap_or(0) as usize,
         max_backlog: a.u64("max-backlog")?.unwrap_or(0) as usize,
+        journal: a.get("journal").map(Into::into),
+        cache_capacity: a.u64("cache-capacity")?.unwrap_or(0) as usize,
     };
     let c = Coordinator::start(cfg)?;
     println!("coordinator listening on {} (send {{\"op\":\"shutdown\"}} to stop)", c.local_addr);

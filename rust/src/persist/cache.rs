@@ -1,0 +1,174 @@
+//! Content-addressed solve cache: a bounded LRU map from canonical
+//! request keys to [`SolveOutcome`]s.
+//!
+//! Keys are canonical strings built by the API layer (see
+//! `PlanRequest::cache_key`): sorted-field JSON over the system
+//! target and the normalised solve parameters, with outcome-irrelevant
+//! knobs (`threads`, `detail`) stripped and [`CACHE_VERSION`] baked
+//! in.  The cache stores the full key alongside each entry and
+//! compares it on lookup, so an FNV hash collision degrades to a miss
+//! rather than serving the wrong plan.
+//!
+//! Hit/miss/insert/evict accounting lives with the caller (the
+//! coordinator's metrics), keeping this module dependency-free.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Mutex;
+
+use crate::scheduler::SolveOutcome;
+
+use super::fnv1a;
+
+/// Baked into every cache key.  Bump when the key schema, the solver,
+/// or the [`SolveOutcome`] shape changes in a way that makes old
+/// entries wrong — all prior keys then self-invalidate.
+pub const CACHE_VERSION: u32 = 1;
+
+#[derive(Debug, Clone)]
+struct Entry {
+    /// Full canonical key, compared on lookup (collision safety).
+    key: String,
+    outcome: SolveOutcome,
+}
+
+#[derive(Debug, Default)]
+struct CacheInner {
+    map: HashMap<u64, Entry>,
+    /// Recency order, least-recently-used at the front.  Touch is
+    /// O(capacity) — fine for the operator-bounded capacities this
+    /// cache is configured with (`--cache-capacity`).
+    order: VecDeque<u64>,
+}
+
+/// A bounded LRU solve cache.  Capacity 0 disables it: every lookup
+/// misses and every insert is a no-op.
+#[derive(Debug)]
+pub struct SolveCache {
+    capacity: usize,
+    inner: Mutex<CacheInner>,
+}
+
+impl SolveCache {
+    pub fn new(capacity: usize) -> Self {
+        Self { capacity, inner: Mutex::new(CacheInner::default()) }
+    }
+
+    /// Look up a canonical key; a hit clones the outcome and promotes
+    /// the entry to most-recently-used.
+    pub fn get(&self, key: &str) -> Option<SolveOutcome> {
+        if self.capacity == 0 {
+            return None;
+        }
+        let h = fnv1a(key.as_bytes());
+        let mut g = self.inner.lock().unwrap();
+        let entry = g.map.get(&h)?;
+        if entry.key != key {
+            return None;
+        }
+        let outcome = entry.outcome.clone();
+        if let Some(pos) = g.order.iter().position(|x| *x == h) {
+            g.order.remove(pos);
+        }
+        g.order.push_back(h);
+        Some(outcome)
+    }
+
+    /// Insert (or refresh) an entry, evicting the least-recently-used
+    /// one if the cache is full.  Returns whether an eviction happened.
+    pub fn insert(&self, key: String, outcome: SolveOutcome) -> bool {
+        if self.capacity == 0 {
+            return false;
+        }
+        let h = fnv1a(key.as_bytes());
+        let mut g = self.inner.lock().unwrap();
+        if g.map.contains_key(&h) {
+            g.map.insert(h, Entry { key, outcome });
+            if let Some(pos) = g.order.iter().position(|x| *x == h) {
+                g.order.remove(pos);
+            }
+            g.order.push_back(h);
+            return false;
+        }
+        let mut evicted = false;
+        if g.map.len() >= self.capacity {
+            if let Some(old) = g.order.pop_front() {
+                g.map.remove(&old);
+                evicted = true;
+            }
+        }
+        g.map.insert(h, Entry { key, outcome });
+        g.order.push_back(h);
+        evicted
+    }
+
+    /// (capacity, current entry count).
+    pub fn stats(&self) -> (usize, usize) {
+        (self.capacity, self.inner.lock().unwrap().map.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Plan, PlanScore};
+
+    fn outcome(tag: f64) -> SolveOutcome {
+        SolveOutcome {
+            policy: "test",
+            plan: Plan::new(),
+            score: PlanScore { makespan: tag, cost: tag * 2.0 },
+            feasible: true,
+            iterations: 3,
+            probes: 1,
+            effective_budget: tag,
+        }
+    }
+
+    #[test]
+    fn hit_returns_the_exact_stored_bits() {
+        let c = SolveCache::new(4);
+        assert!(c.get("k1").is_none());
+        c.insert("k1".to_string(), outcome(12.5));
+        let hit = c.get("k1").expect("hit");
+        assert_eq!(hit.score.makespan.to_bits(), 12.5f64.to_bits());
+        assert_eq!(hit.score.cost.to_bits(), 25.0f64.to_bits());
+        assert_eq!(hit.effective_budget.to_bits(), 12.5f64.to_bits());
+        assert_eq!(hit.policy, "test");
+        assert!(c.get("k2").is_none(), "different key misses");
+    }
+
+    #[test]
+    fn lru_eviction_order_is_pinned() {
+        let c = SolveCache::new(2);
+        assert!(!c.insert("a".to_string(), outcome(1.0)));
+        assert!(!c.insert("b".to_string(), outcome(2.0)));
+        // Touch "a": "b" becomes least recently used.
+        assert!(c.get("a").is_some());
+        assert!(c.insert("c".to_string(), outcome(3.0)), "full cache evicts");
+        assert!(c.get("b").is_none(), "LRU entry evicted");
+        assert!(c.get("a").is_some());
+        assert!(c.get("c").is_some());
+        assert_eq!(c.stats(), (2, 2));
+    }
+
+    #[test]
+    fn reinsert_refreshes_without_eviction() {
+        let c = SolveCache::new(2);
+        c.insert("a".to_string(), outcome(1.0));
+        c.insert("b".to_string(), outcome(2.0));
+        assert!(!c.insert("a".to_string(), outcome(9.0)), "refresh, not eviction");
+        assert_eq!(c.get("a").unwrap().score.makespan, 9.0);
+        // The refresh promoted "a", so "b" is now the LRU victim.
+        c.insert("c".to_string(), outcome(3.0));
+        assert!(c.get("b").is_none());
+        assert!(c.get("a").is_some());
+    }
+
+    #[test]
+    fn capacity_zero_disables_cleanly() {
+        let c = SolveCache::new(0);
+        assert!(!c.insert("a".to_string(), outcome(1.0)));
+        assert!(c.get("a").is_none());
+        assert_eq!(c.stats(), (0, 0));
+    }
+}

@@ -1,0 +1,691 @@
+//! The append-only job journal: length-prefixed, checksummed lifecycle
+//! records with fsync on the transitions that must survive a crash.
+//!
+//! File layout: a fixed header (`b"BOTJ"` magic + little-endian u32
+//! [`JOURNAL_VERSION`]) followed by framed records.  Each frame is a
+//! u32 LE payload length, a u64 LE FNV-1a checksum of the payload, and
+//! the payload itself — one canonical-JSON object with a `"kind"`
+//! field (`accept` / `start` / `terminal` / `cancel`).  Canonical JSON
+//! (sorted keys, via [`crate::util::Json`]) keeps the bytes
+//! deterministic, so compaction rewrites are reproducible.
+//!
+//! See [`super`] (the module doc) for the full durability model: which
+//! records are fsynced, what replay recovers, and how the torn-tail
+//! scan and rewrite-and-swap compaction bound the file.
+
+use std::collections::{HashMap, HashSet};
+use std::fs::{File, OpenOptions};
+use std::io::{self, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::config;
+use crate::coordinator::JobPriority;
+use crate::util::Json;
+
+use super::fnv1a;
+
+/// On-disk format version, written in the header.  A file with any
+/// other version is refused at open (no silent migration).
+pub const JOURNAL_VERSION: u32 = 1;
+
+/// File magic: "botsched journal".
+const MAGIC: [u8; 4] = *b"BOTJ";
+
+/// Header bytes: magic + version.
+const HEADER_LEN: usize = 8;
+
+/// Frame overhead per record: u32 payload length + u64 checksum.
+const FRAME_LEN: usize = 12;
+
+/// Sanity bound on one record payload; a length field beyond it is
+/// treated as a corrupt tail, not an allocation request.
+const MAX_PAYLOAD: usize = 1 << 28;
+
+/// Records below which auto-compaction never triggers (tiny journals
+/// are not worth rewriting).
+const COMPACT_MIN: u64 = 64;
+
+/// One job recovered from a journal replay, in accept order.
+#[derive(Debug, Clone)]
+pub struct RecoveredJob {
+    pub id: String,
+    /// The job's op name (registry listing).
+    pub op: String,
+    /// The full request line to re-execute if the job never finished.
+    pub line: String,
+    /// Queue placement the job was admitted with.
+    pub priority: JobPriority,
+    /// Present when the job reached a terminal state before the crash:
+    /// the recovered outcome is servable without re-running anything.
+    pub terminal: Option<RecoveredTerminal>,
+}
+
+/// The recovered outcome of a journaled terminal job.
+#[derive(Debug, Clone)]
+pub struct RecoveredTerminal {
+    /// `"done"` / `"failed"` / `"cancelled"`.
+    pub state: String,
+    pub result: Option<Json>,
+    pub error: Option<String>,
+}
+
+/// Replay-index state of one journaled job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum IdxState {
+    Live,
+    Terminal,
+}
+
+#[derive(Debug)]
+struct Inner {
+    file: File,
+    /// In-memory replay index: every journaled job still relevant to a
+    /// future replay.  [`Journal::forget`] drops evicted jobs so the
+    /// map (and, after compaction, the file) stays bounded by the
+    /// registry cap instead of growing with coordinator lifetime.
+    index: HashMap<String, IdxState>,
+    /// Records currently in the file (including obsolete ones).
+    records: u64,
+    /// File size in bytes.
+    bytes: u64,
+    /// Completed rewrite-and-swap compactions.
+    compactions: u64,
+}
+
+/// The append-only job journal.  All methods are best-effort on IO
+/// failure *after* open: an unwritable record is reported to stderr
+/// and skipped rather than taking the serving path down — durability
+/// degrades, availability does not.
+#[derive(Debug)]
+pub struct Journal {
+    path: PathBuf,
+    inner: Mutex<Inner>,
+}
+
+impl Journal {
+    /// Open (or create) a journal and replay it.  Returns the journal
+    /// plus every recovered job in accept order.  A torn tail — a
+    /// record truncated or corrupted by a crash mid-append — ends the
+    /// replay scan and is truncated away so subsequent appends are
+    /// clean.  A file with a foreign magic or version is refused.
+    pub fn open(path: &Path) -> io::Result<(Self, Vec<RecoveredJob>)> {
+        let mut file = OpenOptions::new().read(true).write(true).create(true).open(path)?;
+        let mut raw = Vec::new();
+        file.read_to_end(&mut raw)?;
+        if raw.is_empty() {
+            file.write_all(&MAGIC)?;
+            file.write_all(&JOURNAL_VERSION.to_le_bytes())?;
+            file.sync_data()?;
+            raw.extend_from_slice(&MAGIC);
+            raw.extend_from_slice(&JOURNAL_VERSION.to_le_bytes());
+        }
+        if raw.len() < HEADER_LEN || raw[..4] != MAGIC {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("{} is not a botsched journal", path.display()),
+            ));
+        }
+        let version = u32::from_le_bytes(raw[4..8].try_into().unwrap());
+        if version != JOURNAL_VERSION {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!(
+                    "journal {} has version {version}, this build speaks {JOURNAL_VERSION}",
+                    path.display()
+                ),
+            ));
+        }
+        let (payloads, good_len) = scan(&raw);
+        if good_len < raw.len() {
+            // Torn tail from a crash mid-append: drop it for good so
+            // the next append starts at a clean frame boundary.
+            file.set_len(good_len as u64)?;
+        }
+        let (recovered, index) = replay(&payloads);
+        file.seek(SeekFrom::End(0))?;
+        let inner = Inner {
+            file,
+            index,
+            records: payloads.len() as u64,
+            bytes: good_len as u64,
+            compactions: 0,
+        };
+        Ok((Self { path: path.to_path_buf(), inner: Mutex::new(inner) }, recovered))
+    }
+
+    /// The journal's file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Journal a job admission: id, op, the full request line and the
+    /// queue placement.  Fsynced — callers invoke this *before* the
+    /// job becomes visible to any worker, so admission is durable by
+    /// the time anyone can observe the job.
+    pub fn admit(&self, id: &str, op: &str, line: &str, prio: JobPriority) {
+        let payload = Json::obj(vec![
+            ("id", Json::str(id)),
+            ("kind", Json::str("accept")),
+            ("line", Json::str(line)),
+            ("op", Json::str(op)),
+            ("placement", config::job_priority_to_json(&prio)),
+        ]);
+        let mut g = self.inner.lock().unwrap();
+        match append(&mut g, &payload, true) {
+            Ok(()) => {
+                g.index.insert(id.to_string(), IdxState::Live);
+            }
+            Err(e) => eprintln!("journal: failed to record accept of {id}: {e}"),
+        }
+    }
+
+    /// Journal a job start (informational, not fsynced).  No-op for
+    /// jobs the journal never admitted (sync heavy ops, tests).
+    pub fn record_start(&self, id: &str) {
+        let mut g = self.inner.lock().unwrap();
+        if g.index.get(id) != Some(&IdxState::Live) {
+            return;
+        }
+        let payload = Json::obj(vec![("id", Json::str(id)), ("kind", Json::str("start"))]);
+        if let Err(e) = append(&mut g, &payload, false) {
+            eprintln!("journal: failed to record start of {id}: {e}");
+        }
+    }
+
+    /// Journal a terminal transition with its result or error.
+    /// Fsynced — a result served once must survive a crash.  No-op for
+    /// unadmitted jobs and for repeat transitions.
+    pub fn record_terminal(
+        &self,
+        id: &str,
+        state: &str,
+        result: Option<&Json>,
+        error: Option<&str>,
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        if g.index.get(id) != Some(&IdxState::Live) {
+            return;
+        }
+        let mut fields = vec![
+            ("id", Json::str(id)),
+            ("kind", Json::str("terminal")),
+            ("state", Json::str(state)),
+        ];
+        if let Some(r) = result {
+            fields.push(("result", r.clone()));
+        }
+        if let Some(e) = error {
+            fields.push(("error", Json::str(e)));
+        }
+        match append(&mut g, &Json::obj(fields), true) {
+            Ok(()) => {
+                g.index.insert(id.to_string(), IdxState::Terminal);
+            }
+            Err(e) => {
+                eprintln!("journal: failed to record terminal of {id}: {e}");
+                return;
+            }
+        }
+        self.maybe_compact(&mut g);
+    }
+
+    /// Journal a cancellation (a terminal marker; written but not
+    /// fsynced — a cancel lost to a crash re-runs the job, which is
+    /// safe).  No-op for unadmitted jobs and repeat transitions.
+    pub fn record_cancel(&self, id: &str) {
+        let mut g = self.inner.lock().unwrap();
+        if g.index.get(id) != Some(&IdxState::Live) {
+            return;
+        }
+        let payload = Json::obj(vec![("id", Json::str(id)), ("kind", Json::str("cancel"))]);
+        match append(&mut g, &payload, false) {
+            Ok(()) => {
+                g.index.insert(id.to_string(), IdxState::Terminal);
+            }
+            Err(e) => {
+                eprintln!("journal: failed to record cancel of {id}: {e}");
+                return;
+            }
+        }
+        self.maybe_compact(&mut g);
+    }
+
+    /// Drop a job from the replay index (registry eviction).  Index
+    /// only, no file IO — safe to call under the registry lock; the
+    /// job's records become garbage the next compaction drops.
+    pub fn forget(&self, id: &str) {
+        self.inner.lock().unwrap().index.remove(id);
+    }
+
+    /// Rewrite the journal down to its replay-relevant records (accept
+    /// for every indexed job, the terminal marker for finished ones)
+    /// and atomically swap it in.  Also triggered automatically once
+    /// obsolete records dominate.
+    pub fn compact(&self) -> io::Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        compact(&self.path, &mut g)
+    }
+
+    /// Durability statistics for the `persist` op.
+    pub fn stats(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let live = g.index.values().filter(|s| **s == IdxState::Live).count();
+        let terminal = g.index.len() - live;
+        Json::obj(vec![
+            ("bytes", Json::num(g.bytes as f64)),
+            ("compactions", Json::num(g.compactions as f64)),
+            ("enabled", Json::Bool(true)),
+            ("live", Json::num(live as f64)),
+            ("path", Json::str(self.path.display().to_string())),
+            ("records", Json::num(g.records as f64)),
+            ("terminal", Json::num(terminal as f64)),
+            ("version", Json::num(f64::from(JOURNAL_VERSION))),
+        ])
+    }
+
+    /// Compact when the file is non-trivial and at least half its
+    /// records are obsolete (starts, forgotten jobs, duplicates).  A
+    /// replay needs 1 record per live job and 2 per terminal one.
+    fn maybe_compact(&self, g: &mut Inner) {
+        if g.records < COMPACT_MIN {
+            return;
+        }
+        let useful: u64 = g
+            .index
+            .values()
+            .map(|s| match s {
+                IdxState::Live => 1,
+                IdxState::Terminal => 2,
+            })
+            .sum();
+        if useful * 2 > g.records {
+            return;
+        }
+        if let Err(e) = compact(&self.path, g) {
+            eprintln!("journal: compaction failed: {e}");
+        }
+    }
+}
+
+/// Frame and append one record; optionally fsync.
+fn append(g: &mut Inner, payload: &Json, fsync: bool) -> io::Result<()> {
+    let text = payload.to_string();
+    let frame = frame(text.as_bytes());
+    g.file.write_all(&frame)?;
+    if fsync {
+        g.file.sync_data()?;
+    }
+    g.records += 1;
+    g.bytes += frame.len() as u64;
+    Ok(())
+}
+
+fn frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(FRAME_LEN + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&fnv1a(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Walk the framed records after the header; stops at the first
+/// truncated, oversized, checksum-failing or unparsable frame (the
+/// torn tail a crash mid-append leaves).  Returns the parsed payloads
+/// and the byte offset of the last good frame's end.
+fn scan(raw: &[u8]) -> (Vec<Json>, usize) {
+    let mut out = Vec::new();
+    let mut pos = HEADER_LEN;
+    while raw.len() >= pos + FRAME_LEN {
+        let len = u32::from_le_bytes(raw[pos..pos + 4].try_into().unwrap()) as usize;
+        let sum = u64::from_le_bytes(raw[pos + 4..pos + 12].try_into().unwrap());
+        if len > MAX_PAYLOAD || raw.len() < pos + FRAME_LEN + len {
+            break;
+        }
+        let payload = &raw[pos + FRAME_LEN..pos + FRAME_LEN + len];
+        if fnv1a(payload) != sum {
+            break;
+        }
+        let Ok(text) = std::str::from_utf8(payload) else { break };
+        let Ok(j) = Json::parse(text) else { break };
+        out.push(j);
+        pos += FRAME_LEN + len;
+    }
+    (out, pos)
+}
+
+/// Fold the record stream into recovered jobs (accept order) and the
+/// replay index.  Later records win only where the lifecycle allows:
+/// the first accept per id sticks, the first terminal/cancel marker
+/// sticks (transitions are once-guarded at write time), starts are
+/// informational.
+fn replay(payloads: &[Json]) -> (Vec<RecoveredJob>, HashMap<String, IdxState>) {
+    let mut order: Vec<String> = Vec::new();
+    let mut jobs: HashMap<String, RecoveredJob> = HashMap::new();
+    for p in payloads {
+        let (Some(kind), Some(id)) = (
+            p.get("kind").and_then(Json::as_str),
+            p.get("id").and_then(Json::as_str),
+        ) else {
+            continue;
+        };
+        match kind {
+            "accept" => {
+                if jobs.contains_key(id) {
+                    continue;
+                }
+                let placement = p.get("placement").cloned().unwrap_or_else(|| Json::obj(vec![]));
+                let priority = config::job_priority_from_json(&placement).unwrap_or_default();
+                jobs.insert(
+                    id.to_string(),
+                    RecoveredJob {
+                        id: id.to_string(),
+                        op: p.get("op").and_then(Json::as_str).unwrap_or("?").to_string(),
+                        line: p.get("line").and_then(Json::as_str).unwrap_or("").to_string(),
+                        priority,
+                        terminal: None,
+                    },
+                );
+                order.push(id.to_string());
+            }
+            "terminal" => {
+                if let Some(job) = jobs.get_mut(id) {
+                    if job.terminal.is_none() {
+                        job.terminal = Some(RecoveredTerminal {
+                            state: p
+                                .get("state")
+                                .and_then(Json::as_str)
+                                .unwrap_or("failed")
+                                .to_string(),
+                            result: p.get("result").cloned(),
+                            error: p.get("error").and_then(Json::as_str).map(str::to_string),
+                        });
+                    }
+                }
+            }
+            "cancel" => {
+                if let Some(job) = jobs.get_mut(id) {
+                    if job.terminal.is_none() {
+                        job.terminal = Some(RecoveredTerminal {
+                            state: "cancelled".to_string(),
+                            result: None,
+                            error: None,
+                        });
+                    }
+                }
+            }
+            // Starts (and unknown future kinds) carry no replay state.
+            _ => {}
+        }
+    }
+    let index = jobs
+        .iter()
+        .map(|(id, j)| {
+            (
+                id.clone(),
+                if j.terminal.is_some() { IdxState::Terminal } else { IdxState::Live },
+            )
+        })
+        .collect();
+    let recovered = order.into_iter().filter_map(|id| jobs.remove(&id)).collect();
+    (recovered, index)
+}
+
+/// Rewrite-and-swap: scan the current file, keep only replay-relevant
+/// records (in their original order), write them to `<path>.tmp`,
+/// fsync, atomically rename over the journal and reopen the append
+/// handle.  Runs under the journal mutex.
+fn compact(path: &Path, g: &mut Inner) -> io::Result<()> {
+    g.file.sync_data()?;
+    g.file.seek(SeekFrom::Start(0))?;
+    let mut raw = Vec::new();
+    g.file.read_to_end(&mut raw)?;
+    let (payloads, _) = scan(&raw);
+    let tmp_path = path.with_file_name(match path.file_name().and_then(|n| n.to_str()) {
+        Some(name) => format!("{name}.tmp"),
+        None => "journal.tmp".to_string(),
+    });
+    let mut tmp = File::create(&tmp_path)?;
+    tmp.write_all(&MAGIC)?;
+    tmp.write_all(&JOURNAL_VERSION.to_le_bytes())?;
+    let mut kept = 0u64;
+    let mut bytes = HEADER_LEN as u64;
+    let mut seen_accept: HashSet<String> = HashSet::new();
+    let mut seen_terminal: HashSet<String> = HashSet::new();
+    for p in &payloads {
+        let (Some(kind), Some(id)) = (
+            p.get("kind").and_then(Json::as_str),
+            p.get("id").and_then(Json::as_str),
+        ) else {
+            continue;
+        };
+        let keep = match kind {
+            "accept" => g.index.contains_key(id) && seen_accept.insert(id.to_string()),
+            "terminal" | "cancel" => {
+                g.index.get(id) == Some(&IdxState::Terminal)
+                    && seen_terminal.insert(id.to_string())
+            }
+            _ => false,
+        };
+        if !keep {
+            continue;
+        }
+        let framed = frame(p.to_string().as_bytes());
+        tmp.write_all(&framed)?;
+        kept += 1;
+        bytes += framed.len() as u64;
+    }
+    tmp.sync_data()?;
+    drop(tmp);
+    std::fs::rename(&tmp_path, path)?;
+    let mut file = OpenOptions::new().read(true).write(true).open(path)?;
+    file.seek(SeekFrom::End(0))?;
+    g.file = file;
+    g.records = kept;
+    g.bytes = bytes;
+    g.compactions += 1;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A fresh per-test journal path (removed before use so reruns
+    /// never see a previous process's file).
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("botsched-journal-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        let _ = std::fs::remove_file(&path);
+        path
+    }
+
+    #[test]
+    fn accept_and_terminal_records_survive_reopen() {
+        let path = tmp("roundtrip.journal");
+        {
+            let (j, recovered) = Journal::open(&path).unwrap();
+            assert!(recovered.is_empty());
+            j.admit("j-0", "plan", r#"{"budget":80,"op":"plan"}"#, JobPriority::new(3));
+            j.admit("j-1", "sweep", r#"{"op":"sweep"}"#, JobPriority::default());
+            j.record_start("j-0");
+            j.record_terminal("j-0", "done", Some(&Json::num(42.0)), None);
+        }
+        let (_, recovered) = Journal::open(&path).unwrap();
+        assert_eq!(recovered.len(), 2);
+        assert_eq!(recovered[0].id, "j-0");
+        assert_eq!(recovered[0].priority.priority, 3);
+        let t = recovered[0].terminal.as_ref().unwrap();
+        assert_eq!(t.state, "done");
+        assert_eq!(t.result, Some(Json::num(42.0)));
+        assert_eq!(recovered[1].id, "j-1");
+        assert_eq!(recovered[1].op, "sweep");
+        assert_eq!(recovered[1].line, r#"{"op":"sweep"}"#);
+        assert!(recovered[1].terminal.is_none(), "unfinished job replays live");
+    }
+
+    #[test]
+    fn unadmitted_ids_are_never_journaled() {
+        let path = tmp("unadmitted.journal");
+        {
+            let (j, _) = Journal::open(&path).unwrap();
+            // Sync heavy ops call start/terminal without an admit.
+            j.record_start("j-7");
+            j.record_terminal("j-7", "done", Some(&Json::Bool(true)), None);
+            j.record_cancel("j-8");
+        }
+        let (j, recovered) = Journal::open(&path).unwrap();
+        assert!(recovered.is_empty());
+        assert_eq!(j.stats().get("records").unwrap().as_u64(), Some(0));
+    }
+
+    #[test]
+    fn torn_tail_is_tolerated_and_truncated() {
+        let path = tmp("torn.journal");
+        {
+            let (j, _) = Journal::open(&path).unwrap();
+            j.admit("j-0", "plan", r#"{"budget":80,"op":"plan"}"#, JobPriority::default());
+            j.admit("j-1", "plan", r#"{"budget":90,"op":"plan"}"#, JobPriority::default());
+        }
+        // A crash mid-append: frame claims 64 bytes, only 3 follow.
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(&64u32.to_le_bytes()).unwrap();
+            f.write_all(&[1, 2, 3]).unwrap();
+        }
+        let len_before = std::fs::metadata(&path).unwrap().len();
+        let (j, recovered) = Journal::open(&path).unwrap();
+        assert_eq!(recovered.len(), 2, "good records survive the torn tail");
+        assert!(std::fs::metadata(&path).unwrap().len() < len_before, "tail truncated");
+        // The truncated journal appends cleanly.
+        j.admit("j-2", "plan", r#"{"budget":10,"op":"plan"}"#, JobPriority::default());
+        drop(j);
+        let (_, recovered) = Journal::open(&path).unwrap();
+        assert_eq!(recovered.len(), 3);
+        assert_eq!(recovered[2].id, "j-2");
+    }
+
+    #[test]
+    fn checksum_failure_drops_the_tail_record() {
+        let path = tmp("checksum.journal");
+        {
+            let (j, _) = Journal::open(&path).unwrap();
+            j.admit("j-0", "plan", r#"{"budget":80,"op":"plan"}"#, JobPriority::default());
+            j.admit("j-1", "plan", r#"{"budget":90,"op":"plan"}"#, JobPriority::default());
+        }
+        // Flip the last payload byte: the second record's checksum fails.
+        let mut raw = std::fs::read(&path).unwrap();
+        let last = raw.len() - 1;
+        raw[last] ^= 0xff;
+        std::fs::write(&path, &raw).unwrap();
+        let (_, recovered) = Journal::open(&path).unwrap();
+        assert_eq!(recovered.len(), 1);
+        assert_eq!(recovered[0].id, "j-0");
+    }
+
+    #[test]
+    fn foreign_magic_or_version_is_refused() {
+        let path = tmp("foreign.journal");
+        std::fs::write(&path, b"NOPE\x01\x00\x00\x00").unwrap();
+        assert!(Journal::open(&path).is_err());
+        let mut raw = Vec::new();
+        raw.extend_from_slice(&MAGIC);
+        raw.extend_from_slice(&99u32.to_le_bytes());
+        std::fs::write(&path, &raw).unwrap();
+        let err = Journal::open(&path).unwrap_err();
+        assert!(err.to_string().contains("version 99"), "{err}");
+    }
+
+    #[test]
+    fn cancel_without_terminal_replays_as_cancelled() {
+        let path = tmp("cancel.journal");
+        {
+            let (j, _) = Journal::open(&path).unwrap();
+            j.admit("j-0", "campaign", r#"{"budget":80,"op":"campaign"}"#, JobPriority::default());
+            j.record_start("j-0");
+            j.record_cancel("j-0");
+            // A late terminal after the cancel marker must not win.
+            j.record_terminal("j-0", "done", Some(&Json::Bool(true)), None);
+        }
+        let (_, recovered) = Journal::open(&path).unwrap();
+        assert_eq!(recovered.len(), 1);
+        let t = recovered[0].terminal.as_ref().unwrap();
+        assert_eq!(t.state, "cancelled");
+        assert!(t.result.is_none());
+    }
+
+    #[test]
+    fn compaction_preserves_replay_equivalence() {
+        let path = tmp("compact.journal");
+        let (j, _) = Journal::open(&path).unwrap();
+        for i in 0..10 {
+            let id = format!("j-{i}");
+            j.admit(&id, "plan", &format!(r#"{{"budget":{i},"op":"plan"}}"#), JobPriority::new(2));
+            j.record_start(&id);
+            if i < 8 {
+                j.record_terminal(&id, "done", Some(&Json::num(i as f64)), None);
+            }
+        }
+        let before = j.stats().get("records").unwrap().as_u64().unwrap();
+        j.compact().unwrap();
+        let after = j.stats().get("records").unwrap().as_u64().unwrap();
+        // 10 accepts + 8 terminals survive; 10 starts are dropped.
+        assert_eq!(after, 18);
+        assert!(after < before, "{after} < {before}");
+        assert_eq!(j.stats().get("compactions").unwrap().as_u64(), Some(1));
+        drop(j);
+        let (_, recovered) = Journal::open(&path).unwrap();
+        assert_eq!(recovered.len(), 10);
+        for (i, job) in recovered.iter().enumerate() {
+            assert_eq!(job.id, format!("j-{i}"), "accept order preserved");
+            assert_eq!(job.priority.priority, 2);
+            if i < 8 {
+                let t = job.terminal.as_ref().unwrap();
+                assert_eq!(t.state, "done");
+                assert_eq!(t.result, Some(Json::num(i as f64)));
+            } else {
+                assert!(job.terminal.is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn forget_drops_the_job_at_the_next_compaction() {
+        let path = tmp("forget.journal");
+        let (j, _) = Journal::open(&path).unwrap();
+        j.admit("j-0", "plan", r#"{"budget":80,"op":"plan"}"#, JobPriority::default());
+        j.record_terminal("j-0", "done", Some(&Json::Bool(true)), None);
+        j.admit("j-1", "plan", r#"{"budget":90,"op":"plan"}"#, JobPriority::default());
+        j.forget("j-0");
+        j.compact().unwrap();
+        drop(j);
+        let (_, recovered) = Journal::open(&path).unwrap();
+        assert_eq!(recovered.len(), 1);
+        assert_eq!(recovered[0].id, "j-1");
+    }
+
+    #[test]
+    fn auto_compaction_fires_once_obsolete_records_dominate() {
+        let path = tmp("auto.journal");
+        let (j, _) = Journal::open(&path).unwrap();
+        for i in 0..100 {
+            let id = format!("j-{i}");
+            j.admit(&id, "plan", r#"{"budget":1,"op":"plan"}"#, JobPriority::default());
+            j.record_terminal(&id, "done", Some(&Json::Bool(true)), None);
+        }
+        // Evictions shrink the index; the next terminal transition
+        // notices the garbage ratio and compacts automatically.
+        for i in 0..90 {
+            j.forget(&format!("j-{i}"));
+        }
+        j.admit("j-100", "plan", r#"{"budget":1,"op":"plan"}"#, JobPriority::default());
+        j.record_terminal("j-100", "done", Some(&Json::Bool(true)), None);
+        let stats = j.stats();
+        assert!(stats.get("compactions").unwrap().as_u64().unwrap() >= 1, "{stats}");
+        // 11 jobs remain, each accept + terminal.
+        assert_eq!(stats.get("records").unwrap().as_u64(), Some(22));
+        assert_eq!(stats.get("terminal").unwrap().as_u64(), Some(11));
+        assert_eq!(stats.get("live").unwrap().as_u64(), Some(0));
+    }
+}

@@ -1,0 +1,82 @@
+//! Durability layer for the coordinator: a crash-recoverable job
+//! journal plus a content-addressed solve cache.  Both halves are
+//! dependency-free (std only) and optional — a coordinator started
+//! without `--journal` / `--cache-capacity` behaves exactly as before.
+//!
+//! # Durability model
+//!
+//! The [`journal::Journal`] is an append-only file of length-prefixed,
+//! FNV-1a-checksummed records, one per job lifecycle event:
+//!
+//! * **accept** — the job's id, op, full request line and queue
+//!   placement.  Written *and fsynced* before the job becomes visible
+//!   to any pool worker, so an id handed to a client is durable by the
+//!   time the client sees it.
+//! * **start** — informational (written, not fsynced).  A job with a
+//!   start but no terminal record re-runs after a crash.
+//! * **terminal** — the job's final state plus its result or error.
+//!   Written *and fsynced*, so a result served once survives a crash
+//!   and is re-served byte-identically after recovery.
+//! * **cancel** — a terminal marker for cancelled jobs (written, not
+//!   fsynced: a cancel lost to a machine crash re-runs the job, which
+//!   is safe — the client already gave up on it).
+//!
+//! What survives a crash (power loss included): every accepted job's
+//! admission and every Done/Failed job's outcome.  What may be lost:
+//! start markers, cancels, and progress/partial-result streams (which
+//! are never journaled).  On restart the coordinator replays the
+//! journal before accepting traffic: terminal jobs re-enter the
+//! registry with their recovered result (servable from `status`);
+//! accepted-but-unfinished jobs re-enqueue under their original ids
+//! and execute again.  Relative `deadline_ms` placements restart from
+//! recovery time — the original submission instant did not survive.
+//!
+//! Replay tolerates a torn tail: the first truncated or
+//! checksum-failing record ends the scan and the tail is truncated
+//! away, so a crash mid-append never poisons the log.  Once terminal
+//! and forgotten records dominate, the journal compacts by
+//! rewrite-and-swap (atomic rename), bounding its size against the
+//! live job set.
+//!
+//! The [`cache::SolveCache`] memoises `plan` solves by a canonical
+//! content hash of (system/scenario target, normalised solve
+//! parameters).  Outcome-irrelevant knobs (`threads`, `detail`) are
+//! excluded from the key; `seed` is included because it changes the
+//! solution.  [`CACHE_VERSION`] is baked into every key, so a format
+//! or solver change that bumps it self-invalidates all prior entries.
+//! The cache is bounded (`--cache-capacity`, LRU eviction) and may
+//! serve an entry computed arbitrarily long ago — safe here because
+//! solves are pure functions of the request, but a policy whose
+//! results depend on ambient state must not be cached without bumping
+//! the version.
+
+pub mod cache;
+pub mod journal;
+
+pub use cache::{SolveCache, CACHE_VERSION};
+pub use journal::{Journal, RecoveredJob, RecoveredTerminal, JOURNAL_VERSION};
+
+/// FNV-1a over `bytes` — the same constants as the engine's shard
+/// hash; dependency-free and stable across platforms and releases
+/// (journal checksums and cache keys must not drift between builds).
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_matches_the_published_vectors() {
+        // Classic FNV-1a 64-bit test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85dd_35c9_cd7b_a406);
+    }
+}

@@ -7,7 +7,8 @@
 
 use botsched::coordinator::api::{
     describe_schema, ApiError, CampaignRequest, CampaignResponse, CancelRequest, EngineInfo,
-    ErrorCode, EstimatePerfRequest, EstimatePerfResponse, NoiseSpec, Placement, PlanRequest,
+    ErrorCode, EstimatePerfRequest, EstimatePerfResponse, NoiseSpec, PersistAction,
+    PersistRequest, Placement, PlanRequest,
     PlanResponse, PlannerOverrides, ReplicationSummary, Request, Response, RunRow, ShardRow,
     SimulateRequest, SimulateResponse, SolveParams, StatsResponse, StatusRequest, SubmitRequest,
     SweepRequest, SweepResponse, SystemRef, SystemSpec, VmRow,
@@ -81,6 +82,8 @@ fn every_request_variant_roundtrips() {
         partials_from: Some(17),
     }));
     roundtrip(Request::Cancel(CancelRequest { job_id: "j-3".into() }));
+    roundtrip(Request::Persist(PersistRequest { action: PersistAction::Stats }));
+    roundtrip(Request::Persist(PersistRequest { action: PersistAction::Compact }));
 }
 
 #[test]
@@ -270,6 +273,14 @@ fn every_response_variant_roundtrips() {
         }),
         |b| Response::Stats(StatsResponse::decode(b).unwrap()),
     );
+    let persist = Response::Persist {
+        persist: Json::parse(r#"{"cache":{"enabled":false},"journal":{"enabled":false}}"#)
+            .unwrap(),
+    };
+    assert_eq!(
+        persist.encode().to_string(),
+        r#"{"ok":true,"persist":{"cache":{"enabled":false},"journal":{"enabled":false}}}"#
+    );
     // The fixed-shape variants (plus ApiError, pinned in the api unit
     // tests) complete the surface.
     assert_eq!(Response::Pong.encode().to_string(), r#"{"ok":true,"pong":true}"#);
@@ -396,6 +407,7 @@ const SCHEMA_SNAPSHOT: &[&str] = &[
     "list_policies =",
     "list_scenarios =",
     "describe =",
+    "persist = action:string",
     "plan = budget!number policy:string approach:string deadline:number seed:integer \
      n_starts:integer perf_jitter:number sample_frac:number threads:integer \
      remaining:array[integer] planner:object system:string|object scenario:string \

@@ -1,0 +1,262 @@
+//! Durability integration tests: crash-recovery through a real SIGKILL
+//! of the server binary, clean-restart replay in process, solve-cache
+//! end-to-end behaviour over the wire, and cache-key stability.
+//!
+//! These tests spawn servers bound to ephemeral ports and share journal
+//! files on disk; run them single-threaded (`--test-threads=1`, as CI
+//! does) to keep the process-level tests from racing each other.
+
+use std::io::{BufRead, BufReader};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use botsched::coordinator::api::{PlanRequest, Request, SystemRef};
+use botsched::coordinator::{Client, Coordinator, CoordinatorConfig};
+use botsched::util::Json;
+
+/// A unique scratch path under the OS temp dir, removed up front so a
+/// previous run's leftovers never leak into this one.
+fn tmp_journal(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("botsched-persist-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+/// Spawn `botsched serve` on an ephemeral port with the given journal
+/// and return (child, addr) once the listening line is printed.
+fn spawn_server(journal: &PathBuf) -> (Child, std::net::SocketAddr) {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_botsched"))
+        .args([
+            "serve",
+            "--addr",
+            "127.0.0.1:0",
+            "--no-xla",
+            "--journal",
+            journal.to_str().unwrap(),
+            "--cache-capacity",
+            "16",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning botsched serve");
+    let stdout = child.stdout.take().expect("piped stdout");
+    let mut reader = BufReader::new(stdout);
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("reading the listening line");
+    let addr = line
+        .strip_prefix("coordinator listening on ")
+        .and_then(|rest| rest.split_whitespace().next())
+        .unwrap_or_else(|| panic!("unexpected startup line: {line:?}"))
+        .parse()
+        .expect("parsing the listening address");
+    // Keep draining stdout in the background so the server never blocks
+    // on a full pipe.
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while let Ok(n) = reader.read_line(&mut sink) {
+            if n == 0 {
+                break;
+            }
+            sink.clear();
+        }
+    });
+    (child, addr)
+}
+
+fn wait_done(client: &mut Client, id: &str) -> Json {
+    let status = client
+        .wait_job(id, Duration::from_millis(20), Duration::from_secs(60))
+        .expect("polling job status");
+    assert_eq!(status.state, "done", "job {id} ended as {:?}: {:?}", status.state, status.error);
+    status.result.expect("done job carries its result")
+}
+
+#[test]
+fn sigkill_crash_recovers_results_and_requeues_unfinished_jobs() {
+    let journal = tmp_journal("crash");
+
+    // --- First server life: one finished job, one mid-flight job. ---
+    let (mut child, addr) = spawn_server(&journal);
+    let mut client = Client::connect(&addr).expect("connecting");
+    let plan_id = client
+        .submit_raw(
+            Json::parse(r#"{"op":"plan","budget":80}"#).unwrap(),
+            botsched::coordinator::api::Placement::default(),
+        )
+        .expect("submitting plan job");
+    let plan_result = wait_done(&mut client, &plan_id);
+
+    // A deliberately long Monte-Carlo campaign that will still be
+    // running when the process dies.
+    let campaign_id = client
+        .submit_raw(
+            Json::parse(
+                r#"{"op":"campaign","budget":150,"replications":2048,
+                    "noise":{"mean_lifetime":2500},"seed":3,"max_rounds":6}"#,
+            )
+            .unwrap(),
+            botsched::coordinator::api::Placement::default(),
+        )
+        .expect("submitting campaign job");
+    // It is registered (any state) — the accept record is already
+    // fsynced, so the kill below cannot lose it.
+    let st = client.status(&campaign_id, None).expect("campaign status");
+    assert!(!st.state.is_empty());
+
+    // --- Crash: SIGKILL, no shutdown handshake, no flush. ---
+    child.kill().expect("killing the server");
+    child.wait().expect("reaping the server");
+
+    // --- Second server life: same journal. ---
+    let (mut child, addr) = spawn_server(&journal);
+    let mut client = Client::connect(&addr).expect("reconnecting");
+
+    // The finished job's result survived byte-identically.
+    let recovered = client.status(&plan_id, None).expect("recovered status");
+    assert_eq!(recovered.state, "done");
+    assert_eq!(
+        recovered.result.expect("recovered result").to_string(),
+        plan_result.to_string(),
+        "recovered result must be byte-identical"
+    );
+
+    // The unfinished job re-enqueued under its original id and is
+    // running (or already finished) again.
+    let st = client.status(&campaign_id, None).expect("requeued status");
+    assert!(
+        matches!(st.state.as_str(), "queued" | "running" | "done" | "cancelled"),
+        "unexpected replayed state {:?}",
+        st.state
+    );
+    // New submissions never collide with recovered ids.
+    let fresh = client
+        .submit_raw(
+            Json::parse(r#"{"op":"plan","budget":60}"#).unwrap(),
+            botsched::coordinator::api::Placement::default(),
+        )
+        .expect("fresh submit");
+    assert_ne!(fresh, plan_id);
+    assert_ne!(fresh, campaign_id);
+
+    // The persist op reports the journal as live.
+    let persist = client.persist(false).expect("persist stats");
+    assert_eq!(persist.path(&["journal", "enabled"]), Some(&Json::Bool(true)));
+    assert!(persist.path(&["journal", "records"]).unwrap().as_u64().unwrap() >= 3);
+
+    client.cancel(&campaign_id).ok();
+    client.shutdown().expect("shutdown");
+    child.wait().expect("server exits");
+    let _ = std::fs::remove_file(&journal);
+}
+
+#[test]
+fn clean_restart_replays_in_process() {
+    let journal = tmp_journal("clean");
+    let config = || CoordinatorConfig {
+        addr: "127.0.0.1:0".into(),
+        use_xla: false,
+        batching: false,
+        journal: Some(journal.clone()),
+        cache_capacity: 4,
+        ..CoordinatorConfig::default()
+    };
+
+    let coord = Coordinator::start(config()).expect("first start");
+    let mut client = Client::connect(&coord.local_addr).unwrap();
+    let id = client
+        .submit_raw(
+            Json::parse(r#"{"op":"plan","budget":70,"detail":true}"#).unwrap(),
+            botsched::coordinator::api::Placement::default(),
+        )
+        .unwrap();
+    let result = wait_done(&mut client, &id);
+    drop(client);
+    coord.shutdown();
+
+    let coord = Coordinator::start(config()).expect("restart on the same journal");
+    let mut client = Client::connect(&coord.local_addr).unwrap();
+    let replayed = client.status(&id, None).expect("replayed job");
+    assert_eq!(replayed.state, "done");
+    assert_eq!(replayed.result.unwrap().to_string(), result.to_string());
+    // Forcing a compaction over the wire keeps the replayed state.
+    let persist = client.persist(true).expect("compacting");
+    assert!(persist.path(&["journal", "compactions"]).unwrap().as_u64().unwrap() >= 1);
+    drop(client);
+    coord.shutdown();
+
+    let coord = Coordinator::start(config()).expect("restart after compaction");
+    let mut client = Client::connect(&coord.local_addr).unwrap();
+    let replayed = client.status(&id, None).expect("job survives compaction");
+    assert_eq!(replayed.state, "done");
+    assert_eq!(replayed.result.unwrap().to_string(), result.to_string());
+    drop(client);
+    coord.shutdown();
+    let _ = std::fs::remove_file(&journal);
+}
+
+#[test]
+fn cache_serves_repeated_plans_over_the_wire() {
+    let coord = Coordinator::start(CoordinatorConfig {
+        addr: "127.0.0.1:0".into(),
+        use_xla: false,
+        batching: false,
+        cache_capacity: 8,
+        ..CoordinatorConfig::default()
+    })
+    .expect("coordinator starts");
+    let mut client = Client::connect(&coord.local_addr).unwrap();
+
+    let req = PlanRequest::new(80.0);
+    let a = client.plan(&req).unwrap();
+    let b = client.plan(&req).unwrap();
+    assert_eq!(a, b, "cached plan must match the solved one");
+
+    let stats = client.stats().unwrap().stats;
+    assert!(stats.get("cache_hits").unwrap().as_u64().unwrap() >= 1);
+    assert!(stats.get("cache_misses").unwrap().as_u64().unwrap() >= 1);
+    assert!(stats.get("cache_inserts").unwrap().as_u64().unwrap() >= 1);
+
+    let persist = client.persist(false).unwrap();
+    assert_eq!(persist.path(&["cache", "enabled"]), Some(&Json::Bool(true)));
+    assert_eq!(persist.path(&["cache", "capacity"]).unwrap().as_u64(), Some(8));
+    assert!(persist.path(&["cache", "entries"]).unwrap().as_u64().unwrap() >= 1);
+    // No journal configured: enabled=false, and compaction is refused.
+    assert_eq!(persist.path(&["journal", "enabled"]), Some(&Json::Bool(false)));
+    assert!(client.persist(true).is_err(), "compact without a journal must fail");
+
+    client.shutdown().unwrap();
+    coord.wait();
+}
+
+#[test]
+fn cache_keys_are_stable_across_wire_field_order() {
+    let decode_plan = |line: &str| -> PlanRequest {
+        match Request::decode(&Json::parse(line).unwrap()).unwrap() {
+            Request::Plan(r) => r,
+            other => panic!("expected a plan request, got {other:?}"),
+        }
+    };
+    let a = decode_plan(r#"{"op":"plan","budget":80,"policy":"mp","seed":3}"#);
+    let b = decode_plan(r#"{"seed":3,"policy":"mp","budget":80,"op":"plan"}"#);
+    assert_eq!(a.cache_key(), b.cache_key(), "field order must not fragment the cache");
+    // Presentation knobs are excluded; solution-relevant knobs are not.
+    let c = decode_plan(r#"{"op":"plan","budget":80,"policy":"mp","seed":3,"threads":4,"detail":true}"#);
+    assert_eq!(a.cache_key(), c.cache_key());
+    for different in [
+        r#"{"op":"plan","budget":81,"policy":"mp","seed":3}"#,
+        r#"{"op":"plan","budget":80,"policy":"mi","seed":3}"#,
+        r#"{"op":"plan","budget":80,"policy":"mp","seed":4}"#,
+        r#"{"op":"plan","budget":80,"policy":"mp","seed":3,"scenario":"heavy-tail"}"#,
+    ] {
+        assert_ne!(a.cache_key(), decode_plan(different).cache_key(), "{different}");
+    }
+    // The version stamp is part of every key.
+    assert!(a.cache_key().contains("cache_version"));
+    // The typed builder and the wire decode agree.
+    let typed = PlanRequest::new(80.0).with_policy("mp").with_seed(3);
+    assert_eq!(typed.cache_key(), a.cache_key());
+    let scoped = PlanRequest::new(500.0).with_target(SystemRef::scenario("heavy-tail"));
+    assert_ne!(typed.cache_key(), scoped.cache_key());
+}
