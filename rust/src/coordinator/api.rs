@@ -43,6 +43,7 @@
 //! | `cancelled`      | the job was cancelled before it produced a result    |
 //! | `evicted`        | the job id is unknown (never existed or evicted)     |
 //! | `internal`       | the job ran and failed                               |
+//! | `deadline_exceeded` | the job missed its binding `deadline_ms`          |
 
 use std::fmt;
 
@@ -90,6 +91,7 @@ pub enum ErrorCode {
     Cancelled,
     Evicted,
     Internal,
+    DeadlineExceeded,
 }
 
 impl ErrorCode {
@@ -102,6 +104,7 @@ impl ErrorCode {
             ErrorCode::Cancelled => "cancelled",
             ErrorCode::Evicted => "evicted",
             ErrorCode::Internal => "internal",
+            ErrorCode::DeadlineExceeded => "deadline_exceeded",
         }
     }
 
@@ -114,6 +117,7 @@ impl ErrorCode {
             "cancelled" => ErrorCode::Cancelled,
             "evicted" => ErrorCode::Evicted,
             "internal" => ErrorCode::Internal,
+            "deadline_exceeded" => ErrorCode::DeadlineExceeded,
             _ => return None,
         })
     }
@@ -128,6 +132,7 @@ pub const ERROR_CODES: &[ErrorCode] = &[
     ErrorCode::Cancelled,
     ErrorCode::Evicted,
     ErrorCode::Internal,
+    ErrorCode::DeadlineExceeded,
 ];
 
 /// A structured protocol error: taxonomy code + human message + optional
@@ -176,6 +181,10 @@ impl ApiError {
 
     pub fn internal(message: impl Into<String>) -> Self {
         Self::new(ErrorCode::Internal, message)
+    }
+
+    pub fn deadline_exceeded(message: impl Into<String>) -> Self {
+        Self::new(ErrorCode::DeadlineExceeded, message)
     }
 
     /// The admission-control rejection.  `retry_after_ms` is the v2
@@ -1010,6 +1019,57 @@ impl PersistRequest {
     }
 }
 
+/// What a `chaos` request asks of the failpoint registry
+/// ([`crate::util::failpoint`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ChaosAction {
+    /// Report every configured failpoint (the default when `action` is
+    /// absent).
+    List,
+    /// Arm the points named by a spec string (the
+    /// `name=action[@prob][xN]` grammar documented in
+    /// [`crate::util::failpoint`]).
+    Arm(String),
+    /// Disarm one named point, or every point when `point` is absent.
+    Disarm(Option<String>),
+}
+
+/// The `chaos` op (v2 only, and only on servers started with
+/// `--chaos-allowed`): inspect and drive the fault-injection registry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChaosRequest {
+    pub action: ChaosAction,
+}
+
+impl ChaosRequest {
+    fn decode(j: &Json) -> Result<Self, ApiError> {
+        let action = match j.get("action") {
+            None => ChaosAction::List,
+            Some(v) => match v.as_str() {
+                Some("list") => ChaosAction::List,
+                Some("arm") => {
+                    let spec = strict_str(j, "spec")?.ok_or_else(|| {
+                        ApiError::bad_request("chaos: action \"arm\" requires a \"spec\" string")
+                    })?;
+                    ChaosAction::Arm(spec)
+                }
+                Some("disarm") => ChaosAction::Disarm(strict_str(j, "point")?),
+                Some(other) => {
+                    return Err(ApiError::bad_request(format!(
+                        "chaos: unknown action {other:?} (try \"list\", \"arm\" or \"disarm\")"
+                    )))
+                }
+                None => {
+                    return Err(ApiError::bad_request(format!(
+                        "chaos: \"action\" must be a string, got {v}"
+                    )))
+                }
+            },
+        };
+        Ok(Self { action })
+    }
+}
+
 /// A decoded coordinator request.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
@@ -1031,6 +1091,10 @@ pub enum Request {
     Cancel(CancelRequest),
     /// v2 only: journal + cache statistics and manual compaction.
     Persist(PersistRequest),
+    /// v2 only: overall status + per-subsystem degradation report.
+    Health,
+    /// v2 only (gated by `--chaos-allowed`): the failpoint registry.
+    Chaos(ChaosRequest),
 }
 
 impl Request {
@@ -1053,6 +1117,8 @@ impl Request {
             Request::Status(_) => "status",
             Request::Cancel(_) => "cancel",
             Request::Persist(_) => "persist",
+            Request::Health => "health",
+            Request::Chaos(_) => "chaos",
         }
     }
 
@@ -1163,11 +1229,13 @@ impl Request {
                     .to_string(),
             }),
             "persist" => Request::Persist(PersistRequest::decode(j)?),
+            "health" => Request::Health,
+            "chaos" => Request::Chaos(ChaosRequest::decode(j)?),
             _ => {
                 return Err(ApiError::unknown_op(
-                    "no such op (try list_policies, list_scenarios, describe, persist, plan, \
-                     sweep, simulate, campaign, estimate_perf, submit, status, jobs, cancel, \
-                     stats, ping, shutdown)",
+                    "no such op (try list_policies, list_scenarios, describe, persist, health, \
+                     chaos, plan, sweep, simulate, campaign, estimate_perf, submit, status, \
+                     jobs, cancel, stats, ping, shutdown)",
                 ))
             }
         })
@@ -1184,7 +1252,8 @@ impl Request {
             | Request::Jobs
             | Request::ListPolicies
             | Request::ListScenarios
-            | Request::Describe => {}
+            | Request::Describe
+            | Request::Health => {}
             Request::Plan(r) => {
                 r.params.encode_into(&mut fields);
                 r.target.encode_into(&mut fields);
@@ -1255,6 +1324,21 @@ impl Request {
                     fields.push(("action", Json::str("compact")));
                 }
             }
+            Request::Chaos(r) => match &r.action {
+                // List is the default: encode it bare so the canonical
+                // wire form round-trips.
+                ChaosAction::List => {}
+                ChaosAction::Arm(spec) => {
+                    fields.push(("action", Json::str("arm")));
+                    fields.push(("spec", Json::str(spec)));
+                }
+                ChaosAction::Disarm(point) => {
+                    fields.push(("action", Json::str("disarm")));
+                    if let Some(p) = point {
+                        fields.push(("point", Json::str(p)));
+                    }
+                }
+            },
         }
         Json::obj(fields)
     }
@@ -1614,6 +1698,13 @@ pub enum Response {
     /// The `persist` reply: journal + cache durability statistics
     /// (schema owned by the protocol layer's `op_persist`).
     Persist { persist: Json },
+    /// The `health` reply: overall status + per-subsystem detail
+    /// (schema owned by the protocol layer's `op_health`;
+    /// `super::client::HealthReport` is the typed view).
+    Health { health: Json },
+    /// The `chaos` reply: the failpoint table (schema owned by the
+    /// protocol layer's `op_chaos`).
+    Chaos { chaos: Json },
 }
 
 impl Response {
@@ -1784,6 +1875,8 @@ impl Response {
                 Json::obj(vec![ok, ("cancelled", Json::Bool(*cancelled))])
             }
             Response::Persist { persist } => Json::obj(vec![ok, ("persist", persist.clone())]),
+            Response::Health { health } => Json::obj(vec![ok, ("health", health.clone())]),
+            Response::Chaos { chaos } => Json::obj(vec![ok, ("chaos", chaos.clone())]),
         }
     }
 }
@@ -1837,6 +1930,11 @@ const SOLVE_FIELDS: [FieldSpec; 10] = [
 pub const OP_SPECS: &[OpSpec] = &[
     OpSpec { name: "ping", doc: "liveness probe", fields: &[] },
     OpSpec { name: "stats", doc: "request metrics + engine queue gauges", fields: &[] },
+    OpSpec {
+        name: "health",
+        doc: "overall status + per-subsystem degradation report (v2 only)",
+        fields: &[],
+    },
     OpSpec { name: "list_policies", doc: "registered scheduling policies", fields: &[] },
     OpSpec { name: "list_scenarios", doc: "named workload presets", fields: &[] },
     OpSpec { name: "describe", doc: "this schema (v2 only)", fields: &[] },
@@ -1844,6 +1942,15 @@ pub const OP_SPECS: &[OpSpec] = &[
         name: "persist",
         doc: "journal + cache durability stats; action \"compact\" rewrites the journal (v2 only)",
         fields: &[f("action", "string", false)],
+    },
+    OpSpec {
+        name: "chaos",
+        doc: "inspect/arm/disarm fault-injection points (v2 only, requires --chaos-allowed)",
+        fields: &[
+            f("action", "string", false),
+            f("spec", "string", false),
+            f("point", "string", false),
+        ],
     },
     OpSpec {
         name: "plan",
@@ -2105,15 +2212,69 @@ mod tests {
         let table: Vec<&str> = OP_SPECS.iter().map(|o| o.name).collect();
         for op in [
             "ping", "stats", "shutdown", "jobs", "list_policies", "list_scenarios",
-            "describe", "persist", "plan", "simulate", "sweep", "campaign",
-            "estimate_perf", "submit", "status", "cancel",
+            "describe", "persist", "health", "chaos", "plan", "simulate", "sweep",
+            "campaign", "estimate_perf", "submit", "status", "cancel",
         ] {
             assert!(table.contains(&op), "op {op:?} missing from OP_SPECS");
         }
-        assert_eq!(table.len(), 16, "unknown extra op in OP_SPECS: {table:?}");
+        assert_eq!(table.len(), 18, "unknown extra op in OP_SPECS: {table:?}");
         let schema = describe_schema();
-        assert_eq!(schema.get("ops").unwrap().as_arr().unwrap().len(), 16);
-        assert_eq!(schema.get("error_codes").unwrap().as_arr().unwrap().len(), 7);
+        assert_eq!(schema.get("ops").unwrap().as_arr().unwrap().len(), 18);
+        assert_eq!(schema.get("error_codes").unwrap().as_arr().unwrap().len(), 8);
+    }
+
+    #[test]
+    fn chaos_request_decodes_and_roundtrips() {
+        let dec = |s: &str| Request::decode(&Json::parse(s).unwrap());
+        assert_eq!(
+            dec(r#"{"op":"chaos"}"#).unwrap(),
+            Request::Chaos(ChaosRequest { action: ChaosAction::List })
+        );
+        assert_eq!(
+            dec(r#"{"op":"chaos","action":"list"}"#).unwrap(),
+            Request::Chaos(ChaosRequest { action: ChaosAction::List })
+        );
+        let arm = dec(r#"{"op":"chaos","action":"arm","spec":"journal.fsync=error@0.5"}"#)
+            .unwrap();
+        assert_eq!(
+            arm,
+            Request::Chaos(ChaosRequest {
+                action: ChaosAction::Arm("journal.fsync=error@0.5".into()),
+            })
+        );
+        assert_eq!(
+            arm.encode().to_string(),
+            r#"{"action":"arm","op":"chaos","spec":"journal.fsync=error@0.5"}"#
+        );
+        let disarm = dec(r#"{"op":"chaos","action":"disarm","point":"journal.fsync"}"#).unwrap();
+        assert_eq!(
+            disarm,
+            Request::Chaos(ChaosRequest {
+                action: ChaosAction::Disarm(Some("journal.fsync".into())),
+            })
+        );
+        assert_eq!(
+            disarm.encode().to_string(),
+            r#"{"action":"disarm","op":"chaos","point":"journal.fsync"}"#
+        );
+        assert_eq!(
+            dec(r#"{"op":"chaos","action":"disarm"}"#).unwrap(),
+            Request::Chaos(ChaosRequest { action: ChaosAction::Disarm(None) })
+        );
+        // The canonical List encoding drops the default action.
+        assert_eq!(
+            Request::Chaos(ChaosRequest { action: ChaosAction::List }).encode().to_string(),
+            r#"{"op":"chaos"}"#
+        );
+        let e = dec(r#"{"op":"chaos","action":"arm"}"#).unwrap_err();
+        assert_eq!(e.message, "chaos: action \"arm\" requires a \"spec\" string");
+        let e = dec(r#"{"op":"chaos","action":"explode"}"#).unwrap_err();
+        assert_eq!(
+            e.message,
+            "chaos: unknown action \"explode\" (try \"list\", \"arm\" or \"disarm\")"
+        );
+        let e = dec(r#"{"op":"chaos","action":9}"#).unwrap_err();
+        assert_eq!(e.message, "chaos: \"action\" must be a string, got 9");
     }
 
     #[test]

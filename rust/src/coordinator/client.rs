@@ -16,6 +16,13 @@
 //! `send`-then-`recv` and therefore must not be interleaved with
 //! outstanding pipelined sends — [`Client::call`] enforces that.
 //!
+//! Transient failures can be retried transparently: configure a
+//! [`RetryPolicy`] on [`ClientOptions::retry`] and every typed op
+//! re-runs on `busy` rejections and (for idempotent ops) transport
+//! errors, with jittered exponential backoff and automatic reconnects.
+//! The default is [`RetryPolicy::none`] — the historical fail-fast
+//! behaviour.  Accounting lands on [`Client::retry_stats`].
+//!
 //! ```no_run
 //! use botsched::coordinator::api::PlanRequest;
 //! use botsched::coordinator::Client;
@@ -51,6 +58,97 @@ pub struct ClientOptions {
     pub read_timeout: Option<Duration>,
     /// Per-request write bound; `None` = the OS default.
     pub write_timeout: Option<Duration>,
+    /// How typed ops retry transient failures (`busy` rejections and,
+    /// for idempotent ops, transport errors).  The default
+    /// [`RetryPolicy::none`] keeps the historical fail-fast behaviour.
+    pub retry: RetryPolicy,
+}
+
+/// How a [`Client`] retries transient failures.
+///
+/// Applies to every typed op: `busy` admission rejections always
+/// qualify (nothing was enqueued server-side), transport errors qualify
+/// only for idempotent ops — [`Client::submit`] never re-sends after an
+/// I/O failure because the server may already have accepted the job —
+/// and structured API errors such as `bad_request` are never retried.
+/// Delays double per attempt from `base_delay`, are capped at
+/// `max_delay`, and shed a uniform downward `jitter`; a server
+/// `retry_after_ms` hint replaces the computed delay (the cap still
+/// applies).
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (`1` = no retries).
+    pub max_attempts: u32,
+    /// Bound on total elapsed time across attempts; `None` = unbounded.
+    pub max_elapsed: Option<Duration>,
+    /// First retry delay (doubles each further attempt).
+    pub base_delay: Duration,
+    /// Upper bound on any single delay.
+    pub max_delay: Duration,
+    /// Fraction of each delay randomised away, in `[0, 1]`: the sleep
+    /// is uniform in `[delay * (1 - jitter), delay]`.
+    pub jitter: f64,
+    /// Jitter RNG seed; `None` derives one from the clock.
+    pub seed: Option<u64>,
+}
+
+impl RetryPolicy {
+    /// No retries: every failure surfaces immediately (the default).
+    pub fn none() -> Self {
+        Self {
+            max_attempts: 1,
+            max_elapsed: None,
+            base_delay: Duration::from_millis(50),
+            max_delay: Duration::from_millis(2_000),
+            jitter: 0.0,
+            seed: None,
+        }
+    }
+
+    /// A sane interactive default: up to 5 attempts over at most 30s,
+    /// 50ms → 2s exponential backoff with 20% jitter.
+    pub fn standard() -> Self {
+        Self {
+            max_attempts: 5,
+            max_elapsed: Some(Duration::from_secs(30)),
+            base_delay: Duration::from_millis(50),
+            max_delay: Duration::from_millis(2_000),
+            jitter: 0.2,
+            seed: None,
+        }
+    }
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+/// Client-side retry accounting (see [`Client::retry_stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RetryStats {
+    /// Attempt re-runs performed across all ops.
+    pub retries: u64,
+    /// Reconnects dialled to recover from transport errors.
+    pub reconnects: u64,
+    /// Calls whose retry budget ran out before the error cleared.
+    pub gave_up: u64,
+}
+
+/// The delay slept after (1-based) `attempt` fails, in milliseconds.
+/// `unit` is a uniform sample in `[0, 1)` driving the downward jitter.
+fn backoff_ms(policy: &RetryPolicy, attempt: u32, hint_ms: Option<u64>, unit: f64) -> u64 {
+    let raw = match hint_ms {
+        Some(ms) => ms as f64,
+        None => {
+            let exp = attempt.saturating_sub(1).min(20);
+            policy.base_delay.as_millis() as f64 * (1u64 << exp) as f64
+        }
+    };
+    let capped = raw.min(policy.max_delay.as_millis() as f64);
+    let jittered = capped * (1.0 - policy.jitter.clamp(0.0, 1.0) * unit);
+    jittered.max(1.0) as u64
 }
 
 /// Why a client call failed.
@@ -157,8 +255,49 @@ impl JobStatus {
     }
 }
 
+/// A typed view of the `health` reply; `raw` keeps the full report for
+/// subsystem fields this view does not lift.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HealthReport {
+    /// `"ok"`, or `"degraded"` when a subsystem is running impaired
+    /// (e.g. the journal detached after write failures).
+    pub status: String,
+    pub uptime_ms: u64,
+    /// Whether the journal is attached; `None` when the server runs
+    /// without `--journal`.
+    pub journal_attached: Option<bool>,
+    pub raw: Json,
+}
+
+impl HealthReport {
+    fn decode(j: &Json) -> Result<Self, ClientError> {
+        let status = j
+            .get("status")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| ClientError::Protocol(format!("health reply missing status: {j}")))?;
+        let journal_attached = match j.path(&["journal", "enabled"]).and_then(Json::as_bool) {
+            Some(true) => j.path(&["journal", "attached"]).and_then(Json::as_bool),
+            _ => None,
+        };
+        Ok(Self {
+            status,
+            uptime_ms: j.get("uptime_ms").and_then(Json::as_u64).unwrap_or(0),
+            journal_attached,
+            raw: j.clone(),
+        })
+    }
+
+    /// Whether every subsystem reports healthy.
+    pub fn is_ok(&self) -> bool {
+        self.status == "ok"
+    }
+}
+
 /// A blocking coordinator client over one persistent connection.
 pub struct Client {
+    addr: SocketAddr,
+    opts: ClientOptions,
     stream: TcpStream,
     reader: BufReader<TcpStream>,
     /// Requests sent but not yet answered (pipelining depth).
@@ -168,6 +307,9 @@ pub struct Client {
     /// every further use would misframe replies.  Poisoned clients error
     /// on every call — reconnect instead.
     poisoned: bool,
+    /// xorshift64 state for retry jitter.
+    rng: u64,
+    retry_stats: RetryStats,
 }
 
 impl Client {
@@ -178,6 +320,31 @@ impl Client {
 
     /// Connect with explicit connect/read/write timeouts.
     pub fn connect_with(addr: &SocketAddr, opts: &ClientOptions) -> Result<Self, ClientError> {
+        let (stream, reader) = Self::open(addr, opts)?;
+        let seed = opts.retry.seed.unwrap_or_else(|| {
+            let clock = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| u64::from(d.subsec_nanos()) ^ d.as_secs())
+                .unwrap_or(0);
+            clock ^ (u64::from(addr.port()) << 32)
+        });
+        Ok(Self {
+            addr: *addr,
+            opts: opts.clone(),
+            stream,
+            reader,
+            pending: VecDeque::new(),
+            poisoned: false,
+            // xorshift64 has a fixed point at 0; force a nonzero state.
+            rng: seed | 1,
+            retry_stats: RetryStats::default(),
+        })
+    }
+
+    fn open(
+        addr: &SocketAddr,
+        opts: &ClientOptions,
+    ) -> Result<(TcpStream, BufReader<TcpStream>), ClientError> {
         let stream = match opts.connect_timeout {
             Some(t) => TcpStream::connect_timeout(addr, t)?,
             None => TcpStream::connect(addr)?,
@@ -186,12 +353,38 @@ impl Client {
         stream.set_read_timeout(opts.read_timeout)?;
         stream.set_write_timeout(opts.write_timeout)?;
         let reader = BufReader::new(stream.try_clone()?);
-        Ok(Self { stream, reader, pending: VecDeque::new(), poisoned: false })
+        Ok((stream, reader))
+    }
+
+    /// Drop the current socket and dial a fresh one, clearing poisoning
+    /// and any (now unanswerable) pipelined requests.
+    pub fn reconnect(&mut self) -> Result<(), ClientError> {
+        let (stream, reader) = Self::open(&self.addr, &self.opts)?;
+        self.stream = stream;
+        self.reader = reader;
+        self.pending.clear();
+        self.poisoned = false;
+        self.retry_stats.reconnects += 1;
+        Ok(())
+    }
+
+    /// Retry accounting accumulated over this client's lifetime.
+    pub fn retry_stats(&self) -> RetryStats {
+        self.retry_stats
     }
 
     /// Requests currently in flight on this connection.
     pub fn pending(&self) -> usize {
         self.pending.len()
+    }
+
+    fn next_unit(&mut self) -> f64 {
+        let mut x = self.rng;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.rng = x;
+        (x >> 11) as f64 / (1u64 << 53) as f64
     }
 
     // ----- pipelining ---------------------------------------------------
@@ -267,16 +460,55 @@ impl Client {
         self.recv()
     }
 
+    /// [`Client::call`] under the configured [`RetryPolicy`]: `busy`
+    /// rejections always re-run (nothing was enqueued), transport
+    /// errors re-run after a reconnect only when `idempotent`, and
+    /// structured API errors surface immediately.
+    fn call_retrying(&mut self, req: &api::Request, idempotent: bool) -> Result<Json, ClientError> {
+        let policy = self.opts.retry.clone();
+        let start = std::time::Instant::now();
+        let mut attempt: u32 = 0;
+        loop {
+            attempt += 1;
+            if self.poisoned && idempotent {
+                self.reconnect()?;
+            }
+            let err = match self.call(req) {
+                Ok(body) => return Ok(body),
+                Err(e) => e,
+            };
+            let (retryable, reconnect, hint) = match &err {
+                ClientError::Busy(b) => (true, false, b.retry_after_ms),
+                ClientError::Io(_) => (idempotent, true, None),
+                _ => (false, false, None),
+            };
+            let budget_left = attempt < policy.max_attempts.max(1)
+                && policy.max_elapsed.is_none_or(|bound| start.elapsed() < bound);
+            if !retryable || !budget_left {
+                if retryable && policy.max_attempts > 1 {
+                    self.retry_stats.gave_up += 1;
+                }
+                return Err(err);
+            }
+            if reconnect {
+                self.reconnect()?;
+            }
+            self.retry_stats.retries += 1;
+            let unit = self.next_unit();
+            std::thread::sleep(Duration::from_millis(backoff_ms(&policy, attempt, hint, unit)));
+        }
+    }
+
     // ----- typed ops ----------------------------------------------------
 
     /// `ping`: liveness probe.
     pub fn ping(&mut self) -> Result<(), ClientError> {
-        self.call(&api::Request::Ping).map(|_| ())
+        self.call_retrying(&api::Request::Ping, true).map(|_| ())
     }
 
     /// `plan`: solve one budget through a named policy.
     pub fn plan(&mut self, req: &api::PlanRequest) -> Result<api::PlanResponse, ClientError> {
-        let body = self.call(&api::Request::Plan(req.clone()))?;
+        let body = self.call_retrying(&api::Request::Plan(req.clone()), true)?;
         api::PlanResponse::decode(&body).map_err(ClientError::Protocol)
     }
 
@@ -285,13 +517,13 @@ impl Client {
         &mut self,
         req: &api::SimulateRequest,
     ) -> Result<api::SimulateResponse, ClientError> {
-        let body = self.call(&api::Request::Simulate(req.clone()))?;
+        let body = self.call_retrying(&api::Request::Simulate(req.clone()), true)?;
         api::SimulateResponse::decode(&body).map_err(ClientError::Protocol)
     }
 
     /// `sweep`: budget × policy sweep on the job engine.
     pub fn sweep(&mut self, req: &api::SweepRequest) -> Result<api::SweepResponse, ClientError> {
-        let body = self.call(&api::Request::Sweep(req.clone()))?;
+        let body = self.call_retrying(&api::Request::Sweep(req.clone()), true)?;
         api::SweepResponse::decode(&body).map_err(ClientError::Protocol)
     }
 
@@ -301,7 +533,7 @@ impl Client {
         &mut self,
         req: &api::CampaignRequest,
     ) -> Result<api::CampaignResponse, ClientError> {
-        let body = self.call(&api::Request::Campaign(req.clone()))?;
+        let body = self.call_retrying(&api::Request::Campaign(req.clone()), true)?;
         api::CampaignResponse::decode(&body).map_err(ClientError::Protocol)
     }
 
@@ -310,13 +542,13 @@ impl Client {
         &mut self,
         req: &api::EstimatePerfRequest,
     ) -> Result<api::EstimatePerfResponse, ClientError> {
-        let body = self.call(&api::Request::EstimatePerf(req.clone()))?;
+        let body = self.call_retrying(&api::Request::EstimatePerf(req.clone()), true)?;
         api::EstimatePerfResponse::decode(&body).map_err(ClientError::Protocol)
     }
 
     /// `list_policies`: the registered scheduling policies.
     pub fn list_policies(&mut self) -> Result<Vec<api::PolicyInfo>, ClientError> {
-        let body = self.call(&api::Request::ListPolicies)?;
+        let body = self.call_retrying(&api::Request::ListPolicies, true)?;
         decode_named_list(&body, "policies")
             .map(|rows| {
                 rows.into_iter()
@@ -328,7 +560,7 @@ impl Client {
 
     /// `list_scenarios`: the named workload presets.
     pub fn list_scenarios(&mut self) -> Result<Vec<api::ScenarioInfo>, ClientError> {
-        let body = self.call(&api::Request::ListScenarios)?;
+        let body = self.call_retrying(&api::Request::ListScenarios, true)?;
         decode_named_list(&body, "scenarios")
             .map(|rows| {
                 rows.into_iter()
@@ -340,7 +572,7 @@ impl Client {
 
     /// `describe` (v2): the machine-readable op/field schema.
     pub fn describe(&mut self) -> Result<Json, ClientError> {
-        let body = self.call(&api::Request::Describe)?;
+        let body = self.call_retrying(&api::Request::Describe, true)?;
         body.get("schema")
             .cloned()
             .ok_or_else(|| ClientError::Protocol(format!("describe reply missing schema: {body}")))
@@ -352,7 +584,8 @@ impl Client {
     pub fn persist(&mut self, compact: bool) -> Result<Json, ClientError> {
         let action =
             if compact { api::PersistAction::Compact } else { api::PersistAction::Stats };
-        let body = self.call(&api::Request::Persist(api::PersistRequest { action }))?;
+        let req = api::Request::Persist(api::PersistRequest { action });
+        let body = self.call_retrying(&req, true)?;
         body.get("persist")
             .cloned()
             .ok_or_else(|| ClientError::Protocol(format!("persist reply missing persist: {body}")))
@@ -360,8 +593,18 @@ impl Client {
 
     /// `stats`: request metrics + engine queue gauges.
     pub fn stats(&mut self) -> Result<api::StatsResponse, ClientError> {
-        let body = self.call(&api::Request::Stats)?;
+        let body = self.call_retrying(&api::Request::Stats, true)?;
         api::StatsResponse::decode(&body).map_err(ClientError::Protocol)
+    }
+
+    /// `health` (v2): overall server status + per-subsystem detail
+    /// (journal attachment, cache, shard liveness, uptime).
+    pub fn health(&mut self) -> Result<HealthReport, ClientError> {
+        let body = self.call_retrying(&api::Request::Health, true)?;
+        let report = body
+            .get("health")
+            .ok_or_else(|| ClientError::Protocol(format!("health reply missing health: {body}")))?;
+        HealthReport::decode(report)
     }
 
     /// `submit`: run a typed request asynchronously; returns the job id.
@@ -380,7 +623,10 @@ impl Client {
         job: Json,
         placement: api::Placement,
     ) -> Result<String, ClientError> {
-        let body = self.call(&api::Request::Submit(api::SubmitRequest { job, placement }))?;
+        let req = api::Request::Submit(api::SubmitRequest { job, placement });
+        // Not idempotent: an I/O failure after the send leaves the job's
+        // fate unknown, so only `busy` (never-enqueued) is retried.
+        let body = self.call_retrying(&req, false)?;
         body.get("job_id")
             .and_then(Json::as_str)
             .map(str::to_string)
@@ -402,6 +648,7 @@ impl Client {
             match self.submit_raw(encoded.clone(), placement) {
                 Err(ClientError::Busy(busy)) if attempt < max_retries => {
                     attempt += 1;
+                    self.retry_stats.retries += 1;
                     let ms = busy.retry_after_ms.unwrap_or(50).clamp(1, 2_000);
                     std::thread::sleep(Duration::from_millis(ms));
                 }
@@ -417,10 +664,11 @@ impl Client {
         job_id: &str,
         partials_from: Option<u64>,
     ) -> Result<JobStatus, ClientError> {
-        let body = self.call(&api::Request::Status(api::StatusRequest {
+        let req = api::Request::Status(api::StatusRequest {
             job_id: job_id.to_string(),
             partials_from,
-        }))?;
+        });
+        let body = self.call_retrying(&req, true)?;
         let job = body
             .get("job")
             .ok_or_else(|| ClientError::Protocol(format!("status reply missing job: {body}")))?;
@@ -429,7 +677,7 @@ impl Client {
 
     /// `jobs`: every job with state + progress.
     pub fn jobs(&mut self) -> Result<Vec<JobStatus>, ClientError> {
-        let body = self.call(&api::Request::Jobs)?;
+        let body = self.call_retrying(&api::Request::Jobs, true)?;
         body.get("jobs")
             .and_then(Json::as_arr)
             .ok_or_else(|| ClientError::Protocol(format!("jobs reply missing jobs: {body}")))?
@@ -441,8 +689,8 @@ impl Client {
     /// `cancel`: fire a job's cancel token; `true` when the job existed
     /// and had not already finished.
     pub fn cancel(&mut self, job_id: &str) -> Result<bool, ClientError> {
-        let body = self
-            .call(&api::Request::Cancel(api::CancelRequest { job_id: job_id.to_string() }))?;
+        let req = api::Request::Cancel(api::CancelRequest { job_id: job_id.to_string() });
+        let body = self.call_retrying(&req, true)?;
         body.get("cancelled")
             .and_then(Json::as_bool)
             .ok_or_else(|| ClientError::Protocol(format!("cancel reply malformed: {body}")))
@@ -521,5 +769,50 @@ mod tests {
         let e = ClientError::Busy(BusyInfo { shard: 2, backlog: 256, retry_after_ms: Some(40) });
         let s = e.to_string();
         assert!(s.contains("shard 2") && s.contains("40ms"), "{s}");
+    }
+
+    #[test]
+    fn backoff_grows_caps_and_respects_hints() {
+        let p = RetryPolicy { jitter: 0.0, ..RetryPolicy::standard() };
+        assert_eq!(backoff_ms(&p, 1, None, 0.0), 50);
+        assert_eq!(backoff_ms(&p, 2, None, 0.0), 100);
+        assert_eq!(backoff_ms(&p, 3, None, 0.0), 200);
+        assert_eq!(backoff_ms(&p, 12, None, 0.0), 2_000, "capped at max_delay");
+        assert_eq!(backoff_ms(&p, 1, Some(700), 0.0), 700, "server hint wins");
+        assert_eq!(backoff_ms(&p, 1, Some(60_000), 0.0), 2_000, "hints are capped too");
+        let jittered = RetryPolicy { jitter: 0.5, ..p };
+        assert_eq!(backoff_ms(&jittered, 1, None, 1.0), 25, "full jitter sheds half");
+        assert_eq!(backoff_ms(&jittered, 1, None, 0.0), 50);
+        assert_eq!(backoff_ms(&RetryPolicy::none(), 1, Some(0), 0.0), 1, "1ms floor");
+    }
+
+    #[test]
+    fn default_retry_policy_is_fail_fast() {
+        let p = RetryPolicy::default();
+        assert_eq!(p.max_attempts, 1, "defaults must preserve pre-retry behaviour");
+        let s = RetryPolicy::standard();
+        assert!(s.max_attempts > 1 && s.jitter > 0.0 && s.max_elapsed.is_some());
+    }
+
+    #[test]
+    fn health_report_decodes_both_shapes() {
+        let degraded = Json::parse(
+            r#"{"cache":{"enabled":true},
+                "engine":{"queued":0,"shards":4,"watchdog_respawns":0},
+                "journal":{"attached":false,"enabled":true,"write_errors":2},
+                "status":"degraded","uptime_ms":1234}"#,
+        )
+        .unwrap();
+        let h = HealthReport::decode(&degraded).unwrap();
+        assert_eq!(h.status, "degraded");
+        assert!(!h.is_ok());
+        assert_eq!(h.uptime_ms, 1234);
+        assert_eq!(h.journal_attached, Some(false));
+        let no_journal =
+            Json::parse(r#"{"journal":{"enabled":false},"status":"ok","uptime_ms":5}"#).unwrap();
+        let h = HealthReport::decode(&no_journal).unwrap();
+        assert!(h.is_ok());
+        assert_eq!(h.journal_attached, None, "journal-less servers report no attachment");
+        assert!(HealthReport::decode(&Json::parse(r#"{"uptime_ms":5}"#).unwrap()).is_err());
     }
 }

@@ -45,12 +45,11 @@
 
 use std::cmp::Ordering as CmpOrdering;
 use std::collections::BinaryHeap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::util::{CancelToken, Json};
+use crate::util::{failpoint, CancelToken, Json};
 
 use super::state::{JobRegistry, JobState};
 use super::Metrics;
@@ -104,6 +103,10 @@ pub enum JobError {
     /// The job was cancelled before it produced a result (explicit
     /// cancel op, engine shutdown, or an abandoning synchronous waiter).
     Cancelled(String),
+    /// The job's binding `deadline_ms` passed before it produced a
+    /// result: shed while queued, aborted by the deadline sweeper while
+    /// running, or timed out by its synchronous waiter.
+    DeadlineExceeded(String),
     /// The job ran (or was lost) and failed with this message.
     Failed(String),
 }
@@ -114,7 +117,9 @@ impl std::fmt::Display for JobError {
             JobError::Busy { shard, backlog } => {
                 write!(f, "busy: shard {shard} backlog {backlog} is at its bound")
             }
-            JobError::Cancelled(e) | JobError::Failed(e) => f.write_str(e),
+            JobError::Cancelled(e) | JobError::DeadlineExceeded(e) | JobError::Failed(e) => {
+                f.write_str(e)
+            }
         }
     }
 }
@@ -221,11 +226,33 @@ struct QueueState {
     next_seq: u64,
 }
 
+/// What one worker slot is executing right now (the watchdog's view).
+/// `epoch` is bumped when the watchdog condemns a stuck worker: the
+/// condemned thread notices the mismatch at its next slot touch and
+/// exits, while a freshly spawned replacement (carrying the new epoch)
+/// takes over the slot.
+#[derive(Default)]
+struct BusySlot {
+    /// `(job id, started at)` while the slot's worker is executing.
+    job: Option<(String, Instant)>,
+    epoch: u64,
+}
+
 struct Shared {
     /// Every shard queue behind one short-held lock.
     queues: Mutex<QueueState>,
     ready: Condvar,
     stop: AtomicBool,
+    /// One slot per worker shard, inspected by the watchdog.
+    busy: Mutex<Vec<BusySlot>>,
+    /// Watchdog threshold in ms; `0` disables the watchdog (the
+    /// deadline sweeper in the same supervisor thread always runs).
+    watchdog_ms: AtomicU64,
+    /// Worker + supervisor join handles.  Lives in `Shared` (not the
+    /// engine) so the supervisor can register respawned workers.
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Stuck workers condemned and replaced by the watchdog.
+    respawns: AtomicU64,
 }
 
 /// The sharded worker pool.  One instance per coordinator; submit from
@@ -233,7 +260,6 @@ struct Shared {
 pub struct JobEngine {
     registry: Arc<JobRegistry>,
     shared: Arc<Shared>,
-    workers: Mutex<Vec<JoinHandle<()>>>,
     metrics: Arc<Metrics>,
     n_shards: usize,
     max_backlog: usize,
@@ -304,19 +330,40 @@ impl JobEngine {
             }),
             ready: Condvar::new(),
             stop: AtomicBool::new(false),
+            busy: Mutex::new((0..n_shards).map(|_| BusySlot::default()).collect()),
+            watchdog_ms: AtomicU64::new(0),
+            handles: Mutex::new(Vec::new()),
+            respawns: AtomicU64::new(0),
         });
-        let workers = (0..n_shards)
-            .map(|shard| {
-                let shared = Arc::clone(&shared);
-                let registry = Arc::clone(&registry);
-                let metrics = Arc::clone(&metrics);
-                std::thread::Builder::new()
-                    .name(format!("job-engine-{shard}"))
-                    .spawn(move || worker_loop(shard, &shared, &registry, &metrics))
-                    .expect("spawning job-engine worker")
-            })
+        let mut handles: Vec<_> = (0..n_shards)
+            .map(|shard| spawn_worker(shard, 0, &shared, &registry, &metrics))
             .collect();
-        Self { registry, shared, workers: Mutex::new(workers), metrics, n_shards, max_backlog }
+        handles.push({
+            let shared = Arc::clone(&shared);
+            let registry = Arc::clone(&registry);
+            let metrics = Arc::clone(&metrics);
+            std::thread::Builder::new()
+                .name("job-engine-supervisor".into())
+                .spawn(move || supervisor_loop(&shared, &registry, &metrics))
+                .expect("spawning job-engine supervisor")
+        });
+        shared.handles.lock().unwrap().extend(handles);
+        Self { registry, shared, metrics, n_shards, max_backlog }
+    }
+
+    /// Arm (or disarm, with `None`) the stuck-worker watchdog: a worker
+    /// executing one job for longer than `threshold` is condemned — its
+    /// job's token fires, the job is failed, and a fresh worker takes
+    /// over the shard slot.  Disabled by default: a legitimate
+    /// hours-long campaign must never be shot by a default.
+    pub fn set_watchdog(&self, threshold: Option<Duration>) {
+        let ms = threshold.map_or(0, |d| d.as_millis().min(u128::from(u64::MAX)) as u64);
+        self.shared.watchdog_ms.store(ms, Ordering::Relaxed);
+    }
+
+    /// Stuck workers condemned and replaced so far (for `stats`).
+    pub fn watchdog_respawns(&self) -> u64 {
+        self.shared.respawns.load(Ordering::Relaxed)
     }
 
     /// The registry backing `status` / `jobs` / `cancel`.
@@ -462,15 +509,26 @@ impl JobEngine {
             Ok(id) => id,
             Err(Busy { shard, backlog }) => return Err(JobError::Busy { shard, backlog }),
         };
+        // A binding deadline doubles as the server-side timeout for the
+        // synchronous wait: the caller hears `deadline_exceeded` at the
+        // deadline instead of blocking for the full engine bound.
+        let wait = prio
+            .deadline_ms
+            .map_or(SYNC_WAIT, |ms| Duration::from_millis(ms).min(SYNC_WAIT));
         // wait_outcome reads the result in the same critical section as
         // the terminal observation, so registry eviction cannot race a
         // successful job's result away from its waiter.
-        match self.registry.wait_outcome(&id, SYNC_WAIT) {
+        match self.registry.wait_outcome(&id, wait) {
             Some((JobState::Done, result, _)) => {
                 Ok(result.unwrap_or(Json::Null)) // Done always stores a result
             }
             Some((JobState::Failed, _, error)) => {
-                Err(JobError::Failed(error.unwrap_or_else(|| "job failed".into())))
+                let msg = error.unwrap_or_else(|| "job failed".into());
+                if msg.starts_with("deadline_exceeded") {
+                    Err(JobError::DeadlineExceeded(msg))
+                } else {
+                    Err(JobError::Failed(msg))
+                }
             }
             Some((JobState::Cancelled, _, _)) => {
                 Err(JobError::Cancelled(format!("job {id} was cancelled")))
@@ -479,11 +537,23 @@ impl JobEngine {
                 // Timed out with the job still live: cancel it so the
                 // abandoned work frees its shard instead of running on
                 // for hours behind a client that already gave up.
-                self.registry.cancel(&id);
-                Err(JobError::Failed(format!(
-                    "job {id} exceeded the synchronous wait in state {:?}; cancellation requested",
-                    state.as_str()
-                )))
+                let cancelled = self.registry.cancel(&id);
+                if prio.deadline_ms.is_some() {
+                    if cancelled {
+                        self.metrics.record_deadline_exceeded();
+                    }
+                    Err(JobError::DeadlineExceeded(format!(
+                        "deadline_exceeded: job {id} passed its deadline in state {:?}; \
+                         cancellation requested",
+                        state.as_str()
+                    )))
+                } else {
+                    Err(JobError::Failed(format!(
+                        "job {id} exceeded the synchronous wait in state {:?}; \
+                         cancellation requested",
+                        state.as_str()
+                    )))
+                }
             }
             None => Err(JobError::Failed(format!("job {id} unknown to the registry"))),
         }
@@ -535,7 +605,7 @@ impl JobEngine {
         self.shared.stop.store(true, Ordering::Release);
         self.registry.cancel_all();
         self.shared.ready.notify_all();
-        let workers: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        let workers: Vec<_> = self.shared.handles.lock().unwrap().drain(..).collect();
         // The last Arc<JobEngine> can be dropped *by a pool worker* (a
         // job closure owns a Context clone): never join the current
         // thread — it exits on its own once Drop returns and it sees
@@ -595,8 +665,36 @@ fn pop_job(shards: &mut [Shard], own: usize) -> Option<Queued> {
     None
 }
 
+/// Spawn one worker thread for `slot` at `epoch` and return its handle.
+fn spawn_worker(
+    slot: usize,
+    epoch: u64,
+    shared: &Arc<Shared>,
+    registry: &Arc<JobRegistry>,
+    metrics: &Arc<Metrics>,
+) -> std::thread::JoinHandle<()> {
+    let shared = Arc::clone(shared);
+    let registry = Arc::clone(registry);
+    let metrics = Arc::clone(metrics);
+    std::thread::Builder::new()
+        .name(format!("job-engine-{slot}"))
+        .spawn(move || worker_loop(slot, epoch, &shared, &registry, &metrics))
+        .expect("spawning job-engine worker")
+}
+
+/// Extract a human-readable message from a panic payload (the two
+/// shapes `panic!` produces: `&'static str` and `String`).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| (*s).to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "opaque panic payload".to_string())
+}
+
 fn worker_loop(
-    shard: usize,
+    slot: usize,
+    epoch: u64,
     shared: &Shared,
     registry: &Arc<JobRegistry>,
     metrics: &Metrics,
@@ -605,7 +703,7 @@ fn worker_loop(
         let next = {
             let mut q = shared.queues.lock().unwrap();
             loop {
-                if let Some(job) = pop_job(q.shards.as_mut_slice(), shard) {
+                if let Some(job) = pop_job(q.shards.as_mut_slice(), slot) {
                     break Some(job);
                 }
                 if shared.stop.load(Ordering::Acquire) {
@@ -614,11 +712,48 @@ fn worker_loop(
                 q = shared.ready.wait(q).unwrap();
             }
         };
-        let Some(Queued { id, work, .. }) = next else { return };
+        let Some(job) = next else { return };
+        // Binding deadline: a job popped past its deadline is shed
+        // before any execution and fails with the `deadline_exceeded`
+        // marker the API layer maps to its error code.
+        if job.deadline.is_some_and(|d| Instant::now() >= d) {
+            let id = job.id;
+            if registry.abort(
+                &id,
+                format!("deadline_exceeded: job {id} passed its deadline while queued"),
+            ) {
+                metrics.record_deadline_exceeded();
+            }
+            // Nothing ran; this pop is the job's end either way (the
+            // abort loses only to a cancel that raced it).
+            if let Some(state) = registry.state(&id) {
+                metrics.record_job_end(&state);
+            }
+            continue;
+        }
+        // Claim this worker's busy slot.  A condemned worker (the
+        // watchdog bumped the epoch while it was stuck) hands the job
+        // to its replacement and exits.
+        {
+            let mut busy = shared.busy.lock().unwrap();
+            if busy[slot].epoch != epoch {
+                {
+                    let mut q = shared.queues.lock().unwrap();
+                    let shard = shard_of(&job.id, q.shards.len());
+                    q.shards[shard].heap.push(job);
+                }
+                drop(busy);
+                shared.ready.notify_all();
+                return;
+            }
+            busy[slot].job = Some((job.id.clone(), Instant::now()));
+        }
+        let Queued { id, work, .. } = job;
         if !registry.start(&id) {
             // Cancelled while queued: the registry already holds the
             // terminal state; nothing to run.
             metrics.record_job_end(&JobState::Cancelled);
+            release_slot(shared, slot, epoch);
             continue;
         }
         // The registry stamped the job's time-in-queue at start.
@@ -630,17 +765,111 @@ fn worker_loop(
             registry: Arc::clone(registry),
             cancel: registry.token(&id).expect("started job has a token"),
         };
-        // A panicking job must not take the worker down with it.
-        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| work(&ctl)));
+        // A panicking job must not take the worker down with it.  The
+        // `engine.worker` failpoint fires inside this scope so an
+        // injected panic exercises exactly the isolation path.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if failpoint::apply("engine.worker").is_some() {
+                return Err("failpoint engine.worker: injected error".to_string());
+            }
+            work(&ctl)
+        }));
         match outcome {
             Ok(Ok(result)) => registry.finish(&id, result),
             Ok(Err(error)) => registry.fail(&id, error),
-            Err(_) => registry.fail(&id, "job panicked".into()),
+            // The panicking job's terminal state keeps the panic
+            // message, so `status` and the journal stay consistent.
+            Err(payload) => {
+                registry.fail(&id, format!("job panicked: {}", panic_message(payload.as_ref())))
+            }
         }
         // The registry owns the truth: a cancel that raced the finish
         // leaves the job cancelled, and that is what we count.
         if let Some(state) = registry.state(&id) {
             metrics.record_job_end(&state);
+        }
+        if !release_slot(shared, slot, epoch) {
+            // Condemned mid-job: a replacement owns the slot now.
+            return;
+        }
+    }
+}
+
+/// Clear the worker's busy slot; returns false when the worker was
+/// condemned (epoch moved on) and must exit.
+fn release_slot(shared: &Shared, slot: usize, epoch: u64) -> bool {
+    let mut busy = shared.busy.lock().unwrap();
+    if busy[slot].epoch != epoch {
+        return false;
+    }
+    busy[slot].job = None;
+    true
+}
+
+/// Supervisor cadence: deadline sweep + stuck-worker watchdog.
+const SUPERVISE_TICK: Duration = Duration::from_millis(20);
+
+/// The engine's supervisor thread: every tick it (1) aborts running
+/// jobs whose binding deadline passed, firing their tokens so the work
+/// stops at its next checkpoint, and (2) when the watchdog is armed,
+/// condemns workers stuck on one job past the threshold and spawns
+/// replacements so the shard keeps serving.
+fn supervisor_loop(shared: &Arc<Shared>, registry: &Arc<JobRegistry>, metrics: &Arc<Metrics>) {
+    loop {
+        {
+            let q = shared.queues.lock().unwrap();
+            if shared.stop.load(Ordering::Acquire) {
+                return;
+            }
+            // Re-uses the ready condvar so shutdown wakes us instantly;
+            // spurious submit wake-ups just run a cheap early sweep.
+            let _ = shared.ready.wait_timeout(q, SUPERVISE_TICK).unwrap();
+        }
+        if shared.stop.load(Ordering::Acquire) {
+            return;
+        }
+        for id in registry.running_deadline_expired() {
+            if registry.abort(
+                &id,
+                format!("deadline_exceeded: job {id} passed its deadline while running"),
+            ) {
+                // The worker running the job observes the fired token,
+                // returns, and records the job end itself.
+                metrics.record_deadline_exceeded();
+            }
+        }
+        let threshold = shared.watchdog_ms.load(Ordering::Relaxed);
+        if threshold == 0 {
+            continue;
+        }
+        let condemned: Vec<(usize, u64, String)> = {
+            let mut busy = shared.busy.lock().unwrap();
+            busy.iter_mut()
+                .enumerate()
+                .filter_map(|(slot, s)| {
+                    let (id, since) = s.job.as_ref()?;
+                    if since.elapsed() < Duration::from_millis(threshold) {
+                        return None;
+                    }
+                    let id = id.clone();
+                    s.epoch += 1;
+                    s.job = None;
+                    Some((slot, s.epoch, id))
+                })
+                .collect()
+        };
+        for (slot, epoch, id) in condemned {
+            // Fail the stuck job and fire its token: if the worker is
+            // merely slow it stops at the next checkpoint; if it is
+            // truly wedged the replacement keeps the shard serving.
+            registry.abort(
+                &id,
+                format!("watchdog: job {id} stuck past {threshold}ms; worker respawned"),
+            );
+            shared.respawns.fetch_add(1, Ordering::Relaxed);
+            metrics.record_watchdog_respawn();
+            let handle = spawn_worker(slot, epoch, shared, registry, metrics);
+            shared.handles.lock().unwrap().push(handle);
         }
     }
 }
@@ -844,6 +1073,112 @@ mod tests {
             Some(JobState::Done)
         );
         assert_eq!(e.registry().result("j-41"), Some(Json::num(5.0)));
+    }
+
+    #[test]
+    fn panic_message_is_preserved_in_the_terminal_state() {
+        let e = engine(1);
+        let err = e.run_sync("t", Box::new(|_| panic!("kaboom {}", 7))).unwrap_err();
+        assert_eq!(err, JobError::Failed("job panicked: kaboom 7".into()));
+    }
+
+    #[test]
+    fn expired_deadline_jobs_are_shed_at_pop() {
+        let e = engine(1);
+        // Occupy the only worker so the deadline job waits in queue
+        // past its deadline.
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let (go_tx, go_rx) = std::sync::mpsc::channel::<()>();
+        let _blocker = e.submit(
+            "t",
+            Box::new(move |_| {
+                tx.send(()).unwrap();
+                go_rx.recv().unwrap();
+                Ok(Json::Null)
+            }),
+        );
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let id = e
+            .try_submit(
+                "t",
+                JobPriority::new(0).with_deadline_ms(30),
+                Box::new(|_| Ok(Json::num(1.0))),
+            )
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(80));
+        go_tx.send(()).unwrap();
+        let state = e.registry().wait_terminal(&id, Duration::from_secs(10)).unwrap();
+        assert_eq!(state, JobState::Failed, "expired job is shed, not run");
+        let error = e.registry().error(&id).unwrap();
+        assert!(error.starts_with("deadline_exceeded"), "{error}");
+    }
+
+    #[test]
+    fn deadline_sweeper_aborts_overrunning_jobs() {
+        let e = engine(1);
+        let id = e
+            .try_submit(
+                "t",
+                JobPriority::new(0).with_deadline_ms(40),
+                Box::new(|ctl| {
+                    while !ctl.is_cancelled() {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    Err("stopped at a checkpoint".into())
+                }),
+            )
+            .unwrap();
+        let state = e.registry().wait_terminal(&id, Duration::from_secs(10)).unwrap();
+        assert_eq!(state, JobState::Failed);
+        let error = e.registry().error(&id).unwrap();
+        assert!(error.starts_with("deadline_exceeded"), "{error}");
+    }
+
+    #[test]
+    fn run_sync_with_deadline_reports_deadline_exceeded() {
+        let e = engine(1);
+        let err = e
+            .run_sync_with(
+                "t",
+                JobPriority::new(0).with_deadline_ms(40),
+                Box::new(|ctl| {
+                    while !ctl.is_cancelled() {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    Err("stopped at a checkpoint".into())
+                }),
+            )
+            .unwrap_err();
+        assert!(matches!(err, JobError::DeadlineExceeded(_)), "{err:?}");
+        assert!(err.to_string().starts_with("deadline_exceeded"), "{err}");
+    }
+
+    #[test]
+    fn watchdog_condemns_stuck_workers_and_respawns() {
+        let e = engine(1);
+        e.set_watchdog(Some(Duration::from_millis(50)));
+        // A wedged job: ignores its token, blocks on a channel.
+        let (wedge_tx, wedge_rx) = std::sync::mpsc::channel::<()>();
+        let id = e
+            .try_submit(
+                "t",
+                JobPriority::default(),
+                Box::new(move |_| {
+                    wedge_rx.recv().ok();
+                    Ok(Json::Null)
+                }),
+            )
+            .unwrap();
+        let state = e.registry().wait_terminal(&id, Duration::from_secs(10)).unwrap();
+        assert_eq!(state, JobState::Failed);
+        let error = e.registry().error(&id).unwrap();
+        assert!(error.starts_with("watchdog"), "{error}");
+        assert!(e.watchdog_respawns() >= 1);
+        // The replacement worker keeps the (single) shard serving.
+        let out = e.run_sync("t", Box::new(|_| Ok(Json::num(2.0)))).unwrap();
+        assert_eq!(out.as_f64(), Some(2.0));
+        // Unwedge the condemned thread so shutdown can join it.
+        wedge_tx.send(()).ok();
     }
 
     #[test]

@@ -23,6 +23,14 @@ struct Inner {
     /// Submits rejected at admission (a shard queue at its backlog
     /// bound) — nothing was queued or registered for these.
     jobs_rejected: u64,
+    /// Jobs that missed their binding deadline: shed at pop, aborted by
+    /// the deadline sweeper, or timed out by a synchronous waiter.
+    jobs_deadline_exceeded: u64,
+    /// Stuck workers condemned and replaced by the engine watchdog.
+    watchdog_respawns: u64,
+    /// Client-visible retry accounting is client-side; these count the
+    /// server's own degraded-mode probe reattachments.
+    journal_reattaches: u64,
     /// Solve-cache accounting: `plan` lookups that hit / missed, plus
     /// inserts and capacity evictions.  All zero when the server runs
     /// without `--cache-capacity`.
@@ -87,6 +95,21 @@ impl Metrics {
     /// One submit rejected at the backlog bound.
     pub fn record_job_rejected(&self) {
         self.inner.lock().unwrap().jobs_rejected += 1;
+    }
+
+    /// One job that missed its binding deadline.
+    pub fn record_deadline_exceeded(&self) {
+        self.inner.lock().unwrap().jobs_deadline_exceeded += 1;
+    }
+
+    /// One stuck worker condemned and replaced by the watchdog.
+    pub fn record_watchdog_respawn(&self) {
+        self.inner.lock().unwrap().watchdog_respawns += 1;
+    }
+
+    /// One successful journal reattach after degraded mode.
+    pub fn record_journal_reattach(&self) {
+        self.inner.lock().unwrap().journal_reattaches += 1;
     }
 
     /// One solve-cache lookup that served a stored outcome.
@@ -170,6 +193,9 @@ impl Metrics {
             ("jobs_failed", Json::num(m.jobs_failed as f64)),
             ("jobs_cancelled", Json::num(m.jobs_cancelled as f64)),
             ("jobs_rejected", Json::num(m.jobs_rejected as f64)),
+            ("jobs_deadline_exceeded", Json::num(m.jobs_deadline_exceeded as f64)),
+            ("watchdog_respawns", Json::num(m.watchdog_respawns as f64)),
+            ("journal_reattaches", Json::num(m.journal_reattaches as f64)),
             ("cache_hits", Json::num(m.cache_hits as f64)),
             ("cache_misses", Json::num(m.cache_misses as f64)),
             ("cache_inserts", Json::num(m.cache_inserts as f64)),
@@ -214,6 +240,9 @@ mod tests {
         m.record_job_end(&JobState::Done);
         m.record_job_end(&JobState::Cancelled);
         m.record_job_rejected();
+        m.record_deadline_exceeded();
+        m.record_watchdog_respawn();
+        m.record_journal_reattach();
         m.record_queue_wait(Duration::from_micros(250));
         m.record_queue_wait(Duration::from_micros(750));
         m.record_cache_miss();
@@ -231,6 +260,9 @@ mod tests {
         assert_eq!(s.get("jobs_cancelled").unwrap().as_f64(), Some(1.0));
         assert_eq!(s.get("jobs_failed").unwrap().as_f64(), Some(0.0));
         assert_eq!(s.get("jobs_rejected").unwrap().as_f64(), Some(1.0));
+        assert_eq!(s.get("jobs_deadline_exceeded").unwrap().as_f64(), Some(1.0));
+        assert_eq!(s.get("watchdog_respawns").unwrap().as_f64(), Some(1.0));
+        assert_eq!(s.get("journal_reattaches").unwrap().as_f64(), Some(1.0));
         assert_eq!(s.get("cache_hits").unwrap().as_f64(), Some(2.0));
         assert_eq!(s.get("cache_misses").unwrap().as_f64(), Some(1.0));
         assert_eq!(s.get("cache_inserts").unwrap().as_f64(), Some(1.0));

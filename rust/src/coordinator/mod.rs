@@ -87,6 +87,40 @@
 //! never journaled — their caller's connection dies with the crash, so
 //! there is nobody to deliver a recovered result to.
 //!
+//! ## Robustness (deadlines, degradation, chaos)
+//!
+//! Operational behaviour under failure is documented in depth in
+//! `docs/OPERATIONS.md`; the short version:
+//!
+//! * **Deadlines are binding.**  A job whose `deadline_ms` expires
+//!   while queued is shed at pop time with the structured v2 error
+//!   `deadline_exceeded`; a running job has its cancel token fired by
+//!   the engine supervisor, and synchronous `campaign`/`sweep` waits
+//!   are bounded by the same deadline.  Requests without `deadline_ms`
+//!   are untouched — their replies stay byte-identical.
+//! * **Journal failures degrade, never crash.**  A write error flips
+//!   the journal into a visible *degraded* (memory-only) mode — `stats`
+//!   gains `journal_degraded:true`, `health` reports
+//!   `status:"degraded"` — and a background prober periodically
+//!   attempts to reattach, rolling the file back to the last intact
+//!   record boundary first.
+//! * **Stuck workers are respawned.**  With `--watchdog-stuck-ms` the
+//!   engine supervisor condemns a worker pinned on one job past the
+//!   bound, fires that job's cancel token, and spawns a replacement
+//!   (`watchdog_respawns` on `stats`/`health`).
+//! * **`health` (v2)** reports overall `ok`/`degraded` plus
+//!   per-subsystem detail (journal attachment, cache, shard liveness,
+//!   uptime); [`client::Client::health`] is the typed view.
+//! * **Fault injection is built in.**  `--chaos
+//!   "point=action[@prob][xN];…"` arms named failpoints
+//!   ([`crate::util::failpoint`]) across the journal, cache, engine and
+//!   connection layers; the v2 `chaos` op (gated behind
+//!   `--chaos-allowed`) lists/arms/disarms them over the wire.  With
+//!   nothing armed the instrumentation is a single relaxed atomic load.
+//! * **Clients retry transiently.**  [`client::RetryPolicy`] gives
+//!   every typed client op jittered exponential backoff on `busy` (and
+//!   transport errors for idempotent ops); the default stays fail-fast.
+//!
 //! With `--cache-capacity N` repeated identical `plan` requests are
 //! answered from a bounded LRU solve cache
 //! ([`crate::persist::SolveCache`]) keyed by a canonical,
@@ -101,7 +135,8 @@
 //! The protocol's single source of truth is [`api`]: a typed
 //! [`api::Request`] / [`api::Response`] pair per op, a structured
 //! [`api::ApiError`] taxonomy (`bad_request`, `unknown_policy`,
-//! `unknown_op`, `busy`, `cancelled`, `evicted`, `internal`), and
+//! `unknown_op`, `busy`, `cancelled`, `evicted`, `internal`,
+//! `deadline_exceeded`), and
 //! encode/decode through [`crate::util::Json`].  [`protocol::handle`]
 //! is a thin `decode → dispatch(typed) → encode` pipeline over it, and
 //! [`client::Client`] is the first-class blocking Rust client (typed
@@ -158,6 +193,10 @@
 //! {"op":"describe","v":2}          # machine-readable op/field schema
 //! {"op":"persist","v":2}           # journal + solve-cache stats
 //! {"op":"persist","action":"compact","v":2}   # force journal compaction
+//! {"op":"health","v":2}            # ok/degraded + per-subsystem detail
+//! {"op":"chaos","v":2}             # list armed failpoints (--chaos-allowed)
+//! {"op":"chaos","action":"arm","spec":"journal.fsync=error@0.2","v":2}
+//! {"op":"chaos","action":"disarm","v":2}
 //! {"op":"shutdown"}
 //! ```
 
@@ -172,7 +211,9 @@ pub mod state;
 
 pub use api::{ApiError, BusyInfo, ErrorCode, Request, Response};
 pub use batcher::BatchingEvaluator;
-pub use client::{Client, ClientError, ClientOptions, JobStatus};
+pub use client::{
+    Client, ClientError, ClientOptions, HealthReport, JobStatus, RetryPolicy, RetryStats,
+};
 pub use engine::{Busy, JobCtl, JobEngine, JobError, JobPriority};
 pub use metrics::Metrics;
 pub use server::{Coordinator, CoordinatorConfig};

@@ -60,6 +60,12 @@ pub struct Context {
     /// [`crate::persist::Journal`]).  Present only when the server was
     /// started with `--journal`; the `persist` op reports on it.
     pub journal: Option<Arc<crate::persist::Journal>>,
+    /// Whether the `chaos` op may drive the failpoint registry
+    /// ([`crate::util::failpoint`]).  Off by default; a production
+    /// server must opt in with `--chaos-allowed`.
+    pub chaos_allowed: bool,
+    /// When this coordinator came up (the `health` op reports uptime).
+    pub started: std::time::Instant,
 }
 
 impl Context {
@@ -84,6 +90,8 @@ impl Context {
             job: None,
             cache: None,
             journal: None,
+            chaos_allowed: false,
+            started: std::time::Instant::now(),
         }
     }
 
@@ -101,6 +109,8 @@ impl Context {
             job: None,
             cache: self.cache.clone(),
             journal: self.journal.clone(),
+            chaos_allowed: self.chaos_allowed,
+            started: self.started,
         }
     }
 
@@ -247,6 +257,22 @@ fn dispatch(ctx: &Context, req: &api::Request, version: u8) -> Result<Reply, Api
             }
             op_persist(ctx, r).map(Reply::new)
         }
+        R::Health => {
+            if version < api::V2 {
+                return Err(ApiError::bad_request(
+                    "\"health\" requires protocol version 2 (send \"v\":2)",
+                ));
+            }
+            Ok(Reply::new(op_health(ctx)))
+        }
+        R::Chaos(r) => {
+            if version < api::V2 {
+                return Err(ApiError::bad_request(
+                    "\"chaos\" requires protocol version 2 (send \"v\":2)",
+                ));
+            }
+            op_chaos(ctx, r).map(Reply::new)
+        }
         R::Plan(r) => op_plan(ctx, r).map(Reply::new),
         R::Simulate(r) => op_simulate(ctx, r).map(Reply::new),
         R::Sweep(r) => op_sweep(ctx, r, version),
@@ -262,8 +288,14 @@ fn dispatch(ctx: &Context, req: &api::Request, version: u8) -> Result<Reply, Api
 
 fn op_stats(ctx: &Context) -> api::Response {
     let shard_stats = ctx.engine.shard_stats();
+    let mut stats = ctx.metrics.snapshot();
+    // Degraded-journal visibility rides on `stats` too (not just
+    // `health`): a journal-less server's reply is unchanged.
+    if let (Json::Obj(m), Some(j)) = (&mut stats, &ctx.journal) {
+        m.insert("journal_degraded".into(), Json::Bool(j.is_degraded()));
+    }
     api::Response::Stats(api::StatsResponse {
-        stats: ctx.metrics.snapshot(),
+        stats,
         engine: api::EngineInfo {
             shards: ctx.engine.n_shards() as u64,
             queued: shard_stats.iter().map(|s| s.depth).sum::<usize>() as u64,
@@ -290,6 +322,9 @@ fn op_stats(ctx: &Context) -> api::Response {
 /// backlog bound rejects the submit with the `busy` rejection instead
 /// of queueing.
 fn op_submit(ctx: &Context, r: &api::SubmitRequest, version: u8) -> Result<Reply, ApiError> {
+    if crate::util::failpoint::apply("engine.submit").is_some() {
+        return Err(ApiError::internal("failpoint engine.submit: injected error"));
+    }
     // Decode validated the inner op's presence and rejected control ops.
     let inner_op = r.job.get("op").and_then(Json::as_str).unwrap_or("?").to_string();
     let prio = r.placement.job_priority();
@@ -564,6 +599,7 @@ fn op_sweep(ctx: &Context, r: &api::SweepRequest, version: u8) -> Result<Reply, 
                     Err(ctx.busy_error(shard, backlog, version))
                 }
                 Err(JobError::Cancelled(e)) => Err(ApiError::cancelled(e)),
+                Err(JobError::DeadlineExceeded(e)) => Err(ApiError::deadline_exceeded(e)),
                 Err(JobError::Failed(e)) => Err(ApiError::internal(e)),
             }
         }
@@ -748,6 +784,7 @@ fn op_campaign(ctx: &Context, r: &api::CampaignRequest, version: u8) -> Result<R
                     Err(ctx.busy_error(shard, backlog, version))
                 }
                 Err(JobError::Cancelled(e)) => Err(ApiError::cancelled(e)),
+                Err(JobError::DeadlineExceeded(e)) => Err(ApiError::deadline_exceeded(e)),
                 Err(JobError::Failed(e)) => Err(ApiError::internal(e)),
             }
         }
@@ -814,6 +851,81 @@ fn op_persist(ctx: &Context, r: &api::PersistRequest) -> Result<api::Response, A
     };
     Ok(api::Response::Persist {
         persist: Json::obj(vec![("cache", cache), ("journal", journal)]),
+    })
+}
+
+/// `health` (v2 only): overall status plus per-subsystem detail.  The
+/// top-level `status` is `"degraded"` exactly when the journal lost its
+/// backing file and is running memory-only (see `docs/OPERATIONS.md`);
+/// everything else is detail for operators and probes.
+fn op_health(ctx: &Context) -> api::Response {
+    let degraded = ctx.journal.as_ref().is_some_and(|j| j.is_degraded());
+    let journal = match &ctx.journal {
+        Some(j) => Json::obj(vec![
+            ("attached", Json::Bool(!j.is_degraded())),
+            ("enabled", Json::Bool(true)),
+            ("write_errors", Json::num(j.write_errors() as f64)),
+        ]),
+        None => Json::obj(vec![("enabled", Json::Bool(false))]),
+    };
+    let cache = Json::obj(vec![("enabled", Json::Bool(ctx.cache.is_some()))]);
+    let shard_stats = ctx.engine.shard_stats();
+    let engine = Json::obj(vec![
+        ("queued", Json::num(shard_stats.iter().map(|s| s.depth).sum::<usize>() as f64)),
+        ("shards", Json::num(ctx.engine.n_shards() as f64)),
+        ("watchdog_respawns", Json::num(ctx.engine.watchdog_respawns() as f64)),
+    ]);
+    let uptime_ms = ctx.started.elapsed().as_millis().min(u128::from(u64::MAX)) as u64;
+    api::Response::Health {
+        health: Json::obj(vec![
+            ("cache", cache),
+            ("engine", engine),
+            ("journal", journal),
+            ("status", Json::str(if degraded { "degraded" } else { "ok" })),
+            ("uptime_ms", Json::num(uptime_ms as f64)),
+        ]),
+    }
+}
+
+/// `chaos` (v2 only, and only when the server opted in with
+/// `--chaos-allowed`): inspect, arm and disarm fault-injection points.
+/// Every action returns the resulting failpoint table, so an `arm` is
+/// its own confirmation.  The spec grammar is documented in
+/// [`crate::util::failpoint`] and `docs/OPERATIONS.md`.
+fn op_chaos(ctx: &Context, r: &api::ChaosRequest) -> Result<api::Response, ApiError> {
+    use crate::util::failpoint;
+    if !ctx.chaos_allowed {
+        return Err(ApiError::bad_request(
+            "chaos is disabled (start the server with --chaos-allowed)",
+        ));
+    }
+    match &r.action {
+        api::ChaosAction::List => {}
+        api::ChaosAction::Arm(spec) => failpoint::arm(spec).map_err(ApiError::bad_request)?,
+        api::ChaosAction::Disarm(point) => {
+            failpoint::disarm(point.as_deref());
+        }
+    }
+    let points = failpoint::list();
+    Ok(api::Response::Chaos {
+        chaos: Json::obj(vec![
+            ("armed", Json::Bool(!points.is_empty())),
+            (
+                "points",
+                Json::arr(points.iter().map(|p| {
+                    let mut fields = vec![
+                        ("config", Json::str(&p.config)),
+                        ("fired", Json::num(p.fired as f64)),
+                        ("hits", Json::num(p.hits as f64)),
+                        ("name", Json::str(&p.name)),
+                    ];
+                    if let Some(n) = p.remaining {
+                        fields.push(("remaining", Json::num(n as f64)));
+                    }
+                    Json::obj(fields)
+                })),
+            ),
+        ]),
     })
 }
 
@@ -1454,6 +1566,71 @@ mod tests {
         let r = handle(&c, r#"{"op":"persist","action":"wipe","v":2}"#).unwrap();
         let msg = r.body.path(&["error", "message"]).unwrap().as_str().unwrap();
         assert!(msg.contains("\"wipe\"") && msg.contains("compact"), "{msg}");
+    }
+
+    #[test]
+    fn health_is_v2_only_and_reports_subsystems() {
+        let c = ctx();
+        let e = handle(&c, r#"{"op":"health"}"#).unwrap_err();
+        assert!(format!("{e:#}").contains("\"v\":2"), "{e:#}");
+        let r = handle(&c, r#"{"op":"health","v":2}"#).unwrap();
+        assert_eq!(r.body.get("ok"), Some(&Json::Bool(true)));
+        let h = r.body.get("health").unwrap();
+        assert_eq!(h.get("status").unwrap().as_str(), Some("ok"));
+        assert_eq!(h.path(&["journal", "enabled"]), Some(&Json::Bool(false)));
+        assert_eq!(h.path(&["cache", "enabled"]), Some(&Json::Bool(false)));
+        assert!(h.path(&["engine", "shards"]).unwrap().as_f64().unwrap() >= 1.0);
+        assert!(h.get("uptime_ms").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn chaos_is_gated_and_drives_the_registry() {
+        let c = ctx();
+        // The v2 gate first, then the --chaos-allowed gate.
+        let e = handle(&c, r#"{"op":"chaos"}"#).unwrap_err();
+        assert!(format!("{e:#}").contains("\"v\":2"), "{e:#}");
+        let r = handle(&c, r#"{"op":"chaos","v":2}"#).unwrap();
+        let msg = r.body.path(&["error", "message"]).unwrap().as_str().unwrap();
+        assert!(msg.contains("--chaos-allowed"), "{msg}");
+        // Opted in: arm → list → disarm, against a test-unique point
+        // name at probability 0 (the registry is process-global and lib
+        // tests run in parallel — this point must never actually fire).
+        let mut c = ctx();
+        c.chaos_allowed = true;
+        let named = |r: &Reply, name: &str| {
+            r.body
+                .path(&["chaos", "points"])
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .any(|p| p.get("name").unwrap().as_str() == Some(name))
+        };
+        let r = handle(
+            &c,
+            r#"{"op":"chaos","action":"arm","spec":"fp.proto.chaos=error@0.0x3","v":2}"#,
+        )
+        .unwrap();
+        assert!(named(&r, "fp.proto.chaos"), "{}", r.body);
+        assert_eq!(r.body.path(&["chaos", "armed"]), Some(&Json::Bool(true)));
+        let r = handle(&c, r#"{"op":"chaos","v":2}"#).unwrap();
+        assert!(named(&r, "fp.proto.chaos"), "list shows armed points");
+        let r = handle(
+            &c,
+            r#"{"op":"chaos","action":"disarm","point":"fp.proto.chaos","v":2}"#,
+        )
+        .unwrap();
+        assert!(!named(&r, "fp.proto.chaos"), "{}", r.body);
+        // Malformed specs come back as bad_request naming the problem.
+        let r = handle(
+            &c,
+            r#"{"op":"chaos","action":"arm","spec":"fp.proto.chaos=warp","v":2}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            r.body.path(&["error", "code"]).unwrap().as_str(),
+            Some("bad_request")
+        );
     }
 
     #[test]

@@ -78,6 +78,23 @@ pub struct CoordinatorConfig {
     /// disables the cache; otherwise repeated identical `plan`
     /// requests are answered from the LRU cache without re-solving.
     pub cache_capacity: usize,
+    /// Evict connections idle longer than this
+    /// (`--conn-idle-timeout`).  `None` keeps the historical behaviour:
+    /// idle connections live until the client closes them.  A
+    /// connection with a request in flight or unflushed response bytes
+    /// is never evicted.
+    pub conn_idle_timeout: Option<Duration>,
+    /// Allow the v2 `chaos` op to drive the failpoint registry.
+    pub chaos_allowed: bool,
+    /// Failpoint spec armed at startup (`--chaos`; see
+    /// [`crate::util::failpoint`] for the grammar).  Armed before the
+    /// journal opens, so even replay-time points can fire.
+    pub chaos_spec: Option<String>,
+    /// Engine watchdog threshold (`--watchdog-stuck-ms`): a worker
+    /// holding one job longer than this is condemned and replaced, and
+    /// the job is aborted.  `None` disables the watchdog (the default —
+    /// a legitimate hours-long campaign must never be shot by default).
+    pub watchdog_stuck: Option<Duration>,
 }
 
 impl Default for CoordinatorConfig {
@@ -92,6 +109,10 @@ impl Default for CoordinatorConfig {
             max_backlog: 0,
             journal: None,
             cache_capacity: 0,
+            conn_idle_timeout: None,
+            chaos_allowed: false,
+            chaos_spec: None,
+            watchdog_stuck: None,
         }
     }
 }
@@ -145,6 +166,15 @@ pub struct Coordinator {
 impl Coordinator {
     /// Build the evaluator stack per config and start listening.
     pub fn start(config: CoordinatorConfig) -> Result<Self> {
+        let started = Instant::now();
+        // Arm startup chaos before anything else touches an instrumented
+        // path — the journal open/replay below must already see armed
+        // failpoints.
+        if let Some(spec) = &config.chaos_spec {
+            crate::util::failpoint::arm(spec)
+                .map_err(|e| anyhow::anyhow!("--chaos {spec:?}: {e}"))?;
+            eprintln!("coordinator: chaos armed: {spec}");
+        }
         let metrics = Arc::new(Metrics::new());
 
         let base: Arc<dyn PlanEvaluator> = if config.use_xla {
@@ -180,6 +210,7 @@ impl Coordinator {
             config.max_backlog,
             Arc::clone(&metrics),
         ));
+        engine.set_watchdog(config.watchdog_stuck);
         let policies = Arc::new(crate::scheduler::PolicyRegistry::builtin());
         let cache = (config.cache_capacity > 0)
             .then(|| Arc::new(crate::persist::SolveCache::new(config.cache_capacity)));
@@ -207,6 +238,8 @@ impl Coordinator {
                         job: None,
                         cache: cache.clone(),
                         journal: Some(Arc::clone(&j)),
+                        chaos_allowed: config.chaos_allowed,
+                        started,
                     };
                     protocol::replay_journal(&ctx, recovered);
                 }
@@ -236,6 +269,9 @@ impl Coordinator {
             policies,
             cache,
             journal,
+            chaos_allowed: config.chaos_allowed,
+            started,
+            idle_timeout: config.conn_idle_timeout,
         });
 
         let conn_handles: Vec<_> = (0..n_workers)
@@ -247,7 +283,7 @@ impl Coordinator {
                     .expect("spawning connection worker")
             })
             .collect();
-        let exec_handles: Vec<_> = (0..request_executors(n_workers))
+        let mut exec_handles: Vec<_> = (0..request_executors(n_workers))
             .map(|i| {
                 let core = Arc::clone(&core);
                 std::thread::Builder::new()
@@ -256,6 +292,35 @@ impl Coordinator {
                     .expect("spawning request executor")
             })
             .collect();
+        // Degraded-journal reattach prober: while the journal is
+        // detached (a write error flipped it memory-only), periodically
+        // try to re-establish the backing file.  Joined with the
+        // executors at shutdown; exits within one stop-poll step.
+        if let Some(j) = &core.journal {
+            let j = Arc::clone(j);
+            let stop = Arc::clone(&stop);
+            let metrics = Arc::clone(&metrics);
+            let prober = std::thread::Builder::new()
+                .name("journal-prober".into())
+                .spawn(move || {
+                    const PROBE_EVERY: Duration = Duration::from_secs(1);
+                    const STOP_POLL: Duration = Duration::from_millis(200);
+                    let mut since_probe = Duration::ZERO;
+                    while !stop.load(Ordering::Acquire) {
+                        std::thread::sleep(STOP_POLL);
+                        since_probe += STOP_POLL;
+                        if since_probe < PROBE_EVERY {
+                            continue;
+                        }
+                        since_probe = Duration::ZERO;
+                        if j.is_degraded() && j.probe_reattach() {
+                            metrics.record_journal_reattach();
+                        }
+                    }
+                })
+                .expect("spawning journal prober");
+            exec_handles.push(prober);
+        }
         let accept_thread = {
             let core = Arc::clone(&core);
             std::thread::Builder::new()
@@ -303,6 +368,9 @@ struct ServerCore {
     policies: Arc<crate::scheduler::PolicyRegistry>,
     cache: Option<Arc<crate::persist::SolveCache>>,
     journal: Option<Arc<crate::persist::Journal>>,
+    chaos_allowed: bool,
+    started: Instant,
+    idle_timeout: Option<Duration>,
 }
 
 /// One connection worker's mailbox: new sockets from the accept thread,
@@ -457,12 +525,27 @@ fn exec_loop(core: &ServerCore) {
             job: None,
             cache: core.cache.clone(),
             journal: core.journal.clone(),
+            chaos_allowed: core.chaos_allowed,
+            started: core.started,
         };
         let t0 = Instant::now();
         // handle_line is the single error-shape funnel: decode failures
         // and protocol failures encode identically (v1 string form for
         // version-less requests, structured ApiError bodies for v2).
-        let reply = protocol::handle_line(&ctx, &task.line);
+        // A panic that escapes the protocol layer (engine panics are
+        // already contained there) must cost one reply, not the
+        // executor thread: the client gets an internal error and the
+        // loop keeps serving.
+        let reply = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            protocol::handle_line(&ctx, &task.line)
+        }))
+        .unwrap_or_else(|_| protocol::Reply {
+            body: Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::str("internal: request handler panicked")),
+            ]),
+            shutdown: false,
+        });
         let (body, shutdown) = (reply.body, reply.shutdown);
         let ok = body.get("ok") == Some(&Json::Bool(true));
         core.metrics.record_request(t0.elapsed(), ok);
@@ -494,6 +577,9 @@ struct Conn {
     read_closed: bool,
     close_after_flush: bool,
     dead: bool,
+    /// Last time this connection did anything (accepted, read bytes, or
+    /// received a response) — drives `--conn-idle-timeout` eviction.
+    last_activity: Instant,
 }
 
 impl Conn {
@@ -509,6 +595,7 @@ impl Conn {
             read_closed: false,
             close_after_flush: false,
             dead: false,
+            last_activity: Instant::now(),
         }
     }
 
@@ -523,6 +610,10 @@ impl Conn {
     /// `pending`.  EOF with a final unterminated line still yields that
     /// line — parity with the old `BufRead::lines` server.
     fn read_some(&mut self) {
+        if crate::util::failpoint::apply("conn.read").is_some() {
+            self.dead = true;
+            return;
+        }
         let mut buf = [0u8; 8192];
         for _ in 0..MAX_READS_PER_TICK {
             match (&self.stream).read(&mut buf) {
@@ -530,7 +621,10 @@ impl Conn {
                     self.read_closed = true;
                     break;
                 }
-                Ok(n) => self.rbuf.extend_from_slice(&buf[..n]),
+                Ok(n) => {
+                    self.rbuf.extend_from_slice(&buf[..n]);
+                    self.last_activity = Instant::now();
+                }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
                 Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
                 Err(_) => {
@@ -582,6 +676,10 @@ impl Conn {
 
     /// Write as much of `wbuf` as the socket accepts right now.
     fn flush_nonblocking(&mut self) {
+        if self.wpos < self.wbuf.len() && crate::util::failpoint::apply("conn.write").is_some() {
+            self.dead = true;
+            return;
+        }
         while self.wpos < self.wbuf.len() {
             match (&self.stream).write(&self.wbuf[self.wpos..]) {
                 Ok(0) => {
@@ -657,6 +755,7 @@ fn conn_worker_loop(index: usize, core: &ServerCore) {
             if let Some(conn) = conns.get_mut(&c.conn) {
                 conn.wbuf.extend_from_slice(&c.line);
                 conn.inflight = false;
+                conn.last_activity = Instant::now();
                 if c.shutdown {
                     conn.close_after_flush = true;
                 }
@@ -676,8 +775,25 @@ fn conn_worker_loop(index: usize, core: &ServerCore) {
             }
             return;
         }
-        // 4. Reap finished connections.
-        conns.retain(|_, c| !c.finished());
+        // 4. Reap finished connections — and, when the operator set
+        // `--conn-idle-timeout`, fully quiescent ones that have been
+        // silent past the bound (never a connection with a request in
+        // flight, queued lines, or unflushed response bytes).
+        let idle_cutoff = core.idle_timeout.map(|t| Instant::now() - t);
+        conns.retain(|_, c| {
+            if c.finished() {
+                return false;
+            }
+            match idle_cutoff {
+                Some(cutoff) => {
+                    c.inflight
+                        || !c.pending.is_empty()
+                        || c.wpos < c.wbuf.len()
+                        || c.last_activity > cutoff
+                }
+                None => true,
+            }
+        });
         // 5. Dispatch: at most one in-flight request per connection, and
         // only once the previous response is fully written — a client
         // that pipelines requests without reading responses stalls its

@@ -364,6 +364,51 @@ impl JobRegistry {
         }
     }
 
+    /// Abort a live job: mark it failed with `error` *and* fire its
+    /// [`CancelToken`] so running work stops at its next checkpoint.
+    /// Used by the deadline sweeper / shed path and the stuck-worker
+    /// watchdog, where "failed with a reason" is the honest state (a
+    /// `cancel` is something the client asked for; an abort is not).
+    /// Returns whether the job was live.
+    pub fn abort(&self, id: &str, error: String) -> bool {
+        let aborted = {
+            let mut g = self.inner.lock().unwrap();
+            match g.jobs.get_mut(id) {
+                Some(j) if matches!(j.state, JobState::Queued | JobState::Running) => {
+                    j.state = JobState::Failed;
+                    j.error = Some(error.clone());
+                    j.cancel.cancel();
+                    self.terminal.notify_all();
+                    true
+                }
+                _ => false,
+            }
+        };
+        if aborted {
+            if let Some(jr) = self.journal.get() {
+                jr.record_terminal(id, JobState::Failed.as_str(), None, Some(&error));
+            }
+        }
+        aborted
+    }
+
+    /// Ids of running jobs whose binding deadline (admission time +
+    /// `deadline_ms`) has passed — the deadline sweeper's work list.
+    pub fn running_deadline_expired(&self) -> Vec<String> {
+        let now = Instant::now();
+        let g = self.inner.lock().unwrap();
+        g.jobs
+            .values()
+            .filter(|j| j.state == JobState::Running)
+            .filter(|j| {
+                j.priority
+                    .deadline_ms
+                    .is_some_and(|ms| now.duration_since(j.queued_at) >= Duration::from_millis(ms))
+            })
+            .map(|j| j.id.clone())
+            .collect()
+    }
+
     /// Cancel a job: marks it cancelled *and* fires its [`CancelToken`],
     /// so running work stops at its next cooperative checkpoint.
     /// Returns whether the job existed and was not yet finished.
@@ -822,6 +867,35 @@ mod tests {
         // Fresh ids skip past the reserved range (no collision with
         // recovered jobs).
         assert_eq!(r.create("plan"), "j-5");
+    }
+
+    #[test]
+    fn abort_fails_the_job_and_fires_its_token() {
+        let r = JobRegistry::new();
+        let id = r.create("campaign");
+        r.start(&id);
+        let token = r.token(&id).unwrap();
+        assert!(r.abort(&id, "deadline_exceeded: too slow".into()));
+        assert!(token.is_cancelled(), "abort must fire the token");
+        let s = r.status(&id).unwrap();
+        assert_eq!(s.get("state").unwrap().as_str(), Some("failed"));
+        assert_eq!(s.get("error").unwrap().as_str(), Some("deadline_exceeded: too slow"));
+        assert!(!r.abort(&id, "again".into()), "terminal jobs cannot be aborted");
+    }
+
+    #[test]
+    fn running_deadline_expired_lists_only_overdue_running_jobs() {
+        let r = JobRegistry::new();
+        let overdue = r.create_with("plan", JobPriority::new(0).with_deadline_ms(1));
+        r.start(&overdue);
+        let future = r.create_with("plan", JobPriority::new(0).with_deadline_ms(60_000));
+        r.start(&future);
+        // Queued (not running) and deadline-less jobs are never listed.
+        let _queued = r.create_with("plan", JobPriority::new(0).with_deadline_ms(1));
+        let relaxed = r.create("plan");
+        r.start(&relaxed);
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(r.running_deadline_expired(), vec![overdue]);
     }
 
     #[test]

@@ -13,7 +13,8 @@
 //! botsched bounds   [--budgets ...]
 //! botsched serve   [--addr 127.0.0.1:7077] [--no-xla] [--no-batching] [--shards N]
 //!                  [--conn-workers N] [--max-backlog N] [--journal state.journal]
-//!                  [--cache-capacity N]
+//!                  [--cache-capacity N] [--conn-idle-timeout SECS] [--watchdog-stuck-ms MS]
+//!                  [--chaos "point=action[@p][xN];…"] [--chaos-allowed]
 //! botsched client  --addr host:port '<json request>'
 //! botsched submit  [--priority P] [--deadline-ms D] [--addr host:port] '<json job>'
 //! botsched jobs    [--addr host:port]            # list the engine's jobs
@@ -199,7 +200,10 @@ fn print_help() {
          \x20 trace     gen/replay multi-campaign arrival traces\n\
          \x20 serve     start the coordinator (--addr, --no-xla, --no-batching, --shards N,\n\
          \x20           --conn-workers N, --max-backlog N, --journal <path> for crash-recoverable\n\
-         \x20           jobs, --cache-capacity N to cache repeated plan solves)\n\
+         \x20           jobs, --cache-capacity N to cache repeated plan solves,\n\
+         \x20           --conn-idle-timeout SECS to evict silent connections,\n\
+         \x20           --watchdog-stuck-ms MS to respawn stuck workers,\n\
+         \x20           --chaos \"point=action[@p][xN];..\" / --chaos-allowed for fault injection)\n\
          \x20 client    send one JSON request to a coordinator\n\
          \x20 submit    enqueue a job (--priority 0..=9, --deadline-ms D) and print its id\n\
          \x20 jobs      list a coordinator's jobs (state, progress)\n\
@@ -555,6 +559,16 @@ fn cmd_serve(a: &Args) -> Result<()> {
         max_backlog: a.u64("max-backlog")?.unwrap_or(0) as usize,
         journal: a.get("journal").map(Into::into),
         cache_capacity: a.u64("cache-capacity")?.unwrap_or(0) as usize,
+        conn_idle_timeout: a
+            .u64("conn-idle-timeout")?
+            .map(std::time::Duration::from_secs),
+        // An inline --chaos spec implies permission to drive the
+        // registry over the wire; --chaos-allowed grants it bare.
+        chaos_allowed: a.has("chaos-allowed") || a.get("chaos").is_some(),
+        chaos_spec: a.get("chaos").map(str::to_string),
+        watchdog_stuck: a
+            .u64("watchdog-stuck-ms")?
+            .map(std::time::Duration::from_millis),
     };
     let c = Coordinator::start(cfg)?;
     println!("coordinator listening on {} (send {{\"op\":\"shutdown\"}} to stop)", c.local_addr);

@@ -16,6 +16,7 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::Mutex;
 
 use crate::scheduler::SolveOutcome;
+use crate::util::failpoint;
 
 use super::fnv1a;
 
@@ -75,8 +76,11 @@ impl SolveCache {
 
     /// Insert (or refresh) an entry, evicting the least-recently-used
     /// one if the cache is full.  Returns whether an eviction happened.
+    /// The `cache.insert` failpoint drops the insert (the outcome is
+    /// still served, only never cached) — caching must stay an
+    /// optimisation, never a correctness dependency.
     pub fn insert(&self, key: String, outcome: SolveOutcome) -> bool {
-        if self.capacity == 0 {
+        if self.capacity == 0 || failpoint::apply("cache.insert").is_some() {
             return false;
         }
         let h = fnv1a(key.as_bytes());

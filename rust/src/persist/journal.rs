@@ -17,11 +17,12 @@ use std::collections::{HashMap, HashSet};
 use std::fs::{File, OpenOptions};
 use std::io::{self, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::config;
 use crate::coordinator::JobPriority;
-use crate::util::Json;
+use crate::util::{failpoint, Json};
 
 use super::fnv1a;
 
@@ -94,13 +95,22 @@ struct Inner {
 }
 
 /// The append-only job journal.  All methods are best-effort on IO
-/// failure *after* open: an unwritable record is reported to stderr
-/// and skipped rather than taking the serving path down — durability
-/// degrades, availability does not.
+/// failure *after* open: an unwritable record flips the journal into
+/// **degraded (memory-only) mode** — reported to stderr and on
+/// `stats`/`health` — rather than taking the serving path down;
+/// durability degrades, availability does not.  While degraded no
+/// records are written (jobs admitted in the window are never
+/// journaled, so a crash loses them — visibly, never inconsistently)
+/// until a [`Journal::probe_reattach`] succeeds.
 #[derive(Debug)]
 pub struct Journal {
     path: PathBuf,
     inner: Mutex<Inner>,
+    /// Set on the first write failure, cleared by a successful
+    /// reattach probe.
+    degraded: AtomicBool,
+    /// Total append/fsync failures over the journal's lifetime.
+    write_errors: AtomicU64,
 }
 
 impl Journal {
@@ -110,6 +120,9 @@ impl Journal {
     /// replay scan and is truncated away so subsequent appends are
     /// clean.  A file with a foreign magic or version is refused.
     pub fn open(path: &Path) -> io::Result<(Self, Vec<RecoveredJob>)> {
+        if failpoint::apply("journal.replay").is_some() {
+            return Err(failpoint::injected("journal.replay"));
+        }
         let mut file = OpenOptions::new().read(true).write(true).create(true).open(path)?;
         let mut raw = Vec::new();
         file.read_to_end(&mut raw)?;
@@ -151,7 +164,15 @@ impl Journal {
             bytes: good_len as u64,
             compactions: 0,
         };
-        Ok((Self { path: path.to_path_buf(), inner: Mutex::new(inner) }, recovered))
+        Ok((
+            Self {
+                path: path.to_path_buf(),
+                inner: Mutex::new(inner),
+                degraded: AtomicBool::new(false),
+                write_errors: AtomicU64::new(0),
+            },
+            recovered,
+        ))
     }
 
     /// The journal's file path.
@@ -172,11 +193,17 @@ impl Journal {
             ("placement", config::job_priority_to_json(&prio)),
         ]);
         let mut g = self.inner.lock().unwrap();
+        if self.is_degraded() {
+            // Memory-only window: the job is never indexed, so its
+            // later transitions are no-ops too — wholly unjournaled,
+            // never half-journaled.
+            return;
+        }
         match append(&mut g, &payload, true) {
             Ok(()) => {
                 g.index.insert(id.to_string(), IdxState::Live);
             }
-            Err(e) => eprintln!("journal: failed to record accept of {id}: {e}"),
+            Err(e) => self.note_write_error(id, "accept", &e),
         }
     }
 
@@ -184,12 +211,12 @@ impl Journal {
     /// jobs the journal never admitted (sync heavy ops, tests).
     pub fn record_start(&self, id: &str) {
         let mut g = self.inner.lock().unwrap();
-        if g.index.get(id) != Some(&IdxState::Live) {
+        if self.is_degraded() || g.index.get(id) != Some(&IdxState::Live) {
             return;
         }
         let payload = Json::obj(vec![("id", Json::str(id)), ("kind", Json::str("start"))]);
         if let Err(e) = append(&mut g, &payload, false) {
-            eprintln!("journal: failed to record start of {id}: {e}");
+            self.note_write_error(id, "start", &e);
         }
     }
 
@@ -204,7 +231,7 @@ impl Journal {
         error: Option<&str>,
     ) {
         let mut g = self.inner.lock().unwrap();
-        if g.index.get(id) != Some(&IdxState::Live) {
+        if self.is_degraded() || g.index.get(id) != Some(&IdxState::Live) {
             return;
         }
         let mut fields = vec![
@@ -223,7 +250,7 @@ impl Journal {
                 g.index.insert(id.to_string(), IdxState::Terminal);
             }
             Err(e) => {
-                eprintln!("journal: failed to record terminal of {id}: {e}");
+                self.note_write_error(id, "terminal", &e);
                 return;
             }
         }
@@ -235,7 +262,7 @@ impl Journal {
     /// safe).  No-op for unadmitted jobs and repeat transitions.
     pub fn record_cancel(&self, id: &str) {
         let mut g = self.inner.lock().unwrap();
-        if g.index.get(id) != Some(&IdxState::Live) {
+        if self.is_degraded() || g.index.get(id) != Some(&IdxState::Live) {
             return;
         }
         let payload = Json::obj(vec![("id", Json::str(id)), ("kind", Json::str("cancel"))]);
@@ -244,11 +271,69 @@ impl Journal {
                 g.index.insert(id.to_string(), IdxState::Terminal);
             }
             Err(e) => {
-                eprintln!("journal: failed to record cancel of {id}: {e}");
+                self.note_write_error(id, "cancel", &e);
                 return;
             }
         }
         self.maybe_compact(&mut g);
+    }
+
+    /// True while the journal is in degraded (memory-only) mode after
+    /// a write failure: no records are being written, and jobs
+    /// admitted in this window will not survive a crash.
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
+    /// Total append/fsync failures observed so far.
+    pub fn write_errors(&self) -> u64 {
+        self.write_errors.load(Ordering::Relaxed)
+    }
+
+    fn note_write_error(&self, id: &str, what: &str, e: &io::Error) {
+        self.write_errors.fetch_add(1, Ordering::Relaxed);
+        if !self.degraded.swap(true, Ordering::Relaxed) {
+            eprintln!(
+                "journal: failed to record {what} of {id}: {e} — \
+                 entering degraded (memory-only) mode"
+            );
+        } else {
+            eprintln!("journal: failed to record {what} of {id}: {e}");
+        }
+    }
+
+    /// Try to leave degraded mode: roll the file back to the last good
+    /// frame boundary (a failed append may have left partial bytes)
+    /// and fsync a no-op probe record through the normal append path.
+    /// Returns `true` when the journal is healthy afterwards.  Called
+    /// periodically by the coordinator's prober thread; safe (and
+    /// cheap) to call while healthy.
+    pub fn probe_reattach(&self) -> bool {
+        if !self.is_degraded() {
+            return true;
+        }
+        let mut g = self.inner.lock().unwrap();
+        let boundary = g.bytes;
+        let rolled = g
+            .file
+            .set_len(boundary)
+            .and_then(|()| g.file.seek(SeekFrom::End(0)))
+            .is_ok();
+        if !rolled {
+            return false;
+        }
+        // Probe records carry no id: replay and compaction both skip
+        // them, so they are pure padding.
+        let probe = Json::obj(vec![("kind", Json::str("probe"))]);
+        if append(&mut g, &probe, true).is_err() {
+            return false;
+        }
+        self.degraded.store(false, Ordering::Relaxed);
+        eprintln!(
+            "journal: reattached, leaving degraded mode ({} write errors so far)",
+            self.write_errors()
+        );
+        true
     }
 
     /// Drop a job from the replay index (registry eviction).  Index
@@ -275,12 +360,14 @@ impl Journal {
         Json::obj(vec![
             ("bytes", Json::num(g.bytes as f64)),
             ("compactions", Json::num(g.compactions as f64)),
+            ("degraded", Json::Bool(self.is_degraded())),
             ("enabled", Json::Bool(true)),
             ("live", Json::num(live as f64)),
             ("path", Json::str(self.path.display().to_string())),
             ("records", Json::num(g.records as f64)),
             ("terminal", Json::num(terminal as f64)),
             ("version", Json::num(f64::from(JOURNAL_VERSION))),
+            ("write_errors", Json::num(self.write_errors() as f64)),
         ])
     }
 
@@ -308,12 +395,27 @@ impl Journal {
     }
 }
 
-/// Frame and append one record; optionally fsync.
+/// Frame and append one record; optionally fsync.  Chaos-instrumented:
+/// `journal.append` can fail the write outright or tear it (write only
+/// the first `n` frame bytes, as a crash mid-`write(2)` would), and
+/// `journal.fsync` fails the durability barrier after a clean write.
 fn append(g: &mut Inner, payload: &Json, fsync: bool) -> io::Result<()> {
     let text = payload.to_string();
     let frame = frame(text.as_bytes());
+    match failpoint::apply("journal.append") {
+        Some(failpoint::FailAction::TornWrite(n)) => {
+            // Persist the torn prefix so replay sees exactly what a
+            // real torn append leaves behind.
+            let n = n.min(frame.len());
+            let _ = g.file.write_all(&frame[..n]).and_then(|()| g.file.sync_data());
+            return Err(failpoint::injected("journal.append"));
+        }
+        Some(_) => return Err(failpoint::injected("journal.append")),
+        None => {}
+    }
     g.file.write_all(&frame)?;
     if fsync {
+        failpoint::io_error("journal.fsync")?;
         g.file.sync_data()?;
     }
     g.records += 1;

@@ -1,0 +1,386 @@
+//! Process-global failpoint registry: named fault-injection sites for
+//! chaos testing the serving stack.
+//!
+//! An instrumented call site asks [`check`]/[`apply`] whether its named
+//! point is armed.  In production nothing is armed and the call is a
+//! single relaxed atomic load — no lock, no allocation, no branch on
+//! shared mutable state.  Arming happens explicitly: `serve --chaos
+//! <spec>` at startup, or the v2 `chaos` op at runtime (gated behind
+//! `serve --chaos-allowed`).
+//!
+//! ## Spec grammar
+//!
+//! ```text
+//! spec   := point (';' point)*
+//! point  := name '=' action ['@' prob] ['x' budget]
+//! action := 'error' | 'panic' | 'delay(' ms ')' | 'torn_write(' n ')'
+//! ```
+//!
+//! `prob` is the firing probability in `[0, 1]` (default 1 — every
+//! hit); `budget` bounds how many times the point fires (default
+//! unlimited).  Examples:
+//!
+//! ```text
+//! journal.append=error@0.3          # 30% of journal appends fail
+//! engine.worker=delay(50)@0.5x20    # 50ms stall, half the time, 20 fires
+//! journal.append=torn_write(7)x1    # one 7-byte torn frame, then clean
+//! conn.read=error@0.05;cache.insert=error
+//! ```
+//!
+//! Firing is deterministic for a given arm order and hit sequence (the
+//! registry draws from one seeded [`Rng`]).  The action semantics are
+//! interpreted by the call site: `delay` sleeps inline, `panic` panics
+//! the calling thread (exercising panic isolation), `error` maps to the
+//! site's failure path, and `torn_write(n)` truncates a write to its
+//! first `n` bytes (only the journal append path tears; other sites
+//! treat it as `error`).
+//!
+//! The instrumented points are listed in `docs/OPERATIONS.md`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use super::rng::Rng;
+
+/// What an armed failpoint does when it fires.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FailAction {
+    /// Fail the instrumented operation with an injected error.
+    Error,
+    /// Sleep this many milliseconds, then proceed normally.
+    Delay(u64),
+    /// Panic the calling thread.
+    Panic,
+    /// Write only the first `n` bytes of the payload, then fail
+    /// (journal append path; elsewhere equivalent to `Error`).
+    TornWrite(usize),
+}
+
+impl std::fmt::Display for FailAction {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FailAction::Error => write!(f, "error"),
+            FailAction::Delay(ms) => write!(f, "delay({ms})"),
+            FailAction::Panic => write!(f, "panic"),
+            FailAction::TornWrite(n) => write!(f, "torn_write({n})"),
+        }
+    }
+}
+
+/// One armed point.
+#[derive(Debug, Clone)]
+struct Point {
+    action: FailAction,
+    probability: f64,
+    /// Remaining fires; `None` = unlimited.
+    remaining: Option<u64>,
+    /// Times the point was evaluated (armed site executed).
+    hits: u64,
+    /// Times the point actually fired.
+    fired: u64,
+}
+
+/// A snapshot row for the `chaos` op's `list` action.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PointInfo {
+    pub name: String,
+    /// Canonical spec rendering, e.g. `error@0.3x5`.
+    pub config: String,
+    pub hits: u64,
+    pub fired: u64,
+    pub remaining: Option<u64>,
+}
+
+struct Registry {
+    points: BTreeMap<String, Point>,
+    rng: Rng,
+}
+
+/// Fast-path gate: `false` means no point is armed anywhere and every
+/// [`check`] returns immediately off this one relaxed load.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static REGISTRY: Mutex<Option<Registry>> = Mutex::new(None);
+
+fn registry() -> MutexGuard<'static, Option<Registry>> {
+    // Panic actions fire outside the lock, so poisoning is only
+    // reachable through a panicking test assertion — recover, the map
+    // itself is never left half-updated.
+    match REGISTRY.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Evaluate a failpoint.  Disarmed (the common case) costs one relaxed
+/// atomic load.  Armed, the point's probability and fire budget decide
+/// whether an action is returned.
+#[inline]
+pub fn check(name: &str) -> Option<FailAction> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    fire(name)
+}
+
+#[cold]
+fn fire(name: &str) -> Option<FailAction> {
+    let mut guard = registry();
+    let Registry { points, rng } = guard.as_mut()?;
+    let point = points.get_mut(name)?;
+    point.hits += 1;
+    if point.remaining == Some(0) {
+        return None;
+    }
+    if point.probability < 1.0 && rng.f64() >= point.probability {
+        return None;
+    }
+    if let Some(r) = &mut point.remaining {
+        *r -= 1;
+    }
+    point.fired += 1;
+    Some(point.action.clone())
+}
+
+/// [`check`] with the two self-contained actions applied inline:
+/// `delay` sleeps here, `panic` panics here.  `error` / `torn_write`
+/// are returned for the call site's failure path.
+pub fn apply(name: &str) -> Option<FailAction> {
+    match check(name)? {
+        FailAction::Delay(ms) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            None
+        }
+        FailAction::Panic => panic!("failpoint {name}: injected panic"),
+        other => Some(other),
+    }
+}
+
+/// The injected error an `error`-action site reports.
+pub fn injected(name: &str) -> std::io::Error {
+    std::io::Error::other(format!("failpoint {name}: injected error"))
+}
+
+/// [`apply`] for sites that can only fail wholesale: any surviving
+/// action becomes an injected [`std::io::Error`].
+pub fn io_error(name: &str) -> std::io::Result<()> {
+    match apply(name) {
+        None => Ok(()),
+        Some(_) => Err(injected(name)),
+    }
+}
+
+/// Arm every point in a spec string (see the module docs for the
+/// grammar).  Re-arming a name replaces its point and resets counters.
+pub fn arm(spec: &str) -> Result<(), String> {
+    let mut parsed = Vec::new();
+    for part in spec.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+        let (name, cfg) = part
+            .split_once('=')
+            .ok_or_else(|| format!("failpoint {part:?}: expected name=action"))?;
+        let name = name.trim();
+        if name.is_empty() {
+            return Err(format!("failpoint {part:?}: empty name"));
+        }
+        parsed.push((name.to_string(), parse_point(cfg.trim())?));
+    }
+    if parsed.is_empty() {
+        return Err("empty chaos spec".into());
+    }
+    let mut guard = registry();
+    let reg = guard.get_or_insert_with(|| Registry {
+        points: BTreeMap::new(),
+        // Fixed seed: chaos schedules replay identically for identical
+        // arm order + hit sequences.
+        rng: Rng::new(0x0c_a0_5c_a0),
+    });
+    for (name, point) in parsed {
+        reg.points.insert(name, point);
+    }
+    ARMED.store(true, Ordering::Release);
+    Ok(())
+}
+
+/// Disarm one point (`Some(name)`) or everything (`None`); returns how
+/// many points were removed.  The fast path re-closes once the registry
+/// is empty.
+pub fn disarm(name: Option<&str>) -> usize {
+    let mut guard = registry();
+    let Some(reg) = guard.as_mut() else { return 0 };
+    let removed = match name {
+        Some(n) => usize::from(reg.points.remove(n).is_some()),
+        None => std::mem::take(&mut reg.points).len(),
+    };
+    if reg.points.is_empty() {
+        ARMED.store(false, Ordering::Release);
+    }
+    removed
+}
+
+/// Snapshot every armed point (name order) with its hit/fire counters.
+pub fn list() -> Vec<PointInfo> {
+    let guard = registry();
+    let Some(reg) = guard.as_ref() else { return Vec::new() };
+    reg.points
+        .iter()
+        .map(|(name, p)| {
+            let mut config = p.action.to_string();
+            if p.probability < 1.0 {
+                config.push_str(&format!("@{}", p.probability));
+            }
+            if let Some(r) = p.remaining {
+                config.push_str(&format!("x{r}"));
+            }
+            PointInfo {
+                name: name.clone(),
+                config,
+                hits: p.hits,
+                fired: p.fired,
+                remaining: p.remaining,
+            }
+        })
+        .collect()
+}
+
+fn parse_point(cfg: &str) -> Result<Point, String> {
+    let mut s = cfg;
+    let mut remaining = None;
+    if let Some(i) = s.rfind('x') {
+        let tail = &s[i + 1..];
+        if !tail.is_empty() && tail.bytes().all(|b| b.is_ascii_digit()) {
+            remaining =
+                Some(tail.parse::<u64>().map_err(|e| format!("failpoint budget {tail:?}: {e}"))?);
+            s = &s[..i];
+        }
+    }
+    let mut probability = 1.0;
+    if let Some(i) = s.rfind('@') {
+        let p: f64 = s[i + 1..]
+            .parse()
+            .map_err(|e| format!("failpoint probability {:?}: {e}", &s[i + 1..]))?;
+        if !(0.0..=1.0).contains(&p) {
+            return Err(format!("failpoint probability {p} outside [0, 1]"));
+        }
+        probability = p;
+        s = &s[..i];
+    }
+    let arg_of = |s: &str, prefix: &str| -> Result<u64, String> {
+        s.strip_prefix(prefix)
+            .and_then(|r| r.strip_suffix(')'))
+            .ok_or_else(|| format!("failpoint action {s:?}: malformed argument"))?
+            .parse::<u64>()
+            .map_err(|e| format!("failpoint action {s:?}: {e}"))
+    };
+    let action = match s {
+        "error" => FailAction::Error,
+        "panic" => FailAction::Panic,
+        _ if s.starts_with("delay(") => FailAction::Delay(arg_of(s, "delay(")?),
+        _ if s.starts_with("torn_write(") => {
+            FailAction::TornWrite(arg_of(s, "torn_write(")? as usize)
+        }
+        _ => {
+            return Err(format!(
+                "failpoint action {s:?} (expected error, panic, delay(ms) or torn_write(n))"
+            ))
+        }
+    };
+    Ok(Point { action, probability, remaining, hits: 0, fired: 0 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global; every test uses its own point
+    // names and disarms them on exit so parallel tests never interact.
+
+    #[test]
+    fn disarmed_points_cost_nothing_and_return_none() {
+        assert_eq!(check("fp.test.unarmed"), None);
+        assert_eq!(apply("fp.test.unarmed"), None);
+        assert!(io_error("fp.test.unarmed").is_ok());
+    }
+
+    #[test]
+    fn spec_grammar_roundtrips() {
+        arm("fp.test.g1=error@0.25x3; fp.test.g2=delay(40) ; fp.test.g3=torn_write(7)x1")
+            .unwrap();
+        let rows = list();
+        let row = |n: &str| rows.iter().find(|r| r.name == n).unwrap();
+        assert_eq!(row("fp.test.g1").config, "error@0.25x3");
+        assert_eq!(row("fp.test.g2").config, "delay(40)");
+        assert_eq!(row("fp.test.g3").config, "torn_write(7)x1");
+        assert_eq!(disarm(Some("fp.test.g1")), 1);
+        assert_eq!(disarm(Some("fp.test.g1")), 0);
+        disarm(Some("fp.test.g2"));
+        disarm(Some("fp.test.g3"));
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected() {
+        for bad in [
+            "",
+            "noequals",
+            "n=",
+            "n=explode",
+            "n=delay(x)",
+            "n=torn_write(",
+            "n=error@1.5",
+            "n=error@zz",
+            "=error",
+        ] {
+            assert!(arm(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn budget_bounds_the_fires_and_counters_track() {
+        arm("fp.test.budget=errorx2").unwrap();
+        assert_eq!(check("fp.test.budget"), Some(FailAction::Error));
+        assert_eq!(check("fp.test.budget"), Some(FailAction::Error));
+        assert_eq!(check("fp.test.budget"), None, "budget exhausted");
+        let rows = list();
+        let row = rows.iter().find(|r| r.name == "fp.test.budget").unwrap();
+        assert_eq!((row.hits, row.fired, row.remaining), (3, 2, Some(0)));
+        disarm(Some("fp.test.budget"));
+    }
+
+    #[test]
+    fn probability_zero_never_fires() {
+        arm("fp.test.p0=error@0").unwrap();
+        for _ in 0..100 {
+            assert_eq!(check("fp.test.p0"), None);
+        }
+        disarm(Some("fp.test.p0"));
+    }
+
+    #[test]
+    fn io_error_maps_error_actions() {
+        arm("fp.test.io=errorx1").unwrap();
+        let e = io_error("fp.test.io").unwrap_err();
+        assert!(e.to_string().contains("fp.test.io"), "{e}");
+        assert!(io_error("fp.test.io").is_ok(), "budget spent");
+        disarm(Some("fp.test.io"));
+    }
+
+    #[test]
+    fn panic_action_panics_the_caller() {
+        arm("fp.test.panic=panicx1").unwrap();
+        let r = std::panic::catch_unwind(|| apply("fp.test.panic"));
+        disarm(Some("fp.test.panic"));
+        assert!(r.is_err(), "panic action must panic");
+    }
+
+    #[test]
+    fn rearming_replaces_and_resets() {
+        arm("fp.test.rearm=errorx1").unwrap();
+        assert_eq!(check("fp.test.rearm"), Some(FailAction::Error));
+        arm("fp.test.rearm=delay(5)").unwrap();
+        let rows = list();
+        let row = rows.iter().find(|r| r.name == "fp.test.rearm").unwrap();
+        assert_eq!(row.config, "delay(5)");
+        assert_eq!(row.fired, 0, "re-arm resets counters");
+        disarm(Some("fp.test.rearm"));
+    }
+}

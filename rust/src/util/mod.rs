@@ -12,9 +12,14 @@
 //!   coordinator's job engine into the long planner/simulator loops;
 //! * [`netpoll`] — a dependency-free `poll(2)` wrapper + self-pipe
 //!   waker, the readiness substrate of the coordinator's non-blocking
-//!   connection workers.
+//!   connection workers;
+//! * [`failpoint`] — a process-global fault-injection registry (named
+//!   error/delay/panic/torn-write points with probability and budget)
+//!   that compiles down to one relaxed atomic load when disarmed,
+//!   powering the coordinator's chaos-test layer.
 
 pub mod cancel;
+pub mod failpoint;
 pub mod json;
 pub mod netpoll;
 pub mod parallel;

@@ -6,9 +6,9 @@
 //! op or field changes without the snapshot being updated.
 
 use botsched::coordinator::api::{
-    describe_schema, ApiError, CampaignRequest, CampaignResponse, CancelRequest, EngineInfo,
-    ErrorCode, EstimatePerfRequest, EstimatePerfResponse, NoiseSpec, PersistAction,
-    PersistRequest, Placement, PlanRequest,
+    describe_schema, ApiError, CampaignRequest, CampaignResponse, CancelRequest, ChaosAction,
+    ChaosRequest, EngineInfo, ErrorCode, EstimatePerfRequest, EstimatePerfResponse, NoiseSpec,
+    PersistAction, PersistRequest, Placement, PlanRequest,
     PlanResponse, PlannerOverrides, ReplicationSummary, Request, Response, RunRow, ShardRow,
     SimulateRequest, SimulateResponse, SolveParams, StatsResponse, StatusRequest, SubmitRequest,
     SweepRequest, SweepResponse, SystemRef, SystemSpec, VmRow,
@@ -84,6 +84,15 @@ fn every_request_variant_roundtrips() {
     roundtrip(Request::Cancel(CancelRequest { job_id: "j-3".into() }));
     roundtrip(Request::Persist(PersistRequest { action: PersistAction::Stats }));
     roundtrip(Request::Persist(PersistRequest { action: PersistAction::Compact }));
+    roundtrip(Request::Health);
+    roundtrip(Request::Chaos(ChaosRequest { action: ChaosAction::List }));
+    roundtrip(Request::Chaos(ChaosRequest {
+        action: ChaosAction::Arm("journal.fsync=error@0.5x3".into()),
+    }));
+    roundtrip(Request::Chaos(ChaosRequest { action: ChaosAction::Disarm(None) }));
+    roundtrip(Request::Chaos(ChaosRequest {
+        action: ChaosAction::Disarm(Some("journal.fsync".into())),
+    }));
 }
 
 #[test]
@@ -404,10 +413,12 @@ fn typed_v2_client_and_raw_v1_lines_get_identical_success_bodies() {
 const SCHEMA_SNAPSHOT: &[&str] = &[
     "ping =",
     "stats =",
+    "health =",
     "list_policies =",
     "list_scenarios =",
     "describe =",
     "persist = action:string",
+    "chaos = action:string spec:string point:string",
     "plan = budget!number policy:string approach:string deadline:number seed:integer \
      n_starts:integer perf_jitter:number sample_frac:number threads:integer \
      remaining:array[integer] planner:object system:string|object scenario:string \
@@ -449,7 +460,16 @@ fn describe_schema_matches_the_snapshot() {
         .collect();
     assert_eq!(
         codes,
-        ["bad_request", "unknown_policy", "unknown_op", "busy", "cancelled", "evicted", "internal"]
+        [
+            "bad_request",
+            "unknown_policy",
+            "unknown_op",
+            "busy",
+            "cancelled",
+            "evicted",
+            "internal",
+            "deadline_exceeded",
+        ]
     );
     let scenarios: Vec<&str> = schema
         .get("scenarios")

@@ -1,0 +1,475 @@
+//! Failpoint-driven chaos tests for the serving core: a randomized
+//! fault schedule with a SIGKILL mid-chaos (no lost terminal result, no
+//! duplicate execution), binding deadlines, torn-write fuzzing of the
+//! journal at every byte boundary, degraded-mode health reporting with
+//! reattach, watchdog respawns, idle-connection eviction, and panic
+//! containment in the request executors.
+//!
+//! The failpoint registry is process-global, so the in-process tests
+//! that arm points serialize on one mutex; CI additionally runs this
+//! binary with `--test-threads=1` (like `persist`) to keep the
+//! process-level tests from racing each other.
+
+use std::io::{BufRead, BufReader};
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use botsched::coordinator::api::Placement;
+use botsched::coordinator::server::request as raw_request;
+use botsched::coordinator::{
+    Client, ClientError, ClientOptions, Coordinator, CoordinatorConfig, JobPriority, RetryPolicy,
+};
+use botsched::persist::Journal;
+use botsched::util::{failpoint, Json};
+
+/// Serializes in-process tests that touch the global failpoint registry
+/// (or fixed point names another test could also arm).
+static GLOBAL_FP: Mutex<()> = Mutex::new(());
+
+/// A unique scratch path under the OS temp dir, removed up front so a
+/// previous run's leftovers never leak into this one.
+fn tmp_journal(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("botsched-chaos-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+/// Spawn `botsched serve` on an ephemeral port with extra flags and
+/// return (child, addr) once the listening line is printed.
+fn spawn_server(extra: &[&str]) -> (Child, SocketAddr) {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_botsched"))
+        .args(["serve", "--addr", "127.0.0.1:0", "--no-xla"])
+        .args(extra)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning botsched serve");
+    let stdout = child.stdout.take().expect("piped stdout");
+    let mut reader = BufReader::new(stdout);
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("reading the listening line");
+    let addr = line
+        .strip_prefix("coordinator listening on ")
+        .and_then(|rest| rest.split_whitespace().next())
+        .unwrap_or_else(|| panic!("unexpected startup line: {line:?}"))
+        .parse()
+        .expect("parsing the listening address");
+    // Keep draining stdout so the server never blocks on a full pipe.
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while let Ok(n) = reader.read_line(&mut sink) {
+            if n == 0 {
+                break;
+            }
+            sink.clear();
+        }
+    });
+    (child, addr)
+}
+
+/// A client with the standard retry policy: chaos-injected `busy` and
+/// transient transport failures retry instead of failing the test.
+fn client(addr: &SocketAddr) -> Client {
+    let opts = ClientOptions { retry: RetryPolicy::standard(), ..ClientOptions::default() };
+    Client::connect_with(addr, &opts).expect("connecting")
+}
+
+fn wait_done(client: &mut Client, id: &str) -> Json {
+    let status = client
+        .wait_job(id, Duration::from_millis(20), Duration::from_secs(60))
+        .expect("polling job status");
+    assert_eq!(status.state, "done", "job {id} ended as {:?}: {:?}", status.state, status.error);
+    status.result.expect("done job carries its result")
+}
+
+// ---------------------------------------------------------------------------
+// Capstone: randomized fault schedule + SIGKILL under active chaos.
+
+#[test]
+fn randomized_chaos_schedule_loses_no_terminal_results_across_sigkill() {
+    let journal = tmp_journal("capstone");
+    // A probabilistic schedule across three layers: the cache drops
+    // half its inserts, workers stall at solve entry, journal appends
+    // stall (but stay durable).  The registry RNG is seeded, so the
+    // schedule is randomized per hit yet replayable.
+    let chaos = "cache.insert=error@0.5;engine.worker=delay(5)@0.5;journal.append=delay(2)@0.3";
+    let (mut child, addr) = spawn_server(&[
+        "--journal",
+        journal.to_str().unwrap(),
+        "--cache-capacity",
+        "16",
+        "--chaos",
+        chaos,
+    ]);
+    let mut c = client(&addr);
+
+    // Every submit is answered (a clean failure would fail the test
+    // here), and every job reaches a terminal result under chaos.
+    let mut ids = Vec::new();
+    for i in 0..8u32 {
+        let line = format!(r#"{{"op":"plan","budget":{}}}"#, 50 + i * 7);
+        let id = c
+            .submit_raw(Json::parse(&line).unwrap(), Placement::default())
+            .unwrap_or_else(|e| panic!("{line}: {e}"));
+        ids.push(id);
+    }
+    let done: Vec<(String, String)> = ids
+        .iter()
+        .map(|id| (id.clone(), wait_done(&mut c, id).to_string()))
+        .collect();
+
+    // SIGKILL while chaos is still armed: no shutdown, no flush.
+    child.kill().expect("killing the server");
+    child.wait().expect("reaping the server");
+
+    // A clean server on the same journal recovers every terminal
+    // result byte-identically.
+    let (mut child, addr) = spawn_server(&["--journal", journal.to_str().unwrap()]);
+    let mut c = client(&addr);
+    for (id, bytes) in &done {
+        let st = c.status(id, None).expect("recovered status");
+        assert_eq!(st.state, "done", "journaled terminal result lost for {id}");
+        assert_eq!(
+            &st.result.expect("recovered result").to_string(),
+            bytes,
+            "{id}: recovered result must be byte-identical"
+        );
+    }
+    // ... and recovered them from replay, not by running anything
+    // twice: the fresh engine has executed zero jobs.
+    let stats = c.stats().expect("stats").stats;
+    assert_eq!(
+        stats.get("jobs_done").and_then(Json::as_u64),
+        Some(0),
+        "journaled jobs must not re-execute: {stats}"
+    );
+    c.shutdown().expect("shutdown");
+    let status = child.wait().expect("server exits");
+    assert!(status.success(), "server must exit cleanly after chaos: {status:?}");
+    let _ = std::fs::remove_file(&journal);
+}
+
+// ---------------------------------------------------------------------------
+// Binding deadlines.
+
+#[test]
+fn deadline_expired_jobs_are_shed_before_execution() {
+    // Not a chaos test, but its submits would be poisoned by another
+    // test arming `engine.submit` concurrently — serialize.
+    let _g = GLOBAL_FP.lock().unwrap_or_else(|p| p.into_inner());
+    let coord = Coordinator::start(CoordinatorConfig {
+        addr: "127.0.0.1:0".into(),
+        use_xla: false,
+        batching: false,
+        shards: 1,
+        ..CoordinatorConfig::default()
+    })
+    .expect("coordinator starts");
+    let addr = coord.local_addr;
+    let mut c = Client::connect(&addr).unwrap();
+
+    // Occupy the single shard with a deliberately long campaign.
+    let blocker = c
+        .submit_raw(
+            Json::parse(
+                r#"{"op":"campaign","budget":150,"replications":2048,
+                    "noise":{"mean_lifetime":2500},"seed":3,"max_rounds":6}"#,
+            )
+            .unwrap(),
+            Placement::default(),
+        )
+        .expect("submitting the blocker");
+
+    // An async job whose 1ms queue deadline expires behind the blocker.
+    let doomed = c
+        .submit_raw(
+            Json::parse(r#"{"op":"plan","budget":80}"#).unwrap(),
+            Placement { priority: None, deadline_ms: Some(1) },
+        )
+        .expect("submitting the doomed job");
+
+    // A synchronous v2 op with an expired deadline fails with the typed
+    // code without waiting for the blocker — the wait itself is bounded.
+    let reply = raw_request(&addr, r#"{"op":"sweep","budgets":[60],"deadline_ms":1,"v":2}"#)
+        .expect("sync sweep answered");
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(false)), "{reply}");
+    assert_eq!(
+        reply.path(&["error", "code"]).and_then(Json::as_str),
+        Some("deadline_exceeded"),
+        "{reply}"
+    );
+
+    // Unblock the shard; the doomed job is shed at pop, never executed.
+    c.cancel(&blocker).expect("cancelling the blocker");
+    let st = c
+        .wait_job(&doomed, Duration::from_millis(20), Duration::from_secs(60))
+        .expect("polling the doomed job");
+    assert_eq!(st.state, "failed", "{st:?}");
+    assert!(
+        st.error.as_deref().unwrap_or("").contains("deadline_exceeded"),
+        "shed jobs must report deadline_exceeded: {:?}",
+        st.error
+    );
+
+    // Requests without a deadline are untouched.
+    let fine = c
+        .submit_raw(Json::parse(r#"{"op":"plan","budget":60}"#).unwrap(), Placement::default())
+        .unwrap();
+    wait_done(&mut c, &fine);
+    c.shutdown().unwrap();
+    coord.wait();
+}
+
+// ---------------------------------------------------------------------------
+// Torn-write fuzz: every byte boundary of a journal frame.
+
+#[test]
+fn torn_journal_writes_recover_the_longest_intact_prefix() {
+    let _g = GLOBAL_FP.lock().unwrap_or_else(|p| p.into_inner());
+    let line = r#"{"op":"ping"}"#;
+
+    // Measure the reference record's full frame length off one clean
+    // append, so the fuzz below covers every byte boundary exactly.
+    let probe = tmp_journal("torn-probe");
+    let (j, _) = Journal::open(&probe).unwrap();
+    let before = std::fs::metadata(&probe).unwrap().len();
+    j.admit("torn", "ping", line, JobPriority::default());
+    let frame_len = (std::fs::metadata(&probe).unwrap().len() - before) as usize;
+    drop(j);
+    let _ = std::fs::remove_file(&probe);
+    assert!(frame_len > 12, "suspicious frame length {frame_len}");
+
+    for cut in 0..frame_len {
+        let path = tmp_journal("torn");
+        let (j, recovered) = Journal::open(&path).unwrap();
+        assert!(recovered.is_empty());
+        j.admit("keep", "ping", line, JobPriority::default());
+        failpoint::arm(&format!("journal.append=torn_write({cut})x1")).unwrap();
+        j.admit("torn", "ping", line, JobPriority::default());
+        failpoint::disarm(Some("journal.append"));
+        assert!(j.is_degraded(), "cut {cut}: a torn append must degrade the journal");
+        drop(j);
+
+        // Replay recovers exactly the records before the tear...
+        let (j, recovered) = Journal::open(&path).unwrap();
+        let ids: Vec<&str> = recovered.iter().map(|r| r.id.as_str()).collect();
+        assert_eq!(ids, ["keep"], "cut {cut}: longest intact prefix");
+        // ...and truncated the tear away, so appends are clean again.
+        j.admit("after", "ping", line, JobPriority::default());
+        assert!(!j.is_degraded(), "cut {cut}: fresh journal must be healthy");
+        drop(j);
+        let (_j, recovered) = Journal::open(&path).unwrap();
+        let ids: Vec<&str> = recovered.iter().map(|r| r.id.as_str()).collect();
+        assert_eq!(ids, ["keep", "after"], "cut {cut}: post-recovery append");
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Graceful degradation: health reporting + journal reattach.
+
+#[test]
+fn health_degrades_on_journal_failure_and_reattaches() {
+    let journal = tmp_journal("degraded");
+    // Exactly two fsync failures: the first admit degrades the journal,
+    // the first reattach probe fails, the second probe succeeds.
+    let (mut child, addr) = spawn_server(&[
+        "--journal",
+        journal.to_str().unwrap(),
+        "--chaos",
+        "journal.fsync=errorx2",
+    ]);
+    let mut c = client(&addr);
+
+    let h = c.health().expect("health");
+    assert!(h.is_ok(), "{h:?}");
+    assert_eq!(h.journal_attached, Some(true));
+
+    // The admit's fsync fails: degraded mode, but the job still runs.
+    let id = c
+        .submit_raw(Json::parse(r#"{"op":"plan","budget":55}"#).unwrap(), Placement::default())
+        .expect("submit during fault");
+    let h = c.health().expect("health while degraded");
+    assert_eq!(h.status, "degraded", "{h:?}");
+    assert_eq!(h.journal_attached, Some(false));
+    let stats = c.stats().unwrap().stats;
+    assert_eq!(stats.get("journal_degraded"), Some(&Json::Bool(true)), "{stats}");
+    wait_done(&mut c, &id);
+
+    // The background prober reattaches once the fault budget is spent.
+    let deadline = Instant::now() + Duration::from_secs(15);
+    loop {
+        let h = c.health().expect("health while reattaching");
+        if h.is_ok() {
+            assert_eq!(h.journal_attached, Some(true));
+            break;
+        }
+        assert!(Instant::now() < deadline, "journal never reattached: {h:?}");
+        std::thread::sleep(Duration::from_millis(200));
+    }
+    let stats = c.stats().unwrap().stats;
+    assert!(
+        stats.get("journal_reattaches").and_then(Json::as_u64).unwrap_or(0) >= 1,
+        "{stats}"
+    );
+    assert_eq!(stats.get("journal_degraded"), Some(&Json::Bool(false)), "{stats}");
+
+    c.shutdown().unwrap();
+    let status = child.wait().expect("server exits");
+    assert!(status.success(), "{status:?}");
+    let _ = std::fs::remove_file(&journal);
+}
+
+#[test]
+fn watchdog_respawns_a_stuck_worker() {
+    // One 3s stall at solve entry against a 200ms stuck bound.
+    let (mut child, addr) = spawn_server(&[
+        "--shards",
+        "2",
+        "--watchdog-stuck-ms",
+        "200",
+        "--chaos",
+        "engine.worker=delay(3000)x1",
+    ]);
+    let mut c = client(&addr);
+    let stuck = c
+        .submit_raw(Json::parse(r#"{"op":"plan","budget":77}"#).unwrap(), Placement::default())
+        .expect("submitting the stuck job");
+
+    let deadline = Instant::now() + Duration::from_secs(15);
+    loop {
+        let stats = c.stats().unwrap().stats;
+        if stats.get("watchdog_respawns").and_then(Json::as_u64).unwrap_or(0) >= 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "watchdog never fired: {stats}");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    // The engine keeps serving on the replacement worker...
+    let fresh = c
+        .submit_raw(Json::parse(r#"{"op":"plan","budget":88}"#).unwrap(), Placement::default())
+        .unwrap();
+    wait_done(&mut c, &fresh);
+    // ...and the condemned job still reaches a terminal state.
+    let st = c
+        .wait_job(&stuck, Duration::from_millis(50), Duration::from_secs(30))
+        .expect("polling the condemned job");
+    assert!(st.is_terminal(), "condemned job stuck in {:?}", st.state);
+
+    c.shutdown().unwrap();
+    let status = child.wait().expect("server exits");
+    assert!(status.success(), "{status:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Connection hygiene + executor panic containment.
+
+#[test]
+fn idle_connections_are_evicted_after_the_timeout() {
+    let coord = Coordinator::start(CoordinatorConfig {
+        addr: "127.0.0.1:0".into(),
+        use_xla: false,
+        batching: false,
+        conn_idle_timeout: Some(Duration::from_millis(300)),
+        ..CoordinatorConfig::default()
+    })
+    .expect("coordinator starts");
+    let addr = coord.local_addr;
+
+    // A fail-fast client sees its evicted connection as a transport
+    // error...
+    let mut fail_fast = Client::connect(&addr).unwrap();
+    fail_fast.ping().expect("ping before idling");
+    std::thread::sleep(Duration::from_millis(1200));
+    let err = fail_fast.ping().expect_err("evicted connection must error");
+    assert!(matches!(err, ClientError::Io(_)), "{err}");
+
+    // ...while a retrying client reconnects straight through it.
+    let mut retrying = client(&addr);
+    retrying.ping().expect("ping before idling");
+    std::thread::sleep(Duration::from_millis(1200));
+    retrying.ping().expect("the retry policy must reconnect through eviction");
+    assert!(retrying.retry_stats().reconnects >= 1);
+
+    Client::connect(&addr).unwrap().shutdown().unwrap();
+    coord.wait();
+}
+
+#[test]
+fn a_panicking_handler_costs_one_reply_not_the_server() {
+    let _g = GLOBAL_FP.lock().unwrap_or_else(|p| p.into_inner());
+    let coord = Coordinator::start(CoordinatorConfig {
+        addr: "127.0.0.1:0".into(),
+        use_xla: false,
+        batching: false,
+        ..CoordinatorConfig::default()
+    })
+    .expect("coordinator starts");
+    let addr = coord.local_addr;
+
+    failpoint::arm("engine.submit=panicx1").unwrap();
+    let reply = raw_request(&addr, r#"{"op":"submit","job":{"op":"plan","budget":70}}"#)
+        .expect("a panicking handler must still produce a reply");
+    failpoint::disarm(Some("engine.submit"));
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(false)), "{reply}");
+    assert!(reply.to_string().contains("panicked"), "{reply}");
+
+    // The executor pool survives and keeps serving.
+    let pong = raw_request(&addr, r#"{"op":"ping"}"#).expect("ping after panic");
+    assert_eq!(pong.get("ok"), Some(&Json::Bool(true)), "{pong}");
+    Client::connect(&addr).unwrap().shutdown().unwrap();
+    coord.wait();
+}
+
+#[test]
+fn the_chaos_op_drives_the_registry_over_the_wire() {
+    let _g = GLOBAL_FP.lock().unwrap_or_else(|p| p.into_inner());
+    let coord = Coordinator::start(CoordinatorConfig {
+        addr: "127.0.0.1:0".into(),
+        use_xla: false,
+        batching: false,
+        chaos_allowed: true,
+        ..CoordinatorConfig::default()
+    })
+    .expect("coordinator starts");
+    let addr = coord.local_addr;
+
+    // Arm a probability-0 point (it can never fire) and watch it
+    // appear and disappear through the op.
+    let armed = raw_request(
+        &addr,
+        r#"{"op":"chaos","action":"arm","spec":"fp.wire.demo=delay(1)@0x9","v":2}"#,
+    )
+    .unwrap();
+    assert_eq!(armed.get("ok"), Some(&Json::Bool(true)), "{armed}");
+    assert!(armed.to_string().contains("fp.wire.demo"), "{armed}");
+
+    let listed = raw_request(&addr, r#"{"op":"chaos","v":2}"#).unwrap();
+    assert_eq!(listed.path(&["chaos", "armed"]), Some(&Json::Bool(true)), "{listed}");
+    assert!(listed.to_string().contains("delay(1)@0x9"), "{listed}");
+
+    let disarmed =
+        raw_request(&addr, r#"{"op":"chaos","action":"disarm","point":"fp.wire.demo","v":2}"#)
+            .unwrap();
+    assert_eq!(disarmed.get("ok"), Some(&Json::Bool(true)), "{disarmed}");
+    assert!(!disarmed.to_string().contains("fp.wire.demo"), "{disarmed}");
+    Client::connect(&addr).unwrap().shutdown().unwrap();
+    coord.wait();
+
+    // Without --chaos-allowed the op is refused.
+    let gated = Coordinator::start(CoordinatorConfig {
+        addr: "127.0.0.1:0".into(),
+        use_xla: false,
+        batching: false,
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let reply = raw_request(&gated.local_addr, r#"{"op":"chaos","v":2}"#).unwrap();
+    assert_eq!(reply.get("ok"), Some(&Json::Bool(false)), "{reply}");
+    assert!(reply.to_string().contains("--chaos-allowed"), "{reply}");
+    Client::connect(&gated.local_addr).unwrap().shutdown().unwrap();
+    gated.wait();
+}
