@@ -5,23 +5,40 @@
 //! re-runs the full FIND loop with one phase disabled at a time to show
 //! each phase's contribution to plan quality (mean makespan, feasibility
 //! cells across the Fig. 1 budget sweep).
+//!
+//! The `planner_micro` group isolates candidate-scoring throughput —
+//! the arena/SoA delta path vs the historical owned-batch path — and
+//! snapshots to `BENCH_planner_micro.json` under `BENCH_JSON=1` so the
+//! CI bench guard tracks the win.  Set `BENCH_SMOKE=1` to skip the slow
+//! ablation/A4 studies and shrink the measurement budget for CI.
+
+// Plan clones below are bench scaffolding (preparing inputs outside the
+// timed region) or the legacy comparison path itself.
+#![allow(clippy::disallowed_methods)]
+
+use std::time::Duration;
 
 use botsched::benchkit::Bench;
-use botsched::eval::NativeEvaluator;
-use botsched::model::TaskId;
+use botsched::eval::{DeltaBatch, EvalBatch, NativeEvaluator, PlanArena, PlanEvaluator};
+use botsched::model::{Plan, TaskId};
 use botsched::scheduler::{
-    add_vms, assign, balance, initial, reduce, replace, split, Planner, PlannerConfig,
-    ReduceMode,
+    add_vms, assign, balance, balance_arena, initial, reduce, replace, replace_arena, split,
+    Planner, PlannerConfig, ReduceMode,
 };
+use botsched::util::CancelToken;
 use botsched::workload::paper::{table1_system, BUDGETS};
 
 fn main() {
+    let smoke = std::env::var_os("BENCH_SMOKE").is_some();
     let sys = table1_system(0.0);
     let budget = 80.0;
     let tasks: Vec<TaskId> = sys.tasks().iter().map(|t| t.id).collect();
 
     // ---- phase timings ------------------------------------------------
     let mut bench = Bench::new("planner-micro/phases");
+    if smoke {
+        bench = bench.with_budget(Duration::from_millis(30), Duration::from_millis(150));
+    }
     bench.run("initial+assign@80", || {
         std::hint::black_box(initial(&sys, budget));
     });
@@ -71,6 +88,72 @@ fn main() {
         std::hint::black_box(Planner::new(&sys).find(budget));
     });
     bench.report();
+
+    // ---- arena vs legacy candidate scoring (the FIND/balance hot loop) -
+    //
+    // K candidate plans scored per iteration, so throughput is directly
+    // candidate-evals/sec.  The legacy path materialises every candidate
+    // into the owned EvalBatch tensors; the delta paths score borrowed
+    // rows (per-Vm caches / contiguous arena stripes) with zero copies.
+    let mut micro = Bench::new("planner_micro");
+    if smoke {
+        micro = micro.with_budget(Duration::from_millis(30), Duration::from_millis(150));
+    }
+    let k = 64usize;
+    let candidates: Vec<Plan> = (0..k).map(|_| reduced.clone()).collect();
+    let cand_refs: Vec<&Plan> = candidates.iter().collect();
+    let arenas: Vec<PlanArena> =
+        candidates.iter().map(|p| PlanArena::from_plan(&sys, p)).collect();
+
+    micro.run_with_items("score/owned-batch", Some(k as f64), || {
+        let batch = EvalBatch::from_plans(&sys, &cand_refs);
+        std::hint::black_box(NativeEvaluator.eval_batch(&batch));
+    });
+    micro.run_with_items("score/plan-delta", Some(k as f64), || {
+        for p in &candidates {
+            std::hint::black_box(NativeEvaluator.eval_deltas(&DeltaBatch::from_plan(&sys, p)));
+        }
+    });
+    micro.run_with_items("score/arena-delta", Some(k as f64), || {
+        let mut batch = DeltaBatch::new(&sys);
+        for a in &arenas {
+            batch.push(a.delta_candidate(&sys));
+        }
+        std::hint::black_box(NativeEvaluator.eval_deltas(&batch));
+    });
+
+    // BALANCE inner loop: the legacy-shaped wrapper (clone + load +
+    // store) vs the arena-resident loop FIND actually runs (reload a
+    // persistent arena, no clone, no store).
+    let mut persistent = PlanArena::new(&sys);
+    micro.run("balance/plan-wrapper@80", || {
+        let mut p = reduced.clone();
+        std::hint::black_box(balance(&sys, &mut p, budget));
+    });
+    micro.run("balance/arena@80", || {
+        persistent.load_plan(&reduced);
+        std::hint::black_box(balance_arena(&sys, &mut persistent, budget));
+    });
+    micro.run("replace/arena@80", || {
+        persistent.load_plan(&reduced);
+        std::hint::black_box(replace_arena(
+            &sys,
+            &mut persistent,
+            budget,
+            1,
+            &NativeEvaluator,
+            &CancelToken::default(),
+        ));
+    });
+    micro.run("find-full@80", || {
+        std::hint::black_box(Planner::new(&sys).find(budget));
+    });
+    micro.report();
+
+    if smoke {
+        println!("\nBENCH_SMOKE set: skipping the ablation and A4 studies.");
+        return;
+    }
 
     // ---- ablation study (A1) -------------------------------------------
     println!("\n== ablation: phase contribution across the Fig. 1 sweep ==");

@@ -12,8 +12,17 @@
 //! fails.  With `NoiseModel::none()` the simulated makespan/cost equal
 //! the planner's analytic eq. 5-8 prediction exactly; the integration
 //! tests pin that equivalence.
-
-use std::collections::VecDeque;
+//!
+//! The fleet state is struct-of-arrays ([`Fleet`]): per-VM scalars live
+//! in parallel vectors and all pinned task queues are flattened
+//! back-to-back into one `Vec<TaskId>` with per-VM cursors, so the
+//! event loop — the hot path of campaign replications, which re-run the
+//! simulation hundreds of times per plan — touches a handful of
+//! contiguous arrays instead of a `Vec` of queue-owning structs.  The
+//! event *logic* is unchanged from the historical AoS engine: the same
+//! event push sequence in the same order yields bit-identical outcomes
+//! (pinned by the `arena_parity` suite against a verbatim copy of the
+//! old engine).
 
 use crate::model::{billed_cost, InstanceTypeId, Plan, System, TaskId};
 use crate::scheduler::nonclairvoyant::OnlineDispatcher;
@@ -71,30 +80,90 @@ impl SimOutcome {
     }
 }
 
+/// Struct-of-arrays fleet state: index `i` across every vector is one
+/// VM.  Pinned queues are flattened into `queue`; VM `i`'s outstanding
+/// tasks are `queue[q_cursor[i]..q_end[i]]` and popping advances the
+/// cursor (the flattened segments never shift).
 #[derive(Debug)]
-struct VmRuntime {
-    it: InstanceTypeId,
-    queue: VecDeque<TaskId>,
-    in_flight: Option<TaskId>,
-    ready_at: f64,
-    finished_at: f64,
-    busy: f64,
-    tasks_done: usize,
-    failed: bool,
+struct Fleet {
+    it: Vec<InstanceTypeId>,
+    in_flight: Vec<Option<TaskId>>,
+    ready_at: Vec<f64>,
+    finished_at: Vec<f64>,
+    busy: Vec<f64>,
+    tasks_done: Vec<usize>,
+    failed: Vec<bool>,
+    /// All pinned task queues, back-to-back in VM order.
+    queue: Vec<TaskId>,
+    q_cursor: Vec<usize>,
+    q_end: Vec<usize>,
 }
 
-impl VmRuntime {
-    fn fresh(it: InstanceTypeId, queue: VecDeque<TaskId>) -> Self {
-        Self {
-            it,
-            queue,
-            in_flight: None,
-            ready_at: 0.0,
-            finished_at: 0.0,
-            busy: 0.0,
-            tasks_done: 0,
-            failed: false,
+impl Fleet {
+    fn from_plan(plan: &Plan) -> Self {
+        let n = plan.n_vms();
+        let mut fleet = Self::with_capacity(n, plan.n_assigned());
+        for vm in &plan.vms {
+            fleet.push_vm(vm.it, vm.tasks());
         }
+        fleet
+    }
+
+    fn from_types(types: &[InstanceTypeId]) -> Self {
+        let mut fleet = Self::with_capacity(types.len(), 0);
+        for &it in types {
+            fleet.push_vm(it, &[]);
+        }
+        fleet
+    }
+
+    fn with_capacity(n_vms: usize, n_tasks: usize) -> Self {
+        Self {
+            it: Vec::with_capacity(n_vms),
+            in_flight: Vec::with_capacity(n_vms),
+            ready_at: Vec::with_capacity(n_vms),
+            finished_at: Vec::with_capacity(n_vms),
+            busy: Vec::with_capacity(n_vms),
+            tasks_done: Vec::with_capacity(n_vms),
+            failed: Vec::with_capacity(n_vms),
+            queue: Vec::with_capacity(n_tasks),
+            q_cursor: Vec::with_capacity(n_vms),
+            q_end: Vec::with_capacity(n_vms),
+        }
+    }
+
+    fn push_vm(&mut self, it: InstanceTypeId, tasks: &[TaskId]) {
+        self.it.push(it);
+        self.in_flight.push(None);
+        self.ready_at.push(0.0);
+        self.finished_at.push(0.0);
+        self.busy.push(0.0);
+        self.tasks_done.push(0);
+        self.failed.push(false);
+        self.q_cursor.push(self.queue.len());
+        self.queue.extend_from_slice(tasks);
+        self.q_end.push(self.queue.len());
+    }
+
+    fn len(&self) -> usize {
+        self.it.len()
+    }
+
+    /// Pop the front of VM `i`'s pinned queue (mirror of the historical
+    /// `VecDeque::pop_front`).
+    fn pop_queued(&mut self, i: usize) -> Option<TaskId> {
+        if self.q_cursor[i] < self.q_end[i] {
+            let t = self.queue[self.q_cursor[i]];
+            self.q_cursor[i] += 1;
+            Some(t)
+        } else {
+            None
+        }
+    }
+
+    /// VM `i`'s not-yet-started pinned tasks, in queue order.
+    fn pending(&self, i: usize) -> &[TaskId] {
+        &self.queue[self.q_cursor[i]..self.q_end[i]]
     }
 }
 
@@ -105,12 +174,7 @@ pub struct Simulator;
 impl Simulator {
     /// Execute a pinned plan.
     pub fn run_plan(sys: &System, plan: &Plan, config: &SimConfig) -> SimOutcome {
-        let mut vms: Vec<VmRuntime> = plan
-            .vms
-            .iter()
-            .map(|vm| VmRuntime::fresh(vm.it, vm.tasks().iter().copied().collect()))
-            .collect();
-        Self::run(sys, &mut vms, None, config)
+        Self::run(sys, Fleet::from_plan(plan), None, config)
     }
 
     /// Execute with online (non-clairvoyant) dispatch over the given VM
@@ -121,14 +185,12 @@ impl Simulator {
         dispatcher: OnlineDispatcher,
         config: &SimConfig,
     ) -> SimOutcome {
-        let mut vms: Vec<VmRuntime> =
-            fleet.iter().map(|&it| VmRuntime::fresh(it, VecDeque::new())).collect();
-        Self::run(sys, &mut vms, Some(dispatcher), config)
+        Self::run(sys, Fleet::from_types(fleet), Some(dispatcher), config)
     }
 
     fn run(
         sys: &System,
-        vms: &mut [VmRuntime],
+        mut fleet: Fleet,
         mut dispatcher: Option<OnlineDispatcher>,
         config: &SimConfig,
     ) -> SimOutcome {
@@ -139,10 +201,10 @@ impl Simulator {
         let mut failures = 0usize;
 
         // Boot every VM; schedule its (optional) failure.
-        for (i, vm) in vms.iter_mut().enumerate() {
+        for i in 0..fleet.len() {
             let boot = sys.overhead * noise.boot_multiplier(&mut rng);
-            vm.ready_at = boot;
-            vm.finished_at = boot;
+            fleet.ready_at[i] = boot;
+            fleet.finished_at[i] = boot;
             q.push(boot, EventKind::VmReady { vm: i });
             if let Some(life) = noise.failure_time(&mut rng) {
                 q.push(boot + life, EventKind::VmFailed { vm: i });
@@ -152,32 +214,46 @@ impl Simulator {
         while let Some(ev) = q.pop() {
             match ev.kind {
                 EventKind::VmReady { vm } => {
-                    Self::start_next(sys, vms, vm, ev.time, &mut dispatcher, &noise, &mut rng, &mut q);
+                    Self::start_next(
+                        sys,
+                        &mut fleet,
+                        vm,
+                        ev.time,
+                        &mut dispatcher,
+                        &noise,
+                        &mut rng,
+                        &mut q,
+                    );
                 }
                 EventKind::TaskDone { vm, task } => {
-                    if vms[vm].failed {
+                    if fleet.failed[vm] {
                         continue; // completion raced the failure; dropped
                     }
-                    {
-                        let v = &mut vms[vm];
-                        v.in_flight = None;
-                        v.tasks_done += 1;
-                        v.finished_at = ev.time;
-                    }
+                    fleet.in_flight[vm] = None;
+                    fleet.tasks_done[vm] += 1;
+                    fleet.finished_at[vm] = ev.time;
                     completed.push(task);
-                    Self::start_next(sys, vms, vm, ev.time, &mut dispatcher, &noise, &mut rng, &mut q);
+                    Self::start_next(
+                        sys,
+                        &mut fleet,
+                        vm,
+                        ev.time,
+                        &mut dispatcher,
+                        &noise,
+                        &mut rng,
+                        &mut q,
+                    );
                 }
                 EventKind::VmFailed { vm } => {
-                    let v = &mut vms[vm];
-                    if v.failed {
+                    if fleet.failed[vm] {
                         continue;
                     }
                     // A failure after the VM drained everything is moot.
-                    if v.in_flight.is_none() && v.queue.is_empty() {
+                    if fleet.in_flight[vm].is_none() && fleet.pending(vm).is_empty() {
                         continue;
                     }
-                    v.failed = true;
-                    v.finished_at = ev.time;
+                    fleet.failed[vm] = true;
+                    fleet.finished_at[vm] = ev.time;
                     failures += 1;
                 }
             }
@@ -186,16 +262,16 @@ impl Simulator {
         // Collect stranded tasks: in-flight + queued on failed VMs.
         // (Live VMs always drain their queues, so leftovers imply failure.)
         let mut stranded = Vec::new();
-        for v in vms.iter() {
-            if let Some(t) = v.in_flight {
+        for i in 0..fleet.len() {
+            if let Some(t) = fleet.in_flight[i] {
                 stranded.push(t);
             }
-            stranded.extend(v.queue.iter().copied());
+            stranded.extend_from_slice(fleet.pending(i));
         }
         // An all-VMs-failed run can leave tasks inside the dispatcher.
         if let Some(d) = &mut dispatcher {
             if !d.is_empty() {
-                let fallback = vms.first().map(|v| v.it).unwrap_or(InstanceTypeId(0));
+                let fallback = fleet.it.first().copied().unwrap_or(InstanceTypeId(0));
                 while let Some(t) = d.next_for(sys, fallback) {
                     stranded.push(t);
                 }
@@ -203,23 +279,23 @@ impl Simulator {
         }
 
         let mut cost = 0.0;
-        let vm_stats: Vec<VmStats> = vms
-            .iter()
-            .map(|v| {
-                let billed = billed_cost(v.finished_at, sys.rate(v.it), sys.hour, sys.billing);
+        let vm_stats: Vec<VmStats> = (0..fleet.len())
+            .map(|i| {
+                let billed =
+                    billed_cost(fleet.finished_at[i], sys.rate(fleet.it[i]), sys.hour, sys.billing);
                 cost += billed;
                 VmStats {
-                    it: v.it,
-                    ready_at: v.ready_at,
-                    finished_at: v.finished_at,
-                    busy: v.busy,
-                    tasks_done: v.tasks_done,
-                    failed: v.failed,
+                    it: fleet.it[i],
+                    ready_at: fleet.ready_at[i],
+                    finished_at: fleet.finished_at[i],
+                    busy: fleet.busy[i],
+                    tasks_done: fleet.tasks_done[i],
+                    failed: fleet.failed[i],
                     billed,
                 }
             })
             .collect();
-        let makespan = vms.iter().map(|v| v.finished_at).fold(0.0, f64::max);
+        let makespan = fleet.finished_at.iter().copied().fold(0.0, f64::max);
 
         SimOutcome { makespan, cost, completed, stranded, vm_stats, failures }
     }
@@ -227,7 +303,7 @@ impl Simulator {
     #[allow(clippy::too_many_arguments)]
     fn start_next(
         sys: &System,
-        vms: &mut [VmRuntime],
+        fleet: &mut Fleet,
         vm: usize,
         now: f64,
         dispatcher: &mut Option<OnlineDispatcher>,
@@ -235,21 +311,20 @@ impl Simulator {
         rng: &mut Rng,
         q: &mut EventQueue,
     ) {
-        let v = &mut vms[vm];
-        if v.failed || v.in_flight.is_some() {
+        if fleet.failed[vm] || fleet.in_flight[vm].is_some() {
             return;
         }
-        let next = match (v.queue.pop_front(), dispatcher.as_mut()) {
+        let next = match (fleet.pop_queued(vm), dispatcher.as_mut()) {
             (Some(t), _) => Some(t),
-            (None, Some(d)) => d.next_for(sys, v.it),
+            (None, Some(d)) => d.next_for(sys, fleet.it[vm]),
             (None, None) => None,
         };
         let Some(task) = next else {
             return;
         };
-        let dur = sys.exec_time(v.it, task) * noise.task_multiplier(rng);
-        v.in_flight = Some(task);
-        v.busy += dur;
+        let dur = sys.exec_time(fleet.it[vm], task) * noise.task_multiplier(rng);
+        fleet.in_flight[vm] = Some(task);
+        fleet.busy[vm] += dur;
         q.push(now + dur, EventKind::TaskDone { vm, task });
     }
 }
@@ -354,6 +429,29 @@ mod tests {
         assert_eq!(sim.makespan, 0.0);
         assert_eq!(sim.cost, 0.0);
         assert!(sim.completed.is_empty());
+    }
+
+    #[test]
+    fn flattened_queues_mirror_per_vm_order() {
+        let sys = table1_system(0.0);
+        let mut plan = Plan::new();
+        let v0 = plan.add_vm(&sys, InstanceTypeId(0));
+        let v1 = plan.add_vm(&sys, InstanceTypeId(1));
+        for t in [0u32, 2, 4] {
+            plan.vms[v0].push_task(&sys, TaskId(t));
+        }
+        for t in [1u32, 3] {
+            plan.vms[v1].push_task(&sys, TaskId(t));
+        }
+        let mut fleet = Fleet::from_plan(&plan);
+        assert_eq!(fleet.pending(0), plan.vms[0].tasks());
+        assert_eq!(fleet.pending(1), plan.vms[1].tasks());
+        // Popping VM 1 never disturbs VM 0's segment.
+        assert_eq!(fleet.pop_queued(1), Some(TaskId(1)));
+        assert_eq!(fleet.pending(0), plan.vms[0].tasks());
+        assert_eq!(fleet.pending(1), &plan.vms[1].tasks()[1..]);
+        assert_eq!(fleet.pop_queued(1), Some(TaskId(3)));
+        assert_eq!(fleet.pop_queued(1), None);
     }
 }
 // (appended tests: billing-policy and overhead edge cases)

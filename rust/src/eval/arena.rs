@@ -1,0 +1,518 @@
+//! The arena: plan state flattened into struct-of-arrays storage so the
+//! planner's inner loops walk contiguous memory instead of chasing
+//! `Vec<Vm>` pointers.
+//!
+//! # Layout
+//!
+//! A [`PlanArena`] separates **slots** (physical rows in the arrays)
+//! from **positions** (logical VM order, what a `Plan` index means):
+//!
+//! * `agg` — all per-application size aggregations in ONE `Vec<f64>`,
+//!   slot-major with stride `n_apps`: slot `s`'s row is
+//!   `agg[s*n_apps .. (s+1)*n_apps]`.  This is the array candidate
+//!   scoring walks; rows borrow straight into it via
+//!   [`PlanArena::delta_candidate`].
+//! * `work`, `it` — per-slot cached task work and instance type,
+//!   parallel to `agg`'s rows.
+//! * `tasks` — per-slot task lists; kept off the scoring path (scores
+//!   depend on the assignment only through `agg`, eq. 5 being linear in
+//!   task size).
+//! * `order` — position → slot.  Defines both plan order and liveness:
+//!   a slot not in `order` is dead.
+//! * `free` — dead slots, recycled LIFO by [`PlanArena::add_vm`], so
+//!   ADD/REMOVE/REPLACE churn neither shifts surviving rows (the
+//!   `Vec::remove` cost this replaces) nor grows the arrays.
+//!
+//! # Bit-exactness contract
+//!
+//! Every mutator mirrors its `Vm`/`Plan` counterpart operation for
+//! operation — same float update order, same negative-residue clamping,
+//! same iteration order in [`PlanArena::score`] — and materialisation
+//! transfers the cached floats verbatim (`Vm::from_parts`), so
+//! `Plan -> PlanArena -> (same edits) -> Plan` is bit-identical to
+//! performing the edits on the `Plan` directly.  A freed slot is zeroed
+//! on removal (recycling must hand out fresh-`Vm::new` state), but a
+//! *live* emptied slot keeps whatever tiny float residue incremental
+//! removal left, exactly like a live `Vm`.  The `arena_parity`
+//! integration suite pins all of this.
+
+use crate::model::{billed_cost, InstanceTypeId, Plan, PlanScore, System, TaskId, Vm};
+
+use super::{DeltaBatch, DeltaCandidate};
+
+/// Struct-of-arrays arena holding one plan's state (see module docs).
+#[derive(Debug, Clone, Default)]
+pub struct PlanArena {
+    n_apps: usize,
+    /// Slot-major aggregation rows, stride `n_apps`.
+    agg: Vec<f64>,
+    /// Per-slot cached task work (seconds, excludes boot overhead).
+    work: Vec<f64>,
+    /// Per-slot instance type.
+    it: Vec<InstanceTypeId>,
+    /// Per-slot task list (not touched by scoring).
+    tasks: Vec<Vec<TaskId>>,
+    /// Dead slots available for recycling (LIFO).
+    free: Vec<u32>,
+    /// Position -> slot; the logical VM order of the plan.
+    order: Vec<u32>,
+}
+
+impl PlanArena {
+    /// An empty arena for `sys` (load plans into it with
+    /// [`load_plan`](Self::load_plan)).
+    pub fn new(sys: &System) -> Self {
+        Self { n_apps: sys.n_apps(), ..Self::default() }
+    }
+
+    /// Flatten a plan into a fresh arena.
+    pub fn from_plan(sys: &System, plan: &Plan) -> Self {
+        let mut arena = Self::new(sys);
+        arena.load_plan(plan);
+        arena
+    }
+
+    /// Reload the arena from a plan, reusing the existing allocations
+    /// (the per-slot task `Vec`s in particular) — the cheap solve-loop
+    /// entry: FIND holds one arena and reloads it each phase instead of
+    /// re-allocating.
+    pub fn load_plan(&mut self, plan: &Plan) {
+        self.order.clear();
+        self.free.clear();
+        self.it.clear();
+        self.work.clear();
+        self.agg.clear();
+        self.tasks.truncate(plan.n_vms());
+        while self.tasks.len() < plan.n_vms() {
+            self.tasks.push(Vec::new());
+        }
+        for (i, vm) in plan.vms.iter().enumerate() {
+            self.it.push(vm.it);
+            self.work.push(vm.work());
+            self.agg.extend_from_slice(vm.agg_sizes());
+            self.tasks[i].clear();
+            self.tasks[i].extend_from_slice(vm.tasks());
+            self.order.push(i as u32);
+        }
+    }
+
+    /// Materialise the arena's live state into `plan` (cached floats
+    /// transferred verbatim; see the module's bit-exactness contract).
+    pub fn store_plan(&self, plan: &mut Plan) {
+        plan.vms.clear();
+        plan.vms.reserve(self.order.len());
+        for &s in &self.order {
+            let s = s as usize;
+            plan.vms.push(Vm::from_parts(
+                self.it[s],
+                self.tasks[s].clone(),
+                self.agg[s * self.n_apps..(s + 1) * self.n_apps].to_vec(),
+                self.work[s],
+            ));
+        }
+    }
+
+    /// [`store_plan`](Self::store_plan) into a fresh plan.
+    pub fn to_plan(&self) -> Plan {
+        let mut plan = Plan::new();
+        self.store_plan(&mut plan);
+        plan
+    }
+
+    // -- geometry ---------------------------------------------------------
+
+    #[inline]
+    fn slot(&self, pos: usize) -> usize {
+        self.order[pos] as usize
+    }
+
+    pub fn n_vms(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    /// Total number of assigned tasks across live VMs.
+    pub fn n_assigned(&self) -> usize {
+        self.order.iter().map(|&s| self.tasks[s as usize].len()).sum()
+    }
+
+    // -- per-position accessors (positions mirror `plan.vms` indices) ----
+
+    #[inline]
+    pub fn it_at(&self, pos: usize) -> InstanceTypeId {
+        self.it[self.slot(pos)]
+    }
+
+    #[inline]
+    pub fn work_at(&self, pos: usize) -> f64 {
+        self.work[self.slot(pos)]
+    }
+
+    #[inline]
+    pub fn agg_at(&self, pos: usize) -> &[f64] {
+        let s = self.slot(pos);
+        &self.agg[s * self.n_apps..(s + 1) * self.n_apps]
+    }
+
+    #[inline]
+    pub fn tasks_at(&self, pos: usize) -> &[TaskId] {
+        &self.tasks[self.slot(pos)]
+    }
+
+    #[inline]
+    pub fn len_at(&self, pos: usize) -> usize {
+        self.tasks[self.slot(pos)].len()
+    }
+
+    #[inline]
+    pub fn is_empty_at(&self, pos: usize) -> bool {
+        self.tasks[self.slot(pos)].is_empty()
+    }
+
+    /// eq. 5 for one VM (mirrors [`Vm::exec`]).
+    #[inline]
+    pub fn exec_at(&self, sys: &System, pos: usize) -> f64 {
+        let s = self.slot(pos);
+        if self.tasks[s].is_empty() && sys.overhead == 0.0 {
+            0.0
+        } else {
+            sys.overhead + self.work[s]
+        }
+    }
+
+    /// eq. 6 for one VM (mirrors [`Vm::cost`]).
+    #[inline]
+    pub fn cost_at(&self, sys: &System, pos: usize) -> f64 {
+        billed_cost(self.exec_at(sys, pos), sys.rate(self.it_at(pos)), sys.hour, sys.billing)
+    }
+
+    /// eq. 7 makespan (mirrors `Plan::exec`: same fold, position order).
+    pub fn exec(&self, sys: &System) -> f64 {
+        (0..self.n_vms()).map(|p| self.exec_at(sys, p)).fold(0.0, f64::max)
+    }
+
+    /// eq. 8 total cost (mirrors `Plan::cost`: left-to-right sum in
+    /// position order).
+    pub fn cost(&self, sys: &System) -> f64 {
+        (0..self.n_vms()).map(|p| self.cost_at(sys, p)).sum()
+    }
+
+    pub fn score(&self, sys: &System) -> PlanScore {
+        PlanScore { makespan: self.exec(sys), cost: self.cost(sys) }
+    }
+
+    // -- mutations (each mirrors its Vm/Plan counterpart bit-for-bit) ----
+
+    /// Mirror of [`Vm::push_task`]: same cache update order.
+    pub fn push_task(&mut self, sys: &System, pos: usize, task: TaskId) {
+        let s = self.slot(pos);
+        let t = sys.task(task);
+        self.work[s] += sys.exec_time(self.it[s], task);
+        self.agg[s * self.n_apps + t.app.index()] += t.size;
+        self.tasks[s].push(task);
+    }
+
+    /// Mirror of [`Vm::remove_task`]: `swap_remove`, subtract, clamp
+    /// tiny negative residue to zero.  Returns whether the task was
+    /// present.
+    pub fn remove_task(&mut self, sys: &System, pos: usize, task: TaskId) -> bool {
+        let s = self.slot(pos);
+        let Some(idx) = self.tasks[s].iter().position(|t| *t == task) else {
+            return false;
+        };
+        self.tasks[s].swap_remove(idx);
+        let t = sys.task(task);
+        self.work[s] -= sys.exec_time(self.it[s], task);
+        let cell = s * self.n_apps + t.app.index();
+        self.agg[cell] -= t.size;
+        if self.work[s] < 0.0 {
+            self.work[s] = 0.0;
+        }
+        if self.agg[cell] < 0.0 {
+            self.agg[cell] = 0.0;
+        }
+        true
+    }
+
+    /// Mirror of `Plan::move_task`; returns whether the task was found
+    /// on `from`.
+    pub fn move_task(&mut self, sys: &System, from: usize, to: usize, task: TaskId) -> bool {
+        assert_ne!(from, to, "move_task: from == to");
+        if !self.remove_task(sys, from, task) {
+            return false;
+        }
+        self.push_task(sys, to, task);
+        true
+    }
+
+    /// Mirror of [`Vm::drain_tasks`]: zero the caches, take the list.
+    pub fn drain_tasks(&mut self, pos: usize) -> Vec<TaskId> {
+        let s = self.slot(pos);
+        self.work[s] = 0.0;
+        self.agg[s * self.n_apps..(s + 1) * self.n_apps].fill(0.0);
+        std::mem::take(&mut self.tasks[s])
+    }
+
+    /// Provision a fresh empty VM, recycling a freed slot when one is
+    /// available; returns its position (`== n_vms() - 1`, matching
+    /// `Plan::add_vm`).
+    pub fn add_vm(&mut self, it: InstanceTypeId) -> usize {
+        let s = match self.free.pop() {
+            // Freed slots were zeroed on removal: fresh-Vm state.
+            Some(s) => {
+                self.it[s as usize] = it;
+                s
+            }
+            None => {
+                let s = self.work.len() as u32;
+                self.it.push(it);
+                self.work.push(0.0);
+                self.agg.extend(std::iter::repeat(0.0).take(self.n_apps));
+                self.tasks.push(Vec::new());
+                s
+            }
+        };
+        self.order.push(s);
+        self.order.len() - 1
+    }
+
+    /// Deprovision the VM at `pos`: later positions shift down by one
+    /// (same index semantics as `Plan::remove_vm`), but only the small
+    /// `order` vector moves — the slot's row is zeroed and recycled, no
+    /// VM data shifts.
+    pub fn remove_vm(&mut self, pos: usize) {
+        let s = self.order.remove(pos);
+        self.clear_slot(s);
+        self.free.push(s);
+    }
+
+    /// Deprovision several positions at once (mirror of
+    /// `Plan::remove_vms`): one compaction pass over `order`, duplicates
+    /// collapse, out-of-range panics.
+    pub fn remove_vms(&mut self, victims: &[usize]) {
+        if victims.is_empty() {
+            return;
+        }
+        let mut doomed = vec![false; self.order.len()];
+        for &v in victims {
+            doomed[v] = true;
+        }
+        let mut write = 0usize;
+        for read in 0..self.order.len() {
+            let s = self.order[read];
+            if doomed[read] {
+                self.clear_slot(s);
+                self.free.push(s);
+            } else {
+                self.order[write] = s;
+                write += 1;
+            }
+        }
+        self.order.truncate(write);
+    }
+
+    /// Mirror of `Plan::drop_empty_vms`: free every task-less position,
+    /// preserving survivor order.
+    pub fn drop_empty_vms(&mut self) {
+        let mut write = 0usize;
+        for read in 0..self.order.len() {
+            let s = self.order[read];
+            if self.tasks[s as usize].is_empty() {
+                self.clear_slot(s);
+                self.free.push(s);
+            } else {
+                self.order[write] = s;
+                write += 1;
+            }
+        }
+        self.order.truncate(write);
+    }
+
+    /// Zero a slot so recycling hands out fresh-`Vm::new` state.
+    fn clear_slot(&mut self, s: u32) {
+        let s = s as usize;
+        self.tasks[s].clear();
+        self.work[s] = 0.0;
+        self.agg[s * self.n_apps..(s + 1) * self.n_apps].fill(0.0);
+    }
+
+    // -- scoring ----------------------------------------------------------
+
+    /// The live plan as one delta candidate: rows borrow the contiguous
+    /// `agg` stripes in position order, skipping rows that would score
+    /// as absent (empty with zero overhead) — score-identical to
+    /// materialising and running `eval_plan`.
+    pub fn delta_candidate<'a>(&'a self, sys: &'a System) -> DeltaCandidate<'a> {
+        let mut cand = DeltaCandidate::default();
+        for pos in 0..self.n_vms() {
+            if self.is_empty_at(pos) && sys.overhead == 0.0 {
+                continue;
+            }
+            let it = self.it_at(pos);
+            cand.push_row(self.agg_at(pos), sys.perf.row(it), sys.rate(it));
+        }
+        cand
+    }
+
+    /// [`delta_candidate`](Self::delta_candidate) wrapped as a
+    /// single-candidate batch for [`PlanEvaluator::eval_deltas`].
+    ///
+    /// [`PlanEvaluator::eval_deltas`]: super::PlanEvaluator::eval_deltas
+    pub fn delta_batch<'a>(&'a self, sys: &'a System) -> DeltaBatch<'a> {
+        let mut batch = DeltaBatch::new(sys);
+        batch.push(self.delta_candidate(sys));
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::{NativeEvaluator, PlanEvaluator};
+    use crate::model::SystemBuilder;
+
+    fn sys() -> System {
+        SystemBuilder::new()
+            .app("a1", vec![1.0, 2.0, 4.0])
+            .app("a2", vec![3.0, 5.0])
+            .instance_type("small", 5.0, vec![20.0, 24.0])
+            .instance_type("big", 10.0, vec![11.0, 13.0])
+            .overhead(30.0)
+            .build()
+            .unwrap()
+    }
+
+    fn seed_plan(s: &System) -> Plan {
+        let mut p = Plan::new();
+        let v0 = p.add_vm(s, InstanceTypeId(0));
+        let v1 = p.add_vm(s, InstanceTypeId(1));
+        p.vms[v0].push_task(s, TaskId(0));
+        p.vms[v0].push_task(s, TaskId(3));
+        p.vms[v1].push_task(s, TaskId(1));
+        p.vms[v1].push_task(s, TaskId(2));
+        p.vms[v1].push_task(s, TaskId(4));
+        p
+    }
+
+    fn assert_same(s: &System, plan: &Plan, arena: &PlanArena) {
+        assert_eq!(plan.n_vms(), arena.n_vms());
+        assert_eq!(plan.n_assigned(), arena.n_assigned());
+        for (i, vm) in plan.vms.iter().enumerate() {
+            assert_eq!(vm.it, arena.it_at(i), "vm{i} type");
+            assert_eq!(vm.tasks(), arena.tasks_at(i), "vm{i} tasks");
+            assert_eq!(vm.work().to_bits(), arena.work_at(i).to_bits(), "vm{i} work");
+            for (m, (a, b)) in vm.agg_sizes().iter().zip(arena.agg_at(i)).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "vm{i} agg[{m}]");
+            }
+            assert_eq!(vm.exec(s).to_bits(), arena.exec_at(s, i).to_bits(), "vm{i} exec");
+            assert_eq!(vm.cost(s).to_bits(), arena.cost_at(s, i).to_bits(), "vm{i} cost");
+        }
+        let ps = plan.score(s);
+        let ars = arena.score(s);
+        assert_eq!(ps.makespan.to_bits(), ars.makespan.to_bits());
+        assert_eq!(ps.cost.to_bits(), ars.cost.to_bits());
+    }
+
+    #[test]
+    fn round_trip_is_bit_identical() {
+        let s = sys();
+        let p = seed_plan(&s);
+        let arena = PlanArena::from_plan(&s, &p);
+        assert_same(&s, &p, &arena);
+        let back = arena.to_plan();
+        assert_same(&s, &back, &arena);
+        assert!(back.validate_partition(&s).is_ok());
+    }
+
+    #[test]
+    fn mutations_mirror_vm_ops() {
+        let s = sys();
+        let mut p = seed_plan(&s);
+        let mut arena = PlanArena::from_plan(&s, &p);
+
+        assert_eq!(
+            p.move_task(&s, 1, 0, TaskId(2)),
+            arena.move_task(&s, 1, 0, TaskId(2))
+        );
+        assert_same(&s, &p, &arena);
+
+        // Removing an absent task is a no-op on both sides.
+        assert!(!p.vms[0].remove_task(&s, TaskId(1)));
+        assert!(!arena.remove_task(&s, 0, TaskId(1)));
+        assert_same(&s, &p, &arena);
+
+        assert_eq!(p.vms[1].drain_tasks(), arena.drain_tasks(1));
+        assert_same(&s, &p, &arena);
+
+        p.drop_empty_vms();
+        arena.drop_empty_vms();
+        assert_same(&s, &p, &arena);
+    }
+
+    #[test]
+    fn free_list_recycles_slots() {
+        let s = sys();
+        let p = seed_plan(&s);
+        let mut arena = PlanArena::from_plan(&s, &p);
+        let rows_before = arena.work.len();
+
+        arena.drain_tasks(0);
+        arena.remove_vm(0);
+        assert_eq!(arena.n_vms(), 1);
+        // Re-provision: the freed slot is reused, no array growth.
+        let pos = arena.add_vm(InstanceTypeId(0));
+        assert_eq!(pos, 1);
+        assert_eq!(arena.work.len(), rows_before);
+        // Recycled slot is pristine.
+        assert!(arena.is_empty_at(pos));
+        assert_eq!(arena.work_at(pos), 0.0);
+        assert!(arena.agg_at(pos).iter().all(|&x| x == 0.0));
+        // Growth only once the free list is exhausted.
+        arena.add_vm(InstanceTypeId(1));
+        assert_eq!(arena.work.len(), rows_before + 1);
+    }
+
+    #[test]
+    fn batch_removal_matches_plan() {
+        let s = sys();
+        let mut p = seed_plan(&s);
+        p.add_vm(&s, InstanceTypeId(0));
+        let mut arena = PlanArena::from_plan(&s, &p);
+        for v in [0usize, 2] {
+            p.vms[v].drain_tasks();
+            arena.drain_tasks(v);
+        }
+        p.remove_vms(&[0, 2]);
+        arena.remove_vms(&[0, 2]);
+        assert_same(&s, &p, &arena);
+    }
+
+    #[test]
+    fn delta_batch_scores_like_eval_plan() {
+        let s = sys();
+        let mut p = seed_plan(&s);
+        p.add_vm(&s, InstanceTypeId(1)); // empty; bills its boot hour (o = 30)
+        let arena = PlanArena::from_plan(&s, &p);
+        let direct = NativeEvaluator.eval_plan(&s, &p);
+        let via_arena = NativeEvaluator.eval_deltas(&arena.delta_batch(&s))[0];
+        assert_eq!(direct.makespan.to_bits(), via_arena.makespan.to_bits());
+        assert_eq!(direct.cost.to_bits(), via_arena.cost.to_bits());
+    }
+
+    #[test]
+    fn load_plan_reuses_arena() {
+        let s = sys();
+        let p = seed_plan(&s);
+        let mut arena = PlanArena::new(&s);
+        arena.load_plan(&p);
+        assert_same(&s, &p, &arena);
+        // Mutate, then reload: the arena snaps back to the plan.
+        arena.drain_tasks(0);
+        arena.drop_empty_vms();
+        arena.load_plan(&p);
+        assert_same(&s, &p, &arena);
+    }
+}

@@ -62,6 +62,17 @@ impl<'a> DeltaCandidate<'a> {
         self.rows.push(DeltaRow { sizes: AggSizes::Owned(sizes), perf, rate });
     }
 
+    /// Append a row borrowing an arbitrary aggregation slice — the
+    /// arena path, where rows are contiguous stripes of
+    /// [`crate::eval::PlanArena`]'s slot-major storage rather than
+    /// per-`Vm` caches.  Unlike [`push_vm`](Self::push_vm) this accepts
+    /// all-zero rows: a provisioned-but-idle VM still bills its boot
+    /// overhead when `o > 0`, so callers include such rows and skip them
+    /// only when `o == 0` (where they score as absent anyway).
+    pub fn push_row(&mut self, sizes: &'a [f64], perf: &'a [f64], rate: f64) {
+        self.rows.push(DeltaRow { sizes: AggSizes::Borrowed(sizes), perf, rate });
+    }
+
     pub fn n_vms(&self) -> usize {
         self.rows.len()
     }
@@ -101,6 +112,26 @@ impl<'a> DeltaBatch<'a> {
             billing: sys.billing,
             n_apps: sys.n_apps(),
         }
+    }
+
+    /// Wrap one live plan as a single-candidate delta batch — the
+    /// zero-clone way to score a whole plan (`eval_deltas(&batch)[0]`),
+    /// used by FIND's accept test and multistart's re-scoring.  Rows
+    /// borrow each VM's cached aggregation; VMs that would score as
+    /// absent (empty with zero overhead, see [`Candidate::push_vm`]'s
+    /// `active` flag) are skipped outright, which is score-identical:
+    /// an inactive row contributes nothing to either fold.
+    pub fn from_plan(sys: &'a System, plan: &'a Plan) -> Self {
+        let mut cand = DeltaCandidate::default();
+        for vm in &plan.vms {
+            if vm.is_empty() && sys.overhead == 0.0 {
+                continue;
+            }
+            cand.push_row(vm.agg_sizes(), sys.perf.row(vm.it), sys.rate(vm.it));
+        }
+        let mut batch = Self::new(sys);
+        batch.push(cand);
+        batch
     }
 
     pub fn push(&mut self, candidate: DeltaCandidate<'a>) {
@@ -306,6 +337,39 @@ mod tests {
         assert_eq!(eb.candidates[0].sizes[0], vec![2.0, 0.0]);
         assert_eq!(eb.candidates[0].rate[0], 10.0);
         assert_eq!(eb.overhead, 30.0);
+    }
+
+    #[test]
+    fn delta_from_plan_matches_eval_plan_bits() {
+        use crate::eval::{NativeEvaluator, PlanEvaluator};
+        let s = sys(); // overhead 30: empty VMs stay active
+        let mut p = Plan::new();
+        let v0 = p.add_vm(&s, InstanceTypeId(0));
+        let v1 = p.add_vm(&s, InstanceTypeId(1));
+        p.add_vm(&s, InstanceTypeId(0)); // empty, bills its boot hour
+        p.vms[v0].push_task(&s, TaskId(0));
+        p.vms[v1].push_task(&s, TaskId(2));
+        let direct = NativeEvaluator.eval_plan(&s, &p);
+        let delta = NativeEvaluator.eval_deltas(&DeltaBatch::from_plan(&s, &p))[0];
+        assert_eq!(direct.makespan.to_bits(), delta.makespan.to_bits());
+        assert_eq!(direct.cost.to_bits(), delta.cost.to_bits());
+
+        // Zero overhead: the empty VM is skipped and scores as absent.
+        let s0 = SystemBuilder::new()
+            .app("a", vec![1.0])
+            .instance_type("x", 5.0, vec![10.0])
+            .build()
+            .unwrap();
+        let mut p0 = Plan::new();
+        let w = p0.add_vm(&s0, InstanceTypeId(0));
+        p0.add_vm(&s0, InstanceTypeId(0));
+        p0.vms[w].push_task(&s0, TaskId(0));
+        let b0 = DeltaBatch::from_plan(&s0, &p0);
+        assert_eq!(b0.candidates[0].n_vms(), 1);
+        let d0 = NativeEvaluator.eval_deltas(&b0)[0];
+        let e0 = NativeEvaluator.eval_plan(&s0, &p0);
+        assert_eq!(d0.makespan.to_bits(), e0.makespan.to_bits());
+        assert_eq!(d0.cost.to_bits(), e0.cost.to_bits());
     }
 
     #[test]

@@ -2,25 +2,50 @@
 //! coordinator and the benchmarks.
 //!
 //! The paper's heuristic repeatedly scores candidate execution plans
-//! (makespan + billed cost).  This module defines:
+//! (makespan + billed cost).  **The delta path is THE evaluation entry
+//! point**: every scheduler hot loop (FIND's accept test, BALANCE's move
+//! search, REPLACE's swap scoring, multistart's re-scoring) expresses its
+//! candidates as [`DeltaBatch`]es of borrowed rows and scores them through
+//! [`PlanEvaluator::eval_deltas`] — no plan clones, no per-candidate
+//! allocation.  The owned [`EvalBatch`] form survives only as the tensor
+//! layout the AOT-compiled XLA artifact consumes and as the default
+//! bridge for evaluators without a native delta path.
 //!
+//! The pieces:
+//!
+//! * [`PlanArena`] — struct-of-arrays arena holding one plan's state:
+//!   all per-VM aggregation rows in a single contiguous `Vec<f64>`
+//!   (slot-major, stride `n_apps`), with a free-list so VM churn recycles
+//!   rows instead of shifting them.  Scheduler phases mutate the arena in
+//!   place and borrow candidate rows straight out of it
+//!   ([`PlanArena::delta_candidate`]); [`crate::model::Plan`] remains the
+//!   stable public form, with bit-exact `Plan ↔ PlanArena` conversion at
+//!   the boundaries.
 //! * [`PlanEvaluator`] — the trait the planner scores through;
-//! * [`NativeEvaluator`] — exact pure-rust scoring (reference + fallback);
-//! * [`EvalBatch`] / [`Candidate`] — the lossless per-(vm, app) size
-//!   aggregation of a batch of candidate plans, i.e. exactly the tensor
-//!   layout the AOT-compiled XLA artifact consumes (see
-//!   `python/compile/model.py`);
-//! * [`DeltaBatch`] / [`DeltaCandidate`] — the borrowing (zero-clone)
-//!   sibling of the above: partial candidates whose surviving rows
-//!   reference live plan state, scored via
-//!   [`PlanEvaluator::eval_deltas`] (the REPLACE hot path).
+//!   [`eval_deltas`](PlanEvaluator::eval_deltas) is the hot method,
+//!   [`eval_batch`](PlanEvaluator::eval_batch) the owned/tensor form.
+//! * [`NativeEvaluator`] — exact pure-rust scoring (reference +
+//!   fallback); scores borrowed delta rows directly, no materialisation.
+//! * [`DeltaBatch`] / [`DeltaCandidate`] — candidates as rows borrowing
+//!   live state: arena stripes ([`DeltaCandidate::push_row`]), per-`Vm`
+//!   caches ([`DeltaCandidate::push_vm`]), or synthesised rows for VMs
+//!   that exist only hypothetically
+//!   ([`DeltaCandidate::push_synth`]).  [`DeltaBatch::from_plan`] wraps a
+//!   whole plan as one candidate — the zero-clone `eval_plan`.
+//! * [`EvalBatch`] / [`Candidate`] — the lossless owned per-(vm, app)
+//!   aggregation, i.e. exactly the padded tensor layout of the XLA
+//!   artifact call (see `python/compile/model.py`).
 //!
 //! The PJRT-backed implementation lives in [`crate::runtime`]; it is
-//! differentially tested against [`NativeEvaluator`].
+//! differentially tested against [`NativeEvaluator`].  The `arena_parity`
+//! integration suite pins the arena path bit-for-bit against the
+//! materialising legacy path across every scenario preset.
 
+mod arena;
 mod batch;
 mod native;
 
+pub use arena::PlanArena;
 pub use batch::{AggSizes, Candidate, DeltaBatch, DeltaCandidate, DeltaRow, EvalBatch};
 pub use native::NativeEvaluator;
 

@@ -50,14 +50,63 @@ impl Plan {
 
     /// Deprovision a VM (must be empty of tasks unless the caller has
     /// drained it intentionally).
+    ///
+    /// This shifts every VM after `idx` (a `Vec::remove`), so indices a
+    /// caller holds past `idx` go stale.  Callers removing several VMs
+    /// should use [`Plan::remove_vms`] (one compaction pass, any victim
+    /// order) instead of a descending `remove_vm` loop; the index-stable
+    /// alternative for hot paths is [`crate::eval::PlanArena`], whose
+    /// free-list recycles slots without shifting anything.
     pub fn remove_vm(&mut self, idx: usize) -> Vm {
         self.vms.remove(idx)
     }
 
+    /// Deprovision several VMs at once: one order-preserving compaction
+    /// pass instead of `victims.len()` shifting `Vec::remove` calls.
+    /// Returns the removed VMs in ascending index order.  Duplicate
+    /// indices collapse into one removal; an out-of-range index panics.
+    pub fn remove_vms(&mut self, victims: &[usize]) -> Vec<Vm> {
+        if victims.is_empty() {
+            return Vec::new();
+        }
+        let mut doomed = vec![false; self.vms.len()];
+        for &v in victims {
+            doomed[v] = true;
+        }
+        let mut removed = Vec::with_capacity(victims.len());
+        let mut kept = Vec::with_capacity(self.vms.len().saturating_sub(victims.len()));
+        for (i, vm) in std::mem::take(&mut self.vms).into_iter().enumerate() {
+            if doomed[i] {
+                removed.push(vm);
+            } else {
+                kept.push(vm);
+            }
+        }
+        self.vms = kept;
+        removed
+    }
+
     /// Drop every VM with no assigned tasks (they would still bill their
-    /// boot hour under hourly billing when `o > 0`).
+    /// boot hour under hourly billing when `o > 0`).  Like
+    /// [`Plan::remove_vms`] this compacts in one pass, preserving the
+    /// survivors' relative order; indices held across the call go stale.
     pub fn drop_empty_vms(&mut self) {
         self.vms.retain(|vm| !vm.is_empty());
+    }
+
+    /// Explicit deep copy of the plan.
+    ///
+    /// This inherent method shadows the derived [`Clone`] impl under
+    /// method-call syntax, giving `plan.clone()` call sites a nameable
+    /// path for the `clippy.toml` `disallowed-methods` gate: scheduler
+    /// hot paths must stay zero-clone (score candidates through
+    /// [`crate::eval::PlanArena`] / delta batches), and only allow-listed
+    /// boundary sites (FIND's accept-store, REDUCE/SPLIT scratch copies,
+    /// API materialisation) may clone a plan.
+    #[inline]
+    #[allow(clippy::should_implement_trait)]
+    pub fn clone(&self) -> Plan {
+        Clone::clone(self)
     }
 
     pub fn is_empty(&self) -> bool {
@@ -199,6 +248,40 @@ mod tests {
         p.drop_empty_vms();
         assert_eq!(p.n_vms(), 1);
         assert_eq!(p.vms[0].it, InstanceTypeId(1));
+    }
+
+    #[test]
+    fn remove_vms_compacts_in_order() {
+        let s = sys();
+        let mut p = Plan::new();
+        for it in [0u32, 1, 0, 1, 0] {
+            p.add_vm(&s, InstanceTypeId(it));
+        }
+        p.vms[1].push_task(&s, TaskId(0));
+        p.vms[3].push_task(&s, TaskId(1));
+        let removed = p.remove_vms(&[0, 2, 4]);
+        assert_eq!(removed.len(), 3);
+        assert!(removed.iter().all(|vm| vm.it == InstanceTypeId(0)));
+        assert_eq!(p.n_vms(), 2);
+        assert_eq!(p.vms[0].tasks(), &[TaskId(0)]);
+        assert_eq!(p.vms[1].tasks(), &[TaskId(1)]);
+        // Duplicates collapse; empty victim list is a no-op.
+        assert_eq!(p.remove_vms(&[1, 1]).len(), 1);
+        assert_eq!(p.remove_vms(&[]).len(), 0);
+        assert_eq!(p.n_vms(), 1);
+    }
+
+    #[test]
+    #[allow(clippy::disallowed_methods)] // the gated method is the test subject
+    fn inherent_clone_deep_copies() {
+        let s = sys();
+        let mut p = Plan::new();
+        let v = p.add_vm(&s, InstanceTypeId(0));
+        p.vms[v].push_task(&s, TaskId(0));
+        let q = p.clone();
+        p.vms[v].push_task(&s, TaskId(1));
+        assert_eq!(q.vms[v].len(), 1);
+        assert_eq!(p.vms[v].len(), 2);
     }
 
     #[test]

@@ -24,6 +24,20 @@ impl Vm {
         Self { it, tasks: Vec::new(), agg_sizes: vec![0.0; n_apps], work: 0.0 }
     }
 
+    /// Reassemble a VM from externally maintained caches (the arena's
+    /// materialisation path).  The caches are adopted verbatim — NOT
+    /// recomputed — so a `Plan -> PlanArena -> Plan` round trip carries
+    /// every float bit-for-bit, including the tiny residues incremental
+    /// updates can leave behind.
+    pub(crate) fn from_parts(
+        it: InstanceTypeId,
+        tasks: Vec<TaskId>,
+        agg_sizes: Vec<f64>,
+        work: f64,
+    ) -> Self {
+        Self { it, tasks, agg_sizes, work }
+    }
+
     pub fn tasks(&self) -> &[TaskId] {
         &self.tasks
     }

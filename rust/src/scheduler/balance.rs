@@ -14,28 +14,50 @@
 //!   realized cost up to ADD's one-hour estimates), but it must not push
 //!   the plan past the budget envelope.  The baselines pass `+inf`,
 //!   matching the paper's plain "evenly distributed" description.
+//!
+//! The move search runs on [`PlanArena`] ([`balance_arena`]): the inner
+//! loop walks the arena's contiguous per-VM caches instead of a
+//! `Vec<Vm>`, and FIND reuses one arena across phases.  [`balance`] is
+//! the `Plan`-level wrapper (load → balance → store); both produce
+//! bit-identical plans to the original materialising implementation —
+//! pinned by the `arena_parity` suite.
 
+use crate::eval::PlanArena;
 use crate::model::{billed_cost, Plan, System, TaskId};
 
 /// Balance tasks between VMs subject to the cost cap.  Returns the number
 /// of task moves applied.
 ///
+/// `Plan`-level wrapper around [`balance_arena`]; the store-back is
+/// skipped when no move was found.
+pub fn balance(sys: &System, plan: &mut Plan, cost_cap: f64) -> usize {
+    let mut arena = PlanArena::from_plan(sys, plan);
+    let moves = balance_arena(sys, &mut arena, cost_cap);
+    if moves > 0 {
+        arena.store_plan(plan);
+    }
+    moves
+}
+
+/// BALANCE on arena state, in place.  Returns the number of task moves
+/// applied.
+///
 /// The per-VM execution times are collected once and maintained
 /// incrementally across loop iterations (a move only changes the source
 /// and receiver VM), so each iteration costs O(tasks·VMs) for the move
 /// search, not an extra O(VMs) re-collection per attempt.
-pub fn balance(sys: &System, plan: &mut Plan, cost_cap: f64) -> usize {
+pub fn balance_arena(sys: &System, arena: &mut PlanArena, cost_cap: f64) -> usize {
     let mut moves = 0usize;
     // Upper bound on useful moves; guards against pathological cycling.
-    let budget_moves = plan.n_assigned() * 4 + 16;
-    let mut total_cost = plan.cost(sys);
-    let mut execs: Vec<f64> = plan.vms.iter().map(|vm| vm.exec(sys)).collect();
+    let budget_moves = arena.n_assigned() * 4 + 16;
+    let mut total_cost = arena.cost(sys);
+    let mut execs: Vec<f64> = (0..arena.n_vms()).map(|p| arena.exec_at(sys, p)).collect();
     while moves < budget_moves {
-        match best_rebalancing_move(sys, plan, &execs, total_cost, cost_cap) {
+        match best_rebalancing_move(sys, arena, &execs, total_cost, cost_cap) {
             Some((from, to, task, new_cost)) => {
-                plan.move_task(sys, from, to, task);
-                execs[from] = plan.vms[from].exec(sys);
-                execs[to] = plan.vms[to].exec(sys);
+                arena.move_task(sys, from, to, task);
+                execs[from] = arena.exec_at(sys, from);
+                execs[to] = arena.exec_at(sys, to);
                 total_cost = new_cost;
                 moves += 1;
             }
@@ -51,34 +73,37 @@ pub fn balance(sys: &System, plan: &mut Plan, cost_cap: f64) -> usize {
 /// cost after the move as the fourth element.
 fn best_rebalancing_move(
     sys: &System,
-    plan: &Plan,
+    arena: &PlanArena,
     execs: &[f64],
     total_cost: f64,
     cost_cap: f64,
 ) -> Option<(usize, usize, TaskId, f64)> {
-    if plan.n_vms() < 2 {
+    if arena.n_vms() < 2 {
         return None;
     }
     let (from, &makespan) = execs.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1))?;
-    let src = &plan.vms[from];
-    if src.is_empty() {
+    if arena.is_empty_at(from) {
         return None;
     }
-    let src_cost = src.cost(sys);
+    let src_it = arena.it_at(from);
+    let src_work = arena.work_at(from);
+    let src_len = arena.len_at(from);
+    let src_cost = arena.cost_at(sys, from);
 
     let mut best: Option<(f64, usize, TaskId, f64)> = None;
-    for &task in src.tasks() {
-        let t_src = src.task_time(sys, task);
-        let src_new_exec = if src.len() == 1 && sys.overhead == 0.0 {
+    for &task in arena.tasks_at(from) {
+        let t_src = sys.exec_time(src_it, task);
+        let src_new_exec = if src_len == 1 && sys.overhead == 0.0 {
             0.0
         } else {
-            sys.overhead + src.work() - t_src
+            sys.overhead + src_work - t_src
         };
-        for (to, dst) in plan.vms.iter().enumerate() {
+        for to in 0..arena.n_vms() {
             if to == from {
                 continue;
             }
-            let dst_new_exec = sys.overhead + dst.work() + dst.task_time(sys, task);
+            let dst_it = arena.it_at(to);
+            let dst_new_exec = sys.overhead + arena.work_at(to) + sys.exec_time(dst_it, task);
             // Strict improvement on both ends: the pair's new max must
             // drop below the current makespan.
             let pair_max = src_new_exec.max(dst_new_exec);
@@ -86,12 +111,10 @@ fn best_rebalancing_move(
                 continue;
             }
             // Cost cap: total billed cost after the move stays bounded.
-            let src_new_cost =
-                billed_cost(src_new_exec, sys.rate(src.it), sys.hour, sys.billing);
-            let dst_new_cost =
-                billed_cost(dst_new_exec, sys.rate(dst.it), sys.hour, sys.billing);
+            let src_new_cost = billed_cost(src_new_exec, sys.rate(src_it), sys.hour, sys.billing);
+            let dst_new_cost = billed_cost(dst_new_exec, sys.rate(dst_it), sys.hour, sys.billing);
             let new_total =
-                total_cost + (src_new_cost - src_cost) + (dst_new_cost - dst.cost(sys));
+                total_cost + (src_new_cost - src_cost) + (dst_new_cost - arena.cost_at(sys, to));
             if new_total > cost_cap + 1e-9 {
                 continue;
             }
@@ -106,7 +129,7 @@ fn best_rebalancing_move(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::{InstanceTypeId, SystemBuilder};
+    use crate::model::{InstanceTypeId, SystemBuilder, TaskId};
 
     fn sys_uniform(n_tasks: usize) -> System {
         SystemBuilder::new()
@@ -225,5 +248,22 @@ mod tests {
         p.vms[v1].push_task(&s, TaskId(2));
         p.vms[v1].push_task(&s, TaskId(3));
         assert_eq!(balance(&s, &mut p, f64::INFINITY), 0);
+    }
+
+    #[test]
+    fn arena_level_entry_balances_in_place() {
+        let s = sys_uniform(8);
+        let mut p = Plan::new();
+        let v0 = p.add_vm(&s, InstanceTypeId(0));
+        p.add_vm(&s, InstanceTypeId(1));
+        for t in s.tasks() {
+            p.vms[v0].push_task(&s, t.id);
+        }
+        let mut arena = PlanArena::from_plan(&s, &p);
+        let moves = balance_arena(&s, &mut arena, f64::INFINITY);
+        assert!(moves > 0);
+        assert_eq!(arena.len_at(0), 4);
+        assert_eq!(arena.len_at(1), 4);
+        assert!(arena.to_plan().validate_partition(&s).is_ok());
     }
 }

@@ -19,9 +19,10 @@
 //!   Algorithm 1 could return a plan violating eq. 9);
 //! * every phase is individually toggleable for the ablation benchmarks.
 
-use super::replace::replace_cancellable;
-use super::{add_vms, balance, initial, reduce, split, ReduceMode};
-use crate::eval::{NativeEvaluator, PlanEvaluator};
+use super::balance::balance_arena;
+use super::replace::replace_arena;
+use super::{add_vms, initial, reduce, split, ReduceMode};
+use crate::eval::{DeltaBatch, NativeEvaluator, PlanArena, PlanEvaluator};
 use crate::model::{Plan, PlanScore, System};
 use crate::util::CancelToken;
 
@@ -117,10 +118,18 @@ impl<'a> Planner<'a> {
         plan.drop_empty_vms();
 
         // Lines 5-7: stored best (cost'/exec' start at +inf, so the first
-        // iteration always stores).
+        // iteration always stores).  These two accept-store clones are the
+        // loop's only plan copies — allow-listed boundary sites of the
+        // `disallowed-methods` gate.
+        #[allow(clippy::disallowed_methods)]
         let mut best = plan.clone();
         let mut best_score = PlanScore { makespan: f64::INFINITY, cost: f64::INFINITY };
         let mut best_feasible = false;
+
+        // One arena reused across phases and iterations: BALANCE and
+        // REPLACE mutate it in place (contiguous rows, free-list VM
+        // churn) and store back only when they changed something.
+        let mut arena = PlanArena::new(sys);
 
         let mut iterations = 0usize;
         for _ in 0..cfg.max_iters {
@@ -142,7 +151,10 @@ impl<'a> Planner<'a> {
             // one-hour estimates, but never past max(B, current cost)).
             if cfg.enable_balance {
                 let cap = budget.max(plan.cost(sys));
-                balance(sys, &mut plan, cap);
+                arena.load_plan(&plan);
+                if balance_arena(sys, &mut arena, cap) > 0 {
+                    arena.store_plan(&mut plan);
+                }
             }
             // Line 12: SPLIT (keep VMs under one billed hour).
             if cfg.enable_split {
@@ -152,14 +164,17 @@ impl<'a> Planner<'a> {
             // max(B, cost) — lets an over-budget plan trade down.
             if cfg.enable_replace {
                 let tmp_budget = budget.max(plan.cost(sys));
-                replace_cancellable(
+                arena.load_plan(&plan);
+                if replace_arena(
                     sys,
-                    &mut plan,
+                    &mut arena,
                     tmp_budget,
                     cfg.replace_k,
                     self.evaluator,
                     &self.cancel,
-                );
+                ) {
+                    arena.store_plan(&mut plan);
+                }
             }
             // ADD may have provisioned VMs BALANCE did not use; they
             // would bill an idle hour each (o > 0) or distort Fig. 2.
@@ -167,8 +182,9 @@ impl<'a> Planner<'a> {
 
             // Line 14: accept on strict improvement of either objective,
             // scored through the evaluator (the XLA artifact in the
-            // coordinator), with the feasibility refinement.
-            let score = self.evaluator.eval_plan(sys, &plan);
+            // coordinator) via the zero-clone delta path, with the
+            // feasibility refinement.
+            let score = self.evaluator.eval_deltas(&DeltaBatch::from_plan(sys, &plan))[0];
             let feasible = score.satisfies(budget);
             let accept = match (feasible, best_feasible) {
                 (true, false) => true,
@@ -176,7 +192,10 @@ impl<'a> Planner<'a> {
                 _ => score.improves(&best_score),
             };
             if accept {
-                best = plan.clone();
+                #[allow(clippy::disallowed_methods)]
+                {
+                    best = plan.clone();
+                }
                 best_score = score;
                 best_feasible = feasible;
             } else {

@@ -16,12 +16,12 @@
 //! | [`policy`]        | `Policy` trait, `SolveRequest`/`SolveOutcome`, name registry |
 //! | [`find`]          | Alg. 1 `FIND`: the fixed-point iteration tying the phases together |
 //! | [`assign`]        | paper `ASSIGN`: route tasks to VMs by (no-cost-increase, task speed, VM load) |
-//! | [`balance`]       | paper `BALANCE`: even out VM finish times without raising makespan/cost |
+//! | [`balance`]       | paper `BALANCE`: even out VM finish times without raising makespan/cost (arena inner loop) |
 //! | [`initial`]       | paper `INITIAL`: per-app best-type pools sized by the whole budget |
 //! | [`reduce`]        | paper `REDUCE`: dismantle whole VMs (local/global) until the budget holds |
 //! | [`add`]           | paper `ADD`: spend remaining budget on the best-performing affordable type |
 //! | [`split`]         | paper `SPLIT`: keep VM run times under one billed hour (paper's *KEEP*) |
-//! | [`replace`]       | paper `REPLACE`: swap expensive VMs for more cheaper ones (zero-clone delta batching) |
+//! | [`replace`]       | paper `REPLACE`: swap expensive VMs for more cheaper ones (zero-clone delta batching over arena rows) |
 //! | [`baselines`]     | Sec. V-A baselines MI and MP |
 //! | [`multistart`]    | GRASP-style perturbed restarts of FIND (parallel via `util::parallel`) |
 //! | [`deadline`]      | Sec. VI: deadline-constrained cost minimisation |
@@ -36,6 +36,16 @@
 //! `minimise_individual`, ...) remain as the underlying implementations
 //! and keep compiling for existing callers, but new code — and anything
 //! that wants to be policy-generic — should go through the registry.
+//!
+//! **Hot-loop state:** the phases that dominate solve time (BALANCE's
+//! move search, REPLACE's swap scoring, FIND's accept test) run on the
+//! struct-of-arrays [`crate::eval::PlanArena`] — FIND keeps one arena
+//! live across phases and iterations and materialises back to
+//! [`crate::model::Plan`] only when a phase changed something.  The
+//! arena-level entry points ([`balance_arena`](balance::balance_arena),
+//! [`replace_arena`](replace::replace_arena)) are exported for callers
+//! that already hold arena state; the plain [`balance`]/[`replace`]
+//! wrappers keep the `Plan`-level signatures.
 
 pub mod add;
 pub mod assign;
@@ -54,7 +64,7 @@ pub mod split;
 
 pub use add::add_vms;
 pub use assign::{assign, assign_restricted};
-pub use balance::balance;
+pub use balance::{balance, balance_arena};
 pub use baselines::{maximise_parallelism, minimise_individual};
 pub use find::{FindReport, Planner, PlannerConfig};
 pub use initial::initial;
@@ -65,5 +75,5 @@ pub use policy::{
     SolveOutcome, SolveRequest, UnknownPolicy, BUILTIN_POLICIES,
 };
 pub use reduce::{reduce, ReduceMode};
-pub use replace::{replace, replace_cancellable};
+pub use replace::{replace, replace_arena, replace_cancellable};
 pub use split::split;

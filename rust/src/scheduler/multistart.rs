@@ -21,7 +21,7 @@
 //! bit-identical at any thread count (pinned by the `perf_parity`
 //! integration tests and the unit tests below).
 
-use crate::eval::{NativeEvaluator, PlanEvaluator};
+use crate::eval::{DeltaBatch, NativeEvaluator, PlanEvaluator};
 use crate::model::{Plan, System, SystemBuilder};
 use crate::util::{CancelToken, Rng};
 
@@ -145,7 +145,9 @@ pub fn find_multistart(
         let mut plan = transplant(sys, &candidate.plan);
         let cap = budget.max(plan.cost(sys));
         super::balance(sys, &mut plan, cap);
-        let score = NativeEvaluator.eval_plan(sys, &plan);
+        // Re-score on the true system through the zero-clone delta path
+        // (bit-identical to `eval_plan`; pinned by `arena_parity`).
+        let score = NativeEvaluator.eval_deltas(&DeltaBatch::from_plan(sys, &plan))[0];
         let feasible = score.satisfies(budget);
         Some(FindReport { plan, score, feasible, iterations: candidate.iterations })
     });

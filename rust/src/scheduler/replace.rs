@@ -8,25 +8,24 @@
 //! and commits the swap iff the budget still holds and the overall
 //! execution time strictly drops.
 //!
-//! **Zero-clone delta batching.**  Candidate swaps are scored without
-//! materialising candidate plans: because a plan's score depends on its
-//! assignment only through each VM's per-application aggregated sizes
-//! (eq. 5 is linear in task size), a candidate is fully described by the
-//! surviving VMs' cached [`Vm::agg_sizes`] rows — *borrowed* straight
-//! from the live plan — plus `n_new` synthesised rows for the
-//! replacement VMs (an LPT spread over aggregated sizes, no `TaskId`
-//! routing).  All `(source type, cheaper type)` alternatives form one
-//! [`DeltaBatch`] scored **in one evaluator call** — this is the planner
-//! hot path that the AOT-compiled XLA artifact accelerates in the
-//! coordinator.  Only the winning swap is materialised, by applying it
-//! to the plan in place; the rejected candidates never allocate more
-//! than their synthesised rows.  The `perf_parity` integration tests pin
-//! this path bit-for-bit against the historical clone-per-candidate
-//! implementation.
-//!
-//! [`Vm::agg_sizes`]: crate::model::Vm::agg_sizes
+//! **Zero-clone delta batching over arena rows.**  Candidate swaps are
+//! scored without materialising candidate plans: because a plan's score
+//! depends on its assignment only through each VM's per-application
+//! aggregated sizes (eq. 5 is linear in task size), a candidate is fully
+//! described by the surviving VMs' aggregation rows — *borrowed* straight
+//! out of [`PlanArena`]'s contiguous slot-major storage — plus `n_new`
+//! synthesised rows for the replacement VMs (an LPT spread over
+//! aggregated sizes, no `TaskId` routing).  All `(source type, cheaper
+//! type)` alternatives form one [`DeltaBatch`] scored **in one evaluator
+//! call** — this is the planner hot path that the AOT-compiled XLA
+//! artifact accelerates in the coordinator.  Only the winning swap is
+//! materialised, by mutating the arena in place (freed slots recycle via
+//! the arena's free list; no `Vec<Vm>` shifting); the rejected candidates
+//! never allocate more than their synthesised rows.  The `perf_parity`
+//! and `arena_parity` integration tests pin this path bit-for-bit
+//! against the historical clone-per-candidate implementation.
 
-use crate::eval::{DeltaBatch, DeltaCandidate, PlanEvaluator};
+use crate::eval::{DeltaBatch, DeltaCandidate, PlanArena, PlanEvaluator};
 use crate::model::{InstanceTypeId, Plan, System, TaskId};
 use crate::util::CancelToken;
 
@@ -34,20 +33,20 @@ use crate::util::CancelToken;
 /// processing time first onto the least-loaded VM.  The paper's Sec. IV-G
 /// example states "tasks are evenly distributed to both VMs"; LPT is the
 /// standard way to realise that for identical machines.
-fn lpt_spread(sys: &System, plan: &mut Plan, mut tasks: Vec<TaskId>, vms: &[usize]) {
-    let it = plan.vms[vms[0]].it;
+fn lpt_spread(sys: &System, arena: &mut PlanArena, mut tasks: Vec<TaskId>, vms: &[usize]) {
+    let it = arena.it_at(vms[0]);
     tasks.sort_by(|&a, &b| sys.exec_time(it, b).total_cmp(&sys.exec_time(it, a)));
     for t in tasks {
         let dst = *vms
             .iter()
-            .min_by(|&&a, &&b| plan.vms[a].work().total_cmp(&plan.vms[b].work()))
+            .min_by(|&&a, &&b| arena.work_at(a).total_cmp(&arena.work_at(b)))
             .expect("at least one new VM");
-        plan.vms[dst].push_task(sys, t);
+        arena.push_task(sys, dst, t);
     }
 }
 
-/// Simulate [`lpt_spread`] over `n_new` fresh VMs of type `it` without a
-/// plan: same sort, same first-minimum destination choice, same
+/// Simulate [`lpt_spread`] over `n_new` fresh VMs of type `it` without an
+/// arena: same sort, same first-minimum destination choice, same
 /// accumulation order as `Vm::push_task`, so the resulting per-VM
 /// aggregated sizes are float-for-float what the materialised spread
 /// would cache.  Returns one aggregation row per new VM that received at
@@ -87,6 +86,9 @@ struct Swap {
 /// Try one replacement round; commits at most one swap (the paper
 /// considers "only one instance type at a time").  Returns true if a swap
 /// was applied.
+///
+/// `Plan`-level wrapper around [`replace_arena`]; the store-back is
+/// skipped when no swap committed.
 pub fn replace(
     sys: &System,
     plan: &mut Plan,
@@ -97,10 +99,8 @@ pub fn replace(
     replace_cancellable(sys, plan, budget, k, evaluator, &CancelToken::default())
 }
 
-/// [`replace`] with a cooperative cancellation checkpoint in the
-/// candidate-enumeration loop: a cancelled call abandons the round
-/// before the (batched) evaluator execution and leaves the plan
-/// untouched, so the caller's stored best plan remains the result.
+/// [`replace`] with a cooperative cancellation checkpoint (see
+/// [`replace_arena`]).
 pub fn replace_cancellable(
     sys: &System,
     plan: &mut Plan,
@@ -109,22 +109,43 @@ pub fn replace_cancellable(
     evaluator: &dyn PlanEvaluator,
     cancel: &CancelToken,
 ) -> bool {
-    if plan.is_empty() || k == 0 {
+    let mut arena = PlanArena::from_plan(sys, plan);
+    let swapped = replace_arena(sys, &mut arena, budget, k, evaluator, cancel);
+    if swapped {
+        arena.store_plan(plan);
+    }
+    swapped
+}
+
+/// One replacement round on arena state, in place, with a cooperative
+/// cancellation checkpoint in the candidate-enumeration loop: a cancelled
+/// call abandons the round before the (batched) evaluator execution and
+/// leaves the arena untouched, so the caller's stored best plan remains
+/// the result.  Returns true if a swap was applied.
+pub fn replace_arena(
+    sys: &System,
+    arena: &mut PlanArena,
+    budget: f64,
+    k: usize,
+    evaluator: &dyn PlanEvaluator,
+    cancel: &CancelToken,
+) -> bool {
+    if arena.is_empty() || k == 0 {
         return false;
     }
-    let before = plan.score(sys);
+    let before = arena.score(sys);
     let remaining = (budget - before.cost).max(0.0);
 
-    // Enumerate candidate swaps as deltas against the live plan.
+    // Enumerate candidate swaps as deltas against the live arena state.
     let mut swaps: Vec<Swap> = Vec::new();
     let mut batch = DeltaBatch::new(sys);
     let mut present: Vec<bool> = vec![false; sys.n_types()];
-    for vm in &plan.vms {
-        present[vm.it.index()] = true;
+    for pos in 0..arena.n_vms() {
+        present[arena.it_at(pos).index()] = true;
     }
     for (src_idx, src_present) in present.iter().enumerate() {
         if cancel.is_cancelled() {
-            return false; // abandon the round, plan untouched
+            return false; // abandon the round, arena untouched
         }
         if !src_present {
             continue;
@@ -132,25 +153,20 @@ pub fn replace_cancellable(
         let src_it = sys.instance_types[src_idx].id;
         let src_rate = sys.rate(src_it);
         // k most expensive (longest-running) VMs of the source type.
-        let mut victims: Vec<usize> = plan
-            .vms
-            .iter()
-            .enumerate()
-            .filter(|(_, vm)| vm.it == src_it)
-            .map(|(i, _)| i)
-            .collect();
-        victims.sort_by(|&a, &b| plan.vms[b].exec(sys).total_cmp(&plan.vms[a].exec(sys)));
+        let mut victims: Vec<usize> =
+            (0..arena.n_vms()).filter(|&p| arena.it_at(p) == src_it).collect();
+        victims.sort_by(|&a, &b| arena.exec_at(sys, b).total_cmp(&arena.exec_at(sys, a)));
         victims.truncate(k);
         if victims.is_empty() {
             continue;
         }
-        let freed: f64 = victims.iter().map(|&i| plan.vms[i].cost(sys)).sum();
+        let freed: f64 = victims.iter().map(|&p| arena.cost_at(sys, p)).sum();
         // The tasks a materialised swap would drain, in drain order.
         let drained: Vec<TaskId> = victims
             .iter()
-            .flat_map(|&v| plan.vms[v].tasks().iter().copied())
+            .flat_map(|&p| arena.tasks_at(p).iter().copied())
             .collect();
-        let mut is_victim = vec![false; plan.n_vms()];
+        let mut is_victim = vec![false; arena.n_vms()];
         for &v in &victims {
             is_victim[v] = true;
         }
@@ -163,14 +179,16 @@ pub fn replace_cancellable(
             if n_new == 0 {
                 continue;
             }
-            // Candidate = surviving VMs (borrowed rows, in plan order;
-            // empty survivors score as dropped) + the new VMs' LPT rows.
+            // Candidate = surviving VMs (borrowed arena rows, in plan
+            // order; empty survivors score as dropped) + the new VMs'
+            // LPT rows.
             let mut cand = DeltaCandidate::default();
-            for (i, vm) in plan.vms.iter().enumerate() {
-                if is_victim[i] || vm.is_empty() {
+            for pos in 0..arena.n_vms() {
+                if is_victim[pos] || arena.is_empty_at(pos) {
                     continue;
                 }
-                cand.push_vm(sys, vm);
+                let it = arena.it_at(pos);
+                cand.push_row(arena.agg_at(pos), sys.perf.row(it), sys.rate(it));
             }
             let perf_new = sys.perf.row(cheap.id);
             for agg in lpt_agg_rows(sys, drained.clone(), cheap.id, n_new) {
@@ -186,7 +204,7 @@ pub fn replace_cancellable(
 
     // Batch-score all alternatives in one evaluator call.
     let scores = evaluator.eval_deltas(&batch);
-    drop(batch); // release the borrows on `plan` before mutating it
+    drop(batch); // release the borrows on the arena before mutating it
 
     // Commit the best feasible candidate that strictly reduces exec time.
     let mut best: Option<(usize, f64)> = None;
@@ -200,21 +218,17 @@ pub fn replace_cancellable(
         return false;
     };
 
-    // Materialise exactly one plan: apply the winning swap in place.
+    // Apply the winning swap to the arena in place; freed victim slots
+    // recycle into the new VMs via the free list.
     let Swap { victims, cheap, n_new } = swaps.swap_remove(win);
     let mut drained = Vec::new();
     for &v in &victims {
-        drained.extend(plan.vms[v].drain_tasks());
+        drained.extend(arena.drain_tasks(v));
     }
-    // Remove in descending index order to keep indices stable.
-    let mut vs = victims;
-    vs.sort_unstable_by(|a, b| b.cmp(a));
-    for v in vs {
-        plan.remove_vm(v);
-    }
-    let new_ids: Vec<usize> = (0..n_new).map(|_| plan.add_vm(sys, cheap)).collect();
-    lpt_spread(sys, plan, drained, &new_ids);
-    plan.drop_empty_vms();
+    arena.remove_vms(&victims);
+    let new_ids: Vec<usize> = (0..n_new).map(|_| arena.add_vm(cheap)).collect();
+    lpt_spread(sys, arena, drained, &new_ids);
+    arena.drop_empty_vms();
     true
 }
 
@@ -289,6 +303,25 @@ mod tests {
     }
 
     #[test]
+    fn arena_level_entry_commits_in_place() {
+        let (sys, plan) = paper_example();
+        let mut arena = PlanArena::from_plan(&sys, &plan);
+        let swapped = replace_arena(
+            &sys,
+            &mut arena,
+            2.0,
+            1,
+            &NativeEvaluator,
+            &CancelToken::default(),
+        );
+        assert!(swapped);
+        let out = arena.to_plan();
+        assert_eq!(out.vm_mix(&sys), vec![0, 2]);
+        assert_eq!(out.score(&sys).makespan, 50.0);
+        assert!(out.validate_partition(&sys).is_ok());
+    }
+
+    #[test]
     fn lpt_agg_rows_mirrors_materialised_spread() {
         // Two apps, uneven sizes: simulate the spread and materialise it,
         // then compare the cached aggregations float for float.
@@ -302,10 +335,11 @@ mod tests {
         let n_new = 3;
         let rows = lpt_agg_rows(&sys, tasks.clone(), InstanceTypeId(0), n_new);
 
-        let mut plan = Plan::new();
-        let ids: Vec<usize> = (0..n_new).map(|_| plan.add_vm(&sys, InstanceTypeId(0))).collect();
-        lpt_spread(&sys, &mut plan, tasks, &ids);
-        plan.drop_empty_vms();
+        let mut arena = PlanArena::from_plan(&sys, &Plan::new());
+        let ids: Vec<usize> = (0..n_new).map(|_| arena.add_vm(InstanceTypeId(0))).collect();
+        lpt_spread(&sys, &mut arena, tasks, &ids);
+        arena.drop_empty_vms();
+        let plan = arena.to_plan();
         assert_eq!(rows.len(), plan.n_vms());
         for (row, vm) in rows.iter().zip(&plan.vms) {
             assert_eq!(row.as_slice(), vm.agg_sizes());

@@ -1,0 +1,876 @@
+//! Parity pins for the arena/SoA evaluation core: planning and simulation
+//! through [`botsched::eval::PlanArena`] must be **bit-for-bit identical**
+//! to the historical pointer-chasing `Plan`/`Vm` walk — the cache-layout
+//! optimisation must not move a single float.
+//!
+//! The references below are the pre-arena implementations, kept verbatim
+//! (over public APIs) as the ground truth:
+//!
+//! * `legacy_balance` — BALANCE iterating `plan.vms` directly;
+//! * `legacy_replace` — the PR-2 delta-batched REPLACE mutating the plan
+//!   in place (descending-index `remove_vm` loop and all);
+//! * `legacy_find` — Algorithm 1's loop wiring the two above together and
+//!   scoring through `PlanEvaluator::eval_plan`;
+//! * `legacy_mi` / `legacy_mp` — the Sec. V baselines over `legacy_balance`;
+//! * `legacy_sim_run_plan` — the AoS simulator (per-VM `VecDeque` queues)
+//!   before the flattened struct-of-arrays fleet.
+//!
+//! On top of the pins, property tests check that `Plan -> PlanArena ->
+//! Plan` round-trips bit-identically across every `workload::scenario`
+//! preset and that arena mutations mirror `Plan` mutations op for op
+//! (including free-list slot recycling).
+
+// Plan clones below are the legacy reference implementations and test
+// scaffolding — boundary sites for the zero-clone lint.
+#![allow(clippy::disallowed_methods)]
+
+use std::collections::VecDeque;
+
+use botsched::cloudsim::{
+    run_campaign, run_campaign_replications, CampaignSpec, EventKind, EventQueue, NoiseModel,
+    SimConfig, SimOutcome, Simulator, VmStats,
+};
+use botsched::eval::{DeltaBatch, DeltaCandidate, NativeEvaluator, PlanArena, PlanEvaluator};
+use botsched::model::{billed_cost, InstanceTypeId, Plan, PlanScore, System, TaskId};
+use botsched::scheduler::{
+    add_vms, assign, balance, find_multistart, initial, maximise_parallelism, minimise_individual,
+    reduce, replace_cancellable, split, MultiStartConfig, Planner, ReduceMode,
+};
+use botsched::util::{CancelToken, Rng};
+use botsched::workload::paper::BUDGETS;
+use botsched::workload::{build_scenario, WorkloadGenerator, SCENARIOS};
+
+// ---------------------------------------------------------------------------
+// Assertions.
+
+fn assert_plans_bit_identical(context: &str, a: &Plan, b: &Plan) {
+    assert_eq!(a.n_vms(), b.n_vms(), "{context}: VM count differs");
+    for (i, (x, y)) in a.vms.iter().zip(&b.vms).enumerate() {
+        assert_eq!(x.it, y.it, "{context}: vm{i} instance type differs");
+        assert_eq!(x.tasks(), y.tasks(), "{context}: vm{i} task list differs");
+        assert_eq!(
+            x.work().to_bits(),
+            y.work().to_bits(),
+            "{context}: vm{i} cached work bits differ"
+        );
+        assert_eq!(x.agg_sizes().len(), y.agg_sizes().len(), "{context}: vm{i} agg len");
+        for (m, (s, t)) in x.agg_sizes().iter().zip(y.agg_sizes()).enumerate() {
+            assert_eq!(s.to_bits(), t.to_bits(), "{context}: vm{i} agg[{m}] bits differ");
+        }
+    }
+}
+
+fn assert_scores_bit_identical(context: &str, a: PlanScore, b: PlanScore) {
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{context}: makespan bits differ");
+    assert_eq!(a.cost.to_bits(), b.cost.to_bits(), "{context}: cost bits differ");
+}
+
+/// Tight / paper-like / loose budgets for any scenario.
+fn budgets_for(sys: &System) -> Vec<f64> {
+    [0.8, 1.2, 2.0].iter().map(|f| WorkloadGenerator::feasible_budget(sys, *f)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Legacy BALANCE (pre-arena reference, verbatim over `plan.vms`).
+
+fn legacy_balance(sys: &System, plan: &mut Plan, cost_cap: f64) -> usize {
+    let mut moves = 0usize;
+    let budget_moves = plan.n_assigned() * 4 + 16;
+    let mut total_cost = plan.cost(sys);
+    let mut execs: Vec<f64> = plan.vms.iter().map(|vm| vm.exec(sys)).collect();
+    while moves < budget_moves {
+        match legacy_best_rebalancing_move(sys, plan, &execs, total_cost, cost_cap) {
+            Some((from, to, task, new_cost)) => {
+                plan.move_task(sys, from, to, task);
+                execs[from] = plan.vms[from].exec(sys);
+                execs[to] = plan.vms[to].exec(sys);
+                total_cost = new_cost;
+                moves += 1;
+            }
+            None => break,
+        }
+    }
+    moves
+}
+
+fn legacy_best_rebalancing_move(
+    sys: &System,
+    plan: &Plan,
+    execs: &[f64],
+    total_cost: f64,
+    cost_cap: f64,
+) -> Option<(usize, usize, TaskId, f64)> {
+    if plan.n_vms() < 2 {
+        return None;
+    }
+    let (from, &makespan) = execs.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1))?;
+    let src = &plan.vms[from];
+    if src.is_empty() {
+        return None;
+    }
+    let src_cost = src.cost(sys);
+
+    let mut best: Option<(f64, usize, TaskId, f64)> = None;
+    for &task in src.tasks() {
+        let t_src = src.task_time(sys, task);
+        let src_new_exec = if src.len() == 1 && sys.overhead == 0.0 {
+            0.0
+        } else {
+            sys.overhead + src.work() - t_src
+        };
+        for (to, dst) in plan.vms.iter().enumerate() {
+            if to == from {
+                continue;
+            }
+            let dst_new_exec = sys.overhead + dst.work() + dst.task_time(sys, task);
+            let pair_max = src_new_exec.max(dst_new_exec);
+            if pair_max >= makespan - 1e-9 {
+                continue;
+            }
+            let src_new_cost = billed_cost(src_new_exec, sys.rate(src.it), sys.hour, sys.billing);
+            let dst_new_cost = billed_cost(dst_new_exec, sys.rate(dst.it), sys.hour, sys.billing);
+            let new_total =
+                total_cost + (src_new_cost - src_cost) + (dst_new_cost - dst.cost(sys));
+            if new_total > cost_cap + 1e-9 {
+                continue;
+            }
+            if best.as_ref().is_none_or(|(b, _, _, _)| pair_max < *b) {
+                best = Some((pair_max, to, task, new_total));
+            }
+        }
+    }
+    best.map(|(_, to, task, new_cost)| (from, to, task, new_cost))
+}
+
+// ---------------------------------------------------------------------------
+// Legacy delta-batched REPLACE (pre-arena reference, verbatim: borrows
+// `Vm::agg_sizes` rows, commits via the descending `remove_vm` loop).
+
+fn legacy_lpt_spread(sys: &System, plan: &mut Plan, mut tasks: Vec<TaskId>, vms: &[usize]) {
+    let it = plan.vms[vms[0]].it;
+    tasks.sort_by(|&a, &b| sys.exec_time(it, b).total_cmp(&sys.exec_time(it, a)));
+    for t in tasks {
+        let dst = *vms
+            .iter()
+            .min_by(|&&a, &&b| plan.vms[a].work().total_cmp(&plan.vms[b].work()))
+            .expect("at least one new VM");
+        plan.vms[dst].push_task(sys, t);
+    }
+}
+
+fn legacy_lpt_agg_rows(
+    sys: &System,
+    mut tasks: Vec<TaskId>,
+    it: InstanceTypeId,
+    n_new: usize,
+) -> Vec<Vec<f64>> {
+    tasks.sort_by(|&a, &b| sys.exec_time(it, b).total_cmp(&sys.exec_time(it, a)));
+    let mut work = vec![0.0f64; n_new];
+    let mut agg = vec![vec![0.0f64; sys.n_apps()]; n_new];
+    let mut used = vec![false; n_new];
+    for t in tasks {
+        let dst = (0..n_new).min_by(|&a, &b| work[a].total_cmp(&work[b])).expect("n_new > 0");
+        work[dst] += sys.exec_time(it, t);
+        let task = sys.task(t);
+        agg[dst][task.app.index()] += task.size;
+        used[dst] = true;
+    }
+    agg.into_iter().zip(used).filter_map(|(a, u)| u.then_some(a)).collect()
+}
+
+struct LegacySwap {
+    victims: Vec<usize>,
+    cheap: InstanceTypeId,
+    n_new: usize,
+}
+
+fn legacy_replace(
+    sys: &System,
+    plan: &mut Plan,
+    budget: f64,
+    k: usize,
+    evaluator: &dyn PlanEvaluator,
+) -> bool {
+    if plan.is_empty() || k == 0 {
+        return false;
+    }
+    let before = plan.score(sys);
+    let remaining = (budget - before.cost).max(0.0);
+
+    let mut swaps: Vec<LegacySwap> = Vec::new();
+    let mut batch = DeltaBatch::new(sys);
+    let mut present: Vec<bool> = vec![false; sys.n_types()];
+    for vm in &plan.vms {
+        present[vm.it.index()] = true;
+    }
+    for (src_idx, src_present) in present.iter().enumerate() {
+        if !src_present {
+            continue;
+        }
+        let src_it = sys.instance_types[src_idx].id;
+        let src_rate = sys.rate(src_it);
+        let mut victims: Vec<usize> = plan
+            .vms
+            .iter()
+            .enumerate()
+            .filter(|(_, vm)| vm.it == src_it)
+            .map(|(i, _)| i)
+            .collect();
+        victims.sort_by(|&a, &b| plan.vms[b].exec(sys).total_cmp(&plan.vms[a].exec(sys)));
+        victims.truncate(k);
+        if victims.is_empty() {
+            continue;
+        }
+        let freed: f64 = victims.iter().map(|&i| plan.vms[i].cost(sys)).sum();
+        let drained: Vec<TaskId> =
+            victims.iter().flat_map(|&v| plan.vms[v].tasks().iter().copied()).collect();
+        let mut is_victim = vec![false; plan.n_vms()];
+        for &v in &victims {
+            is_victim[v] = true;
+        }
+
+        for cheap in &sys.instance_types {
+            if cheap.cost_per_hour >= src_rate {
+                continue;
+            }
+            let n_new = ((freed + remaining) / cheap.cost_per_hour).floor() as usize;
+            if n_new == 0 {
+                continue;
+            }
+            let mut cand = DeltaCandidate::default();
+            for (i, vm) in plan.vms.iter().enumerate() {
+                if is_victim[i] || vm.is_empty() {
+                    continue;
+                }
+                cand.push_vm(sys, vm);
+            }
+            let perf_new = sys.perf.row(cheap.id);
+            for agg in legacy_lpt_agg_rows(sys, drained.clone(), cheap.id, n_new) {
+                cand.push_synth(agg, perf_new, cheap.cost_per_hour);
+            }
+            batch.push(cand);
+            swaps.push(LegacySwap { victims: victims.clone(), cheap: cheap.id, n_new });
+        }
+    }
+    if swaps.is_empty() {
+        return false;
+    }
+
+    let scores = evaluator.eval_deltas(&batch);
+    drop(batch);
+
+    let mut best: Option<(usize, f64)> = None;
+    for (i, s) in scores.iter().enumerate() {
+        if s.cost <= budget + 1e-9
+            && s.makespan < before.makespan - 1e-9
+            && best.as_ref().is_none_or(|(_, m)| s.makespan < *m)
+        {
+            best = Some((i, s.makespan));
+        }
+    }
+    let Some((win, _)) = best else {
+        return false;
+    };
+
+    let LegacySwap { victims, cheap, n_new } = swaps.swap_remove(win);
+    let mut drained = Vec::new();
+    for &v in &victims {
+        drained.extend(plan.vms[v].drain_tasks());
+    }
+    let mut vs = victims;
+    vs.sort_unstable_by(|a, b| b.cmp(a));
+    for v in vs {
+        plan.remove_vm(v);
+    }
+    let new_ids: Vec<usize> = (0..n_new).map(|_| plan.add_vm(sys, cheap)).collect();
+    legacy_lpt_spread(sys, plan, drained, &new_ids);
+    plan.drop_empty_vms();
+    true
+}
+
+// ---------------------------------------------------------------------------
+// Legacy FIND (Algorithm 1 loop, defaults, scoring via eval_plan).
+
+struct LegacyReport {
+    plan: Plan,
+    score: PlanScore,
+    feasible: bool,
+    iterations: usize,
+}
+
+fn legacy_find(sys: &System, budget: f64, evaluator: &dyn PlanEvaluator) -> LegacyReport {
+    let mut plan = initial(sys, budget);
+    reduce(sys, &mut plan, budget, ReduceMode::Local);
+    plan.drop_empty_vms();
+
+    let mut best = plan.clone();
+    let mut best_score = PlanScore { makespan: f64::INFINITY, cost: f64::INFINITY };
+    let mut best_feasible = false;
+
+    let mut iterations = 0usize;
+    for _ in 0..64 {
+        iterations += 1;
+        reduce(sys, &mut plan, budget, ReduceMode::Global);
+        let cost = plan.cost(sys);
+        if cost < budget {
+            add_vms(sys, &mut plan, budget - cost);
+        }
+        let cap = budget.max(plan.cost(sys));
+        legacy_balance(sys, &mut plan, cap);
+        split(sys, &mut plan, budget);
+        let tmp_budget = budget.max(plan.cost(sys));
+        legacy_replace(sys, &mut plan, tmp_budget, 1, evaluator);
+        plan.drop_empty_vms();
+
+        let score = evaluator.eval_plan(sys, &plan);
+        let feasible = score.satisfies(budget);
+        let accept = match (feasible, best_feasible) {
+            (true, false) => true,
+            (false, true) => false,
+            _ => score.improves(&best_score),
+        };
+        if accept {
+            best = plan.clone();
+            best_score = score;
+            best_feasible = feasible;
+        } else {
+            break;
+        }
+    }
+    LegacyReport { plan: best, score: best_score, feasible: best_feasible, iterations }
+}
+
+// ---------------------------------------------------------------------------
+// Legacy MI / MP baselines (over legacy_balance).
+
+fn legacy_finish(sys: &System, plan: &mut Plan) {
+    if plan.is_empty() {
+        plan.add_vm(sys, sys.cheapest_type());
+    }
+    let tasks: Vec<TaskId> = sys.tasks().iter().map(|t| t.id).collect();
+    assign(sys, plan, &tasks);
+    legacy_balance(sys, plan, f64::INFINITY);
+    plan.drop_empty_vms();
+}
+
+fn legacy_mi(sys: &System, budget: f64) -> Plan {
+    let mut plan = Plan::new();
+    add_vms(sys, &mut plan, budget);
+    legacy_finish(sys, &mut plan);
+    plan
+}
+
+fn legacy_mp(sys: &System, budget: f64) -> Plan {
+    let mut plan = Plan::new();
+    let it = sys.cheapest_type();
+    let n = (budget / sys.rate(it)).floor() as usize;
+    for _ in 0..n {
+        plan.add_vm(sys, it);
+    }
+    legacy_finish(sys, &mut plan);
+    plan
+}
+
+// ---------------------------------------------------------------------------
+// Legacy simulator (AoS: per-VM VecDeque queues), pinned-plan path.
+
+struct LegacyVmRuntime {
+    it: InstanceTypeId,
+    queue: VecDeque<TaskId>,
+    in_flight: Option<TaskId>,
+    ready_at: f64,
+    finished_at: f64,
+    busy: f64,
+    tasks_done: usize,
+    failed: bool,
+}
+
+fn legacy_sim_run_plan(sys: &System, plan: &Plan, config: &SimConfig) -> SimOutcome {
+    let mut vms: Vec<LegacyVmRuntime> = plan
+        .vms
+        .iter()
+        .map(|vm| LegacyVmRuntime {
+            it: vm.it,
+            queue: vm.tasks().iter().copied().collect(),
+            in_flight: None,
+            ready_at: 0.0,
+            finished_at: 0.0,
+            busy: 0.0,
+            tasks_done: 0,
+            failed: false,
+        })
+        .collect();
+
+    let noise = config.noise;
+    let mut rng = Rng::new(config.seed);
+    let mut q = EventQueue::new();
+    let mut completed = Vec::new();
+    let mut failures = 0usize;
+
+    fn start_next(
+        sys: &System,
+        vms: &mut [LegacyVmRuntime],
+        vm: usize,
+        now: f64,
+        noise: &NoiseModel,
+        rng: &mut Rng,
+        q: &mut EventQueue,
+    ) {
+        let v = &mut vms[vm];
+        if v.failed || v.in_flight.is_some() {
+            return;
+        }
+        let Some(task) = v.queue.pop_front() else {
+            return;
+        };
+        let dur = sys.exec_time(v.it, task) * noise.task_multiplier(rng);
+        v.in_flight = Some(task);
+        v.busy += dur;
+        q.push(now + dur, EventKind::TaskDone { vm, task });
+    }
+
+    for (i, vm) in vms.iter_mut().enumerate() {
+        let boot = sys.overhead * noise.boot_multiplier(&mut rng);
+        vm.ready_at = boot;
+        vm.finished_at = boot;
+        q.push(boot, EventKind::VmReady { vm: i });
+        if let Some(life) = noise.failure_time(&mut rng) {
+            q.push(boot + life, EventKind::VmFailed { vm: i });
+        }
+    }
+
+    while let Some(ev) = q.pop() {
+        match ev.kind {
+            EventKind::VmReady { vm } => {
+                start_next(sys, &mut vms, vm, ev.time, &noise, &mut rng, &mut q);
+            }
+            EventKind::TaskDone { vm, task } => {
+                if vms[vm].failed {
+                    continue;
+                }
+                {
+                    let v = &mut vms[vm];
+                    v.in_flight = None;
+                    v.tasks_done += 1;
+                    v.finished_at = ev.time;
+                }
+                completed.push(task);
+                start_next(sys, &mut vms, vm, ev.time, &noise, &mut rng, &mut q);
+            }
+            EventKind::VmFailed { vm } => {
+                let v = &mut vms[vm];
+                if v.failed {
+                    continue;
+                }
+                if v.in_flight.is_none() && v.queue.is_empty() {
+                    continue;
+                }
+                v.failed = true;
+                v.finished_at = ev.time;
+                failures += 1;
+            }
+        }
+    }
+
+    let mut stranded = Vec::new();
+    for v in vms.iter() {
+        if let Some(t) = v.in_flight {
+            stranded.push(t);
+        }
+        stranded.extend(v.queue.iter().copied());
+    }
+
+    let mut cost = 0.0;
+    let vm_stats: Vec<VmStats> = vms
+        .iter()
+        .map(|v| {
+            let billed = billed_cost(v.finished_at, sys.rate(v.it), sys.hour, sys.billing);
+            cost += billed;
+            VmStats {
+                it: v.it,
+                ready_at: v.ready_at,
+                finished_at: v.finished_at,
+                busy: v.busy,
+                tasks_done: v.tasks_done,
+                failed: v.failed,
+                billed,
+            }
+        })
+        .collect();
+    let makespan = vms.iter().map(|v| v.finished_at).fold(0.0, f64::max);
+
+    SimOutcome { makespan, cost, completed, stranded, vm_stats, failures }
+}
+
+// ---------------------------------------------------------------------------
+// Plan generators.
+
+/// A deterministic pseudo-random plan: a handful of VMs of mixed types,
+/// tasks dealt out with seeded draws (not balanced, not optimised).
+fn random_plan(sys: &System, seed: u64) -> Plan {
+    let mut rng = Rng::new(seed);
+    let n_vms = 2 + (rng.below(6) as usize);
+    let mut plan = Plan::new();
+    for _ in 0..n_vms {
+        let it = InstanceTypeId(rng.below(sys.n_types() as u64) as u32);
+        plan.add_vm(sys, it);
+    }
+    for t in sys.tasks() {
+        let v = rng.below(n_vms as u64) as usize;
+        plan.vms[v].push_task(sys, t.id);
+    }
+    plan
+}
+
+// ---------------------------------------------------------------------------
+// Round-trip property tests.
+
+#[test]
+fn plan_arena_round_trips_bit_identically_across_scenarios() {
+    for s in SCENARIOS {
+        let sys = build_scenario(s.name).unwrap();
+        for seed in 0..6u64 {
+            let plan = random_plan(&sys, seed);
+            let arena = PlanArena::from_plan(&sys, &plan);
+            let back = arena.to_plan();
+            let ctx = format!("{} seed {seed}", s.name);
+            assert_plans_bit_identical(&ctx, &plan, &back);
+            assert_scores_bit_identical(&ctx, plan.score(&sys), arena.score(&sys));
+            assert!(back.validate_partition(&sys).is_ok(), "{ctx}");
+        }
+        // Planner outputs round-trip too (post-optimisation shapes).
+        for &b in &budgets_for(&sys) {
+            let plan = Planner::new(&sys).find(b).plan;
+            let arena = PlanArena::from_plan(&sys, &plan);
+            let ctx = format!("{} find@{b}", s.name);
+            assert_plans_bit_identical(&ctx, &plan, &arena.to_plan());
+            assert_scores_bit_identical(&ctx, plan.score(&sys), arena.score(&sys));
+        }
+    }
+}
+
+#[test]
+fn arena_mutations_mirror_plan_mutations_including_slot_recycling() {
+    let sys = build_scenario("uniform-small").unwrap();
+    let mut plan = random_plan(&sys, 42);
+    let mut arena = PlanArena::from_plan(&sys, &plan);
+    let mut rng = Rng::new(7);
+
+    for step in 0..400 {
+        let ctx = format!("step {step}");
+        match rng.below(6) {
+            // push a task onto a random VM (steal it from its holder).
+            0 => {
+                if plan.n_vms() >= 2 {
+                    let t = TaskId(rng.below(sys.tasks().len() as u64) as u32);
+                    let from = plan.vms.iter().position(|vm| vm.tasks().contains(&t));
+                    if let Some(from) = from {
+                        let to = rng.below(plan.n_vms() as u64) as usize;
+                        if to != from {
+                            assert_eq!(
+                                plan.move_task(&sys, from, to, t),
+                                arena.move_task(&sys, from, to, t),
+                                "{ctx}: move_task"
+                            );
+                        }
+                    }
+                }
+            }
+            // provision a VM (exercises the free-list on recycled slots).
+            1 => {
+                let it = InstanceTypeId(rng.below(sys.n_types() as u64) as u32);
+                assert_eq!(plan.add_vm(&sys, it), arena.add_vm(it), "{ctx}: add_vm index");
+            }
+            // drain a random VM.
+            2 => {
+                if !plan.is_empty() {
+                    let v = rng.below(plan.n_vms() as u64) as usize;
+                    assert_eq!(
+                        plan.vms[v].drain_tasks(),
+                        arena.drain_tasks(v),
+                        "{ctx}: drain order"
+                    );
+                }
+            }
+            // remove a random (drained-or-not) VM.
+            3 => {
+                if plan.n_vms() >= 2 {
+                    let v = rng.below(plan.n_vms() as u64) as usize;
+                    plan.vms[v].drain_tasks();
+                    arena.drain_tasks(v);
+                    plan.remove_vm(v);
+                    arena.remove_vm(v);
+                }
+            }
+            // batch removal via the compaction API.
+            4 => {
+                if plan.n_vms() >= 4 {
+                    let a = rng.below(plan.n_vms() as u64) as usize;
+                    let b = rng.below(plan.n_vms() as u64) as usize;
+                    let mut victims = vec![a, b];
+                    victims.sort_unstable();
+                    victims.dedup();
+                    for &v in &victims {
+                        plan.vms[v].drain_tasks();
+                        arena.drain_tasks(v);
+                    }
+                    plan.remove_vms(&victims);
+                    arena.remove_vms(&victims);
+                }
+            }
+            // drop empties.
+            _ => {
+                plan.drop_empty_vms();
+                arena.drop_empty_vms();
+            }
+        }
+        assert_plans_bit_identical(&ctx, &plan, &arena.to_plan());
+        assert_scores_bit_identical(&ctx, plan.score(&sys), arena.score(&sys));
+    }
+}
+
+#[test]
+fn plan_remove_vms_matches_descending_remove_vm_loop() {
+    let sys = build_scenario("heavy-tail").unwrap();
+    for seed in 0..8u64 {
+        let base = random_plan(&sys, seed);
+        let mut rng = Rng::new(seed ^ 0x5eed);
+        let mut victims: Vec<usize> = (0..base.n_vms()).filter(|_| rng.below(3) == 0).collect();
+        if victims.len() == base.n_vms() {
+            victims.pop();
+        }
+        let mut batch = base.clone();
+        let removed = batch.remove_vms(&victims);
+        assert_eq!(removed.len(), victims.len(), "seed {seed}");
+
+        let mut loopy = base.clone();
+        let mut vs = victims.clone();
+        vs.sort_unstable_by(|a, b| b.cmp(a));
+        for v in vs {
+            loopy.remove_vm(v);
+        }
+        assert_plans_bit_identical(&format!("seed {seed}"), &batch, &loopy);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scoring-path parity: the delta entry point vs the owned batch.
+
+#[test]
+fn arena_delta_scoring_matches_eval_plan_bit_for_bit() {
+    for s in SCENARIOS {
+        let sys = build_scenario(s.name).unwrap();
+        for seed in 0..4u64 {
+            let plan = random_plan(&sys, seed);
+            let ctx = format!("{} seed {seed}", s.name);
+            let legacy = NativeEvaluator.eval_plan(&sys, &plan);
+            let via_plan = NativeEvaluator.eval_deltas(&DeltaBatch::from_plan(&sys, &plan))[0];
+            assert_scores_bit_identical(&ctx, legacy, via_plan);
+            let arena = PlanArena::from_plan(&sys, &plan);
+            let via_arena = NativeEvaluator.eval_deltas(&arena.delta_batch(&sys))[0];
+            assert_scores_bit_identical(&ctx, legacy, via_arena);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Phase parity: BALANCE and REPLACE.
+
+#[test]
+fn balance_matches_legacy_bit_for_bit() {
+    for s in SCENARIOS {
+        let sys = build_scenario(s.name).unwrap();
+        for seed in 0..5u64 {
+            for cap_factor in [1.0, 1.5, f64::INFINITY] {
+                let base = random_plan(&sys, seed);
+                let cap = if cap_factor.is_finite() {
+                    base.cost(&sys) * cap_factor
+                } else {
+                    f64::INFINITY
+                };
+                let mut legacy = base.clone();
+                let legacy_moves = legacy_balance(&sys, &mut legacy, cap);
+                let mut arena = base.clone();
+                let arena_moves = balance(&sys, &mut arena, cap);
+                let ctx = format!("{} seed {seed} cap {cap_factor}", s.name);
+                assert_eq!(legacy_moves, arena_moves, "{ctx}: move count");
+                assert_plans_bit_identical(&ctx, &legacy, &arena);
+            }
+        }
+    }
+}
+
+#[test]
+fn replace_matches_legacy_bit_for_bit() {
+    for s in SCENARIOS {
+        let sys = build_scenario(s.name).unwrap();
+        for &b in &budgets_for(&sys) {
+            for k in [1usize, 2] {
+                let base = {
+                    let mut p = initial(&sys, b);
+                    reduce(&sys, &mut p, b, ReduceMode::Local);
+                    p.drop_empty_vms();
+                    p
+                };
+                let mut legacy = base.clone();
+                let l = legacy_replace(&sys, &mut legacy, b, k, &NativeEvaluator);
+                let mut arena = base.clone();
+                let a = replace_cancellable(
+                    &sys,
+                    &mut arena,
+                    b,
+                    k,
+                    &NativeEvaluator,
+                    &CancelToken::default(),
+                );
+                let ctx = format!("{} budget {b} k {k}", s.name);
+                assert_eq!(l, a, "{ctx}: commit decision");
+                assert_plans_bit_identical(&ctx, &legacy, &arena);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end policy parity: budget-heuristic, MI, MP, multistart.
+
+#[test]
+fn find_matches_legacy_across_scenarios() {
+    for s in SCENARIOS {
+        let sys = build_scenario(s.name).unwrap();
+        for &b in &budgets_for(&sys) {
+            let legacy = legacy_find(&sys, b, &NativeEvaluator);
+            let report = Planner::new(&sys).find(b);
+            let ctx = format!("{} budget {b}", s.name);
+            assert_eq!(legacy.iterations, report.iterations, "{ctx}: iteration count");
+            assert_eq!(legacy.feasible, report.feasible, "{ctx}: feasibility");
+            assert_scores_bit_identical(&ctx, legacy.score, report.score);
+            assert_plans_bit_identical(&ctx, &legacy.plan, &report.plan);
+        }
+    }
+}
+
+#[test]
+fn find_matches_legacy_on_paper_budget_sweep() {
+    let sys = build_scenario("paper").unwrap();
+    for &b in BUDGETS {
+        let legacy = legacy_find(&sys, b, &NativeEvaluator);
+        let report = Planner::new(&sys).find(b);
+        let ctx = format!("paper budget {b}");
+        assert_eq!(legacy.iterations, report.iterations, "{ctx}");
+        assert_scores_bit_identical(&ctx, legacy.score, report.score);
+        assert_plans_bit_identical(&ctx, &legacy.plan, &report.plan);
+    }
+}
+
+#[test]
+fn baselines_match_legacy_bit_for_bit() {
+    for s in SCENARIOS {
+        let sys = build_scenario(s.name).unwrap();
+        for &b in &budgets_for(&sys) {
+            let ctx = format!("{} budget {b}", s.name);
+            let mi = minimise_individual(&sys, b);
+            assert_plans_bit_identical(&format!("{ctx} MI"), &legacy_mi(&sys, b), &mi);
+            let mp = maximise_parallelism(&sys, b);
+            assert_plans_bit_identical(&format!("{ctx} MP"), &legacy_mp(&sys, b), &mp);
+        }
+    }
+}
+
+#[test]
+fn multistart_bit_identical_at_thread_counts() {
+    for name in ["paper", "heavy-tail"] {
+        let sys = build_scenario(name).unwrap();
+        let budget = WorkloadGenerator::feasible_budget(&sys, 1.3);
+        let base = MultiStartConfig { n_starts: 5, seed: 17, ..Default::default() };
+        let one = find_multistart(
+            &sys,
+            budget,
+            &MultiStartConfig { threads: 1, ..base.clone() },
+            &NativeEvaluator,
+        );
+        let four = find_multistart(
+            &sys,
+            budget,
+            &MultiStartConfig { threads: 4, ..base.clone() },
+            &NativeEvaluator,
+        );
+        let ctx = format!("{name} budget {budget}");
+        assert_eq!(one.iterations, four.iterations, "{ctx}");
+        assert_eq!(one.feasible, four.feasible, "{ctx}");
+        assert_scores_bit_identical(&ctx, one.score, four.score);
+        assert_plans_bit_identical(&ctx, &one.plan, &four.plan);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Simulator + campaign parity.
+
+#[test]
+fn soa_simulator_matches_legacy_sim_bit_for_bit() {
+    let noises = [
+        NoiseModel::none(),
+        NoiseModel::jitter(0.15),
+        NoiseModel::with_failures(0.1, 900.0),
+    ];
+    for s in SCENARIOS {
+        let sys = build_scenario(s.name).unwrap();
+        let mut plans: Vec<Plan> = (0..3).map(|seed| random_plan(&sys, seed)).collect();
+        let b = WorkloadGenerator::feasible_budget(&sys, 1.2);
+        plans.push(Planner::new(&sys).find(b).plan);
+        for (pi, plan) in plans.iter().enumerate() {
+            for (ni, noise) in noises.iter().enumerate() {
+                let cfg = SimConfig { noise: *noise, seed: 31 + ni as u64 };
+                let legacy = legacy_sim_run_plan(&sys, plan, &cfg);
+                let soa = Simulator::run_plan(&sys, plan, &cfg);
+                let ctx = format!("{} plan {pi} noise {ni}", s.name);
+                assert_eq!(legacy.makespan.to_bits(), soa.makespan.to_bits(), "{ctx}: makespan");
+                assert_eq!(legacy.cost.to_bits(), soa.cost.to_bits(), "{ctx}: cost");
+                assert_eq!(legacy.completed, soa.completed, "{ctx}: completion order");
+                assert_eq!(legacy.stranded, soa.stranded, "{ctx}: stranded order");
+                assert_eq!(legacy.failures, soa.failures, "{ctx}: failures");
+                assert_eq!(legacy.vm_stats.len(), soa.vm_stats.len(), "{ctx}");
+                for (i, (l, n)) in legacy.vm_stats.iter().zip(&soa.vm_stats).enumerate() {
+                    assert_eq!(l.it, n.it, "{ctx} vm{i}");
+                    assert_eq!(l.ready_at.to_bits(), n.ready_at.to_bits(), "{ctx} vm{i} ready");
+                    assert_eq!(
+                        l.finished_at.to_bits(),
+                        n.finished_at.to_bits(),
+                        "{ctx} vm{i} finished"
+                    );
+                    assert_eq!(l.busy.to_bits(), n.busy.to_bits(), "{ctx} vm{i} busy");
+                    assert_eq!(l.tasks_done, n.tasks_done, "{ctx} vm{i} tasks_done");
+                    assert_eq!(l.failed, n.failed, "{ctx} vm{i} failed");
+                    assert_eq!(l.billed.to_bits(), n.billed.to_bits(), "{ctx} vm{i} billed");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn campaign_replications_bit_identical_at_thread_counts() {
+    // A failure-prone campaign exercises the full replanning loop
+    // (arena-backed FIND each round) on top of the SoA simulator.
+    let sys = build_scenario("paper").unwrap();
+    let mut spec = CampaignSpec::new(80.0);
+    spec.sim = SimConfig { noise: NoiseModel::with_failures(0.05, 1500.0), seed: 5 };
+    let single = run_campaign(&sys, &spec);
+    assert!(!single.rounds.is_empty());
+
+    let seq = run_campaign_replications(&sys, &spec, 4, 1);
+    let par = run_campaign_replications(&sys, &spec, 4, 4);
+    assert_eq!(seq.len(), par.len());
+    for (r, (a, b)) in seq.iter().zip(&par).enumerate() {
+        let ctx = format!("replication {r}");
+        assert_eq!(a.wall_clock.to_bits(), b.wall_clock.to_bits(), "{ctx}: wall clock");
+        assert_eq!(a.spent.to_bits(), b.spent.to_bits(), "{ctx}: spend");
+        assert_eq!(a.complete, b.complete, "{ctx}");
+        assert_eq!(a.rounds.len(), b.rounds.len(), "{ctx}");
+        for (i, (x, y)) in a.rounds.iter().zip(&b.rounds).enumerate() {
+            assert_eq!(x.makespan.to_bits(), y.makespan.to_bits(), "{ctx} round {i}");
+            assert_eq!(x.completed, y.completed, "{ctx} round {i}");
+            assert_eq!(x.stranded, y.stranded, "{ctx} round {i}");
+        }
+    }
+}

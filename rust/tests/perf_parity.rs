@@ -6,6 +6,9 @@
 //! The clone-per-candidate REPLACE reference below is the pre-optimisation
 //! implementation, kept verbatim (over public APIs) as the ground truth.
 
+// Plan clones here ARE the legacy reference path under test.
+#![allow(clippy::disallowed_methods)]
+
 use botsched::eval::{NativeEvaluator, PlanEvaluator};
 use botsched::model::{Plan, System, TaskId};
 use botsched::scheduler::{
