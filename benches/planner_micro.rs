@@ -9,8 +9,12 @@
 //! The `planner_micro` group isolates candidate-scoring throughput —
 //! the arena/SoA delta path vs the historical owned-batch path — and
 //! snapshots to `BENCH_planner_micro.json` under `BENCH_JSON=1` so the
-//! CI bench guard tracks the win.  Set `BENCH_SMOKE=1` to skip the slow
-//! ablation/A4 studies and shrink the measurement budget for CI.
+//! CI bench guard tracks the win.  The `planner_micro/parallel` group
+//! (snapshot `BENCH_planner_micro_parallel.json`) covers the
+//! deterministic intra-solve parallelism: sequential vs 2/4-thread
+//! chunked delta scoring, threaded REPLACE rounds, and the
+//! pruned-vs-unpruned REPLACE pair.  Set `BENCH_SMOKE=1` to skip the
+//! slow ablation/A4 studies and shrink the measurement budget for CI.
 
 // Plan clones below are bench scaffolding (preparing inputs outside the
 // timed region) or the legacy comparison path itself.
@@ -19,14 +23,17 @@
 use std::time::Duration;
 
 use botsched::benchkit::Bench;
-use botsched::eval::{DeltaBatch, EvalBatch, NativeEvaluator, PlanArena, PlanEvaluator};
+use botsched::eval::{
+    eval_deltas_chunked, DeltaBatch, EvalBatch, NativeEvaluator, PlanArena, PlanEvaluator,
+};
 use botsched::model::{Plan, TaskId};
 use botsched::scheduler::{
-    add_vms, assign, balance, balance_arena, initial, reduce, replace, replace_arena, split,
-    Planner, PlannerConfig, ReduceMode,
+    add_vms, assign, balance, balance_arena, initial, reduce, replace, replace_arena,
+    replace_arena_opts, split, Planner, PlannerConfig, ReduceMode, ReplaceOpts,
 };
 use botsched::util::CancelToken;
 use botsched::workload::paper::{table1_system, BUDGETS};
+use botsched::workload::{build_scenario, WorkloadGenerator};
 
 fn main() {
     let smoke = std::env::var_os("BENCH_SMOKE").is_some();
@@ -150,6 +157,83 @@ fn main() {
     });
     micro.report();
 
+    // ---- intra-solve parallelism (chunked scoring + threaded REPLACE) -
+    //
+    // Sequential vs 2/4-thread chunked delta scoring at two batch widths,
+    // threaded REPLACE rounds, and the pruned-vs-unpruned REPLACE pair —
+    // all on the wide-catalogue scenario (16 types, 600 tasks), where the
+    // candidate sets are broad enough for the fan-out and the bound to
+    // matter.  Every variant returns bit-identical results (pinned by
+    // `parallel_parity`); this group measures the throughput spread.
+    let mut par = Bench::new("planner_micro/parallel");
+    if smoke {
+        par = par.with_budget(Duration::from_millis(30), Duration::from_millis(150));
+    }
+    let wide = build_scenario("wide-catalogue").expect("wide-catalogue preset");
+    let wb = WorkloadGenerator::feasible_budget(&wide, 1.2);
+    let mut wide_base = initial(&wide, wb);
+    reduce(&wide, &mut wide_base, wb, ReduceMode::Local);
+    wide_base.drop_empty_vms();
+    let wide_arena = PlanArena::from_plan(&wide, &wide_base);
+    let it0 = wide.instance_types[0].id;
+
+    for kk in [64usize, 256] {
+        let mut batch = DeltaBatch::new(&wide);
+        for i in 0..kk {
+            let mut c = wide_arena.delta_candidate(&wide);
+            c.push_synth(
+                (0..wide.n_apps()).map(|m| 1.0 + (i * (m + 1)) as f64 * 0.25).collect(),
+                wide.perf.row(it0),
+                wide.rate(it0),
+            );
+            batch.push(c);
+        }
+        par.run_with_items(&format!("score/seq@{kk}"), Some(kk as f64), || {
+            std::hint::black_box(NativeEvaluator.eval_deltas(&batch));
+        });
+        for threads in [2usize, 4] {
+            par.run_with_items(&format!("score/{threads}t@{kk}"), Some(kk as f64), || {
+                std::hint::black_box(eval_deltas_chunked(
+                    &NativeEvaluator,
+                    &batch,
+                    threads,
+                    &CancelToken::default(),
+                ));
+            });
+        }
+    }
+
+    let mut wide_persistent = PlanArena::new(&wide);
+    for threads in [1usize, 2, 4] {
+        par.run(&format!("replace/{threads}t"), || {
+            wide_persistent.load_plan(&wide_base);
+            std::hint::black_box(replace_arena_opts(
+                &wide,
+                &mut wide_persistent,
+                wb,
+                2,
+                &NativeEvaluator,
+                &CancelToken::default(),
+                &ReplaceOpts { threads, ..Default::default() },
+            ));
+        });
+    }
+    for (label, prune) in [("replace/pruned", true), ("replace/unpruned", false)] {
+        par.run(label, || {
+            wide_persistent.load_plan(&wide_base);
+            std::hint::black_box(replace_arena_opts(
+                &wide,
+                &mut wide_persistent,
+                wb,
+                2,
+                &NativeEvaluator,
+                &CancelToken::default(),
+                &ReplaceOpts { prune, ..Default::default() },
+            ));
+        });
+    }
+    par.report();
+
     if smoke {
         println!("\nBENCH_SMOKE set: skipping the ablation and A4 studies.");
         return;
@@ -201,7 +285,7 @@ fn main() {
     // ---- A4: multi-start vs single-start -------------------------------
     // Both sides run through the policy registry: same request, two names.
     use botsched::scheduler::{PolicyRegistry, SolveRequest};
-    use botsched::workload::{WorkloadGenerator, WorkloadSpec};
+    use botsched::workload::WorkloadSpec;
     let registry = PolicyRegistry::builtin();
     println!("\n== A4: multi-start (8 perturbed restarts) vs single-start ==");
     println!("{:<22} {:>12} {:>12} {:>9}", "instance", "single", "multi", "gain");

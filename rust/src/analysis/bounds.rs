@@ -90,6 +90,34 @@ pub fn makespan_floor(sys: &System, b: f64) -> f64 {
     (money_bound).max(largest_task) + sys.overhead
 }
 
+/// Lower bound on the makespan of *any* spread of a task set over `n`
+/// identical machines of instance type `it`.
+///
+/// The task set is summarised per application: `agg[m]` is its total
+/// size in app `m`, `max_size[m]` the largest single task size in app
+/// `m`.  Two relaxations, both of which only under-estimate:
+///
+/// * the busiest lane cannot beat the average — total work divided
+///   perfectly over `n` lanes;
+/// * no lane can beat its largest indivisible task.
+///
+/// REPLACE uses this as its candidate-pruning bound: a swap whose new
+/// VMs cannot possibly finish below the incumbent makespan is dominated
+/// before any LPT rows are synthesised for it (threshold-exact — the
+/// surviving winner is unchanged; see `scheduler::replace`).
+pub fn spread_makespan_floor(
+    sys: &System,
+    agg: &[f64],
+    max_size: &[f64],
+    it: InstanceTypeId,
+    n: usize,
+) -> f64 {
+    let perf = sys.perf.row(it);
+    let total_work: f64 = agg.iter().zip(perf).map(|(s, p)| s * p).sum();
+    let largest_task: f64 = max_size.iter().zip(perf).map(|(s, p)| s * p).fold(0.0, f64::max);
+    sys.overhead + (total_work / n.max(1) as f64).max(largest_task)
+}
+
 /// Exhaustive search over all plans with at most `max_vms` VMs: exact
 /// optimal `(makespan, cost)` under the budget, or `None` if infeasible
 /// at that VM cap.  Exponential — use only for tiny instances (the
@@ -181,6 +209,47 @@ mod tests {
         let f120 = makespan_floor(&sys, 120.0);
         assert!(f120 <= f60);
         assert!(f60.is_finite());
+    }
+
+    #[test]
+    fn spread_floor_never_exceeds_a_real_lpt_spread() {
+        use crate::eval::PlanArena;
+        use crate::model::{InstanceTypeId, Plan};
+        // Any real spread of the tasks over n identical VMs must finish
+        // at or above the floor — check against an actual LPT layout.
+        let sys = SystemBuilder::new()
+            .app("a1", vec![5.0, 1.0, 3.0, 2.0, 8.0])
+            .app("a2", vec![4.0, 4.0, 1.0, 6.0])
+            .instance_type("x", 2.0, vec![7.0, 9.0])
+            .overhead(20.0)
+            .build()
+            .unwrap();
+        let it = InstanceTypeId(0);
+        let mut agg = vec![0.0; sys.n_apps()];
+        let mut max_size = vec![0.0f64; sys.n_apps()];
+        for t in sys.tasks() {
+            agg[t.app.index()] += t.size;
+            max_size[t.app.index()] = max_size[t.app.index()].max(t.size);
+        }
+        for n in 1..=5usize {
+            let floor = spread_makespan_floor(&sys, &agg, &max_size, it, n);
+            let mut arena = PlanArena::from_plan(&sys, &Plan::new());
+            let ids: Vec<usize> = (0..n).map(|_| arena.add_vm(it)).collect();
+            let tasks: Vec<_> = sys.tasks().iter().map(|t| t.id).collect();
+            for t in tasks {
+                let dst = *ids
+                    .iter()
+                    .min_by(|&&a, &&b| arena.work_at(a).total_cmp(&arena.work_at(b)))
+                    .unwrap();
+                arena.push_task(&sys, dst, t);
+            }
+            let real = (0..arena.n_vms()).map(|p| arena.exec_at(&sys, p)).fold(0.0, f64::max);
+            assert!(
+                floor <= real + 1e-9,
+                "n={n}: floor {floor} above real spread {real}"
+            );
+            assert!(floor >= sys.overhead);
+        }
     }
 
     #[test]

@@ -12,7 +12,7 @@ pub mod pareto;
 pub mod report;
 pub mod stats;
 
-pub use bounds::{brute_force_best, fractional_cost_floor, makespan_floor};
+pub use bounds::{brute_force_best, fractional_cost_floor, makespan_floor, spread_makespan_floor};
 pub use pareto::{knee, pareto_frontier, ParetoPoint};
 pub use report::{
     run_policy_sweep, run_policy_sweep_ctl, run_sweep, run_sweep_threads, ApproachRow,

@@ -40,6 +40,29 @@
 //! differentially tested against [`NativeEvaluator`].  The `arena_parity`
 //! integration suite pins the arena path bit-for-bit against the
 //! materialising legacy path across every scenario preset.
+//!
+//! # Threading
+//!
+//! Evaluators themselves never spawn: every trait method is a pure
+//! synchronous function of its batch.  Intra-solve parallelism lives in
+//! one place — [`eval_deltas_chunked`] — which splits a [`DeltaBatch`]
+//! into contiguous candidate ranges, scores the ranges on the
+//! [`crate::util::parallel`] scoped pool via
+//! [`PlanEvaluator::eval_delta_range`], and concatenates the per-range
+//! scores back in candidate order.  Because each candidate's score is a
+//! pure function of that candidate alone (the per-row `sizes · perf`
+//! fold never crosses candidates), the merged vector is **bit-for-bit
+//! identical at any thread count** — chunk boundaries are a pure
+//! performance knob.  Only evaluators that opt in via
+//! [`PlanEvaluator::supports_chunked_deltas`] are fanned out (the
+//! native evaluator does; the XLA artifact keeps routing whole batches
+//! through its tensor batcher).  Cancellation is cooperative: workers
+//! poll the token between ranges and the entry point returns `None`,
+//! discarding all partial work, so a cancelled caller commits nothing.
+//!
+//! The callers (REPLACE candidate scoring, and anything else holding a
+//! wide `DeltaBatch`) are themselves fanned out at most one level up —
+//! see the no-nested-spawning rule in [`crate::util::parallel`].
 
 mod arena;
 mod batch;
@@ -49,7 +72,10 @@ pub use arena::PlanArena;
 pub use batch::{AggSizes, Candidate, DeltaBatch, DeltaCandidate, DeltaRow, EvalBatch};
 pub use native::NativeEvaluator;
 
+use std::ops::Range;
+
 use crate::model::{Plan, PlanScore, System};
+use crate::util::{parallel_map, resolve_threads, CancelToken};
 
 /// Batch scoring of candidate execution plans.
 ///
@@ -72,6 +98,37 @@ pub trait PlanEvaluator: Send + Sync {
         self.eval_batch(&batch.to_eval_batch())
     }
 
+    /// Whether [`eval_delta_range`](Self::eval_delta_range) may be
+    /// called concurrently on disjoint ranges of one batch (see
+    /// [`eval_deltas_chunked`]).  Defaults to `false`: evaluators that
+    /// amortise per-call setup over the whole batch (the XLA artifact
+    /// pads one tensor per call) are better off scoring it in one piece,
+    /// and evaluators with interior mutability must explicitly vouch for
+    /// concurrent range calls.  [`NativeEvaluator`] opts in.
+    fn supports_chunked_deltas(&self) -> bool {
+        false
+    }
+
+    /// Score the candidates `batch.candidates[range]`, returning their
+    /// scores in candidate order.  Must be arithmetic-identical to the
+    /// corresponding slice of [`eval_deltas`](Self::eval_deltas) — the
+    /// chunked parallel path relies on per-candidate purity to merge
+    /// range results bit-for-bit.  The default materialises just the
+    /// range and bridges to [`eval_batch`](Self::eval_batch).
+    fn eval_delta_range(&self, batch: &DeltaBatch<'_>, range: Range<usize>) -> Vec<PlanScore> {
+        let sub = EvalBatch {
+            candidates: batch.candidates[range]
+                .iter()
+                .map(DeltaCandidate::to_candidate)
+                .collect(),
+            overhead: batch.overhead,
+            hour: batch.hour,
+            billing: batch.billing,
+            n_apps: batch.n_apps,
+        };
+        self.eval_batch(&sub)
+    }
+
     /// Implementation name (for metrics / bench labels).
     fn name(&self) -> &'static str;
 
@@ -84,6 +141,61 @@ pub trait PlanEvaluator: Send + Sync {
     fn eval_plan(&self, sys: &System, plan: &Plan) -> PlanScore {
         self.eval_plans(sys, &[plan])[0]
     }
+}
+
+/// Below this many candidates the fan-out costs more than it saves and
+/// the batch is scored inline.  A pure performance threshold: both paths
+/// produce bit-identical scores, so the exact value never changes a plan.
+const MIN_CHUNKED_CANDIDATES: usize = 32;
+
+/// Score a delta batch, fanning contiguous candidate ranges across up to
+/// `threads` workers ([`crate::util::parallel_map`] semantics: `0` =
+/// auto-detect, `1` = inline sequential).
+///
+/// The scores come back concatenated in candidate order and are
+/// **bit-for-bit identical at any thread count**: chunking is by whole
+/// candidates, so no float fold ever changes its summation order.  The
+/// fan-out engages only when the evaluator opts in
+/// ([`PlanEvaluator::supports_chunked_deltas`]) and the batch is large
+/// enough to amortise it; otherwise the call degenerates to one
+/// [`PlanEvaluator::eval_deltas`].
+///
+/// Returns `None` iff `cancel` fired: workers poll the token between
+/// ranges, already-scored ranges are discarded, and the pool drains
+/// normally (no detached threads, no deadlock) — the caller must treat
+/// the round as abandoned and commit nothing.
+pub fn eval_deltas_chunked(
+    evaluator: &dyn PlanEvaluator,
+    batch: &DeltaBatch<'_>,
+    threads: usize,
+    cancel: &CancelToken,
+) -> Option<Vec<PlanScore>> {
+    if cancel.is_cancelled() {
+        return None;
+    }
+    let n = batch.len();
+    let threads = resolve_threads(threads).min(n.max(1));
+    if threads <= 1 || n < MIN_CHUNKED_CANDIDATES || !evaluator.supports_chunked_deltas() {
+        return Some(evaluator.eval_deltas(batch));
+    }
+    // ~4 chunks per worker: enough granularity for the atomic-counter
+    // work stealing to even out skewed candidate sizes, coarse enough
+    // that chunk dispatch stays negligible next to the scoring itself.
+    let per = n.div_ceil(threads * 4).max(1);
+    let chunks = n.div_ceil(per);
+    let chunk_scores = parallel_map(threads, chunks, |ci| {
+        if cancel.is_cancelled() {
+            return None;
+        }
+        let lo = ci * per;
+        let hi = (lo + per).min(n);
+        Some(evaluator.eval_delta_range(batch, lo..hi))
+    });
+    let mut out = Vec::with_capacity(n);
+    for scores in chunk_scores {
+        out.extend(scores?);
+    }
+    Some(out)
 }
 
 #[cfg(test)]
@@ -106,5 +218,92 @@ mod tests {
         let score = eval.eval_plan(&sys, &plan);
         assert_eq!(score.makespan, 30.0);
         assert_eq!(score.cost, 5.0);
+    }
+
+    /// A wide batch exercising owned + borrowed rows across many
+    /// candidates (enough to clear `MIN_CHUNKED_CANDIDATES`).
+    fn wide_batch(sys: &System) -> DeltaBatch<'_> {
+        let mut batch = DeltaBatch::new(sys);
+        for k in 0..(MIN_CHUNKED_CANDIDATES * 3 + 7) {
+            let mut c = DeltaCandidate::default();
+            for v in 0..(1 + k % 5) {
+                let it = InstanceTypeId(((k + v) % sys.n_types()) as u16);
+                c.push_synth(
+                    vec![0.5 + (k * 7 + v) as f64 % 11.0, (k % 3) as f64],
+                    sys.perf.row(it),
+                    sys.rate(it),
+                );
+            }
+            batch.push(c);
+        }
+        batch
+    }
+
+    fn two_app_sys() -> System {
+        SystemBuilder::new()
+            .app("a1", vec![1.0, 2.0, 3.0])
+            .app("a2", vec![2.0, 4.0])
+            .instance_type("x", 5.0, vec![10.0, 12.0])
+            .instance_type("y", 9.0, vec![6.0, 7.0])
+            .overhead(30.0)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn chunked_scores_bit_identical_at_any_thread_count() {
+        let sys = two_app_sys();
+        let batch = wide_batch(&sys);
+        let seq = NativeEvaluator.eval_deltas(&batch);
+        for threads in [1usize, 2, 3, 4, 0] {
+            let par =
+                eval_deltas_chunked(&NativeEvaluator, &batch, threads, &CancelToken::default())
+                    .expect("not cancelled");
+            assert_eq!(par.len(), seq.len(), "threads {threads}");
+            for (i, (a, b)) in par.iter().zip(&seq).enumerate() {
+                assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "t{threads} c{i}");
+                assert_eq!(a.cost.to_bits(), b.cost.to_bits(), "t{threads} c{i}");
+            }
+        }
+    }
+
+    #[test]
+    fn default_range_bridge_matches_delta_scores() {
+        // An evaluator that never overrides the range method must still
+        // score ranges consistently with its own eval_deltas.
+        struct BridgeOnly;
+        impl PlanEvaluator for BridgeOnly {
+            fn eval_batch(&self, batch: &EvalBatch) -> Vec<PlanScore> {
+                NativeEvaluator.eval_batch(batch)
+            }
+            fn name(&self) -> &'static str {
+                "bridge-only"
+            }
+        }
+        let sys = two_app_sys();
+        let batch = wide_batch(&sys);
+        assert!(!BridgeOnly.supports_chunked_deltas());
+        let all = BridgeOnly.eval_deltas(&batch);
+        let lo = 3;
+        let hi = batch.len() - 2;
+        let range = BridgeOnly.eval_delta_range(&batch, lo..hi);
+        assert_eq!(range.len(), hi - lo);
+        for (i, s) in range.iter().enumerate() {
+            assert_eq!(s.makespan.to_bits(), all[lo + i].makespan.to_bits());
+            assert_eq!(s.cost.to_bits(), all[lo + i].cost.to_bits());
+        }
+        // Opted-out evaluators are never fanned out — but still score.
+        let via = eval_deltas_chunked(&BridgeOnly, &batch, 4, &CancelToken::default()).unwrap();
+        assert_eq!(via.len(), all.len());
+    }
+
+    #[test]
+    fn cancelled_chunked_scoring_returns_none() {
+        let sys = two_app_sys();
+        let batch = wide_batch(&sys);
+        let cancel = CancelToken::default();
+        cancel.cancel();
+        assert!(eval_deltas_chunked(&NativeEvaluator, &batch, 4, &cancel).is_none());
+        assert!(eval_deltas_chunked(&NativeEvaluator, &batch, 1, &cancel).is_none());
     }
 }

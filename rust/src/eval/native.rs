@@ -1,4 +1,6 @@
-use super::{DeltaBatch, EvalBatch, PlanEvaluator};
+use std::ops::Range;
+
+use super::{DeltaBatch, DeltaCandidate, EvalBatch, PlanEvaluator};
 use crate::model::{billed_cost, PlanScore};
 
 /// Exact pure-rust plan scoring.
@@ -9,6 +11,23 @@ use crate::model::{billed_cost, PlanScore};
 /// and it serves as the fallback when artifacts are not built.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct NativeEvaluator;
+
+/// Score one delta candidate: the per-row `sizes · perf` dot product and
+/// left-to-right cost fold shared verbatim by the whole-batch and
+/// range-scoring entry points, so chunk boundaries can never change a
+/// single bit of a candidate's score.
+#[inline]
+fn score_delta(c: &DeltaCandidate<'_>, batch: &DeltaBatch<'_>) -> PlanScore {
+    let mut makespan = 0.0f64;
+    let mut cost = 0.0f64;
+    for row in &c.rows {
+        let work: f64 = row.sizes.as_slice().iter().zip(row.perf).map(|(s, p)| s * p).sum();
+        let exec = batch.overhead + work;
+        makespan = makespan.max(exec);
+        cost += billed_cost(exec, row.rate, batch.hour, batch.billing);
+    }
+    PlanScore { makespan, cost }
+}
 
 impl PlanEvaluator for NativeEvaluator {
     fn eval_batch(&self, batch: &EvalBatch) -> Vec<PlanScore> {
@@ -41,27 +60,21 @@ impl PlanEvaluator for NativeEvaluator {
     /// `sizes · perf` dot product, same left-to-right cost sum), applied
     /// straight to the borrowed rows — no candidate materialisation.
     fn eval_deltas(&self, batch: &DeltaBatch<'_>) -> Vec<PlanScore> {
-        batch
-            .candidates
-            .iter()
-            .map(|c| {
-                let mut makespan = 0.0f64;
-                let mut cost = 0.0f64;
-                for row in &c.rows {
-                    let work: f64 = row
-                        .sizes
-                        .as_slice()
-                        .iter()
-                        .zip(row.perf)
-                        .map(|(s, p)| s * p)
-                        .sum();
-                    let exec = batch.overhead + work;
-                    makespan = makespan.max(exec);
-                    cost += billed_cost(exec, row.rate, batch.hour, batch.billing);
-                }
-                PlanScore { makespan, cost }
-            })
-            .collect()
+        batch.candidates.iter().map(|c| score_delta(c, batch)).collect()
+    }
+
+    /// Stateless and pure per candidate, so disjoint ranges of one batch
+    /// may be scored concurrently (see
+    /// [`eval_deltas_chunked`](super::eval_deltas_chunked)).
+    fn supports_chunked_deltas(&self) -> bool {
+        true
+    }
+
+    /// Zero-copy range scoring: the same [`score_delta`] fold as
+    /// [`eval_deltas`](PlanEvaluator::eval_deltas), restricted to the
+    /// range — no sub-batch is materialised.
+    fn eval_delta_range(&self, batch: &DeltaBatch<'_>, range: Range<usize>) -> Vec<PlanScore> {
+        batch.candidates[range].iter().map(|c| score_delta(c, batch)).collect()
     }
 
     fn name(&self) -> &'static str {
@@ -129,6 +142,41 @@ mod tests {
         assert_eq!(direct.len(), 1);
         assert_eq!(direct[0].makespan.to_bits(), via_owned[0].makespan.to_bits());
         assert_eq!(direct[0].cost.to_bits(), via_owned[0].cost.to_bits());
+    }
+
+    #[test]
+    fn range_scoring_matches_full_batch_bit_for_bit() {
+        let sys = SystemBuilder::new()
+            .app("a1", (1..=9).map(f64::from).collect())
+            .app("a2", vec![2.5; 6])
+            .instance_type("small", 5.0, vec![20.0, 24.0])
+            .instance_type("cpu", 10.0, vec![10.0, 15.0])
+            .overhead(45.0)
+            .build()
+            .unwrap();
+        let mut batch = DeltaBatch::new(&sys);
+        for k in 0..13usize {
+            let mut c = DeltaCandidate::default();
+            for v in 0..=(k % 3) {
+                let it = crate::model::InstanceTypeId(((k + v) % 2) as u16);
+                c.push_synth(
+                    vec![1.0 + k as f64, v as f64 * 0.25],
+                    sys.perf.row(it),
+                    sys.rate(it),
+                );
+            }
+            batch.push(c);
+        }
+        let full = NativeEvaluator.eval_deltas(&batch);
+        for (lo, hi) in [(0usize, 13usize), (0, 5), (5, 13), (3, 4), (7, 7)] {
+            let part = NativeEvaluator.eval_delta_range(&batch, lo..hi);
+            assert_eq!(part.len(), hi - lo);
+            for (i, s) in part.iter().enumerate() {
+                assert_eq!(s.makespan.to_bits(), full[lo + i].makespan.to_bits());
+                assert_eq!(s.cost.to_bits(), full[lo + i].cost.to_bits());
+            }
+        }
+        assert!(NativeEvaluator.supports_chunked_deltas());
     }
 
     #[test]

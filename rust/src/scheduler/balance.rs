@@ -21,9 +21,22 @@
 //! the `Plan`-level wrapper (load → balance → store); both produce
 //! bit-identical plans to the original materialising implementation —
 //! pinned by the `arena_parity` suite.
+//!
+//! **Threading** ([`balance_arena_threaded`]): each iteration's move
+//! search scans `tasks(makespan VM) × destinations` candidate moves —
+//! the per-iteration hot loop.  The task axis is split into contiguous
+//! ranges scanned concurrently on the [`crate::util::parallel`] pool;
+//! each range reports its own first strict minimum (same scan order as
+//! the sequential loop) and the ranges merge **in range order with a
+//! strict `<`**, which reproduces the sequential rule — *first*
+//! occurrence of the global minimum wins — exactly.  Plans are therefore
+//! bit-identical at any thread count (`parallel_parity` suite); the
+//! size threshold below which the scan stays inline is a pure
+//! performance knob.
 
 use crate::eval::PlanArena;
-use crate::model::{billed_cost, Plan, System, TaskId};
+use crate::model::{billed_cost, InstanceTypeId, Plan, System, TaskId};
+use crate::util::{parallel_map, resolve_threads};
 
 /// Balance tasks between VMs subject to the cost cap.  Returns the number
 /// of task moves applied.
@@ -42,18 +55,34 @@ pub fn balance(sys: &System, plan: &mut Plan, cost_cap: f64) -> usize {
 /// BALANCE on arena state, in place.  Returns the number of task moves
 /// applied.
 ///
+/// Sequential entry point — [`balance_arena_threaded`] with one thread.
+pub fn balance_arena(sys: &System, arena: &mut PlanArena, cost_cap: f64) -> usize {
+    balance_arena_threaded(sys, arena, cost_cap, 1)
+}
+
+/// BALANCE on arena state with an intra-search thread count (0 = auto,
+/// 1 = sequential).  Returns the number of task moves applied.
+///
 /// The per-VM execution times are collected once and maintained
 /// incrementally across loop iterations (a move only changes the source
 /// and receiver VM), so each iteration costs O(tasks·VMs) for the move
-/// search, not an extra O(VMs) re-collection per attempt.
-pub fn balance_arena(sys: &System, arena: &mut PlanArena, cost_cap: f64) -> usize {
+/// search, not an extra O(VMs) re-collection per attempt.  The move
+/// search itself is chunked over the makespan VM's task list when
+/// `threads > 1` — bit-identical to the sequential scan (see module
+/// doc).
+pub fn balance_arena_threaded(
+    sys: &System,
+    arena: &mut PlanArena,
+    cost_cap: f64,
+    threads: usize,
+) -> usize {
     let mut moves = 0usize;
     // Upper bound on useful moves; guards against pathological cycling.
     let budget_moves = arena.n_assigned() * 4 + 16;
     let mut total_cost = arena.cost(sys);
     let mut execs: Vec<f64> = (0..arena.n_vms()).map(|p| arena.exec_at(sys, p)).collect();
     while moves < budget_moves {
-        match best_rebalancing_move(sys, arena, &execs, total_cost, cost_cap) {
+        match best_rebalancing_move(sys, arena, &execs, total_cost, cost_cap, threads) {
             Some((from, to, task, new_cost)) => {
                 arena.move_task(sys, from, to, task);
                 execs[from] = arena.exec_at(sys, from);
@@ -67,6 +96,72 @@ pub fn balance_arena(sys: &System, arena: &mut PlanArena, cost_cap: f64) -> usiz
     moves
 }
 
+/// Below this many tasks on the makespan VM the move search stays
+/// inline: the scan is too cheap to amortise handing chunks to the pool.
+const MIN_CHUNKED_TASKS: usize = 16;
+
+/// Shared read-only context for one move search: everything the per-task
+/// scan needs besides the task itself.
+struct ScanCtx<'a> {
+    sys: &'a System,
+    arena: &'a PlanArena,
+    from: usize,
+    makespan: f64,
+    src_it: InstanceTypeId,
+    src_work: f64,
+    src_len: usize,
+    src_cost: f64,
+    total_cost: f64,
+    cost_cap: f64,
+}
+
+impl ScanCtx<'_> {
+    /// Scan a contiguous slice of the source VM's tasks in order and
+    /// return its *first* strict minimum `(pair_max, to, task,
+    /// new_total)` — the same selection rule the historical sequential
+    /// loop applied to the full task list.
+    fn scan(&self, tasks: &[TaskId]) -> Option<(f64, usize, TaskId, f64)> {
+        let sys = self.sys;
+        let arena = self.arena;
+        let mut best: Option<(f64, usize, TaskId, f64)> = None;
+        for &task in tasks {
+            let t_src = sys.exec_time(self.src_it, task);
+            let src_new_exec = if self.src_len == 1 && sys.overhead == 0.0 {
+                0.0
+            } else {
+                sys.overhead + self.src_work - t_src
+            };
+            for to in 0..arena.n_vms() {
+                if to == self.from {
+                    continue;
+                }
+                let dst_it = arena.it_at(to);
+                let dst_new_exec = sys.overhead + arena.work_at(to) + sys.exec_time(dst_it, task);
+                // Strict improvement on both ends: the pair's new max must
+                // drop below the current makespan.
+                let pair_max = src_new_exec.max(dst_new_exec);
+                if pair_max >= self.makespan - 1e-9 {
+                    continue;
+                }
+                // Cost cap: total billed cost after the move stays bounded.
+                let src_new_cost =
+                    billed_cost(src_new_exec, sys.rate(self.src_it), sys.hour, sys.billing);
+                let dst_new_cost =
+                    billed_cost(dst_new_exec, sys.rate(dst_it), sys.hour, sys.billing);
+                let new_total = self.total_cost + (src_new_cost - self.src_cost)
+                    + (dst_new_cost - arena.cost_at(sys, to));
+                if new_total > self.cost_cap + 1e-9 {
+                    continue;
+                }
+                if best.as_ref().is_none_or(|(b, _, _, _)| pair_max < *b) {
+                    best = Some((pair_max, to, task, new_total));
+                }
+            }
+        }
+        best
+    }
+}
+
 /// Find the single best (source, receiver, task) move off the current
 /// makespan VM, or `None` if no move strictly helps.  `execs` carries the
 /// caller-maintained per-VM execution times.  Returns the plan's total
@@ -77,6 +172,7 @@ fn best_rebalancing_move(
     execs: &[f64],
     total_cost: f64,
     cost_cap: f64,
+    threads: usize,
 ) -> Option<(usize, usize, TaskId, f64)> {
     if arena.n_vms() < 2 {
         return None;
@@ -85,44 +181,43 @@ fn best_rebalancing_move(
     if arena.is_empty_at(from) {
         return None;
     }
-    let src_it = arena.it_at(from);
-    let src_work = arena.work_at(from);
-    let src_len = arena.len_at(from);
-    let src_cost = arena.cost_at(sys, from);
-
-    let mut best: Option<(f64, usize, TaskId, f64)> = None;
-    for &task in arena.tasks_at(from) {
-        let t_src = sys.exec_time(src_it, task);
-        let src_new_exec = if src_len == 1 && sys.overhead == 0.0 {
-            0.0
-        } else {
-            sys.overhead + src_work - t_src
-        };
-        for to in 0..arena.n_vms() {
-            if to == from {
-                continue;
-            }
-            let dst_it = arena.it_at(to);
-            let dst_new_exec = sys.overhead + arena.work_at(to) + sys.exec_time(dst_it, task);
-            // Strict improvement on both ends: the pair's new max must
-            // drop below the current makespan.
-            let pair_max = src_new_exec.max(dst_new_exec);
-            if pair_max >= makespan - 1e-9 {
-                continue;
-            }
-            // Cost cap: total billed cost after the move stays bounded.
-            let src_new_cost = billed_cost(src_new_exec, sys.rate(src_it), sys.hour, sys.billing);
-            let dst_new_cost = billed_cost(dst_new_exec, sys.rate(dst_it), sys.hour, sys.billing);
-            let new_total =
-                total_cost + (src_new_cost - src_cost) + (dst_new_cost - arena.cost_at(sys, to));
-            if new_total > cost_cap + 1e-9 {
-                continue;
-            }
-            if best.as_ref().is_none_or(|(b, _, _, _)| pair_max < *b) {
-                best = Some((pair_max, to, task, new_total));
+    let ctx = ScanCtx {
+        sys,
+        arena,
+        from,
+        makespan,
+        src_it: arena.it_at(from),
+        src_work: arena.work_at(from),
+        src_len: arena.len_at(from),
+        src_cost: arena.cost_at(sys, from),
+        total_cost,
+        cost_cap,
+    };
+    let tasks = arena.tasks_at(from);
+    let n = tasks.len();
+    let threads = resolve_threads(threads).min(n.max(1));
+    let best = if threads <= 1 || n < MIN_CHUNKED_TASKS {
+        ctx.scan(tasks)
+    } else {
+        // Contiguous task ranges, each scanned with the sequential rule;
+        // merged *in range order* with a strict `<` so the earliest
+        // occurrence of the global minimum wins — exactly the sequential
+        // first-minimum outcome at any chunking.
+        let per = n.div_ceil(threads * 4).max(1);
+        let chunks = n.div_ceil(per);
+        let chunk_best = parallel_map(threads, chunks, |ci| {
+            let lo = ci * per;
+            let hi = (lo + per).min(n);
+            ctx.scan(&tasks[lo..hi])
+        });
+        let mut merged: Option<(f64, usize, TaskId, f64)> = None;
+        for cand in chunk_best.into_iter().flatten() {
+            if merged.as_ref().is_none_or(|(b, _, _, _)| cand.0 < *b) {
+                merged = Some(cand);
             }
         }
-    }
+        merged
+    };
     best.map(|(_, to, task, new_cost)| (from, to, task, new_cost))
 }
 
@@ -248,6 +343,41 @@ mod tests {
         p.vms[v1].push_task(&s, TaskId(2));
         p.vms[v1].push_task(&s, TaskId(3));
         assert_eq!(balance(&s, &mut p, f64::INFINITY), 0);
+    }
+
+    #[test]
+    fn threaded_move_search_matches_sequential_bit_for_bit() {
+        // Enough tasks on the makespan VM to cross MIN_CHUNKED_TASKS so
+        // the chunked path actually runs.
+        let s = SystemBuilder::new()
+            .app("a", (1..=30).map(|k| 1.0 + (k % 7) as f64 * 0.5).collect())
+            .app("b", (1..=10).map(|k| 2.0 + (k % 3) as f64).collect())
+            .instance_type("small", 5.0, vec![200.0, 300.0])
+            .instance_type("cpu", 10.0, vec![100.0, 150.0])
+            .overhead(30.0)
+            .build()
+            .unwrap();
+        let mut p = Plan::new();
+        let v0 = p.add_vm(&s, InstanceTypeId(0));
+        p.add_vm(&s, InstanceTypeId(1));
+        p.add_vm(&s, InstanceTypeId(0));
+        for t in s.tasks() {
+            p.vms[v0].push_task(&s, t.id);
+        }
+        let mut seq = PlanArena::from_plan(&s, &p);
+        let seq_moves = balance_arena(&s, &mut seq, f64::INFINITY);
+        assert!(seq_moves > 0);
+        for threads in [2usize, 4, 0] {
+            let mut par = PlanArena::from_plan(&s, &p);
+            let par_moves = balance_arena_threaded(&s, &mut par, f64::INFINITY, threads);
+            assert_eq!(seq_moves, par_moves, "threads={threads}");
+            let (a, b) = (seq.to_plan(), par.to_plan());
+            assert_eq!(a.vms.len(), b.vms.len());
+            for (va, vb) in a.vms.iter().zip(&b.vms) {
+                assert_eq!(va.it, vb.it);
+                assert_eq!(va.tasks(), vb.tasks(), "threads={threads}");
+            }
+        }
     }
 
     #[test]

@@ -19,8 +19,8 @@
 //!   Algorithm 1 could return a plan violating eq. 9);
 //! * every phase is individually toggleable for the ablation benchmarks.
 
-use super::balance::balance_arena;
-use super::replace::replace_arena;
+use super::balance::balance_arena_threaded;
+use super::replace::{replace_arena_opts, ReplaceOpts};
 use super::{add_vms, initial, reduce, split, ReduceMode};
 use crate::eval::{DeltaBatch, NativeEvaluator, PlanArena, PlanEvaluator};
 use crate::model::{Plan, PlanScore, System};
@@ -74,6 +74,13 @@ pub struct Planner<'a> {
     /// Cooperative cancellation, polled once per FIND iteration (and in
     /// REPLACE's candidate enumeration).  The default token never fires.
     pub cancel: CancelToken,
+    /// Intra-solve thread count handed to BALANCE's move search and
+    /// REPLACE's candidate generation/scoring (0 = auto, 1 = sequential;
+    /// default 1).  Plans are bit-identical at any value — pinned by the
+    /// `parallel_parity` suite.  Callers running *multiple* planners
+    /// concurrently (multistart) must keep this at 1; see
+    /// [`crate::util::nested_inner_threads`].
+    pub threads: usize,
 }
 
 impl<'a> Planner<'a> {
@@ -83,6 +90,7 @@ impl<'a> Planner<'a> {
             evaluator: &NativeEvaluator,
             config: PlannerConfig::default(),
             cancel: CancelToken::default(),
+            threads: 1,
         }
     }
 
@@ -92,6 +100,7 @@ impl<'a> Planner<'a> {
             evaluator,
             config: PlannerConfig::default(),
             cancel: CancelToken::default(),
+            threads: 1,
         }
     }
 
@@ -102,6 +111,12 @@ impl<'a> Planner<'a> {
 
     pub fn with_cancel(mut self, cancel: CancelToken) -> Self {
         self.cancel = cancel;
+        self
+    }
+
+    /// Set the intra-solve thread count (0 = auto, 1 = sequential).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
         self
     }
 
@@ -152,7 +167,7 @@ impl<'a> Planner<'a> {
             if cfg.enable_balance {
                 let cap = budget.max(plan.cost(sys));
                 arena.load_plan(&plan);
-                if balance_arena(sys, &mut arena, cap) > 0 {
+                if balance_arena_threaded(sys, &mut arena, cap, self.threads) > 0 {
                     arena.store_plan(&mut plan);
                 }
             }
@@ -165,13 +180,14 @@ impl<'a> Planner<'a> {
             if cfg.enable_replace {
                 let tmp_budget = budget.max(plan.cost(sys));
                 arena.load_plan(&plan);
-                if replace_arena(
+                if replace_arena_opts(
                     sys,
                     &mut arena,
                     tmp_budget,
                     cfg.replace_k,
                     self.evaluator,
                     &self.cancel,
+                    &ReplaceOpts { threads: self.threads, ..Default::default() },
                 ) {
                     arena.store_plan(&mut plan);
                 }

@@ -46,6 +46,27 @@
 //! [`replace_arena`](replace::replace_arena)) are exported for callers
 //! that already hold arena state; the plain [`balance`]/[`replace`]
 //! wrappers keep the `Plan`-level signatures.
+//!
+//! **Parallelism model:** every parallel path in the scheduler is
+//! *deterministic* — same inputs, same plan, bit for bit, at any thread
+//! count (pinned by the `parallel_parity` suite).  Two layers exist and
+//! exactly one fans out at a time:
+//!
+//! * **inter-solve** — independent planner runs: multistart restarts and
+//!   deadline bisection probes over [`crate::util::parallel_map`];
+//! * **intra-solve** — inside one FIND ([`Planner::with_threads`]):
+//!   REPLACE partitions candidate generation across workers and scores
+//!   the merged batch through
+//!   [`eval_deltas_chunked`](crate::eval::eval_deltas_chunked), BALANCE
+//!   chunks its move search over the makespan VM's tasks.
+//!
+//! When an outer layer runs on more than one worker, the inner layer is
+//! forced sequential ([`crate::util::nested_inner_threads`]) so thread
+//! counts never multiply.  REPLACE additionally prunes dominated
+//! candidates with the [`crate::analysis::spread_makespan_floor`] lower
+//! bound before synthesising their LPT rows
+//! ([`replace::ReplaceOpts::prune`]) — threshold-exact, so the winner
+//! (and the plan) is unchanged.
 
 pub mod add;
 pub mod assign;
@@ -64,7 +85,7 @@ pub mod split;
 
 pub use add::add_vms;
 pub use assign::{assign, assign_restricted};
-pub use balance::{balance, balance_arena};
+pub use balance::{balance, balance_arena, balance_arena_threaded};
 pub use baselines::{maximise_parallelism, minimise_individual};
 pub use find::{FindReport, Planner, PlannerConfig};
 pub use initial::initial;
@@ -75,5 +96,7 @@ pub use policy::{
     SolveOutcome, SolveRequest, UnknownPolicy, BUILTIN_POLICIES,
 };
 pub use reduce::{reduce, ReduceMode};
-pub use replace::{replace, replace_arena, replace_cancellable};
+pub use replace::{
+    replace, replace_arena, replace_arena_opts, replace_cancellable, ReplaceOpts, ReplaceProbe,
+};
 pub use split::split;

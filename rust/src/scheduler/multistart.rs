@@ -20,6 +20,14 @@
 //! — and merging worker results in restart order, so the outcome is
 //! bit-identical at any thread count (pinned by the `perf_parity`
 //! integration tests and the unit tests below).
+//!
+//! FIND itself now has intra-solve parallelism
+//! ([`Planner::with_threads`]); only one layer fans out at a time.  When
+//! the restart loop runs on more than one worker, each restart's FIND is
+//! forced sequential via [`crate::util::nested_inner_threads`]; a
+//! sequential restart loop (`threads == 1` or a single start) passes the
+//! thread budget down into FIND instead.  Either way the plans are
+//! bit-identical — the split only decides *where* the threads are spent.
 
 use crate::eval::{DeltaBatch, NativeEvaluator, PlanEvaluator};
 use crate::model::{Plan, System, SystemBuilder};
@@ -118,6 +126,11 @@ pub fn find_multistart(
         .map(|_| perturbed_system(sys, config.perf_jitter, &mut rng))
         .collect();
 
+    // One parallel layer at a time: when the restart fan-out itself runs
+    // on >1 worker, each restart's FIND stays sequential inside; a
+    // sequential fan-out passes the thread budget down instead.
+    let inner_threads = crate::util::nested_inner_threads(config.threads, n_starts);
+
     let reports = crate::util::parallel_map(config.threads, n_starts, |i| {
         if i == 0 {
             // The unperturbed baseline always starts (it is never
@@ -129,6 +142,7 @@ pub fn find_multistart(
                 Planner::with_evaluator(sys, evaluator)
                     .with_config(config.base.clone())
                     .with_cancel(config.cancel.clone())
+                    .with_threads(inner_threads)
                     .find(budget),
             );
         }
@@ -139,6 +153,7 @@ pub fn find_multistart(
         let candidate = Planner::new(belief)
             .with_config(config.base.clone())
             .with_cancel(config.cancel.clone())
+            .with_threads(inner_threads)
             .find(budget);
         // Re-anchor on the true system: transplant the assignment, then
         // let BALANCE repair what the belief distorted.

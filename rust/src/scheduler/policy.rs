@@ -98,10 +98,16 @@ pub struct SolveRequest<'a> {
     /// Residual task set for `"dynamic"` re-planning (`None` or empty =
     /// the full workload).
     pub remaining: Option<Vec<TaskId>>,
-    /// Worker threads for parallelisable policies (`"multistart"`
-    /// restarts and `"deadline"` bisection probes fan out over
-    /// [`crate::util::parallel`]): 1 = sequential (default),
-    /// 0 = auto-detect.  Results are bit-identical at any thread count.
+    /// Worker threads for parallelisable policies: 1 = sequential
+    /// (default), 0 = auto-detect.  `"multistart"` restarts and
+    /// `"deadline"` bisection probes fan out over
+    /// [`crate::util::parallel`]; single-solve policies
+    /// (`"budget-heuristic"`, `"dynamic"`, `"nonclairvoyant"`) spend the
+    /// same knob *inside* FIND — chunked REPLACE candidate
+    /// generation/scoring and BALANCE move search
+    /// ([`Planner::with_threads`]).  Only one layer fans out at a time
+    /// ([`crate::util::nested_inner_threads`]); results are bit-identical
+    /// at any thread count.
     pub threads: usize,
     /// Cooperative cancellation flag.  Policies poll it at their natural
     /// checkpoints (FIND iterations, restarts, bisection rounds) and
@@ -315,6 +321,7 @@ impl Policy for BudgetHeuristic {
         let report = Planner::with_evaluator(sys, req.evaluator())
             .with_config(req.planner.clone())
             .with_cancel(req.cancel.clone())
+            .with_threads(req.threads)
             .find(req.budget);
         SolveOutcome::from_find(self.name(), req.budget, report)
     }
@@ -510,6 +517,7 @@ impl Policy for NonClairvoyant {
         let fleet = Planner::with_evaluator(&belief, req.evaluator())
             .with_config(req.planner.clone())
             .with_cancel(req.cancel.clone())
+            .with_threads(req.threads)
             .find(req.budget);
 
         // Transplant the fleet onto the true system and re-assign the

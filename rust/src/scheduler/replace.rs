@@ -24,10 +24,35 @@
 //! never allocate more than their synthesised rows.  The `perf_parity`
 //! and `arena_parity` integration tests pin this path bit-for-bit
 //! against the historical clone-per-candidate implementation.
+//!
+//! **Bound-based candidate pruning** (on by default, [`ReplaceOpts`]):
+//! before any LPT row is synthesised, each `(victim set, cheaper type)`
+//! pair is tested against a lower bound on the best makespan it could
+//! possibly achieve — the max of the surviving rows' execution times and
+//! [`crate::analysis::bounds::spread_makespan_floor`] over the drained
+//! work.  A candidate whose bound cannot beat the strict-improvement
+//! commit test (`makespan < before - 1e-9`) can never win *or* commit,
+//! so skipping it is threshold-exact: the selected winner is unchanged,
+//! pinned by the `parallel_parity` suite.  [`ReplaceProbe`] counts
+//! enumerated / pruned / synthesised candidates so the win is asserted
+//! (tests) and measured (`planner_micro/parallel` bench), not assumed.
+//!
+//! **Threading** ([`ReplaceOpts::threads`]): candidate *generation*
+//! (surviving-row collection + LPT synthesis) is partitioned across the
+//! [`crate::util::parallel`] pool per candidate and merged back in the
+//! historical enumeration order, and scoring fans out through
+//! [`crate::eval::eval_deltas_chunked`].  Both merges are ordered and
+//! every candidate is a pure function of the (shared, immutable) arena,
+//! so plans are bit-identical at any thread count.  Cancellation
+//! abandons the whole round before anything is committed — the arena is
+//! left untouched, exactly like the sequential path.
 
-use crate::eval::{DeltaBatch, DeltaCandidate, PlanArena, PlanEvaluator};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::analysis::bounds::spread_makespan_floor;
+use crate::eval::{eval_deltas_chunked, DeltaBatch, DeltaCandidate, PlanArena, PlanEvaluator};
 use crate::model::{InstanceTypeId, Plan, System, TaskId};
-use crate::util::CancelToken;
+use crate::util::{parallel_map, CancelToken};
 
 /// Evenly distribute `tasks` over the (same-typed) new VMs: longest
 /// processing time first onto the least-loaded VM.  The paper's Sec. IV-G
@@ -83,6 +108,55 @@ struct Swap {
     n_new: usize,
 }
 
+/// Telemetry counters for REPLACE rounds, shared-nothing per caller (no
+/// process-global state): hand one to [`ReplaceOpts::probe`] and read it
+/// back after the call.  Counters accumulate across rounds; increments
+/// are relaxed atomics so the parallel generation workers can report.
+#[derive(Debug, Default)]
+pub struct ReplaceProbe {
+    /// `(victim set, cheaper type)` pairs enumerated (before pruning).
+    pub enumerated: AtomicU64,
+    /// Pairs skipped by the bound-based pruning — no LPT synthesis, no
+    /// scoring, no allocation beyond the O(apps) bound itself.
+    pub pruned: AtomicU64,
+    /// LPT row syntheses actually performed (one per surviving pair).
+    pub synth_calls: AtomicU64,
+}
+
+impl ReplaceProbe {
+    /// `(enumerated, pruned, synth_calls)` so far.
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (
+            self.enumerated.load(Ordering::Relaxed),
+            self.pruned.load(Ordering::Relaxed),
+            self.synth_calls.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Tuning knobs for [`replace_arena_opts`].  The defaults (sequential,
+/// pruning on, no probe) are what the 6-argument [`replace_arena`]
+/// wrapper uses; any combination produces bit-identical plans.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplaceOpts<'p> {
+    /// Worker threads for candidate generation + chunked scoring
+    /// ([`crate::util::parallel`] contract: `0` = auto, `1` = inline
+    /// sequential).  Callers nested under a parallel outer level must
+    /// pass `1` (see [`crate::util::nested_inner_threads`]).
+    pub threads: usize,
+    /// Bound-based candidate pruning.  Threshold-exact — disabling it
+    /// changes throughput, never the selected winner.
+    pub prune: bool,
+    /// Optional telemetry sink.
+    pub probe: Option<&'p ReplaceProbe>,
+}
+
+impl Default for ReplaceOpts<'_> {
+    fn default() -> Self {
+        Self { threads: 1, prune: true, probe: None }
+    }
+}
+
 /// Try one replacement round; commits at most one swap (the paper
 /// considers "only one instance type at a time").  Returns true if a swap
 /// was applied.
@@ -117,11 +191,8 @@ pub fn replace_cancellable(
     swapped
 }
 
-/// One replacement round on arena state, in place, with a cooperative
-/// cancellation checkpoint in the candidate-enumeration loop: a cancelled
-/// call abandons the round before the (batched) evaluator execution and
-/// leaves the arena untouched, so the caller's stored best plan remains
-/// the result.  Returns true if a swap was applied.
+/// One replacement round on arena state, in place, with the default
+/// options (sequential, pruning on): see [`replace_arena_opts`].
 pub fn replace_arena(
     sys: &System,
     arena: &mut PlanArena,
@@ -130,19 +201,72 @@ pub fn replace_arena(
     evaluator: &dyn PlanEvaluator,
     cancel: &CancelToken,
 ) -> bool {
+    replace_arena_opts(sys, arena, budget, k, evaluator, cancel, &ReplaceOpts::default())
+}
+
+/// One victim set (all victims share a source type) plus everything the
+/// pruning bound and the candidate builders need to know about it.
+struct VictimGroup {
+    victims: Vec<usize>,
+    is_victim: Vec<bool>,
+    /// The tasks a materialised swap would drain, in drain order.
+    drained: Vec<TaskId>,
+    /// Per-app aggregated size of the drained tasks.
+    drained_agg: Vec<f64>,
+    /// Per-app largest single drained task size.
+    drained_max: Vec<f64>,
+    freed: f64,
+    src_rate: f64,
+    /// Max execution time among the rows surviving this victim set.
+    surviving_max_exec: f64,
+}
+
+/// One replacement round on arena state, in place.  Returns true if a
+/// swap was applied.
+///
+/// Three phases, all bit-identical to the historical sequential
+/// implementation at any [`ReplaceOpts::threads`] and with pruning on or
+/// off:
+///
+/// 1. **Summarise** (sequential, cheap): per source type, pick the `k`
+///    longest-running victims and aggregate what draining them frees.
+/// 2. **Enumerate + prune** (sequential, O(types² · apps)): walk the
+///    `(victim set, cheaper type)` pairs in the historical nested-loop
+///    order; with [`ReplaceOpts::prune`], drop pairs whose
+///    [`spread_makespan_floor`]-based lower bound cannot beat the strict
+///    commit test — they could never be selected, so the winner is
+///    unchanged.
+/// 3. **Generate + score** (parallel): synthesise each surviving pair's
+///    LPT rows on the worker pool, merge candidates back in enumeration
+///    order, and score through [`eval_deltas_chunked`].
+///
+/// Cooperative cancellation is polled in every phase (between victim
+/// groups, between generated candidates, between scoring chunks); a
+/// cancelled call abandons the round before anything is committed and
+/// leaves the arena untouched, so the caller's stored best plan remains
+/// the result.
+pub fn replace_arena_opts(
+    sys: &System,
+    arena: &mut PlanArena,
+    budget: f64,
+    k: usize,
+    evaluator: &dyn PlanEvaluator,
+    cancel: &CancelToken,
+    opts: &ReplaceOpts<'_>,
+) -> bool {
     if arena.is_empty() || k == 0 {
         return false;
     }
     let before = arena.score(sys);
     let remaining = (budget - before.cost).max(0.0);
 
-    // Enumerate candidate swaps as deltas against the live arena state.
-    let mut swaps: Vec<Swap> = Vec::new();
-    let mut batch = DeltaBatch::new(sys);
+    // Phase 1: one summary per source type present in the plan.
+    let execs: Vec<f64> = (0..arena.n_vms()).map(|p| arena.exec_at(sys, p)).collect();
     let mut present: Vec<bool> = vec![false; sys.n_types()];
     for pos in 0..arena.n_vms() {
         present[arena.it_at(pos).index()] = true;
     }
+    let mut groups: Vec<VictimGroup> = Vec::new();
     for (src_idx, src_present) in present.iter().enumerate() {
         if cancel.is_cancelled() {
             return false; // abandon the round, arena untouched
@@ -151,17 +275,15 @@ pub fn replace_arena(
             continue;
         }
         let src_it = sys.instance_types[src_idx].id;
-        let src_rate = sys.rate(src_it);
         // k most expensive (longest-running) VMs of the source type.
         let mut victims: Vec<usize> =
             (0..arena.n_vms()).filter(|&p| arena.it_at(p) == src_it).collect();
-        victims.sort_by(|&a, &b| arena.exec_at(sys, b).total_cmp(&arena.exec_at(sys, a)));
+        victims.sort_by(|&a, &b| execs[b].total_cmp(&execs[a]));
         victims.truncate(k);
         if victims.is_empty() {
             continue;
         }
         let freed: f64 = victims.iter().map(|&p| arena.cost_at(sys, p)).sum();
-        // The tasks a materialised swap would drain, in drain order.
         let drained: Vec<TaskId> = victims
             .iter()
             .flat_map(|&p| arena.tasks_at(p).iter().copied())
@@ -170,40 +292,123 @@ pub fn replace_arena(
         for &v in &victims {
             is_victim[v] = true;
         }
+        let mut drained_agg = vec![0.0f64; sys.n_apps()];
+        let mut drained_max = vec![0.0f64; sys.n_apps()];
+        for &t in &drained {
+            let task = sys.task(t);
+            let m = task.app.index();
+            drained_agg[m] += task.size;
+            drained_max[m] = drained_max[m].max(task.size);
+        }
+        let surviving_max_exec = (0..arena.n_vms())
+            .filter(|&p| !is_victim[p] && !arena.is_empty_at(p))
+            .map(|p| execs[p])
+            .fold(0.0f64, f64::max);
+        groups.push(VictimGroup {
+            victims,
+            is_victim,
+            drained,
+            drained_agg,
+            drained_max,
+            freed,
+            src_rate: sys.rate(src_it),
+            surviving_max_exec,
+        });
+    }
 
+    // Phase 2: enumerate (victim set × cheaper type) pairs in the
+    // historical nested-loop order; prune the dominated ones before any
+    // LPT synthesis is paid for them.
+    struct Pair<'g> {
+        group: &'g VictimGroup,
+        cheap: InstanceTypeId,
+        n_new: usize,
+    }
+    let mut pairs: Vec<Pair<'_>> = Vec::new();
+    let mut enumerated = 0u64;
+    let mut pruned = 0u64;
+    for g in &groups {
         for cheap in &sys.instance_types {
-            if cheap.cost_per_hour >= src_rate {
+            if cheap.cost_per_hour >= g.src_rate {
                 continue; // only strictly cheaper replacements
             }
-            let n_new = ((freed + remaining) / cheap.cost_per_hour).floor() as usize;
+            let n_new = ((g.freed + remaining) / cheap.cost_per_hour).floor() as usize;
             if n_new == 0 {
                 continue;
             }
-            // Candidate = surviving VMs (borrowed arena rows, in plan
-            // order; empty survivors score as dropped) + the new VMs'
-            // LPT rows.
-            let mut cand = DeltaCandidate::default();
-            for pos in 0..arena.n_vms() {
-                if is_victim[pos] || arena.is_empty_at(pos) {
+            enumerated += 1;
+            if opts.prune {
+                let lb = g.surviving_max_exec.max(spread_makespan_floor(
+                    sys,
+                    &g.drained_agg,
+                    &g.drained_max,
+                    cheap.id,
+                    n_new,
+                ));
+                // Threshold-exact: the commit test demands
+                // `makespan < before - 1e-9`, so a candidate whose lower
+                // bound already sits at or above that line can never be
+                // selected.  The extra 1e-6 margin keeps the bound
+                // conservative against summation-order float noise
+                // (the bound's fold order differs from the scorer's) —
+                // it only ever *weakens* pruning, never the winner.
+                if lb - 1e-6 >= before.makespan - 1e-9 {
+                    pruned += 1;
                     continue;
                 }
-                let it = arena.it_at(pos);
-                cand.push_row(arena.agg_at(pos), sys.perf.row(it), sys.rate(it));
             }
-            let perf_new = sys.perf.row(cheap.id);
-            for agg in lpt_agg_rows(sys, drained.clone(), cheap.id, n_new) {
-                cand.push_synth(agg, perf_new, cheap.cost_per_hour);
-            }
-            batch.push(cand);
-            swaps.push(Swap { victims: victims.clone(), cheap: cheap.id, n_new });
+            pairs.push(Pair { group: g, cheap: cheap.id, n_new });
         }
     }
-    if swaps.is_empty() {
+    if let Some(p) = opts.probe {
+        p.enumerated.fetch_add(enumerated, Ordering::Relaxed);
+        p.pruned.fetch_add(pruned, Ordering::Relaxed);
+    }
+    if pairs.is_empty() {
         return false;
     }
 
-    // Batch-score all alternatives in one evaluator call.
-    let scores = evaluator.eval_deltas(&batch);
+    // Phase 3: build each surviving pair's candidate — surviving VMs as
+    // borrowed arena rows (in plan order; empty survivors score as
+    // dropped) + the new VMs' synthesised LPT rows — on the worker pool,
+    // merged back in pair order, then chunk-score.  Each candidate is a
+    // pure function of the shared immutable arena, so the batch is
+    // identical to the sequential enumeration at any thread count.
+    let shared_arena: &PlanArena = arena;
+    let built = parallel_map(opts.threads, pairs.len(), |i| {
+        if cancel.is_cancelled() {
+            return None; // this pair abandoned; the round follows suit
+        }
+        let pair = &pairs[i];
+        let g = pair.group;
+        let mut cand = DeltaCandidate::default();
+        for pos in 0..shared_arena.n_vms() {
+            if g.is_victim[pos] || shared_arena.is_empty_at(pos) {
+                continue;
+            }
+            let it = shared_arena.it_at(pos);
+            cand.push_row(shared_arena.agg_at(pos), sys.perf.row(it), sys.rate(it));
+        }
+        if let Some(p) = opts.probe {
+            p.synth_calls.fetch_add(1, Ordering::Relaxed);
+        }
+        let perf_new = sys.perf.row(pair.cheap);
+        let rate_new = sys.rate(pair.cheap);
+        for agg in lpt_agg_rows(sys, g.drained.clone(), pair.cheap, pair.n_new) {
+            cand.push_synth(agg, perf_new, rate_new);
+        }
+        Some(cand)
+    });
+    let mut batch = DeltaBatch::new(sys);
+    for cand in built {
+        match cand {
+            Some(c) => batch.push(c),
+            None => return false, // cancelled mid-generation, arena untouched
+        }
+    }
+    let Some(scores) = eval_deltas_chunked(evaluator, &batch, opts.threads, cancel) else {
+        return false; // cancelled mid-scoring, arena untouched
+    };
     drop(batch); // release the borrows on the arena before mutating it
 
     // Commit the best feasible candidate that strictly reduces exec time.
@@ -220,7 +425,11 @@ pub fn replace_arena(
 
     // Apply the winning swap to the arena in place; freed victim slots
     // recycle into the new VMs via the free list.
-    let Swap { victims, cheap, n_new } = swaps.swap_remove(win);
+    let Swap { victims, cheap, n_new } = {
+        let w = &pairs[win];
+        Swap { victims: w.group.victims.clone(), cheap: w.cheap, n_new: w.n_new }
+    };
+    drop(pairs);
     let mut drained = Vec::new();
     for &v in &victims {
         drained.extend(arena.drain_tasks(v));

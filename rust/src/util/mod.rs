@@ -27,5 +27,5 @@ pub mod rng;
 
 pub use cancel::CancelToken;
 pub use json::Json;
-pub use parallel::{parallel_map, resolve_threads};
+pub use parallel::{nested_inner_threads, parallel_map, resolve_threads};
 pub use rng::Rng;

@@ -27,6 +27,16 @@
 //! Jobs that consume a shared RNG stream must have their per-job state
 //! derived **before** the fan-out (the multistart planner derives each
 //! restart's perturbed belief system up front for exactly this reason).
+//!
+//! **No nested multiplicative spawning.**  Several layers can now fan
+//! out — multistart restarts and deadline-search probes on the outside,
+//! REPLACE/BALANCE candidate scoring on the inside.  Exactly one layer
+//! may be parallel at a time: when an outer fan-out actually runs on
+//! more than one worker, every inner level must run with `threads = 1`,
+//! otherwise `t` restarts × `t` scoring workers would oversubscribe the
+//! machine `t`-fold.  [`nested_inner_threads`] encodes the rule; the
+//! callers (`scheduler::find_multistart`, `scheduler::deadline`) route
+//! their inner planner thread counts through it.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -39,6 +49,27 @@ pub fn resolve_threads(requested: usize) -> usize {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     } else {
         requested
+    }
+}
+
+/// Thread budget for an *inner* parallel level nested under an outer
+/// fan-out of `outer_jobs` jobs on `outer_threads` workers.
+///
+/// When the outer level actually runs in parallel (more than one worker
+/// after resolving auto-detection and capping at the job count), the
+/// inner level is forced to `1` so the two levels never multiply.  When
+/// the outer level degenerates to a sequential loop (one job, or
+/// `threads = 1`), the whole budget passes through to the inner level
+/// unchanged — including `0` (auto-detect).
+///
+/// Results are unaffected either way: every parallel path in this crate
+/// is bit-identical at any thread count, so this helper is purely about
+/// not oversubscribing the machine.
+pub fn nested_inner_threads(outer_threads: usize, outer_jobs: usize) -> usize {
+    if resolve_threads(outer_threads).min(outer_jobs.max(1)) > 1 {
+        1
+    } else {
+        outer_threads
     }
 }
 
@@ -133,6 +164,24 @@ mod tests {
         assert!(resolve_threads(0) >= 1);
         assert_eq!(resolve_threads(1), 1);
         assert_eq!(resolve_threads(6), 6);
+    }
+
+    #[test]
+    fn nested_inner_threads_forces_one_under_a_parallel_outer() {
+        // A genuinely parallel outer level always pins the inner to 1.
+        assert_eq!(nested_inner_threads(2, 8), 1);
+        assert_eq!(nested_inner_threads(4, 2), 1);
+        assert_eq!(nested_inner_threads(16, 16), 1);
+        // Auto-detect counts as parallel whenever the machine has >1 core
+        // and there is >1 job; with 1 job it degenerates to sequential.
+        if resolve_threads(0) > 1 {
+            assert_eq!(nested_inner_threads(0, 8), 1);
+        }
+        assert_eq!(nested_inner_threads(0, 1), 0);
+        // A sequential outer level passes the budget through unchanged.
+        assert_eq!(nested_inner_threads(1, 8), 1);
+        assert_eq!(nested_inner_threads(4, 1), 4);
+        assert_eq!(nested_inner_threads(4, 0), 4);
     }
 
     #[test]

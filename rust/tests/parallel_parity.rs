@@ -1,0 +1,402 @@
+//! Parity pins for deterministic intra-solve parallelism: REPLACE,
+//! BALANCE, FIND and multistart must produce **bit-for-bit identical**
+//! plans at any thread count (`1`/`2`/`4`/auto) and with REPLACE's
+//! bound-based candidate pruning on or off — threading and pruning are
+//! pure throughput knobs, never behaviour knobs.
+//!
+//! Also pinned here:
+//!
+//! * the [`ReplaceProbe`] accounting contract — with pruning on, REPLACE
+//!   performs *no* LPT synthesis for dominated candidates
+//!   (`synth == enumerated - pruned`); with pruning off it synthesises
+//!   every enumerated pair;
+//! * cooperative cancellation — a token fired mid-chunk stops the
+//!   parallel scorer without deadlock and discards all partial work, and
+//!   a cancelled REPLACE round leaves the arena untouched.
+
+// Plan copies below are test scaffolding — boundary sites for the
+// zero-clone lint.
+#![allow(clippy::disallowed_methods)]
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use botsched::eval::{
+    eval_deltas_chunked, DeltaBatch, DeltaCandidate, EvalBatch, NativeEvaluator, PlanArena,
+    PlanEvaluator,
+};
+use botsched::model::{InstanceTypeId, Plan, PlanScore, System, SystemBuilder, TaskId};
+use botsched::scheduler::{
+    balance_arena, balance_arena_threaded, find_multistart, initial, reduce, replace_arena,
+    replace_arena_opts, MultiStartConfig, Planner, ReduceMode, ReplaceOpts, ReplaceProbe,
+};
+use botsched::util::CancelToken;
+use botsched::workload::{build_scenario, WorkloadGenerator, SCENARIOS};
+
+// ---------------------------------------------------------------------------
+// Assertions (same contract as the `arena_parity` suite).
+
+fn assert_plans_bit_identical(context: &str, a: &Plan, b: &Plan) {
+    assert_eq!(a.n_vms(), b.n_vms(), "{context}: VM count differs");
+    for (i, (x, y)) in a.vms.iter().zip(&b.vms).enumerate() {
+        assert_eq!(x.it, y.it, "{context}: vm{i} instance type differs");
+        assert_eq!(x.tasks(), y.tasks(), "{context}: vm{i} task list differs");
+        assert_eq!(
+            x.work().to_bits(),
+            y.work().to_bits(),
+            "{context}: vm{i} cached work bits differ"
+        );
+        for (m, (s, t)) in x.agg_sizes().iter().zip(y.agg_sizes()).enumerate() {
+            assert_eq!(s.to_bits(), t.to_bits(), "{context}: vm{i} agg[{m}] bits differ");
+        }
+    }
+}
+
+fn assert_scores_bit_identical(context: &str, a: PlanScore, b: PlanScore) {
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{context}: makespan bits differ");
+    assert_eq!(a.cost.to_bits(), b.cost.to_bits(), "{context}: cost bits differ");
+}
+
+/// Tight / paper-like / loose budgets for any scenario.
+fn budgets_for(sys: &System) -> Vec<f64> {
+    [0.8, 1.2, 2.0].iter().map(|f| WorkloadGenerator::feasible_budget(sys, *f)).collect()
+}
+
+/// The plan REPLACE rounds start from in these pins: INITIAL + local
+/// REDUCE, the same pre-REPLACE state the `arena_parity` suite uses.
+fn replace_base(sys: &System, budget: f64) -> Plan {
+    let mut p = initial(sys, budget);
+    reduce(sys, &mut p, budget, ReduceMode::Local);
+    p.drop_empty_vms();
+    p
+}
+
+// ---------------------------------------------------------------------------
+// REPLACE: threads x pruning grid.
+
+#[test]
+fn replace_bit_identical_across_threads_and_pruning() {
+    for s in SCENARIOS {
+        let sys = build_scenario(s.name).unwrap();
+        for &b in &budgets_for(&sys) {
+            for k in [1usize, 2] {
+                let base = replace_base(&sys, b);
+                let (ref_swapped, ref_plan) = {
+                    let mut arena = PlanArena::from_plan(&sys, &base);
+                    let swapped = replace_arena(
+                        &sys,
+                        &mut arena,
+                        b,
+                        k,
+                        &NativeEvaluator,
+                        &CancelToken::default(),
+                    );
+                    (swapped, arena.to_plan())
+                };
+                for threads in [1usize, 2, 4] {
+                    for prune in [true, false] {
+                        let ctx = format!(
+                            "{} budget {b} k {k} threads {threads} prune {prune}",
+                            s.name
+                        );
+                        let mut arena = PlanArena::from_plan(&sys, &base);
+                        let swapped = replace_arena_opts(
+                            &sys,
+                            &mut arena,
+                            b,
+                            k,
+                            &NativeEvaluator,
+                            &CancelToken::default(),
+                            &ReplaceOpts { threads, prune, probe: None },
+                        );
+                        assert_eq!(swapped, ref_swapped, "{ctx}: commit decision differs");
+                        assert_plans_bit_identical(&ctx, &ref_plan, &arena.to_plan());
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn replace_probe_accounting_holds_across_scenarios() {
+    // With pruning on, no LPT synthesis happens for dominated pairs
+    // (synth == enumerated - pruned); with pruning off, every enumerated
+    // pair is synthesised and nothing is pruned.  Enumeration itself is
+    // independent of the pruning flag.
+    for s in SCENARIOS {
+        let sys = build_scenario(s.name).unwrap();
+        let b = WorkloadGenerator::feasible_budget(&sys, 1.2);
+        let base = replace_base(&sys, b);
+        let ctx = format!("{} budget {b}", s.name);
+
+        let probe_on = ReplaceProbe::default();
+        let mut arena = PlanArena::from_plan(&sys, &base);
+        replace_arena_opts(
+            &sys,
+            &mut arena,
+            b,
+            1,
+            &NativeEvaluator,
+            &CancelToken::default(),
+            &ReplaceOpts { threads: 2, prune: true, probe: Some(&probe_on) },
+        );
+        let (enum_on, pruned_on, synth_on) = probe_on.snapshot();
+        assert_eq!(synth_on, enum_on - pruned_on, "{ctx}: pruned pairs must not synthesise");
+
+        let probe_off = ReplaceProbe::default();
+        let mut arena = PlanArena::from_plan(&sys, &base);
+        replace_arena_opts(
+            &sys,
+            &mut arena,
+            b,
+            1,
+            &NativeEvaluator,
+            &CancelToken::default(),
+            &ReplaceOpts { threads: 2, prune: false, probe: Some(&probe_off) },
+        );
+        let (enum_off, pruned_off, synth_off) = probe_off.snapshot();
+        assert_eq!(enum_on, enum_off, "{ctx}: enumeration must not depend on pruning");
+        assert_eq!(pruned_off, 0, "{ctx}: pruning off must prune nothing");
+        assert_eq!(synth_off, enum_off, "{ctx}: pruning off synthesises every pair");
+    }
+}
+
+#[test]
+fn pruning_skips_dominated_candidates_and_preserves_the_winner() {
+    // The paper's Sec. IV-G example plus a decoy type that is cheap but
+    // hopeless: its spread floor (10 tasks x 1000 s over 4 VMs = 2500 s)
+    // can never beat the incumbent 80 s, so pruning must drop exactly
+    // that pair — and only it — before any LPT synthesis.
+    let sys = SystemBuilder::new()
+        .app("a", vec![1.0; 10])
+        .instance_type("exp", 2.0, vec![8.0])
+        .instance_type("cheap", 1.0, vec![10.0])
+        .instance_type("slowcheap", 0.5, vec![1000.0])
+        .build()
+        .unwrap();
+    let mut plan = Plan::new();
+    let v = plan.add_vm(&sys, InstanceTypeId(0));
+    for t in 0..10 {
+        plan.vms[v].push_task(&sys, TaskId(t));
+    }
+    assert_eq!(plan.score(&sys).makespan, 80.0);
+
+    let run = |prune: bool, probe: &ReplaceProbe| -> (bool, Plan) {
+        let mut arena = PlanArena::from_plan(&sys, &plan);
+        let swapped = replace_arena_opts(
+            &sys,
+            &mut arena,
+            2.0,
+            1,
+            &NativeEvaluator,
+            &CancelToken::default(),
+            &ReplaceOpts { threads: 1, prune, probe: Some(probe) },
+        );
+        (swapped, arena.to_plan())
+    };
+
+    let probe_on = ReplaceProbe::default();
+    let (swapped_on, plan_on) = run(true, &probe_on);
+    assert!(swapped_on);
+    assert_eq!(probe_on.snapshot(), (2, 1, 1), "exp->cheap kept, exp->slowcheap pruned");
+
+    let probe_off = ReplaceProbe::default();
+    let (swapped_off, plan_off) = run(false, &probe_off);
+    assert!(swapped_off);
+    assert_eq!(probe_off.snapshot(), (2, 0, 2));
+
+    assert_plans_bit_identical("pruned vs unpruned winner", &plan_off, &plan_on);
+    assert_eq!(plan_on.score(&sys).makespan, 50.0, "the Sec. IV-G swap must still win");
+}
+
+// ---------------------------------------------------------------------------
+// BALANCE: chunked move search.
+
+#[test]
+fn balance_bit_identical_across_threads() {
+    for s in SCENARIOS {
+        let sys = build_scenario(s.name).unwrap();
+        // Worst-case imbalance: every task on one VM, several receivers
+        // of mixed types — long move-search scans each iteration.
+        let mut plan = Plan::new();
+        let v0 = plan.add_vm(&sys, InstanceTypeId(0));
+        for ti in 0..sys.n_types().min(4) {
+            plan.add_vm(&sys, InstanceTypeId(ti as u16));
+        }
+        for t in sys.tasks() {
+            plan.vms[v0].push_task(&sys, t.id);
+        }
+        for cap in [plan.cost(&sys) * 1.5, f64::INFINITY] {
+            let mut seq = PlanArena::from_plan(&sys, &plan);
+            let seq_moves = balance_arena(&sys, &mut seq, cap);
+            let seq_plan = seq.to_plan();
+            for threads in [2usize, 4, 0] {
+                let ctx = format!("{} cap {cap} threads {threads}", s.name);
+                let mut par = PlanArena::from_plan(&sys, &plan);
+                let par_moves = balance_arena_threaded(&sys, &mut par, cap, threads);
+                assert_eq!(seq_moves, par_moves, "{ctx}: move count differs");
+                assert_plans_bit_identical(&ctx, &seq_plan, &par.to_plan());
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FIND and multistart: end-to-end.
+
+#[test]
+fn find_bit_identical_across_threads() {
+    for s in SCENARIOS {
+        let sys = build_scenario(s.name).unwrap();
+        for &b in &budgets_for(&sys) {
+            let reference = Planner::new(&sys).find(b);
+            for threads in [2usize, 4] {
+                let ctx = format!("{} budget {b} threads {threads}", s.name);
+                let got = Planner::new(&sys).with_threads(threads).find(b);
+                assert_eq!(reference.iterations, got.iterations, "{ctx}: iteration count");
+                assert_eq!(reference.feasible, got.feasible, "{ctx}: feasibility");
+                assert_scores_bit_identical(&ctx, reference.score, got.score);
+                assert_plans_bit_identical(&ctx, &reference.plan, &got.plan);
+            }
+        }
+    }
+}
+
+#[test]
+fn multistart_bit_identical_across_threads_with_nested_discipline() {
+    // Multi-start now passes its thread budget *into* FIND when the
+    // restart loop is sequential and forces inner threads to 1 when it
+    // is parallel — either way the outcome must not move a bit.
+    for name in ["paper", "uniform-small"] {
+        let sys = build_scenario(name).unwrap();
+        let budget = WorkloadGenerator::feasible_budget(&sys, 1.3);
+        let base = MultiStartConfig { n_starts: 4, seed: 11, ..Default::default() };
+        let one = find_multistart(
+            &sys,
+            budget,
+            &MultiStartConfig { threads: 1, ..base.clone() },
+            &NativeEvaluator,
+        );
+        for threads in [2usize, 4] {
+            let ctx = format!("{name} threads {threads}");
+            let got = find_multistart(
+                &sys,
+                budget,
+                &MultiStartConfig { threads, ..base.clone() },
+                &NativeEvaluator,
+            );
+            assert_eq!(one.feasible, got.feasible, "{ctx}");
+            assert_eq!(one.iterations, got.iterations, "{ctx}");
+            assert_scores_bit_identical(&ctx, one.score, got.score);
+            assert_plans_bit_identical(&ctx, &one.plan, &got.plan);
+        }
+        // Single start + many threads: the fan-out is sequential, so the
+        // whole thread budget flows into FIND — still bit-identical.
+        let single_cfg = MultiStartConfig { n_starts: 1, ..base.clone() };
+        let single_seq = find_multistart(&sys, budget, &single_cfg, &NativeEvaluator);
+        let single_par = find_multistart(
+            &sys,
+            budget,
+            &MultiStartConfig { threads: 4, ..single_cfg },
+            &NativeEvaluator,
+        );
+        let ctx = format!("{name} single-start");
+        assert_scores_bit_identical(&ctx, single_seq.score, single_par.score);
+        assert_plans_bit_identical(&ctx, &single_seq.plan, &single_par.plan);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cancellation.
+
+/// Scores correctly but fires the cancellation token on every range call
+/// — models a caller cancelling while the chunked scorer is mid-flight.
+struct CancelMidway {
+    token: CancelToken,
+    range_calls: AtomicUsize,
+}
+
+impl PlanEvaluator for CancelMidway {
+    fn eval_batch(&self, batch: &EvalBatch) -> Vec<PlanScore> {
+        NativeEvaluator.eval_batch(batch)
+    }
+
+    fn supports_chunked_deltas(&self) -> bool {
+        true
+    }
+
+    fn eval_delta_range(&self, batch: &DeltaBatch<'_>, range: Range<usize>) -> Vec<PlanScore> {
+        self.range_calls.fetch_add(1, Ordering::SeqCst);
+        self.token.cancel();
+        NativeEvaluator.eval_delta_range(batch, range)
+    }
+
+    fn name(&self) -> &'static str {
+        "cancel-midway"
+    }
+}
+
+#[test]
+fn cancellation_mid_chunk_stops_parallel_scoring_without_deadlock() {
+    let sys = build_scenario("uniform-small").unwrap();
+    let it = InstanceTypeId(0);
+    let mut batch = DeltaBatch::new(&sys);
+    for k in 0..128usize {
+        let mut c = DeltaCandidate::default();
+        c.push_synth(
+            (0..sys.n_apps()).map(|m| 1.0 + (k * (m + 1)) as f64 * 0.5).collect(),
+            sys.perf.row(it),
+            sys.rate(it),
+        );
+        batch.push(c);
+    }
+    let token = CancelToken::new();
+    let eval = CancelMidway { token: token.clone(), range_calls: AtomicUsize::new(0) };
+
+    // Completing at all proves the pool drained (no deadlock); `None`
+    // proves the partial scores were discarded.
+    let got = eval_deltas_chunked(&eval, &batch, 4, &token);
+    assert!(got.is_none(), "a cancelled chunked scoring must return None");
+    let calls = eval.range_calls.load(Ordering::SeqCst);
+    assert!(calls >= 1, "at least one chunk must have started");
+    // Each worker's first range call fires the token, so no worker ever
+    // passes its *second* pre-chunk cancellation poll: with 4 workers
+    // over 16 chunks most of the batch must have been skipped.
+    assert!(calls <= 4, "cancellation must stop remaining chunks, saw {calls} range calls");
+}
+
+#[test]
+fn cancelled_replace_round_leaves_the_arena_untouched() {
+    let sys = SystemBuilder::new()
+        .app("a", vec![1.0; 10])
+        .instance_type("exp", 2.0, vec![8.0])
+        .instance_type("cheap", 1.0, vec![10.0])
+        .build()
+        .unwrap();
+    let mut plan = Plan::new();
+    let v = plan.add_vm(&sys, InstanceTypeId(0));
+    for t in 0..10 {
+        plan.vms[v].push_task(&sys, TaskId(t));
+    }
+    let token = CancelToken::new();
+    token.cancel();
+    for threads in [1usize, 2, 4] {
+        let mut arena = PlanArena::from_plan(&sys, &plan);
+        let swapped = replace_arena_opts(
+            &sys,
+            &mut arena,
+            2.0,
+            1,
+            &NativeEvaluator,
+            &token,
+            &ReplaceOpts { threads, ..Default::default() },
+        );
+        assert!(!swapped, "threads {threads}: cancelled round must not commit");
+        assert_plans_bit_identical(
+            &format!("cancelled replace threads {threads}"),
+            &plan,
+            &arena.to_plan(),
+        );
+    }
+}
