@@ -11,7 +11,10 @@
 //! tests), so the speedup is pure wall-clock.  The `scaling/serve`
 //! group drives connect–request–disconnect churn through a live
 //! coordinator while hundreds of idle spectator connections sit on the
-//! poll set, covering the non-blocking connection layer.
+//! poll set, covering the non-blocking connection layer.  The
+//! `scaling/loadgen` group replays a pre-generated open-loop traffic
+//! tape (`botsched::loadgen`) against a live coordinator — end-to-end
+//! request throughput through the pipelined client path.
 //!
 //! Set `BENCH_SMOKE=1` to shrink every workload to a seconds-long CI
 //! smoke run; set `BENCH_JSON=1` to snapshot `BENCH_<group>.json` files
@@ -23,6 +26,7 @@ use std::time::Duration;
 use botsched::benchkit::Bench;
 use botsched::cloudsim::{SimConfig, Simulator};
 use botsched::coordinator::{Client, Coordinator, CoordinatorConfig, JobEngine, Metrics};
+use botsched::loadgen::{self, ArrivalProcess, ExecOptions, LoadConfig, MixSpec};
 use botsched::scheduler::{PolicyRegistry, SolveRequest};
 use botsched::util::Json;
 use botsched::workload::{SizeDistribution, WorkloadGenerator, WorkloadSpec};
@@ -173,6 +177,46 @@ fn main() {
     );
     bench.report();
     drop(idle);
+    coord.shutdown();
+
+    // ---- open-loop load generation ------------------------------------------
+    // The full loadgen path: a deterministic pre-generated tape played
+    // through 4 pipelined clients against a live coordinator.  Tape
+    // generation is outside the timed region — this measures serving
+    // throughput, not RNG cost.
+    let coord = Coordinator::start(CoordinatorConfig {
+        addr: "127.0.0.1:0".into(),
+        use_xla: false,
+        batching: false,
+        shards: 2,
+        conn_workers: 2,
+        ..CoordinatorConfig::default()
+    })
+    .expect("loadgen bench coordinator starts");
+    let addr = coord.local_addr;
+    let load_rates: &[f64] = if smoke { &[40.0] } else { &[100.0, 300.0] };
+    let load_duration = if smoke { 0.3 } else { 1.0 };
+    let mut bench = Bench::new("scaling/loadgen")
+        .with_budget(Duration::from_millis(100), Duration::from_millis(if smoke { 400 } else { 2500 }));
+    for &rate in load_rates {
+        let cfg = LoadConfig {
+            rate,
+            duration_s: load_duration,
+            clients: 4,
+            arrival: ArrivalProcess::Poisson,
+            mix: MixSpec::plan_only("uniform-small").expect("builtin scenario"),
+            seed: 7,
+        };
+        let trace = loadgen::generate(&cfg).expect("tape generates");
+        let n = trace.entries.len() as f64;
+        let opts = ExecOptions::default();
+        bench.run_with_items(&format!("execute/{rate}rps/4clients"), Some(n), || {
+            let report = loadgen::execute(&addr, &trace, &opts).expect("load run");
+            assert_eq!(report.sent, n as u64, "open loop must send the whole tape");
+            std::hint::black_box(report);
+        });
+    }
+    bench.report();
     coord.shutdown();
 
     // ---- simulator event throughput ----------------------------------------

@@ -1671,6 +1671,31 @@ impl StatsResponse {
             },
         })
     }
+
+    /// A counter from the metrics block (0 when absent — the block's
+    /// schema is owned by [`super::Metrics::snapshot`], so a missing key
+    /// means an older server, not an error).
+    pub fn counter(&self, key: &str) -> u64 {
+        self.stats.get(key).and_then(Json::as_u64).unwrap_or(0)
+    }
+
+    /// Jobs the server shed past their binding deadline.  SLO reports
+    /// reconcile this against client-observed `deadline_exceeded`
+    /// replies (the server also counts sweeper/queue sheds that never
+    /// reach a synchronous caller).
+    pub fn jobs_deadline_exceeded(&self) -> u64 {
+        self.counter("jobs_deadline_exceeded")
+    }
+
+    /// Jobs rejected with `busy` at admission.
+    pub fn jobs_rejected(&self) -> u64 {
+        self.counter("jobs_rejected")
+    }
+
+    /// A queue-wait percentile in microseconds (e.g. `"p50"`, `"p95"`).
+    pub fn queue_wait_us(&self, pct: &str) -> f64 {
+        self.stats.get(&format!("queue_wait_us_{pct}")).and_then(Json::as_f64).unwrap_or(0.0)
+    }
 }
 
 /// A decoded coordinator reply.
@@ -2123,6 +2148,22 @@ mod tests {
         assert_eq!(e.code, ErrorCode::UnknownOp);
         assert!(e.message.contains("list_policies"), "{}", e.message);
         assert!(e.message.contains("describe"), "{}", e.message);
+    }
+
+    #[test]
+    fn stats_response_lifts_shed_counters() {
+        let j = Json::parse(
+            r#"{"stats":{"jobs_deadline_exceeded":3,"jobs_rejected":7,"queue_wait_us_p50":250},
+                "engine":{"shards":1,"queued":0,"max_backlog":4,"shard_stats":[]}}"#,
+        )
+        .unwrap();
+        let s = StatsResponse::decode(&j).unwrap();
+        assert_eq!(s.jobs_deadline_exceeded(), 3);
+        assert_eq!(s.jobs_rejected(), 7);
+        assert_eq!(s.queue_wait_us("p50"), 250.0);
+        // Absent keys read as zero, not as an error.
+        assert_eq!(s.queue_wait_us("p95"), 0.0);
+        assert_eq!(s.counter("no_such_counter"), 0);
     }
 
     #[test]

@@ -11,7 +11,10 @@
 //! Pipelining: the server executes at most one request per connection at
 //! a time but buffers up to 64 pending lines, so [`Client::send`] /
 //! [`Client::recv`] let a caller keep several requests in flight on one
-//! socket; responses come back in request order.  The convenience
+//! socket; responses come back in request order, and
+//! [`Client::recv_within`] drains them under a bounded wait without
+//! poisoning the connection (what the open-loop [`crate::loadgen`]
+//! driver uses between scheduled sends).  The convenience
 //! methods ([`Client::plan`], [`Client::sweep`], …) are
 //! `send`-then-`recv` and therefore must not be interleaved with
 //! outstanding pipelined sends — [`Client::call`] enforces that.
@@ -302,6 +305,12 @@ pub struct Client {
     reader: BufReader<TcpStream>,
     /// Requests sent but not yet answered (pipelining depth).
     pending: VecDeque<&'static str>,
+    /// Partially read reply line carried across [`Client::recv_within`]
+    /// timeouts.  A bounded wait can expire with half a line consumed
+    /// from the socket; the fragment stays here so the next receive
+    /// resumes the same line instead of misframing (or poisoning) the
+    /// connection.
+    partial: String,
     /// Set when a read failed mid-reply (e.g. a `read_timeout` fired
     /// with half a line consumed): the stream position is unknowable, so
     /// every further use would misframe replies.  Poisoned clients error
@@ -334,6 +343,7 @@ impl Client {
             stream,
             reader,
             pending: VecDeque::new(),
+            partial: String::new(),
             poisoned: false,
             // xorshift64 has a fixed point at 0; force a nonzero state.
             rng: seed | 1,
@@ -363,6 +373,7 @@ impl Client {
         self.stream = stream;
         self.reader = reader;
         self.pending.clear();
+        self.partial.clear();
         self.poisoned = false;
         self.retry_stats.reconnects += 1;
         Ok(())
@@ -420,8 +431,9 @@ impl Client {
     /// be trusted and every further call errors — reconnect instead.
     pub fn recv(&mut self) -> Result<Json, ClientError> {
         self.check_poisoned()?;
-        let mut line = String::new();
-        let n = match self.reader.read_line(&mut line) {
+        // Resume into the shared partial-line buffer: an earlier
+        // `recv_within` may have consumed part of this reply already.
+        let n = match self.reader.read_line(&mut self.partial) {
             Ok(n) => n,
             Err(e) => {
                 self.poisoned = true;
@@ -429,14 +441,73 @@ impl Client {
             }
         };
         self.pending.pop_front();
-        if n == 0 {
+        if n == 0 && self.partial.is_empty() {
             self.poisoned = true;
             return Err(ClientError::Io(std::io::Error::new(
                 std::io::ErrorKind::UnexpectedEof,
                 "server closed the connection",
             )));
         }
-        let body = Json::parse(line.trim())
+        let line = std::mem::take(&mut self.partial);
+        Self::classify(line.trim())
+    }
+
+    /// Wait up to `wait` for the next pipelined reply.  `Ok(None)` means
+    /// no complete reply arrived in time — unlike [`Client::recv`] under
+    /// `read_timeout`, this does **not** poison the connection: any
+    /// half-read line is kept in an internal buffer and the next receive
+    /// resumes it.  This is what lets an open-loop load generator drain
+    /// replies opportunistically between scheduled sends.
+    ///
+    /// Returns `Ok(None)` immediately when nothing is pending.
+    pub fn recv_within(&mut self, wait: Duration) -> Result<Option<Json>, ClientError> {
+        self.check_poisoned()?;
+        if self.pending.is_empty() {
+            return Ok(None);
+        }
+        // A zero timeout means "blocking" to the OS; clamp up instead.
+        let bounded = wait.max(Duration::from_millis(1));
+        self.reader.get_ref().set_read_timeout(Some(bounded))?;
+        let res = self.reader.read_line(&mut self.partial);
+        // Restore the configured timeout before interpreting the result;
+        // failing to restore would make later `recv` calls time out (and
+        // poison) unexpectedly, so treat that as fatal for this socket.
+        if let Err(e) = self.reader.get_ref().set_read_timeout(self.opts.read_timeout) {
+            self.poisoned = true;
+            return Err(ClientError::Io(e));
+        }
+        let n = match res {
+            Ok(n) => n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // Expired quietly — the fragment (if any) stays buffered.
+                return Ok(None);
+            }
+            Err(e) => {
+                self.poisoned = true;
+                return Err(ClientError::Io(e));
+            }
+        };
+        self.pending.pop_front();
+        if n == 0 && self.partial.is_empty() {
+            self.poisoned = true;
+            return Err(ClientError::Io(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "server closed the connection",
+            )));
+        }
+        let line = std::mem::take(&mut self.partial);
+        Self::classify(line.trim()).map(Some)
+    }
+
+    /// Parse and classify one reply line: `busy` → [`ClientError::Busy`],
+    /// other structured errors → [`ClientError::Api`].
+    fn classify(line: &str) -> Result<Json, ClientError> {
+        let body = Json::parse(line)
             .map_err(|e| ClientError::Protocol(format!("bad reply json: {e}")))?;
         if let Some(err) = ApiError::decode(&body) {
             if let Some(busy) = err.busy_info() {

@@ -49,6 +49,12 @@
 //!   crash-recoverable job journal (append-only, checksummed,
 //!   compacting) and the bounded content-addressed solve cache behind
 //!   `--journal` / `--cache-capacity`.
+//! * [`loadgen`] — the open-loop load generator: seeded arrival
+//!   processes and request mixes driving a live coordinator through
+//!   concurrent pipelined clients, with record-and-replay traffic tapes
+//!   ([`workload::LoadTrace`]) and SLO reports (throughput vs offered
+//!   load, latency percentiles, served/busy/deadline-exceeded
+//!   breakdowns, saturation-knee sweeps) — `botsched loadgen`.
 //! * [`analysis`] — lower bounds, statistics and the policy-generic
 //!   sweep/figure printers used by the benchmark harness.
 
@@ -58,6 +64,7 @@ pub mod cloudsim;
 pub mod config;
 pub mod coordinator;
 pub mod eval;
+pub mod loadgen;
 pub mod model;
 pub mod persist;
 pub mod runtime;

@@ -1,0 +1,310 @@
+//! Request mixes: what the load generator actually sends.
+//!
+//! A [`MixSpec`] draws each request from weighted distributions over the
+//! named [`crate::workload::scenario`] presets, scheduling policies,
+//! queue priorities and binding deadlines.  Two request shapes are
+//! produced (both existing wire ops — the generator adds no protocol
+//! surface):
+//!
+//! * **`plan`** — the inline fast path: solved on the connection worker
+//!   pool, exercising the solve cache and per-connection pipelining.
+//! * **`campaign`** — the engine-bound path: queued on the sharded
+//!   [`crate::coordinator::JobEngine`] with queue [`Placement`]
+//!   (priority 0..=9 and an optional binding `deadline_ms`), which is
+//!   what produces `busy` sheds and `deadline_exceeded` replies under
+//!   saturation.  [`MixSpec::engine_frac`] sets the blend.
+//!
+//! Budgets are drawn relative to each scenario's feasibility floor
+//! (`WorkloadGenerator::feasible_budget`), so "tight" and "relaxed"
+//! budget regimes mean the same thing across scenarios of very
+//! different sizes — the paper's framing of budget pressure.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+use crate::coordinator::api::{self, Placement};
+use crate::scheduler::PolicyRegistry;
+use crate::util::Rng;
+use crate::workload::{build_scenario, scenario_names, WorkloadGenerator};
+
+/// A weighted choice distribution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Weighted<T> {
+    items: Vec<(T, f64)>,
+    total: f64,
+}
+
+impl<T> Weighted<T> {
+    /// Build from `(item, weight)` pairs; weights must be positive.
+    pub fn new(items: Vec<(T, f64)>) -> Result<Weighted<T>> {
+        if items.is_empty() {
+            bail!("weighted choice needs at least one item");
+        }
+        if !items.iter().all(|(_, w)| *w > 0.0 && w.is_finite()) {
+            bail!("weighted choice weights must be > 0");
+        }
+        let total = items.iter().map(|(_, w)| w).sum();
+        Ok(Weighted { items, total })
+    }
+
+    /// A single certain outcome.
+    pub fn single(item: T) -> Weighted<T> {
+        Weighted { items: vec![(item, 1.0)], total: 1.0 }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> &T {
+        let mut x = rng.f64() * self.total;
+        for (item, w) in &self.items {
+            if x < *w {
+                return item;
+            }
+            x -= w;
+        }
+        &self.items.last().unwrap().0
+    }
+
+    pub fn items(&self) -> &[(T, f64)] {
+        &self.items
+    }
+}
+
+/// Parse `"a=2,b=1,c"` into `(name, weight)` pairs (bare names weigh 1).
+pub fn parse_weighted(spec: &str) -> Result<Vec<(String, f64)>> {
+    let mut out = Vec::new();
+    for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+        let (name, w) = match part.split_once('=') {
+            Some((n, w)) => {
+                let w: f64 = w
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow!("mix {spec:?}: weight for {n:?} must be a number"))?;
+                (n.trim(), w)
+            }
+            None => (part.trim(), 1.0),
+        };
+        out.push((name.to_string(), w));
+    }
+    if out.is_empty() {
+        bail!("mix {spec:?}: names nothing");
+    }
+    Ok(out)
+}
+
+/// Optional binding-deadline distribution for engine-bound requests.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeadlineMix {
+    /// Probability an engine-bound request carries a deadline.
+    pub prob: f64,
+    /// Relative deadline drawn uniformly from `[lo_ms, hi_ms]`.
+    pub lo_ms: u64,
+    pub hi_ms: u64,
+}
+
+/// The full request-mix specification (see the module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MixSpec {
+    pub scenarios: Weighted<String>,
+    pub policies: Weighted<String>,
+    /// Queue priority distribution (0..=9) for engine-bound requests.
+    pub priorities: Weighted<u64>,
+    pub deadline: Option<DeadlineMix>,
+    /// Budgets are `scenario_floor * uniform(lo, hi)`.
+    pub budget_factor: (f64, f64),
+    /// Fraction of requests sent as engine-bound `campaign`s (the rest
+    /// are inline `plan`s).
+    pub engine_frac: f64,
+}
+
+impl MixSpec {
+    /// The default blend: one scenario, the builtin heuristic policy,
+    /// priority 0, no deadlines, comfortable budgets, 25% engine-bound.
+    pub fn new(scenario: impl Into<String>) -> Result<MixSpec> {
+        let spec = MixSpec {
+            scenarios: Weighted::single(scenario.into()),
+            policies: Weighted::single("budget-heuristic".into()),
+            priorities: Weighted::single(0),
+            deadline: None,
+            budget_factor: (1.2, 2.0),
+            engine_frac: 0.25,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Inline `plan` requests only — the cheap mix benches use.
+    pub fn plan_only(scenario: impl Into<String>) -> Result<MixSpec> {
+        let mut spec = MixSpec::new(scenario)?;
+        spec.engine_frac = 0.0;
+        Ok(spec)
+    }
+
+    /// Parse a `--scenario-mix` style weighted-name string.
+    pub fn parse_scenarios(spec: &str) -> Result<Weighted<String>> {
+        Weighted::new(parse_weighted(spec)?)
+    }
+
+    /// Fail fast on names the server would reject mid-run.
+    pub fn validate(&self) -> Result<()> {
+        for (name, _) in self.scenarios.items() {
+            if build_scenario(name).is_none() {
+                bail!("unknown scenario {name:?} (known: {})", scenario_names().join(", "));
+            }
+        }
+        let registry = PolicyRegistry::builtin();
+        for (name, _) in self.policies.items() {
+            registry
+                .resolve_arc(name)
+                .map_err(|e| anyhow!("mix policy {name:?}: {e}"))?;
+        }
+        for (p, _) in self.priorities.items() {
+            if *p > 9 {
+                bail!("mix priority {p} out of range 0..=9");
+            }
+        }
+        if let Some(d) = self.deadline {
+            if !(0.0..=1.0).contains(&d.prob) || d.lo_ms > d.hi_ms || d.lo_ms == 0 {
+                bail!(
+                    "deadline mix needs prob in [0,1] and 0 < lo_ms <= hi_ms, got {:?}",
+                    self.deadline
+                );
+            }
+        }
+        let (lo, hi) = self.budget_factor;
+        if !(lo > 0.0 && hi >= lo) {
+            bail!("budget factor needs 0 < lo <= hi, got ({lo}, {hi})");
+        }
+        if !(0.0..=1.0).contains(&self.engine_frac) {
+            bail!("engine fraction must be in [0, 1], got {}", self.engine_frac);
+        }
+        Ok(())
+    }
+
+    /// Draw one request.  `floors` caches each scenario's feasibility
+    /// floor so repeated draws stay cheap and deterministic.
+    pub fn sample(&self, rng: &mut Rng, floors: &mut ScenarioFloors) -> Result<api::Request> {
+        let scenario = self.scenarios.sample(rng).clone();
+        let floor = floors.floor(&scenario)?;
+        let budget = (floor * rng.uniform(self.budget_factor.0, self.budget_factor.1)).ceil();
+        let policy = self.policies.sample(rng).clone();
+        let seed = rng.below(1 << 32);
+        let target = api::SystemRef::scenario(&scenario);
+        if rng.f64() < self.engine_frac {
+            let mut placement = Placement { priority: Some(*self.priorities.sample(rng)), deadline_ms: None };
+            if let Some(d) = self.deadline {
+                if rng.f64() < d.prob {
+                    placement.deadline_ms = Some(d.lo_ms + rng.below(d.hi_ms - d.lo_ms + 1));
+                }
+            }
+            let mut req = api::CampaignRequest::new(budget)
+                .with_policy(policy)
+                .with_seed(seed)
+                .with_max_rounds(2)
+                .with_target(target);
+            req.placement = placement;
+            Ok(api::Request::Campaign(req))
+        } else {
+            Ok(api::Request::Plan(
+                api::PlanRequest::new(budget).with_policy(policy).with_seed(seed).with_target(target),
+            ))
+        }
+    }
+}
+
+/// Per-scenario feasibility-floor cache (one planner-side solve of the
+/// cheap bound per distinct scenario, reused across every draw).
+#[derive(Debug, Default)]
+pub struct ScenarioFloors {
+    cache: HashMap<String, f64>,
+}
+
+impl ScenarioFloors {
+    pub fn floor(&mut self, scenario: &str) -> Result<f64> {
+        if let Some(f) = self.cache.get(scenario) {
+            return Ok(*f);
+        }
+        let sys = build_scenario(scenario)
+            .ok_or_else(|| anyhow!("unknown scenario {scenario:?}"))?;
+        let f = WorkloadGenerator::feasible_budget(&sys, 1.0);
+        self.cache.insert(scenario.to_string(), f);
+        Ok(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weighted_parsing_and_sampling() {
+        let pairs = parse_weighted("uniform-small=3,heavy-tail").unwrap();
+        assert_eq!(pairs.len(), 2);
+        assert_eq!(pairs[0], ("uniform-small".to_string(), 3.0));
+        assert_eq!(pairs[1], ("heavy-tail".to_string(), 1.0));
+        assert!(parse_weighted("a=x").is_err());
+        assert!(parse_weighted("").is_err());
+        assert!(Weighted::new(vec![("a".to_string(), 0.0)]).is_err());
+
+        // Weights are roughly respected.
+        let w = Weighted::new(vec![("a", 3.0), ("b", 1.0)]).unwrap();
+        let mut rng = Rng::new(7);
+        let hits = (0..4000).filter(|_| *w.sample(&mut rng) == "a").count();
+        assert!((2700..3300).contains(&hits), "a drawn {hits}/4000 at weight 3:1");
+    }
+
+    #[test]
+    fn mix_validation_rejects_unknown_names() {
+        let mut m = MixSpec::new("uniform-small").unwrap();
+        m.scenarios = Weighted::single("no-such-scenario".into());
+        assert!(m.validate().is_err());
+
+        let mut m = MixSpec::new("uniform-small").unwrap();
+        m.policies = Weighted::single("no-such-policy".into());
+        assert!(m.validate().is_err());
+
+        let mut m = MixSpec::new("uniform-small").unwrap();
+        m.deadline = Some(DeadlineMix { prob: 0.5, lo_ms: 0, hi_ms: 10 });
+        assert!(m.validate().is_err(), "zero deadline must be rejected");
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_blends_ops() {
+        let mut m = MixSpec::new("uniform-small").unwrap();
+        m.engine_frac = 0.5;
+        m.deadline = Some(DeadlineMix { prob: 1.0, lo_ms: 5, hi_ms: 50 });
+        let draw = |seed: u64| -> Vec<String> {
+            let mut rng = Rng::new(seed);
+            let mut floors = ScenarioFloors::default();
+            (0..40)
+                .map(|_| m.sample(&mut rng, &mut floors).unwrap().encode().to_string())
+                .collect()
+        };
+        let a = draw(11);
+        assert_eq!(a, draw(11), "same seed, same requests");
+        assert_ne!(a, draw(12), "different seed, different requests");
+
+        let campaigns = a.iter().filter(|s| s.contains("\"op\":\"campaign\"")).count();
+        assert!(campaigns > 5 && campaigns < 35, "engine blend off: {campaigns}/40");
+        // Engine-bound requests carry their placement deadline.
+        assert!(
+            a.iter().filter(|s| s.contains("\"op\":\"campaign\"")).all(|s| s.contains("deadline_ms")),
+            "campaign requests should carry deadline_ms at prob 1.0"
+        );
+        // Every request decodes (they go straight onto the wire).
+        for s in &a {
+            api::Request::decode(&crate::util::Json::parse(s).unwrap()).unwrap();
+        }
+    }
+
+    #[test]
+    fn budgets_scale_with_the_scenario_floor() {
+        let m = MixSpec::plan_only("uniform-small").unwrap();
+        let mut rng = Rng::new(3);
+        let mut floors = ScenarioFloors::default();
+        let floor = floors.floor("uniform-small").unwrap();
+        for _ in 0..20 {
+            let req = m.sample(&mut rng, &mut floors).unwrap();
+            let api::Request::Plan(p) = req else { panic!("plan_only produced a non-plan") };
+            assert!(p.params.budget >= floor * 1.2 - 1.0 && p.params.budget <= (floor * 2.0).ceil());
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! Open-loop load generation and SLO reporting for the coordinator.
+//!
+//! This is the serving-side analogue of the paper's claim: the planner
+//! keeps budgets under pressure, and this subsystem proves the
+//! *coordinator* keeps its SLOs under traffic.  It drives a live server
+//! through N concurrent pipelined [`crate::coordinator::Client`]s at a
+//! configured **offered** rate, independent of how fast the server
+//! answers — the open-loop regime where queues genuinely build and
+//! admission control, priorities and binding deadlines earn their keep.
+//!
+//! The pieces (each its own module):
+//!
+//! * [`arrival`] — pluggable arrival processes (Poisson, bursty on/off,
+//!   diurnal sinusoid, heavy-tail Pareto), all seeded and deterministic.
+//! * [`mix`] — weighted request mixes over the named
+//!   [`crate::workload::scenario`] presets with priority / deadline /
+//!   policy distributions and budget factors relative to each
+//!   scenario's feasibility floor.
+//! * [`run`] — tape generation ([`run::generate`]) and the multi-client
+//!   open-loop driver ([`run::execute`]); record-and-replay via
+//!   [`crate::workload::LoadTrace`], so any run can be frozen as a
+//!   schema-checked JSON tape and replayed bit-identically.
+//! * [`report`] — the [`report::SloReport`]: throughput vs offered
+//!   load, client-side latency percentiles, served / busy /
+//!   deadline-exceeded breakdowns with a server-`stats` reconciliation
+//!   delta, and the saturation-knee sweep ([`run::run_sweep`]).
+//!
+//! CLI: `botsched loadgen` (see `docs/OPERATIONS.md`, "Load testing and
+//! SLO reports"); bench: the `scaling/loadgen` group.
+
+pub mod arrival;
+pub mod mix;
+pub mod report;
+pub mod run;
+
+pub use arrival::ArrivalProcess;
+pub use mix::{DeadlineMix, MixSpec, ScenarioFloors, Weighted};
+pub use report::{Reservoir, ServerDelta, SloReport, SweepReport};
+pub use run::{execute, generate, run_load, run_sweep, ExecOptions, LoadConfig};

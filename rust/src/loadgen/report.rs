@@ -1,0 +1,335 @@
+//! SLO reports: what an open-loop run measured.
+//!
+//! Client-side end-to-end latencies land in bounded [`Reservoir`]s (the
+//! same fixed-ring percentile scheme as `coordinator/metrics.rs`, so
+//! client- and server-side percentiles are methodologically comparable).
+//! A [`SloReport`] carries the offered-vs-achieved throughput story, the
+//! served / busy / deadline-exceeded / error breakdown, latency and
+//! send-lag percentiles, and a reconciliation block of server counters
+//! (`stats` deltas) captured around the run.  A [`SweepReport`] strings
+//! several of those along an offered-load ramp and marks the saturation
+//! knee — the last offered rate the server still kept up with.
+
+use crate::util::Json;
+
+/// Bounded latency reservoir (fixed ring, most recent `CAP` samples).
+#[derive(Debug, Clone)]
+pub struct Reservoir {
+    samples: Vec<u64>,
+    pos: usize,
+    count: u64,
+}
+
+const CAP: usize = 4096;
+
+impl Default for Reservoir {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Reservoir {
+    pub fn new() -> Reservoir {
+        Reservoir { samples: Vec::with_capacity(CAP.min(1024)), pos: 0, count: 0 }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.count += 1;
+        if self.samples.len() < CAP {
+            self.samples.push(v);
+        } else {
+            self.samples[self.pos] = v;
+            self.pos = (self.pos + 1) % CAP;
+        }
+    }
+
+    /// Total samples recorded (not just the retained window).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Percentile over the retained window (`p` in `[0, 1]`; floor
+    /// index, matching the server's metrics).  0 when empty.
+    pub fn pct(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_unstable();
+        let idx = ((sorted.len() - 1) as f64 * p) as usize;
+        sorted[idx] as f64
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<u64>() as f64 / self.samples.len() as f64
+    }
+}
+
+/// Server `stats` counters captured around a run, for reconciling
+/// client-observed outcomes against what the server says it shed.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ServerDelta {
+    /// Increase in `jobs_rejected` (busy sheds) across the run.
+    pub jobs_rejected: u64,
+    /// Increase in `jobs_deadline_exceeded` across the run.  Can exceed
+    /// the client-observed count: the server also sheds queued work the
+    /// sweeper catches after the synchronous caller was answered.
+    pub jobs_deadline_exceeded: u64,
+    /// Post-run queue-wait percentiles (µs) from the server reservoir.
+    pub queue_wait_us_p50: f64,
+    pub queue_wait_us_p95: f64,
+}
+
+impl ServerDelta {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("jobs_rejected", Json::num(self.jobs_rejected as f64)),
+            ("jobs_deadline_exceeded", Json::num(self.jobs_deadline_exceeded as f64)),
+            ("queue_wait_us_p50", Json::num(self.queue_wait_us_p50)),
+            ("queue_wait_us_p95", Json::num(self.queue_wait_us_p95)),
+        ])
+    }
+}
+
+/// The SLO report for one open-loop run.
+#[derive(Debug, Clone)]
+pub struct SloReport {
+    /// The configured arrival rate (requests/second).
+    pub offered_rate: f64,
+    /// Arrival-process grammar string driving the run.
+    pub arrival: String,
+    pub duration_s: f64,
+    pub clients: usize,
+    /// Requests actually put on the wire.
+    pub sent: u64,
+    pub served: u64,
+    /// `busy` admission rejections.
+    pub busy: u64,
+    /// `deadline_exceeded` replies.
+    pub deadline_exceeded: u64,
+    /// Everything else: API errors, transport failures, replies still
+    /// unanswered when the drain window closed.
+    pub errors: u64,
+    /// Wall-clock of the measured window (send of first request to last
+    /// reply), seconds.
+    pub wall_s: f64,
+    /// `sent / wall_s` — what the generator actually offered.
+    pub achieved_rate: f64,
+    /// `served / wall_s` — useful work per second.
+    pub goodput: f64,
+    /// Client-observed end-to-end latency (µs), served requests only.
+    pub latency_us_p50: f64,
+    pub latency_us_p95: f64,
+    pub latency_us_p99: f64,
+    pub latency_us_mean: f64,
+    /// How late sends left relative to their schedule (µs, p95) — large
+    /// values mean the generator itself could not hold the offered rate.
+    pub send_lag_us_p95: f64,
+    pub server: Option<ServerDelta>,
+}
+
+impl SloReport {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("offered_rate", Json::num(self.offered_rate)),
+            ("arrival", Json::str(&self.arrival)),
+            ("duration_s", Json::num(self.duration_s)),
+            ("clients", Json::num(self.clients as f64)),
+            ("sent", Json::num(self.sent as f64)),
+            ("served", Json::num(self.served as f64)),
+            ("busy", Json::num(self.busy as f64)),
+            ("deadline_exceeded", Json::num(self.deadline_exceeded as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("achieved_rate", Json::num(self.achieved_rate)),
+            ("goodput", Json::num(self.goodput)),
+            (
+                "latency_us",
+                Json::obj(vec![
+                    ("p50", Json::num(self.latency_us_p50)),
+                    ("p95", Json::num(self.latency_us_p95)),
+                    ("p99", Json::num(self.latency_us_p99)),
+                    ("mean", Json::num(self.latency_us_mean)),
+                ]),
+            ),
+            ("send_lag_us_p95", Json::num(self.send_lag_us_p95)),
+        ];
+        if let Some(s) = &self.server {
+            fields.push(("server", s.to_json()));
+        }
+        Json::obj(fields)
+    }
+
+    /// The human-readable block `botsched loadgen` prints.
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "offered {:.1}/s ({})  achieved {:.1}/s  goodput {:.1}/s  wall {:.2}s  clients {}\n",
+            self.offered_rate, self.arrival, self.achieved_rate, self.goodput, self.wall_s,
+            self.clients
+        ));
+        out.push_str(&format!(
+            "sent {}  served {}  busy {}  deadline_exceeded {}  errors {}\n",
+            self.sent, self.served, self.busy, self.deadline_exceeded, self.errors
+        ));
+        out.push_str(&format!(
+            "latency  p50 {:>9.0}us  p95 {:>9.0}us  p99 {:>9.0}us  mean {:>9.0}us\n",
+            self.latency_us_p50, self.latency_us_p95, self.latency_us_p99, self.latency_us_mean
+        ));
+        out.push_str(&format!("send lag p95 {:.0}us\n", self.send_lag_us_p95));
+        if let Some(s) = &self.server {
+            out.push_str(&format!(
+                "server   rejected +{}  deadline_exceeded +{}  queue_wait p50 {:.0}us p95 {:.0}us\n",
+                s.jobs_rejected, s.jobs_deadline_exceeded, s.queue_wait_us_p50, s.queue_wait_us_p95
+            ));
+        }
+        out
+    }
+}
+
+/// A saturation sweep: one [`SloReport`] per offered-load step.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub points: Vec<SloReport>,
+    /// The last offered rate the server kept up with (goodput within
+    /// [`KNEE_KEEPUP`] of offered); `None` when even the first step
+    /// saturated.
+    pub knee_rate: Option<f64>,
+}
+
+/// Goodput/offered ratio above which a step counts as "keeping up".
+pub const KNEE_KEEPUP: f64 = 0.9;
+
+/// Relative goodput gain below which a sweep stops stepping (the curve
+/// has flattened — extra offered load is not becoming useful work).
+pub const KNEE_FLAT_GAIN: f64 = 0.1;
+
+/// Locate the saturation knee on a ramp of completed steps.
+pub fn find_knee(points: &[SloReport]) -> Option<f64> {
+    points
+        .iter()
+        .filter(|p| p.offered_rate > 0.0 && p.goodput >= KNEE_KEEPUP * p.offered_rate)
+        .map(|p| p.offered_rate)
+        .fold(None, |acc: Option<f64>, r| Some(acc.map_or(r, |a| a.max(r))))
+}
+
+impl SweepReport {
+    pub fn new(points: Vec<SloReport>) -> SweepReport {
+        let knee_rate = find_knee(&points);
+        SweepReport { points, knee_rate }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("points", Json::arr(self.points.iter().map(SloReport::to_json))),
+            ("knee_rate", self.knee_rate.map_or(Json::Null, Json::num)),
+        ])
+    }
+
+    pub fn table(&self) -> String {
+        let mut out = String::from(
+            "offered/s  goodput/s  served    busy  ddl_exc  errors   p50_us   p95_us   p99_us\n",
+        );
+        for p in &self.points {
+            out.push_str(&format!(
+                "{:>9.1}  {:>9.1}  {:>6}  {:>6}  {:>7}  {:>6}  {:>7.0}  {:>7.0}  {:>7.0}\n",
+                p.offered_rate,
+                p.goodput,
+                p.served,
+                p.busy,
+                p.deadline_exceeded,
+                p.errors,
+                p.latency_us_p50,
+                p.latency_us_p95,
+                p.latency_us_p99,
+            ));
+        }
+        match self.knee_rate {
+            Some(k) => out.push_str(&format!("saturation knee ≈ {k:.1}/s (last rate with goodput ≥ {:.0}% of offered)\n", KNEE_KEEPUP * 100.0)),
+            None => out.push_str("saturation knee below the first step (server never kept up)\n"),
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reservoir_percentiles_match_metrics_scheme() {
+        let mut r = Reservoir::new();
+        for v in 1..=100u64 {
+            r.record(v * 10);
+        }
+        assert_eq!(r.count(), 100);
+        assert_eq!(r.pct(0.50), 500.0);
+        assert_eq!(r.pct(0.95), 940.0 + 10.0);
+        assert_eq!(r.pct(1.0), 1000.0);
+        assert!(r.mean() > 500.0 && r.mean() < 510.0);
+        // The ring wraps without losing count.
+        for v in 0..(CAP as u64 * 2) {
+            r.record(v);
+        }
+        assert_eq!(r.count(), 100 + CAP as u64 * 2);
+    }
+
+    fn point(rate: f64, goodput: f64) -> SloReport {
+        SloReport {
+            offered_rate: rate,
+            arrival: "poisson".into(),
+            duration_s: 1.0,
+            clients: 1,
+            sent: rate as u64,
+            served: goodput as u64,
+            busy: 0,
+            deadline_exceeded: 0,
+            errors: 0,
+            wall_s: 1.0,
+            achieved_rate: rate,
+            goodput,
+            latency_us_p50: 100.0,
+            latency_us_p95: 200.0,
+            latency_us_p99: 300.0,
+            latency_us_mean: 120.0,
+            send_lag_us_p95: 10.0,
+            server: None,
+        }
+    }
+
+    #[test]
+    fn knee_is_the_last_kept_up_rate() {
+        let points = vec![point(50.0, 50.0), point(100.0, 97.0), point(200.0, 120.0)];
+        assert_eq!(find_knee(&points), Some(100.0));
+        assert_eq!(find_knee(&[point(50.0, 10.0)]), None);
+        let sweep = SweepReport::new(points);
+        assert_eq!(sweep.knee_rate, Some(100.0));
+        let j = sweep.to_json();
+        assert_eq!(j.get("knee_rate").unwrap().as_f64(), Some(100.0));
+        assert_eq!(j.get("points").unwrap().as_arr().unwrap().len(), 3);
+        assert!(sweep.table().contains("saturation knee"));
+    }
+
+    #[test]
+    fn report_json_has_the_slo_fields() {
+        let mut p = point(80.0, 75.0);
+        p.server = Some(ServerDelta {
+            jobs_rejected: 3,
+            jobs_deadline_exceeded: 2,
+            queue_wait_us_p50: 40.0,
+            queue_wait_us_p95: 90.0,
+        });
+        let j = p.to_json();
+        for key in
+            ["offered_rate", "sent", "served", "busy", "deadline_exceeded", "errors", "goodput"]
+        {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        assert_eq!(j.path(&["latency_us", "p95"]).and_then(Json::as_f64), Some(200.0));
+        assert_eq!(j.path(&["server", "jobs_rejected"]).and_then(Json::as_f64), Some(3.0));
+        assert!(p.table().contains("deadline_exceeded"));
+    }
+}

@@ -1,0 +1,425 @@
+//! The open-loop driver: generate a traffic tape, then play it against
+//! a live coordinator.
+//!
+//! **Open loop** means the send schedule is fixed up front by the
+//! arrival process — a slow server does not slow the generator down, it
+//! just accumulates in-flight requests (the regime where queues actually
+//! build, unlike closed-loop churn that self-throttles).  Generation and
+//! execution are deliberately split:
+//!
+//! 1. [`generate`] turns a [`LoadConfig`] into a [`LoadTrace`] — every
+//!    request fully encoded, timestamped and assigned to a client
+//!    connection, all from one seeded RNG.  Same config, same tape,
+//!    byte-for-byte.
+//! 2. [`execute`] plays any tape (fresh or loaded from disk) with one
+//!    thread per client over a pipelined [`Client`], draining replies
+//!    opportunistically between scheduled sends via
+//!    [`Client::recv_within`], and aggregates everything into an
+//!    [`SloReport`] with a server `stats` reconciliation delta.
+//!
+//! [`run_sweep`] steps the offered rate across a ramp to find the
+//! saturation knee; it stops early once goodput flattens.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::VecDeque;
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::api::{self, ErrorCode};
+use crate::coordinator::{Client, ClientError, ClientOptions};
+use crate::util::Rng;
+use crate::workload::{LoadEntry, LoadTrace};
+
+use super::arrival::ArrivalProcess;
+use super::mix::{MixSpec, ScenarioFloors};
+use super::report::{find_knee, Reservoir, ServerDelta, SloReport, SweepReport, KNEE_FLAT_GAIN};
+
+/// Everything that defines one generated run.
+#[derive(Debug, Clone)]
+pub struct LoadConfig {
+    /// Offered arrival rate, requests/second.
+    pub rate: f64,
+    pub duration_s: f64,
+    /// Concurrent client connections the arrivals round-robin across.
+    pub clients: usize,
+    pub arrival: ArrivalProcess,
+    pub mix: MixSpec,
+    pub seed: u64,
+}
+
+/// Execution knobs (separate from the tape, which they do not affect).
+#[derive(Debug, Clone)]
+pub struct ExecOptions {
+    pub connect: ClientOptions,
+    /// How long to wait for straggler replies after the last send.
+    pub drain_timeout: Duration,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions {
+            connect: ClientOptions {
+                connect_timeout: Some(Duration::from_secs(5)),
+                ..ClientOptions::default()
+            },
+            drain_timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+/// Generate the deterministic traffic tape for a config.
+pub fn generate(cfg: &LoadConfig) -> Result<LoadTrace> {
+    if cfg.clients == 0 || cfg.clients > 1024 {
+        bail!("clients must be in 1..=1024, got {}", cfg.clients);
+    }
+    if !(cfg.rate > 0.0 && cfg.rate.is_finite() && cfg.duration_s > 0.0) {
+        bail!("need rate > 0 and duration > 0, got rate {} duration {}", cfg.rate, cfg.duration_s);
+    }
+    cfg.mix.validate()?;
+    let mut rng = Rng::new(cfg.seed);
+    let mut floors = ScenarioFloors::default();
+    let times = cfg.arrival.schedule(cfg.rate, cfg.duration_s, &mut rng);
+    let mut entries = Vec::with_capacity(times.len());
+    for (i, t) in times.iter().enumerate() {
+        let request = cfg.mix.sample(&mut rng, &mut floors)?.encode();
+        entries.push(LoadEntry {
+            at_us: (t * 1e6) as u64,
+            client: (i % cfg.clients) as u32,
+            request,
+        });
+    }
+    Ok(LoadTrace {
+        seed: cfg.seed,
+        offered_rate: cfg.rate,
+        duration_s: cfg.duration_s,
+        clients: cfg.clients as u32,
+        arrival: cfg.arrival.spec_string(),
+        entries,
+    })
+}
+
+/// What one sent request came back as.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Outcome {
+    Served,
+    Busy,
+    DeadlineExceeded,
+    /// A structured API error other than deadline_exceeded.
+    ApiErr,
+    /// Transport failure (or the reply was lost to one).
+    Transport,
+    /// Still pending when the drain window closed.
+    Unanswered,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Sample {
+    outcome: Outcome,
+    /// Send-to-reply time, when a reply was observed.
+    latency_us: Option<u64>,
+    /// How late the send left relative to its schedule.
+    send_lag_us: u64,
+}
+
+/// One client thread's share of the tape: send on schedule, drain
+/// replies opportunistically while waiting, then drain the tail.
+fn drive_client(
+    addr: &SocketAddr,
+    opts: &ExecOptions,
+    start: Instant,
+    entries: &[(u64, api::Request)],
+) -> Result<(Vec<Sample>, Instant)> {
+    let mut client = Client::connect_with(addr, &opts.connect)
+        .with_context(|| format!("connecting load client to {addr}"))?;
+    let mut samples: Vec<Sample> = Vec::with_capacity(entries.len());
+    // FIFO of (sample index, send instant) awaiting replies, in order.
+    let mut inflight: VecDeque<(usize, Instant)> = VecDeque::new();
+    let mut last_event = start;
+
+    fn settle(
+        samples: &mut [Sample],
+        inflight: &mut VecDeque<(usize, Instant)>,
+        outcome: Outcome,
+        now: Instant,
+    ) {
+        if let Some((idx, sent_at)) = inflight.pop_front() {
+            samples[idx].outcome = outcome;
+            samples[idx].latency_us = Some(now.duration_since(sent_at).as_micros() as u64);
+        }
+    }
+
+    // Receive whatever is ready within `wait`; true while the
+    // connection is usable.
+    fn drain_one(
+        client: &mut Client,
+        samples: &mut [Sample],
+        inflight: &mut VecDeque<(usize, Instant)>,
+        wait: Duration,
+        last_event: &mut Instant,
+    ) -> bool {
+        match client.recv_within(wait) {
+            Ok(None) => true,
+            Ok(Some(_)) => {
+                *last_event = Instant::now();
+                settle(samples, inflight, Outcome::Served, *last_event);
+                true
+            }
+            Err(ClientError::Busy(_)) => {
+                *last_event = Instant::now();
+                settle(samples, inflight, Outcome::Busy, *last_event);
+                true
+            }
+            Err(ClientError::Api(e)) => {
+                *last_event = Instant::now();
+                let outcome = if e.code == ErrorCode::DeadlineExceeded {
+                    Outcome::DeadlineExceeded
+                } else {
+                    Outcome::ApiErr
+                };
+                settle(samples, inflight, outcome, *last_event);
+                true
+            }
+            Err(_) => {
+                // Transport: every in-flight reply is unattributable.
+                *last_event = Instant::now();
+                while let Some((idx, _)) = inflight.pop_front() {
+                    samples[idx].outcome = Outcome::Transport;
+                }
+                false
+            }
+        }
+    }
+
+    for (at_us, req) in entries {
+        let target = start + Duration::from_micros(*at_us);
+        // Hold the schedule, draining replies while there is slack.
+        loop {
+            let now = Instant::now();
+            if now >= target {
+                break;
+            }
+            let slack = target - now;
+            if inflight.is_empty() {
+                std::thread::sleep(slack.min(Duration::from_millis(2)));
+            } else if !drain_one(
+                &mut client,
+                &mut samples,
+                &mut inflight,
+                slack.min(Duration::from_millis(5)),
+                &mut last_event,
+            ) {
+                client.reconnect().context("reconnecting load client")?;
+            }
+        }
+        let now = Instant::now();
+        let send_lag_us = now.duration_since(target).as_micros() as u64;
+        let idx = samples.len();
+        samples.push(Sample { outcome: Outcome::Unanswered, latency_us: None, send_lag_us });
+        match client.send(req) {
+            Ok(()) => {
+                inflight.push_back((idx, now));
+                last_event = now;
+            }
+            Err(_) => {
+                samples[idx].outcome = Outcome::Transport;
+                while let Some((i, _)) = inflight.pop_front() {
+                    samples[i].outcome = Outcome::Transport;
+                }
+                client.reconnect().context("reconnecting load client")?;
+            }
+        }
+    }
+
+    // Tail drain: wait out stragglers up to the drain timeout.
+    let drain_deadline = Instant::now() + opts.drain_timeout;
+    while !inflight.is_empty() && Instant::now() < drain_deadline {
+        if !drain_one(
+            &mut client,
+            &mut samples,
+            &mut inflight,
+            Duration::from_millis(50),
+            &mut last_event,
+        ) {
+            break; // transport loss already settled the in-flight tail
+        }
+    }
+    // Anything left is Unanswered (its initial state).
+    Ok((samples, last_event))
+}
+
+/// Play a tape against a live coordinator and report.
+pub fn execute(addr: &SocketAddr, trace: &LoadTrace, opts: &ExecOptions) -> Result<SloReport> {
+    // Decode every request up front: a tape that fails schema checks
+    // must fail before any traffic is sent.
+    let mut per_client: Vec<Vec<(u64, api::Request)>> = vec![Vec::new(); trace.clients as usize];
+    for (i, e) in trace.entries.iter().enumerate() {
+        let req = api::Request::decode(&e.request)
+            .map_err(|err| anyhow!("load trace request {i}: {}", err.message))?;
+        let slot = per_client
+            .get_mut(e.client as usize)
+            .ok_or_else(|| anyhow!("load trace request {i}: client {} out of range", e.client))?;
+        slot.push((e.at_us, req));
+    }
+
+    // Server counters around the run, for the reconciliation block.
+    let mut control = Client::connect_with(addr, &opts.connect)
+        .with_context(|| format!("connecting control client to {addr}"))?;
+    let before = control.stats().map_err(|e| anyhow!("stats before run: {e}"))?;
+
+    let start = Instant::now() + Duration::from_millis(20);
+    let results: Vec<Result<(Vec<Sample>, Instant)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = per_client
+            .iter()
+            .map(|entries| scope.spawn(move || drive_client(addr, opts, start, entries)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("load client thread panicked")).collect()
+    });
+
+    let after = control.stats().map_err(|e| anyhow!("stats after run: {e}"))?;
+    let server = ServerDelta {
+        jobs_rejected: after.jobs_rejected().saturating_sub(before.jobs_rejected()),
+        jobs_deadline_exceeded: after
+            .jobs_deadline_exceeded()
+            .saturating_sub(before.jobs_deadline_exceeded()),
+        queue_wait_us_p50: after.queue_wait_us("p50"),
+        queue_wait_us_p95: after.queue_wait_us("p95"),
+    };
+
+    let mut samples = Vec::new();
+    let mut last_event = start;
+    for r in results {
+        let (s, t) = r?;
+        samples.extend(s);
+        if t > last_event {
+            last_event = t;
+        }
+    }
+
+    let mut latency = Reservoir::new();
+    let mut send_lag = Reservoir::new();
+    let (mut served, mut busy, mut ddl, mut errors) = (0u64, 0u64, 0u64, 0u64);
+    for s in &samples {
+        send_lag.record(s.send_lag_us);
+        match s.outcome {
+            Outcome::Served => {
+                served += 1;
+                if let Some(l) = s.latency_us {
+                    latency.record(l);
+                }
+            }
+            Outcome::Busy => busy += 1,
+            Outcome::DeadlineExceeded => ddl += 1,
+            Outcome::ApiErr | Outcome::Transport | Outcome::Unanswered => errors += 1,
+        }
+    }
+    let wall_s = last_event.duration_since(start).as_secs_f64().max(1e-6);
+    let sent = samples.len() as u64;
+    Ok(SloReport {
+        offered_rate: trace.offered_rate,
+        arrival: trace.arrival.clone(),
+        duration_s: trace.duration_s,
+        clients: trace.clients as usize,
+        sent,
+        served,
+        busy,
+        deadline_exceeded: ddl,
+        errors,
+        wall_s,
+        achieved_rate: sent as f64 / wall_s,
+        goodput: served as f64 / wall_s,
+        latency_us_p50: latency.pct(0.50),
+        latency_us_p95: latency.pct(0.95),
+        latency_us_p99: latency.pct(0.99),
+        latency_us_mean: latency.mean(),
+        send_lag_us_p95: send_lag.pct(0.95),
+        server: Some(server),
+    })
+}
+
+/// Generate and execute in one step, returning the tape alongside the
+/// report (so callers can `--record` it).
+pub fn run_load(
+    addr: &SocketAddr,
+    cfg: &LoadConfig,
+    opts: &ExecOptions,
+) -> Result<(LoadTrace, SloReport)> {
+    let trace = generate(cfg)?;
+    let report = execute(addr, &trace, opts)?;
+    Ok((trace, report))
+}
+
+/// Step the offered rate across `rates`, stopping early once goodput
+/// flattens (relative gain below [`KNEE_FLAT_GAIN`]) — the knee is
+/// behind us at that point and further steps only burn time.
+pub fn run_sweep(
+    addr: &SocketAddr,
+    base: &LoadConfig,
+    rates: &[f64],
+    opts: &ExecOptions,
+) -> Result<SweepReport> {
+    if rates.is_empty() {
+        bail!("sweep needs at least one offered rate");
+    }
+    let mut points: Vec<SloReport> = Vec::with_capacity(rates.len());
+    for &rate in rates {
+        let cfg = LoadConfig { rate, ..base.clone() };
+        let (_, report) = run_load(addr, &cfg, opts)?;
+        let flattened = points.last().is_some_and(|prev: &SloReport| {
+            report.goodput < prev.goodput * (1.0 + KNEE_FLAT_GAIN)
+        });
+        points.push(report);
+        if flattened {
+            break;
+        }
+    }
+    let knee_rate = find_knee(&points);
+    Ok(SweepReport { points, knee_rate })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> LoadConfig {
+        LoadConfig {
+            rate: 40.0,
+            duration_s: 0.5,
+            clients: 3,
+            arrival: ArrivalProcess::Poisson,
+            mix: MixSpec::plan_only("uniform-small").unwrap(),
+            seed: 99,
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_round_robin() {
+        let a = generate(&tiny_cfg()).unwrap();
+        let b = generate(&tiny_cfg()).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        assert!(!a.entries.is_empty());
+        for (i, e) in a.entries.iter().enumerate() {
+            assert_eq!(e.client, (i % 3) as u32, "round-robin client assignment");
+        }
+        // And the tape passes its own strict schema check.
+        let back = LoadTrace::from_json(&a.to_json()).unwrap();
+        assert_eq!(back, a);
+
+        let mut other = tiny_cfg();
+        other.seed = 100;
+        assert_ne!(generate(&other).unwrap(), a, "seed must matter");
+    }
+
+    #[test]
+    fn generation_rejects_bad_configs() {
+        let mut cfg = tiny_cfg();
+        cfg.clients = 0;
+        assert!(generate(&cfg).is_err());
+        let mut cfg = tiny_cfg();
+        cfg.rate = 0.0;
+        assert!(generate(&cfg).is_err());
+        let mut cfg = tiny_cfg();
+        cfg.mix.engine_frac = 1.5;
+        assert!(generate(&cfg).is_err());
+    }
+}

@@ -19,6 +19,11 @@
 //! botsched submit  [--priority P] [--deadline-ms D] [--addr host:port] '<json job>'
 //! botsched jobs    [--addr host:port]            # list the engine's jobs
 //! botsched cancel  --job j-3 [--addr host:port]  # cancel a running job
+//! botsched loadgen [--addr host:port] [--rate R] [--arrival poisson|bursty:..|diurnal:..|pareto:..]
+//!                  [--clients N] [--duration SECS] [--scenario-mix "a=2,b"] [--policy-mix ...]
+//!                  [--priority-mix "0=8,9=2"] [--engine-frac f] [--deadline-frac f]
+//!                  [--deadline-ms LO:HI] [--seed S] [--record tape.json] [--replay tape.json]
+//!                  [--sweep "50,100,200"] [--json report.json]
 //! ```
 //!
 //! Everything is also available programmatically through the `botsched`
@@ -173,6 +178,7 @@ fn run(args: Vec<String>) -> Result<()> {
         "submit" => cmd_submit(&a),
         "jobs" => cmd_jobs(&a),
         "cancel" => cmd_cancel(&a),
+        "loadgen" => cmd_loadgen(&a),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -207,7 +213,11 @@ fn print_help() {
          \x20 client    send one JSON request to a coordinator\n\
          \x20 submit    enqueue a job (--priority 0..=9, --deadline-ms D) and print its id\n\
          \x20 jobs      list a coordinator's jobs (state, progress)\n\
-         \x20 cancel    cancel a coordinator job (--job j-3)\n\n\
+         \x20 cancel    cancel a coordinator job (--job j-3)\n\
+         \x20 loadgen   open-loop load generator vs a live coordinator (--rate R --arrival <proc>\n\
+         \x20           --clients N --duration SECS --scenario-mix \"a=2,b\" --engine-frac f,\n\
+         \x20           --record/--replay tape.json for bit-identical traffic tapes,\n\
+         \x20           --sweep \"50,100,200\" to find the saturation knee; SLO report via --json)\n\n\
          common flags: --system paper|paper:<overhead>|file.json, --scenario <name>,\n\
          \x20             --overhead o, --no-xla"
     );
@@ -659,4 +669,107 @@ fn cmd_cancel(a: &Args) -> Result<()> {
         println!("{job}: not cancellable (already finished or unknown)");
     }
     Ok(())
+}
+
+/// Build the load generator's request mix from CLI flags.
+fn loadgen_mix(a: &Args) -> Result<botsched::loadgen::MixSpec> {
+    use botsched::loadgen::{mix::parse_weighted, DeadlineMix, MixSpec, Weighted};
+    let mut m = MixSpec::new("uniform-small")?;
+    if let Some(spec) = a.get("scenario-mix") {
+        m.scenarios = MixSpec::parse_scenarios(spec)?;
+    }
+    if let Some(spec) = a.get("policy-mix") {
+        m.policies = Weighted::new(parse_weighted(spec)?)?;
+    }
+    if let Some(spec) = a.get("priority-mix") {
+        let pairs = parse_weighted(spec)?
+            .into_iter()
+            .map(|(p, w)| Ok((p.parse::<u64>().with_context(|| format!("priority {p:?}"))?, w)))
+            .collect::<Result<Vec<_>>>()?;
+        m.priorities = Weighted::new(pairs)?;
+    }
+    if let Some(frac) = a.f64("engine-frac")? {
+        m.engine_frac = frac;
+    }
+    if let Some(prob) = a.f64("deadline-frac")? {
+        let (lo_ms, hi_ms) = match a.get("deadline-ms") {
+            Some(span) => {
+                let (lo, hi) = span
+                    .split_once(':')
+                    .ok_or_else(|| anyhow!("--deadline-ms wants LO:HI, got {span:?}"))?;
+                (
+                    lo.parse().with_context(|| format!("--deadline-ms lo {lo:?}"))?,
+                    hi.parse().with_context(|| format!("--deadline-ms hi {hi:?}"))?,
+                )
+            }
+            None => (500, 5_000),
+        };
+        m.deadline = Some(DeadlineMix { prob, lo_ms, hi_ms });
+    }
+    m.validate()?;
+    Ok(m)
+}
+
+/// `botsched loadgen`: open-loop load against a live coordinator, with
+/// record/replay tapes, an SLO report and a saturation-knee sweep mode.
+fn cmd_loadgen(a: &Args) -> Result<()> {
+    use botsched::loadgen::{run_load, run_sweep, ArrivalProcess, ExecOptions, LoadConfig};
+    use botsched::workload::LoadTrace;
+
+    let addr = client_addr(a)?;
+    let mut opts = ExecOptions::default();
+    if let Some(s) = a.f64("drain-timeout")? {
+        opts.drain_timeout = std::time::Duration::from_secs_f64(s);
+    }
+    let json_out = |path: Option<&str>, json: &botsched::util::Json| -> Result<()> {
+        if let Some(path) = path {
+            std::fs::write(path, format!("{json}\n")).with_context(|| format!("writing {path}"))?;
+            println!("wrote {path}");
+        }
+        Ok(())
+    };
+
+    // Replay: the tape already pins every request and its schedule.
+    if let Some(path) = a.get("replay") {
+        let trace = LoadTrace::load(std::path::Path::new(path))?;
+        println!(
+            "replaying {path}: {} requests, {} clients, {} ({} req/s offered)",
+            trace.entries.len(),
+            trace.clients,
+            trace.arrival,
+            trace.offered_rate
+        );
+        let report = botsched::loadgen::execute(&addr, &trace, &opts)?;
+        print!("{}", report.table());
+        return json_out(a.get("json"), &report.to_json());
+    }
+
+    let cfg = LoadConfig {
+        rate: a.f64("rate")?.unwrap_or(50.0),
+        duration_s: a.f64("duration")?.unwrap_or(5.0),
+        clients: a.u64("clients")?.unwrap_or(4) as usize,
+        arrival: ArrivalProcess::parse(a.get("arrival").unwrap_or("poisson"))?,
+        mix: loadgen_mix(a)?,
+        seed: a.u64("seed")?.unwrap_or(0),
+    };
+
+    // Sweep: step the offered rate to find the saturation knee.
+    if let Some(list) = a.get("sweep") {
+        let rates = list
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| s.trim().parse::<f64>().with_context(|| format!("sweep rate {s:?}")))
+            .collect::<Result<Vec<_>>>()?;
+        let sweep = run_sweep(&addr, &cfg, &rates, &opts)?;
+        print!("{}", sweep.table());
+        return json_out(a.get("json"), &sweep.to_json());
+    }
+
+    let (trace, report) = run_load(&addr, &cfg, &opts)?;
+    if let Some(path) = a.get("record") {
+        trace.save(std::path::Path::new(path))?;
+        println!("recorded {} requests to {path}", trace.entries.len());
+    }
+    print!("{}", report.table());
+    json_out(a.get("json"), &report.to_json())
 }

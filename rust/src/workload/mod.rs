@@ -9,7 +9,10 @@
 //!   traffic;
 //! * [`scenario`] — named presets over the two above, selectable by name
 //!   from the coordinator protocol (`"scenario"` field, `list_scenarios`)
-//!   and the CLI (`--scenario`).
+//!   and the CLI (`--scenario`);
+//! * [`traces`] — versioned, strictly schema-checked JSON traces: both
+//!   replayable campaign-arrival streams ([`Trace`]) and the load
+//!   generator's recorded traffic tapes ([`LoadTrace`]).
 
 pub mod generator;
 pub mod paper;
@@ -18,4 +21,4 @@ pub mod traces;
 
 pub use generator::{SizeDistribution, WorkloadGenerator, WorkloadSpec};
 pub use scenario::{build_scenario, scenario_names, Scenario, SCENARIOS};
-pub use traces::{replay, ReplayRow, Trace, TraceEntry};
+pub use traces::{replay, LoadEntry, LoadTrace, ReplayRow, Trace, TraceEntry, TRACE_VERSION};

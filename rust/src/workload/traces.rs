@@ -1,11 +1,21 @@
-//! Workload traces: persist and replay multi-campaign arrival streams.
+//! Workload traces: persist and replay multi-campaign arrival streams
+//! and recorded load-generator request tapes.
 //!
 //! Grid/cloud BoT workloads arrive in bursts over time (Iosup & Epema,
-//! the paper's ref. [1]).  A [`Trace`] is a sequence of campaigns — each
-//! an arrival time plus a full system description and budget — that the
-//! replay driver feeds to the planner/coordinator one by one.  Traces
-//! serialise to JSON (the same schema the `config` module uses per
-//! system) so benchmark inputs can be versioned and shared.
+//! the paper's ref. [1]).  Two trace kinds live here:
+//!
+//! * [`Trace`] — a sequence of campaigns (arrival time + full system
+//!   description + budget) that the replay driver feeds to the planner
+//!   one by one (`botsched trace gen/replay`).
+//! * [`LoadTrace`] — a recorded open-loop traffic tape from
+//!   [`crate::loadgen`]: every request the generator sent, with its
+//!   scheduled offset and owning client, so a run replays bit-identically
+//!   against a live coordinator.
+//!
+//! Both serialise to JSON under an explicit [`TRACE_VERSION`] and load
+//! through **strict schema validation**: unknown fields and mistyped
+//! values are rejected with errors that name the offending field, so a
+//! malformed tape fails loudly instead of mis-generating traffic.
 
 use anyhow::{anyhow, Context, Result};
 
@@ -13,6 +23,72 @@ use crate::config;
 use crate::model::System;
 use crate::util::{Json, Rng};
 use crate::workload::{SizeDistribution, WorkloadGenerator, WorkloadSpec};
+
+/// The trace schema version stamped into every saved trace.  Loaders
+/// reject any other value — bump it when the schema changes shape.
+pub const TRACE_VERSION: u64 = 1;
+
+/// Strict object check: `j` must be an object whose every key is in
+/// `allowed`.  Errors name the unknown field and the allowed set.
+fn check_fields(ctx: &str, j: &Json, allowed: &[&str]) -> Result<()> {
+    let Json::Obj(m) = j else {
+        return Err(anyhow!("{ctx}: expected a JSON object, got {j}"));
+    };
+    for k in m.keys() {
+        if !allowed.contains(&k.as_str()) {
+            return Err(anyhow!("{ctx}: unknown field {k:?} (allowed: {allowed:?})"));
+        }
+    }
+    Ok(())
+}
+
+/// A required numeric field, with a field-naming error on absence or a
+/// wrong type.
+fn need_f64(ctx: &str, j: &Json, key: &str) -> Result<f64> {
+    match j.get(key) {
+        None => Err(anyhow!("{ctx}: missing field {key:?}")),
+        Some(v) => v.as_f64().ok_or_else(|| anyhow!("{ctx}: field {key:?} must be a number, got {v}")),
+    }
+}
+
+/// A required non-negative integer field (same error discipline).
+fn need_u64(ctx: &str, j: &Json, key: &str) -> Result<u64> {
+    match j.get(key) {
+        None => Err(anyhow!("{ctx}: missing field {key:?}")),
+        Some(v) => v
+            .as_u64()
+            .ok_or_else(|| anyhow!("{ctx}: field {key:?} must be a non-negative integer, got {v}")),
+    }
+}
+
+/// A required string field (same error discipline).
+fn need_str<'j>(ctx: &str, j: &'j Json, key: &str) -> Result<&'j str> {
+    match j.get(key) {
+        None => Err(anyhow!("{ctx}: missing field {key:?}")),
+        Some(v) => v.as_str().ok_or_else(|| anyhow!("{ctx}: field {key:?} must be a string, got {v}")),
+    }
+}
+
+/// Check an optional `"version"` stamp (campaign traces predate the
+/// stamp, so absence is accepted as version 1) or a required one
+/// (load tapes always carry it).
+fn check_version(ctx: &str, j: &Json, required: bool) -> Result<()> {
+    match j.get("version") {
+        None if required => Err(anyhow!("{ctx}: missing field \"version\"")),
+        None => Ok(()),
+        Some(v) => {
+            let n = v
+                .as_u64()
+                .ok_or_else(|| anyhow!("{ctx}: field \"version\" must be an integer, got {v}"))?;
+            if n != TRACE_VERSION {
+                return Err(anyhow!(
+                    "{ctx}: unsupported trace version {n} (this build reads version {TRACE_VERSION})"
+                ));
+            }
+            Ok(())
+        }
+    }
+}
 
 /// One campaign in a trace.
 #[derive(Debug, Clone)]
@@ -62,19 +138,24 @@ impl Trace {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![(
-            "campaigns",
-            Json::arr(self.entries.iter().map(|e| {
-                Json::obj(vec![
-                    ("at", Json::num(e.at)),
-                    ("budget", Json::num(e.budget)),
-                    ("system", config::system_to_json(&e.system)),
-                ])
-            })),
-        )])
+        Json::obj(vec![
+            ("version", Json::num(TRACE_VERSION as f64)),
+            (
+                "campaigns",
+                Json::arr(self.entries.iter().map(|e| {
+                    Json::obj(vec![
+                        ("at", Json::num(e.at)),
+                        ("budget", Json::num(e.budget)),
+                        ("system", config::system_to_json(&e.system)),
+                    ])
+                })),
+            ),
+        ])
     }
 
     pub fn from_json(j: &Json) -> Result<Trace> {
+        check_fields("trace", j, &["version", "campaigns"])?;
+        check_version("trace", j, false)?;
         let arr = j
             .get("campaigns")
             .and_then(Json::as_arr)
@@ -82,22 +163,18 @@ impl Trace {
         let mut entries = Vec::with_capacity(arr.len());
         let mut last_at = f64::NEG_INFINITY;
         for (i, e) in arr.iter().enumerate() {
-            let at = e
-                .get("at")
-                .and_then(Json::as_f64)
-                .ok_or_else(|| anyhow!("trace campaign {i}: missing at"))?;
+            let ctx = format!("trace campaign {i}");
+            check_fields(&ctx, e, &["at", "budget", "system"])?;
+            let at = need_f64(&ctx, e, "at")?;
             if at < last_at {
-                return Err(anyhow!("trace campaign {i}: arrivals not sorted"));
+                return Err(anyhow!("{ctx}: arrivals not sorted"));
             }
             last_at = at;
-            let budget = e
-                .get("budget")
-                .and_then(Json::as_f64)
-                .ok_or_else(|| anyhow!("trace campaign {i}: missing budget"))?;
+            let budget = need_f64(&ctx, e, "budget")?;
             let system = config::system_from_json(
-                e.get("system").ok_or_else(|| anyhow!("trace campaign {i}: missing system"))?,
+                e.get("system").ok_or_else(|| anyhow!("{ctx}: missing field \"system\""))?,
             )
-            .with_context(|| format!("trace campaign {i}"))?;
+            .with_context(|| ctx.clone())?;
             entries.push(TraceEntry { at, budget, system });
         }
         Ok(Trace { entries })
@@ -112,6 +189,132 @@ impl Trace {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
         Trace::from_json(&Json::parse(&text)?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Load-generator tapes.
+
+/// One recorded request in a [`LoadTrace`]: when it was scheduled
+/// (microseconds from run start), which client connection sends it, and
+/// the full encoded wire request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadEntry {
+    pub at_us: u64,
+    pub client: u32,
+    /// The encoded [`crate::coordinator::api::Request`] object (no
+    /// `"v"` stamp — the client adds it at send time).
+    pub request: Json,
+}
+
+/// A recorded open-loop traffic tape (see [`crate::loadgen`]): the
+/// exact request sequence of one generated run, replayable against any
+/// live coordinator.  The generator's knobs are echoed so reports can
+/// state the offered load the tape encodes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadTrace {
+    pub seed: u64,
+    /// Offered arrival rate (requests/second) the tape was generated at.
+    pub offered_rate: f64,
+    pub duration_s: f64,
+    /// Client connections the entries are partitioned across.
+    pub clients: u32,
+    /// The arrival-process grammar string (e.g. `"poisson"`,
+    /// `"bursty:on=2,off=8"`) — informative echo, not re-sampled.
+    pub arrival: String,
+    pub entries: Vec<LoadEntry>,
+}
+
+impl LoadTrace {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::num(TRACE_VERSION as f64)),
+            ("kind", Json::str("loadgen")),
+            ("seed", Json::num(self.seed as f64)),
+            ("offered_rate", Json::num(self.offered_rate)),
+            ("duration_s", Json::num(self.duration_s)),
+            ("clients", Json::num(f64::from(self.clients))),
+            ("arrival", Json::str(&self.arrival)),
+            (
+                "requests",
+                Json::arr(self.entries.iter().map(|e| {
+                    Json::obj(vec![
+                        ("at_us", Json::num(e.at_us as f64)),
+                        ("client", Json::num(f64::from(e.client))),
+                        ("request", e.request.clone()),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Strict, schema-checked load.  Every entry's `request` object is
+    /// additionally run through the typed wire decoder
+    /// ([`crate::coordinator::api::Request::decode`]), so a tape that
+    /// parses as JSON but encodes an invalid request still fails here —
+    /// with the entry index — rather than at send time mid-run.
+    pub fn from_json(j: &Json) -> Result<LoadTrace> {
+        check_fields(
+            "load trace",
+            j,
+            &["version", "kind", "seed", "offered_rate", "duration_s", "clients", "arrival", "requests"],
+        )?;
+        check_version("load trace", j, true)?;
+        let kind = need_str("load trace", j, "kind")?;
+        if kind != "loadgen" {
+            return Err(anyhow!(
+                "load trace: field \"kind\" must be \"loadgen\", got {kind:?} \
+                 (campaign traces replay via `botsched trace replay`)"
+            ));
+        }
+        let seed = need_u64("load trace", j, "seed")?;
+        let offered_rate = need_f64("load trace", j, "offered_rate")?;
+        let duration_s = need_f64("load trace", j, "duration_s")?;
+        let clients = need_u64("load trace", j, "clients")?;
+        if clients == 0 || clients > u64::from(u32::MAX) {
+            return Err(anyhow!("load trace: field \"clients\" out of range, got {clients}"));
+        }
+        let arrival = need_str("load trace", j, "arrival")?.to_string();
+        let arr = j
+            .get("requests")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("load trace: field \"requests\" must be an array"))?;
+        let mut entries = Vec::with_capacity(arr.len());
+        let mut last_at = 0u64;
+        for (i, e) in arr.iter().enumerate() {
+            let ctx = format!("load trace request {i}");
+            check_fields(&ctx, e, &["at_us", "client", "request"])?;
+            let at_us = need_u64(&ctx, e, "at_us")?;
+            if at_us < last_at {
+                return Err(anyhow!("{ctx}: arrivals not sorted (at_us {at_us} after {last_at})"));
+            }
+            last_at = at_us;
+            let client = need_u64(&ctx, e, "client")?;
+            if client >= clients {
+                return Err(anyhow!(
+                    "{ctx}: field \"client\" is {client} but the tape declares {clients} clients"
+                ));
+            }
+            let request = e
+                .get("request")
+                .ok_or_else(|| anyhow!("{ctx}: missing field \"request\""))?
+                .clone();
+            crate::coordinator::api::Request::decode(&request)
+                .map_err(|err| anyhow!("{ctx}: invalid request: {}", err.message))?;
+            entries.push(LoadEntry { at_us, client: client as u32, request });
+        }
+        Ok(LoadTrace { seed, offered_rate, duration_s, clients: clients as u32, arrival, entries })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<LoadTrace> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        LoadTrace::from_json(&Json::parse(&text)?)
     }
 }
 
@@ -170,6 +373,7 @@ mod tests {
     fn json_roundtrip() {
         let t = Trace::synthetic(7, 4, 300.0);
         let j = t.to_json();
+        assert_eq!(j.get("version").unwrap().as_u64(), Some(TRACE_VERSION));
         let back = Trace::from_json(&j).unwrap();
         assert_eq!(back.entries.len(), 4);
         for (a, b) in t.entries.iter().zip(&back.entries) {
@@ -204,6 +408,125 @@ mod tests {
         )
         .unwrap();
         assert!(Trace::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn campaign_trace_schema_violations_name_the_field() {
+        // A version-less tape stays loadable (campaign traces predate
+        // the stamp), but a wrong version is rejected by number.
+        let versionless = r#"{"campaigns":[]}"#;
+        assert!(Trace::from_json(&Json::parse(versionless).unwrap()).is_ok());
+        let wrong = r#"{"version":99,"campaigns":[]}"#;
+        let err = Trace::from_json(&Json::parse(wrong).unwrap()).unwrap_err().to_string();
+        assert!(err.contains("version 99"), "{err}");
+
+        // Unknown top-level and entry-level fields are named.
+        let extra_top = r#"{"campaigns":[],"frobnicate":1}"#;
+        let err = Trace::from_json(&Json::parse(extra_top).unwrap()).unwrap_err().to_string();
+        assert!(err.contains("frobnicate"), "{err}");
+        let extra_entry = r#"{"campaigns":[
+            {"at":1,"budget":5,"surprise":true,"system":{"apps":[{"task_sizes":[1]}],
+              "instance_types":[{"cost_per_hour":5,"perf":[10]}]}}]}"#;
+        let err = Trace::from_json(&Json::parse(extra_entry).unwrap()).unwrap_err().to_string();
+        assert!(err.contains("surprise") && err.contains("campaign 0"), "{err}");
+
+        // A mistyped value names its field, not just the entry.
+        let bad_type = r#"{"campaigns":[
+            {"at":"soon","budget":5,"system":{"apps":[{"task_sizes":[1]}],
+              "instance_types":[{"cost_per_hour":5,"perf":[10]}]}}]}"#;
+        let err = Trace::from_json(&Json::parse(bad_type).unwrap()).unwrap_err().to_string();
+        assert!(err.contains("\"at\"") && err.contains("number"), "{err}");
+    }
+
+    fn tiny_load_trace() -> LoadTrace {
+        LoadTrace {
+            seed: 7,
+            offered_rate: 50.0,
+            duration_s: 1.0,
+            clients: 2,
+            arrival: "poisson".into(),
+            entries: vec![
+                LoadEntry {
+                    at_us: 1_000,
+                    client: 0,
+                    request: Json::parse(r#"{"op":"plan","budget":80,"scenario":"uniform-small"}"#)
+                        .unwrap(),
+                },
+                LoadEntry {
+                    at_us: 5_000,
+                    client: 1,
+                    request: Json::parse(r#"{"op":"ping"}"#).unwrap(),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn load_trace_roundtrips_bit_identically() {
+        let t = tiny_load_trace();
+        let j = t.to_json();
+        let back = LoadTrace::from_json(&j).unwrap();
+        assert_eq!(back, t);
+        // Serialisation is canonical (sorted object keys), so the
+        // round-tripped JSON text is byte-identical too.
+        assert_eq!(back.to_json().to_string(), j.to_string());
+
+        let dir = std::env::temp_dir().join("botsched_loadtrace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tape.json");
+        t.save(&path).unwrap();
+        assert_eq!(LoadTrace::load(&path).unwrap(), t);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_trace_requires_its_version_and_kind() {
+        let t = tiny_load_trace();
+        let Json::Obj(mut m) = t.to_json() else { unreachable!() };
+        m.remove("version");
+        let err = LoadTrace::from_json(&Json::Obj(m.clone())).unwrap_err().to_string();
+        assert!(err.contains("\"version\""), "{err}");
+        m.insert("version".into(), Json::num(2.0));
+        let err = LoadTrace::from_json(&Json::Obj(m.clone())).unwrap_err().to_string();
+        assert!(err.contains("version 2"), "{err}");
+        m.insert("version".into(), Json::num(TRACE_VERSION as f64));
+        m.insert("kind".into(), Json::str("campaign"));
+        let err = LoadTrace::from_json(&Json::Obj(m)).unwrap_err().to_string();
+        assert!(err.contains("\"kind\""), "{err}");
+    }
+
+    #[test]
+    fn load_trace_rejects_malformed_tapes_loudly() {
+        let t = tiny_load_trace();
+        // Unknown top-level field.
+        let Json::Obj(mut m) = t.to_json() else { unreachable!() };
+        m.insert("surprise".into(), Json::num(1.0));
+        let err = LoadTrace::from_json(&Json::Obj(m)).unwrap_err().to_string();
+        assert!(err.contains("surprise"), "{err}");
+
+        // Mistyped at_us names the field and the entry.
+        let mut bad = t.clone();
+        bad.entries[0].at_us = 9_000_000; // out of order vs entry 1
+        let err = LoadTrace::from_json(&bad.to_json()).unwrap_err().to_string();
+        assert!(err.contains("not sorted"), "{err}");
+
+        // A client index past the declared fan-out is rejected.
+        let mut bad = t.clone();
+        bad.entries[1].client = 9;
+        let err = LoadTrace::from_json(&bad.to_json()).unwrap_err().to_string();
+        assert!(err.contains("\"client\"") && err.contains('9'), "{err}");
+
+        // A request that is not a valid wire op fails with the entry index.
+        let mut bad = t.clone();
+        bad.entries[1].request = Json::parse(r#"{"op":"frobnicate"}"#).unwrap();
+        let err = LoadTrace::from_json(&bad.to_json()).unwrap_err().to_string();
+        assert!(err.contains("request 1") && err.contains("invalid request"), "{err}");
+
+        // A structurally bad request body (plan without budget) too.
+        let mut bad = t;
+        bad.entries[0].request = Json::parse(r#"{"op":"plan"}"#).unwrap();
+        let err = LoadTrace::from_json(&bad.to_json()).unwrap_err().to_string();
+        assert!(err.contains("request 0") && err.contains("budget"), "{err}");
     }
 
     #[test]

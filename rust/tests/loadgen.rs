@@ -1,0 +1,170 @@
+//! Integration tests for the open-loop load generator against a live
+//! coordinator: record-and-replay tapes that round-trip byte-identically
+//! and replay the exact recorded request sequence, SLO breakdowns under
+//! saturation (busy sheds + binding-deadline rejections showing up both
+//! client-side and in the server's `stats` delta), the saturation-knee
+//! sweep, and the pipelined client's bounded `recv_within` drain.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use botsched::coordinator::api::Request;
+use botsched::coordinator::{Client, Coordinator, CoordinatorConfig};
+use botsched::loadgen::{
+    execute, generate, run_load, run_sweep, ArrivalProcess, DeadlineMix, ExecOptions, LoadConfig,
+    MixSpec,
+};
+use botsched::workload::LoadTrace;
+
+fn start(shards: usize, max_backlog: usize) -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        addr: "127.0.0.1:0".into(),
+        use_xla: false,
+        batching: false,
+        shards,
+        conn_workers: 2,
+        max_backlog,
+        ..CoordinatorConfig::default()
+    })
+    .expect("coordinator starts")
+}
+
+fn tmp_tape(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("botsched-loadgen-{}-{name}.json", std::process::id()))
+}
+
+fn plan_cfg(rate: f64, duration_s: f64, seed: u64) -> LoadConfig {
+    LoadConfig {
+        rate,
+        duration_s,
+        clients: 3,
+        arrival: ArrivalProcess::Poisson,
+        mix: MixSpec::plan_only("uniform-small").expect("builtin scenario"),
+        seed,
+    }
+}
+
+/// Outcomes must partition the sends: nothing double-counted, nothing
+/// dropped on the floor.
+fn assert_consistent(report: &botsched::loadgen::SloReport) {
+    assert_eq!(
+        report.served + report.busy + report.deadline_exceeded + report.errors,
+        report.sent,
+        "outcome breakdown must partition sent ({report:?})"
+    );
+}
+
+#[test]
+fn replay_equals_record_against_a_live_coordinator() {
+    let coord = start(2, 0);
+    let cfg = plan_cfg(60.0, 0.5, 5);
+    let opts = ExecOptions::default();
+
+    let (tape, report) = run_load(&coord.local_addr, &cfg, &opts).expect("recorded run");
+    assert_eq!(report.sent, tape.entries.len() as u64, "open loop sends the whole tape");
+    assert!(report.sent > 0, "a 60/s half-second run must send something");
+    assert_consistent(&report);
+
+    // The tape is a pure function of the config…
+    let again = generate(&cfg).expect("regenerate");
+    assert_eq!(again, tape);
+    assert_eq!(again.to_json().to_string(), tape.to_json().to_string(), "byte-identical tapes");
+
+    // …and survives disk byte-identically through the strict schema.
+    let path = tmp_tape("replay");
+    tape.save(&path).expect("save tape");
+    let loaded = LoadTrace::load(&path).expect("load tape");
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded, tape, "record→save→load is lossless");
+
+    // Replaying the loaded tape drives the identical request sequence.
+    let replayed = execute(&coord.local_addr, &loaded, &opts).expect("replayed run");
+    assert_eq!(replayed.sent, report.sent);
+    assert_consistent(&replayed);
+    // The server answered a healthy plan-only tape both times.
+    assert!(report.served > 0 && replayed.served > 0, "plan-only traffic should be served");
+
+    coord.shutdown();
+}
+
+#[test]
+fn saturation_surfaces_busy_and_deadline_breakdowns() {
+    // One shard with a backlog bound of 1: an all-campaign burst must
+    // shed `busy`, and every admitted campaign carries a 1–2ms binding
+    // deadline it cannot meet once anything is queued ahead of it.
+    let coord = start(1, 1);
+    let mut cfg = plan_cfg(150.0, 0.4, 11);
+    cfg.clients = 4;
+    cfg.mix = MixSpec::new("uniform-small").expect("builtin scenario");
+    cfg.mix.engine_frac = 1.0;
+    cfg.mix.deadline = Some(DeadlineMix { prob: 1.0, lo_ms: 1, hi_ms: 2 });
+    cfg.mix.validate().expect("saturation mix is valid");
+
+    let (tape, report) = run_load(&coord.local_addr, &cfg, &ExecOptions::default())
+        .expect("saturation run");
+    assert!(tape.entries.len() > 20, "need a real burst, got {}", tape.entries.len());
+    assert_consistent(&report);
+    assert!(report.busy >= 1, "backlog bound 1 must shed busy ({report:?})");
+    assert!(
+        report.deadline_exceeded >= 1,
+        "1–2ms binding deadlines must be exceeded under queueing ({report:?})"
+    );
+
+    // The server's own counters tell the same story.
+    let server = report.server.expect("stats reconciliation delta");
+    assert!(server.jobs_rejected >= 1, "server must count the busy sheds ({server:?})");
+    assert!(
+        server.jobs_deadline_exceeded >= 1,
+        "server must count the deadline sheds ({server:?})"
+    );
+
+    coord.shutdown();
+}
+
+#[test]
+fn sweep_reports_points_and_a_knee_field() {
+    let coord = start(2, 0);
+    let cfg = plan_cfg(25.0, 0.25, 21);
+    let sweep = run_sweep(&coord.local_addr, &cfg, &[25.0, 50.0], &ExecOptions::default())
+        .expect("sweep");
+    assert!(!sweep.points.is_empty() && sweep.points.len() <= 2);
+    for p in &sweep.points {
+        assert_consistent(p);
+    }
+    let j = sweep.to_json();
+    assert_eq!(
+        j.get("points").and_then(|p| p.as_arr()).map(|a| a.len()),
+        Some(sweep.points.len())
+    );
+    assert!(j.get("knee_rate").is_some(), "sweep json carries the knee");
+    assert!(sweep.table().contains("offered/s"), "sweep table renders");
+    coord.shutdown();
+}
+
+#[test]
+fn recv_within_drains_pipelined_replies_without_blocking() {
+    let coord = start(2, 0);
+    let mut client = Client::connect(&coord.local_addr).expect("connect");
+
+    // Nothing pending: an immediate, non-blocking None.
+    let t0 = Instant::now();
+    assert!(matches!(client.recv_within(Duration::from_secs(5)), Ok(None)));
+    assert!(t0.elapsed() < Duration::from_secs(1), "empty drain must not wait");
+
+    for _ in 0..3 {
+        client.send(&Request::Ping).expect("pipelined send");
+    }
+    let mut got = 0;
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while got < 3 && Instant::now() < deadline {
+        match client.recv_within(Duration::from_millis(50)) {
+            Ok(Some(_)) => got += 1,
+            Ok(None) => {}
+            Err(e) => panic!("drain failed: {e}"),
+        }
+    }
+    assert_eq!(got, 3, "all pipelined replies drained within the window");
+    // And the client is still usable for ordinary calls afterwards.
+    client.ping().expect("client survives the drained pipeline");
+    coord.shutdown();
+}
